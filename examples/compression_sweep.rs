@@ -1,0 +1,48 @@
+//! Compression-method shoot-out: every method the paper evaluates
+//! (pruning, integer, k-means, fixed-point, Norm-Q) across bit widths,
+//! on the same trained HMM — the condensed version of Tables I/II/III/V.
+//!
+//! Run: cargo run --release --example compression_sweep [-- --items 100]
+
+use normq::eval::evaluate;
+use normq::quant::Method;
+use normq::tables::ExperimentContext;
+use normq::util::cli::Args;
+
+fn main() {
+    normq::util::logging::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, ExperimentContext::VALUE_KEYS).expect("bad args");
+    let ctx = ExperimentContext::build(&args).expect("context");
+
+    let methods = vec![
+        Method::Fp32,
+        Method::Prune { ratio: 0.85, renorm: false },
+        Method::Prune { ratio: 0.95, renorm: true },
+        Method::Integer { bits: 8 },
+        Method::Kmeans { bits: 8, renorm: false },
+        Method::Kmeans { bits: 8, renorm: true },
+        Method::Fixed { bits: 8 },
+        Method::NormQ { bits: 8 },
+        Method::NormQ { bits: 4 },
+        Method::NormQ { bits: 3 },
+        Method::NormQ { bits: 2 },
+    ];
+    println!(
+        "{:<22} {:>8} {:>7} {:>7} {:>7} {:>7}",
+        "method", "Success", "Rouge", "BLEU4", "CIDEr", "SPICE*"
+    );
+    for m in methods {
+        let hmm = m.apply(&ctx.hmm);
+        let (s, _) = evaluate(&ctx.lm, &hmm, &ctx.corpus, &ctx.items, &ctx.decode, ctx.threads);
+        println!(
+            "{:<22} {:>8.1} {:>7.1} {:>7.1} {:>7.2} {:>7.1}",
+            m.label(),
+            s.success_rate * 100.0,
+            s.rouge * 100.0,
+            s.bleu4 * 100.0,
+            s.cider * 100.0,
+            s.spice * 100.0
+        );
+    }
+}

@@ -1,0 +1,116 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! - Layer 1/2: loads the AOT transformer LM artifact (JAX + Pallas,
+//!   lowered by `make artifacts`) and executes it via PJRT — the actual
+//!   neural part, no Python anywhere in this process.
+//! - Layer 3: Norm-Q-compresses the EM-trained HMM, starts the serving
+//!   coordinator, and drives it with batched constrained-generation
+//!   requests, reporting success rate, latency percentiles and
+//!   throughput (recorded in EXPERIMENTS.md §End-to-end).
+//!
+//! Falls back to the native n-gram LM with a warning if artifacts are
+//! missing, so the example always runs.
+//!
+//! Run: make artifacts && cargo run --release --example e2e_serving
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use normq::coordinator::{Server, ServerConfig};
+use normq::data::{chunked, Corpus};
+use normq::generate::DecodeConfig;
+use normq::hmm::Hmm;
+use normq::lm::{LanguageModel, NgramLm};
+use normq::qem::{train, QemConfig};
+use normq::quant::Method;
+use normq::runtime::{HloLm, Manifest};
+use normq::util::rng::Rng;
+
+fn main() {
+    normq::util::logging::init_from_env();
+    let n_requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(96);
+
+    // --- Layer 2/1: the neural part from AOT artifacts ---
+    let artifacts = std::path::Path::new("artifacts");
+    let (lm, corpus, used_hlo): (Arc<dyn LanguageModel>, Corpus, bool) =
+        match Manifest::load(artifacts) {
+            Ok(manifest) => {
+                let corpus = Corpus::new(manifest.seed);
+                assert_eq!(
+                    corpus.vocab.len(),
+                    manifest.vocab_words.len(),
+                    "artifact/corpus vocabulary mismatch"
+                );
+                let lm = HloLm::load(&manifest).expect("loading lm_logits.hlo.txt");
+                println!("neural part: AOT HLO transformer (PJRT), vocab={}", manifest.vocab_words.len());
+                (Arc::new(lm), corpus, true)
+            }
+            Err(e) => {
+                eprintln!("WARNING: artifacts not found ({e}); falling back to n-gram LM");
+                let corpus = Corpus::new(1234);
+                let data = corpus.sample_token_corpus(6000, 1235);
+                let lm = NgramLm::train(&data, corpus.vocab.len());
+                (Arc::new(lm), corpus, false)
+            }
+        };
+
+    // --- Layer 3: symbolic part, EM-trained then Norm-Q compressed ---
+    println!("training HMM (H=64) + Norm-Q 8-bit...");
+    let train_data = corpus.sample_token_corpus(6000, 77);
+    let mut rng = Rng::seeded(78);
+    let init = Hmm::random(64, corpus.vocab.len(), 0.3, 0.1, &mut rng);
+    let qcfg = QemConfig {
+        method: Some(Method::NormQ { bits: 8 }),
+        interval: 20,
+        epochs: 2,
+        eval_test: false,
+        ..Default::default()
+    };
+    let hmm = train(&init, &chunked(train_data, 20), &[], &qcfg).model;
+
+    // --- serve ---
+    let cfg = ServerConfig {
+        decode: DecodeConfig { beam: 8, max_tokens: 24, ..Default::default() },
+        ..Default::default()
+    };
+    println!("starting coordinator: {} workers, queue {}", cfg.workers, cfg.queue_capacity);
+    let server = Server::start(lm, hmm, corpus.clone(), cfg);
+
+    let items = corpus.eval_set(n_requests, 1, 79);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = items
+        .iter()
+        .filter_map(|item| server.submit(item.concepts.clone()).ok())
+        .collect();
+    let mut satisfied = 0usize;
+    let mut shown = 0usize;
+    for rx in &rxs {
+        if let Ok(resp) = rx.recv() {
+            if resp.satisfied {
+                satisfied += 1;
+            }
+            if shown < 5 {
+                println!(
+                    "  [{}] ({:>6.1}ms) {}",
+                    if resp.satisfied { "ok " } else { "MISS" },
+                    resp.latency.as_secs_f64() * 1e3,
+                    resp.text
+                );
+                shown += 1;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n== e2e report ==");
+    println!("neural part    : {}", if used_hlo { "AOT HLO transformer (PJRT)" } else { "native n-gram (fallback)" });
+    println!("requests       : {}", rxs.len());
+    println!("success rate   : {:.1}%", satisfied as f64 / rxs.len().max(1) as f64 * 100.0);
+    println!("wall time      : {wall:.2}s");
+    println!("throughput     : {:.2} req/s", rxs.len() as f64 / wall);
+    println!("metrics        : {}", server.metrics().summary());
+    server.shutdown();
+}

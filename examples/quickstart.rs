@@ -1,0 +1,80 @@
+//! Quickstart: the whole Norm-Q story in one file.
+//!
+//! 1. Build a synthetic concept corpus and train the neural part (n-gram
+//!    stand-in) and the symbolic part (HMM, via EM).
+//! 2. Compress the HMM with Norm-Q at 8 and 3 bits; show the compression
+//!    rate and that the model stays a valid probability model.
+//! 3. Run constrained generation with each model and compare.
+//!
+//! Run: cargo run --release --example quickstart
+
+use normq::data::{chunked, Corpus};
+use normq::dfa::Dfa;
+use normq::generate::{decode, DecodeConfig};
+use normq::hmm::Hmm;
+use normq::lm::NgramLm;
+use normq::qem::{train, QemConfig};
+use normq::quant::packed::CompressionReport;
+use normq::quant::Method;
+use normq::util::rng::Rng;
+
+fn main() {
+    normq::util::logging::init_from_env();
+    println!("== normq quickstart ==\n");
+
+    // 1. Data + models.
+    let corpus = Corpus::new(42);
+    println!("corpus: vocab={} words", corpus.vocab.len());
+    let train_data = corpus.sample_token_corpus(6000, 43);
+    let lm = NgramLm::train(&train_data, corpus.vocab.len());
+
+    let mut rng = Rng::seeded(44);
+    let init = Hmm::random(64, corpus.vocab.len(), 0.3, 0.1, &mut rng);
+    println!("training HMM (H=64) with EM...");
+    let cfg = QemConfig { method: None, epochs: 3, eval_test: false, ..Default::default() };
+    let hmm = train(&init, &chunked(train_data, 20), &[], &cfg).model;
+    println!("HMM params: {} ({} KB fp32)\n", hmm.param_count(), hmm.fp32_bytes() / 1024);
+
+    // 2. Norm-Q compression.
+    for bits in [8u32, 3] {
+        let q = Method::NormQ { bits }.apply(&hmm);
+        let rt = CompressionReport::of(&hmm.trans, bits);
+        let re = CompressionReport::of(&hmm.emit, bits);
+        let rate = 1.0
+            - (rt.sparse_bits.min(rt.dense_packed_bits) + re.sparse_bits.min(re.dense_packed_bits))
+                as f64
+                / (rt.fp32_bits + re.fp32_bits) as f64;
+        println!(
+            "Norm-Q {bits}-bit: valid={} compression={:.3}%",
+            q.is_valid(1e-3),
+            rate * 100.0
+        );
+    }
+    println!();
+
+    // 3. Constrained generation: "write a sentence containing these".
+    let items = corpus.eval_set(5, 1, 45);
+    let dcfg = DecodeConfig { beam: 8, max_tokens: 24, ..Default::default() };
+    for item in &items {
+        let keywords: Vec<Vec<usize>> = item
+            .concepts
+            .iter()
+            .map(|c| vec![corpus.vocab.id(c)])
+            .collect();
+        let dfa = Dfa::from_keywords(&keywords, corpus.vocab.len());
+        println!("concepts: {:?}", item.concepts);
+        for (label, model) in [
+            ("FP32     ", hmm.clone()),
+            ("Norm-Q 8b", Method::NormQ { bits: 8 }.apply(&hmm)),
+            ("Norm-Q 3b", Method::NormQ { bits: 3 }.apply(&hmm)),
+        ] {
+            let g = decode(&lm, &model, &dfa, &dcfg);
+            println!(
+                "  {label} [{}] {}",
+                if g.satisfied { "ok " } else { "MISS" },
+                corpus.vocab.decode(&g.tokens)
+            );
+        }
+        println!();
+    }
+}

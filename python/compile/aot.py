@@ -1,0 +1,138 @@
+"""AOT lowering: JAX graphs → HLO **text** artifacts for the Rust runtime.
+
+Artifacts (written to --out-dir, default ../artifacts):
+  lm_logits.hlo.txt    (tokens [T] i32, length i32) -> ([V] f32 log-probs)
+                       trained transformer weights baked in as constants
+  hmm_forward.hlo.txt  (tokens [T] i32, length i32, init [H], trans [H,H],
+                       emit [H,V]) -> ([1] f32 log-likelihood) — carries
+                       the Pallas forward-step kernel (interpret lowering)
+  manifest.json        vocab list + shapes + seed
+
+HLO text (never `.serialize()`): jax >= 0.5 emits 64-bit instruction ids
+that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+Usage: python -m compile.aot [--out-dir DIR] [--seed N] [--steps N]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, train_lm
+from .corpus import Corpus
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--seed", type=int, default=1234, help="corpus seed (must match rust --seed)")
+    ap.add_argument("--hidden", type=int, default=64, help="HMM hidden size baked into hmm_forward")
+    ap.add_argument("--max-len", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=300, help="LM training steps")
+    ap.add_argument("--train-sentences", type=int, default=4000)
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    print(f"[aot] corpus seed={args.seed}")
+    corpus = Corpus(args.seed)
+    vocab = corpus.vocab_size()
+    print(f"[aot] vocab={vocab}")
+
+    print(f"[aot] training LM ({args.steps} steps)...")
+    params, loss = train_lm.train(
+        corpus,
+        n_sentences=args.train_sentences,
+        max_len=args.max_len,
+        steps=args.steps,
+        seed=args.seed,
+    )
+    print(f"[aot] LM final loss {loss:.4f}")
+
+    # --- lm_logits: weights as runtime arguments ---
+    # (HLO *text* elides large constants, so baking weights into the
+    # module silently zeroes them; instead the weights travel in
+    # lm_weights.bin and Rust passes them as execute() arguments.)
+    flat = model.flatten_params(params)
+    meta = params["meta"]
+    n_layers = len(params["blocks"])
+
+    def lm_logits(tokens, length, *weights):
+        p = model.unflatten_params(list(weights), n_layers, meta)
+        return (model.lm_next_log_probs(p, tokens, length),)
+
+    tok_spec = jax.ShapeDtypeStruct((args.max_len,), jnp.int32)
+    len_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    w_specs = [jax.ShapeDtypeStruct(w.shape, jnp.float32) for _, w in flat]
+    lowered = jax.jit(lm_logits).lower(tok_spec, len_spec, *w_specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, "lm_logits.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"[aot] wrote {path} ({len(text)} chars)")
+
+    # Weights file: per tensor — u32 name_len, name, u32 ndim, u32 dims,
+    # f32 little-endian data. Read by rust/src/runtime/weights.rs.
+    import struct
+
+    import numpy as np
+
+    wpath = os.path.join(out_dir, "lm_weights.bin")
+    with open(wpath, "wb") as f:
+        f.write(struct.pack("<I", len(flat)))
+        for name, w in flat:
+            arr = np.asarray(w, dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes(order="C"))
+    print(f"[aot] wrote {wpath} ({os.path.getsize(wpath)} bytes, {len(flat)} tensors)")
+
+    # --- hmm_forward: matrices as runtime arguments ---
+    h = args.hidden
+    hmm_specs = (
+        jax.ShapeDtypeStruct((args.max_len,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((h,), jnp.float32),
+        jax.ShapeDtypeStruct((h, h), jnp.float32),
+        jax.ShapeDtypeStruct((h, vocab), jnp.float32),
+    )
+    lowered = jax.jit(model.hmm_forward_ll).lower(*hmm_specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, "hmm_forward.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"[aot] wrote {path} ({len(text)} chars)")
+
+    manifest = {
+        "vocab": corpus.words,
+        "max_len": args.max_len,
+        "hidden": h,
+        "seed": args.seed,
+        "lm_final_loss": loss,
+    }
+    path = os.path.join(out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f)
+    print(f"[aot] wrote {path}")
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,156 @@
+"""Python mirror of the Rust data layer (rust/src/data/): deterministic
+lexicon, vocabulary and concept-corpus generator.
+
+Used at build time only: train_lm.py consumes the same corpus the Rust
+experiment drivers see, so the AOT transformer artifact speaks the exact
+vocabulary of the serving layer. Parity is enforced by the bit-exact RNG
+port (rng.py) plus `normq smoke` / the rust integration test comparing
+the manifest vocabulary against the Rust generator.
+"""
+
+from .rng import Rng
+
+ONSETS = ["b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z"]
+NUCLEI = ["a", "e", "i", "o", "u"]
+CODAS = ["", "n", "r", "s", "l", "k"]
+
+FUNCTION_WORDS = [
+    "the", "a", "in", "on", "near", "with", "and", "to", "at", "by", "of", "under",
+]
+
+EOS = 0
+UNK = 1
+
+# Mirrors corpus.rs::TEMPLATES. Slot kinds: literal str, or one of
+# "N" (noun), "V" (verb), "A" (adjective), "P" (place).
+TEMPLATES = [
+    ["the", "N", "V", "the", "N"],
+    ["the", "A", "N", "V", "the", "N"],
+    ["a", "N", "V", "in", "the", "P"],
+    ["the", "N", "V", "near", "the", "P"],
+    ["a", "A", "N", "V", "the", "A", "N"],
+    ["the", "N", "and", "the", "N", "V", "at", "the", "P"],
+    ["the", "N", "V", "the", "N", "with", "a", "N"],
+    ["a", "N", "in", "the", "P", "V", "the", "N"],
+    ["the", "A", "N", "V", "under", "the", "P"],
+    ["the", "N", "V", "to", "the", "P", "by", "the", "N"],
+]
+
+
+def _make_word(rng: Rng, syllables: int, suffix: str) -> str:
+    w = []
+    for _ in range(syllables):
+        w.append(ONSETS[rng.below_usize(len(ONSETS))])
+        w.append(NUCLEI[rng.below_usize(len(NUCLEI))])
+        w.append(CODAS[rng.below_usize(len(CODAS))])
+    return "".join(w) + suffix
+
+
+class Lexicon:
+    def __init__(self, nouns, verbs, adjectives, places):
+        self.nouns = nouns
+        self.verbs = verbs
+        self.adjectives = adjectives
+        self.places = places
+
+    @staticmethod
+    def generate(seed, n_nouns, n_verbs, n_adj, n_places) -> "Lexicon":
+        rng = Rng(seed)
+        seen = set()
+
+        def clazz(n, syl, suffix):
+            out = []
+            while len(out) < n:
+                w = _make_word(rng, syl, suffix)
+                if w not in seen:
+                    seen.add(w)
+                    out.append(w)
+            return out
+
+        nouns = clazz(n_nouns, 2, "")
+        verbs = clazz(n_verbs, 2, "es")
+        adjectives = clazz(n_adj, 2, "y")
+        places = clazz(n_places, 2, "ia")
+        return Lexicon(nouns, verbs, adjectives, places)
+
+    @staticmethod
+    def default_sizes(seed) -> "Lexicon":
+        return Lexicon.generate(seed, 400, 250, 180, 120)
+
+    def all_words(self):
+        return list(FUNCTION_WORDS) + self.nouns + self.verbs + self.adjectives + self.places
+
+    def slot_class(self, kind):
+        return {"N": self.nouns, "V": self.verbs, "A": self.adjectives, "P": self.places}[kind]
+
+
+class Corpus:
+    """Mirror of data::corpus::Corpus (vocabulary + sentence sampling)."""
+
+    def __init__(self, seed: int, small: bool = False):
+        self.seed = seed
+        if small:
+            self.lexicon = Lexicon.generate(seed, 40, 25, 18, 12)
+        else:
+            self.lexicon = Lexicon.default_sizes(seed)
+        self.words = ["<eos>", "<unk>"] + self.lexicon.all_words()
+        self.index = {w: i for i, w in enumerate(self.words)}
+
+    def vocab_size(self) -> int:
+        return len(self.words)
+
+    def id(self, word: str) -> int:
+        return self.index.get(word, UNK)
+
+    def _fill_slot(self, slot, planted, rng):
+        if slot not in ("N", "V", "A", "P"):
+            return slot
+        clazz = self.lexicon.slot_class(slot)
+        if planted and planted[0] in clazz:
+            return planted.pop(0)
+        return clazz[rng.below_usize(len(clazz))]
+
+    def render(self, template, concepts, rng):
+        planted = list(concepts)
+        return " ".join(self._fill_slot(s, planted, rng) for s in template)
+
+    def _template_fits(self, template, concepts):
+        it = list(concepts)
+        for slot in template:
+            if not it:
+                break
+            if slot in ("N", "V", "A", "P") and it[0] in self.lexicon.slot_class(slot):
+                it.pop(0)
+        return not it
+
+    def sample_concepts(self, rng):
+        lex = self.lexicon
+        concepts = []
+        with_adj = rng.below(3) == 0
+        with_place = rng.below(3) == 0
+        if with_adj:
+            concepts.append(lex.adjectives[rng.below_usize(len(lex.adjectives))])
+        concepts.append(lex.nouns[rng.below_usize(len(lex.nouns))])
+        concepts.append(lex.verbs[rng.below_usize(len(lex.verbs))])
+        if with_place:
+            concepts.append(lex.places[rng.below_usize(len(lex.places))])
+        return concepts
+
+    def sample_sentence(self, rng):
+        concepts = self.sample_concepts(rng)
+        fitting = [t for t in TEMPLATES if self._template_fits(t, concepts)]
+        if not fitting:
+            template = TEMPLATES[rng.below_usize(len(TEMPLATES))]
+        else:
+            template = fitting[rng.below_usize(len(fitting))]
+        return self.render(template, concepts, rng)
+
+    def sample_token_corpus(self, n: int, seed: int):
+        """n sentences as <eos>-terminated token-id lists (mirror)."""
+        rng = Rng(seed)
+        out = []
+        for _ in range(n):
+            toks = [self.id(w) for w in self.sample_sentence(rng).split()]
+            toks.append(EOS)
+            out.append(toks)
+        return out

@@ -1,0 +1,69 @@
+"""Layer-1 Pallas kernel: the fused HMM forward step.
+
+The decode hot spot is `alpha' = normalize(alpha * emit[:, x]) @ trans` —
+a (B×H)·(H×H) MatMul fed by an elementwise gate and a row reduction. On
+GPU the paper's motivation is bandwidth (§I); the TPU mapping
+(DESIGN.md §Hardware-Adaptation) batches beams so the MXU sees a real
+matmul, keeps the gate + normalization in VPU lanes inside the same
+kernel (no HBM round trip between them), and tiles `trans` HBM→VMEM in
+(BH, HT)-blocks with the grid iterating over output tiles.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU numbers are estimated analytically in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(alpha_ref, emit_col_ref, trans_ref, out_ref, scale_ref, *, h_total):
+    """Grid dim 0 walks output tiles of H. The gate + normalization are
+    recomputed per tile (cheap VPU work) so each grid step is independent
+    and `trans` streams through VMEM one (H, HT) block at a time."""
+    alpha = alpha_ref[...]          # [B, H]  (full rows resident in VMEM)
+    emit_col = emit_col_ref[...]    # [B, H]
+    weighted = alpha * emit_col
+    scale = jnp.sum(weighted, axis=-1, keepdims=True)  # [B, 1]
+    uniform = jnp.full_like(weighted, 1.0 / h_total)
+    safe = jnp.where(scale > 0, weighted / jnp.where(scale > 0, scale, 1.0), uniform)
+    # [B, H] @ [H, HT] -> [B, HT] on the MXU.
+    out_ref[...] = safe @ trans_ref[...]
+    scale_ref[...] = scale[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def forward_step(alpha, emit_col, trans, tile: int = 128):
+    """Pallas-fused forward step; same contract as ref.forward_step."""
+    b, h = alpha.shape
+    assert trans.shape == (h, h)
+    tile = min(tile, h)
+    # Grid over output-column tiles; pad H up to a tile multiple.
+    pad = (-h) % tile
+    if pad:
+        trans_p = jnp.pad(trans, ((0, 0), (0, pad)))
+    else:
+        trans_p = trans
+    h_out = h + pad
+    grid = (h_out // tile,)
+    nxt, scale = pl.pallas_call(
+        functools.partial(_kernel, h_total=h),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, h), lambda j: (0, 0)),      # alpha: resident
+            pl.BlockSpec((b, h), lambda j: (0, 0)),      # emit_col: resident
+            pl.BlockSpec((h, tile), lambda j: (0, j)),   # trans: streamed
+        ],
+        out_specs=[
+            pl.BlockSpec((b, tile), lambda j: (0, j)),
+            pl.BlockSpec((b,), lambda j: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h_out), alpha.dtype),
+            jax.ShapeDtypeStruct((b,), alpha.dtype),
+        ],
+        interpret=True,
+    )(alpha, emit_col, trans_p)
+    return nxt[:, :h], scale

@@ -1,0 +1,39 @@
+"""Layer-1 Pallas kernel: fused Norm-Q projection (quantize → dequantize
+→ row-renormalize), tiled over rows so arbitrarily tall matrices stream
+through VMEM one row-block at a time. Row normalization needs the whole
+row, so columns stay resident per block — for the paper's widest matrix
+(emission, H×50257 fp32 ≈ 200 KB/row) a 64-row block fits VMEM at int8.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, out_ref, *, bits, eps):
+    x = x_ref[...]
+    max_level = (1 << bits) - 1
+    q = jnp.clip(jnp.round(x * max_level), 0, max_level) / (1 << bits)
+    q = q + eps
+    out_ref[...] = q / jnp.sum(q, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "row_tile"))
+def normq_rows(x, bits: int, eps: float = 1e-12, row_tile: int = 64):
+    """Pallas-fused Norm-Q; same contract as ref.normq_rows."""
+    r, c = x.shape
+    row_tile = min(row_tile, r)
+    pad = (-r) % row_tile
+    x_p = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    grid = ((r + pad) // row_tile,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits, eps=eps),
+        grid=grid,
+        in_specs=[pl.BlockSpec((row_tile, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((row_tile, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r + pad, c), x.dtype),
+        interpret=True,
+    )(x_p)
+    return out[:r]

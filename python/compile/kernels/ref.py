@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels (Layer-1 correctness ground
+truth; pytest drives kernel-vs-ref comparisons with hypothesis sweeps).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def forward_step(alpha, emit_col, trans):
+    """One fused HMM forward step, batched.
+
+    alpha:    [B, H] predictive state belief P(z_t | x_{<t})
+    emit_col: [B, H] emission probabilities emit[h, x_t] per batch row
+    trans:    [H, H] transition matrix
+
+    Returns (next_alpha [B, H], scale [B]):
+      weighted = alpha * emit_col
+      scale    = sum_h weighted                  (= P(x_t | x_{<t}))
+      next     = (weighted / scale) @ trans
+    Rows with scale == 0 reset to uniform (matching the Rust engine's
+    forward_step semantics for impossible tokens).
+    """
+    weighted = alpha * emit_col
+    scale = jnp.sum(weighted, axis=-1, keepdims=True)
+    h = alpha.shape[-1]
+    safe = jnp.where(scale > 0, weighted / jnp.where(scale > 0, scale, 1.0), 1.0 / h)
+    nxt = safe @ trans
+    return nxt, scale[..., 0]
+
+
+def normq_rows(x, bits, eps=1e-12):
+    """Norm-Q on a matrix of probability rows.
+
+    Fixed-point linear quantization Q(p) = round(p * (2^b - 1)) / 2^b
+    (clipped), then row-wise epsilon-normalization (paper §III-C/D).
+    """
+    max_level = (1 << bits) - 1
+    q = jnp.clip(jnp.round(x * max_level), 0, max_level) / (1 << bits)
+    q = q + eps
+    return q / jnp.sum(q, axis=-1, keepdims=True)
+
+
+def hmm_log_likelihood(tokens, length, init, trans, emit):
+    """Masked scaled-forward log-likelihood over a padded token sequence.
+
+    tokens: [T] int32 (padded); length: scalar int32; init: [H];
+    trans: [H, H]; emit: [H, V]. Positions >= length are ignored.
+    """
+
+    def step(carry, t):
+        alpha, ll = carry
+        tok = tokens[t]
+        emit_col = emit[:, tok][None, :]  # [1, H]
+        nxt, scale = forward_step(alpha, emit_col, trans)
+        active = t < length
+        ll = ll + jnp.where(active, jnp.log(jnp.maximum(scale[0], 1e-37)), 0.0)
+        alpha = jnp.where(active, nxt, alpha)
+        return (alpha, ll), None
+
+    alpha0 = init[None, :]
+    (_, ll), _ = jax.lax.scan(step, (alpha0, jnp.float32(0.0)), jnp.arange(tokens.shape[0]))
+    return ll

@@ -1,0 +1,156 @@
+"""Layer-2 JAX compute graphs.
+
+- A small decoder-only transformer LM (the neural part of the
+  neuro-symbolic system; the GPT2-large stand-in per DESIGN.md §1).
+- The HMM forward log-likelihood graph, built on the Layer-1 Pallas
+  forward-step kernel so the kernel lowers into the same HLO module.
+
+Both are lowered once by aot.py; Python never runs at serving time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import hmm_step
+
+
+# ---------------------------------------------------------------- LM ---
+
+def init_lm_params(rng, vocab, d_model=64, n_layers=2, n_heads=4, d_ff=128, max_len=32):
+    """Initialize transformer parameters (pytree of jnp arrays)."""
+    keys = jax.random.split(rng, 4 + 8 * n_layers)
+    k = iter(keys)
+
+    def dense(key, fan_in, fan_out):
+        return jax.random.normal(key, (fan_in, fan_out)) * (fan_in ** -0.5)
+
+    params = {
+        "embed": jax.random.normal(next(k), (vocab, d_model)) * 0.02,
+        "pos": jax.random.normal(next(k), (max_len, d_model)) * 0.02,
+        "out_ln_scale": jnp.ones((d_model,)),
+        "out_ln_bias": jnp.zeros((d_model,)),
+        "blocks": [],
+        "meta": {"n_heads": n_heads, "max_len": max_len},
+    }
+    for _ in range(n_layers):
+        params["blocks"].append({
+            "ln1_scale": jnp.ones((d_model,)),
+            "ln1_bias": jnp.zeros((d_model,)),
+            "wq": dense(next(k), d_model, d_model),
+            "wk": dense(next(k), d_model, d_model),
+            "wv": dense(next(k), d_model, d_model),
+            "wo": dense(next(k), d_model, d_model),
+            "ln2_scale": jnp.ones((d_model,)),
+            "ln2_bias": jnp.zeros((d_model,)),
+            "w1": dense(next(k), d_model, d_ff),
+            "w2": dense(next(k), d_ff, d_model),
+        })
+    return params
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _block(x, p, n_heads, mask):
+    t, d = x.shape
+    dh = d // n_heads
+    h = _layer_norm(x, p["ln1_scale"], p["ln1_bias"])
+    q = (h @ p["wq"]).reshape(t, n_heads, dh)
+    k = (h @ p["wk"]).reshape(t, n_heads, dh)
+    v = (h @ p["wv"]).reshape(t, n_heads, dh)
+    att = jnp.einsum("qhd,khd->hqk", q, k) / jnp.sqrt(dh)
+    att = jnp.where(mask[None, :, :], att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("hqk,khd->qhd", att, v).reshape(t, d)
+    x = x + o @ p["wo"]
+    h2 = _layer_norm(x, p["ln2_scale"], p["ln2_bias"])
+    x = x + jax.nn.gelu(h2 @ p["w1"]) @ p["w2"]
+    return x
+
+
+def lm_forward(params, tokens):
+    """All-position logits. tokens: [T] int32 -> [T, V] raw logits."""
+    t = tokens.shape[0]
+    n_heads = params["meta"]["n_heads"]
+    x = params["embed"][tokens] + params["pos"][:t]
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+    for p in params["blocks"]:
+        x = _block(x, p, n_heads, causal)
+    x = _layer_norm(x, params["out_ln_scale"], params["out_ln_bias"])
+    return x @ params["embed"].T  # tied embedding
+
+
+def lm_next_log_probs(params, tokens, length):
+    """Log P(next token | tokens[:length]). tokens is a [T_max] padded
+    buffer; `length` counts the real prefix (0 = empty prefix → the model
+    conditions on BOS position only). Returns [V] log-probs."""
+    logits = lm_forward(params, tokens)
+    # Position length-1 predicts token at `length`; empty prefix uses a
+    # BOS convention: tokens[0] is EOS-pad, so position 0 works for both.
+    idx = jnp.maximum(length - 1, 0)
+    row = jax.lax.dynamic_index_in_dim(logits, idx, axis=0, keepdims=False)
+    return jax.nn.log_softmax(row)
+
+
+# --------------------------------------------------------------- HMM ---
+
+def hmm_forward_ll(tokens, length, init, trans, emit):
+    """Masked scaled-forward log-likelihood using the Pallas step kernel.
+
+    Same contract as kernels.ref.hmm_log_likelihood (the oracle).
+    """
+
+    def step(carry, t):
+        alpha, ll = carry
+        tok = tokens[t]
+        emit_col = emit[:, tok][None, :]
+        nxt, scale = hmm_step.forward_step(alpha, emit_col, trans)
+        active = t < length
+        ll = ll + jnp.where(active, jnp.log(jnp.maximum(scale[0], 1e-37)), 0.0)
+        alpha = jnp.where(active, nxt, alpha)
+        return (alpha, ll), None
+
+    alpha0 = init[None, :]
+    (_, ll), _ = jax.lax.scan(step, (alpha0, jnp.float32(0.0)), jnp.arange(tokens.shape[0]))
+    return (ll.reshape(1),)
+
+
+# ------------------------------------------------- flat weight order ---
+
+def flatten_params(params):
+    """Deterministic (name, array) list for the AOT weights file; the
+    Rust runtime feeds these back as execute() arguments in this order."""
+    out = [
+        ("embed", params["embed"]),
+        ("pos", params["pos"]),
+        ("out_ln_scale", params["out_ln_scale"]),
+        ("out_ln_bias", params["out_ln_bias"]),
+    ]
+    for i, b in enumerate(params["blocks"]):
+        for key in ["ln1_scale", "ln1_bias", "wq", "wk", "wv", "wo",
+                    "ln2_scale", "ln2_bias", "w1", "w2"]:
+            out.append((f"block{i}.{key}", b[key]))
+    return out
+
+
+def unflatten_params(flat, n_layers, meta):
+    """Inverse of flatten_params given the same ordering."""
+    it = iter(flat)
+    params = {
+        "embed": next(it),
+        "pos": next(it),
+        "out_ln_scale": next(it),
+        "out_ln_bias": next(it),
+        "blocks": [],
+        "meta": meta,
+    }
+    for _ in range(n_layers):
+        params["blocks"].append({
+            k: next(it)
+            for k in ["ln1_scale", "ln1_bias", "wq", "wk", "wv", "wo",
+                      "ln2_scale", "ln2_bias", "w1", "w2"]
+        })
+    return params

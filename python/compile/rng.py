@@ -1,0 +1,69 @@
+"""Python port of rust/src/util/rng.rs (SplitMix64 + xoshiro256**).
+
+The build-time corpus generator must produce the *identical* vocabulary
+and sentences as the Rust data layer, so the PRNG is ported bit-exactly.
+A shared test vector pins the two implementations together
+(python/tests/test_rng_parity.py <-> rust/src/util/rng.rs tests).
+"""
+
+MASK = (1 << 64) - 1
+
+
+def _splitmix64(state: int):
+    state = (state + 0x9E3779B97F4A7C15) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return state, (z ^ (z >> 31)) & MASK
+
+
+def _rotl(x: int, k: int) -> int:
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    """xoshiro256** seeded via SplitMix64 — mirrors util::rng::Rng."""
+
+    def __init__(self, seed: int):
+        sm = seed & MASK
+        s = []
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            s.append(v)
+        self.s = s
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (_rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n: int) -> int:
+        """Lemire bounded sampling — bit-exact port of Rng::below."""
+        assert n > 0
+        x = self.next_u64()
+        m = x * n
+        l = m & MASK
+        if l < n:
+            t = (-n) % n
+            while l < t:
+                x = self.next_u64()
+                m = x * n
+                l = m & MASK
+        return (m >> 64) & MASK
+
+    def below_usize(self, n: int) -> int:
+        return self.below(n)
+
+    def range(self, lo: int, hi: int) -> int:
+        assert lo <= hi
+        return lo + self.below(hi - lo + 1)

@@ -1,0 +1,93 @@
+"""Build-time training of the tiny transformer LM on the synthetic
+concept corpus (the GPT2-large stand-in). Hand-rolled Adam; a few hundred
+steps is plenty for the template grammar. Invoked by aot.py; weights are
+then baked into the lowered HLO as constants.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+from .corpus import Corpus, EOS
+
+
+def make_batches(corpus: Corpus, n_sentences: int, max_len: int, seed: int):
+    """Padded next-token-prediction arrays: inputs [N, T], targets [N, T],
+    mask [N, T]. Input position 0 is a BOS (EOS id); targets are the
+    sentence tokens."""
+    seqs = corpus.sample_token_corpus(n_sentences, seed)
+    n = len(seqs)
+    inputs = np.zeros((n, max_len), dtype=np.int32)
+    targets = np.zeros((n, max_len), dtype=np.int32)
+    mask = np.zeros((n, max_len), dtype=np.float32)
+    for i, s in enumerate(seqs):
+        s = s[: max_len - 1]
+        # input[0] is BOS (EOS id); input[t] = s[t-1]; target[t] = s[t].
+        inputs[i, 0] = EOS
+        if len(s) > 1:
+            inputs[i, 1 : len(s)] = s[: len(s) - 1]
+        targets[i, : len(s)] = s
+        mask[i, : len(s)] = 1.0
+    return jnp.array(inputs), jnp.array(targets), jnp.array(mask)
+
+
+def loss_fn(params, inputs, targets, mask):
+    logits = jax.vmap(lambda t: model.lm_forward(params, t))(inputs)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr=3e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    params = jax.tree.map(
+        lambda p, m, v: p - lr * (m * mhat_scale) / (jnp.sqrt(v * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+def train(corpus: Corpus, *, n_sentences=4000, max_len=32, steps=300, batch=128, seed=0,
+          d_model=64, n_layers=2, n_heads=4, d_ff=128, verbose=True):
+    """Train and return (params, final_loss)."""
+    inputs, targets, mask = make_batches(corpus, n_sentences, max_len, seed + 100)
+    params = model.init_lm_params(
+        jax.random.PRNGKey(seed), corpus.vocab_size(), d_model, n_layers, n_heads, d_ff, max_len
+    )
+    meta = params.pop("meta")  # keep static meta out of the optimizer
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, idx):
+        def loss_with_meta(p):
+            return loss_fn({**p, "meta": meta}, inputs[idx], targets[idx], mask[idx])
+
+        loss, grads = jax.value_and_grad(loss_with_meta)(params)
+        params, opt = adam_step(params, grads, opt)
+        return params, opt, loss
+
+    n = inputs.shape[0]
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    loss = float("nan")
+    for i in range(steps):
+        idx = jnp.array(rng.integers(0, n, size=batch))
+        params, opt, loss = step(params, opt, idx)
+        if verbose and (i % 50 == 0 or i == steps - 1):
+            print(f"  lm train step {i:4d} loss {float(loss):.4f} ({time.time()-t0:.1f}s)")
+    params["meta"] = meta
+    return params, float(loss)

@@ -1,0 +1,119 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles, with
+hypothesis sweeping shapes and distributions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hmm_step, normq_kernel, ref
+
+
+def random_stochastic(rng, rows, cols, alpha=0.5):
+    x = rng.gamma(alpha, size=(rows, cols)).astype(np.float32) + 1e-9
+    return x / x.sum(axis=-1, keepdims=True)
+
+
+# ------------------------------------------------------- forward step --
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 5),
+    h=st.integers(2, 70),
+    seed=st.integers(0, 2**31 - 1),
+    tile=st.sampled_from([8, 32, 128]),
+)
+def test_forward_step_matches_ref(b, h, seed, tile):
+    rng = np.random.default_rng(seed)
+    alpha = random_stochastic(rng, b, h)
+    emit_col = rng.uniform(0, 1, size=(b, h)).astype(np.float32)
+    trans = random_stochastic(rng, h, h)
+    got_n, got_s = hmm_step.forward_step(jnp.array(alpha), jnp.array(emit_col), jnp.array(trans), tile=tile)
+    want_n, want_s = ref.forward_step(jnp.array(alpha), jnp.array(emit_col), jnp.array(trans))
+    np.testing.assert_allclose(got_n, want_n, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_s, want_s, rtol=1e-5, atol=1e-6)
+
+
+def test_forward_step_zero_scale_resets_uniform():
+    alpha = jnp.array([[0.5, 0.5]], dtype=jnp.float32)
+    emit_col = jnp.zeros((1, 2), dtype=jnp.float32)
+    trans = jnp.eye(2, dtype=jnp.float32)
+    nxt, scale = hmm_step.forward_step(alpha, emit_col, trans)
+    assert float(scale[0]) == 0.0
+    np.testing.assert_allclose(nxt, [[0.5, 0.5]], atol=1e-6)
+
+
+def test_forward_step_output_is_stochastic():
+    rng = np.random.default_rng(0)
+    alpha = random_stochastic(rng, 3, 64)
+    emit_col = rng.uniform(0, 1, size=(3, 64)).astype(np.float32)
+    trans = random_stochastic(rng, 64, 64)
+    nxt, _ = hmm_step.forward_step(jnp.array(alpha), jnp.array(emit_col), jnp.array(trans))
+    np.testing.assert_allclose(np.asarray(nxt).sum(axis=-1), 1.0, rtol=1e-4)
+
+
+# ------------------------------------------------------------- normq --
+
+@settings(max_examples=25, deadline=None)
+@given(
+    r=st.integers(1, 130),
+    c=st.integers(2, 80),
+    bits=st.sampled_from([2, 3, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_normq_matches_ref(r, c, bits, seed):
+    rng = np.random.default_rng(seed)
+    x = random_stochastic(rng, r, c, alpha=0.1)
+    got = normq_kernel.normq_rows(jnp.array(x), bits)
+    want = ref.normq_rows(jnp.array(x), bits)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7)
+
+
+@settings(max_examples=15, deadline=None)
+@given(bits=st.sampled_from([2, 3, 4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_normq_rows_sum_to_one(bits, seed):
+    rng = np.random.default_rng(seed)
+    x = random_stochastic(rng, 16, 50, alpha=0.05)
+    out = np.asarray(normq_kernel.normq_rows(jnp.array(x), bits))
+    np.testing.assert_allclose(out.sum(axis=-1), 1.0, rtol=1e-5)
+    assert (out >= 0).all()
+
+
+def test_normq_no_dead_rows_even_all_zero_input():
+    x = jnp.zeros((4, 16), dtype=jnp.float32)
+    out = np.asarray(normq_kernel.normq_rows(x, 3))
+    np.testing.assert_allclose(out, 1.0 / 16, rtol=1e-4)
+
+
+# --------------------------------------------------- hmm forward scan --
+
+@settings(max_examples=10, deadline=None)
+@given(h=st.integers(2, 12), v=st.integers(3, 20), seed=st.integers(0, 2**31 - 1))
+def test_hmm_ll_kernel_scan_matches_oracle(h, v, seed):
+    from compile import model
+
+    rng = np.random.default_rng(seed)
+    init = random_stochastic(rng, 1, h)[0]
+    trans = random_stochastic(rng, h, h)
+    emit = random_stochastic(rng, h, v)
+    tokens = rng.integers(0, v, size=(16,)).astype(np.int32)
+    length = jnp.int32(10)
+    got = model.hmm_forward_ll(jnp.array(tokens), length, jnp.array(init), jnp.array(trans), jnp.array(emit))[0]
+    want = ref.hmm_log_likelihood(jnp.array(tokens), length, jnp.array(init), jnp.array(trans), jnp.array(emit))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_hmm_ll_masking_ignores_padding():
+    from compile import model
+
+    rng = np.random.default_rng(3)
+    init = random_stochastic(rng, 1, 4)[0]
+    trans = random_stochastic(rng, 4, 4)
+    emit = random_stochastic(rng, 4, 9)
+    toks = rng.integers(0, 9, size=(12,)).astype(np.int32)
+    a = model.hmm_forward_ll(jnp.array(toks), jnp.int32(5), jnp.array(init), jnp.array(trans), jnp.array(emit))[0]
+    toks2 = toks.copy()
+    toks2[5:] = 0  # change only padding
+    b = model.hmm_forward_ll(jnp.array(toks2), jnp.int32(5), jnp.array(init), jnp.array(trans), jnp.array(emit))[0]
+    np.testing.assert_allclose(a, b, rtol=1e-6)

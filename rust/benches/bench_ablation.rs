@@ -1,0 +1,87 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! - ε in the Norm-Q row normalization (paper uses 1e-12; how sensitive?)
+//! - the normalization step itself (Norm-Q vs raw fixed-point)
+//! - λ, the symbolic-term weight in the decoder score (the paper's
+//!   future-work "co-optimization" axis)
+//! - beam width (paper uses 128 on GPT2-large; what does this scale need?)
+
+use normq::data::{chunked, Corpus};
+use normq::eval::evaluate;
+use normq::generate::DecodeConfig;
+use normq::hmm::forward::mean_log_likelihood;
+use normq::hmm::Hmm;
+use normq::lm::NgramLm;
+use normq::qem::{train, QemConfig};
+use normq::quant::normq as nq;
+use normq::quant::Method;
+use normq::util::rng::Rng;
+
+fn main() {
+    normq::util::logging::init_from_env();
+    println!("== bench_ablation ==");
+    let corpus = Corpus::new(21);
+    let data = corpus.sample_token_corpus(3000, 22);
+    let lm = NgramLm::train(&data, corpus.vocab.len());
+    let test = corpus.sample_token_corpus(300, 23);
+    let mut rng = Rng::seeded(24);
+    let init = Hmm::random(64, corpus.vocab.len(), 0.3, 0.1, &mut rng);
+    let cfg = QemConfig { method: None, epochs: 2, eval_test: false, ..Default::default() };
+    let hmm = train(&init, &chunked(data, 10), &[], &cfg).model;
+    let items = corpus.eval_set(60, 2, 25);
+    let threads = normq::util::threadpool::default_threads();
+
+    // --- ε sweep (test LLD of the 4-bit quantized model) ---
+    println!("\nNorm-Q epsilon ablation (4-bit, test LLD; paper eps=1e-12):");
+    for eps in [1e-6f64, 1e-9, 1e-12, 1e-15, 0.0] {
+        let q = nq::normq_hmm(&hmm, 4, eps);
+        let lld = mean_log_likelihood(&q, &test, threads);
+        println!("  eps={eps:>8.0e}: test LLD {lld:8.3} valid={}", q.is_valid(1e-3));
+    }
+
+    // --- normalization on/off at matched bits (success + LLD) ---
+    println!("\nnormalization ablation (success rate / test LLD):");
+    let dcfg = DecodeConfig { beam: 6, max_tokens: 20, ..Default::default() };
+    for bits in [8u32, 4, 3] {
+        for (label, m) in [
+            ("fixed  ", Method::Fixed { bits }),
+            ("Norm-Q ", Method::NormQ { bits }),
+        ] {
+            let q = m.apply(&hmm);
+            let lld = mean_log_likelihood(&q, &test, threads);
+            let (s, _) = evaluate(&lm, &q, &corpus, &items, &dcfg, threads);
+            println!(
+                "  {bits}b {label}: success {:5.1}  LLD {lld:9.3}",
+                s.success_rate * 100.0
+            );
+        }
+    }
+
+    // --- λ sweep (symbolic weight in the decoder) ---
+    println!("\nlambda (symbolic weight) ablation, Norm-Q 8b:");
+    let q8 = Method::NormQ { bits: 8 }.apply(&hmm);
+    for lambda in [0.0f32, 0.25, 0.5, 1.0, 2.0, 4.0] {
+        let cfg = DecodeConfig { beam: 6, max_tokens: 20, lambda, ..Default::default() };
+        let (s, _) = evaluate(&lm, &q8, &corpus, &items, &cfg, threads);
+        println!(
+            "  lambda={lambda:>4}: success {:5.1} rouge {:4.1} bleu {:4.1}",
+            s.success_rate * 100.0,
+            s.rouge * 100.0,
+            s.bleu4 * 100.0
+        );
+    }
+
+    // --- beam sweep ---
+    println!("\nbeam-width ablation, Norm-Q 8b:");
+    for beam in [1usize, 2, 4, 8, 16] {
+        let cfg = DecodeConfig { beam, max_tokens: 20, ..Default::default() };
+        let t0 = std::time::Instant::now();
+        let (s, _) = evaluate(&lm, &q8, &corpus, &items, &cfg, threads);
+        println!(
+            "  beam={beam:>2}: success {:5.1} rouge {:4.1} ({:.1}s)",
+            s.success_rate * 100.0,
+            s.rouge * 100.0,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+}

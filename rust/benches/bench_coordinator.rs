@@ -1,0 +1,83 @@
+//! Serving-coordinator throughput: scaling with worker count, and the
+//! effect of the constraint-table cache (high vs low concept-set reuse).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use normq::coordinator::{Server, ServerConfig};
+use normq::data::{chunked, Corpus};
+use normq::generate::DecodeConfig;
+use normq::hmm::Hmm;
+use normq::lm::NgramLm;
+use normq::qem::{train, QemConfig};
+use normq::quant::Method;
+use normq::util::rng::Rng;
+
+fn main() {
+    println!("== bench_coordinator ==");
+    let corpus = Corpus::new(11);
+    let data = corpus.sample_token_corpus(4000, 12);
+    let lm = Arc::new(NgramLm::train(&data, corpus.vocab.len()));
+    let mut rng = Rng::seeded(13);
+    let init = Hmm::random(64, corpus.vocab.len(), 0.3, 0.1, &mut rng);
+    let tcfg = QemConfig { method: None, epochs: 2, eval_test: false, ..Default::default() };
+    let hmm = Method::NormQ { bits: 8 }.apply(&train(&init, &chunked(data, 10), &[], &tcfg).model);
+
+    let n_requests = 64usize;
+    let items = corpus.eval_set(n_requests, 1, 14);
+
+    // --- worker scaling ---
+    for workers in [1usize, 2, 4, 8] {
+        let cfg = ServerConfig {
+            workers,
+            decode: DecodeConfig { beam: 6, max_tokens: 20, ..Default::default() },
+            ..Default::default()
+        };
+        let server = Server::start(lm.clone(), hmm.clone(), corpus.clone(), cfg);
+        let t0 = Instant::now();
+        let rxs: Vec<_> = items
+            .iter()
+            .filter_map(|i| server.submit(i.concepts.clone()).ok())
+            .collect();
+        for rx in &rxs {
+            let _ = rx.recv();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let lat = server.metrics().latency_stats().unwrap();
+        println!(
+            "workers={workers}: {:>6.1} req/s  p50={:.1}ms p95={:.1}ms",
+            rxs.len() as f64 / wall,
+            lat.p50 * 1e3,
+            lat.p95 * 1e3
+        );
+        server.shutdown();
+    }
+
+    // --- table-cache effect: all requests share one concept set ---
+    for (label, reuse) in [("unique concept sets", false), ("one shared concept set", true)] {
+        let cfg = ServerConfig {
+            workers: 4,
+            decode: DecodeConfig { beam: 6, max_tokens: 20, ..Default::default() },
+            ..Default::default()
+        };
+        let server = Server::start(lm.clone(), hmm.clone(), corpus.clone(), cfg);
+        let t0 = Instant::now();
+        let rxs: Vec<_> = items
+            .iter()
+            .filter_map(|i| {
+                let concepts = if reuse { items[0].concepts.clone() } else { i.concepts.clone() };
+                server.submit(concepts).ok()
+            })
+            .collect();
+        for rx in &rxs {
+            let _ = rx.recv();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{label:<24}: {:>6.1} req/s  ({})",
+            rxs.len() as f64 / wall,
+            server.metrics().summary()
+        );
+        server.shutdown();
+    }
+}

@@ -1,0 +1,54 @@
+//! End-to-end decode latency/throughput: one constrained-generation
+//! request through the full neuro-symbolic stack, FP32 vs Norm-Q HMMs
+//! (per-request latency is the paper's motivating metric — Fig 1).
+
+use normq::data::{chunked, Corpus};
+use normq::dfa::Dfa;
+use normq::generate::{decode, DecodeConfig};
+use normq::hmm::Hmm;
+use normq::lm::NgramLm;
+use normq::qem::{train, QemConfig};
+use normq::quant::Method;
+use normq::util::rng::Rng;
+use normq::util::timer::{bench_seconds, fmt_secs, Stats};
+
+fn main() {
+    println!("== bench_decode ==");
+    let corpus = Corpus::new(5);
+    let data = corpus.sample_token_corpus(4000, 6);
+    let lm = NgramLm::train(&data, corpus.vocab.len());
+    let mut rng = Rng::seeded(7);
+    let init = Hmm::random(64, corpus.vocab.len(), 0.3, 0.1, &mut rng);
+    let cfg = QemConfig { method: None, epochs: 2, eval_test: false, ..Default::default() };
+    let hmm = train(&init, &chunked(data, 10), &[], &cfg).model;
+
+    let items = corpus.eval_set(8, 1, 8);
+    let dcfg = DecodeConfig { beam: 8, max_tokens: 24, ..Default::default() };
+
+    for (label, model) in [
+        ("FP32".to_string(), hmm.clone()),
+        ("Norm-Q 8b".to_string(), Method::NormQ { bits: 8 }.apply(&hmm)),
+        ("Norm-Q 4b".to_string(), Method::NormQ { bits: 4 }.apply(&hmm)),
+        ("Norm-Q 3b".to_string(), Method::NormQ { bits: 3 }.apply(&hmm)),
+    ] {
+        let mut idx = 0usize;
+        let samples = bench_seconds(2, 16, || {
+            let item = &items[idx % items.len()];
+            idx += 1;
+            let keywords: Vec<Vec<usize>> = item
+                .concepts
+                .iter()
+                .map(|c| vec![corpus.vocab.id(c)])
+                .collect();
+            let dfa = Dfa::from_keywords(&keywords, corpus.vocab.len());
+            let _ = decode(&lm, &model, &dfa, &dcfg);
+        });
+        let s = Stats::of(&samples);
+        println!(
+            "decode {label:<10} p50={:>9} p95={:>9} -> {:>6.1} req/s/worker",
+            fmt_secs(s.p50),
+            fmt_secs(s.p95),
+            1.0 / s.p50
+        );
+    }
+}

@@ -1,0 +1,112 @@
+//! Hot-path micro-benchmarks (hand-rolled harness; criterion is not in
+//! the offline crate set): the decode-step MatMuls in dense FP32 vs
+//! packed/sparse Norm-Q storage, the HMM forward step, constraint-table
+//! builds and the quantization codecs.
+//!
+//! Run: cargo bench --offline  (or: cargo bench --bench bench_hotpath)
+
+use normq::hmm::forward::forward_step;
+use normq::hmm::Hmm;
+use normq::quant::packed::{PackedMat, SparseQMat};
+use normq::quant::Method;
+use normq::util::mat::Mat;
+use normq::util::rng::Rng;
+use normq::util::timer::{bench_seconds, fmt_secs, Stats};
+
+fn report(name: &str, samples: &[f64], work_items: f64) {
+    let s = Stats::of(samples);
+    println!(
+        "{name:<44} p50={:>9} p95={:>9}  {:>10.1} Melem/s",
+        fmt_secs(s.p50),
+        fmt_secs(s.p95),
+        work_items / s.p50 / 1e6
+    );
+}
+
+fn main() {
+    println!("== bench_hotpath ==");
+    let mut rng = Rng::seeded(1);
+
+    // --- vecmat: dense vs packed vs sparse, HxV emission-shaped ---
+    for &(h, v) in &[(64usize, 1000usize), (256, 1000), (64, 4096)] {
+        let m = Mat::random_stochastic(h, v, 0.02, &mut rng);
+        let x = rng.dirichlet_symmetric(h, 1.0);
+        let mut out = vec![0f32; v];
+        let items = (h * v) as f64;
+
+        let s = bench_seconds(3, 30, || m.vecmat(&x, &mut out));
+        report(&format!("dense f32 vecmat {h}x{v}"), &s, items);
+
+        for bits in [8u32, 4] {
+            let packed = PackedMat::from_mat(&m, bits);
+            let s = bench_seconds(3, 30, || packed.vecmat(&x, &mut out));
+            report(&format!("packed {bits}b vecmat {h}x{v}"), &s, items);
+
+            let sparse = SparseQMat::from_mat(&m, bits);
+            let s = bench_seconds(3, 30, || sparse.vecmat(&x, &mut out));
+            report(
+                &format!("sparse {bits}b vecmat {h}x{v} (nnz={})", sparse.nnz()),
+                &s,
+                items,
+            );
+        }
+        println!();
+    }
+
+    // --- HMM forward step ---
+    for &h in &[64usize, 256, 1024] {
+        let hmm = Hmm::random(h, 1000, 0.05, 0.02, &mut rng);
+        let alpha = hmm.init.clone();
+        let mut next = vec![0f32; h];
+        let s = bench_seconds(3, 30, || {
+            forward_step(&hmm, &alpha, 7, &mut next);
+        });
+        report(&format!("forward_step H={h}"), &s, (h * h) as f64);
+    }
+    println!();
+
+    // --- constraint table build (the per-request precomputation) ---
+    let hmm = Hmm::random(64, 1000, 0.05, 0.02, &mut rng);
+    for n_kw in [1usize, 2, 4] {
+        let keywords: Vec<Vec<usize>> = (0..n_kw).map(|i| vec![50 + i]).collect();
+        let dfa = normq::dfa::Dfa::from_keywords(&keywords, 1000);
+        let s = bench_seconds(2, 10, || {
+            let _ = normq::generate::ConstraintTable::build(&hmm, &dfa, 32);
+        });
+        report(
+            &format!("table build H=64 T=32 keywords={n_kw} (D={})", dfa.n_states()),
+            &s,
+            (32 * dfa.n_states() * 64 * 64) as f64,
+        );
+    }
+    println!();
+
+    // --- quantization codecs ---
+    let m = Mat::random_stochastic(256, 1000, 0.02, &mut rng);
+    let hmm_big = Hmm {
+        init: rng.dirichlet_symmetric(256, 1.0),
+        trans: Mat::random_stochastic(256, 256, 0.05, &mut rng),
+        emit: m,
+    };
+    for method in [
+        Method::NormQ { bits: 8 },
+        Method::NormQ { bits: 3 },
+        Method::Fixed { bits: 8 },
+        Method::Integer { bits: 8 },
+        Method::Prune { ratio: 0.9, renorm: true },
+    ] {
+        let s = bench_seconds(1, 8, || {
+            let _ = method.apply(&hmm_big);
+        });
+        report(
+            &format!("codec {} on 256x1000 HMM", method.label()),
+            &s,
+            hmm_big.param_count() as f64,
+        );
+    }
+    // k-means separately (much slower, fewer iters)
+    let s = bench_seconds(0, 2, || {
+        let _ = Method::Kmeans { bits: 8, renorm: true }.apply(&hmm_big);
+    });
+    report("codec kmeans256 norm on 256x1000 HMM", &s, hmm_big.param_count() as f64);
+}

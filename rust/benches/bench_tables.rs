@@ -1,0 +1,58 @@
+//! Table/figure regeneration bench: runs every experiment driver at a
+//! reduced scale and prints the resulting tables with timings. This is
+//! the `cargo bench` entry point that proves all eleven paper artifacts
+//! (Tables I-VI, Figs 1-5) regenerate from this repository; full-scale
+//! runs go through `normq table <id>` / `make tables`.
+
+use normq::tables::run_experiment;
+use normq::util::cli::Args;
+use std::time::Instant;
+
+fn main() {
+    normq::util::logging::init_from_env();
+    // Reduced-scale arguments so the full suite finishes in minutes.
+    let base = vec![
+        "--items=60".to_string(),
+        "--train=3000".to_string(),
+        "--epochs=2".to_string(),
+        "--beam=6".to_string(),
+        "--max-tokens=20".to_string(),
+    ];
+    let experiments: Vec<(&str, Vec<String>)> = vec![
+        ("1", base.clone()),
+        ("2", { let mut a = base.clone(); a.push("--bits=16,12,10,8".into()); a }),
+        ("3", base.clone()),
+        ("4", base.clone()),
+        ("5", { let mut a = base.clone(); a.push("--bits=8,4,3".into()); a }),
+        ("6", { let mut a = base.clone(); a.push("--scales=2".into()); a.push("--bits=8,3".into()); a }),
+        ("fig1", { let mut a = base.clone(); a.push("--requests=8".into()); a }),
+        ("fig2", base.clone()),
+        ("fig3", { let mut a = base.clone(); a.push("--intervals=1,5,20".into()); a.push("--bits=8".into()); a }),
+        ("fig4", { let mut a = base.clone(); a.push("--bits=8,4,3".into()); a }),
+        ("fig5", { let mut a = base.clone(); a.push("--intervals=1,20".into()); a }),
+    ];
+    let mut failures = 0;
+    for (id, argv) in experiments {
+        let t0 = Instant::now();
+        match Args::parse(&argv, &[
+            "hidden", "items", "train", "chunks", "epochs", "beam", "max-tokens", "seed",
+            "threads", "refs", "lambda",
+        ])
+        .and_then(|args| run_experiment(id, &args))
+        {
+            Ok(result) => {
+                println!("{}", result.render());
+                println!("[bench_tables] {id} regenerated in {:.1}s\n", t0.elapsed().as_secs_f64());
+                result.save("results/bench");
+            }
+            Err(e) => {
+                eprintln!("[bench_tables] {id} FAILED: {e}");
+                failures += 1;
+            }
+        }
+    }
+    if failures > 0 {
+        std::process::exit(1);
+    }
+    println!("[bench_tables] all 11 experiments regenerated");
+}

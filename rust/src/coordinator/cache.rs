@@ -1,0 +1,96 @@
+//! LRU cache for per-concept-set decode state (DFA + constraint table).
+//! The constraint table is the expensive per-request precomputation
+//! (HMM×DFA backward, O(T·D·H²)); requests sharing a concept set share
+//! the table — the symbolic analog of a KV-cache manager.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+pub struct LruCache<V> {
+    capacity: usize,
+    map: HashMap<String, Arc<V>>,
+    order: VecDeque<String>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl<V> LruCache<V> {
+    pub fn new(capacity: usize) -> Self {
+        LruCache {
+            capacity: capacity.max(1),
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Get or build the value for `key`.
+    pub fn get_or_insert_with(&mut self, key: &str, build: impl FnOnce() -> V) -> Arc<V> {
+        if let Some(v) = self.map.get(key) {
+            self.hits += 1;
+            let v = Arc::clone(v);
+            // Move to MRU position.
+            if let Some(pos) = self.order.iter().position(|k| k == key) {
+                self.order.remove(pos);
+            }
+            self.order.push_back(key.to_string());
+            return v;
+        }
+        self.misses += 1;
+        let v = Arc::new(build());
+        if self.map.len() >= self.capacity {
+            if let Some(evict) = self.order.pop_front() {
+                self.map.remove(&evict);
+            }
+        }
+        self.map.insert(key.to_string(), Arc::clone(&v));
+        self.order.push_back(key.to_string());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn caches_and_counts() {
+        let mut c: LruCache<u32> = LruCache::new(2);
+        let a = c.get_or_insert_with("a", || 1);
+        assert_eq!(*a, 1);
+        let a2 = c.get_or_insert_with("a", || panic!("rebuilt"));
+        assert_eq!(*a2, 1);
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn evicts_lru() {
+        let mut c: LruCache<u32> = LruCache::new(2);
+        c.get_or_insert_with("a", || 1);
+        c.get_or_insert_with("b", || 2);
+        c.get_or_insert_with("a", || panic!()); // a is now MRU
+        c.get_or_insert_with("c", || 3); // evicts b
+        assert_eq!(c.len(), 2);
+        c.get_or_insert_with("b", || 22); // miss: rebuilt
+        assert_eq!(c.misses, 4);
+    }
+
+    #[test]
+    fn capacity_one_works() {
+        let mut c: LruCache<u32> = LruCache::new(1);
+        c.get_or_insert_with("a", || 1);
+        c.get_or_insert_with("b", || 2);
+        assert_eq!(c.len(), 1);
+    }
+}

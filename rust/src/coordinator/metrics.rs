@@ -1,0 +1,98 @@
+//! Serving metrics registry: atomic counters + latency reservoir.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::timer::Stats;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub satisfied: AtomicU64,
+    pub table_cache_hits: AtomicU64,
+    pub table_cache_misses: AtomicU64,
+    /// end-to-end latencies (seconds)
+    latencies: Mutex<Vec<f64>>,
+    /// time spent queued before a worker picked the request up
+    queue_waits: Mutex<Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latency(&self, total: f64, queued: f64) {
+        self.latencies.lock().unwrap().push(total);
+        self.queue_waits.lock().unwrap().push(queued);
+    }
+
+    pub fn latency_stats(&self) -> Option<Stats> {
+        let l = self.latencies.lock().unwrap();
+        if l.is_empty() {
+            None
+        } else {
+            Some(Stats::of(&l))
+        }
+    }
+
+    pub fn queue_stats(&self) -> Option<Stats> {
+        let q = self.queue_waits.lock().unwrap();
+        if q.is_empty() {
+            None
+        } else {
+            Some(Stats::of(&q))
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        let lat = self
+            .latency_stats()
+            .map(|s| {
+                format!(
+                    "latency p50={} p95={} max={}",
+                    crate::util::timer::fmt_secs(s.p50),
+                    crate::util::timer::fmt_secs(s.p95),
+                    crate::util::timer::fmt_secs(s.max)
+                )
+            })
+            .unwrap_or_else(|| "latency n/a".into());
+        format!(
+            "submitted={} completed={} rejected={} satisfied={} cache h/m={}/{} {}",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.satisfied.load(Ordering::Relaxed),
+            self.table_cache_hits.load(Ordering::Relaxed),
+            self.table_cache_misses.load(Ordering::Relaxed),
+            lat
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let m = Metrics::new();
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        m.completed.fetch_add(2, Ordering::Relaxed);
+        m.record_latency(0.010, 0.001);
+        m.record_latency(0.020, 0.002);
+        let s = m.latency_stats().unwrap();
+        assert_eq!(s.n, 2);
+        assert!((s.mean - 0.015).abs() < 1e-9);
+        assert!(m.summary().contains("submitted=3"));
+    }
+
+    #[test]
+    fn empty_latencies_are_none() {
+        let m = Metrics::new();
+        assert!(m.latency_stats().is_none());
+        assert!(m.summary().contains("n/a"));
+    }
+}

@@ -1,0 +1,277 @@
+//! Synthetic concept-to-sentence corpus (the CommonGen substitute).
+//!
+//! Each sentence is produced by filling a part-of-speech template with
+//! lexicon words; a *concept set* (2–4 content words) is planted into the
+//! template slots in order. This mirrors the paper's task (§IV-A): given
+//! concepts/keywords, generate a sentence in which all of them appear.
+//!
+//! The same generator builds (a) the LM/HMM training corpus, (b) the held
+//! -out test corpus, and (c) the 900-item evaluation set with references.
+
+use crate::data::lexicon::Lexicon;
+use crate::data::vocab::Vocab;
+use crate::util::rng::Rng;
+
+/// A template is a sequence of slots.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Slot {
+    Word(&'static str), // literal function word
+    Noun,
+    Verb,
+    Adj,
+    Place,
+}
+
+use Slot::*;
+
+/// The template grammar. Kept deliberately small and regular so that a
+/// few-hundred-K-parameter LM and a small HMM can both model it well.
+pub const TEMPLATES: &[&[Slot]] = &[
+    &[Word("the"), Noun, Verb, Word("the"), Noun],
+    &[Word("the"), Adj, Noun, Verb, Word("the"), Noun],
+    &[Word("a"), Noun, Verb, Word("in"), Word("the"), Place],
+    &[Word("the"), Noun, Verb, Word("near"), Word("the"), Place],
+    &[Word("a"), Adj, Noun, Verb, Word("the"), Adj, Noun],
+    &[Word("the"), Noun, Word("and"), Word("the"), Noun, Verb, Word("at"), Word("the"), Place],
+    &[Word("the"), Noun, Verb, Word("the"), Noun, Word("with"), Word("a"), Noun],
+    &[Word("a"), Noun, Word("in"), Word("the"), Place, Verb, Word("the"), Noun],
+    &[Word("the"), Adj, Noun, Verb, Word("under"), Word("the"), Place],
+    &[Word("the"), Noun, Verb, Word("to"), Word("the"), Place, Word("by"), Word("the"), Noun],
+];
+
+/// One evaluation item: concepts that must appear, plus references.
+#[derive(Clone, Debug)]
+pub struct EvalItem {
+    pub concepts: Vec<String>,
+    pub references: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub lexicon: Lexicon,
+    pub vocab: Vocab,
+}
+
+impl Corpus {
+    pub fn new(seed: u64) -> Corpus {
+        let lexicon = Lexicon::default_sizes(seed);
+        let vocab = Vocab::new(lexicon.all_words());
+        Corpus { lexicon, vocab }
+    }
+
+    /// Small corpus for fast tests.
+    pub fn small(seed: u64) -> Corpus {
+        let lexicon = Lexicon::generate(seed, 40, 25, 18, 12);
+        let vocab = Vocab::new(lexicon.all_words());
+        Corpus { lexicon, vocab }
+    }
+
+    fn fill_slot(&self, slot: Slot, planted: &mut std::vec::IntoIter<String>, rng: &mut Rng) -> String {
+        let lex = &self.lexicon;
+        let class: &[String] = match slot {
+            Word(w) => return w.to_string(),
+            Noun => &lex.nouns,
+            Verb => &lex.verbs,
+            Adj => &lex.adjectives,
+            Place => &lex.places,
+        };
+        let next_fits = planted
+            .as_slice()
+            .first()
+            .map(|w| class.contains(w))
+            .unwrap_or(false);
+        if next_fits {
+            planted.next().unwrap()
+        } else {
+            class[rng.below_usize(class.len())].clone()
+        }
+    }
+
+    /// Render a template with `concepts` planted in order (each concept is
+    /// consumed by the first slot of its class), other slots random.
+    pub fn render(&self, template: &[Slot], concepts: &[String], rng: &mut Rng) -> String {
+        let mut planted = concepts.to_vec().into_iter();
+        let words: Vec<String> = template
+            .iter()
+            .map(|&s| self.fill_slot(s, &mut planted, rng))
+            .collect();
+        words.join(" ")
+    }
+
+    /// Does this template have slots, in order, for all the concepts?
+    fn template_fits(&self, template: &[Slot], concepts: &[String]) -> bool {
+        let mut it = concepts.iter().peekable();
+        for &slot in template {
+            if let Some(c) = it.peek() {
+                let matches = match slot {
+                    Noun => self.lexicon.nouns.contains(c),
+                    Verb => self.lexicon.verbs.contains(c),
+                    Adj => self.lexicon.adjectives.contains(c),
+                    Place => self.lexicon.places.contains(c),
+                    Word(_) => false,
+                };
+                if matches {
+                    it.next();
+                }
+            } else {
+                break;
+            }
+        }
+        it.next().is_none()
+    }
+
+    /// Sample a concept set: a noun + verb core, optionally an adjective
+    /// and/or place (2-4 concepts, ordered noun/adj < verb < place-ish to
+    /// match template slot order: adj, noun, verb, place).
+    pub fn sample_concepts(&self, rng: &mut Rng) -> Vec<String> {
+        let lex = &self.lexicon;
+        let mut concepts = Vec::new();
+        let with_adj = rng.below(3) == 0;
+        let with_place = rng.below(3) == 0;
+        if with_adj {
+            concepts.push(lex.adjectives[rng.below_usize(lex.adjectives.len())].clone());
+        }
+        concepts.push(lex.nouns[rng.below_usize(lex.nouns.len())].clone());
+        concepts.push(lex.verbs[rng.below_usize(lex.verbs.len())].clone());
+        if with_place {
+            concepts.push(lex.places[rng.below_usize(lex.places.len())].clone());
+        }
+        concepts
+    }
+
+    /// A random sentence (with a random concept plant) — corpus sampling.
+    pub fn sample_sentence(&self, rng: &mut Rng) -> String {
+        let concepts = self.sample_concepts(rng);
+        let fitting: Vec<&&[Slot]> = TEMPLATES
+            .iter()
+            .filter(|t| self.template_fits(t, &concepts))
+            .collect();
+        let template = if fitting.is_empty() {
+            TEMPLATES[rng.below_usize(TEMPLATES.len())]
+        } else {
+            fitting[rng.below_usize(fitting.len())]
+        };
+        self.render(template, &concepts, rng)
+    }
+
+    /// Token-id training corpus: `n` sentences, each `<eos>`-terminated.
+    pub fn sample_token_corpus(&self, n: usize, seed: u64) -> Vec<Vec<usize>> {
+        let mut rng = Rng::seeded(seed);
+        (0..n)
+            .map(|_| self.vocab.encode_eos(&self.sample_sentence(&mut rng)))
+            .collect()
+    }
+
+    /// The evaluation set: `n` items (paper: 900), each with a concept set
+    /// and `refs_per_item` reference sentences containing those concepts.
+    pub fn eval_set(&self, n: usize, refs_per_item: usize, seed: u64) -> Vec<EvalItem> {
+        let mut rng = Rng::seeded(seed ^ 0xE7A1);
+        (0..n)
+            .map(|_| {
+                let concepts = self.sample_concepts(&mut rng);
+                let fitting: Vec<&&[Slot]> = TEMPLATES
+                    .iter()
+                    .filter(|t| self.template_fits(t, &concepts))
+                    .collect();
+                let references = (0..refs_per_item)
+                    .map(|_| {
+                        let t = if fitting.is_empty() {
+                            TEMPLATES[0]
+                        } else {
+                            fitting[rng.below_usize(fitting.len())]
+                        };
+                        self.render(t, &concepts, &mut rng)
+                    })
+                    .collect();
+                EvalItem { concepts, references }
+            })
+            .collect()
+    }
+}
+
+/// Split a token corpus into `n_chunks` chunks (paper §IV-A: 20 chunks).
+pub fn chunked(data: Vec<Vec<usize>>, n_chunks: usize) -> Vec<Vec<Vec<usize>>> {
+    assert!(n_chunks > 0);
+    let mut chunks: Vec<Vec<Vec<usize>>> = (0..n_chunks).map(|_| Vec::new()).collect();
+    for (i, seq) in data.into_iter().enumerate() {
+        chunks[i % n_chunks].push(seq);
+    }
+    chunks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sentences_contain_planted_concepts() {
+        let c = Corpus::small(5);
+        let mut rng = Rng::seeded(9);
+        for _ in 0..50 {
+            let concepts = c.sample_concepts(&mut rng);
+            let fitting: Vec<&&[Slot]> = TEMPLATES
+                .iter()
+                .filter(|t| c.template_fits(t, &concepts))
+                .collect();
+            if fitting.is_empty() {
+                continue;
+            }
+            let s = c.render(fitting[0], &concepts, &mut rng);
+            for concept in &concepts {
+                assert!(
+                    s.split_whitespace().any(|w| w == concept),
+                    "concept {concept} missing from {s:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eval_set_references_contain_concepts() {
+        let c = Corpus::small(6);
+        let items = c.eval_set(30, 2, 1);
+        assert_eq!(items.len(), 30);
+        for item in &items {
+            assert!((2..=4).contains(&item.concepts.len()));
+            assert_eq!(item.references.len(), 2);
+            for r in &item.references {
+                for concept in &item.concepts {
+                    assert!(
+                        r.split_whitespace().any(|w| w == concept),
+                        "concept {concept} missing from reference {r:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn token_corpus_is_eos_terminated_and_in_vocab() {
+        let c = Corpus::small(7);
+        let data = c.sample_token_corpus(20, 3);
+        assert_eq!(data.len(), 20);
+        for seq in &data {
+            assert_eq!(*seq.last().unwrap(), crate::data::vocab::EOS);
+            assert!(seq.iter().all(|&t| t < c.vocab.len()));
+            // No <unk> in generated data — everything is in-vocab.
+            assert!(seq.iter().all(|&t| t != crate::data::vocab::UNK));
+        }
+    }
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let a = Corpus::small(8).sample_token_corpus(10, 4);
+        let b = Corpus::small(8).sample_token_corpus(10, 4);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn chunking_partitions() {
+        let data: Vec<Vec<usize>> = (0..95).map(|i| vec![i]).collect();
+        let chunks = chunked(data, 20);
+        assert_eq!(chunks.len(), 20);
+        let total: usize = chunks.iter().map(|c| c.len()).sum();
+        assert_eq!(total, 95);
+        assert!(chunks.iter().all(|c| c.len() >= 4));
+    }
+}

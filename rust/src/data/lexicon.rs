@@ -1,0 +1,146 @@
+//! Deterministic synthetic lexicon.
+//!
+//! We need a vocabulary on the order of 1000 words with part-of-speech
+//! structure so that (a) a template grammar can produce CommonGen-style
+//! concept sentences, and (b) the concept lexicon for the SPICE-proxy
+//! metric is known exactly. Words are generated from syllables with a
+//! seeded RNG, so Rust and Python (python/compile/corpus.py) produce the
+//! *identical* lexicon from the same seed — a parity test pins this.
+
+use crate::util::rng::Rng;
+
+pub const ONSETS: [&str; 14] = [
+    "b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z",
+];
+pub const NUCLEI: [&str; 5] = ["a", "e", "i", "o", "u"];
+pub const CODAS: [&str; 6] = ["", "n", "r", "s", "l", "k"];
+
+/// Function words shared by every template (closed class).
+pub const FUNCTION_WORDS: [&str; 12] = [
+    "the", "a", "in", "on", "near", "with", "and", "to", "at", "by", "of", "under",
+];
+
+#[derive(Clone, Debug)]
+pub struct Lexicon {
+    pub nouns: Vec<String>,
+    pub verbs: Vec<String>,
+    pub adjectives: Vec<String>,
+    pub places: Vec<String>,
+}
+
+fn make_word(rng: &mut Rng, syllables: usize, suffix: &str) -> String {
+    let mut w = String::new();
+    for _ in 0..syllables {
+        w.push_str(ONSETS[rng.below_usize(ONSETS.len())]);
+        w.push_str(NUCLEI[rng.below_usize(NUCLEI.len())]);
+        w.push_str(CODAS[rng.below_usize(CODAS.len())]);
+    }
+    w.push_str(suffix);
+    w
+}
+
+impl Lexicon {
+    /// Deterministic lexicon from a seed; default sizes give ≈1000 total
+    /// vocabulary once function words and specials are added.
+    pub fn generate(seed: u64, nouns: usize, verbs: usize, adjectives: usize, places: usize) -> Lexicon {
+        let mut rng = Rng::seeded(seed);
+        let mut seen = std::collections::HashSet::new();
+        let mut class = |n: usize, syl: usize, suffix: &str, rng: &mut Rng| -> Vec<String> {
+            let mut out = Vec::with_capacity(n);
+            while out.len() < n {
+                let w = make_word(rng, syl, suffix);
+                if seen.insert(w.clone()) {
+                    out.push(w);
+                }
+            }
+            out
+        };
+        // Distinct suffixes make POS classes disjoint by construction.
+        let nouns = class(nouns, 2, "", &mut rng);
+        let verbs = class(verbs, 2, "es", &mut rng);
+        let adjectives = class(adjectives, 2, "y", &mut rng);
+        let places = class(places, 2, "ia", &mut rng);
+        Lexicon { nouns, verbs, adjectives, places }
+    }
+
+    pub fn default_sizes(seed: u64) -> Lexicon {
+        Lexicon::generate(seed, 400, 250, 180, 120)
+    }
+
+    /// All content words in a fixed order (nouns, verbs, adjectives,
+    /// places) — this plus FUNCTION_WORDS defines the vocabulary order.
+    pub fn all_words(&self) -> Vec<String> {
+        let mut out: Vec<String> = FUNCTION_WORDS.iter().map(|s| s.to_string()).collect();
+        out.extend(self.nouns.iter().cloned());
+        out.extend(self.verbs.iter().cloned());
+        out.extend(self.adjectives.iter().cloned());
+        out.extend(self.places.iter().cloned());
+        out
+    }
+
+    /// Is `word` a content word (counts toward the SPICE-proxy)?
+    pub fn is_content(&self, word: &str) -> bool {
+        // POS suffix structure makes this O(1)-ish; exactness matters more
+        // than speed here, so do the honest membership checks.
+        self.nouns.iter().any(|w| w == word)
+            || self.verbs.iter().any(|w| w == word)
+            || self.adjectives.iter().any(|w| w == word)
+            || self.places.iter().any(|w| w == word)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = Lexicon::generate(42, 10, 10, 5, 5);
+        let b = Lexicon::generate(42, 10, 10, 5, 5);
+        assert_eq!(a.nouns, b.nouns);
+        assert_eq!(a.verbs, b.verbs);
+    }
+
+    #[test]
+    fn classes_are_disjoint_and_sized() {
+        let l = Lexicon::generate(1, 50, 40, 30, 20);
+        assert_eq!(l.nouns.len(), 50);
+        assert_eq!(l.verbs.len(), 40);
+        assert_eq!(l.adjectives.len(), 30);
+        assert_eq!(l.places.len(), 20);
+        let mut all: Vec<&String> = l
+            .nouns
+            .iter()
+            .chain(&l.verbs)
+            .chain(&l.adjectives)
+            .chain(&l.places)
+            .collect();
+        let n = all.len();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), n, "duplicate words across classes");
+    }
+
+    #[test]
+    fn suffix_structure() {
+        let l = Lexicon::generate(2, 5, 5, 5, 5);
+        assert!(l.verbs.iter().all(|w| w.ends_with("es")));
+        assert!(l.adjectives.iter().all(|w| w.ends_with('y')));
+        assert!(l.places.iter().all(|w| w.ends_with("ia")));
+    }
+
+    #[test]
+    fn default_sizes_give_about_1000_vocab() {
+        let l = Lexicon::default_sizes(7);
+        let total = l.all_words().len() + 2; // + <eos>,<unk>
+        assert!((900..=1100).contains(&total), "total={total}");
+    }
+
+    #[test]
+    fn is_content_distinguishes() {
+        let l = Lexicon::generate(3, 5, 5, 5, 5);
+        assert!(l.is_content(&l.nouns[0]));
+        assert!(!l.is_content("the"));
+        assert!(!l.is_content("<eos>"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Data substrate: deterministic synthetic lexicon, whitespace
+//! tokenizer/vocabulary, the CommonGen-substitute concept corpus, and
+//! dataset chunking (paper §IV-A).
+
+pub mod corpus;
+pub mod lexicon;
+pub mod vocab;
+
+pub use corpus::{chunked, Corpus, EvalItem};
+pub use lexicon::Lexicon;
+pub use vocab::Vocab;

@@ -1,0 +1,123 @@
+//! Vocabulary and tokenizer.
+//!
+//! The paper's setup uses GPT2's 50257-token vocabulary; our synthetic
+//! substitute is a closed whitespace-tokenized vocabulary generated
+//! deterministically (see `lexicon.rs`). Token 0 is always `<eos>` and
+//! token 1 is `<unk>`.
+
+use std::collections::HashMap;
+
+pub const EOS: usize = 0;
+pub const UNK: usize = 1;
+
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    words: Vec<String>,
+    index: HashMap<String, usize>,
+}
+
+impl Vocab {
+    /// Build from a word list; `<eos>`/`<unk>` are prepended automatically
+    /// (and must not appear in `words`).
+    pub fn new(words: Vec<String>) -> Vocab {
+        let mut all = vec!["<eos>".to_string(), "<unk>".to_string()];
+        all.extend(words);
+        let index = all
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i))
+            .collect();
+        Vocab { words: all, index }
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    pub fn id(&self, word: &str) -> usize {
+        *self.index.get(word).unwrap_or(&UNK)
+    }
+
+    pub fn word(&self, id: usize) -> &str {
+        self.words.get(id).map(|s| s.as_str()).unwrap_or("<unk>")
+    }
+
+    pub fn contains(&self, word: &str) -> bool {
+        self.index.contains_key(word)
+    }
+
+    /// Tokenize a whitespace-separated sentence (no `<eos>` appended).
+    pub fn encode(&self, text: &str) -> Vec<usize> {
+        text.split_whitespace().map(|w| self.id(w)).collect()
+    }
+
+    /// Tokenize and append `<eos>`.
+    pub fn encode_eos(&self, text: &str) -> Vec<usize> {
+        let mut t = self.encode(text);
+        t.push(EOS);
+        t
+    }
+
+    /// Detokenize, stopping at the first `<eos>`.
+    pub fn decode(&self, tokens: &[usize]) -> String {
+        let mut words = Vec::new();
+        for &t in tokens {
+            if t == EOS {
+                break;
+            }
+            words.push(self.word(t));
+        }
+        words.join(" ")
+    }
+
+    pub fn words(&self) -> &[String] {
+        &self.words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v() -> Vocab {
+        Vocab::new(vec!["the".into(), "dog".into(), "runs".into()])
+    }
+
+    #[test]
+    fn special_tokens_first() {
+        let v = v();
+        assert_eq!(v.id("<eos>"), EOS);
+        assert_eq!(v.id("<unk>"), UNK);
+        assert_eq!(v.word(EOS), "<eos>");
+    }
+
+    #[test]
+    fn roundtrip() {
+        let v = v();
+        let toks = v.encode("the dog runs");
+        assert_eq!(toks, vec![2, 3, 4]);
+        assert_eq!(v.decode(&toks), "the dog runs");
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let v = v();
+        assert_eq!(v.encode("the cat"), vec![2, UNK]);
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let v = v();
+        assert_eq!(v.decode(&[2, 3, EOS, 4]), "the dog");
+    }
+
+    #[test]
+    fn encode_eos_appends() {
+        let v = v();
+        assert_eq!(*v.encode_eos("dog").last().unwrap(), EOS);
+    }
+}

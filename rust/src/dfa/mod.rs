@@ -1,0 +1,340 @@
+//! Deterministic finite automaton substrate for keyword constraints.
+//!
+//! The Ctrl-G style task (§IV-A) requires every concept keyword to appear
+//! somewhere in the generated token sequence. The automaton tracks, per
+//! keyword, the longest prefix currently matched (KMP-style) plus the set
+//! of keywords already satisfied; a state is accepting when all keywords
+//! have been seen. States are interned during BFS construction, which
+//! also serves as reachable-state minimization for this state shape
+//! (mask + canonical progress vector).
+//!
+//! The representation is optimized for the HMM-product backward pass in
+//! `crate::generate`: per state we store a *default* successor (taken by
+//! every token outside the keyword alphabet — the overwhelming majority
+//! of the vocabulary) plus a sparse exception list, so the decoder can
+//! partition the vocabulary into a handful of classes per state.
+
+use std::collections::HashMap;
+
+/// A compiled keyword-constraint DFA over token ids.
+#[derive(Clone, Debug)]
+pub struct Dfa {
+    pub vocab: usize,
+    pub keywords: Vec<Vec<usize>>,
+    n_states: usize,
+    start: u32,
+    accepting: Vec<bool>,
+    default_next: Vec<u32>,
+    /// Per state: sorted (token, next_state) for keyword-alphabet tokens.
+    exceptions: Vec<Vec<(u32, u32)>>,
+}
+
+/// Internal construction state: satisfied mask + per-keyword progress.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+struct RawState {
+    mask: u32,
+    progress: Vec<u8>,
+}
+
+impl RawState {
+    fn canonical(mut self, keywords: &[Vec<usize>]) -> RawState {
+        for (k, p) in self.progress.iter_mut().enumerate() {
+            if self.mask & (1 << k) != 0 {
+                *p = 0; // progress irrelevant once satisfied
+            }
+            debug_assert!((*p as usize) < keywords[k].len().max(1));
+        }
+        self
+    }
+}
+
+/// KMP-style advance: given `matched` chars of `kw` already matched and
+/// the next token `t`, return the new number of matched chars.
+fn advance(kw: &[usize], matched: usize, t: usize) -> usize {
+    let mut m = matched;
+    loop {
+        if kw[m] == t {
+            return m + 1;
+        }
+        if m == 0 {
+            return 0;
+        }
+        // Fall back to the longest proper border of kw[..m] then retry.
+        // Keywords are short (<= 4 tokens), so a direct scan is fine.
+        let mut fallback = 0;
+        for b in (1..m).rev() {
+            if kw[..b] == kw[m - b..m] {
+                fallback = b;
+                break;
+            }
+        }
+        m = fallback;
+    }
+}
+
+impl Dfa {
+    /// Compile keyword token sequences into a DFA. Empty keywords are
+    /// rejected; at most 20 keywords (mask width) are supported.
+    pub fn from_keywords(keywords: &[Vec<usize>], vocab: usize) -> Dfa {
+        assert!(keywords.len() <= 20, "too many keywords");
+        assert!(keywords.iter().all(|k| !k.is_empty()), "empty keyword");
+        assert!(
+            keywords.iter().flatten().all(|&t| t < vocab),
+            "keyword token out of vocabulary"
+        );
+        let k_n = keywords.len();
+        let full_mask: u32 = if k_n == 32 { u32::MAX } else { (1 << k_n) - 1 };
+
+        // Keyword alphabet = candidate exception tokens.
+        let mut alphabet: Vec<usize> = keywords.iter().flatten().copied().collect();
+        alphabet.sort_unstable();
+        alphabet.dedup();
+
+        let mut intern: HashMap<RawState, u32> = HashMap::new();
+        let mut states: Vec<RawState> = Vec::new();
+        let mut default_next: Vec<u32> = Vec::new();
+        let mut exceptions: Vec<Vec<(u32, u32)>> = Vec::new();
+
+        let start_raw = RawState { mask: 0, progress: vec![0; k_n] }.canonical(keywords);
+        intern.insert(start_raw.clone(), 0);
+        states.push(start_raw);
+
+        let mut frontier = vec![0u32];
+        while let Some(sid) = frontier.pop() {
+            let state = states[sid as usize].clone();
+            // Transition for one token.
+            let step = |t: usize, states: &RawState| -> RawState {
+                let mut mask = states.mask;
+                let mut progress = states.progress.clone();
+                for (k, kw) in keywords.iter().enumerate() {
+                    if mask & (1 << k) != 0 {
+                        continue;
+                    }
+                    let m = advance(kw, progress[k] as usize, t);
+                    if m == kw.len() {
+                        mask |= 1 << k;
+                        progress[k] = 0;
+                    } else {
+                        progress[k] = m as u8;
+                    }
+                }
+                RawState { mask, progress }.canonical(keywords)
+            };
+            // Default: any token outside the alphabet resets progress.
+            let default_raw =
+                RawState { mask: state.mask, progress: vec![0; k_n] }.canonical(keywords);
+            let push_state = |raw: RawState,
+                                  intern: &mut HashMap<RawState, u32>,
+                                  states: &mut Vec<RawState>,
+                                  frontier: &mut Vec<u32>|
+             -> u32 {
+                if let Some(&id) = intern.get(&raw) {
+                    id
+                } else {
+                    let id = states.len() as u32;
+                    intern.insert(raw.clone(), id);
+                    states.push(raw);
+                    frontier.push(id);
+                    id
+                }
+            };
+            let default_id = push_state(default_raw, &mut intern, &mut states, &mut frontier);
+            let mut exc = Vec::new();
+            for &t in &alphabet {
+                let next_raw = step(t, &state);
+                let next_id = push_state(next_raw, &mut intern, &mut states, &mut frontier);
+                if next_id != default_id {
+                    exc.push((t as u32, next_id));
+                }
+            }
+            exc.sort_unstable();
+            // default_next / exceptions are indexed by sid; the BFS may
+            // discover states out of order, so grow the tables.
+            if default_next.len() <= sid as usize {
+                default_next.resize(states.len(), u32::MAX);
+                exceptions.resize(states.len(), Vec::new());
+            }
+            default_next[sid as usize] = default_id;
+            exceptions[sid as usize] = exc;
+        }
+        default_next.resize(states.len(), u32::MAX);
+        exceptions.resize(states.len(), Vec::new());
+        // Every state must have been processed (BFS pops all pushes).
+        debug_assert!(default_next.iter().all(|&d| d != u32::MAX));
+
+        let accepting = states.iter().map(|s| s.mask == full_mask).collect();
+        Dfa {
+            vocab,
+            keywords: keywords.to_vec(),
+            n_states: states.len(),
+            start: 0,
+            accepting,
+            default_next,
+            exceptions,
+        }
+    }
+
+    pub fn n_states(&self) -> usize {
+        self.n_states
+    }
+
+    pub fn start(&self) -> u32 {
+        self.start
+    }
+
+    #[inline]
+    pub fn is_accepting(&self, state: u32) -> bool {
+        self.accepting[state as usize]
+    }
+
+    /// δ(state, token).
+    #[inline]
+    pub fn next(&self, state: u32, token: usize) -> u32 {
+        let exc = &self.exceptions[state as usize];
+        match exc.binary_search_by_key(&(token as u32), |&(t, _)| t) {
+            Ok(i) => exc[i].1,
+            Err(_) => self.default_next[state as usize],
+        }
+    }
+
+    /// The default successor (token outside every exception).
+    #[inline]
+    pub fn default_next(&self, state: u32) -> u32 {
+        self.default_next[state as usize]
+    }
+
+    /// Sparse (token, next) exception list for `state`.
+    #[inline]
+    pub fn exceptions(&self, state: u32) -> &[(u32, u32)] {
+        &self.exceptions[state as usize]
+    }
+
+    /// Run the DFA over a token sequence from the start state.
+    pub fn run(&self, tokens: &[usize]) -> u32 {
+        let mut s = self.start;
+        for &t in tokens {
+            s = self.next(s, t);
+        }
+        s
+    }
+
+    /// Does the sequence satisfy the constraint (all keywords present)?
+    pub fn accepts(&self, tokens: &[usize]) -> bool {
+        self.is_accepting(self.run(tokens))
+    }
+}
+
+/// Reference acceptance check: every keyword appears as a contiguous
+/// subsequence. Used by property tests to validate the DFA.
+pub fn contains_all_keywords(tokens: &[usize], keywords: &[Vec<usize>]) -> bool {
+    keywords.iter().all(|kw| {
+        if kw.len() > tokens.len() {
+            return false;
+        }
+        tokens.windows(kw.len()).any(|w| w == kw.as_slice())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::Prop;
+
+    #[test]
+    fn single_token_keywords() {
+        let dfa = Dfa::from_keywords(&[vec![3], vec![7]], 10);
+        assert!(!dfa.accepts(&[1, 2, 4]));
+        assert!(!dfa.accepts(&[3, 3, 3]));
+        assert!(dfa.accepts(&[3, 1, 7]));
+        assert!(dfa.accepts(&[7, 3]));
+    }
+
+    #[test]
+    fn multi_token_keyword_needs_contiguity() {
+        let dfa = Dfa::from_keywords(&[vec![1, 2]], 5);
+        assert!(dfa.accepts(&[0, 1, 2, 3]));
+        assert!(!dfa.accepts(&[1, 3, 2])); // interrupted
+        assert!(dfa.accepts(&[1, 1, 2])); // restart on repeated prefix
+    }
+
+    #[test]
+    fn overlapping_self_prefix() {
+        // keyword [1,1,2]: after "1,1,1" progress must stay at 2 (KMP).
+        let dfa = Dfa::from_keywords(&[vec![1, 1, 2]], 5);
+        assert!(dfa.accepts(&[1, 1, 1, 2]));
+        assert!(!dfa.accepts(&[1, 2, 1, 2]));
+    }
+
+    #[test]
+    fn acceptance_is_monotone() {
+        // Once accepting, always accepting.
+        let dfa = Dfa::from_keywords(&[vec![2], vec![4, 1]], 6);
+        let mut s = dfa.start();
+        let seq = [2usize, 4, 1, 0, 5, 3, 2];
+        let mut accepted = false;
+        for &t in &seq {
+            s = dfa.next(s, t);
+            if dfa.is_accepting(s) {
+                accepted = true;
+            }
+            if accepted {
+                assert!(dfa.is_accepting(s), "acceptance lost");
+            }
+        }
+        assert!(accepted);
+    }
+
+    #[test]
+    fn dfa_matches_reference_checker() {
+        Prop::new(200, 0xD0).run("dfa-vs-reference", |rng, _| {
+            let vocab = 8;
+            let k_n = rng.range(1, 3);
+            let keywords: Vec<Vec<usize>> = (0..k_n)
+                .map(|_| {
+                    let len = rng.range(1, 3);
+                    (0..len).map(|_| rng.below_usize(vocab)).collect()
+                })
+                .collect();
+            let dfa = Dfa::from_keywords(&keywords, vocab);
+            let tokens: Vec<usize> =
+                (0..rng.range(0, 12)).map(|_| rng.below_usize(vocab)).collect();
+            assert_eq!(
+                dfa.accepts(&tokens),
+                contains_all_keywords(&tokens, &keywords),
+                "keywords={keywords:?} tokens={tokens:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn exception_lists_are_sparse() {
+        let dfa = Dfa::from_keywords(&[vec![3], vec![5, 6]], 1000);
+        for s in 0..dfa.n_states() as u32 {
+            assert!(dfa.exceptions(s).len() <= 3, "state {s} too many exceptions");
+        }
+    }
+
+    #[test]
+    fn next_consistent_with_exceptions_and_default() {
+        let dfa = Dfa::from_keywords(&[vec![2, 3], vec![4]], 50);
+        for s in 0..dfa.n_states() as u32 {
+            for t in 0..50usize {
+                let via_next = dfa.next(s, t);
+                let expect = dfa
+                    .exceptions(s)
+                    .iter()
+                    .find(|&&(tok, _)| tok == t as u32)
+                    .map(|&(_, n)| n)
+                    .unwrap_or(dfa.default_next(s));
+                assert_eq!(via_next, expect);
+            }
+        }
+    }
+
+    #[test]
+    fn state_count_is_reasonable() {
+        // 3 single-token keywords: states = subsets of satisfied = 8.
+        let dfa = Dfa::from_keywords(&[vec![1], vec![2], vec![3]], 10);
+        assert_eq!(dfa.n_states(), 8);
+    }
+}

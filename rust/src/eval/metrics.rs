@@ -1,0 +1,308 @@
+//! Generation-quality metrics: ROUGE-L, BLEU-4, CIDEr and the
+//! SPICE-proxy, all over whitespace tokens, plus the constraint success
+//! rate. These reproduce the paper's evaluation columns; SPICE is
+//! substituted by a content-word F-score (see DESIGN.md §1) and is
+//! reported as SPICE* in all output.
+
+use std::collections::HashMap;
+
+/// Longest common subsequence length (dprogramming-contest classic; the
+/// core of ROUGE-L).
+pub fn lcs_len(a: &[&str], b: &[&str]) -> usize {
+    if a.is_empty() || b.is_empty() {
+        return 0;
+    }
+    let mut prev = vec![0usize; b.len() + 1];
+    let mut cur = vec![0usize; b.len() + 1];
+    for &wa in a {
+        for (j, &wb) in b.iter().enumerate() {
+            cur[j + 1] = if wa == wb {
+                prev[j] + 1
+            } else {
+                cur[j].max(prev[j + 1])
+            };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// ROUGE-L F-measure of candidate vs one reference (β = 1.2 as in the
+/// original ROUGE).
+pub fn rouge_l(candidate: &str, reference: &str) -> f64 {
+    let c: Vec<&str> = candidate.split_whitespace().collect();
+    let r: Vec<&str> = reference.split_whitespace().collect();
+    if c.is_empty() || r.is_empty() {
+        return 0.0;
+    }
+    let lcs = lcs_len(&c, &r) as f64;
+    if lcs == 0.0 {
+        return 0.0;
+    }
+    let prec = lcs / c.len() as f64;
+    let rec = lcs / r.len() as f64;
+    let beta2 = 1.2f64 * 1.2;
+    (1.0 + beta2) * prec * rec / (rec + beta2 * prec)
+}
+
+/// Max ROUGE-L over references.
+pub fn rouge_l_multi(candidate: &str, references: &[String]) -> f64 {
+    references
+        .iter()
+        .map(|r| rouge_l(candidate, r))
+        .fold(0.0, f64::max)
+}
+
+fn ngram_counts(words: &[&str], n: usize) -> HashMap<Vec<String>, usize> {
+    let mut map = HashMap::new();
+    if words.len() >= n {
+        for w in words.windows(n) {
+            *map.entry(w.iter().map(|s| s.to_string()).collect()).or_insert(0) += 1;
+        }
+    }
+    map
+}
+
+/// Corpus-level BLEU-4 with +1 smoothing on higher-order n-grams and the
+/// standard brevity penalty. `items` = (candidate, references).
+pub fn bleu4(items: &[(String, Vec<String>)]) -> f64 {
+    let mut match_n = [0f64; 4];
+    let mut total_n = [0f64; 4];
+    let mut cand_len = 0f64;
+    let mut ref_len = 0f64;
+    for (cand, refs) in items {
+        let c: Vec<&str> = cand.split_whitespace().collect();
+        cand_len += c.len() as f64;
+        // closest reference length
+        let rl = refs
+            .iter()
+            .map(|r| r.split_whitespace().count())
+            .min_by_key(|&l| {
+                ((l as i64) - (c.len() as i64)).unsigned_abs()
+            })
+            .unwrap_or(0);
+        ref_len += rl as f64;
+        for n in 1..=4 {
+            let cc = ngram_counts(&c, n);
+            // max reference count per ngram (clipped precision)
+            let mut rmax: HashMap<Vec<String>, usize> = HashMap::new();
+            for r in refs {
+                let rw: Vec<&str> = r.split_whitespace().collect();
+                for (g, cnt) in ngram_counts(&rw, n) {
+                    let e = rmax.entry(g).or_insert(0);
+                    *e = (*e).max(cnt);
+                }
+            }
+            for (g, cnt) in &cc {
+                match_n[n - 1] += (*cnt).min(*rmax.get(g).unwrap_or(&0)) as f64;
+                total_n[n - 1] += *cnt as f64;
+            }
+        }
+    }
+    let mut log_p = 0f64;
+    for n in 0..4 {
+        // +1 smoothing beyond unigrams (Lin & Och smoothing-2)
+        let (m, t) = if n == 0 {
+            (match_n[0], total_n[0])
+        } else {
+            (match_n[n] + 1.0, total_n[n] + 1.0)
+        };
+        if t == 0.0 || m == 0.0 {
+            return 0.0;
+        }
+        log_p += (m / t).ln() / 4.0;
+    }
+    let bp = if cand_len >= ref_len || cand_len == 0.0 {
+        1.0
+    } else {
+        (1.0 - ref_len / cand_len).exp()
+    };
+    bp * log_p.exp()
+}
+
+/// CIDEr: mean over n=1..4 of the average tf-idf cosine between candidate
+/// and references, with idf computed over the reference corpus, length
+/// penalty omitted (CIDEr, not CIDEr-D, matching the paper's "CIDER").
+pub struct CiderScorer {
+    /// document frequency per n-gram, and number of "documents" (items)
+    df: [HashMap<Vec<String>, f64>; 4],
+    n_docs: f64,
+}
+
+impl CiderScorer {
+    pub fn fit(references: &[Vec<String>]) -> CiderScorer {
+        let mut df: [HashMap<Vec<String>, f64>; 4] = Default::default();
+        for refs in references {
+            for n in 1..=4 {
+                let mut seen: HashMap<Vec<String>, bool> = HashMap::new();
+                for r in refs {
+                    let rw: Vec<&str> = r.split_whitespace().collect();
+                    for g in ngram_counts(&rw, n).into_keys() {
+                        seen.insert(g, true);
+                    }
+                }
+                for g in seen.into_keys() {
+                    *df[n - 1].entry(g).or_insert(0.0) += 1.0;
+                }
+            }
+        }
+        CiderScorer { df, n_docs: references.len() as f64 }
+    }
+
+    fn tfidf_vec(&self, words: &[&str], n: usize) -> HashMap<Vec<String>, f64> {
+        let counts = ngram_counts(words, n);
+        let total: f64 = counts.values().map(|&c| c as f64).sum();
+        let mut out = HashMap::new();
+        if total == 0.0 {
+            return out;
+        }
+        for (g, c) in counts {
+            let df = self.df[n - 1].get(&g).copied().unwrap_or(0.0).max(1.0);
+            let idf = (self.n_docs / df).ln();
+            out.insert(g, (c as f64 / total) * idf);
+        }
+        out
+    }
+
+    fn cosine(a: &HashMap<Vec<String>, f64>, b: &HashMap<Vec<String>, f64>) -> f64 {
+        let dot: f64 = a
+            .iter()
+            .filter_map(|(g, &va)| b.get(g).map(|&vb| va * vb))
+            .sum();
+        let na: f64 = a.values().map(|v| v * v).sum::<f64>().sqrt();
+        let nb: f64 = b.values().map(|v| v * v).sum::<f64>().sqrt();
+        if na == 0.0 || nb == 0.0 {
+            0.0
+        } else {
+            dot / (na * nb)
+        }
+    }
+
+    /// Score one item (mean over n of mean over references of cosine).
+    pub fn score(&self, candidate: &str, references: &[String]) -> f64 {
+        let c: Vec<&str> = candidate.split_whitespace().collect();
+        let mut total = 0f64;
+        for n in 1..=4 {
+            let cv = self.tfidf_vec(&c, n);
+            let mut per_ref = 0f64;
+            for r in references {
+                let rw: Vec<&str> = r.split_whitespace().collect();
+                per_ref += Self::cosine(&cv, &self.tfidf_vec(&rw, n));
+            }
+            total += per_ref / references.len().max(1) as f64;
+        }
+        total / 4.0
+    }
+}
+
+/// SPICE-proxy: F1 over content-word sets (see DESIGN.md §1 for why this
+/// is the right substitution for the scene-graph SPICE on our corpus).
+/// `is_content` decides which words count (the lexicon's content check).
+pub fn spice_proxy(
+    candidate: &str,
+    references: &[String],
+    is_content: &dyn Fn(&str) -> bool,
+) -> f64 {
+    let cand: std::collections::HashSet<&str> = candidate
+        .split_whitespace()
+        .filter(|w| is_content(w))
+        .collect();
+    let mut best = 0f64;
+    for r in references {
+        let rs: std::collections::HashSet<&str> =
+            r.split_whitespace().filter(|w| is_content(w)).collect();
+        if cand.is_empty() || rs.is_empty() {
+            continue;
+        }
+        let inter = cand.intersection(&rs).count() as f64;
+        let p = inter / cand.len() as f64;
+        let rr = inter / rs.len() as f64;
+        if p + rr > 0.0 {
+            best = best.max(2.0 * p * rr / (p + rr));
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lcs_basics() {
+        assert_eq!(lcs_len(&["a", "b", "c"], &["a", "c"]), 2);
+        assert_eq!(lcs_len(&["a"], &["b"]), 0);
+        assert_eq!(lcs_len(&[], &["a"]), 0);
+    }
+
+    #[test]
+    fn rouge_identical_is_one() {
+        let s = "the dog runs fast";
+        assert!((rouge_l(s, s) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rouge_orders_similarity() {
+        let r = "the dog runs in the park";
+        let close = rouge_l("the dog runs in a park", r);
+        let far = rouge_l("a cat sleeps", r);
+        assert!(close > far);
+        assert!(far < 0.2);
+    }
+
+    #[test]
+    fn bleu_identical_is_one() {
+        let items = vec![(
+            "the dog runs in the park".to_string(),
+            vec!["the dog runs in the park".to_string()],
+        )];
+        let b = bleu4(&items);
+        assert!((b - 1.0).abs() < 0.05, "b={b}");
+    }
+
+    #[test]
+    fn bleu_detects_degradation() {
+        let reference = "the dog runs in the park with a ball".to_string();
+        let good = vec![("the dog runs in the park with a ball".to_string(), vec![reference.clone()])];
+        let ok = vec![("the dog runs in a park with the ball".to_string(), vec![reference.clone()])];
+        let bad = vec![("cat tree blue seven".to_string(), vec![reference.clone()])];
+        let (bg, bo, bb) = (bleu4(&good), bleu4(&ok), bleu4(&bad));
+        assert!(bg > bo, "good={bg} ok={bo}");
+        assert!(bo > bb, "ok={bo} bad={bb}");
+    }
+
+    #[test]
+    fn brevity_penalty_punishes_short() {
+        let reference = "a b c d e f g h".to_string();
+        let full = vec![("a b c d e f g h".to_string(), vec![reference.clone()])];
+        let short = vec![("a b c".to_string(), vec![reference.clone()])];
+        assert!(bleu4(&full) > bleu4(&short));
+    }
+
+    #[test]
+    fn cider_prefers_matching_rare_ngrams() {
+        let refs: Vec<Vec<String>> = vec![
+            vec!["the dog runs".into()],
+            vec!["the cat sleeps".into()],
+            vec!["the bird sings".into()],
+        ];
+        let scorer = CiderScorer::fit(&refs);
+        // "dog runs" is rarer than "the"; matching it scores higher.
+        let hit = scorer.score("the dog runs", &refs[0]);
+        let miss = scorer.score("the bird sings", &refs[0]);
+        assert!(hit > miss);
+        assert!(hit > 0.5);
+    }
+
+    #[test]
+    fn spice_proxy_content_overlap() {
+        let is_content = |w: &str| w != "the" && w != "in";
+        let refs = vec!["the dog runs in the park".to_string()];
+        let perfect = spice_proxy("the dog runs in the park", &refs, &is_content);
+        let partial = spice_proxy("the dog sleeps in the park", &refs, &is_content);
+        let none = spice_proxy("the in the", &refs, &is_content);
+        assert!((perfect - 1.0).abs() < 1e-9);
+        assert!(partial > 0.3 && partial < 1.0);
+        assert_eq!(none, 0.0);
+    }
+}

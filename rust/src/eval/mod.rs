@@ -1,0 +1,204 @@
+//! Evaluation harness: runs the constrained-generation task over the
+//! evaluation set and aggregates the paper's five columns — constraint
+//! success rate, ROUGE(-L), BLEU4, CIDEr, SPICE* (proxy).
+
+pub mod metrics;
+
+use crate::data::{Corpus, EvalItem};
+use crate::dfa::Dfa;
+use crate::generate::{decode, DecodeConfig};
+use crate::hmm::Hmm;
+use crate::lm::LanguageModel;
+use crate::util::threadpool::parallel_map;
+use metrics::{bleu4, rouge_l_multi, spice_proxy, CiderScorer};
+
+/// The five numbers every table in the paper reports (x100).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Scores {
+    pub success_rate: f64,
+    pub rouge: f64,
+    pub bleu4: f64,
+    pub cider: f64,
+    pub spice: f64,
+}
+
+impl Scores {
+    /// Format as the paper's "x100%" row.
+    pub fn row(&self) -> String {
+        format!(
+            "{:5.1} {:5.1} {:5.1} {:5.1} {:5.1}",
+            self.success_rate * 100.0,
+            self.rouge * 100.0,
+            self.bleu4 * 100.0,
+            self.cider * 100.0,
+            self.spice * 100.0
+        )
+    }
+
+    /// Mean of the four quality scores (the paper's "scores drop by X%
+    /// on average" aggregations).
+    pub fn mean_quality(&self) -> f64 {
+        (self.rouge + self.bleu4 + self.cider + self.spice) / 4.0
+    }
+}
+
+/// One generated output with its item index.
+#[derive(Clone, Debug, Default)]
+pub struct EvalOutput {
+    pub item: usize,
+    pub text: String,
+    pub satisfied: bool,
+}
+
+/// Run the full evaluation: decode every item, compute all metrics.
+/// Decoding is parallel over items (each item is an independent request).
+pub fn evaluate(
+    lm: &dyn LanguageModel,
+    hmm: &Hmm,
+    corpus: &Corpus,
+    items: &[EvalItem],
+    cfg: &DecodeConfig,
+    threads: usize,
+) -> (Scores, Vec<EvalOutput>) {
+    let outputs: Vec<EvalOutput> = parallel_map(
+        &items.iter().enumerate().collect::<Vec<_>>(),
+        threads,
+        |(i, item)| {
+            let keywords: Vec<Vec<usize>> = item
+                .concepts
+                .iter()
+                .map(|c| vec![corpus.vocab.id(c)])
+                .collect();
+            let dfa = Dfa::from_keywords(&keywords, corpus.vocab.len());
+            let gen = decode(lm, hmm, &dfa, cfg);
+            EvalOutput {
+                item: *i,
+                text: corpus.vocab.decode(&gen.tokens),
+                satisfied: gen.satisfied,
+            }
+        },
+    );
+    (score_outputs(corpus, items, &outputs), outputs)
+}
+
+/// Aggregate metric computation given decoded outputs.
+pub fn score_outputs(corpus: &Corpus, items: &[EvalItem], outputs: &[EvalOutput]) -> Scores {
+    assert_eq!(items.len(), outputs.len());
+    if items.is_empty() {
+        return Scores::default();
+    }
+    let n = items.len() as f64;
+    let success = outputs.iter().filter(|o| o.satisfied).count() as f64 / n;
+
+    // Valid quality scores require non-garbled output; the paper marks
+    // quality as "-" when success collapses to 0. We still compute the
+    // numbers (callers decide presentation).
+    let all_refs: Vec<Vec<String>> = items.iter().map(|i| i.references.clone()).collect();
+    let cider_scorer = CiderScorer::fit(&all_refs);
+    let is_content = |w: &str| corpus.lexicon.is_content(w);
+
+    let mut rouge = 0f64;
+    let mut cider = 0f64;
+    let mut spice = 0f64;
+    let mut bleu_items = Vec::with_capacity(items.len());
+    for (item, out) in items.iter().zip(outputs.iter()) {
+        rouge += rouge_l_multi(&out.text, &item.references);
+        cider += cider_scorer.score(&out.text, &item.references);
+        spice += spice_proxy(&out.text, &item.references, &is_content);
+        bleu_items.push((out.text.clone(), item.references.clone()));
+    }
+    Scores {
+        success_rate: success,
+        rouge: rouge / n,
+        bleu4: bleu4(&bleu_items),
+        cider: cider / n,
+        spice: spice / n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Corpus;
+    use crate::hmm::em::em_step;
+    use crate::lm::NgramLm;
+    use crate::util::rng::Rng;
+
+    fn pipeline() -> (Corpus, NgramLm, Hmm, Vec<EvalItem>) {
+        let corpus = Corpus::small(500);
+        let data = corpus.sample_token_corpus(400, 21);
+        let lm = NgramLm::train(&data, corpus.vocab.len());
+        let mut rng = Rng::seeded(22);
+        let mut hmm = Hmm::random(10, corpus.vocab.len(), 0.5, 0.5, &mut rng);
+        for _ in 0..5 {
+            hmm = em_step(&hmm, &data, 4, 1e-9).0;
+        }
+        let items = corpus.eval_set(24, 2, 23);
+        (corpus, lm, hmm, items)
+    }
+
+    #[test]
+    fn full_pipeline_scores_reasonably() {
+        let (corpus, lm, hmm, items) = pipeline();
+        let cfg = DecodeConfig { beam: 6, max_tokens: 16, ..Default::default() };
+        let (scores, outputs) = evaluate(&lm, &hmm, &corpus, &items, &cfg, 4);
+        assert_eq!(outputs.len(), items.len());
+        // A trained FP32 pipeline should satisfy most constraints.
+        assert!(scores.success_rate > 0.8, "success={}", scores.success_rate);
+        // Outputs share the template grammar — quality must be non-trivial.
+        assert!(scores.rouge > 0.2, "rouge={}", scores.rouge);
+        assert!(scores.spice > 0.1, "spice={}", scores.spice);
+    }
+
+    #[test]
+    fn score_outputs_perfect_match() {
+        let (corpus, _lm, _hmm, items) = pipeline();
+        // Feed references back as outputs: success should be ~1, rouge 1.
+        let outputs: Vec<EvalOutput> = items
+            .iter()
+            .enumerate()
+            .map(|(i, item)| EvalOutput {
+                item: i,
+                text: item.references[0].clone(),
+                satisfied: true,
+            })
+            .collect();
+        let scores = score_outputs(&corpus, &items, &outputs);
+        assert!((scores.success_rate - 1.0).abs() < 1e-9);
+        assert!(scores.rouge > 0.99);
+        assert!(scores.bleu4 > 0.9);
+        assert!(scores.spice > 0.99);
+    }
+
+    #[test]
+    fn garbled_outputs_score_near_zero() {
+        let (corpus, _lm, _hmm, items) = pipeline();
+        let outputs: Vec<EvalOutput> = items
+            .iter()
+            .enumerate()
+            .map(|(i, _)| EvalOutput {
+                item: i,
+                text: "<unk> <unk> <unk>".to_string(),
+                satisfied: false,
+            })
+            .collect();
+        let scores = score_outputs(&corpus, &items, &outputs);
+        assert_eq!(scores.success_rate, 0.0);
+        assert!(scores.rouge < 0.05);
+        assert!(scores.mean_quality() < 0.05);
+    }
+
+    #[test]
+    fn row_formatting() {
+        let s = Scores {
+            success_rate: 1.0,
+            rouge: 0.376,
+            bleu4: 0.351,
+            cider: 0.115,
+            spice: 0.269,
+        };
+        let row = s.row();
+        assert!(row.contains("100.0"));
+        assert!(row.contains("37.6"));
+    }
+}

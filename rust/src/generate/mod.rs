@@ -1,0 +1,334 @@
+//! Ctrl-G style constrained generation: the neuro-symbolic decoder that
+//! couples the neural LM with the HMM + DFA symbolic part (paper §IV-A:
+//! "The condition is satisfied by adjusting the generating probabilities
+//! through the DFA rules and the HMM backward algorithm").
+//!
+//! At each decode step the decoder scores candidate tokens with
+//!
+//!   score(x) = log P_lm(x | prefix) + λ · log P_hmm(x, accept | prefix)
+//!
+//! where the acceptance factor marginalizes the HMM forward belief
+//! against a precomputed table A[r][d][h] = P(the DFA reaches an
+//! accepting state within the r remaining tokens | HMM state h, DFA
+//! state d). The table is the HMM backward recursion run over the
+//! DFA product — the paper's "HMM backward algorithm".
+//!
+//! The per-step hot spot is the (1×H)·(H×V) MatMul `u @ emit` (plus the
+//! forward-step (1×H)·(H×H)); these are the "four main MatMul layers"
+//! that §III-B's layer-wise quantization wraps, which `act_bits`
+//! reproduces for Table II.
+
+pub mod product;
+
+use crate::data::vocab::EOS;
+use crate::dfa::Dfa;
+use crate::hmm::forward::forward_step;
+use crate::hmm::Hmm;
+use crate::lm::LanguageModel;
+pub use product::ConstraintTable;
+
+/// Decoder configuration (paper §IV-A: beam 128 on GPT2-large; scaled
+/// default here, configurable from the CLI).
+#[derive(Clone, Debug)]
+pub struct DecodeConfig {
+    pub beam: usize,
+    pub max_tokens: usize,
+    /// Weight of the symbolic (HMM acceptance) term.
+    pub lambda: f32,
+    /// Layer-wise activation quantization around the decode MatMuls
+    /// (Table II's integer baseline). `None` = full precision.
+    pub act_bits: Option<u32>,
+}
+
+impl Default for DecodeConfig {
+    fn default() -> Self {
+        DecodeConfig { beam: 8, max_tokens: 32, lambda: 1.0, act_bits: None }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Beam {
+    tokens: Vec<usize>,
+    score: f64,
+    dfa_state: u32,
+    /// Predictive HMM belief P(z_t | x_{<t}).
+    alpha: Vec<f32>,
+    finished: bool,
+}
+
+/// Result of decoding one request.
+#[derive(Clone, Debug)]
+pub struct Generation {
+    pub tokens: Vec<usize>,
+    pub score: f64,
+    /// Whether the DFA accepted (all keywords present).
+    pub satisfied: bool,
+}
+
+/// Quantize-dequantize an activation vector (layer-wise integer mode).
+fn maybe_qdq(v: &mut [f32], bits: Option<u32>) {
+    if let Some(b) = bits {
+        crate::quant::integer::qdq_vec_int(v, b);
+    }
+}
+
+/// Decode one constrained request.
+pub fn decode(
+    lm: &dyn LanguageModel,
+    hmm: &Hmm,
+    dfa: &Dfa,
+    cfg: &DecodeConfig,
+) -> Generation {
+    let vocab = hmm.vocab();
+    assert_eq!(lm.vocab(), vocab, "LM/HMM vocabulary mismatch");
+    let table = ConstraintTable::build(hmm, dfa, cfg.max_tokens);
+    decode_with_table(lm, hmm, dfa, &table, cfg)
+}
+
+/// Decode with a pre-built constraint table (the serving path caches
+/// tables per concept set).
+pub fn decode_with_table(
+    lm: &dyn LanguageModel,
+    hmm: &Hmm,
+    dfa: &Dfa,
+    table: &ConstraintTable,
+    cfg: &DecodeConfig,
+) -> Generation {
+    let vocab = hmm.vocab();
+    let h_n = hmm.hidden();
+    let mut beams = vec![Beam {
+        tokens: Vec::new(),
+        score: 0.0,
+        dfa_state: dfa.start(),
+        alpha: hmm.init.clone(),
+        finished: false,
+    }];
+    let mut done: Vec<Beam> = Vec::new();
+    let mut lp = vec![0f32; vocab];
+    let mut w = vec![0f32; vocab];
+    let mut u = vec![0f32; h_n];
+
+    for t in 0..cfg.max_tokens {
+        let remaining = cfg.max_tokens - t; // tokens left including this one
+        let mut candidates: Vec<(usize, usize, f64)> = Vec::new(); // (beam, tok, score)
+        for (bi, beam) in beams.iter().enumerate() {
+            if beam.finished {
+                continue;
+            }
+            lm.next_log_probs(&beam.tokens, &mut lp);
+
+            // --- symbolic acceptance weights w(x) ---
+            let mut alpha_q = beam.alpha.clone();
+            maybe_qdq(&mut alpha_q, cfg.act_bits);
+
+            // Default DFA class: one weighted vecmat over the emission
+            // matrix (the decode hot spot).
+            let d_def = dfa.default_next(beam.dfa_state);
+            let c_def = table.c(remaining - 1, d_def);
+            for h in 0..h_n {
+                u[h] = alpha_q[h] * c_def[h];
+            }
+            maybe_qdq(&mut u, cfg.act_bits);
+            hmm.emit.vecmat(&u, &mut w);
+            maybe_qdq(&mut w, cfg.act_bits);
+
+            // Exception tokens: per-token class correction.
+            for &(tok, next_d) in dfa.exceptions(beam.dfa_state) {
+                let c_exc = table.c(remaining - 1, next_d);
+                let mut acc = 0f64;
+                for h in 0..h_n {
+                    acc += alpha_q[h] as f64
+                        * hmm.emit.at(h, tok as usize) as f64
+                        * c_exc[h] as f64;
+                }
+                w[tok as usize] = acc as f32;
+            }
+
+            // EOS ends generation now: acceptance must hold immediately.
+            let eos_next = dfa.next(beam.dfa_state, EOS);
+            if dfa.is_accepting(eos_next) {
+                let mut acc = 0f64;
+                for h in 0..h_n {
+                    acc += alpha_q[h] as f64 * hmm.emit.at(h, EOS) as f64;
+                }
+                w[EOS] = acc as f32;
+            } else {
+                w[EOS] = 0.0;
+            }
+
+            let z: f64 = w.iter().map(|&x| x as f64).sum();
+            if z <= 0.0 {
+                // Constraint unsatisfiable from this beam within budget
+                // (or a broken quantized model): drop the beam.
+                continue;
+            }
+            let log_z = z.ln();
+            for (x, (&lpx, &wx)) in lp.iter().zip(w.iter()).enumerate() {
+                if wx <= 0.0 {
+                    continue;
+                }
+                let s = beam.score
+                    + lpx as f64
+                    + cfg.lambda as f64 * ((wx as f64).ln() - log_z);
+                candidates.push((bi, x, s));
+            }
+        }
+        if candidates.is_empty() {
+            break;
+        }
+        // Top-k by score.
+        candidates.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        candidates.truncate(cfg.beam);
+
+        let mut next_beams = Vec::with_capacity(cfg.beam);
+        for (bi, tok, score) in candidates {
+            let parent = &beams[bi];
+            let mut tokens = parent.tokens.clone();
+            tokens.push(tok);
+            let dfa_state = dfa.next(parent.dfa_state, tok);
+            if tok == EOS {
+                done.push(Beam {
+                    tokens,
+                    score,
+                    dfa_state,
+                    alpha: parent.alpha.clone(),
+                    finished: true,
+                });
+                continue;
+            }
+            let mut alpha_next = vec![0f32; h_n];
+            forward_step(hmm, &parent.alpha, tok, &mut alpha_next);
+            next_beams.push(Beam { tokens, score, dfa_state, alpha: alpha_next, finished: false });
+        }
+        beams = next_beams;
+        if beams.is_empty() {
+            break;
+        }
+    }
+
+    // Prefer finished accepting beams, then live accepting, then anything.
+    let pick = |pool: &[Beam]| -> Option<Beam> {
+        pool.iter()
+            .filter(|b| dfa.is_accepting(b.dfa_state))
+            .max_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+            .or_else(|| {
+                pool.iter()
+                    .max_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+            })
+            .cloned()
+    };
+    let best = pick(&done).or_else(|| pick(&beams)).unwrap_or(Beam {
+        tokens: vec![EOS],
+        score: f64::NEG_INFINITY,
+        dfa_state: dfa.start(),
+        alpha: hmm.init.clone(),
+        finished: true,
+    });
+    // Strip the trailing EOS for the caller.
+    let mut tokens = best.tokens;
+    if tokens.last() == Some(&EOS) {
+        tokens.pop();
+    }
+    let satisfied = dfa.accepts(&tokens);
+    Generation { tokens, score: best.score, satisfied }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Corpus;
+    use crate::hmm::em::em_step;
+    use crate::lm::ngram::NgramLm;
+    use crate::util::rng::Rng;
+
+    /// Train a small HMM on the corpus so the decoder has real signal.
+    fn setup() -> (Corpus, NgramLm, Hmm) {
+        let corpus = Corpus::small(300);
+        let data = corpus.sample_token_corpus(400, 11);
+        let lm = NgramLm::train(&data, corpus.vocab.len());
+        let mut rng = Rng::seeded(12);
+        let mut hmm = Hmm::random(12, corpus.vocab.len(), 0.5, 0.5, &mut rng);
+        for _ in 0..6 {
+            hmm = em_step(&hmm, &data, 4, 1e-9).0;
+        }
+        (corpus, lm, hmm)
+    }
+
+    #[test]
+    fn decode_satisfies_single_keyword() {
+        let (corpus, lm, hmm) = setup();
+        let kw = corpus.vocab.id(&corpus.lexicon.nouns[0]);
+        let dfa = Dfa::from_keywords(&[vec![kw]], corpus.vocab.len());
+        let cfg = DecodeConfig { beam: 6, max_tokens: 16, ..Default::default() };
+        let gen = decode(&lm, &hmm, &dfa, &cfg);
+        assert!(gen.satisfied, "keyword not planted: {:?}", corpus.vocab.decode(&gen.tokens));
+        assert!(gen.tokens.contains(&kw));
+    }
+
+    #[test]
+    fn decode_satisfies_multiple_keywords() {
+        let (corpus, lm, hmm) = setup();
+        let kws = vec![
+            vec![corpus.vocab.id(&corpus.lexicon.nouns[3])],
+            vec![corpus.vocab.id(&corpus.lexicon.verbs[2])],
+        ];
+        let dfa = Dfa::from_keywords(&kws, corpus.vocab.len());
+        let cfg = DecodeConfig { beam: 8, max_tokens: 20, ..Default::default() };
+        let gen = decode(&lm, &hmm, &dfa, &cfg);
+        assert!(gen.satisfied, "got: {:?}", corpus.vocab.decode(&gen.tokens));
+    }
+
+    #[test]
+    fn unconstrained_dfa_reduces_to_lm_ish_decoding() {
+        let (corpus, lm, hmm) = setup();
+        // A keyword already satisfied by any token is impossible; instead
+        // use an always-accepting DFA: zero keywords.
+        let dfa = Dfa::from_keywords(&[], corpus.vocab.len());
+        let cfg = DecodeConfig { beam: 4, max_tokens: 12, ..Default::default() };
+        let gen = decode(&lm, &hmm, &dfa, &cfg);
+        assert!(gen.satisfied); // trivially accepting
+        assert!(gen.tokens.len() <= 12);
+    }
+
+    #[test]
+    fn broken_hmm_fails_to_satisfy() {
+        // An HMM whose emission rows were zeroed for the keyword cannot
+        // plant it — the failure mode quantization causes (Table II).
+        let (corpus, lm, mut hmm) = setup();
+        let kw = corpus.vocab.id(&corpus.lexicon.nouns[1]);
+        for h in 0..hmm.hidden() {
+            hmm.emit.set(h, kw, 0.0);
+        }
+        let dfa = Dfa::from_keywords(&[vec![kw]], corpus.vocab.len());
+        let cfg = DecodeConfig { beam: 4, max_tokens: 12, ..Default::default() };
+        let gen = decode(&lm, &hmm, &dfa, &cfg);
+        assert!(!gen.satisfied);
+    }
+
+    #[test]
+    fn act_bits_low_precision_degrades_not_crashes() {
+        let (corpus, lm, hmm) = setup();
+        let kw = corpus.vocab.id(&corpus.lexicon.nouns[2]);
+        let dfa = Dfa::from_keywords(&[vec![kw]], corpus.vocab.len());
+        let cfg = DecodeConfig {
+            beam: 4,
+            max_tokens: 12,
+            act_bits: Some(4),
+            ..Default::default()
+        };
+        let gen = decode(&lm, &hmm, &dfa, &cfg);
+        // Must not panic; tokens stay in-vocab.
+        assert!(gen.tokens.iter().all(|&t| t < corpus.vocab.len()));
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let (corpus, lm, hmm) = setup();
+        let kw = corpus.vocab.id(&corpus.lexicon.verbs[0]);
+        let dfa = Dfa::from_keywords(&[vec![kw]], corpus.vocab.len());
+        let cfg = DecodeConfig::default();
+        let a = decode(&lm, &hmm, &dfa, &cfg);
+        let b = decode(&lm, &hmm, &dfa, &cfg);
+        assert_eq!(a.tokens, b.tokens);
+    }
+}

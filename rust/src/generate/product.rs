@@ -1,0 +1,241 @@
+//! The HMM × DFA product backward recursion.
+//!
+//! `ConstraintTable` precomputes, for every remaining-token budget r,
+//! DFA state d and HMM state h:
+//!
+//!   A[r][d][h] = P(DFA accepting after emitting r more tokens
+//!                  | z = h about to emit, DFA state d)
+//!   A[0][d][h] = 1{d accepting}
+//!   A[r][d][h] = Σ_x emit[h][x] · C[r-1][δ(d,x)][h]
+//!   C[r][d'][h] = Σ_{h'} trans[h][h'] · A[r][d'][h']
+//!
+//! Grouping tokens by their DFA successor turns the Σ_x into one term
+//! for the default class (all of the vocabulary except the keyword
+//! alphabet) plus a handful of exception corrections — this is what makes
+//! the product tractable at vocabulary size 50257 (or 1000 here).
+//!
+//! The table depends only on (HMM, DFA, max budget) — not on the prefix —
+//! so the serving layer builds it once per request (or caches it per
+//! concept set) and every beam/step reads from it.
+
+use crate::dfa::Dfa;
+use crate::hmm::Hmm;
+
+#[derive(Clone, Debug)]
+pub struct ConstraintTable {
+    h_n: usize,
+    d_n: usize,
+    max_budget: usize,
+    /// a[r * d_n * h_n + d * h_n + h]
+    a: Vec<f32>,
+    /// c[r * d_n * h_n + d * h_n + h]
+    c: Vec<f32>,
+}
+
+impl ConstraintTable {
+    /// Build the table for budgets 0..=max_budget.
+    pub fn build(hmm: &Hmm, dfa: &Dfa, max_budget: usize) -> ConstraintTable {
+        let h_n = hmm.hidden();
+        let d_n = dfa.n_states();
+        let plane = d_n * h_n;
+        let mut a = vec![0f32; (max_budget + 1) * plane];
+        let mut c = vec![0f32; (max_budget + 1) * plane];
+
+        // r = 0: acceptance indicator.
+        for d in 0..d_n {
+            if dfa.is_accepting(d as u32) {
+                for h in 0..h_n {
+                    a[d * h_n + h] = 1.0;
+                }
+            }
+        }
+        // C[0][d'] = trans @ A[0][d'].
+        for d in 0..d_n {
+            let (a0, c0) = (&a[d * h_n..(d + 1) * h_n].to_vec(), &mut c[d * h_n..(d + 1) * h_n]);
+            hmm.trans.matvec(a0, c0);
+        }
+
+        let mut exc_sum = vec![0f32; h_n];
+        for r in 1..=max_budget {
+            let (prev_c_all, rest) = c.split_at_mut(r * plane);
+            let prev_c = &prev_c_all[(r - 1) * plane..r * plane];
+            let cur_c = &mut rest[..plane];
+            let cur_a = &mut a[r * plane..(r + 1) * plane];
+            for d in 0..d_n {
+                let d_def = dfa.default_next(d as u32) as usize;
+                let c_def = &prev_c[d_def * h_n..(d_def + 1) * h_n];
+                // Default-class contribution: (1 - Σ_exc emit[h][x]) c_def[h]
+                exc_sum.iter_mut().for_each(|v| *v = 0.0);
+                let out = &mut cur_a[d * h_n..(d + 1) * h_n];
+                for h in 0..h_n {
+                    out[h] = c_def[h];
+                }
+                for &(tok, next_d) in dfa.exceptions(d as u32) {
+                    let c_exc = &prev_c[next_d as usize * h_n..(next_d as usize + 1) * h_n];
+                    for h in 0..h_n {
+                        let e = hmm.emit.at(h, tok as usize);
+                        out[h] += e * (c_exc[h] - c_def[h]);
+                    }
+                }
+                // Clamp tiny negatives from cancellation.
+                for v in out.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            // C[r][d'] = trans @ A[r][d'] for all d'.
+            for d in 0..d_n {
+                let a_r = cur_a[d * h_n..(d + 1) * h_n].to_vec();
+                hmm.trans.matvec(&a_r, &mut cur_c[d * h_n..(d + 1) * h_n]);
+            }
+        }
+        ConstraintTable { h_n, d_n, max_budget, a, c }
+    }
+
+    /// A[r][d][·]: acceptance probability per HMM state.
+    pub fn a(&self, budget: usize, dfa_state: u32) -> &[f32] {
+        assert!(budget <= self.max_budget);
+        let base = budget * self.d_n * self.h_n + dfa_state as usize * self.h_n;
+        &self.a[base..base + self.h_n]
+    }
+
+    /// C[r][d][·] = trans @ A[r][d][·] (one transition look-ahead).
+    pub fn c(&self, budget: usize, dfa_state: u32) -> &[f32] {
+        assert!(budget <= self.max_budget);
+        let base = budget * self.d_n * self.h_n + dfa_state as usize * self.h_n;
+        &self.c[base..base + self.h_n]
+    }
+
+    pub fn max_budget(&self) -> usize {
+        self.max_budget
+    }
+
+    /// Overall acceptance probability from the initial belief:
+    /// P(accept within `budget` tokens) = Σ_h init[h] A[budget][start][h].
+    pub fn acceptance_from_start(&self, hmm: &Hmm, dfa: &Dfa, budget: usize) -> f64 {
+        let a = self.a(budget, dfa.start());
+        hmm.init
+            .iter()
+            .zip(a.iter())
+            .map(|(&i, &p)| i as f64 * p as f64)
+            .sum()
+    }
+}
+
+/// Brute-force A[r][d][h] by full enumeration — O((H·V)^r), tests only.
+#[cfg(test)]
+pub fn brute_force_a(hmm: &Hmm, dfa: &Dfa, r: usize, d: u32, h: usize) -> f64 {
+    if r == 0 {
+        return if dfa.is_accepting(d) { 1.0 } else { 0.0 };
+    }
+    let mut total = 0f64;
+    for x in 0..hmm.vocab() {
+        let e = hmm.emit.at(h, x) as f64;
+        if e == 0.0 {
+            continue;
+        }
+        let d2 = dfa.next(d, x);
+        let mut inner = 0f64;
+        for h2 in 0..hmm.hidden() {
+            inner += hmm.trans.at(h, h2) as f64 * brute_force_a(hmm, dfa, r - 1, d2, h2);
+        }
+        total += e * inner;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::Prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn table_matches_brute_force() {
+        let mut rng = Rng::seeded(71);
+        let hmm = Hmm::random(3, 6, 0.8, 0.8, &mut rng);
+        let dfa = Dfa::from_keywords(&[vec![2]], 6);
+        let table = ConstraintTable::build(&hmm, &dfa, 3);
+        for r in 0..=3usize {
+            for d in 0..dfa.n_states() as u32 {
+                for h in 0..3 {
+                    let got = table.a(r, d)[h] as f64;
+                    let want = brute_force_a(&hmm, &dfa, r, d, h);
+                    assert!(
+                        (got - want).abs() < 1e-5,
+                        "r={r} d={d} h={h} got={got} want={want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table_matches_brute_force_property() {
+        Prop::new(10, 0xAB).run("table-vs-bruteforce", |rng, _| {
+            let h_n = rng.range(2, 4);
+            let v = rng.range(4, 7);
+            let hmm = Hmm::random(h_n, v, 0.6, 0.6, rng);
+            let kw = vec![rng.below_usize(v)];
+            let dfa = Dfa::from_keywords(&[kw], v);
+            let table = ConstraintTable::build(&hmm, &dfa, 2);
+            for d in 0..dfa.n_states() as u32 {
+                for h in 0..h_n {
+                    let got = table.a(2, d)[h] as f64;
+                    let want = brute_force_a(&hmm, &dfa, 2, d, h);
+                    assert!((got - want).abs() < 1e-5, "d={d} h={h}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn acceptance_monotone_in_budget() {
+        // More remaining tokens can only help satisfy the constraint.
+        let mut rng = Rng::seeded(72);
+        let hmm = Hmm::random(6, 12, 0.4, 0.4, &mut rng);
+        let dfa = Dfa::from_keywords(&[vec![3], vec![7]], 12);
+        let table = ConstraintTable::build(&hmm, &dfa, 12);
+        let mut prev = 0.0;
+        for r in 0..=12 {
+            let p = table.acceptance_from_start(&hmm, &dfa, r);
+            assert!(p >= prev - 1e-6, "budget {r}: {p} < {prev}");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn accepting_state_has_probability_one() {
+        let mut rng = Rng::seeded(73);
+        let hmm = Hmm::random(4, 8, 0.5, 0.5, &mut rng);
+        let dfa = Dfa::from_keywords(&[vec![1]], 8);
+        let table = ConstraintTable::build(&hmm, &dfa, 8);
+        let accepting: Vec<u32> = (0..dfa.n_states() as u32)
+            .filter(|&d| dfa.is_accepting(d))
+            .collect();
+        for &d in &accepting {
+            for r in 0..=8 {
+                for h in 0..4 {
+                    let v = table.a(r, d)[h];
+                    assert!((v - 1.0).abs() < 1e-4, "r={r} d={d} h={h} v={v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn probabilities_stay_in_unit_interval() {
+        let mut rng = Rng::seeded(74);
+        let hmm = Hmm::random(8, 20, 0.2, 0.1, &mut rng);
+        let dfa = Dfa::from_keywords(&[vec![5, 6], vec![9]], 20);
+        let table = ConstraintTable::build(&hmm, &dfa, 16);
+        for r in 0..=16 {
+            for d in 0..dfa.n_states() as u32 {
+                for &v in table.a(r, d) {
+                    assert!((0.0..=1.0 + 1e-4).contains(&v), "v={v}");
+                }
+            }
+        }
+    }
+}

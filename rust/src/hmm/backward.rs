@@ -1,0 +1,188 @@
+//! Scaled backward algorithm and posterior (smoothing) computations —
+//! the statistics needed by Baum-Welch EM and by the Ctrl-G style
+//! constrained decoder (which runs backward messages through a
+//! DFA-product, see `crate::generate`).
+
+use crate::hmm::forward::Forward;
+use crate::hmm::model::Hmm;
+
+/// Scaled backward messages. betas[t][h] is the backward variable at time
+/// t rescaled by the same per-step scales the forward pass produced, so
+/// that posterior[t][h] = alphas_pred[t][h] * emit[h,x_t] * betas[t][h]
+/// normalizes cleanly.
+#[derive(Clone, Debug)]
+pub struct Backward {
+    pub betas: Vec<Vec<f32>>,
+}
+
+/// Run the scaled backward pass; `scales` are exp(log_scales) from the
+/// forward pass over the same tokens.
+pub fn backward(hmm: &Hmm, tokens: &[usize], log_scales: &[f64]) -> Backward {
+    let h_n = hmm.hidden();
+    let t_n = tokens.len();
+    let mut betas = vec![vec![0f32; h_n]; t_n];
+    if t_n == 0 {
+        return Backward { betas };
+    }
+    // beta[T-1] = 1
+    for b in betas[t_n - 1].iter_mut() {
+        *b = 1.0;
+    }
+    let mut tmp = vec![0f32; h_n];
+    for t in (0..t_n - 1).rev() {
+        let scale = log_scales[t + 1].exp();
+        let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+        // tmp[h'] = emit[h', x_{t+1}] * beta[t+1][h']
+        for h2 in 0..h_n {
+            tmp[h2] = hmm.emit.at(h2, tokens[t + 1]) * betas[t + 1][h2];
+        }
+        // beta[t][h] = (Σ_{h'} trans[h,h'] tmp[h']) / scale_{t+1}
+        let (head, tail) = betas.split_at_mut(t + 1);
+        let row = &mut head[t];
+        let _ = tail;
+        hmm.trans.matvec(&tmp, row);
+        for b in row.iter_mut() {
+            *b *= inv as f32;
+        }
+    }
+    Backward { betas }
+}
+
+/// State posteriors P(z_t = h | x_{1..T}) for every t.
+pub fn posteriors(hmm: &Hmm, tokens: &[usize], fwd: &Forward, bwd: &Backward) -> Vec<Vec<f32>> {
+    let t_n = tokens.len();
+    let h_n = hmm.hidden();
+    let mut out = vec![vec![0f32; h_n]; t_n];
+    for t in 0..t_n {
+        let mut sum = 0f64;
+        for h in 0..h_n {
+            let v = fwd.alphas[t][h] as f64 * bwd.betas[t][h] as f64;
+            out[t][h] = v as f32;
+            sum += v;
+        }
+        if sum > 0.0 {
+            let inv = (1.0 / sum) as f32;
+            for v in out[t].iter_mut() {
+                *v *= inv;
+            }
+        }
+    }
+    out
+}
+
+/// Viterbi decoding: most likely state path (log-space; used in tests and
+/// the quickstart example to show the model still "makes sense" after
+/// quantization).
+pub fn viterbi(hmm: &Hmm, tokens: &[usize]) -> (Vec<usize>, f64) {
+    let h_n = hmm.hidden();
+    let t_n = tokens.len();
+    if t_n == 0 {
+        return (vec![], 0.0);
+    }
+    let lf = |x: f32| if x > 0.0 { (x as f64).ln() } else { f64::NEG_INFINITY };
+    let mut delta: Vec<f64> = (0..h_n)
+        .map(|h| lf(hmm.init[h]) + lf(hmm.emit.at(h, tokens[0])))
+        .collect();
+    let mut back: Vec<Vec<usize>> = Vec::with_capacity(t_n);
+    back.push(vec![0; h_n]);
+    for t in 1..t_n {
+        let mut next = vec![f64::NEG_INFINITY; h_n];
+        let mut ptr = vec![0usize; h_n];
+        for h2 in 0..h_n {
+            let e = lf(hmm.emit.at(h2, tokens[t]));
+            if e == f64::NEG_INFINITY {
+                continue;
+            }
+            for h in 0..h_n {
+                let cand = delta[h] + lf(hmm.trans.at(h, h2)) + e;
+                if cand > next[h2] {
+                    next[h2] = cand;
+                    ptr[h2] = h;
+                }
+            }
+        }
+        delta = next;
+        back.push(ptr);
+    }
+    let (mut best_h, mut best) = (0usize, f64::NEG_INFINITY);
+    for h in 0..h_n {
+        if delta[h] > best {
+            best = delta[h];
+            best_h = h;
+        }
+    }
+    let mut path = vec![0usize; t_n];
+    path[t_n - 1] = best_h;
+    for t in (1..t_n).rev() {
+        path[t - 1] = back[t][path[t]];
+    }
+    (path, best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hmm::forward::forward;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn posteriors_normalize() {
+        let mut rng = Rng::seeded(21);
+        let hmm = Hmm::random(6, 12, 0.4, 0.4, &mut rng);
+        let tokens = hmm.sample(10, &mut rng);
+        let fwd = forward(&hmm, &tokens);
+        let bwd = backward(&hmm, &tokens, &fwd.log_scales);
+        for p in posteriors(&hmm, &tokens, &fwd, &bwd) {
+            let s: f64 = p.iter().map(|&x| x as f64).sum();
+            assert!((s - 1.0).abs() < 1e-4, "sum={s}");
+        }
+    }
+
+    #[test]
+    fn backward_last_step_is_ones() {
+        let mut rng = Rng::seeded(22);
+        let hmm = Hmm::random(4, 8, 1.0, 1.0, &mut rng);
+        let tokens = hmm.sample(5, &mut rng);
+        let fwd = forward(&hmm, &tokens);
+        let bwd = backward(&hmm, &tokens, &fwd.log_scales);
+        assert!(bwd.betas[4].iter().all(|&b| (b - 1.0).abs() < 1e-6));
+    }
+
+    /// The forward-backward identity: for every t,
+    /// Σ_h alpha_post[t][h] * beta[t][h] should be 1 under our scaling.
+    #[test]
+    fn forward_backward_identity() {
+        let mut rng = Rng::seeded(23);
+        let hmm = Hmm::random(5, 9, 0.7, 0.7, &mut rng);
+        let tokens = hmm.sample(12, &mut rng);
+        let fwd = forward(&hmm, &tokens);
+        let bwd = backward(&hmm, &tokens, &fwd.log_scales);
+        for t in 0..tokens.len() {
+            let s: f64 = (0..5)
+                .map(|h| fwd.alphas[t][h] as f64 * bwd.betas[t][h] as f64)
+                .sum();
+            assert!((s - 1.0).abs() < 1e-4, "t={t} s={s}");
+        }
+    }
+
+    #[test]
+    fn viterbi_path_is_valid_and_scores_match() {
+        let mut rng = Rng::seeded(24);
+        let hmm = Hmm::random(4, 7, 0.5, 0.5, &mut rng);
+        let tokens = hmm.sample(8, &mut rng);
+        let (path, score) = viterbi(&hmm, &tokens);
+        assert_eq!(path.len(), tokens.len());
+        assert!(path.iter().all(|&h| h < 4));
+        // Re-score the path manually.
+        let mut manual = (hmm.init[path[0]] as f64).ln()
+            + (hmm.emit.at(path[0], tokens[0]) as f64).ln();
+        for t in 1..tokens.len() {
+            manual += (hmm.trans.at(path[t - 1], path[t]) as f64).ln()
+                + (hmm.emit.at(path[t], tokens[t]) as f64).ln();
+        }
+        assert!((score - manual).abs() < 1e-9);
+        // Viterbi score <= total likelihood.
+        let ll = crate::hmm::forward::log_likelihood(&hmm, &tokens);
+        assert!(score <= ll + 1e-9);
+    }
+}

@@ -1,0 +1,246 @@
+//! Baum-Welch expectation-maximization training, chunked the way the
+//! paper trains (§IV-A: the training set is divided into 20 chunks, each
+//! EM step consumes one chunk; 5 epochs = 100 steps). The trainer exposes
+//! a hook after every M-step so quantization-aware EM (`crate::qem`) can
+//! project weights onto the quantized cookbook every `interval` steps —
+//! exactly the paper's §III-E procedure.
+
+use crate::hmm::backward::backward;
+use crate::hmm::forward::forward;
+use crate::hmm::model::Hmm;
+use crate::util::threadpool::parallel_fold;
+
+/// Sufficient statistics accumulated during the E-step (f64 to avoid
+/// drift over hundreds of thousands of token events).
+#[derive(Clone, Debug)]
+pub struct EmStats {
+    pub hidden: usize,
+    pub vocab: usize,
+    pub init: Vec<f64>,
+    pub trans: Vec<f64>, // H*H row-major expected transition counts
+    pub emit: Vec<f64>,  // H*V row-major expected emission counts
+    pub log_likelihood: f64,
+    pub sequences: usize,
+}
+
+impl EmStats {
+    pub fn zeros(hidden: usize, vocab: usize) -> Self {
+        EmStats {
+            hidden,
+            vocab,
+            init: vec![0.0; hidden],
+            trans: vec![0.0; hidden * hidden],
+            emit: vec![0.0; hidden * vocab],
+            log_likelihood: 0.0,
+            sequences: 0,
+        }
+    }
+
+    pub fn merge(mut self, other: EmStats) -> EmStats {
+        assert_eq!(self.hidden, other.hidden);
+        assert_eq!(self.vocab, other.vocab);
+        for (a, b) in self.init.iter_mut().zip(other.init) {
+            *a += b;
+        }
+        for (a, b) in self.trans.iter_mut().zip(other.trans) {
+            *a += b;
+        }
+        for (a, b) in self.emit.iter_mut().zip(other.emit) {
+            *a += b;
+        }
+        self.log_likelihood += other.log_likelihood;
+        self.sequences += other.sequences;
+        self
+    }
+}
+
+/// E-step over one sequence: accumulate expected counts into `stats`.
+pub fn accumulate(hmm: &Hmm, tokens: &[usize], stats: &mut EmStats) {
+    if tokens.is_empty() {
+        return;
+    }
+    let h_n = hmm.hidden();
+    let fwd = forward(hmm, tokens);
+    let ll = fwd.log_likelihood();
+    if !ll.is_finite() {
+        // Zero-probability sequence under current params (can happen after
+        // aggressive quantization): skip; renormalization will repair.
+        return;
+    }
+    let bwd = backward(hmm, tokens, &fwd.log_scales);
+    let t_n = tokens.len();
+
+    // gamma[t][h] ∝ alpha_post[t][h] * beta[t][h] (normalized).
+    let mut gamma_t = vec![0f64; h_n];
+    for t in 0..t_n {
+        let mut sum = 0f64;
+        for h in 0..h_n {
+            let g = fwd.alphas[t][h] as f64 * bwd.betas[t][h] as f64;
+            gamma_t[h] = g;
+            sum += g;
+        }
+        if sum <= 0.0 {
+            continue;
+        }
+        let inv = 1.0 / sum;
+        for h in 0..h_n {
+            let g = gamma_t[h] * inv;
+            if t == 0 {
+                stats.init[h] += g;
+            }
+            stats.emit[h * stats.vocab + tokens[t]] += g;
+        }
+    }
+
+    // xi[t][h][h'] ∝ alpha_post[t][h] * trans[h,h'] * emit[h',x_{t+1}] * beta[t+1][h']
+    // scaled: dividing by scale_{t+1} makes rows normalize to gamma[t][h].
+    for t in 0..t_n - 1 {
+        let scale = fwd.log_scales[t + 1].exp();
+        if scale <= 0.0 {
+            continue;
+        }
+        let inv_scale = 1.0 / scale;
+        let tok_next = tokens[t + 1];
+        for h in 0..h_n {
+            let a = fwd.alphas[t][h] as f64;
+            if a == 0.0 {
+                continue;
+            }
+            let trans_row = hmm.trans.row(h);
+            let base = h * h_n;
+            for h2 in 0..h_n {
+                let xi = a
+                    * trans_row[h2] as f64
+                    * hmm.emit.at(h2, tok_next) as f64
+                    * bwd.betas[t + 1][h2] as f64
+                    * inv_scale;
+                stats.trans[base + h2] += xi;
+            }
+        }
+    }
+
+    stats.log_likelihood += ll;
+    stats.sequences += 1;
+}
+
+/// M-step: normalize expected counts into a new (valid) HMM. `eps` floors
+/// empty rows exactly as `Mat::normalize_rows_eps` (keeps EM total).
+pub fn m_step(stats: &EmStats, eps: f64) -> Hmm {
+    let h_n = stats.hidden;
+    let v_n = stats.vocab;
+    let norm = |counts: &[f64], cols: usize| -> Vec<f32> {
+        let mut out = vec![0f32; counts.len()];
+        for r in 0..counts.len() / cols {
+            let row = &counts[r * cols..(r + 1) * cols];
+            let sum: f64 = row.iter().map(|&x| x + eps).sum();
+            let inv = 1.0 / sum;
+            for c in 0..cols {
+                out[r * cols + c] = ((row[c] + eps) * inv) as f32;
+            }
+        }
+        out
+    };
+    let init_sum: f64 = stats.init.iter().map(|&x| x + eps).sum();
+    Hmm {
+        init: stats.init.iter().map(|&x| ((x + eps) / init_sum) as f32).collect(),
+        trans: crate::util::mat::Mat::from_vec(h_n, h_n, norm(&stats.trans, h_n)),
+        emit: crate::util::mat::Mat::from_vec(h_n, v_n, norm(&stats.emit, v_n)),
+    }
+}
+
+/// One full EM step over a chunk of sequences (parallel E-step, M-step).
+/// Returns the new model and the chunk's total train log-likelihood
+/// under the *pre-update* model (the quantity plotted in Fig 5).
+pub fn em_step(hmm: &Hmm, chunk: &[Vec<usize>], threads: usize, eps: f64) -> (Hmm, f64) {
+    let stats = parallel_fold(
+        chunk.len(),
+        threads,
+        || EmStats::zeros(hmm.hidden(), hmm.vocab()),
+        |acc, i| accumulate(hmm, &chunk[i], acc),
+        EmStats::merge,
+    );
+    let mean_ll = if stats.sequences > 0 {
+        stats.log_likelihood / stats.sequences as f64
+    } else {
+        f64::NEG_INFINITY
+    };
+    (m_step(&stats, eps), mean_ll)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hmm::forward::mean_log_likelihood;
+    use crate::util::rng::Rng;
+
+    fn toy_dataset(hmm: &Hmm, n: usize, len: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+        (0..n).map(|_| hmm.sample(len, rng)).collect()
+    }
+
+    #[test]
+    fn em_monotonically_improves_likelihood() {
+        let mut rng = Rng::seeded(31);
+        let truth = Hmm::random(4, 10, 0.3, 0.3, &mut rng);
+        let data = toy_dataset(&truth, 80, 15, &mut rng);
+        let mut model = Hmm::random(4, 10, 1.0, 1.0, &mut rng);
+        let mut prev = mean_log_likelihood(&model, &data, 1);
+        for _ in 0..8 {
+            let (next, _) = em_step(&model, &data, 2, 1e-9);
+            let ll = mean_log_likelihood(&next, &data, 1);
+            assert!(
+                ll >= prev - 1e-6,
+                "EM decreased likelihood: {prev} -> {ll}"
+            );
+            prev = ll;
+            model = next;
+        }
+    }
+
+    #[test]
+    fn em_recovers_structure_better_than_random() {
+        let mut rng = Rng::seeded(32);
+        let truth = Hmm::random(3, 8, 0.2, 0.2, &mut rng);
+        let data = toy_dataset(&truth, 120, 20, &mut rng);
+        let init_model = Hmm::random(3, 8, 1.0, 1.0, &mut rng);
+        let before = mean_log_likelihood(&init_model, &data, 1);
+        let mut model = init_model;
+        for _ in 0..15 {
+            model = em_step(&model, &data, 2, 1e-9).0;
+        }
+        let after = mean_log_likelihood(&model, &data, 1);
+        assert!(after > before + 0.5, "before={before} after={after}");
+    }
+
+    #[test]
+    fn m_step_produces_valid_model() {
+        let mut rng = Rng::seeded(33);
+        let hmm = Hmm::random(5, 9, 0.5, 0.5, &mut rng);
+        let data = toy_dataset(&hmm, 10, 8, &mut rng);
+        let mut stats = EmStats::zeros(5, 9);
+        for seq in &data {
+            accumulate(&hmm, seq, &mut stats);
+        }
+        let m = m_step(&stats, 1e-9);
+        assert!(m.is_valid(1e-3));
+    }
+
+    #[test]
+    fn parallel_estep_matches_serial() {
+        let mut rng = Rng::seeded(34);
+        let hmm = Hmm::random(4, 8, 0.5, 0.5, &mut rng);
+        let data = toy_dataset(&hmm, 24, 10, &mut rng);
+        let (m1, ll1) = em_step(&hmm, &data, 1, 1e-9);
+        let (m8, ll8) = em_step(&hmm, &data, 8, 1e-9);
+        assert!((ll1 - ll8).abs() < 1e-9);
+        assert!(m1.trans.max_abs_diff(&m8.trans) < 1e-6);
+        assert!(m1.emit.max_abs_diff(&m8.emit) < 1e-6);
+    }
+
+    #[test]
+    fn empty_chunk_yields_floored_model() {
+        let hmm = Hmm::uniform(3, 5);
+        let (m, ll) = em_step(&hmm, &[], 2, 1e-9);
+        assert!(m.is_valid(1e-3));
+        assert_eq!(ll, f64::NEG_INFINITY);
+    }
+}

@@ -1,0 +1,221 @@
+//! Scaled forward algorithm (and log-likelihood evaluation).
+//!
+//! The paper's forward recursion (§II):
+//!   P(x_{1..t}, z_{t+1}) = Σ_{z_t} P(z_t, x_{<t}) P(x_t|z_t) P(z_{t+1}|z_t)
+//!
+//! We run it in linear space with per-step renormalization and track the
+//! log of the running scale, which is numerically equivalent to log-space
+//! but keeps the hot loop as two dense ops — the exact shape the paper's
+//! four "main MatMul layers" (§III-B) refer to, and the shape the Pallas
+//! kernel in `python/compile/kernels/hmm_step.py` fuses.
+
+use crate::hmm::model::Hmm;
+
+/// Result of one forward pass over a sequence.
+#[derive(Clone, Debug)]
+pub struct Forward {
+    /// alphas[t][h] = P(z_{t+1-...}) posterior-ish scaled filtering dist:
+    /// alphas[t] is proportional to P(z_t | x_{1..t}), normalized.
+    pub alphas: Vec<Vec<f32>>,
+    /// Per-step log scale factors; their sum is the log-likelihood.
+    pub log_scales: Vec<f64>,
+}
+
+impl Forward {
+    pub fn log_likelihood(&self) -> f64 {
+        self.log_scales.iter().sum()
+    }
+}
+
+/// One fused forward step: given the filtering distribution `alpha` over
+/// states *before* observing token `tok` at time t (i.e. the predictive
+/// P(z_t | x_{<t})), observe `tok` and advance:
+///
+///   weighted[h]  = alpha[h] * emit[h, tok]
+///   scale        = Σ_h weighted[h]            (= P(x_t | x_{<t}))
+///   next[h']     = Σ_h (weighted[h]/scale) * trans[h, h']
+///
+/// Returns the scale. `next` must have length H. This is the L1 kernel's
+/// reference semantics (see python/compile/kernels/ref.py::forward_step).
+pub fn forward_step(hmm: &Hmm, alpha: &[f32], tok: usize, next: &mut [f32]) -> f64 {
+    let h_n = hmm.hidden();
+    debug_assert_eq!(alpha.len(), h_n);
+    debug_assert_eq!(next.len(), h_n);
+    debug_assert!(tok < hmm.vocab());
+
+    // Emission weighting + scale (one strided gather over emit column).
+    let mut weighted = vec![0f32; h_n];
+    let mut scale = 0f64;
+    for h in 0..h_n {
+        let w = alpha[h] as f64 * hmm.emit.at(h, tok) as f64;
+        weighted[h] = w as f32;
+        scale += w;
+    }
+    // Scales below ~1e-30 are "effectively impossible": the model gives
+    // this token no real mass (the paper's garbled-output failure mode
+    // after over-pruning/quantization). They are also numerically toxic:
+    // 1/scale overflows f32 and poisons the belief with inf*0 = NaN
+    // (caught by tests/robustness.rs). Uniform-reset and report 0.
+    if scale <= 1e-30 {
+        let u = 1.0 / h_n as f32;
+        for n in next.iter_mut() {
+            *n = u;
+        }
+        return 0.0;
+    }
+    let inv = (1.0 / scale) as f32;
+    for w in weighted.iter_mut() {
+        *w *= inv;
+    }
+    // next = weighted^T @ trans  (the 1xH · HxH MatMul hot spot).
+    hmm.trans.vecmat(&weighted, next);
+    scale
+}
+
+/// Full scaled forward pass over `tokens`. Returns filtering
+/// distributions and log scales; `log_likelihood()` gives log P(x_{1..T}).
+pub fn forward(hmm: &Hmm, tokens: &[usize]) -> Forward {
+    let h_n = hmm.hidden();
+    let mut alphas = Vec::with_capacity(tokens.len());
+    let mut log_scales = Vec::with_capacity(tokens.len());
+    let mut alpha = hmm.init.clone();
+    let mut next = vec![0f32; h_n];
+    for &tok in tokens {
+        let scale = forward_step(hmm, &alpha, tok, &mut next);
+        // Record the *posterior* filtering distribution at t:
+        // alpha[h]*emit[h,tok]/scale. Recompute cheaply from alpha.
+        let mut post = vec![0f32; h_n];
+        if scale > 0.0 {
+            let inv = (1.0 / scale) as f32;
+            for h in 0..h_n {
+                post[h] = alpha[h] * hmm.emit.at(h, tok) * inv;
+            }
+        } else {
+            post.copy_from_slice(&next); // uniform reset
+        }
+        alphas.push(post);
+        log_scales.push(if scale > 0.0 { scale.ln() } else { f64::NEG_INFINITY });
+        std::mem::swap(&mut alpha, &mut next);
+    }
+    Forward { alphas, log_scales }
+}
+
+/// log P(tokens) under the HMM — thin wrapper used everywhere LLD is
+/// reported (Figs 4 & 5).
+pub fn log_likelihood(hmm: &Hmm, tokens: &[usize]) -> f64 {
+    forward(hmm, tokens).log_likelihood()
+}
+
+/// Mean per-sequence log-likelihood over a dataset (the paper's test LLD).
+pub fn mean_log_likelihood(hmm: &Hmm, dataset: &[Vec<usize>], threads: usize) -> f64 {
+    use crate::util::threadpool::parallel_fold;
+    if dataset.is_empty() {
+        return 0.0;
+    }
+    let total = parallel_fold(
+        dataset.len(),
+        threads,
+        || 0f64,
+        |acc, i| *acc += log_likelihood(hmm, &dataset[i]),
+        |a, b| a + b,
+    );
+    total / dataset.len() as f64
+}
+
+/// Brute-force enumeration of P(tokens) — O(H^T), tests only.
+#[cfg(test)]
+pub fn brute_force_likelihood(hmm: &Hmm, tokens: &[usize]) -> f64 {
+    fn rec(hmm: &Hmm, tokens: &[usize], t: usize, z: usize, p: f64) -> f64 {
+        if t == tokens.len() {
+            return p;
+        }
+        let pe = p * hmm.emit.at(z, tokens[t]) as f64;
+        if t + 1 == tokens.len() {
+            return pe;
+        }
+        let mut total = 0.0;
+        for z2 in 0..hmm.hidden() {
+            total += rec(hmm, tokens, t + 1, z2, pe * hmm.trans.at(z, z2) as f64);
+        }
+        total
+    }
+    let mut total = 0.0;
+    for z in 0..hmm.hidden() {
+        total += rec(hmm, tokens, 0, z, hmm.init[z] as f64);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{gen, Prop};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn forward_matches_brute_force() {
+        let mut rng = Rng::seeded(11);
+        let hmm = Hmm::random(4, 6, 1.0, 1.0, &mut rng);
+        let tokens = vec![0usize, 3, 1, 5, 2];
+        let ll = log_likelihood(&hmm, &tokens);
+        let bf = brute_force_likelihood(&hmm, &tokens).ln();
+        assert!((ll - bf).abs() < 1e-6, "ll={ll} bf={bf}");
+    }
+
+    #[test]
+    fn forward_property_vs_brute_force() {
+        Prop::new(24, 0xF0).run("fwd-vs-bruteforce", |rng, _| {
+            let h = rng.range(2, 5);
+            let v = rng.range(3, 8);
+            let hmm = Hmm::random(h, v, 0.5, 0.5, rng);
+            let toks = gen::tokens(rng, v, 5);
+            let ll = log_likelihood(&hmm, &toks);
+            let bf = brute_force_likelihood(&hmm, &toks).ln();
+            assert!((ll - bf).abs() < 1e-5, "ll={ll} bf={bf} h={h} v={v}");
+        });
+    }
+
+    #[test]
+    fn filtering_dists_are_normalized() {
+        let mut rng = Rng::seeded(12);
+        let hmm = Hmm::random(8, 20, 0.3, 0.2, &mut rng);
+        let tokens = hmm.sample(15, &mut rng);
+        let fwd = forward(&hmm, &tokens);
+        for a in &fwd.alphas {
+            let s: f64 = a.iter().map(|&x| x as f64).sum();
+            assert!((s - 1.0).abs() < 1e-4, "sum={s}");
+        }
+    }
+
+    #[test]
+    fn impossible_token_gives_neg_inf() {
+        let mut rng = Rng::seeded(13);
+        let mut hmm = Hmm::random(4, 6, 1.0, 1.0, &mut rng);
+        // Make token 5 impossible from every state.
+        for h in 0..4 {
+            hmm.emit.set(h, 5, 0.0);
+        }
+        let ll = log_likelihood(&hmm, &[5]);
+        assert_eq!(ll, f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn longer_sequences_have_lower_likelihood() {
+        let mut rng = Rng::seeded(14);
+        let hmm = Hmm::random(6, 10, 0.5, 0.5, &mut rng);
+        let seq = hmm.sample(30, &mut rng);
+        let l10 = log_likelihood(&hmm, &seq[..10]);
+        let l30 = log_likelihood(&hmm, &seq);
+        assert!(l30 < l10);
+    }
+
+    #[test]
+    fn mean_lld_parallel_matches_serial() {
+        let mut rng = Rng::seeded(15);
+        let hmm = Hmm::random(6, 10, 0.5, 0.5, &mut rng);
+        let data: Vec<Vec<usize>> = (0..32).map(|_| hmm.sample(12, &mut rng)).collect();
+        let a = mean_log_likelihood(&hmm, &data, 1);
+        let b = mean_log_likelihood(&hmm, &data, 8);
+        assert!((a - b).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,10 @@
+//! The HMM substrate: model container, forward/backward/Viterbi
+//! inference, sampling, and Baum-Welch EM training. This is the
+//! probabilistic symbolic model the paper compresses.
+
+pub mod backward;
+pub mod em;
+pub mod forward;
+pub mod model;
+
+pub use model::Hmm;

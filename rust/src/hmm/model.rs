@@ -1,0 +1,140 @@
+//! The Hidden Markov Model container.
+//!
+//! Following the paper's notation (§II): an HMM is defined by the initial
+//! probabilities γ = P(z_0) of shape `[1, H]`, the transition matrix
+//! α = P(z_{t+1} | z_t) of shape `[H, H]`, and the emission matrix
+//! β = P(x_t | z_t) of shape `[H, V]`. To avoid clashing with the
+//! forward/backward variables (also traditionally α/β) the fields are
+//! named `init`, `trans`, `emit`.
+//!
+//! Generative convention used throughout the repo:
+//!   z_1 ~ init;  x_t ~ emit[z_t];  z_{t+1} ~ trans[z_t].
+
+use crate::util::mat::Mat;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Hmm {
+    /// γ: initial state distribution, length H.
+    pub init: Vec<f32>,
+    /// α: transition matrix, H x H; row h is P(z' | z = h).
+    pub trans: Mat,
+    /// β: emission matrix, H x V; row h is P(x | z = h).
+    pub emit: Mat,
+}
+
+impl Hmm {
+    pub fn hidden(&self) -> usize {
+        self.trans.rows
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.emit.cols
+    }
+
+    /// Total parameter count (the paper's "223M parameters" accounting:
+    /// H·H + H·V + H).
+    pub fn param_count(&self) -> usize {
+        self.hidden() * self.hidden() + self.hidden() * self.vocab() + self.hidden()
+    }
+
+    /// Random HMM with Dirichlet rows. `alpha_trans`/`alpha_emit` control
+    /// sparsity (small alpha ⇒ spiky rows, the regime of Fig 2).
+    pub fn random(hidden: usize, vocab: usize, alpha_trans: f64, alpha_emit: f64, rng: &mut Rng) -> Hmm {
+        Hmm {
+            init: rng.dirichlet_symmetric(hidden, 1.0),
+            trans: Mat::random_stochastic(hidden, hidden, alpha_trans, rng),
+            emit: Mat::random_stochastic(hidden, vocab, alpha_emit, rng),
+        }
+    }
+
+    /// Uniform HMM (EM initialization worst case; also used in tests).
+    pub fn uniform(hidden: usize, vocab: usize) -> Hmm {
+        Hmm {
+            init: vec![1.0 / hidden as f32; hidden],
+            trans: Mat::filled(hidden, hidden, 1.0 / hidden as f32),
+            emit: Mat::filled(hidden, vocab, 1.0 / vocab as f32),
+        }
+    }
+
+    /// Validity check: all three components row-stochastic within `tol`.
+    pub fn is_valid(&self, tol: f64) -> bool {
+        let init_sum: f64 = self.init.iter().map(|&x| x as f64).sum();
+        (init_sum - 1.0).abs() <= tol
+            && self.init.iter().all(|&x| x >= 0.0)
+            && self.trans.is_row_stochastic(tol)
+            && self.emit.is_row_stochastic(tol)
+    }
+
+    /// Re-normalize all rows with an epsilon floor (repairs rows zeroed by
+    /// pruning/quantization — the Norm-Q "norm" step applied model-wide).
+    pub fn renormalize(&mut self, eps: f64) {
+        let s: f64 = self.init.iter().map(|&x| x as f64 + eps).sum();
+        for x in self.init.iter_mut() {
+            *x = ((*x as f64 + eps) / s) as f32;
+        }
+        self.trans.normalize_rows_eps(eps);
+        self.emit.normalize_rows_eps(eps);
+    }
+
+    /// Ancestral sample of one sequence of length `len`.
+    pub fn sample(&self, len: usize, rng: &mut Rng) -> Vec<usize> {
+        let mut out = Vec::with_capacity(len);
+        if len == 0 {
+            return out;
+        }
+        let mut z = rng.categorical(&self.init);
+        for _ in 0..len {
+            out.push(rng.categorical(self.emit.row(z)));
+            z = rng.categorical(self.trans.row(z));
+        }
+        out
+    }
+
+    /// Bytes needed to store the raw FP32 weights (compression baseline).
+    pub fn fp32_bytes(&self) -> usize {
+        self.param_count() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_hmm_is_valid() {
+        let mut rng = Rng::seeded(1);
+        let hmm = Hmm::random(16, 40, 0.1, 0.05, &mut rng);
+        assert!(hmm.is_valid(1e-3));
+        assert_eq!(hmm.hidden(), 16);
+        assert_eq!(hmm.vocab(), 40);
+        assert_eq!(hmm.param_count(), 16 * 16 + 16 * 40 + 16);
+    }
+
+    #[test]
+    fn uniform_hmm_is_valid() {
+        let hmm = Hmm::uniform(8, 10);
+        assert!(hmm.is_valid(1e-5));
+    }
+
+    #[test]
+    fn sample_respects_vocab_and_len() {
+        let mut rng = Rng::seeded(2);
+        let hmm = Hmm::random(4, 12, 1.0, 1.0, &mut rng);
+        let seq = hmm.sample(20, &mut rng);
+        assert_eq!(seq.len(), 20);
+        assert!(seq.iter().all(|&x| x < 12));
+    }
+
+    #[test]
+    fn renormalize_repairs_zero_rows() {
+        let mut rng = Rng::seeded(3);
+        let mut hmm = Hmm::random(4, 6, 1.0, 1.0, &mut rng);
+        for v in hmm.emit.row_mut(2) {
+            *v = 0.0;
+        }
+        assert!(!hmm.is_valid(1e-3));
+        hmm.renormalize(1e-12);
+        assert!(hmm.is_valid(1e-3));
+    }
+}

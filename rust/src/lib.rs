@@ -1,0 +1,38 @@
+//! # normq — Norm-Q: Effective Compression for Hidden Markov Models
+//!
+//! A production-quality reproduction of *"Norm-Q: Effective Compression
+//! Method for Hidden Markov Models in Neuro-Symbolic Applications"*
+//! (Gao & Yang, 2025), built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the neuro-symbolic serving coordinator:
+//!   HMM substrate, the Norm-Q compression library, DFA constraint engine,
+//!   Ctrl-G style constrained decoder, evaluation metrics, the experiment
+//!   drivers for every table/figure in the paper, and a request-serving
+//!   runtime.
+//! - **Layer 2 (python/compile, build-time)** — JAX compute graphs (tiny
+//!   transformer LM, HMM forward/backward) AOT-lowered to HLO text.
+//! - **Layer 1 (python/compile/kernels, build-time)** — Pallas kernels for
+//!   the HMM-step and Norm-Q hot spots, validated against pure-jnp oracles.
+//!
+//! Python never runs on the request path: `make artifacts` lowers
+//! everything once; the Rust binary loads `artifacts/*.hlo.txt` via PJRT.
+
+pub mod util;
+
+pub mod data;
+pub mod hmm;
+pub mod quant;
+
+pub mod dfa;
+pub mod qem;
+
+pub mod generate;
+pub mod lm;
+
+pub mod eval;
+
+pub mod profile;
+pub mod tables;
+
+pub mod coordinator;
+pub mod runtime;

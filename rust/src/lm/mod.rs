@@ -1,0 +1,62 @@
+//! The neural part of the neuro-symbolic system, behind a trait.
+//!
+//! The paper uses GPT2-large; this repo provides two interchangeable
+//! implementations of [`LanguageModel`]:
+//!
+//! - [`ngram::NgramLm`] — a natively-trained interpolated n-gram model.
+//!   Pure Rust, used by the experiment drivers so every table/figure can
+//!   regenerate without artifacts.
+//! - [`crate::runtime::HloLm`] — the AOT-compiled JAX transformer (L2),
+//!   loaded from `artifacts/lm_logits.hlo.txt` and executed via PJRT.
+//!   This is the "real" neural part exercised by `normq serve` and the
+//!   end-to-end example.
+//!
+//! Norm-Q never touches the neural part (compression of the symbolic part
+//! is "orthogonal to the optimization of neural parts", §I) — which is
+//! why the trait boundary is the right place for the substitution.
+
+pub mod ngram;
+pub mod sample;
+
+pub use ngram::NgramLm;
+pub use sample::{distill_corpus, sample_sequence};
+
+/// Next-token distribution provider.
+pub trait LanguageModel: Send + Sync {
+    fn vocab(&self) -> usize;
+
+    /// Write log P(x | prefix) for every token x into `out`
+    /// (length == vocab()). Values must form a normalized distribution.
+    fn next_log_probs(&self, prefix: &[usize], out: &mut [f32]);
+
+    /// Convenience: greedy continuation of `prefix` by `n` tokens.
+    fn greedy(&self, prefix: &[usize], n: usize) -> Vec<usize> {
+        let mut seq = prefix.to_vec();
+        let mut lp = vec![0f32; self.vocab()];
+        for _ in 0..n {
+            self.next_log_probs(&seq, &mut lp);
+            let best = lp
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            seq.push(best);
+            if best == crate::data::vocab::EOS {
+                break;
+            }
+        }
+        seq[prefix.len()..].to_vec()
+    }
+
+    /// Sequence log-probability under the LM (teacher-forced).
+    fn sequence_log_prob(&self, tokens: &[usize]) -> f64 {
+        let mut lp = vec![0f32; self.vocab()];
+        let mut total = 0f64;
+        for t in 0..tokens.len() {
+            self.next_log_probs(&tokens[..t], &mut lp);
+            total += lp[tokens[t]] as f64;
+        }
+        total
+    }
+}

@@ -1,0 +1,124 @@
+//! Sampling from a [`LanguageModel`] — the distillation path.
+//!
+//! The paper trains its HMM on 200k sentences *sampled from the base
+//! model* (§IV-A: "The dataset for HMM training is sampled from the base
+//! model", i.e. knowledge distillation from the LLM into the HMM). This
+//! module provides temperature sampling from any `LanguageModel` and a
+//! corpus-distillation helper the experiment drivers use under
+//! `--distill`.
+
+use crate::data::vocab::EOS;
+use crate::lm::LanguageModel;
+use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_map;
+
+/// Sample one continuation of up to `max_tokens` tokens (stops at EOS,
+/// which is included in the returned sequence as the terminator).
+pub fn sample_sequence(
+    lm: &dyn LanguageModel,
+    max_tokens: usize,
+    temperature: f32,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    assert!(temperature > 0.0);
+    let v = lm.vocab();
+    let mut seq: Vec<usize> = Vec::new();
+    let mut lp = vec![0f32; v];
+    let mut probs = vec![0f32; v];
+    for _ in 0..max_tokens {
+        lm.next_log_probs(&seq, &mut lp);
+        let inv_t = 1.0 / temperature;
+        let max_lp = lp.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        for (p, &l) in probs.iter_mut().zip(lp.iter()) {
+            *p = ((l - max_lp) * inv_t).exp();
+        }
+        let tok = rng.categorical(&probs);
+        seq.push(tok);
+        if tok == EOS {
+            return seq;
+        }
+    }
+    seq.push(EOS);
+    seq
+}
+
+/// Distill a training corpus from the LM: `n` sampled sequences (the
+/// paper's HMM-training data), parallel over a deterministic per-sequence
+/// seed so the corpus is reproducible regardless of thread count.
+pub fn distill_corpus(
+    lm: &dyn LanguageModel,
+    n: usize,
+    max_tokens: usize,
+    temperature: f32,
+    seed: u64,
+    threads: usize,
+) -> Vec<Vec<usize>> {
+    let idx: Vec<u64> = (0..n as u64).collect();
+    parallel_map(&idx, threads, |&i| {
+        let mut rng = Rng::seeded(seed ^ (i.wrapping_mul(0x9E3779B97F4A7C15)));
+        sample_sequence(lm, max_tokens, temperature, &mut rng)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Corpus;
+    use crate::lm::NgramLm;
+
+    fn lm() -> (NgramLm, Corpus) {
+        let corpus = Corpus::small(808);
+        let data = corpus.sample_token_corpus(400, 1);
+        (NgramLm::train(&data, corpus.vocab.len()), corpus)
+    }
+
+    #[test]
+    fn samples_terminate_with_eos_and_stay_in_vocab() {
+        let (lm, corpus) = lm();
+        let mut rng = Rng::seeded(1);
+        for _ in 0..20 {
+            let s = sample_sequence(&lm, 24, 1.0, &mut rng);
+            assert_eq!(*s.last().unwrap(), EOS);
+            assert!(s.len() <= 25);
+            assert!(s.iter().all(|&t| t < corpus.vocab.len()));
+        }
+    }
+
+    #[test]
+    fn low_temperature_is_less_diverse() {
+        let (lm, _) = lm();
+        let distinct = |temp: f32| {
+            let mut rng = Rng::seeded(2);
+            let mut set = std::collections::HashSet::new();
+            for _ in 0..30 {
+                set.insert(sample_sequence(&lm, 16, temp, &mut rng));
+            }
+            set.len()
+        };
+        assert!(distinct(0.2) <= distinct(2.0), "low temp more diverse than high");
+    }
+
+    #[test]
+    fn distilled_corpus_is_deterministic_across_thread_counts() {
+        let (lm, _) = lm();
+        let a = distill_corpus(&lm, 24, 16, 1.0, 7, 1);
+        let b = distill_corpus(&lm, 24, 16, 1.0, 7, 8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn distilled_data_trains_a_working_hmm() {
+        // The paper's pipeline: LM → sampled corpus → EM → HMM.
+        let (lm, corpus) = lm();
+        let data = distill_corpus(&lm, 200, 16, 1.0, 9, 4);
+        let mut rng = Rng::seeded(10);
+        let init = crate::hmm::Hmm::random(8, corpus.vocab.len(), 0.5, 0.5, &mut rng);
+        let mut model = init.clone();
+        for _ in 0..4 {
+            model = crate::hmm::em::em_step(&model, &data, 4, 1e-9).0;
+        }
+        let before = crate::hmm::forward::mean_log_likelihood(&init, &data, 4);
+        let after = crate::hmm::forward::mean_log_likelihood(&model, &data, 4);
+        assert!(after > before + 0.5, "distillation EM failed: {before} -> {after}");
+    }
+}

@@ -1,0 +1,249 @@
+//! normq CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//!   table <id>    regenerate a paper table/figure (1-6, fig1-fig5)
+//!   quantize      compress a trained HMM and report sizes
+//!   serve         start the serving coordinator + built-in load driver
+//!   smoke         verify the PJRT runtime + artifacts round-trip
+//!   corpus        dump sample corpus sentences / eval items
+
+use std::sync::Arc;
+
+use normq::coordinator::{Server, ServerConfig};
+use normq::data::Corpus;
+use normq::generate::DecodeConfig;
+use normq::lm::NgramLm;
+use normq::log_info;
+use normq::quant::packed::CompressionReport;
+use normq::quant::Method;
+use normq::tables::{run_experiment, ExperimentContext};
+use normq::util::cli::Args;
+
+const USAGE: &str = "\
+normq — Norm-Q compression for HMMs in neuro-symbolic serving
+
+USAGE:
+  normq table <1|2|3|4|5|6|fig1..fig5> [--hidden N] [--items N] [--bits ..]
+  normq quantize [--hidden N] [--bits 8] [--method normq|fixed|int|kmeans]
+  normq serve [--requests N] [--workers N] [--use-hlo-lm] [--bits N]
+  normq smoke [--artifacts DIR]
+  normq corpus [--n N] [--eval]
+
+Common options:
+  --hidden N      HMM hidden size (default 64)
+  --items N       evaluation items (default 300; paper uses 900)
+  --train N       training sentences (default 8000)
+  --threads N     worker threads (default: cores, cap 16)
+  --seed N        experiment seed (default 1234)
+";
+
+fn main() {
+    normq::util::logging::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    }
+    let mut value_keys: Vec<&str> = ExperimentContext::VALUE_KEYS.to_vec();
+    value_keys.extend([
+        "bits", "ratios", "norm-ratio", "interval", "intervals", "scales", "method", "requests",
+        "workers", "artifacts", "n", "out", "heatmap", "queue",
+    ]);
+    let args = match Args::parse(&argv, &value_keys) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    let result = match cmd {
+        "table" => cmd_table(&args),
+        "quantize" => cmd_quantize(&args),
+        "serve" => cmd_serve(&args),
+        "smoke" => cmd_smoke(&args),
+        "corpus" => cmd_corpus(&args),
+        other => Err(format!("unknown command {other:?}\n{USAGE}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_table(args: &Args) -> Result<(), String> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or("table: missing id (1-6, fig1-fig5)")?;
+    let result = run_experiment(id, args)?;
+    println!("{}", result.render());
+    result.save(args.get_or("out", "results"));
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> Result<(), String> {
+    let ctx = ExperimentContext::build(args)?;
+    let bits = args.usize("bits", 8)? as u32;
+    let method = match args.get_or("method", "normq") {
+        "normq" => Method::NormQ { bits },
+        "fixed" => Method::Fixed { bits },
+        "int" => Method::Integer { bits },
+        "kmeans" => Method::Kmeans { bits, renorm: true },
+        other => return Err(format!("unknown method {other:?}")),
+    };
+    let q = method.apply(&ctx.hmm);
+    println!("method: {}", method.label());
+    println!(
+        "model: hidden={} vocab={} params={}",
+        q.hidden(),
+        q.vocab(),
+        q.param_count()
+    );
+    println!("valid (row-stochastic): {}", q.is_valid(1e-3));
+    for (name, m) in [("transition", &ctx.hmm.trans), ("emission", &ctx.hmm.emit)] {
+        let r = CompressionReport::of(m, bits);
+        println!(
+            "{name}: fp32={}KB packed={}KB sparse={}KB nnz={} rate={:.4}%",
+            r.fp32_bits / 8192,
+            r.dense_packed_bits / 8192,
+            r.sparse_bits / 8192,
+            r.nnz,
+            r.compression_rate() * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let ctx = ExperimentContext::build(args)?;
+    let n_requests = args.usize("requests", 64)?;
+    let bits = args.usize("bits", 8)? as u32;
+    let hmm = Method::NormQ { bits }.apply(&ctx.hmm);
+    log_info!("serving with Norm-Q {}b HMM", bits);
+
+    let lm: Arc<dyn normq::lm::LanguageModel> = if args.flag("use-hlo-lm") {
+        let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+        let manifest = normq::runtime::Manifest::load(&dir).map_err(|e| format!("{e:#}"))?;
+        // The artifact vocabulary must match the corpus vocabulary.
+        if manifest.vocab_words.len() != ctx.corpus.vocab.len() {
+            return Err(format!(
+                "artifact vocab {} != corpus vocab {} (rebuild artifacts with matching seed)",
+                manifest.vocab_words.len(),
+                ctx.corpus.vocab.len()
+            ));
+        }
+        Arc::new(normq::runtime::HloLm::load(&manifest).map_err(|e| format!("{e:#}"))?)
+    } else {
+        Arc::new(NgramLm::train(
+            &ctx.corpus.sample_token_corpus(4000, ctx.seed + 9),
+            ctx.corpus.vocab.len(),
+        ))
+    };
+
+    let cfg = ServerConfig {
+        workers: args.usize("workers", normq::util::threadpool::default_threads())?,
+        queue_capacity: args.usize("queue", 256)?,
+        decode: DecodeConfig {
+            beam: ctx.decode.beam,
+            max_tokens: ctx.decode.max_tokens,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let server = Server::start(lm, hmm, ctx.corpus.clone(), cfg);
+
+    // Built-in load driver: submit eval items, await all.
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for item in ctx.items.iter().cycle().take(n_requests) {
+        match server.submit(item.concepts.clone()) {
+            Ok(rx) => rxs.push(rx),
+            Err(e) => log_info!("rejected: {e}"),
+        }
+    }
+    let mut ok = 0usize;
+    for rx in &rxs {
+        if let Ok(resp) = rx.recv() {
+            if resp.satisfied {
+                ok += 1;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "requests={} satisfied={} wall={:.2}s throughput={:.1} req/s",
+        rxs.len(),
+        ok,
+        wall,
+        rxs.len() as f64 / wall
+    );
+    println!("{}", server.metrics().summary());
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_smoke(args: &Args) -> Result<(), String> {
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let manifest = normq::runtime::Manifest::load(&dir).map_err(|e| format!("{e:#}"))?;
+    println!(
+        "manifest: vocab={} max_len={} hidden={}",
+        manifest.vocab_words.len(),
+        manifest.max_len,
+        manifest.hidden
+    );
+    // LM artifact: one forward call (each Engine owns its PJRT client).
+    let lm = normq::runtime::HloLm::load(&manifest).map_err(|e| format!("{e:#}"))?;
+    let lp = lm.call(&[2, 3]).map_err(|e| format!("{e:#}"))?;
+    let sum: f64 = lp.iter().map(|&l| (l as f64).exp()).sum();
+    println!("lm_logits: vocab={} sum(exp)={:.4}", lp.len(), sum);
+    if (sum - 1.0).abs() > 1e-2 {
+        return Err(format!("LM distribution does not normalize: {sum}"));
+    }
+
+    // HMM forward artifact vs native Rust forward.
+    let engine = normq::runtime::Engine::load(&manifest.artifact("hmm_forward.hlo.txt"))
+        .map_err(|e| format!("{e:#}"))?;
+    let mut rng = normq::util::rng::Rng::seeded(7);
+    let hmm = normq::hmm::Hmm::random(
+        manifest.hidden,
+        manifest.vocab_words.len(),
+        0.3,
+        0.1,
+        &mut rng,
+    );
+    let tokens: Vec<usize> = (0..10).map(|_| rng.below_usize(hmm.vocab())).collect();
+    let hlo_ll = normq::runtime::hmm_forward_hlo(&engine, &hmm, &tokens, manifest.max_len)
+        .map_err(|e| format!("{e:#}"))?;
+    let rust_ll = normq::hmm::forward::log_likelihood(&hmm, &tokens);
+    println!(
+        "hmm_forward: hlo={hlo_ll:.5} rust={rust_ll:.5} diff={:.2e}",
+        (hlo_ll - rust_ll).abs()
+    );
+    if (hlo_ll - rust_ll).abs() > 1e-3 {
+        return Err("HLO vs native HMM forward mismatch".into());
+    }
+    println!("smoke OK");
+    Ok(())
+}
+
+fn cmd_corpus(args: &Args) -> Result<(), String> {
+    let seed = args.u64("seed", 1234)?;
+    let n = args.usize("n", 10)?;
+    let corpus = Corpus::new(seed);
+    if args.flag("eval") {
+        for item in corpus.eval_set(n, 2, seed + 3) {
+            println!("concepts: {:?}", item.concepts);
+            for r in &item.references {
+                println!("  ref: {r}");
+            }
+        }
+    } else {
+        let mut rng = normq::util::rng::Rng::seeded(seed + 1);
+        for _ in 0..n {
+            println!("{}", corpus.sample_sentence(&mut rng));
+        }
+    }
+    println!("# vocab size: {}", corpus.vocab.len());
+    Ok(())
+}

@@ -1,0 +1,252 @@
+//! Latency profiling of the neuro-symbolic pipeline — the Fig 1
+//! reproduction. Phases:
+//!
+//! - `neural.lm_forward` — the LM's next-token distribution (the paper's
+//!   GPT2 MatMuls)
+//! - `symbolic.table_build` — HMM×DFA backward table (HMM backward pass)
+//! - `symbolic.matmul` — decode-step HMM MatMuls (u@emit, forward step)
+//! - `symbolic.memcpy` — belief/buffer copies and beam state movement
+//!   (the paper's memory-copy/data-transfer category)
+//! - `coordinator.beam` — candidate sort / top-k
+//!
+//! Besides wall time we account *bytes moved* and *FLOPs* per phase, so
+//! the arithmetic-intensity claim behind Fig 1 (symbolic part is
+//! bandwidth-bound: ~1 flop/byte vs the neural part's reuse) is
+//! measurable even though a CPU has no explicit host↔device memcpy.
+
+use crate::data::vocab::EOS;
+use crate::dfa::Dfa;
+use crate::generate::{ConstraintTable, DecodeConfig};
+use crate::hmm::forward::forward_step;
+use crate::hmm::Hmm;
+use crate::lm::LanguageModel;
+use crate::util::timer::PhaseTimers;
+
+/// Byte/flop accounting per phase.
+#[derive(Clone, Debug, Default)]
+pub struct OpAccounting {
+    pub neural_flops: f64,
+    pub symbolic_flops: f64,
+    pub symbolic_bytes: f64,
+    pub neural_bytes: f64,
+}
+
+/// Instrumented variant of `generate::decode` (kept structurally in sync;
+/// the uninstrumented path stays clean for the serving hot loop).
+pub fn decode_profiled(
+    lm: &dyn LanguageModel,
+    hmm: &Hmm,
+    dfa: &Dfa,
+    cfg: &DecodeConfig,
+    timers: &PhaseTimers,
+    acct: &mut OpAccounting,
+) -> crate::generate::Generation {
+    let vocab = hmm.vocab();
+    let h_n = hmm.hidden();
+    let table = timers.time("symbolic.table_build", || {
+        ConstraintTable::build(hmm, dfa, cfg.max_tokens)
+    });
+    acct.symbolic_flops +=
+        (cfg.max_tokens * dfa.n_states() * h_n * h_n * 2) as f64;
+    acct.symbolic_bytes += (cfg.max_tokens * dfa.n_states() * h_n * 8) as f64;
+
+    struct B {
+        tokens: Vec<usize>,
+        score: f64,
+        dfa_state: u32,
+        alpha: Vec<f32>,
+    }
+    let mut beams = vec![B {
+        tokens: Vec::new(),
+        score: 0.0,
+        dfa_state: dfa.start(),
+        alpha: hmm.init.clone(),
+    }];
+    let mut done: Vec<(Vec<usize>, f64, u32)> = Vec::new();
+    let mut lp = vec![0f32; vocab];
+    let mut w = vec![0f32; vocab];
+    let mut u = vec![0f32; h_n];
+
+    for t in 0..cfg.max_tokens {
+        let remaining = cfg.max_tokens - t;
+        let mut candidates: Vec<(usize, usize, f64)> = Vec::new();
+        for (bi, beam) in beams.iter().enumerate() {
+            timers.time("neural.lm_forward", || {
+                lm.next_log_probs(&beam.tokens, &mut lp)
+            });
+            acct.neural_flops += (vocab * 8) as f64; // n-gram scan estimate
+            acct.neural_bytes += (vocab * 4) as f64;
+
+            let d_def = dfa.default_next(beam.dfa_state);
+            timers.time("symbolic.memcpy", || {
+                let c_def = table.c(remaining - 1, d_def);
+                for h in 0..h_n {
+                    u[h] = beam.alpha[h] * c_def[h];
+                }
+            });
+            acct.symbolic_bytes += (h_n * 12) as f64;
+            timers.time("symbolic.matmul", || {
+                hmm.emit.vecmat(&u, &mut w);
+            });
+            acct.symbolic_flops += (h_n * vocab * 2) as f64;
+            acct.symbolic_bytes += (h_n * vocab * 4) as f64; // streams emit once
+
+            timers.time("symbolic.matmul", || {
+                for &(tok, next_d) in dfa.exceptions(beam.dfa_state) {
+                    let c_exc = table.c(remaining - 1, next_d);
+                    let mut accum = 0f64;
+                    for h in 0..h_n {
+                        accum += beam.alpha[h] as f64
+                            * hmm.emit.at(h, tok as usize) as f64
+                            * c_exc[h] as f64;
+                    }
+                    w[tok as usize] = accum as f32;
+                }
+            });
+            let eos_next = dfa.next(beam.dfa_state, EOS);
+            if dfa.is_accepting(eos_next) {
+                let mut accum = 0f64;
+                for h in 0..h_n {
+                    accum += beam.alpha[h] as f64 * hmm.emit.at(h, EOS) as f64;
+                }
+                w[EOS] = accum as f32;
+            } else {
+                w[EOS] = 0.0;
+            }
+            let z: f64 = w.iter().map(|&x| x as f64).sum();
+            if z <= 0.0 {
+                continue;
+            }
+            let log_z = z.ln();
+            for (x, (&lpx, &wx)) in lp.iter().zip(w.iter()).enumerate() {
+                if wx > 0.0 {
+                    candidates.push((
+                        bi,
+                        x,
+                        beam.score + lpx as f64 + cfg.lambda as f64 * ((wx as f64).ln() - log_z),
+                    ));
+                }
+            }
+        }
+        if candidates.is_empty() {
+            break;
+        }
+        timers.time("coordinator.beam", || {
+            candidates.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+            candidates.truncate(cfg.beam);
+        });
+        let mut next = Vec::with_capacity(cfg.beam);
+        for (bi, tok, score) in candidates {
+            let parent = &beams[bi];
+            let mut tokens = timers.time("symbolic.memcpy", || parent.tokens.clone());
+            acct.symbolic_bytes += (tokens.len() * 8) as f64;
+            tokens.push(tok);
+            let dfa_state = dfa.next(parent.dfa_state, tok);
+            if tok == EOS {
+                done.push((tokens, score, dfa_state));
+                continue;
+            }
+            let mut alpha_next = vec![0f32; h_n];
+            timers.time("symbolic.matmul", || {
+                forward_step(hmm, &parent.alpha, tok, &mut alpha_next);
+            });
+            acct.symbolic_flops += (h_n * h_n * 2) as f64;
+            acct.symbolic_bytes += (h_n * h_n * 4) as f64;
+            next.push(B { tokens, score, dfa_state, alpha: alpha_next });
+        }
+        beams = next;
+        if beams.is_empty() {
+            break;
+        }
+    }
+    let best_done = done
+        .into_iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let (mut tokens, score) = match best_done {
+        Some((t, s, _)) => (t, s),
+        None => beams
+            .into_iter()
+            .max_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+            .map(|b| (b.tokens, b.score))
+            .unwrap_or((vec![EOS], f64::NEG_INFINITY)),
+    };
+    if tokens.last() == Some(&EOS) {
+        tokens.pop();
+    }
+    let satisfied = dfa.accepts(&tokens);
+    crate::generate::Generation { tokens, score, satisfied }
+}
+
+/// One profiling run: decode `n_requests` items, return (phase report,
+/// accounting).
+pub fn profile_run(
+    lm: &dyn LanguageModel,
+    hmm: &Hmm,
+    corpus: &crate::data::Corpus,
+    items: &[crate::data::EvalItem],
+    cfg: &DecodeConfig,
+) -> (PhaseTimers, OpAccounting) {
+    let timers = PhaseTimers::new();
+    let mut acct = OpAccounting::default();
+    for item in items {
+        let keywords: Vec<Vec<usize>> = item
+            .concepts
+            .iter()
+            .map(|c| vec![corpus.vocab.id(c)])
+            .collect();
+        let dfa = Dfa::from_keywords(&keywords, corpus.vocab.len());
+        let _ = decode_profiled(lm, hmm, &dfa, cfg, &timers, &mut acct);
+    }
+    (timers, acct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Corpus;
+    use crate::hmm::em::em_step;
+    use crate::lm::NgramLm;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn profiled_decode_matches_plain_decode() {
+        let corpus = Corpus::small(700);
+        let data = corpus.sample_token_corpus(300, 31);
+        let lm = NgramLm::train(&data, corpus.vocab.len());
+        let mut rng = Rng::seeded(32);
+        let mut hmm = crate::hmm::Hmm::random(8, corpus.vocab.len(), 0.5, 0.5, &mut rng);
+        for _ in 0..4 {
+            hmm = em_step(&hmm, &data, 4, 1e-9).0;
+        }
+        let kw = corpus.vocab.id(&corpus.lexicon.nouns[0]);
+        let dfa = Dfa::from_keywords(&[vec![kw]], corpus.vocab.len());
+        let cfg = DecodeConfig { beam: 4, max_tokens: 12, ..Default::default() };
+        let plain = crate::generate::decode(&lm, &hmm, &dfa, &cfg);
+        let timers = PhaseTimers::new();
+        let mut acct = OpAccounting::default();
+        let prof = decode_profiled(&lm, &hmm, &dfa, &cfg, &timers, &mut acct);
+        assert_eq!(plain.tokens, prof.tokens, "instrumented decode diverged");
+        assert_eq!(plain.satisfied, prof.satisfied);
+        // All phases recorded.
+        let phases: Vec<String> = timers.report().into_iter().map(|r| r.0).collect();
+        for expected in ["neural.lm_forward", "symbolic.matmul", "symbolic.memcpy", "coordinator.beam", "symbolic.table_build"] {
+            assert!(phases.iter().any(|p| p == expected), "missing {expected}");
+        }
+        assert!(acct.symbolic_flops > 0.0 && acct.symbolic_bytes > 0.0);
+    }
+
+    #[test]
+    fn symbolic_intensity_is_lower_than_neural_reuse() {
+        // The Fig 1 premise: symbolic ops have low arithmetic intensity.
+        let corpus = Corpus::small(701);
+        let data = corpus.sample_token_corpus(200, 33);
+        let lm = NgramLm::train(&data, corpus.vocab.len());
+        let mut rng = Rng::seeded(34);
+        let hmm = crate::hmm::Hmm::random(16, corpus.vocab.len(), 0.3, 0.1, &mut rng);
+        let items = corpus.eval_set(4, 1, 35);
+        let cfg = DecodeConfig { beam: 4, max_tokens: 10, ..Default::default() };
+        let (_timers, acct) = profile_run(&lm, &hmm, &corpus, &items, &cfg);
+        let intensity = acct.symbolic_flops / acct.symbolic_bytes.max(1.0);
+        assert!(intensity < 4.0, "symbolic intensity {intensity} not memory-bound");
+    }
+}

@@ -1,0 +1,242 @@
+//! Quantization-aware expectation maximization (paper §III-E).
+//!
+//! EM updates weights from statistics rather than gradients, so QAT-style
+//! "fake quant in the backward pass" does not apply; instead the paper
+//! projects the weights onto the quantized cookbook every `interval`
+//! M-steps — *including the last step* — so the final model is exactly
+//! representable. The projection is Norm-Q (or K-means as the Table III
+//! alternative): `θ^{t+1} = argmax_θ E[log p(X,Z|θ)], θ ∈ cookbook^{t+1}`.
+//!
+//! The trainer records the train/test log-likelihood trace, which is what
+//! Fig 5 plots (the saw-tooth: every projection knocks LLD down, EM
+//! recovers it; the bound gap measures quantization loss).
+
+pub mod trace;
+
+use crate::hmm::em::em_step;
+use crate::hmm::forward::mean_log_likelihood;
+use crate::hmm::Hmm;
+use crate::quant::Method;
+pub use trace::{TracePoint, TrainTrace};
+
+/// Configuration for one (quantization-aware) EM run.
+#[derive(Clone, Debug)]
+pub struct QemConfig {
+    /// Projection method applied every `interval` steps; `None` = plain EM.
+    pub method: Option<Method>,
+    /// Steps between projections (paper default 20; Fig 3 sweeps it).
+    pub interval: usize,
+    /// Epochs over the chunk list (paper: 5 epochs x 20 chunks = 100).
+    pub epochs: usize,
+    /// M-step epsilon floor.
+    pub eps: f64,
+    /// Worker threads for the E-step.
+    pub threads: usize,
+    /// Evaluate test LLD at every step (costs one forward pass per test
+    /// sequence per step; disable for pure-speed runs).
+    pub eval_test: bool,
+}
+
+impl Default for QemConfig {
+    fn default() -> Self {
+        QemConfig {
+            method: None,
+            interval: 20,
+            epochs: 5,
+            eps: 1e-9,
+            threads: crate::util::threadpool::default_threads(),
+            eval_test: true,
+        }
+    }
+}
+
+/// Outcome of a training run: final model + LLD trace.
+#[derive(Clone, Debug)]
+pub struct QemResult {
+    pub model: Hmm,
+    pub trace: TrainTrace,
+}
+
+/// Run (quantization-aware) EM over chunked data.
+///
+/// Chunks are consumed one per step, cycling each epoch (paper §IV-D:
+/// "Each EM step consumes one chunk"). If `cfg.method` is set, the model
+/// is projected every `cfg.interval` steps and once more after the final
+/// step, so the returned model lies in the cookbook.
+pub fn train(init: &Hmm, chunks: &[Vec<Vec<usize>>], test: &[Vec<usize>], cfg: &QemConfig) -> QemResult {
+    assert!(!chunks.is_empty(), "no training chunks");
+    assert!(cfg.interval > 0, "interval must be >= 1");
+    let mut model = init.clone();
+    let mut trace = TrainTrace::default();
+    let total_steps = cfg.epochs * chunks.len();
+    let mut step = 0usize;
+    for _epoch in 0..cfg.epochs {
+        for chunk in chunks {
+            step += 1;
+            let (next, train_lld) = em_step(&model, chunk, cfg.threads, cfg.eps);
+            model = next;
+            let mut quantized = false;
+            if let Some(method) = cfg.method {
+                if step % cfg.interval == 0 || step == total_steps {
+                    model = method.apply(&model);
+                    quantized = true;
+                }
+            }
+            let test_lld = if cfg.eval_test && !test.is_empty() {
+                mean_log_likelihood(&model, test, cfg.threads)
+            } else {
+                f64::NAN
+            };
+            trace.points.push(TracePoint { step, train_lld, test_lld, quantized });
+        }
+    }
+    QemResult { model, trace }
+}
+
+/// Post-training quantization for comparison: plain EM then one
+/// projection at the end (the "Norm-Q" rows of Table V, vs "Norm-Q aware
+/// EM").
+pub fn train_then_quantize(
+    init: &Hmm,
+    chunks: &[Vec<Vec<usize>>],
+    test: &[Vec<usize>],
+    method: Method,
+    cfg: &QemConfig,
+) -> QemResult {
+    let mut plain_cfg = cfg.clone();
+    plain_cfg.method = None;
+    let mut result = train(init, chunks, test, &plain_cfg);
+    result.model = method.apply(&result.model);
+    if cfg.eval_test && !test.is_empty() {
+        let lld = mean_log_likelihood(&result.model, test, cfg.threads);
+        let step = result.trace.points.len() + 1;
+        result
+            .trace
+            .points
+            .push(TracePoint { step, train_lld: f64::NAN, test_lld: lld, quantized: true });
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{chunked, Corpus};
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64) -> (Hmm, Vec<Vec<Vec<usize>>>, Vec<Vec<usize>>) {
+        let corpus = Corpus::small(seed);
+        let train_data = corpus.sample_token_corpus(200, seed + 1);
+        let test_data = corpus.sample_token_corpus(40, seed + 2);
+        let mut rng = Rng::seeded(seed + 3);
+        let init = Hmm::random(8, corpus.vocab.len(), 0.5, 0.5, &mut rng);
+        (init, chunked(train_data, 5), test_data)
+    }
+
+    #[test]
+    fn qem_final_model_is_in_cookbook() {
+        let (init, chunks, test) = setup(100);
+        let cfg = QemConfig {
+            method: Some(Method::NormQ { bits: 6 }),
+            interval: 3,
+            epochs: 2,
+            eval_test: false,
+            ..Default::default()
+        };
+        let result = train(&init, &chunks, &test, &cfg);
+        // Final model was projected: it is valid and near-fixed under
+        // re-projection (Norm-Q's dequantized points are level/Σlevels,
+        // off the global 2^b grid, so exact idempotence does not hold —
+        // but a second projection must move values by at most ~one step).
+        let again = Method::NormQ { bits: 6 }.apply(&result.model);
+        assert!(result.model.trans.max_abs_diff(&again.trans) < 0.06);
+        assert!(result.model.emit.max_abs_diff(&again.emit) < 0.06);
+        assert!(result.model.is_valid(1e-3));
+    }
+
+    #[test]
+    fn qem_trace_marks_quantization_steps() {
+        let (init, chunks, test) = setup(101);
+        let cfg = QemConfig {
+            method: Some(Method::NormQ { bits: 8 }),
+            interval: 4,
+            epochs: 1,
+            eval_test: false,
+            ..Default::default()
+        };
+        let result = train(&init, &chunks, &test, &cfg);
+        assert_eq!(result.trace.points.len(), 5);
+        let q_steps: Vec<usize> = result
+            .trace
+            .points
+            .iter()
+            .filter(|p| p.quantized)
+            .map(|p| p.step)
+            .collect();
+        assert_eq!(q_steps, vec![4, 5]); // interval + final step
+    }
+
+    #[test]
+    fn plain_em_improves_train_lld() {
+        let (init, chunks, test) = setup(102);
+        let cfg = QemConfig { epochs: 3, eval_test: false, ..Default::default() };
+        let result = train(&init, &chunks, &test, &cfg);
+        let first = result.trace.points.first().unwrap().train_lld;
+        let last = result.trace.points.last().unwrap().train_lld;
+        assert!(last > first, "first={first} last={last}");
+    }
+
+    #[test]
+    fn qem_beats_ptq_on_test_lld() {
+        // The paper's Fig 4 claim: Norm-Q aware EM achieves better test
+        // likelihood than post-training Norm-Q at the same bit width.
+        let (init, chunks, test) = setup(103);
+        let bits = 4;
+        let qem_cfg = QemConfig {
+            method: Some(Method::NormQ { bits }),
+            interval: 3,
+            epochs: 3,
+            eval_test: false,
+            ..Default::default()
+        };
+        let qem = train(&init, &chunks, &test, &qem_cfg);
+        let ptq = train_then_quantize(&init, &chunks, &test, Method::NormQ { bits }, &qem_cfg);
+        let qem_lld = mean_log_likelihood(&qem.model, &test, 4);
+        let ptq_lld = mean_log_likelihood(&ptq.model, &test, 4);
+        // QEM should be comparable or better; the paper itself reports
+        // "a similar level of performance, difference less than 1%" on
+        // scores with QEM ahead on likelihood at tuned intervals — allow
+        // a 5% LLD band on this tiny setup.
+        assert!(
+            qem_lld > ptq_lld - ptq_lld.abs() * 0.05,
+            "qem={qem_lld} ptq={ptq_lld}"
+        );
+    }
+
+    #[test]
+    fn projection_dips_then_recovers() {
+        // The Fig 5 saw-tooth: train LLD right after a projection step is
+        // typically below the step before; subsequent EM steps recover.
+        let (init, chunks, test) = setup(104);
+        let cfg = QemConfig {
+            method: Some(Method::NormQ { bits: 3 }),
+            interval: 5,
+            epochs: 4,
+            eval_test: false,
+            ..Default::default()
+        };
+        let result = train(&init, &chunks, &test, &cfg);
+        let pts = &result.trace.points;
+        // Find a projection step followed by >=2 more steps.
+        let mut found_recovery = false;
+        for (i, p) in pts.iter().enumerate() {
+            if p.quantized && i + 2 < pts.len() && !pts[i + 1].quantized && !pts[i + 2].quantized {
+                if pts[i + 2].train_lld > pts[i + 1].train_lld - 1e-9 {
+                    found_recovery = true;
+                    break;
+                }
+            }
+        }
+        assert!(found_recovery, "no post-projection recovery observed");
+    }
+}

@@ -1,0 +1,180 @@
+//! Log-likelihood traces recorded during (quantization-aware) EM —
+//! the data behind Figs 4 and 5.
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TracePoint {
+    pub step: usize,
+    /// Mean train LLD of the consumed chunk under the pre-update model.
+    pub train_lld: f64,
+    /// Mean test LLD of the post-update (possibly projected) model.
+    pub test_lld: f64,
+    /// Whether a cookbook projection happened at this step.
+    pub quantized: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TrainTrace {
+    pub points: Vec<TracePoint>,
+}
+
+impl TrainTrace {
+    /// Upper/lower envelope of the saw-tooth over the converged tail
+    /// (last `tail` points): (max, min). The gap measures quantization
+    /// loss (paper §IV-D: "the gap between the upper and lower bounds").
+    pub fn oscillation_bounds(&self, tail: usize) -> Option<(f64, f64)> {
+        let pts: Vec<f64> = self
+            .points
+            .iter()
+            .rev()
+            .take(tail)
+            .map(|p| p.train_lld)
+            .filter(|v| v.is_finite())
+            .collect();
+        if pts.is_empty() {
+            return None;
+        }
+        let hi = pts.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let lo = pts.iter().cloned().fold(f64::INFINITY, f64::min);
+        Some((hi, lo))
+    }
+
+    /// First step index at which the train LLD stays within `tol` of its
+    /// final envelope — a simple convergence-point estimate (the paper
+    /// reads "converges around step 30" off the curve).
+    pub fn convergence_step(&self, tol: f64) -> Option<usize> {
+        let (hi, _lo) = self.oscillation_bounds(self.points.len().min(10))?;
+        self.points
+            .iter()
+            .find(|p| p.train_lld.is_finite() && p.train_lld >= hi - tol)
+            .map(|p| p.step)
+    }
+
+    /// Mean test LLD over the converged tail.
+    pub fn final_test_lld(&self, tail: usize) -> f64 {
+        let pts: Vec<f64> = self
+            .points
+            .iter()
+            .rev()
+            .take(tail)
+            .map(|p| p.test_lld)
+            .filter(|v| v.is_finite())
+            .collect();
+        if pts.is_empty() {
+            f64::NAN
+        } else {
+            pts.iter().sum::<f64>() / pts.len() as f64
+        }
+    }
+
+    /// Serialize for the figure-regeneration benches.
+    pub fn to_json(&self) -> Json {
+        Json::arr(self.points.iter().map(|p| {
+            Json::obj(vec![
+                ("step", Json::num(p.step as f64)),
+                ("train_lld", Json::num(p.train_lld)),
+                ("test_lld", Json::num(p.test_lld)),
+                ("quantized", Json::Bool(p.quantized)),
+            ])
+        }))
+    }
+
+    /// ASCII sparkline of the train LLD (terminal figure output).
+    pub fn sparkline(&self, width: usize) -> String {
+        const RAMP: &[u8] = b"_.-~^";
+        let vals: Vec<f64> = self
+            .points
+            .iter()
+            .map(|p| p.train_lld)
+            .filter(|v| v.is_finite())
+            .collect();
+        if vals.is_empty() {
+            return String::new();
+        }
+        let lo = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let span = (hi - lo).max(1e-12);
+        let step = (vals.len() as f64 / width.max(1) as f64).max(1.0);
+        let mut s = String::new();
+        let mut i = 0f64;
+        while (i as usize) < vals.len() && s.len() < width {
+            let v = vals[i as usize];
+            let t = (v - lo) / span;
+            s.push(RAMP[(t * (RAMP.len() - 1) as f64).round() as usize] as char);
+            i += step;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(vals: &[f64]) -> TrainTrace {
+        TrainTrace {
+            points: vals
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| TracePoint {
+                    step: i + 1,
+                    train_lld: v,
+                    test_lld: v - 1.0,
+                    quantized: false,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn bounds_capture_envelope() {
+        let t = mk(&[-90.0, -80.0, -75.0, -78.0, -74.0, -77.0]);
+        let (hi, lo) = t.oscillation_bounds(4).unwrap();
+        assert_eq!(hi, -74.0);
+        assert_eq!(lo, -78.0);
+    }
+
+    #[test]
+    fn convergence_step_finds_plateau() {
+        let t = mk(&[-100.0, -90.0, -80.0, -75.0, -74.5, -74.6, -74.4]);
+        let step = t.convergence_step(1.0).unwrap();
+        assert!(step >= 4 && step <= 5, "step={step}");
+    }
+
+    #[test]
+    fn final_test_lld_averages_tail() {
+        let t = mk(&[-10.0, -8.0, -6.0, -4.0]);
+        let v = t.final_test_lld(2);
+        assert!((v - (-6.0)).abs() < 1e-12); // mean of -7 and -5
+    }
+
+    #[test]
+    fn json_roundtrip_shape() {
+        let t = mk(&[-5.0, -4.0]);
+        let j = t.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 2);
+        assert_eq!(
+            parsed.as_arr().unwrap()[0].get("step").unwrap().as_usize(),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn sparkline_renders() {
+        let t = mk(&[-10.0, -5.0, -1.0, -5.0, -1.0]);
+        let s = t.sparkline(5);
+        assert_eq!(s.chars().count(), 5);
+        assert!(s.contains('^'));
+        assert!(s.contains('_'));
+    }
+
+    #[test]
+    fn empty_trace_is_safe() {
+        let t = TrainTrace::default();
+        assert!(t.oscillation_bounds(5).is_none());
+        assert!(t.final_test_lld(5).is_nan());
+        assert_eq!(t.sparkline(10), "");
+    }
+}

@@ -1,0 +1,161 @@
+//! Fixed-point linear quantization (paper §III-C).
+//!
+//!   Q_linear(p) = clip[round(p * (2^b - 1))] / 2^b
+//!
+//! The scale factor is `2^b` with zero point 0; levels are integers in
+//! `[0, 2^b - 1]`. This uniformly covers [0, 1), makes no assumption
+//! about the underlying distribution, and needs no stored cookbook. Small
+//! probabilities round to level 0 — the "auto-pruning" effect Table IV
+//! quantifies, and the information-loss failure Norm-Q repairs.
+
+use crate::util::mat::Mat;
+
+/// Quantize one probability to its b-bit level (integer in [0, 2^b-1]).
+#[inline]
+pub fn level(p: f32, bits: u32) -> u32 {
+    debug_assert!(bits >= 1 && bits <= 24);
+    let max_level = (1u64 << bits) - 1;
+    let scaled = (p as f64 * max_level as f64).round();
+    scaled.clamp(0.0, max_level as f64) as u32
+}
+
+/// Dequantize a level back to a fixed-point value (divide by 2^b).
+#[inline]
+pub fn dequant(level: u32, bits: u32) -> f32 {
+    (level as f64 / (1u64 << bits) as f64) as f32
+}
+
+/// Quantize-dequantize one value (the paper's Q_linear).
+#[inline]
+pub fn qdq(p: f32, bits: u32) -> f32 {
+    dequant(level(p, bits), bits)
+}
+
+/// Quantize a row of probabilities to levels.
+pub fn quantize_row(row: &[f32], bits: u32, out: &mut [u32]) {
+    debug_assert_eq!(row.len(), out.len());
+    for (o, &p) in out.iter_mut().zip(row.iter()) {
+        *o = level(p, bits);
+    }
+}
+
+/// Quantize-dequantize a whole matrix in place (no normalization — this
+/// is the raw fixed-point baseline whose sparsity Table IV reports).
+pub fn qdq_mat(m: &mut Mat, bits: u32) {
+    for v in m.data.iter_mut() {
+        *v = qdq(*v, bits);
+    }
+}
+
+/// Quantize-dequantize a vector in place.
+pub fn qdq_vec(v: &mut [f32], bits: u32) {
+    for x in v.iter_mut() {
+        *x = qdq(*x, bits);
+    }
+}
+
+/// The representable set size: 2^b points in [0, 1) ("cookbook" in the
+/// paper's terminology, though nothing is stored).
+pub fn cookbook_size(bits: u32) -> u64 {
+    1u64 << bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{gen, Prop};
+
+    #[test]
+    fn level_bounds() {
+        assert_eq!(level(0.0, 8), 0);
+        assert_eq!(level(1.0, 8), 255);
+        assert_eq!(level(2.0, 8), 255); // clipped
+        assert_eq!(level(-0.5, 8), 0); // clipped
+    }
+
+    #[test]
+    fn qdq_error_bounded_by_formula_bias() {
+        // The paper's formula scales by (2^b - 1) but divides by 2^b, so
+        // besides the half-step rounding error there is a systematic
+        // shrink of p/2^b. Total bound: (p + 0.5) / 2^b.
+        for bits in [3u32, 4, 8, 12] {
+            let denom = (1u64 << bits) as f32;
+            for i in 0..=1000 {
+                let p = i as f32 / 1000.0;
+                let bound = (p + 0.5) / denom + 1e-6;
+                assert!(
+                    (p - qdq(p, bits)).abs() <= bound,
+                    "bits={bits} p={p} qdq={}",
+                    qdq(p, bits)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn formula_shrinks_values_systematically() {
+        // qdq(p) ≈ p * (2^b - 1)/2^b — the downscale bias the Norm-Q row
+        // normalization cancels (rows are rescaled to sum to one anyway).
+        for bits in [3u32, 8] {
+            let mean_delta: f64 = (1..100)
+                .map(|i| {
+                    let p = i as f32 / 100.0;
+                    (qdq(p, bits) - p) as f64
+                })
+                .sum::<f64>()
+                / 99.0;
+            // expected bias ≈ -E[p]/2^b = -0.5/2^b
+            let expected = -0.5 / (1u64 << bits) as f64;
+            assert!(
+                (mean_delta - expected).abs() < 0.5 / (1u64 << bits) as f64,
+                "bits={bits} mean_delta={mean_delta} expected≈{expected}"
+            );
+        }
+    }
+
+    #[test]
+    fn small_values_round_to_zero() {
+        // The auto-pruning effect: p < 0.5/(2^b - 1) quantizes to 0.
+        assert_eq!(qdq(1e-5, 8), 0.0);
+        assert_eq!(qdq(1e-3, 8), 0.0);
+        assert!(qdq(3e-3, 8) > 0.0);
+    }
+
+    #[test]
+    fn near_idempotent_within_one_level() {
+        // The formula is not exactly idempotent (divide-by-2^b vs scale-
+        // by-(2^b - 1)); re-quantizing moves the level by at most one.
+        Prop::default().run("fixed-qdq-near-idempotent", |rng, _| {
+            let bits = [3u32, 4, 6, 8][rng.below_usize(4)];
+            let p = rng.f32();
+            let l1 = level(qdq(p, bits), bits);
+            let l0 = level(p, bits);
+            assert!(
+                (l1 as i64 - l0 as i64).abs() <= 1,
+                "bits={bits} p={p} l0={l0} l1={l1}"
+            );
+        });
+    }
+
+    #[test]
+    fn lower_bits_more_zeros() {
+        Prop::new(16, 77).run("fixed-sparsity-monotone", |rng, _| {
+            let m = gen::stochastic_mat(rng, 10, 64);
+            let mut m8 = m.clone();
+            let mut m3 = m.clone();
+            qdq_mat(&mut m8, 8);
+            qdq_mat(&mut m3, 3);
+            assert!(m3.zero_count() >= m8.zero_count());
+        });
+    }
+
+    #[test]
+    fn quantize_row_matches_scalar() {
+        let row = [0.0f32, 0.1, 0.5, 0.9, 1.0];
+        let mut out = [0u32; 5];
+        quantize_row(&row, 4, &mut out);
+        for (i, &p) in row.iter().enumerate() {
+            assert_eq!(out[i], level(p, 4));
+        }
+    }
+}

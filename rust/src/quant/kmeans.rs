@@ -1,0 +1,214 @@
+//! 1-D k-means codebook quantization — the clustering baseline the paper
+//! evaluates (§III-B, Table III: "Direct K-means" and "K-means during
+//! EM"). K = 2^b floating-point centroids form a stored cookbook; every
+//! weight is replaced by its nearest centroid.
+//!
+//! For one-dimensional data, Lloyd's algorithm with sorted data and
+//! boundary bisection converges quickly; we use kmeans++ style seeding by
+//! quantiles for determinism.
+
+use crate::hmm::Hmm;
+use crate::util::mat::Mat;
+
+#[derive(Clone, Debug)]
+pub struct KmeansCodebook {
+    pub centroids: Vec<f32>, // sorted ascending
+}
+
+impl KmeansCodebook {
+    /// Fit `k` centroids to `data` with at most `iters` Lloyd iterations.
+    /// Deterministic: seeds at evenly spaced quantiles of the sorted data.
+    pub fn fit(data: &[f32], k: usize, iters: usize) -> KmeansCodebook {
+        assert!(k >= 1);
+        let mut sorted: Vec<f32> = data.iter().copied().filter(|v| v.is_finite()).collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if sorted.is_empty() {
+            return KmeansCodebook { centroids: vec![0.0; k] };
+        }
+        let n = sorted.len();
+        // Quantile seeding.
+        let mut centroids: Vec<f32> = (0..k)
+            .map(|i| sorted[((i as f64 + 0.5) / k as f64 * n as f64) as usize % n])
+            .collect();
+        centroids.dedup();
+        while centroids.len() < k {
+            // Re-pad duplicates (heavily-tied data, e.g. many zeros).
+            let last = *centroids.last().unwrap();
+            centroids.push(last + (centroids.len() as f32) * f32::EPSILON.max(1e-12));
+        }
+        let mut sums = vec![0f64; k];
+        let mut counts = vec![0usize; k];
+        for _ in 0..iters {
+            sums.iter_mut().for_each(|s| *s = 0.0);
+            counts.iter_mut().for_each(|c| *c = 0);
+            // Assignment via boundary scan (centroids sorted).
+            let mut c = 0usize;
+            for &v in &sorted {
+                while c + 1 < k && (centroids[c + 1] - v).abs() <= (centroids[c] - v).abs() {
+                    c += 1;
+                }
+                // v may belong to an earlier centroid if data not visited
+                // monotonically — but sorted data + sorted centroids keep
+                // assignment monotone, so this is exact.
+                sums[c] += v as f64;
+                counts[c] += 1;
+            }
+            let mut moved = 0f64;
+            for i in 0..k {
+                if counts[i] > 0 {
+                    let next = (sums[i] / counts[i] as f64) as f32;
+                    moved += (next - centroids[i]).abs() as f64;
+                    centroids[i] = next;
+                }
+            }
+            centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            if moved < 1e-9 {
+                break;
+            }
+        }
+        KmeansCodebook { centroids }
+    }
+
+    /// Nearest centroid index (binary search on the sorted centroids).
+    #[inline]
+    pub fn assign(&self, v: f32) -> usize {
+        let cs = &self.centroids;
+        match cs.binary_search_by(|c| c.partial_cmp(&v).unwrap()) {
+            Ok(i) => i,
+            Err(i) => {
+                if i == 0 {
+                    0
+                } else if i >= cs.len() {
+                    cs.len() - 1
+                } else if (v - cs[i - 1]).abs() <= (cs[i] - v).abs() {
+                    i - 1
+                } else {
+                    i
+                }
+            }
+        }
+    }
+
+    #[inline]
+    pub fn qdq(&self, v: f32) -> f32 {
+        self.centroids[self.assign(v)]
+    }
+
+    /// Stored cookbook bytes (fp32 centroids) — counted by the
+    /// compression-rate accounting in `packed.rs`.
+    pub fn storage_bytes(&self) -> usize {
+        self.centroids.len() * 4
+    }
+}
+
+/// Replace every entry of `m` with its nearest centroid (codebook fitted
+/// on `m` itself). Returns the codebook. "Direct K-means" of Table III.
+pub fn kmeans_mat(m: &mut Mat, bits: u32, iters: usize) -> KmeansCodebook {
+    let cb = KmeansCodebook::fit(&m.data, 1usize << bits, iters);
+    for v in m.data.iter_mut() {
+        *v = cb.qdq(*v);
+    }
+    cb
+}
+
+/// K-means quantize a whole HMM; with `normalize`, rows are re-normalized
+/// afterwards ("normalized K-means", the variant run inside K-means-aware
+/// EM in Table III / Fig 5d).
+pub fn kmeans_hmm(hmm: &Hmm, bits: u32, iters: usize, normalize: bool, eps: f64) -> Hmm {
+    let mut out = hmm.clone();
+    kmeans_mat(&mut out.trans, bits, iters);
+    kmeans_mat(&mut out.emit, bits, iters);
+    let cb = KmeansCodebook::fit(&out.init, 1usize << bits.min(8), iters);
+    for v in out.init.iter_mut() {
+        *v = cb.qdq(*v);
+    }
+    if normalize {
+        out.renormalize(eps);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{gen, Prop};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn centroids_sorted_and_sized() {
+        let data: Vec<f32> = (0..1000).map(|i| (i % 97) as f32 / 97.0).collect();
+        let cb = KmeansCodebook::fit(&data, 16, 30);
+        assert_eq!(cb.centroids.len(), 16);
+        for w in cb.centroids.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn assign_picks_nearest() {
+        let cb = KmeansCodebook { centroids: vec![0.0, 0.5, 1.0] };
+        assert_eq!(cb.assign(0.1), 0);
+        assert_eq!(cb.assign(0.3), 1);
+        assert_eq!(cb.assign(0.74), 1);
+        assert_eq!(cb.assign(0.76), 2);
+        assert_eq!(cb.assign(-5.0), 0);
+        assert_eq!(cb.assign(5.0), 2);
+    }
+
+    #[test]
+    fn kmeans_reduces_distortion_vs_two_point() {
+        let mut rng = Rng::seeded(51);
+        let data: Vec<f32> = (0..2000).map(|_| rng.f32()).collect();
+        let cb16 = KmeansCodebook::fit(&data, 16, 30);
+        let cb2 = KmeansCodebook::fit(&data, 2, 30);
+        let mse = |cb: &KmeansCodebook| {
+            data.iter()
+                .map(|&v| {
+                    let d = (v - cb.qdq(v)) as f64;
+                    d * d
+                })
+                .sum::<f64>()
+        };
+        assert!(mse(&cb16) < mse(&cb2) / 4.0);
+    }
+
+    #[test]
+    fn qdq_is_idempotent() {
+        Prop::default().run("kmeans-idempotent", |rng, _| {
+            let data: Vec<f32> = (0..300).map(|_| rng.f32()).collect();
+            let cb = KmeansCodebook::fit(&data, 8, 20);
+            let v = rng.f32();
+            let once = cb.qdq(v);
+            assert_eq!(once, cb.qdq(once));
+        });
+    }
+
+    #[test]
+    fn heavy_zero_mass_keeps_a_zero_centroid() {
+        // HMM-like data: 90% zeros. K-means must park a centroid at ~0.
+        let mut data = vec![0f32; 900];
+        data.extend((0..100).map(|i| 0.5 + i as f32 / 200.0));
+        let cb = KmeansCodebook::fit(&data, 4, 30);
+        assert!(cb.centroids[0].abs() < 1e-3, "c0={}", cb.centroids[0]);
+    }
+
+    #[test]
+    fn kmeans_hmm_normalized_is_valid() {
+        Prop::new(8, 52).run("kmeans-hmm-valid", |rng, _| {
+            let m = gen::stochastic_mat(rng, 6, 20);
+            let hmm = Hmm {
+                init: rng.dirichlet_symmetric(6, 1.0),
+                trans: gen::stochastic_mat(rng, 6, 6),
+                emit: m,
+            };
+            // fix shapes: trans must be 6x6 — regenerate deterministically
+            let hmm = Hmm {
+                init: hmm.init.clone(),
+                trans: crate::util::mat::Mat::random_stochastic(6, 6, 0.5, rng),
+                emit: crate::util::mat::Mat::random_stochastic(6, 20, 0.2, rng),
+            };
+            let q = kmeans_hmm(&hmm, 4, 15, true, 1e-12);
+            assert!(q.is_valid(1e-3));
+        });
+    }
+}

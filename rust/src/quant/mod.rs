@@ -1,0 +1,134 @@
+//! The compression library — the paper's contribution plus every
+//! baseline it compares against:
+//!
+//! - [`fixed`] — fixed-point linear quantization (§III-C)
+//! - [`normq`] — **Norm-Q**: fixed-point + row-wise ε-normalization (§III-D)
+//! - [`integer`] — layer-wise integer quantization baseline (§III-B)
+//! - [`kmeans`] — 1-D k-means codebook baseline (§III-B, Table III)
+//! - [`prune`] — ratio-based magnitude pruning (§III-A, Table I)
+//! - [`packed`] — bit-packed / sparse storage + compression accounting
+//! - [`stats`] — weight-distribution analysis (Fig 2, Table IV)
+
+pub mod fixed;
+pub mod integer;
+pub mod kmeans;
+pub mod normq;
+pub mod packed;
+pub mod prune;
+pub mod stats;
+
+use crate::hmm::Hmm;
+
+/// Every compression method the paper evaluates, as one enum so sweep
+/// drivers and the CLI can select them uniformly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    /// No compression (the FP32 columns of every table).
+    Fp32,
+    /// Ratio-based pruning at the given ratio; `renorm` = "w/ norm".
+    Prune { ratio: f64, renorm: bool },
+    /// Layer-wise integer quantization at `bits`.
+    Integer { bits: u32 },
+    /// Direct 1-D k-means with 2^bits centroids; `renorm` = normalized.
+    Kmeans { bits: u32, renorm: bool },
+    /// Fixed-point linear quantization only (no normalization).
+    Fixed { bits: u32 },
+    /// Norm-Q: fixed-point linear quantization + row normalization.
+    NormQ { bits: u32 },
+}
+
+impl Method {
+    /// Apply this method to an HMM (post-training compression).
+    pub fn apply(&self, hmm: &Hmm) -> Hmm {
+        let eps = normq::DEFAULT_EPS;
+        match *self {
+            Method::Fp32 => hmm.clone(),
+            Method::Prune { ratio, renorm } => prune::prune_hmm(hmm, ratio, renorm, eps),
+            Method::Integer { bits } => {
+                let mut out = hmm.clone();
+                integer::qdq_mat_int(&mut out.trans, bits);
+                integer::qdq_mat_int(&mut out.emit, bits);
+                integer::qdq_vec_int(&mut out.init, bits);
+                out
+            }
+            Method::Kmeans { bits, renorm } => kmeans::kmeans_hmm(hmm, bits, 25, renorm, eps),
+            Method::Fixed { bits } => {
+                let mut out = hmm.clone();
+                fixed::qdq_mat(&mut out.trans, bits);
+                fixed::qdq_mat(&mut out.emit, bits);
+                fixed::qdq_vec(&mut out.init, bits);
+                out
+            }
+            Method::NormQ { bits } => normq::normq_hmm(hmm, bits, eps),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            Method::Fp32 => "FP32".into(),
+            Method::Prune { ratio, renorm } => {
+                format!("prune{:.0}%{}", ratio * 100.0, if renorm { " w/norm" } else { "" })
+            }
+            Method::Integer { bits } => format!("INT{bits}"),
+            Method::Kmeans { bits, renorm } => {
+                format!("kmeans{}{}", 1u64 << bits, if renorm { " norm" } else { "" })
+            }
+            Method::Fixed { bits } => format!("fixed{bits}"),
+            Method::NormQ { bits } => format!("Norm-Q {bits}b"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn all_methods_produce_finite_models() {
+        let mut rng = Rng::seeded(91);
+        let hmm = Hmm::random(12, 30, 0.1, 0.05, &mut rng);
+        let methods = [
+            Method::Fp32,
+            Method::Prune { ratio: 0.8, renorm: false },
+            Method::Prune { ratio: 0.9, renorm: true },
+            Method::Integer { bits: 8 },
+            Method::Kmeans { bits: 4, renorm: true },
+            Method::Fixed { bits: 8 },
+            Method::NormQ { bits: 4 },
+        ];
+        for m in methods {
+            let q = m.apply(&hmm);
+            assert!(q.trans.data.iter().all(|v| v.is_finite()), "{}", m.label());
+            assert!(q.emit.data.iter().all(|v| v.is_finite()), "{}", m.label());
+        }
+    }
+
+    #[test]
+    fn only_normalizing_methods_keep_validity_at_low_bits() {
+        let mut rng = Rng::seeded(92);
+        let hmm = Hmm::random(16, 64, 0.05, 0.02, &mut rng);
+        assert!(Method::NormQ { bits: 3 }.apply(&hmm).is_valid(1e-3));
+        assert!(Method::Kmeans { bits: 3, renorm: true }.apply(&hmm).is_valid(1e-3));
+        // Fixed-point at 3 bits on sparse rows leaves broken rows.
+        assert!(!Method::Fixed { bits: 3 }.apply(&hmm).is_valid(1e-3));
+    }
+
+    #[test]
+    fn labels_are_unique() {
+        let labels: Vec<String> = [
+            Method::Fp32,
+            Method::Integer { bits: 8 },
+            Method::Fixed { bits: 8 },
+            Method::NormQ { bits: 8 },
+            Method::Kmeans { bits: 8, renorm: false },
+        ]
+        .iter()
+        .map(|m| m.label())
+        .collect();
+        let mut dedup = labels.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), labels.len());
+    }
+}

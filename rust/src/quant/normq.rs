@@ -1,0 +1,152 @@
+//! Norm-Q: row-normalized fixed-point linear quantization — the paper's
+//! core contribution (§III-D).
+//!
+//! After fixed-point linear quantization, every row is re-normalized with
+//! an epsilon floor:
+//!
+//!   a_ij ← (a_ij + ε_j) / Σ_j (a_ij + ε_j),   ε = 1e-12 by default
+//!
+//! This (1) prevents all-zero rows — the generation-breaking failure of
+//! raw quantization/pruning, (2) restores row-stochasticity so downstream
+//! probability calculations stay correct, and (3) *extends the effective
+//! cookbook* at zero storage cost: stored values remain b-bit integer
+//! levels, but each row's dequantized points are `level / Σ levels`,
+//! a per-row grid — far more representable values model-wide than the
+//! 2^b global fixed-point grid.
+
+use crate::hmm::Hmm;
+use crate::quant::fixed;
+use crate::util::mat::Mat;
+
+pub const DEFAULT_EPS: f64 = 1e-12;
+
+/// Norm-Q one matrix in place: fixed-point quantize, then row-normalize
+/// with the epsilon floor.
+pub fn normq_mat(m: &mut Mat, bits: u32, eps: f64) {
+    fixed::qdq_mat(m, bits);
+    m.normalize_rows_eps(eps);
+}
+
+/// Norm-Q a probability vector (the initial distribution γ).
+pub fn normq_vec(v: &mut [f32], bits: u32, eps: f64) {
+    fixed::qdq_vec(v, bits);
+    let sum: f64 = v.iter().map(|&x| x as f64 + eps).sum();
+    if sum > 0.0 {
+        let inv = 1.0 / sum;
+        for x in v.iter_mut() {
+            *x = ((*x as f64 + eps) * inv) as f32;
+        }
+    }
+}
+
+/// Norm-Q an entire HMM (all three weight matrices), returning a model
+/// that is valid (row-stochastic) by construction.
+pub fn normq_hmm(hmm: &Hmm, bits: u32, eps: f64) -> Hmm {
+    let mut out = hmm.clone();
+    normq_vec(&mut out.init, bits, eps);
+    normq_mat(&mut out.trans, bits, eps);
+    normq_mat(&mut out.emit, bits, eps);
+    out
+}
+
+/// The *effective* per-row cookbook after Norm-Q: distinct dequantized
+/// values a row can take. Used by tests and by DESIGN.md's cookbook-
+/// extension argument; returns the distinct value count across the matrix.
+pub fn distinct_values(m: &Mat) -> usize {
+    let mut vals: Vec<u32> = m.data.iter().map(|v| v.to_bits()).collect();
+    vals.sort_unstable();
+    vals.dedup();
+    vals.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{gen, Prop};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn normq_restores_stochasticity() {
+        Prop::default().run("normq-stochastic", |rng, _| {
+            let mut m = gen::stochastic_mat(rng, 8, 32);
+            let bits = [2u32, 3, 4, 8][rng.below_usize(4)];
+            normq_mat(&mut m, bits, DEFAULT_EPS);
+            assert!(m.is_row_stochastic(1e-4), "bits={bits}");
+        });
+    }
+
+    #[test]
+    fn no_zero_rows_even_at_2_bits() {
+        Prop::new(32, 99).run("normq-no-dead-rows", |rng, _| {
+            let mut m = gen::stochastic_mat(rng, 8, 64);
+            normq_mat(&mut m, 2, DEFAULT_EPS);
+            for row in m.rows_iter() {
+                let sum: f64 = row.iter().map(|&x| x as f64).sum();
+                assert!(sum > 0.5, "dead row survived Norm-Q");
+            }
+        });
+    }
+
+    #[test]
+    fn normq_hmm_is_valid_at_all_bit_widths() {
+        let mut rng = Rng::seeded(41);
+        let hmm = Hmm::random(16, 50, 0.05, 0.02, &mut rng);
+        for bits in [2u32, 3, 4, 6, 8, 12] {
+            let q = normq_hmm(&hmm, bits, DEFAULT_EPS);
+            assert!(q.is_valid(1e-3), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn cookbook_extension_beats_global_grid() {
+        // With row-wise normalization the matrix-wide distinct-value count
+        // can exceed the 2^b fixed-point grid (each row has its own scale).
+        let mut rng = Rng::seeded(42);
+        let mut m = Mat::random_stochastic(64, 128, 0.2, &mut rng);
+        let bits = 4;
+        let mut fixed_only = m.clone();
+        fixed::qdq_mat(&mut fixed_only, bits);
+        let fixed_distinct = distinct_values(&fixed_only);
+        normq_mat(&mut m, bits, DEFAULT_EPS);
+        let normq_distinct = distinct_values(&m);
+        assert!(fixed_distinct <= 1 << bits);
+        assert!(
+            normq_distinct > fixed_distinct,
+            "normq={normq_distinct} fixed={fixed_distinct}"
+        );
+    }
+
+    #[test]
+    fn normq_preserves_distribution_shape() {
+        // KL(original || normq) must shrink as bits grow.
+        let mut rng = Rng::seeded(43);
+        let m = Mat::random_stochastic(16, 64, 0.3, &mut rng);
+        let kl_at = |bits: u32| {
+            let mut q = m.clone();
+            normq_mat(&mut q, bits, DEFAULT_EPS);
+            m.kl_rows(&q, 1e-12) / m.rows as f64
+        };
+        let (kl3, kl8, kl12) = (kl_at(3), kl_at(8), kl_at(12));
+        assert!(kl8 < kl3, "kl8={kl8} kl3={kl3}");
+        assert!(kl12 <= kl8 + 1e-9, "kl12={kl12} kl8={kl8}");
+        assert!(kl12 < 0.05, "kl12={kl12}");
+    }
+
+    #[test]
+    fn normq_vec_sums_to_one() {
+        let mut rng = Rng::seeded(44);
+        let mut v = rng.dirichlet_symmetric(32, 0.1);
+        normq_vec(&mut v, 3, DEFAULT_EPS);
+        let s: f64 = v.iter().map(|&x| x as f64).sum();
+        assert!((s - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn all_zero_row_becomes_uniform() {
+        let mut m = Mat::zeros(1, 8);
+        normq_mat(&mut m, 4, DEFAULT_EPS);
+        for &v in m.row(0) {
+            assert!((v - 0.125).abs() < 1e-5);
+        }
+    }
+}

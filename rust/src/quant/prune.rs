@@ -1,0 +1,116 @@
+//! Ratio-based magnitude pruning (paper §III-A, Table I).
+//!
+//! Prunes the smallest `ratio` fraction of weights to exact zero. The
+//! paper shows the HMM tolerates up to 85% pruning, collapses at 86%
+//! (all-zero rows lose distribution information irrecoverably), and that
+//! re-normalizing after pruning ("86% w/ norm") rescues generation at the
+//! cost of an ~18% success-rate hit.
+
+use crate::hmm::Hmm;
+use crate::util::mat::Mat;
+
+/// Threshold value at which `ratio` of `data` is <= threshold.
+/// Implemented by selection (sort of a copy) — called once per matrix.
+pub fn magnitude_threshold(data: &[f32], ratio: f64) -> f32 {
+    assert!((0.0..=1.0).contains(&ratio));
+    if data.is_empty() || ratio == 0.0 {
+        return f32::NEG_INFINITY;
+    }
+    let mut sorted: Vec<f32> = data.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let k = ((data.len() as f64 * ratio).ceil() as usize).min(data.len());
+    if k == 0 {
+        f32::NEG_INFINITY
+    } else {
+        sorted[k - 1]
+    }
+}
+
+/// Prune a matrix to the given ratio in place (values <= threshold → 0).
+/// Returns the achieved sparsity.
+pub fn prune_mat(m: &mut Mat, ratio: f64) -> f64 {
+    let thr = magnitude_threshold(&m.data, ratio);
+    for v in m.data.iter_mut() {
+        if *v <= thr {
+            *v = 0.0;
+        }
+    }
+    m.sparsity()
+}
+
+/// Prune an entire HMM to `ratio`; optionally renormalize rows afterwards
+/// (the "w/ norm" column of Table I).
+pub fn prune_hmm(hmm: &Hmm, ratio: f64, renorm: bool, eps: f64) -> Hmm {
+    let mut out = hmm.clone();
+    prune_mat(&mut out.trans, ratio);
+    prune_mat(&mut out.emit, ratio);
+    // γ is tiny; the paper prunes weight matrices — leave init intact.
+    if renorm {
+        out.renormalize(eps);
+    }
+    out
+}
+
+/// Count rows that became entirely zero (the information-loss signal).
+pub fn dead_rows(m: &Mat) -> usize {
+    m.rows_iter()
+        .filter(|row| row.iter().all(|&v| v == 0.0))
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{gen, Prop};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn prune_achieves_at_least_ratio() {
+        Prop::default().run("prune-ratio", |rng, _| {
+            let mut m = gen::stochastic_mat(rng, 8, 32);
+            let ratio = [0.5, 0.8, 0.86, 0.9][rng.below_usize(4)];
+            let got = prune_mat(&mut m, ratio);
+            assert!(got >= ratio - 1e-9, "asked {ratio} got {got}");
+        });
+    }
+
+    #[test]
+    fn zero_ratio_is_noop_for_positive_weights() {
+        let mut rng = Rng::seeded(61);
+        let m0 = Mat::random_stochastic(4, 8, 2.0, &mut rng);
+        let mut m = m0.clone();
+        prune_mat(&mut m, 0.0);
+        assert_eq!(m, m0);
+    }
+
+    #[test]
+    fn high_ratio_creates_dead_rows_then_norm_repairs() {
+        let mut rng = Rng::seeded(62);
+        let hmm = Hmm::random(32, 64, 0.05, 0.05, &mut rng);
+        let hard = prune_hmm(&hmm, 0.99, false, 1e-12);
+        assert!(
+            dead_rows(&hard.emit) > 0 || dead_rows(&hard.trans) > 0,
+            "expected dead rows at 99% pruning"
+        );
+        let repaired = prune_hmm(&hmm, 0.99, true, 1e-12);
+        assert!(repaired.is_valid(1e-3));
+        assert_eq!(dead_rows(&repaired.emit), 0);
+    }
+
+    #[test]
+    fn threshold_is_exact_quantile() {
+        let data = vec![0.1f32, 0.2, 0.3, 0.4];
+        assert_eq!(magnitude_threshold(&data, 0.5), 0.2);
+        assert_eq!(magnitude_threshold(&data, 1.0), 0.4);
+    }
+
+    #[test]
+    fn pruned_model_keeps_large_weights() {
+        let mut rng = Rng::seeded(63);
+        let hmm = Hmm::random(8, 16, 0.1, 0.1, &mut rng);
+        let max_before = hmm.emit.data.iter().cloned().fold(0f32, f32::max);
+        let pruned = prune_hmm(&hmm, 0.8, false, 1e-12);
+        let max_after = pruned.emit.data.iter().cloned().fold(0f32, f32::max);
+        assert_eq!(max_before, max_after);
+    }
+}

@@ -1,0 +1,138 @@
+//! Weight-distribution analysis: the histogram + max-pooled heat map of
+//! Fig 2 and the sparsity accounting of Table IV.
+
+use crate::util::mat::Mat;
+
+/// Log-scale histogram of matrix entries: buckets are
+/// [0], (0, 1e-7], (1e-7, 1e-6], ..., (1e-1, 1]. Returns (label, count).
+pub fn log_histogram(m: &Mat) -> Vec<(String, usize)> {
+    let edges = [1e-7f64, 1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0];
+    let mut counts = vec![0usize; edges.len() + 2];
+    for &v in &m.data {
+        let v = v as f64;
+        if v == 0.0 {
+            counts[0] += 1;
+        } else {
+            let mut placed = false;
+            for (i, &e) in edges.iter().enumerate() {
+                if v <= e {
+                    counts[i + 1] += 1;
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                counts[edges.len() + 1] += 1;
+            }
+        }
+    }
+    let mut out = vec![("= 0".to_string(), counts[0])];
+    let mut lo = "0".to_string();
+    for (i, &e) in edges.iter().enumerate() {
+        out.push((format!("({lo}, {e:.0e}]"), counts[i + 1]));
+        lo = format!("{e:.0e}");
+    }
+    out.push((format!("> {:.0e}", edges[edges.len() - 1]), counts[edges.len() + 1]));
+    out
+}
+
+/// Fraction of entries strictly below `threshold` (the paper's ">80%
+/// below 1e-5" observation).
+pub fn fraction_below(m: &Mat, threshold: f32) -> f64 {
+    m.data.iter().filter(|&&v| v < threshold).count() as f64 / m.data.len().max(1) as f64
+}
+
+/// Max-pool the matrix down to at most `size x size` (Fig 2's 64x64 heat
+/// map). Pool windows are ceil-divided so edge windows may be smaller.
+pub fn maxpool_heatmap(m: &Mat, size: usize) -> Mat {
+    let sr = size.min(m.rows).max(1);
+    let sc = size.min(m.cols).max(1);
+    let pr = (m.rows + sr - 1) / sr;
+    let pc = (m.cols + sc - 1) / sc;
+    let out_rows = (m.rows + pr - 1) / pr;
+    let out_cols = (m.cols + pc - 1) / pc;
+    let mut out = Mat::zeros(out_rows, out_cols);
+    for r in 0..m.rows {
+        for c in 0..m.cols {
+            let (orow, ocol) = (r / pr, c / pc);
+            let cur = out.at(orow, ocol);
+            let v = m.at(r, c);
+            if v > cur {
+                out.set(orow, ocol, v);
+            }
+        }
+    }
+    out
+}
+
+/// Render a heat map as ASCII (log-intensity ramp) for terminal output.
+pub fn ascii_heatmap(m: &Mat) -> String {
+    const RAMP: &[u8] = b" .:-=+*#%@";
+    let mut s = String::with_capacity(m.rows * (m.cols + 1));
+    for row in m.rows_iter() {
+        for &v in row {
+            let idx = if v <= 0.0 {
+                0
+            } else {
+                // map [1e-8, 1] log-scale onto the ramp
+                let t = ((v as f64).log10() + 8.0) / 8.0;
+                (t.clamp(0.0, 1.0) * (RAMP.len() - 1) as f64).round() as usize
+            };
+            s.push(RAMP[idx] as char);
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn histogram_counts_sum_to_len() {
+        let mut rng = Rng::seeded(81);
+        let m = Mat::random_stochastic(16, 64, 0.05, &mut rng);
+        let h = log_histogram(&m);
+        let total: usize = h.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, m.data.len());
+    }
+
+    #[test]
+    fn sparse_matrices_have_mass_below_1e5() {
+        // Reproduce the Fig 2 observation on spiky Dirichlet rows.
+        let mut rng = Rng::seeded(82);
+        let m = Mat::random_stochastic(64, 2048, 0.01, &mut rng);
+        assert!(fraction_below(&m, 1e-5) > 0.5, "frac={}", fraction_below(&m, 1e-5));
+    }
+
+    #[test]
+    fn maxpool_shape_and_dominance() {
+        let mut rng = Rng::seeded(83);
+        let m = Mat::random_stochastic(130, 250, 0.3, &mut rng);
+        let hm = maxpool_heatmap(&m, 64);
+        assert!(hm.rows <= 65 && hm.cols <= 64 + 1);
+        let max_in = m.data.iter().cloned().fold(0f32, f32::max);
+        let max_out = hm.data.iter().cloned().fold(0f32, f32::max);
+        assert_eq!(max_in, max_out);
+    }
+
+    #[test]
+    fn maxpool_identity_when_small() {
+        let m = Mat::from_vec(2, 2, vec![0.1, 0.2, 0.3, 0.4]);
+        let hm = maxpool_heatmap(&m, 64);
+        assert_eq!(hm, m);
+    }
+
+    #[test]
+    fn ascii_heatmap_dimensions() {
+        let m = Mat::from_vec(2, 3, vec![0.0, 1e-6, 1.0, 0.5, 1e-3, 0.0]);
+        let art = ascii_heatmap(&m);
+        let lines: Vec<&str> = art.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines.iter().all(|l| l.chars().count() == 3));
+        // zero renders as space, one as the densest glyph
+        assert_eq!(art.chars().next().unwrap(), ' ');
+    }
+}

@@ -1,0 +1,80 @@
+//! The AOT transformer LM: `artifacts/lm_logits.hlo.txt` executed via
+//! PJRT, implementing [`LanguageModel`] so the decoder and the serving
+//! coordinator can use the real (JAX-trained) neural part with zero
+//! Python on the request path.
+
+use anyhow::Result;
+use std::path::Path;
+
+use crate::lm::LanguageModel;
+use crate::runtime::weights::{read_weights, to_literals};
+use crate::runtime::{Engine, Manifest};
+
+pub struct HloLm {
+    /// The executable with the transformer weights bound as trailing
+    /// execute() arguments (flatten_params order), living inside the
+    /// engine's mutex so HloLm stays Send+Sync.
+    engine: Engine,
+    vocab: usize,
+    max_len: usize,
+}
+
+impl HloLm {
+    /// Load from an artifacts directory (manifest + lm_logits.hlo.txt +
+    /// lm_weights.bin).
+    pub fn load(manifest: &Manifest) -> Result<HloLm> {
+        let engine = Engine::load(&manifest.artifact("lm_logits.hlo.txt"))?;
+        let tensors = read_weights(&manifest.artifact("lm_weights.bin"))?;
+        engine.bind_trailing_args(to_literals(&tensors)?);
+        Ok(HloLm {
+            engine,
+            vocab: manifest.vocab_words.len(),
+            max_len: manifest.max_len,
+        })
+    }
+
+    pub fn from_path(path: &Path, weights_path: &Path, vocab: usize, max_len: usize) -> Result<HloLm> {
+        let engine = Engine::load(path)?;
+        engine.bind_trailing_args(to_literals(&read_weights(weights_path)?)?);
+        Ok(HloLm { engine, vocab, max_len })
+    }
+
+    pub fn max_len(&self) -> usize {
+        self.max_len
+    }
+
+    /// Raw call: padded token ids + true length -> log-prob vector.
+    pub fn call(&self, prefix: &[usize]) -> Result<Vec<f32>> {
+        // Keep the most recent max_len-1 tokens (the model conditions on
+        // the BOS-padded window, matching python/compile/model.py).
+        let start = prefix.len().saturating_sub(self.max_len - 1);
+        let window = &prefix[start..];
+        let mut padded: Vec<i32> = window.iter().map(|&t| t as i32).collect();
+        let len = padded.len() as i32;
+        padded.resize(self.max_len, 0);
+        let toks = xla::Literal::vec1(&padded);
+        let len_lit = xla::Literal::from(len);
+        let out = self.engine.run_with_bound(&[toks, len_lit])?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+}
+
+impl LanguageModel for HloLm {
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn next_log_probs(&self, prefix: &[usize], out: &mut [f32]) {
+        match self.call(prefix) {
+            Ok(lp) => {
+                assert_eq!(lp.len(), out.len(), "artifact vocab mismatch");
+                out.copy_from_slice(&lp);
+            }
+            Err(e) => {
+                // Fail loudly: a broken artifact must not silently produce
+                // uniform babble.
+                panic!("HloLm execution failed: {e:#}");
+            }
+        }
+    }
+}

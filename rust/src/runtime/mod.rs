@@ -1,0 +1,159 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from Rust. Python never runs
+//! here — `make artifacts` is the only place JAX executes.
+//!
+//! Interchange format is HLO **text** (not serialized HloModuleProto):
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids which
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//! See /opt/xla-example/README.md.
+
+pub mod hlolm;
+pub mod weights;
+
+pub use hlolm::HloLm;
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// A compiled HLO computation together with its own CPU PJRT client.
+///
+/// The `xla` crate's handles hold `Rc`s and raw pointers, so they are
+/// neither `Send` nor `Sync`. `Engine` owns *both* the client and the
+/// executable and serializes every interaction (creation, execution,
+/// buffer materialization, destruction) behind one `Mutex`, which makes
+/// cross-thread use sound in practice: no `Rc` refcount or PJRT handle
+/// is ever touched concurrently, and the mutex provides the necessary
+/// happens-before edges. That invariant is why the `unsafe impl`s below
+/// are justified — do not leak `xla` handles out of this module.
+pub struct Engine {
+    inner: Mutex<EngineInner>,
+    pub name: String,
+}
+
+struct EngineInner {
+    /// Kept alive for the executable's lifetime; dropped under the mutex.
+    _client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    /// Literals appended to every `run_with_bound` call (e.g. the AOT LM
+    /// weights). Living inside the mutex keeps the Send/Sync argument.
+    bound: Vec<xla::Literal>,
+}
+
+// SAFETY: see the struct-level comment — all access to the non-Send
+// internals is serialized by `inner`'s mutex, including drop (the Mutex
+// drops its contents wherever the Engine is dropped, after any execute
+// has finished).
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Create a CPU PJRT client, parse `path` (HLO text) and compile it.
+    pub fn load(path: &Path) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating CPU PJRT client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Engine {
+            inner: Mutex::new(EngineInner { _client: client, exe, bound: Vec::new() }),
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+
+    /// Execute with literal inputs; returns the result tuple as literals.
+    /// Artifacts are lowered with `return_tuple=True`, so the single
+    /// output is a tuple literal — `decompose_tuple` splits it.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let inner = self.inner.lock().unwrap();
+        let mut result = inner.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.decompose_tuple()?)
+    }
+
+    /// Bind trailing arguments (e.g. the AOT LM weights) that will be
+    /// appended to every subsequent `run_with_bound` call. The literals
+    /// live inside the engine mutex, preserving the Send/Sync invariant.
+    pub fn bind_trailing_args(&self, literals: Vec<xla::Literal>) {
+        self.inner.lock().unwrap().bound = literals;
+    }
+
+    /// Execute with `prefix` inputs followed by the bound trailing args.
+    pub fn run_with_bound(&self, prefix: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let inner = self.inner.lock().unwrap();
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(prefix.len() + inner.bound.len());
+        args.extend(prefix.iter());
+        args.extend(inner.bound.iter());
+        let mut result = inner.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        Ok(result.decompose_tuple()?)
+    }
+}
+
+/// The artifacts directory manifest written by aot.py.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab_words: Vec<String>,
+    pub max_len: usize,
+    pub hidden: usize,
+    pub seed: u64,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {:?}/manifest.json — run `make artifacts`", dir))?;
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let vocab_words = json
+            .get("vocab")
+            .and_then(|v| v.as_arr())
+            .context("manifest missing vocab")?
+            .iter()
+            .map(|w| w.as_str().unwrap_or("<unk>").to_string())
+            .collect();
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            vocab_words,
+            max_len: json.get("max_len").and_then(|v| v.as_usize()).unwrap_or(32),
+            hidden: json.get("hidden").and_then(|v| v.as_usize()).unwrap_or(64),
+            seed: json.get("seed").and_then(|v| v.as_f64()).unwrap_or(1234.0) as u64,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+}
+
+/// Evaluate the HMM forward log-likelihood via the AOT HLO graph
+/// (`hmm_forward.hlo.txt`) — used by integration tests to cross-check the
+/// native Rust forward pass against the JAX/Pallas lowering.
+pub fn hmm_forward_hlo(
+    engine: &Engine,
+    hmm: &crate::hmm::Hmm,
+    tokens: &[usize],
+    max_len: usize,
+) -> Result<f64> {
+    anyhow::ensure!(tokens.len() <= max_len, "sequence longer than artifact max_len");
+    // Pad with token 0; a length scalar masks the tail.
+    let mut padded: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+    padded.resize(max_len, 0);
+    let toks = xla::Literal::vec1(&padded);
+    let len = xla::Literal::from(tokens.len() as i32);
+    let init = xla::Literal::vec1(&hmm.init);
+    let trans = xla::Literal::vec1(&hmm.trans.data)
+        .reshape(&[hmm.trans.rows as i64, hmm.trans.cols as i64])?;
+    let emit = xla::Literal::vec1(&hmm.emit.data)
+        .reshape(&[hmm.emit.rows as i64, hmm.emit.cols as i64])?;
+    let out = engine.run(&[toks, len, init, trans, emit])?;
+    let ll = out[0].to_vec::<f32>()?;
+    Ok(ll[0] as f64)
+}

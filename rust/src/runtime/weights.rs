@@ -1,0 +1,135 @@
+//! Reader for `artifacts/lm_weights.bin`, the AOT transformer weights
+//! passed as runtime arguments to the `lm_logits` executable (HLO text
+//! elides large constants, so weights cannot live inside the module).
+//!
+//! Format (little-endian): u32 tensor_count, then per tensor —
+//! u32 name_len, name bytes, u32 ndim, u32 dims[ndim], f32 data (C order).
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct WeightTensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl WeightTensor {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+pub fn read_weights(path: &Path) -> Result<Vec<WeightTensor>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    let mut pos = 0usize;
+    let take_u32 = |pos: &mut usize| -> Result<u32> {
+        if *pos + 4 > bytes.len() {
+            bail!("truncated weights file at byte {}", *pos);
+        }
+        let v = u32::from_le_bytes(bytes[*pos..*pos + 4].try_into().unwrap());
+        *pos += 4;
+        Ok(v)
+    };
+    let count = take_u32(&mut pos)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = take_u32(&mut pos)? as usize;
+        if pos + name_len > bytes.len() {
+            bail!("truncated name");
+        }
+        let name = String::from_utf8(bytes[pos..pos + name_len].to_vec())
+            .context("non-utf8 tensor name")?;
+        pos += name_len;
+        let ndim = take_u32(&mut pos)? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(take_u32(&mut pos)? as usize);
+        }
+        let n: usize = dims.iter().product();
+        if pos + n * 4 > bytes.len() {
+            bail!("truncated data for {name}");
+        }
+        let mut data = Vec::with_capacity(n);
+        for i in 0..n {
+            data.push(f32::from_le_bytes(
+                bytes[pos + i * 4..pos + i * 4 + 4].try_into().unwrap(),
+            ));
+        }
+        pos += n * 4;
+        out.push(WeightTensor { name, dims, data });
+    }
+    if pos != bytes.len() {
+        bail!("trailing bytes in weights file ({} of {})", pos, bytes.len());
+    }
+    Ok(out)
+}
+
+/// Convert to xla literals in file order (scalar ranks handled).
+pub fn to_literals(tensors: &[WeightTensor]) -> Result<Vec<xla::Literal>> {
+    tensors
+        .iter()
+        .map(|t| {
+            let lit = xla::Literal::vec1(&t.data);
+            if t.dims.len() <= 1 {
+                Ok(lit)
+            } else {
+                let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+                Ok(lit.reshape(&dims)?)
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_test_file(path: &Path) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        // tensor "a": shape [2,3]
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(b"a").unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&3u32.to_le_bytes()).unwrap();
+        for i in 0..6 {
+            f.write_all(&(i as f32).to_le_bytes()).unwrap();
+        }
+        // tensor "bias": shape [4]
+        f.write_all(&4u32.to_le_bytes()).unwrap();
+        f.write_all(b"bias").unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&4u32.to_le_bytes()).unwrap();
+        for i in 0..4 {
+            f.write_all(&(i as f32 * 0.5).to_le_bytes()).unwrap();
+        }
+    }
+
+    #[test]
+    fn roundtrip_read() {
+        let dir = std::env::temp_dir().join("normq_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        write_test_file(&path);
+        let ts = read_weights(&path).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].name, "a");
+        assert_eq!(ts[0].dims, vec![2, 3]);
+        assert_eq!(ts[0].data, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(ts[1].name, "bias");
+        assert_eq!(ts[1].dims, vec![4]);
+    }
+
+    #[test]
+    fn truncated_file_errors() {
+        let dir = std::env::temp_dir().join("normq_weights_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, [1u8, 0, 0]).unwrap();
+        assert!(read_weights(&path).is_err());
+    }
+}

@@ -1,0 +1,108 @@
+//! Fig 1 — latency profiling of the neuro-symbolic pipeline:
+//! (a/b) per-phase breakdown of neural vs symbolic time and the
+//! memory-bound character of the symbolic part, (c) scaling factors when
+//! the HMM / LM size doubles.
+
+use crate::generate::DecodeConfig;
+use crate::hmm::Hmm;
+use crate::profile::profile_run;
+use crate::qem::{train, QemConfig};
+use crate::tables::{ExperimentContext, TableResult};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::log_info;
+
+pub fn run(args: &Args) -> Result<TableResult, String> {
+    let ctx = ExperimentContext::build(args)?;
+    let n_requests = args.usize("requests", 16)?;
+    let items = &ctx.items[..n_requests.min(ctx.items.len())];
+    let base_hidden = ctx.hmm.hidden();
+
+    let mut rows = Vec::new();
+    let mut json_obj = Vec::new();
+
+    // (a/b) phase breakdown at base size.
+    log_info!("fig1: profiling {} requests at H={base_hidden}", items.len());
+    let (timers, acct) = profile_run(&ctx.lm, &ctx.hmm, &ctx.corpus, items, &ctx.decode);
+    let total = timers.total().as_secs_f64();
+    let mut phase_json = Vec::new();
+    for (phase, dur, calls) in timers.report() {
+        let frac = dur.as_secs_f64() / total;
+        rows.push(vec![
+            phase.clone(),
+            format!("{:.2}ms", dur.as_secs_f64() * 1e3),
+            format!("{calls}"),
+            format!("{:.1}%", frac * 100.0),
+        ]);
+        phase_json.push(Json::obj(vec![
+            ("phase", Json::str(phase)),
+            ("seconds", Json::num(dur.as_secs_f64())),
+            ("fraction", Json::num(frac)),
+        ]));
+    }
+    let sym_frac = timers.fraction_matching("symbolic");
+    let sym_intensity = acct.symbolic_flops / acct.symbolic_bytes.max(1.0);
+    rows.push(vec![
+        "[symbolic fraction]".into(),
+        format!("{:.1}%", sym_frac * 100.0),
+        String::new(),
+        String::new(),
+    ]);
+    rows.push(vec![
+        "[symbolic flop/byte]".into(),
+        format!("{:.2}", sym_intensity),
+        String::new(),
+        "memory-bound < ~4".into(),
+    ]);
+
+    // (c) scaling: HMM latency factor when hidden doubles vs LM factor.
+    log_info!("fig1: scaling sweep");
+    let mut scaling_json = Vec::new();
+    let mut prev_time: Option<f64> = None;
+    for scale in [1usize, 2, 4] {
+        let hidden = base_hidden * scale;
+        let hmm = if scale == 1 {
+            ctx.hmm.clone()
+        } else {
+            let mut rng = Rng::seeded(ctx.seed + 70 + scale as u64);
+            let init = Hmm::random(hidden, ctx.corpus.vocab.len(), 0.3, 0.1, &mut rng);
+            let cfg = QemConfig { method: None, epochs: 1, threads: ctx.threads, eval_test: false, ..Default::default() };
+            train(&init, &ctx.chunks[..4.min(ctx.chunks.len())], &[], &cfg).model
+        };
+        let cfg = DecodeConfig { ..ctx.decode.clone() };
+        let (t, _) = profile_run(&ctx.lm, &hmm, &ctx.corpus, items, &cfg);
+        let sym_time: f64 = t
+            .report()
+            .iter()
+            .filter(|(p, _, _)| p.starts_with("symbolic"))
+            .map(|(_, d, _)| d.as_secs_f64())
+            .sum();
+        let factor = prev_time.map(|p| sym_time / p);
+        rows.push(vec![
+            format!("HMM H={hidden}"),
+            format!("{:.2}ms symbolic", sym_time * 1e3),
+            String::new(),
+            factor.map(|f| format!("x{:.2} vs prev", f)).unwrap_or_default(),
+        ]);
+        scaling_json.push(Json::obj(vec![
+            ("hidden", Json::num(hidden as f64)),
+            ("symbolic_seconds", Json::num(sym_time)),
+            ("factor_vs_prev", factor.map(Json::num).unwrap_or(Json::Null)),
+        ]));
+        prev_time = Some(sym_time);
+    }
+
+    json_obj.push(("phases", Json::arr(phase_json)));
+    json_obj.push(("symbolic_fraction", Json::num(sym_frac)));
+    json_obj.push(("symbolic_flop_per_byte", Json::num(sym_intensity)));
+    json_obj.push(("scaling", Json::arr(scaling_json)));
+
+    Ok(TableResult {
+        id: "fig1".into(),
+        title: "latency profile + scaling (paper Fig 1)".into(),
+        header: vec!["phase/config".into(), "time".into(), "calls".into(), "share/factor".into()],
+        rows,
+        json: Json::obj(json_obj.into_iter().map(|(k, v)| (k, v)).collect()),
+    })
+}

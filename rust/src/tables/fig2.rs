@@ -1,0 +1,61 @@
+//! Fig 2 — weight-distribution analysis of the trained HMM: log-scale
+//! histograms of the transition (α) and emission (β) matrices plus the
+//! 64×64 max-pooled heat maps. Expected shape: the overwhelming majority
+//! of entries are tiny (paper: >80% below 1e-5 at 4096×50257; the
+//! fraction shrinks with matrix size but the skew shape is identical).
+
+use crate::quant::stats::{ascii_heatmap, fraction_below, log_histogram, maxpool_heatmap};
+use crate::tables::{ExperimentContext, TableResult};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+pub fn run(args: &Args) -> Result<TableResult, String> {
+    let ctx = ExperimentContext::build(args)?;
+    let heat = args.usize("heatmap", 32)?;
+
+    let mut rows = Vec::new();
+    let mut json_obj = Vec::new();
+    for (name, m) in [("transition (α)", &ctx.hmm.trans), ("emission (β)", &ctx.hmm.emit)] {
+        let hist = log_histogram(m);
+        let total = m.data.len();
+        let mut hist_json = Vec::new();
+        for (bucket, count) in &hist {
+            rows.push(vec![
+                name.to_string(),
+                bucket.clone(),
+                format!("{count}"),
+                format!("{:.2}%", *count as f64 / total as f64 * 100.0),
+            ]);
+            hist_json.push(Json::obj(vec![
+                ("bucket", Json::str(bucket.clone())),
+                ("count", Json::num(*count as f64)),
+            ]));
+        }
+        let below = fraction_below(m, 1e-5);
+        rows.push(vec![
+            name.to_string(),
+            "< 1e-5 total".into(),
+            String::new(),
+            format!("{:.1}%", below * 100.0),
+        ]);
+        json_obj.push((
+            name.to_string(),
+            Json::obj(vec![
+                ("histogram", Json::arr(hist_json)),
+                ("fraction_below_1e-5", Json::num(below)),
+            ]),
+        ));
+        // Print the heat map to stderr (it does not fit table cells).
+        let hm = maxpool_heatmap(m, heat);
+        eprintln!("heat map {name} (max-pooled to {}x{}):", hm.rows, hm.cols);
+        eprintln!("{}", ascii_heatmap(&hm));
+    }
+
+    Ok(TableResult {
+        id: "fig2".into(),
+        title: "HMM weight distribution (paper Fig 2)".into(),
+        header: vec!["matrix".into(), "bucket".into(), "count".into(), "share".into()],
+        rows,
+        json: Json::Obj(json_obj.into_iter().map(|(k, v)| (k, v)).collect()),
+    })
+}

@@ -1,0 +1,52 @@
+//! Fig 3 — quantization-interval design space for Norm-Q aware EM:
+//! intervals {1, 2, 5, 20, 50, 100} at 4 and 8 bits, reporting final
+//! success rate and scores. Expected shape: small intervals hurt
+//! (projection too frequent destabilizes EM); there is a sweet spot
+//! (paper: 20 at 4 bits, 50 at 8 bits).
+
+use crate::eval::evaluate;
+use crate::qem::{train, QemConfig};
+use crate::quant::Method;
+use crate::tables::{score_cells, scores_json, ExperimentContext, TableResult, SCORE_HEADER};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::log_info;
+
+pub fn run(args: &Args) -> Result<TableResult, String> {
+    let ctx = ExperimentContext::build(args)?;
+    let intervals = args.usize_list("intervals", &[1, 2, 5, 20, 50, 100])?;
+    let bit_list = args.usize_list("bits", &[4, 8])?;
+    let epochs = args.usize("epochs", 5)?;
+
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    for &bits in &bit_list {
+        for &interval in &intervals {
+            log_info!("fig3: bits={bits} interval={interval}");
+            let qcfg = QemConfig {
+                method: Some(Method::NormQ { bits: bits as u32 }),
+                interval,
+                epochs,
+                threads: ctx.threads,
+                eval_test: false,
+                ..Default::default()
+            };
+            let qem = train(&ctx.hmm, &ctx.chunks, &ctx.test_data, &qcfg);
+            let (scores, _) =
+                evaluate(&ctx.lm, &qem.model, &ctx.corpus, &ctx.items, &ctx.decode, ctx.threads);
+            rows.push(score_cells(&format!("{bits}b interval={interval}"), &scores));
+            json_rows.push(Json::obj(vec![
+                ("bits", Json::num(bits as f64)),
+                ("interval", Json::num(interval as f64)),
+                ("scores", scores_json(&scores)),
+            ]));
+        }
+    }
+    Ok(TableResult {
+        id: "fig3".into(),
+        title: "quantization interval design space (paper Fig 3)".into(),
+        header: SCORE_HEADER.iter().map(|s| s.to_string()).collect(),
+        rows,
+        json: Json::arr(json_rows),
+    })
+}

@@ -1,0 +1,59 @@
+//! Fig 4 — test log-likelihood: Norm-Q aware EM vs post-hoc Norm-Q
+//! across bit widths. Expected shape: the QEM curve sits at or above the
+//! PTQ curve (training with the projection adapts the model to the
+//! cookbook).
+
+use crate::hmm::forward::mean_log_likelihood;
+use crate::qem::{train, train_then_quantize, QemConfig};
+use crate::quant::Method;
+use crate::tables::{ExperimentContext, TableResult};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::log_info;
+
+pub fn run(args: &Args) -> Result<TableResult, String> {
+    let ctx = ExperimentContext::build(args)?;
+    let bits = args.usize_list("bits", &[12, 8, 6, 5, 4, 3, 2])?;
+    let interval = args.usize("interval", 20)?;
+    let epochs = args.usize("epochs", 3)?;
+
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    let fp32_lld = mean_log_likelihood(&ctx.hmm, &ctx.test_data, ctx.threads);
+    rows.push(vec!["FP32".into(), format!("{fp32_lld:.3}"), format!("{fp32_lld:.3}"), "0.000".into()]);
+
+    for &b in &bits {
+        log_info!("fig4: bits={b}");
+        let method = Method::NormQ { bits: b as u32 };
+        let qcfg = QemConfig {
+            method: Some(method),
+            interval,
+            epochs,
+            threads: ctx.threads,
+            eval_test: false,
+            ..Default::default()
+        };
+        let qem = train(&ctx.hmm, &ctx.chunks, &ctx.test_data, &qcfg);
+        let ptq = train_then_quantize(&ctx.hmm, &ctx.chunks, &ctx.test_data, method, &qcfg);
+        let qem_lld = mean_log_likelihood(&qem.model, &ctx.test_data, ctx.threads);
+        let ptq_lld = mean_log_likelihood(&ptq.model, &ctx.test_data, ctx.threads);
+        rows.push(vec![
+            format!("{b} bits"),
+            format!("{qem_lld:.3}"),
+            format!("{ptq_lld:.3}"),
+            format!("{:+.3}", qem_lld - ptq_lld),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("bits", Json::num(b as f64)),
+            ("qem_test_lld", Json::num(qem_lld)),
+            ("ptq_test_lld", Json::num(ptq_lld)),
+        ]));
+    }
+    Ok(TableResult {
+        id: "fig4".into(),
+        title: "test LLD: Norm-Q aware EM vs Norm-Q PTQ (paper Fig 4)".into(),
+        header: vec!["bits".into(), "QEM test LLD".into(), "PTQ test LLD".into(), "QEM - PTQ".into()],
+        rows,
+        json: Json::arr(json_rows),
+    })
+}

@@ -1,0 +1,112 @@
+//! Fig 5 — log-likelihood curves during (quantization-aware) EM:
+//! (a/b) the Norm-Q-aware train/test saw-tooth with oscillation bounds,
+//! (c) final LLD vs quantization interval, (d) the K-means-aware EM
+//! curve. Expected shapes: projection steps knock LLD down and EM
+//! recovers (saw-tooth); larger intervals converge to better final LLD
+//! up to a threshold (paper: 20) beyond which it flattens.
+
+use crate::qem::{train, QemConfig};
+use crate::quant::Method;
+use crate::tables::{ExperimentContext, TableResult};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::log_info;
+
+pub fn run(args: &Args) -> Result<TableResult, String> {
+    let ctx = ExperimentContext::build(args)?;
+    let bits = args.usize("bits", 8)? as u32;
+    let intervals = args.usize_list("intervals", &[1, 2, 5, 20, 50, 100])?;
+    let epochs = args.usize("epochs", 5)?;
+
+    let mut rows = Vec::new();
+    let mut json_obj: Vec<(String, Json)> = Vec::new();
+
+    // (a/b) Norm-Q aware EM curve at interval 20 with test LLD.
+    log_info!("fig5: Norm-Q aware EM trace (interval 20, {bits} bits)");
+    let qcfg = QemConfig {
+        method: Some(Method::NormQ { bits }),
+        interval: 20,
+        epochs,
+        threads: ctx.threads,
+        eval_test: true,
+        ..Default::default()
+    };
+    let normq_run = train(&ctx.hmm, &ctx.chunks, &ctx.test_data, &qcfg);
+    eprintln!("Norm-Q EM train LLD: {}", normq_run.trace.sparkline(60));
+    if let Some((hi, lo)) = normq_run.trace.oscillation_bounds(20) {
+        rows.push(vec![
+            "Norm-Q EM bounds (tail 20)".into(),
+            format!("{hi:.3}"),
+            format!("{lo:.3}"),
+            format!("gap {:.3}", hi - lo),
+        ]);
+    }
+    if let Some(step) = normq_run.trace.convergence_step(1.0) {
+        rows.push(vec!["Norm-Q EM convergence step".into(), format!("{step}"), String::new(), String::new()]);
+    }
+    json_obj.push(("normq_trace".into(), normq_run.trace.to_json()));
+
+    // (c) final LLD per interval.
+    let mut interval_json = Vec::new();
+    for &interval in &intervals {
+        log_info!("fig5: interval sweep {interval}");
+        let qcfg = QemConfig {
+            method: Some(Method::NormQ { bits }),
+            interval,
+            epochs,
+            threads: ctx.threads,
+            eval_test: false,
+            ..Default::default()
+        };
+        let run = train(&ctx.hmm, &ctx.chunks, &ctx.test_data, &qcfg);
+        let final_lld = run
+            .trace
+            .points
+            .iter()
+            .rev()
+            .find(|p| p.train_lld.is_finite())
+            .map(|p| p.train_lld)
+            .unwrap_or(f64::NAN);
+        rows.push(vec![
+            format!("final LLD interval={interval}"),
+            format!("{final_lld:.3}"),
+            String::new(),
+            String::new(),
+        ]);
+        interval_json.push(Json::obj(vec![
+            ("interval", Json::num(interval as f64)),
+            ("final_train_lld", Json::num(final_lld)),
+        ]));
+    }
+    json_obj.push(("interval_sweep".into(), Json::arr(interval_json)));
+
+    // (d) K-means aware EM trace.
+    log_info!("fig5: K-means aware EM trace");
+    let kcfg = QemConfig {
+        method: Some(Method::Kmeans { bits, renorm: true }),
+        interval: 20,
+        epochs,
+        threads: ctx.threads,
+        eval_test: false,
+        ..Default::default()
+    };
+    let kmeans_run = train(&ctx.hmm, &ctx.chunks, &ctx.test_data, &kcfg);
+    eprintln!("K-means EM train LLD: {}", kmeans_run.trace.sparkline(60));
+    if let Some((hi, lo)) = kmeans_run.trace.oscillation_bounds(20) {
+        rows.push(vec![
+            "K-means EM bounds (tail 20)".into(),
+            format!("{hi:.3}"),
+            format!("{lo:.3}"),
+            format!("gap {:.3}", hi - lo),
+        ]);
+    }
+    json_obj.push(("kmeans_trace".into(), kmeans_run.trace.to_json()));
+
+    Ok(TableResult {
+        id: "fig5".into(),
+        title: "LLD curves during quantization-aware EM (paper Fig 5)".into(),
+        header: vec!["series".into(), "value".into(), "aux".into(), "note".into()],
+        rows,
+        json: Json::Obj(json_obj.into_iter().collect()),
+    })
+}

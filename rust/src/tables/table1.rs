@@ -1,0 +1,43 @@
+//! Table I — ratio-based pruning sweep: 50/80/85/86/90% plus "86% w/
+//! norm". Expected shape: success holds through moderate pruning, then a
+//! cliff where dead rows appear; renormalization rescues generation at a
+//! success-rate cost.
+
+use crate::eval::evaluate;
+use crate::quant::Method;
+use crate::tables::{score_cells, scores_json, ExperimentContext, TableResult, SCORE_HEADER};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::log_info;
+
+pub fn run(args: &Args) -> Result<TableResult, String> {
+    let ctx = ExperimentContext::build(args)?;
+    let ratios = args.f64_list("ratios", &[0.5, 0.8, 0.85, 0.86, 0.9])?;
+    let norm_ratio = args.f64("norm-ratio", 0.86)?;
+
+    let mut methods: Vec<Method> = ratios
+        .iter()
+        .map(|&r| Method::Prune { ratio: r, renorm: false })
+        .collect();
+    methods.push(Method::Prune { ratio: norm_ratio, renorm: true });
+
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    for m in methods {
+        log_info!("table1: {}", m.label());
+        let hmm = m.apply(&ctx.hmm);
+        let (scores, _) = evaluate(&ctx.lm, &hmm, &ctx.corpus, &ctx.items, &ctx.decode, ctx.threads);
+        rows.push(score_cells(&m.label(), &scores));
+        json_rows.push(Json::obj(vec![
+            ("method", Json::str(m.label())),
+            ("scores", scores_json(&scores)),
+        ]));
+    }
+    Ok(TableResult {
+        id: "table1".into(),
+        title: "ratio-based pruning (paper Table I)".into(),
+        header: SCORE_HEADER.iter().map(|s| s.to_string()).collect(),
+        rows,
+        json: Json::arr(json_rows),
+    })
+}

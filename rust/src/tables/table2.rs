@@ -1,0 +1,50 @@
+//! Table II — layer-wise integer quantization, FP32 → INT8. Weights are
+//! integer-quantized per tensor and activations are quantize-dequantized
+//! around the decoder's MatMuls (`act_bits`). Expected shape: success
+//! rate collapses below ~12 bits — the motivating failure of traditional
+//! NN quantization on probabilistic models.
+
+use crate::eval::evaluate;
+use crate::generate::DecodeConfig;
+use crate::quant::Method;
+use crate::tables::{score_cells, scores_json, ExperimentContext, TableResult, SCORE_HEADER};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::log_info;
+
+pub fn run(args: &Args) -> Result<TableResult, String> {
+    let ctx = ExperimentContext::build(args)?;
+    let bits = args.usize_list("bits", &[24, 16, 14, 12, 11, 10, 9, 8])?;
+
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+
+    // FP32 baseline first.
+    let (fp32, _) = evaluate(&ctx.lm, &ctx.hmm, &ctx.corpus, &ctx.items, &ctx.decode, ctx.threads);
+    rows.push(score_cells("FP32", &fp32));
+    json_rows.push(Json::obj(vec![
+        ("method", Json::str("FP32")),
+        ("scores", scores_json(&fp32)),
+    ]));
+
+    for &b in &bits {
+        let m = Method::Integer { bits: b as u32 };
+        log_info!("table2: {}", m.label());
+        let hmm = m.apply(&ctx.hmm);
+        let cfg = DecodeConfig { act_bits: Some(b as u32), ..ctx.decode.clone() };
+        let (scores, _) = evaluate(&ctx.lm, &hmm, &ctx.corpus, &ctx.items, &cfg, ctx.threads);
+        rows.push(score_cells(&m.label(), &scores));
+        json_rows.push(Json::obj(vec![
+            ("method", Json::str(m.label())),
+            ("bits", Json::num(b as f64)),
+            ("scores", scores_json(&scores)),
+        ]));
+    }
+    Ok(TableResult {
+        id: "table2".into(),
+        title: "layer-wise integer quantization (paper Table II)".into(),
+        header: SCORE_HEADER.iter().map(|s| s.to_string()).collect(),
+        rows,
+        json: Json::arr(json_rows),
+    })
+}

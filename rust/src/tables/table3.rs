@@ -1,0 +1,60 @@
+//! Table III — 256-centroid (8-bit) k-means: direct post-training
+//! clustering vs k-means-aware EM (interval 20). Expected shape: direct
+//! clustering hurts the success rate badly; training with the projection
+//! recovers a large part of it.
+
+use crate::eval::evaluate;
+use crate::qem::{train, QemConfig};
+use crate::quant::Method;
+use crate::tables::{score_cells, scores_json, ExperimentContext, TableResult, SCORE_HEADER};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::log_info;
+
+pub fn run(args: &Args) -> Result<TableResult, String> {
+    let ctx = ExperimentContext::build(args)?;
+    let bits = args.usize("bits", 8)? as u32;
+    let interval = args.usize("interval", 20)?;
+
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+
+    // Direct K-means (no renormalization — the paper's "Direct K-means").
+    let direct = Method::Kmeans { bits, renorm: false };
+    log_info!("table3: {}", direct.label());
+    let hmm_direct = direct.apply(&ctx.hmm);
+    let (s_direct, _) =
+        evaluate(&ctx.lm, &hmm_direct, &ctx.corpus, &ctx.items, &ctx.decode, ctx.threads);
+    rows.push(score_cells("Direct K-means", &s_direct));
+    json_rows.push(Json::obj(vec![
+        ("method", Json::str("direct")),
+        ("scores", scores_json(&s_direct)),
+    ]));
+
+    // K-means during EM (normalized projection, as §III-E's alternative).
+    log_info!("table3: k-means aware EM (interval {interval})");
+    let qcfg = QemConfig {
+        method: Some(Method::Kmeans { bits, renorm: true }),
+        interval,
+        epochs: args.usize("epochs", 3)?,
+        threads: ctx.threads,
+        eval_test: false,
+        ..Default::default()
+    };
+    let qem = train(&ctx.hmm, &ctx.chunks, &ctx.test_data, &qcfg);
+    let (s_qem, _) =
+        evaluate(&ctx.lm, &qem.model, &ctx.corpus, &ctx.items, &ctx.decode, ctx.threads);
+    rows.push(score_cells("K-means during EM", &s_qem));
+    json_rows.push(Json::obj(vec![
+        ("method", Json::str("during_em")),
+        ("scores", scores_json(&s_qem)),
+    ]));
+
+    Ok(TableResult {
+        id: "table3".into(),
+        title: "256-centroid k-means (paper Table III)".into(),
+        header: SCORE_HEADER.iter().map(|s| s.to_string()).collect(),
+        rows,
+        json: Json::arr(json_rows),
+    })
+}

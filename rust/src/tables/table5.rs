@@ -1,0 +1,88 @@
+//! Table V — the headline result: Norm-Q (post-training) and Norm-Q
+//! aware EM across bit widths 12 → 2 on the base HMM. Expected shape:
+//! ≤1% loss at 8 bits, graceful degradation to 3 bits (≈3% average),
+//! larger drop at 2 bits; QEM comparable to PTQ on scores. Also reports
+//! the achieved compression rate per bit width (packed sparse storage).
+
+use crate::eval::evaluate;
+use crate::qem::{train, QemConfig};
+use crate::quant::packed::CompressionReport;
+use crate::quant::Method;
+use crate::tables::{scores_json, ExperimentContext, TableResult};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::log_info;
+
+pub fn run(args: &Args) -> Result<TableResult, String> {
+    let ctx = ExperimentContext::build(args)?;
+    let bits = args.usize_list("bits", &[12, 8, 6, 5, 4, 3, 2])?;
+    let interval = args.usize("interval", 20)?;
+
+    let mut header = vec!["config".to_string(), "Success".into(), "Rouge".into(), "BLEU4".into(), "CIDEr".into(), "SPICE*".into(), "compress%".into()];
+    header.truncate(7);
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+
+    let push = |label: String, scores: crate::eval::Scores, comp: Option<f64>, json_rows: &mut Vec<Json>, rows: &mut Vec<Vec<String>>| {
+        let mut cells = vec![
+            label.clone(),
+            format!("{:.1}", scores.success_rate * 100.0),
+            format!("{:.1}", scores.rouge * 100.0),
+            format!("{:.1}", scores.bleu4 * 100.0),
+            format!("{:.2}", scores.cider * 100.0),
+            format!("{:.1}", scores.spice * 100.0),
+        ];
+        cells.push(comp.map(|c| format!("{:.4}", c * 100.0)).unwrap_or_else(|| "-".into()));
+        rows.push(cells);
+        json_rows.push(Json::obj(vec![
+            ("config", Json::str(label)),
+            ("scores", scores_json(&scores)),
+            ("compression_rate", comp.map(Json::num).unwrap_or(Json::Null)),
+        ]));
+    };
+
+    // FP32 row.
+    let (fp32, _) = evaluate(&ctx.lm, &ctx.hmm, &ctx.corpus, &ctx.items, &ctx.decode, ctx.threads);
+    push("FP32".into(), fp32, None, &mut json_rows, &mut rows);
+
+    // Norm-Q post-training quantization sweep.
+    for &b in &bits {
+        let m = Method::NormQ { bits: b as u32 };
+        log_info!("table5 PTQ: {}", m.label());
+        let hmm = m.apply(&ctx.hmm);
+        let (scores, _) = evaluate(&ctx.lm, &hmm, &ctx.corpus, &ctx.items, &ctx.decode, ctx.threads);
+        // Compression rate over α and β (γ is negligible, as the paper).
+        let rt = CompressionReport::of(&ctx.hmm.trans, b as u32);
+        let re = CompressionReport::of(&ctx.hmm.emit, b as u32);
+        let total_fp32 = (rt.fp32_bits + re.fp32_bits) as f64;
+        let total_best = (rt.dense_packed_bits.min(rt.sparse_bits)
+            + re.dense_packed_bits.min(re.sparse_bits)) as f64;
+        let comp = 1.0 - total_best / total_fp32;
+        push(format!("Norm-Q {b}b"), scores, Some(comp), &mut json_rows, &mut rows);
+    }
+
+    // Norm-Q aware EM sweep.
+    for &b in &bits {
+        log_info!("table5 QEM: Norm-Q {b}b aware EM (interval {interval})");
+        let qcfg = QemConfig {
+            method: Some(Method::NormQ { bits: b as u32 }),
+            interval,
+            epochs: args.usize("epochs", 3)?,
+            threads: ctx.threads,
+            eval_test: false,
+            ..Default::default()
+        };
+        let qem = train(&ctx.hmm, &ctx.chunks, &ctx.test_data, &qcfg);
+        let (scores, _) =
+            evaluate(&ctx.lm, &qem.model, &ctx.corpus, &ctx.items, &ctx.decode, ctx.threads);
+        push(format!("Norm-Q {b}b aware EM"), scores, None, &mut json_rows, &mut rows);
+    }
+
+    Ok(TableResult {
+        id: "table5".into(),
+        title: "Norm-Q and Norm-Q aware EM (paper Table V)".into(),
+        header,
+        rows,
+        json: Json::arr(json_rows),
+    })
+}

@@ -1,0 +1,70 @@
+//! Table VI — scalability: the Norm-Q sweep repeated at 2× and 4× the
+//! base hidden size (the paper's 8192 and 16384 vs its 4096 base).
+//! Expected shape: no deterioration — 8-bit success stays ≥99%-ish,
+//! 3-bit stays high, score loss bounded.
+
+use crate::eval::evaluate;
+use crate::qem::{train, QemConfig};
+use crate::quant::Method;
+use crate::tables::{scores_json, ExperimentContext, TableResult, SCORE_HEADER};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::log_info;
+
+pub fn run(args: &Args) -> Result<TableResult, String> {
+    let ctx = ExperimentContext::build(args)?;
+    let base_hidden = args.usize("hidden", 64)?;
+    let scales = args.usize_list("scales", &[2, 4])?;
+    let bits = args.usize_list("bits", &[12, 8, 6, 4, 3])?;
+
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+
+    for &scale in &scales {
+        let hidden = base_hidden * scale;
+        log_info!("table6: training scaled HMM hidden={hidden}");
+        let mut rng = Rng::seeded(ctx.seed + 40 + scale as u64);
+        let init = crate::hmm::Hmm::random(hidden, ctx.corpus.vocab.len(), 0.3, 0.1, &mut rng);
+        let cfg = QemConfig {
+            method: None,
+            epochs: args.usize("epochs", 3)?,
+            threads: ctx.threads,
+            eval_test: false,
+            ..Default::default()
+        };
+        let scaled = train(&init, &ctx.chunks, &ctx.test_data, &cfg).model;
+
+        // FP32 row for this scale.
+        let (fp32, _) =
+            evaluate(&ctx.lm, &scaled, &ctx.corpus, &ctx.items, &ctx.decode, ctx.threads);
+        rows.push(crate::tables::score_cells(&format!("H={hidden} FP32"), &fp32));
+        json_rows.push(Json::obj(vec![
+            ("hidden", Json::num(hidden as f64)),
+            ("config", Json::str("FP32")),
+            ("scores", scores_json(&fp32)),
+        ]));
+
+        for &b in &bits {
+            let m = Method::NormQ { bits: b as u32 };
+            log_info!("table6: H={hidden} {}", m.label());
+            let q = m.apply(&scaled);
+            let (scores, _) =
+                evaluate(&ctx.lm, &q, &ctx.corpus, &ctx.items, &ctx.decode, ctx.threads);
+            rows.push(crate::tables::score_cells(&format!("H={hidden} Norm-Q {b}b"), &scores));
+            json_rows.push(Json::obj(vec![
+                ("hidden", Json::num(hidden as f64)),
+                ("config", Json::str(format!("normq{b}"))),
+                ("scores", scores_json(&scores)),
+            ]));
+        }
+    }
+
+    Ok(TableResult {
+        id: "table6".into(),
+        title: "scaled HMMs under Norm-Q (paper Table VI)".into(),
+        header: SCORE_HEADER.iter().map(|s| s.to_string()).collect(),
+        rows,
+        json: Json::arr(json_rows),
+    })
+}

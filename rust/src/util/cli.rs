@@ -1,0 +1,159 @@
+//! Tiny command-line argument parser (clap is not in the offline crate
+//! set). Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// Option keys that expect a value (everything else parses as a flag).
+    value_keys: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program name). `value_keys` lists the
+    /// options that consume a following value when given as `--key value`.
+    pub fn parse(argv: &[String], value_keys: &[&str]) -> Result<Args, String> {
+        let mut args = Args {
+            value_keys: value_keys.iter().map(|s| s.to_string()).collect(),
+            ..Default::default()
+        };
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some(eq) = body.find('=') {
+                    let (k, v) = body.split_at(eq);
+                    args.options.insert(k.to_string(), v[1..].to_string());
+                } else if args.value_keys.iter().any(|k| k == body) {
+                    i += 1;
+                    let v = argv
+                        .get(i)
+                        .ok_or_else(|| format!("--{} expects a value", body))?;
+                    args.options.insert(body.to_string(), v.clone());
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{} expects an integer, got {:?}", name, v)),
+        }
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{} expects an integer, got {:?}", name, v)),
+        }
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{} expects a number, got {:?}", name, v)),
+        }
+    }
+
+    /// Comma-separated list of integers, e.g. `--bits 8,6,4,3`.
+    pub fn usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| format!("--{}: bad integer {:?}", name, p))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn f64_list(&self, name: &str, default: &[f64]) -> Result<Vec<f64>, String> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| format!("--{}: bad number {:?}", name, p))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::parse(
+            &argv(&["table", "--bits=8,4", "--hidden", "64", "--verbose"]),
+            &["hidden"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["table"]);
+        assert_eq!(a.get("bits"), Some("8,4"));
+        assert_eq!(a.usize("hidden", 0).unwrap(), 64);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&argv(&["--hidden"]), &["hidden"]).is_err());
+    }
+
+    #[test]
+    fn typed_getters_defaults() {
+        let a = Args::parse(&argv(&[]), &[]).unwrap();
+        assert_eq!(a.usize("n", 7).unwrap(), 7);
+        assert_eq!(a.f64("x", 2.5).unwrap(), 2.5);
+        assert_eq!(a.usize_list("bits", &[8, 4]).unwrap(), vec![8, 4]);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&argv(&["--bits=12,8,6,4,3,2"]), &[]).unwrap();
+        assert_eq!(a.usize_list("bits", &[]).unwrap(), vec![12, 8, 6, 4, 3, 2]);
+        let bad = Args::parse(&argv(&["--bits=1,x"]), &[]).unwrap();
+        assert!(bad.usize_list("bits", &[]).is_err());
+    }
+}

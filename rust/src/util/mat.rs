@@ -1,0 +1,241 @@
+//! Row-major dense matrix of `f32` with the small set of operations the
+//! HMM/quantization stack needs. Accumulations are done in `f64` where
+//! numerical drift would otherwise show up in EM statistics.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f32) -> Self {
+        Mat { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Random row-stochastic matrix (each row a Dirichlet draw).
+    pub fn random_stochastic(rows: usize, cols: usize, alpha: f64, rng: &mut Rng) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for r in 0..rows {
+            let row = rng.dirichlet_symmetric(cols, alpha);
+            m.row_mut(r).copy_from_slice(&row);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn rows_iter(&self) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(self.cols)
+    }
+
+    /// Column `c` gathered into a fresh vector (strided read).
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    /// out = v (1 x rows) @ self (rows x cols). f64 accumulators.
+    pub fn vecmat(&self, v: &[f32], out: &mut [f32]) {
+        assert_eq!(v.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        let mut acc = vec![0f64; self.cols];
+        for (r, &vr) in v.iter().enumerate() {
+            if vr == 0.0 {
+                continue;
+            }
+            let vr = vr as f64;
+            let row = self.row(r);
+            for (a, &m) in acc.iter_mut().zip(row.iter()) {
+                *a += vr * m as f64;
+            }
+        }
+        for (o, a) in out.iter_mut().zip(acc.iter()) {
+            *o = *a as f32;
+        }
+    }
+
+    /// out = self (rows x cols) @ v (cols). f64 accumulators.
+    pub fn matvec(&self, v: &[f32], out: &mut [f32]) {
+        assert_eq!(v.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        for (r, o) in out.iter_mut().enumerate() {
+            let row = self.row(r);
+            let mut acc = 0f64;
+            for (&m, &x) in row.iter().zip(v.iter()) {
+                acc += m as f64 * x as f64;
+            }
+            *o = acc as f32;
+        }
+    }
+
+    /// Normalize every row to sum to one, adding `eps` to each entry first
+    /// (the Norm-Q normalization primitive; also the EM M-step closure).
+    pub fn normalize_rows_eps(&mut self, eps: f64) {
+        let cols = self.cols;
+        for row in self.data.chunks_exact_mut(cols) {
+            let sum: f64 = row.iter().map(|&x| x as f64 + eps).sum();
+            if sum <= 0.0 {
+                let u = 1.0 / cols as f32;
+                for x in row.iter_mut() {
+                    *x = u;
+                }
+            } else {
+                let inv = 1.0 / sum;
+                for x in row.iter_mut() {
+                    *x = ((*x as f64 + eps) * inv) as f32;
+                }
+            }
+        }
+    }
+
+    /// Is every row a probability distribution (within `tol`)?
+    pub fn is_row_stochastic(&self, tol: f64) -> bool {
+        self.rows_iter().all(|row| {
+            let s: f64 = row.iter().map(|&x| x as f64).sum();
+            (s - 1.0).abs() <= tol && row.iter().all(|&x| x >= 0.0)
+        })
+    }
+
+    /// Count of exact zeros.
+    pub fn zero_count(&self) -> usize {
+        self.data.iter().filter(|&&x| x == 0.0).count()
+    }
+
+    /// Fraction of exact zeros (the "sparsity" of Table IV).
+    pub fn sparsity(&self) -> f64 {
+        self.zero_count() as f64 / self.data.len().max(1) as f64
+    }
+
+    /// Max absolute elementwise difference.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Row-wise KL divergence sum D_KL(self || other), with eps floor on
+    /// `other` to avoid log(0). Used as the quantization loss metric.
+    pub fn kl_rows(&self, other: &Mat, eps: f64) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut total = 0f64;
+        for (p_row, q_row) in self.rows_iter().zip(other.rows_iter()) {
+            for (&p, &q) in p_row.iter().zip(q_row.iter()) {
+                let p = p as f64;
+                if p > 0.0 {
+                    total += p * (p / (q as f64).max(eps)).ln();
+                }
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vecmat_matches_manual() {
+        let m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let mut out = vec![0.0; 3];
+        m.vecmat(&[2.0, 1.0], &mut out);
+        assert_eq!(out, vec![6.0, 9.0, 12.0]);
+    }
+
+    #[test]
+    fn matvec_matches_manual() {
+        let m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let mut out = vec![0.0; 2];
+        m.matvec(&[1.0, 0.0, 1.0], &mut out);
+        assert_eq!(out, vec![4.0, 10.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::seeded(1);
+        let m = Mat::random_stochastic(5, 9, 1.0, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn random_stochastic_rows_sum_to_one() {
+        let mut rng = Rng::seeded(2);
+        let m = Mat::random_stochastic(8, 16, 0.3, &mut rng);
+        assert!(m.is_row_stochastic(1e-4));
+    }
+
+    #[test]
+    fn normalize_rows_eps_restores_stochasticity() {
+        let mut m = Mat::from_vec(2, 3, vec![0.0, 0.0, 0.0, 2.0, 2.0, 0.0]);
+        m.normalize_rows_eps(1e-12);
+        assert!(m.is_row_stochastic(1e-6));
+        // all-zero row becomes uniform-ish (eps/3eps each)
+        let r0 = m.row(0);
+        assert!((r0[0] - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn kl_self_is_zero() {
+        let mut rng = Rng::seeded(3);
+        let m = Mat::random_stochastic(4, 7, 1.0, &mut rng);
+        assert!(m.kl_rows(&m, 1e-12).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kl_positive_for_different() {
+        let p = Mat::from_vec(1, 2, vec![0.9, 0.1]);
+        let q = Mat::from_vec(1, 2, vec![0.5, 0.5]);
+        assert!(p.kl_rows(&q, 1e-12) > 0.0);
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        let m = Mat::from_vec(1, 4, vec![0.0, 1.0, 0.0, 0.0]);
+        assert!((m.sparsity() - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,12 @@
+//! Foundation utilities owned by this repository (the offline crate set
+//! contains only `xla`/`anyhow`/`thiserror`, so JSON, CLI parsing, RNG,
+//! thread pools, timing and property testing are implemented here).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod mat;
+pub mod proptest;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;

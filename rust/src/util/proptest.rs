@@ -1,0 +1,105 @@
+//! A miniature property-testing driver (the real `proptest` crate is not
+//! in the offline crate set). Runs a property over many random cases from
+//! a seeded generator; on failure it reports the case index and seed so
+//! the exact case replays deterministically.
+//!
+//! No shrinking — cases are kept small by construction instead.
+
+use crate::util::rng::Rng;
+
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        Prop { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize, seed: u64) -> Self {
+        Prop { cases, seed }
+    }
+
+    /// Run `check(rng, case_index)`; the closure should panic (assert!)
+    /// on violation. We wrap to attach reproduction info.
+    pub fn run(&self, name: &str, check: impl Fn(&mut Rng, usize)) {
+        for case in 0..self.cases {
+            let mut rng = Rng::seeded(self.seed.wrapping_add(case as u64 * 0x9E37));
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                check(&mut rng, case)
+            }));
+            if let Err(err) = result {
+                let msg = err
+                    .downcast_ref::<String>()
+                    .map(|s| s.as_str())
+                    .or_else(|| err.downcast_ref::<&str>().copied())
+                    .unwrap_or("<non-string panic>");
+                panic!(
+                    "property {:?} failed at case {} (seed {:#x}): {}",
+                    name, case, self.seed, msg
+                );
+            }
+        }
+    }
+}
+
+/// Generators for common shapes used across property tests.
+pub mod gen {
+    use crate::util::mat::Mat;
+    use crate::util::rng::Rng;
+
+    /// A random row-stochastic matrix with dims in the given ranges and a
+    /// mixture of sparse and dense rows (mimicking real HMM weights).
+    pub fn stochastic_mat(rng: &mut Rng, max_rows: usize, max_cols: usize) -> Mat {
+        let rows = rng.range(1, max_rows);
+        let cols = rng.range(2, max_cols);
+        let alpha = match rng.below(3) {
+            0 => 0.02, // very sparse — the regime Fig 2 shows
+            1 => 0.3,
+            _ => 2.0,
+        };
+        Mat::random_stochastic(rows, cols, alpha, rng)
+    }
+
+    /// Random token sequence over a vocabulary of size `vocab`.
+    pub fn tokens(rng: &mut Rng, vocab: usize, max_len: usize) -> Vec<usize> {
+        let len = rng.range(1, max_len);
+        (0..len).map(|_| rng.below_usize(vocab)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Prop::default().run("tautology", |rng, _| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\" failed")]
+    fn failing_property_reports() {
+        Prop::new(3, 42).run("always-fails", |_, _| {
+            assert!(false, "intentional");
+        });
+    }
+
+    #[test]
+    fn generators_produce_valid_shapes() {
+        Prop::default().run("gen-shapes", |rng, _| {
+            let m = gen::stochastic_mat(rng, 8, 12);
+            assert!(m.rows >= 1 && m.cols >= 2);
+            assert!(m.is_row_stochastic(1e-3));
+            let t = gen::tokens(rng, 50, 10);
+            assert!(!t.is_empty());
+            assert!(t.iter().all(|&x| x < 50));
+        });
+    }
+}

@@ -1,0 +1,168 @@
+//! A small fixed-size thread pool with scoped parallel-map helpers.
+//!
+//! `rayon`/`tokio` are not in the offline crate set; EM training and the
+//! benchmark sweeps are embarrassingly parallel over sequences, so a
+//! simple std-thread pool with a channel-fed queue is all we need.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Number of workers to use by default: respects `NORMQ_THREADS`,
+/// otherwise available parallelism, capped to 16.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("NORMQ_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Run `f(i)` for every `i in 0..n` across `threads` workers using scoped
+/// threads (no 'static bound on the closure). Work is distributed by an
+/// atomic counter so uneven items balance naturally.
+pub fn parallel_for<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Parallel map: applies `f` to every item of `items`, preserving order.
+pub fn parallel_map<T, U, F>(items: &[T], threads: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send + Default + Clone,
+    F: Fn(&T) -> U + Sync,
+{
+    let mut out = vec![U::default(); items.len()];
+    {
+        let slots: Vec<Mutex<&mut U>> = out.iter_mut().map(Mutex::new).collect();
+        parallel_for(items.len(), threads, |i| {
+            let v = f(&items[i]);
+            **slots[i].lock().unwrap() = v;
+        });
+    }
+    out
+}
+
+/// Parallel fold: each worker folds a private accumulator over a shard of
+/// `0..n`, then accumulators are merged. Used by EM to merge sufficient
+/// statistics without locking in the inner loop.
+pub fn parallel_fold<A, F, M>(n: usize, threads: usize, init: impl Fn() -> A + Sync, fold: F, merge: M) -> A
+where
+    A: Send,
+    F: Fn(&mut A, usize) + Sync,
+    M: Fn(A, A) -> A,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        let mut acc = init();
+        for i in 0..n {
+            fold(&mut acc, i);
+        }
+        return acc;
+    }
+    let next = AtomicUsize::new(0);
+    let results: Arc<Mutex<Vec<A>>> = Arc::new(Mutex::new(Vec::with_capacity(threads)));
+    thread::scope(|scope| {
+        for _ in 0..threads {
+            let results = Arc::clone(&results);
+            let next = &next;
+            let init = &init;
+            let fold = &fold;
+            scope.spawn(move || {
+                let mut acc = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    fold(&mut acc, i);
+                }
+                results.lock().unwrap().push(acc);
+            });
+        }
+    });
+    let mut results = Arc::try_unwrap(results).ok().unwrap().into_inner().unwrap();
+    let mut acc = results.pop().unwrap_or_else(&init);
+    for a in results {
+        acc = merge(acc, a);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_visits_every_index_once() {
+        let counts: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(1000, 8, |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let out = parallel_map(&items, 7, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_fold_sums_correctly() {
+        let total = parallel_fold(
+            10_000,
+            6,
+            || 0u64,
+            |acc, i| *acc += i as u64,
+            |a, b| a + b,
+        );
+        assert_eq!(total, (0..10_000u64).sum());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let sum = AtomicU64::new(0);
+        parallel_for(10, 1, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn zero_items_is_noop() {
+        parallel_for(0, 4, |_| panic!("should not run"));
+        let v: Vec<u32> = parallel_map(&[] as &[u32], 4, |&x| x);
+        assert!(v.is_empty());
+    }
+}

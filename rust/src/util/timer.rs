@@ -1,0 +1,172 @@
+//! Phase timers and a tiny stats helper used by the profiler (Fig 1
+//! reproduction), the coordinator metrics, and the hand-rolled benchmark
+//! harness (criterion is not in the offline crate set).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Accumulates wall time and call counts per named phase.
+/// Thread-safe; phases are created on first use.
+#[derive(Default, Debug)]
+pub struct PhaseTimers {
+    inner: Mutex<BTreeMap<String, (Duration, u64)>>,
+}
+
+impl PhaseTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under the given phase name.
+    pub fn time<T>(&self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed());
+        out
+    }
+
+    pub fn add(&self, phase: &str, d: Duration) {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(phase.to_string()).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    /// (phase, total, calls) sorted by descending total.
+    pub fn report(&self) -> Vec<(String, Duration, u64)> {
+        let m = self.inner.lock().unwrap();
+        let mut rows: Vec<_> = m.iter().map(|(k, (d, n))| (k.clone(), *d, *n)).collect();
+        rows.sort_by(|a, b| b.1.cmp(&a.1));
+        rows
+    }
+
+    pub fn total(&self) -> Duration {
+        self.inner.lock().unwrap().values().map(|(d, _)| *d).sum()
+    }
+
+    /// Fraction of total time spent in phases whose name contains `pat`.
+    pub fn fraction_matching(&self, pat: &str) -> f64 {
+        let total = self.total().as_secs_f64();
+        if total == 0.0 {
+            return 0.0;
+        }
+        let m = self.inner.lock().unwrap();
+        let matched: f64 = m
+            .iter()
+            .filter(|(k, _)| k.contains(pat))
+            .map(|(_, (d, _))| d.as_secs_f64())
+            .sum();
+        matched / total
+    }
+
+    pub fn reset(&self) {
+        self.inner.lock().unwrap().clear();
+    }
+}
+
+/// Simple summary statistics over a sample of durations (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn of(samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty());
+        let n = samples.len();
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let q = |p: f64| sorted[(((n - 1) as f64) * p).round() as usize];
+        Stats {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p50: q(0.5),
+            p95: q(0.95),
+            max: sorted[n - 1],
+        }
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs then `iters` timed runs.
+/// Returns per-iteration seconds.
+pub fn bench_seconds(warmup: usize, iters: usize, mut f: impl FnMut()) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    out
+}
+
+/// Format seconds human-readably (ns/µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timers_accumulate() {
+        let t = PhaseTimers::new();
+        t.time("a", || std::thread::sleep(Duration::from_millis(2)));
+        t.time("a", || {});
+        t.time("b", || {});
+        let rows = t.report();
+        assert_eq!(rows.len(), 2);
+        let a = rows.iter().find(|r| r.0 == "a").unwrap();
+        assert_eq!(a.2, 2);
+        assert!(a.1 >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn fraction_matching_works() {
+        let t = PhaseTimers::new();
+        t.add("symbolic.memcpy", Duration::from_millis(95));
+        t.add("neural.matmul", Duration::from_millis(5));
+        let f = t.fraction_matching("symbolic");
+        assert!((f - 0.95).abs() < 0.01, "f={f}");
+    }
+
+    #[test]
+    fn stats_sane() {
+        let s = Stats::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_secs(2e-9).ends_with("ns"));
+        assert!(fmt_secs(2e-6).ends_with("µs"));
+        assert!(fmt_secs(2e-3).ends_with("ms"));
+        assert!(fmt_secs(2.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,125 @@
+//! Integration tests: the whole Layer-3 pipeline — corpus → LM + EM →
+//! compression → constrained generation → metrics — including the
+//! paper's qualitative claims at reduced scale.
+
+use normq::data::{chunked, Corpus};
+use normq::eval::evaluate;
+use normq::generate::DecodeConfig;
+use normq::hmm::Hmm;
+use normq::lm::NgramLm;
+use normq::qem::{train, QemConfig};
+use normq::quant::Method;
+use normq::util::rng::Rng;
+
+struct Pipeline {
+    corpus: Corpus,
+    lm: NgramLm,
+    hmm: Hmm,
+    items: Vec<normq::data::EvalItem>,
+    cfg: DecodeConfig,
+}
+
+fn build_pipeline() -> Pipeline {
+    let corpus = Corpus::small(12345);
+    let data = corpus.sample_token_corpus(1200, 1);
+    let lm = NgramLm::train(&data, corpus.vocab.len());
+    let mut rng = Rng::seeded(2);
+    let init = Hmm::random(16, corpus.vocab.len(), 0.3, 0.1, &mut rng);
+    let qcfg = QemConfig { method: None, epochs: 3, eval_test: false, ..Default::default() };
+    let hmm = train(&init, &chunked(data, 8), &[], &qcfg).model;
+    let items = corpus.eval_set(40, 2, 3);
+    let cfg = DecodeConfig { beam: 6, max_tokens: 18, ..Default::default() };
+    Pipeline { corpus, lm, hmm, items, cfg }
+}
+
+fn eval_with(p: &Pipeline, m: Method) -> normq::eval::Scores {
+    let hmm = m.apply(&p.hmm);
+    evaluate(&p.lm, &hmm, &p.corpus, &p.items, &p.cfg, 8).0
+}
+
+#[test]
+fn fp32_pipeline_has_high_success() {
+    let p = build_pipeline();
+    let s = eval_with(&p, Method::Fp32);
+    assert!(s.success_rate >= 0.9, "FP32 success {}", s.success_rate);
+    assert!(s.rouge > 0.25, "rouge {}", s.rouge);
+}
+
+#[test]
+fn normq_8bit_matches_fp32_within_noise() {
+    // The headline claim: 8-bit Norm-Q ≈ lossless.
+    let p = build_pipeline();
+    let fp32 = eval_with(&p, Method::Fp32);
+    let nq8 = eval_with(&p, Method::NormQ { bits: 8 });
+    assert!(
+        nq8.success_rate >= fp32.success_rate - 0.05,
+        "normq8 {} vs fp32 {}",
+        nq8.success_rate,
+        fp32.success_rate
+    );
+    assert!(
+        nq8.mean_quality() >= fp32.mean_quality() - 0.05,
+        "quality normq8 {} vs fp32 {}",
+        nq8.mean_quality(),
+        fp32.mean_quality()
+    );
+}
+
+#[test]
+fn normq_beats_integer_at_8_bits() {
+    // Table II vs Table V: integer INT8 collapses, Norm-Q 8b holds.
+    let p = build_pipeline();
+    let nq = eval_with(&p, Method::NormQ { bits: 8 });
+    let int = eval_with(&p, Method::Integer { bits: 8 });
+    assert!(
+        nq.success_rate >= int.success_rate,
+        "normq {} < int8 {}",
+        nq.success_rate,
+        int.success_rate
+    );
+}
+
+#[test]
+fn normq_graceful_down_to_3_bits() {
+    let p = build_pipeline();
+    let nq3 = eval_with(&p, Method::NormQ { bits: 3 });
+    // Paper: 3-bit loses only a few percent. Generous floor at small scale.
+    assert!(nq3.success_rate >= 0.6, "normq3 success {}", nq3.success_rate);
+}
+
+#[test]
+fn overpruning_without_norm_collapses_and_norm_rescues() {
+    // The Table I cliff, at this scale's threshold (small models tolerate
+    // more pruning; use 99% to force dead rows).
+    let p = build_pipeline();
+    let hard = eval_with(&p, Method::Prune { ratio: 0.997, renorm: false });
+    let rescued = eval_with(&p, Method::Prune { ratio: 0.997, renorm: true });
+    assert!(
+        rescued.success_rate >= hard.success_rate,
+        "norm did not rescue: {} vs {}",
+        rescued.success_rate,
+        hard.success_rate
+    );
+}
+
+#[test]
+fn qem_training_produces_servable_model() {
+    let corpus = Corpus::small(999);
+    let data = corpus.sample_token_corpus(800, 7);
+    let lm = NgramLm::train(&data, corpus.vocab.len());
+    let mut rng = Rng::seeded(8);
+    let init = Hmm::random(12, corpus.vocab.len(), 0.3, 0.1, &mut rng);
+    let qcfg = QemConfig {
+        method: Some(Method::NormQ { bits: 6 }),
+        interval: 4,
+        epochs: 2,
+        eval_test: false,
+        ..Default::default()
+    };
+    let model = train(&init, &chunked(data, 6), &[], &qcfg).model;
+    assert!(model.is_valid(1e-3));
+    let items = corpus.eval_set(20, 1, 9);
+    let cfg = DecodeConfig { beam: 6, max_tokens: 18, ..Default::default() };
+    let (scores, _) = evaluate(&lm, &model, &corpus, &items, &cfg, 4);
+    assert!(scores.success_rate >= 0.7, "QEM model success {}", scores.success_rate);
+}

@@ -1,0 +1,157 @@
+//! Robustness and failure-injection integration tests: fuzzed JSON,
+//! quantized-model inference invariants, coordinator under stress.
+
+use normq::data::Corpus;
+use normq::hmm::forward::{forward, log_likelihood};
+use normq::hmm::Hmm;
+use normq::quant::Method;
+use normq::util::json::Json;
+use normq::util::proptest::Prop;
+use normq::util::rng::Rng;
+
+#[test]
+fn json_fuzz_never_panics_and_roundtrips_valid_docs() {
+    // Random bytes must parse-or-error, never panic; random *valid*
+    // documents must round-trip exactly.
+    Prop::new(300, 0xFEED).run("json-fuzz", |rng, case| {
+        if case % 2 == 0 {
+            // garbage bytes (printable-ish to hit the parser paths)
+            let len = rng.range(0, 40);
+            let s: String = (0..len)
+                .map(|_| {
+                    let c = rng.below(96) as u8 + 32;
+                    c as char
+                })
+                .collect();
+            let _ = Json::parse(&s); // must not panic
+        } else {
+            // random valid document
+            fn gen_value(rng: &mut Rng, depth: usize) -> Json {
+                match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+                    0 => Json::Null,
+                    1 => Json::Bool(rng.below(2) == 0),
+                    2 => Json::Num((rng.f64() - 0.5) * 1e6),
+                    3 => Json::Str(format!("s{}\n\"x\\{}", rng.below(100), rng.below(10))),
+                    4 => Json::Arr((0..rng.range(0, 4)).map(|_| gen_value(rng, depth + 1)).collect()),
+                    _ => Json::Obj(
+                        (0..rng.range(0, 4))
+                            .map(|i| (format!("k{i}"), gen_value(rng, depth + 1)))
+                            .collect(),
+                    ),
+                }
+            }
+            let v = gen_value(rng, 0);
+            let text = v.to_string();
+            let parsed = Json::parse(&text).expect("serialized JSON must parse");
+            // Numbers survive to f64 precision; compare re-serialization.
+            assert_eq!(parsed.to_string(), text);
+        }
+    });
+}
+
+#[test]
+fn quantized_models_never_produce_nan_likelihoods() {
+    Prop::new(40, 0xBEEF).run("quantized-ll-finite-or-neginf", |rng, _| {
+        let h = rng.range(2, 10);
+        let v = rng.range(4, 30);
+        let hmm = Hmm::random(h, v, 0.1, 0.05, rng);
+        let method = match rng.below(4) {
+            0 => Method::NormQ { bits: [2u32, 3, 8][rng.below_usize(3)] },
+            1 => Method::Fixed { bits: 3 },
+            2 => Method::Integer { bits: 4 },
+            _ => Method::Prune { ratio: 0.95, renorm: rng.below(2) == 0 },
+        };
+        let q = method.apply(&hmm);
+        let tokens: Vec<usize> = (0..rng.range(1, 12)).map(|_| rng.below_usize(v)).collect();
+        let ll = log_likelihood(&q, &tokens);
+        assert!(!ll.is_nan(), "{} produced NaN", method.label());
+        // Filtering distributions stay normalized (or uniform-reset).
+        let fwd = forward(&q, &tokens);
+        for a in &fwd.alphas {
+            let s: f64 = a.iter().map(|&x| x as f64).sum();
+            assert!((s - 1.0).abs() < 1e-3, "{}: alpha sum {s}", method.label());
+            assert!(a.iter().all(|x| !x.is_nan()));
+        }
+    });
+}
+
+#[test]
+fn normq_likelihood_converges_to_fp32_with_bits() {
+    // KL-style sanity: LLD(normq_b) → LLD(fp32) monotonically-ish in b.
+    let mut rng = Rng::seeded(0xCAFE);
+    let hmm = Hmm::random(12, 40, 0.1, 0.05, &mut rng);
+    let seqs: Vec<Vec<usize>> = (0..30).map(|_| hmm.sample(10, &mut rng)).collect();
+    let lld = |m: &Hmm| -> f64 {
+        seqs.iter().map(|s| log_likelihood(m, s)).sum::<f64>() / seqs.len() as f64
+    };
+    let base = lld(&hmm);
+    let err_at = |bits: u32| (lld(&Method::NormQ { bits }.apply(&hmm)) - base).abs();
+    let (e3, e8, e12) = (err_at(3), err_at(8), err_at(12));
+    assert!(e8 < e3, "e8={e8} e3={e3}");
+    assert!(e12 < e8 + 0.1, "e12={e12} e8={e8}");
+    assert!(e12 < 0.2, "12-bit Norm-Q should be near-exact, err={e12}");
+}
+
+#[test]
+fn coordinator_survives_burst_load_with_mixed_concepts() {
+    use normq::coordinator::{Server, ServerConfig};
+    use normq::generate::DecodeConfig;
+    use std::sync::Arc;
+
+    let corpus = Corpus::small(4242);
+    let data = corpus.sample_token_corpus(400, 1);
+    let lm = Arc::new(normq::lm::NgramLm::train(&data, corpus.vocab.len()));
+    let mut rng = Rng::seeded(2);
+    let mut hmm = Hmm::random(8, corpus.vocab.len(), 0.5, 0.5, &mut rng);
+    for _ in 0..3 {
+        hmm = normq::hmm::em::em_step(&hmm, &data, 4, 1e-9).0;
+    }
+    let cfg = ServerConfig {
+        workers: 4,
+        queue_capacity: 512,
+        decode: DecodeConfig { beam: 3, max_tokens: 10, ..Default::default() },
+        ..Default::default()
+    };
+    let server = Server::start(lm, hmm, corpus.clone(), cfg);
+    // Burst: 120 requests over 12 distinct concept sets.
+    let mut rxs = Vec::new();
+    for i in 0..120 {
+        let c = vec![corpus.lexicon.nouns[i % 12].clone()];
+        if let Ok(rx) = server.submit(c) {
+            rxs.push(rx);
+        }
+    }
+    let mut completed = 0;
+    for rx in rxs {
+        if rx.recv_timeout(std::time::Duration::from_secs(60)).is_ok() {
+            completed += 1;
+        }
+    }
+    assert!(completed >= 100, "only {completed}/120 completed");
+    // Table cache: at most 12 misses despite 120 requests.
+    let misses = server
+        .metrics()
+        .table_cache_misses
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(misses <= 12, "cache misses {misses} > concept sets");
+    server.shutdown();
+}
+
+#[test]
+fn decode_handles_unsatisfiable_budget_gracefully() {
+    // A 4-keyword constraint with a 2-token budget is unsatisfiable; the
+    // decoder must terminate and report satisfied=false.
+    let corpus = Corpus::small(777);
+    let data = corpus.sample_token_corpus(200, 1);
+    let lm = normq::lm::NgramLm::train(&data, corpus.vocab.len());
+    let mut rng = Rng::seeded(3);
+    let hmm = Hmm::random(6, corpus.vocab.len(), 0.5, 0.5, &mut rng);
+    let keywords: Vec<Vec<usize>> = (0..4)
+        .map(|i| vec![corpus.vocab.id(&corpus.lexicon.nouns[i])])
+        .collect();
+    let dfa = normq::dfa::Dfa::from_keywords(&keywords, corpus.vocab.len());
+    let cfg = normq::generate::DecodeConfig { beam: 4, max_tokens: 2, ..Default::default() };
+    let gen = normq::generate::decode(&lm, &hmm, &dfa, &cfg);
+    assert!(!gen.satisfied);
+    assert!(gen.tokens.len() <= 2);
+}

@@ -1,0 +1,104 @@
+//! Runtime integration tests against the AOT artifacts. These require
+//! `make artifacts` to have run; they skip (with a loud message) when
+//! artifacts are absent so `cargo test` works on a fresh checkout.
+
+use std::path::Path;
+
+use normq::data::Corpus;
+use normq::hmm::Hmm;
+use normq::lm::LanguageModel;
+use normq::runtime::{Engine, HloLm, Manifest};
+use normq::util::rng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    let dir = Path::new("artifacts");
+    match Manifest::load(dir) {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_vocab_matches_rust_corpus() {
+    let Some(m) = manifest() else { return };
+    let corpus = Corpus::new(m.seed);
+    assert_eq!(m.vocab_words.len(), corpus.vocab.len(), "vocab size parity");
+    // Spot-check exact word-by-word parity (python mirror vs rust).
+    for (i, w) in m.vocab_words.iter().enumerate() {
+        assert_eq!(w, corpus.vocab.word(i), "vocab mismatch at {i}");
+    }
+}
+
+#[test]
+fn hlo_lm_distributions_normalize_and_vary() {
+    let Some(m) = manifest() else { return };
+    let lm = HloLm::load(&m).expect("load lm artifact");
+    let mut out1 = vec![0f32; lm.vocab()];
+    let mut out2 = vec![0f32; lm.vocab()];
+    lm.next_log_probs(&[], &mut out1);
+    lm.next_log_probs(&[2, 50], &mut out2);
+    for out in [&out1, &out2] {
+        let sum: f64 = out.iter().map(|&l| (l as f64).exp()).sum();
+        assert!((sum - 1.0).abs() < 1e-2, "sum={sum}");
+    }
+    // Different prefixes must give different distributions.
+    let diff: f32 = out1
+        .iter()
+        .zip(out2.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(diff > 1e-3, "LM ignores its prefix");
+}
+
+#[test]
+fn hmm_forward_artifact_matches_native_across_models() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::load(&m.artifact("hmm_forward.hlo.txt")).expect("load hmm artifact");
+    let mut rng = Rng::seeded(99);
+    for trial in 0..3 {
+        let hmm = Hmm::random(m.hidden, m.vocab_words.len(), 0.3, 0.1, &mut rng);
+        let len = 5 + trial * 7;
+        let tokens: Vec<usize> = (0..len).map(|_| rng.below_usize(hmm.vocab())).collect();
+        let hlo = normq::runtime::hmm_forward_hlo(&engine, &hmm, &tokens, m.max_len)
+            .expect("hlo execute");
+        let native = normq::hmm::forward::log_likelihood(&hmm, &tokens);
+        assert!(
+            (hlo - native).abs() < 1e-3,
+            "trial {trial}: hlo={hlo} native={native}"
+        );
+    }
+}
+
+#[test]
+fn hlo_lm_drives_constrained_generation() {
+    // The full neuro-symbolic path with the real (AOT) neural part.
+    let Some(m) = manifest() else { return };
+    let corpus = Corpus::new(m.seed);
+    let lm = HloLm::load(&m).expect("load lm artifact");
+    let data = corpus.sample_token_corpus(1500, m.seed + 50);
+    let mut rng = Rng::seeded(m.seed + 51);
+    let init = Hmm::random(16, corpus.vocab.len(), 0.3, 0.1, &mut rng);
+    let qcfg = normq::qem::QemConfig { method: None, epochs: 2, eval_test: false, ..Default::default() };
+    let hmm = normq::qem::train(&init, &normq::data::chunked(data, 5), &[], &qcfg).model;
+    let hmm = normq::quant::Method::NormQ { bits: 8 }.apply(&hmm);
+
+    let items = corpus.eval_set(5, 1, m.seed + 52);
+    let cfg = normq::generate::DecodeConfig { beam: 4, max_tokens: 16, ..Default::default() };
+    let mut satisfied = 0;
+    for item in &items {
+        let keywords: Vec<Vec<usize>> = item
+            .concepts
+            .iter()
+            .map(|c| vec![corpus.vocab.id(c)])
+            .collect();
+        let dfa = normq::dfa::Dfa::from_keywords(&keywords, corpus.vocab.len());
+        let gen = normq::generate::decode(&lm, &hmm, &dfa, &cfg);
+        if gen.satisfied {
+            satisfied += 1;
+        }
+    }
+    assert!(satisfied >= 3, "only {satisfied}/5 satisfied with HLO LM");
+}
