@@ -4,9 +4,11 @@
 //!   lowered by `make artifacts`) and executes it via PJRT — the actual
 //!   neural part, no Python anywhere in this process.
 //! - Layer 3: Norm-Q-compresses the EM-trained HMM, starts the serving
-//!   coordinator, and drives it with batched constrained-generation
-//!   requests, reporting success rate, latency percentiles and
-//!   throughput (recorded in EXPERIMENTS.md §End-to-end).
+//!   coordinator behind an admission-control stack (load-shed →
+//!   concurrency-limit → timeout → coordinator), and drives it with
+//!   concurrent client threads issuing constrained-generation requests,
+//!   reporting success rate, latency percentiles, shed/timeout counts
+//!   and throughput (recorded in EXPERIMENTS.md §End-to-end).
 //!
 //! Falls back to the native n-gram LM with a warning if artifacts are
 //! missing, so the example always runs.
@@ -14,9 +16,9 @@
 //! Run: make artifacts && cargo run --release --example e2e_serving
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use normq::coordinator::{Server, ServerConfig};
+use normq::coordinator::{ServeRequest, Server, ServerConfig};
 use normq::data::{chunked, Corpus};
 use normq::generate::DecodeConfig;
 use normq::hmm::Hmm;
@@ -24,6 +26,7 @@ use normq::lm::{LanguageModel, NgramLm};
 use normq::qem::{train, QemConfig};
 use normq::quant::Method;
 use normq::runtime::{HloLm, Manifest};
+use normq::service::{drive_closed_loop, Stack};
 use normq::util::rng::Rng;
 
 fn main() {
@@ -71,46 +74,57 @@ fn main() {
     };
     let hmm = train(&init, &chunked(train_data, 20), &[], &qcfg).model;
 
-    // --- serve ---
+    // --- serve: coordinator behind the admission-control stack ---
     let cfg = ServerConfig {
         decode: DecodeConfig { beam: 8, max_tokens: 24, ..Default::default() },
         ..Default::default()
     };
+    let workers = cfg.workers;
     println!("starting coordinator: {} workers, queue {}", cfg.workers, cfg.queue_capacity);
-    let server = Server::start(lm, hmm, corpus.clone(), cfg);
+    let server = Arc::new(Server::start(lm, hmm, corpus.clone(), cfg));
+    let metrics = server.metrics_handle();
+    // Shed before queueing collapses, bound in-flight work, and give
+    // every request a hard 30s deadline that the decode loop honors.
+    // The concurrency limit is set *below* the client count so the
+    // shed path is actually exercised and its counter shows up in the
+    // report.
+    let climit = (workers * 2).max(2);
+    let svc = Stack::new()
+        .load_shed(Arc::clone(&metrics))
+        .concurrency_limit(climit)
+        .timeout(Duration::from_secs(30), Arc::clone(&metrics))
+        .service(Arc::clone(&server));
+    println!("admission stack: load_shed -> concurrency_limit({climit}) -> timeout(30s)");
 
     let items = corpus.eval_set(n_requests, 1, 79);
+    let clients = (workers * 4).max(4);
     let t0 = Instant::now();
-    let rxs: Vec<_> = items
-        .iter()
-        .filter_map(|item| server.submit(item.concepts.clone()).ok())
-        .collect();
-    let mut satisfied = 0usize;
-    let mut shown = 0usize;
-    for rx in &rxs {
-        if let Ok(resp) = rx.recv() {
-            if resp.satisfied {
-                satisfied += 1;
-            }
-            if shown < 5 {
-                println!(
-                    "  [{}] ({:>6.1}ms) {}",
-                    if resp.satisfied { "ok " } else { "MISS" },
-                    resp.latency.as_secs_f64() * 1e3,
-                    resp.text
-                );
-                shown += 1;
-            }
-        }
-    }
+    let results = drive_closed_loop(&svc, clients, n_requests, |i| {
+        let item = &items[i % items.len()];
+        ServeRequest::new(item.concepts.clone())
+    });
     let wall = t0.elapsed().as_secs_f64();
+    for resp in results.iter().filter_map(|r| r.as_ref().ok()).take(5) {
+        println!(
+            "  [{}] ({:>6.1}ms) {}",
+            if resp.satisfied { "ok " } else { "MISS" },
+            resp.latency.as_secs_f64() * 1e3,
+            resp.text
+        );
+    }
+    let ok = results.iter().filter(|r| r.is_ok()).count();
+    let satisfied = results
+        .iter()
+        .filter(|r| matches!(r, Ok(resp) if resp.satisfied))
+        .count();
 
     println!("\n== e2e report ==");
     println!("neural part    : {}", if used_hlo { "AOT HLO transformer (PJRT)" } else { "native n-gram (fallback)" });
-    println!("requests       : {}", rxs.len());
-    println!("success rate   : {:.1}%", satisfied as f64 / rxs.len().max(1) as f64 * 100.0);
+    println!("requests       : {n_requests} ({clients} client threads)");
+    println!("completed      : {ok} (rejected/timed out: {})", results.len() - ok);
+    println!("success rate   : {:.1}%", satisfied as f64 / ok.max(1) as f64 * 100.0);
     println!("wall time      : {wall:.2}s");
-    println!("throughput     : {:.2} req/s", rxs.len() as f64 / wall);
+    println!("throughput     : {:.2} req/s", ok as f64 / wall);
     println!("metrics        : {}", server.metrics().summary());
     server.shutdown();
 }

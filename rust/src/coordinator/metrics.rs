@@ -1,27 +1,132 @@
-//! Serving metrics registry: atomic counters + latency reservoir.
+//! Serving metrics registry: atomic counters + bounded latency reservoirs.
+//!
+//! Counters cover the whole admission path: intake (`submitted`,
+//! `rejected`), the middleware stack (`shed`, `timed_out`, `hedged`,
+//! `hedge_wins` — see [`crate::service`]), and the decode plane
+//! (`completed`, `satisfied`, table-cache hits/misses). Latency and
+//! queue-wait samples go through fixed-size reservoir sampling
+//! (Vitter's Algorithm R) so memory stays bounded under sustained
+//! traffic while quantiles remain an unbiased estimate of the full
+//! stream.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::util::rng::Rng;
 use crate::util::timer::Stats;
 
-#[derive(Default)]
+/// Default reservoir capacity: large enough for stable p99 estimates,
+/// small enough (~32 KB per reservoir) to hold for days of traffic.
+pub const RESERVOIR_CAP: usize = 4096;
+
+/// Fixed-size uniform sample of an unbounded stream (Algorithm R).
+/// After `seen` pushes every element has probability `cap/seen` of
+/// being in the sample, so quantiles computed over the sample are
+/// unbiased estimates of the stream quantiles.
+#[derive(Debug)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f64>,
+    rng: Rng,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Reservoir {
+            cap,
+            seen: 0,
+            samples: Vec::with_capacity(cap.min(1024)),
+            rng: Rng::seeded(0x5EED_CAFE),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            let j = self.rng.below(self.seen) as usize;
+            if j < self.cap {
+                self.samples[j] = x;
+            }
+        }
+    }
+
+    /// Total values observed (not the sample size).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+}
+
+#[derive(Debug)]
 pub struct Metrics {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
+    /// Bounced at the coordinator intake (queue full).
     pub rejected: AtomicU64,
     pub satisfied: AtomicU64,
     pub table_cache_hits: AtomicU64,
     pub table_cache_misses: AtomicU64,
-    /// end-to-end latencies (seconds)
-    latencies: Mutex<Vec<f64>>,
+    /// Rejected by the `LoadShed` middleware before reaching the queue.
+    pub shed: AtomicU64,
+    /// Requests whose deadline fired (`Timeout` middleware).
+    pub timed_out: AtomicU64,
+    /// Requests the `Hedge` middleware re-dispatched.
+    pub hedged: AtomicU64,
+    /// Hedged requests where the second dispatch answered first.
+    pub hedge_wins: AtomicU64,
+    /// Approximate intake-queue depth (requests accepted but not yet
+    /// picked up by the dispatcher).
+    pub queue_depth: AtomicU64,
+    /// Requests admitted and not yet answered, wherever they sit
+    /// (intake queue, batch channel, or a decode worker). This is the
+    /// admission signal behind `Server::poll_ready`: the intake queue
+    /// alone drains into the dispatcher too fast to reflect saturation.
+    pub in_flight: AtomicU64,
+    /// end-to-end latencies (seconds), reservoir-sampled
+    latencies: Mutex<Reservoir>,
     /// time spent queued before a worker picked the request up
-    queue_waits: Mutex<Vec<f64>>,
+    queue_waits: Mutex<Reservoir>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::with_reservoir(RESERVOIR_CAP)
+    }
 }
 
 impl Metrics {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    pub fn with_reservoir(cap: usize) -> Self {
+        Metrics {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            satisfied: AtomicU64::new(0),
+            table_cache_hits: AtomicU64::new(0),
+            table_cache_misses: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            timed_out: AtomicU64::new(0),
+            hedged: AtomicU64::new(0),
+            hedge_wins: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
+            latencies: Mutex::new(Reservoir::new(cap)),
+            queue_waits: Mutex::new(Reservoir::new(cap)),
+        }
     }
 
     pub fn record_latency(&self, total: f64, queued: f64) {
@@ -34,7 +139,7 @@ impl Metrics {
         if l.is_empty() {
             None
         } else {
-            Some(Stats::of(&l))
+            Some(Stats::of(l.samples()))
         }
     }
 
@@ -43,7 +148,7 @@ impl Metrics {
         if q.is_empty() {
             None
         } else {
-            Some(Stats::of(&q))
+            Some(Stats::of(q.samples()))
         }
     }
 
@@ -52,18 +157,23 @@ impl Metrics {
             .latency_stats()
             .map(|s| {
                 format!(
-                    "latency p50={} p95={} max={}",
+                    "latency p50={} p95={} p99={} max={}",
                     crate::util::timer::fmt_secs(s.p50),
                     crate::util::timer::fmt_secs(s.p95),
+                    crate::util::timer::fmt_secs(s.p99),
                     crate::util::timer::fmt_secs(s.max)
                 )
             })
             .unwrap_or_else(|| "latency n/a".into());
         format!(
-            "submitted={} completed={} rejected={} satisfied={} cache h/m={}/{} {}",
+            "submitted={} completed={} rejected={} shed={} timed_out={} hedged={} hedge_wins={} satisfied={} cache h/m={}/{} {}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
+            self.timed_out.load(Ordering::Relaxed),
+            self.hedged.load(Ordering::Relaxed),
+            self.hedge_wins.load(Ordering::Relaxed),
             self.satisfied.load(Ordering::Relaxed),
             self.table_cache_hits.load(Ordering::Relaxed),
             self.table_cache_misses.load(Ordering::Relaxed),
@@ -94,5 +204,43 @@ mod tests {
         let m = Metrics::new();
         assert!(m.latency_stats().is_none());
         assert!(m.summary().contains("n/a"));
+    }
+
+    #[test]
+    fn reservoir_stays_bounded() {
+        let mut r = Reservoir::new(64);
+        for i in 0..100_000 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.samples().len(), 64);
+        assert_eq!(r.seen(), 100_000);
+    }
+
+    #[test]
+    fn reservoir_quantiles_track_the_stream() {
+        // Uniform stream 0..50_000: a 1024-sample reservoir's median must
+        // land near 25_000 (sampling is deterministic via the seeded RNG).
+        let mut r = Reservoir::new(1024);
+        for i in 0..50_000 {
+            r.push(i as f64);
+        }
+        let s = Stats::of(r.samples());
+        assert_eq!(s.n, 1024);
+        assert!(
+            (s.p50 - 25_000.0).abs() < 2_500.0,
+            "reservoir median drifted: {}",
+            s.p50
+        );
+        assert!(s.min >= 0.0 && s.max < 50_000.0);
+    }
+
+    #[test]
+    fn metrics_latency_memory_is_bounded() {
+        let m = Metrics::with_reservoir(32);
+        for i in 0..10_000 {
+            m.record_latency(i as f64 * 1e-4, 1e-5);
+        }
+        let s = m.latency_stats().unwrap();
+        assert_eq!(s.n, 32, "reservoir must cap retained samples");
     }
 }

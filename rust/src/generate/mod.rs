@@ -38,11 +38,17 @@ pub struct DecodeConfig {
     /// Layer-wise activation quantization around the decode MatMuls
     /// (Table II's integer baseline). `None` = full precision.
     pub act_bits: Option<u32>,
+    /// Cooperative deadline (admission-control timeout, propagated by
+    /// the serving path): the beam loop stops at the first token step
+    /// past this instant and returns the best prefix found so far,
+    /// marked [`Generation::timed_out`]. Checked once per step, so the
+    /// overshoot is at most one step's worth of work.
+    pub deadline: Option<std::time::Instant>,
 }
 
 impl Default for DecodeConfig {
     fn default() -> Self {
-        DecodeConfig { beam: 8, max_tokens: 32, lambda: 1.0, act_bits: None }
+        DecodeConfig { beam: 8, max_tokens: 32, lambda: 1.0, act_bits: None, deadline: None }
     }
 }
 
@@ -63,6 +69,8 @@ pub struct Generation {
     pub score: f64,
     /// Whether the DFA accepted (all keywords present).
     pub satisfied: bool,
+    /// Decoding was cut short by [`DecodeConfig::deadline`].
+    pub timed_out: bool,
 }
 
 /// Quantize-dequantize an activation vector (layer-wise integer mode).
@@ -108,7 +116,14 @@ pub fn decode_with_table(
     let mut w = vec![0f32; vocab];
     let mut u = vec![0f32; h_n];
 
+    let mut timed_out = false;
     for t in 0..cfg.max_tokens {
+        if let Some(d) = cfg.deadline {
+            if std::time::Instant::now() >= d {
+                timed_out = true;
+                break;
+            }
+        }
         let remaining = cfg.max_tokens - t; // tokens left including this one
         let mut candidates: Vec<(usize, usize, f64)> = Vec::new(); // (beam, tok, score)
         for (bi, beam) in beams.iter().enumerate() {
@@ -230,7 +245,7 @@ pub fn decode_with_table(
         tokens.pop();
     }
     let satisfied = dfa.accepts(&tokens);
-    Generation { tokens, score: best.score, satisfied }
+    Generation { tokens, score: best.score, satisfied, timed_out }
 }
 
 #[cfg(test)]
@@ -319,6 +334,38 @@ mod tests {
         let gen = decode(&lm, &hmm, &dfa, &cfg);
         // Must not panic; tokens stay in-vocab.
         assert!(gen.tokens.iter().all(|&t| t < corpus.vocab.len()));
+    }
+
+    #[test]
+    fn expired_deadline_stops_decoding_immediately() {
+        let (corpus, lm, hmm) = setup();
+        let kw = corpus.vocab.id(&corpus.lexicon.nouns[0]);
+        let dfa = Dfa::from_keywords(&[vec![kw]], corpus.vocab.len());
+        let cfg = DecodeConfig {
+            beam: 6,
+            max_tokens: 16,
+            deadline: Some(std::time::Instant::now()),
+            ..Default::default()
+        };
+        let gen = decode(&lm, &hmm, &dfa, &cfg);
+        assert!(gen.timed_out);
+        assert!(gen.tokens.is_empty(), "no step should run: {:?}", gen.tokens);
+    }
+
+    #[test]
+    fn generous_deadline_does_not_interfere() {
+        let (corpus, lm, hmm) = setup();
+        let kw = corpus.vocab.id(&corpus.lexicon.nouns[0]);
+        let dfa = Dfa::from_keywords(&[vec![kw]], corpus.vocab.len());
+        let base = DecodeConfig { beam: 6, max_tokens: 16, ..Default::default() };
+        let timed = DecodeConfig {
+            deadline: Some(std::time::Instant::now() + std::time::Duration::from_secs(600)),
+            ..base.clone()
+        };
+        let a = decode(&lm, &hmm, &dfa, &base);
+        let b = decode(&lm, &hmm, &dfa, &timed);
+        assert!(!b.timed_out);
+        assert_eq!(a.tokens, b.tokens);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //!   HMM substrate, the Norm-Q compression library, DFA constraint engine,
 //!   Ctrl-G style constrained decoder, evaluation metrics, the experiment
 //!   drivers for every table/figure in the paper, and a request-serving
-//!   runtime.
+//!   runtime fronted by an admission-control middleware stack.
 //! - **Layer 2 (python/compile, build-time)** — JAX compute graphs (tiny
 //!   transformer LM, HMM forward/backward) AOT-lowered to HLO text.
 //! - **Layer 1 (python/compile/kernels, build-time)** — Pallas kernels for
@@ -16,6 +16,20 @@
 //!
 //! Python never runs on the request path: `make artifacts` lowers
 //! everything once; the Rust binary loads `artifacts/*.hlo.txt` via PJRT.
+//!
+//! ## Module map (request path, outside in)
+//!
+//! - [`service`] — tower-style admission control between clients and the
+//!   coordinator: `Service`/`Layer` traits, load-shed, rate-limit,
+//!   concurrency-limit, timeout (deadline propagation) and hedging
+//!   middlewares, composed with `service::Stack`.
+//! - [`coordinator`] — bounded intake queue, concept-set batching
+//!   dispatcher, decode worker pool, table cache, serving metrics. The
+//!   `Server` implements `service::Service` and sits at the bottom of
+//!   the stack.
+//! - [`generate`] — the constrained beam decoder (honors per-request
+//!   deadlines via `DecodeConfig::deadline`).
+//! - [`runtime`] — PJRT execution of the AOT-lowered neural artifacts.
 
 pub mod util;
 
@@ -36,3 +50,4 @@ pub mod tables;
 
 pub mod coordinator;
 pub mod runtime;
+pub mod service;

@@ -9,13 +9,17 @@
 
 use std::sync::Arc;
 
-use normq::coordinator::{Server, ServerConfig};
+use normq::coordinator::{Response as CoordResponse, ServeRequest, Server, ServerConfig};
 use normq::data::Corpus;
 use normq::generate::DecodeConfig;
 use normq::lm::NgramLm;
 use normq::log_info;
 use normq::quant::packed::CompressionReport;
 use normq::quant::Method;
+use normq::service::{
+    ConcurrencyLimitLayer, HedgeLayer, Layer, LoadShedLayer, RateLimitLayer, SharedService,
+    TimeoutLayer,
+};
 use normq::tables::{run_experiment, ExperimentContext};
 use normq::util::cli::Args;
 
@@ -26,6 +30,8 @@ USAGE:
   normq table <1|2|3|4|5|6|fig1..fig5> [--hidden N] [--items N] [--bits ..]
   normq quantize [--hidden N] [--bits 8] [--method normq|fixed|int|kmeans]
   normq serve [--requests N] [--workers N] [--use-hlo-lm] [--bits N]
+              [--clients N] [--shed] [--climit N] [--rate RPS] [--burst N]
+              [--timeout-ms MS] [--hedge-ms MS]
   normq smoke [--artifacts DIR]
   normq corpus [--n N] [--eval]
 
@@ -35,6 +41,12 @@ Common options:
   --train N       training sentences (default 8000)
   --threads N     worker threads (default: cores, cap 16)
   --seed N        experiment seed (default 1234)
+
+Admission control (serve): each flag enables one middleware layer in
+front of the coordinator, outermost first: --shed (reject at
+saturation), --rate/--burst (token bucket), --climit (in-flight cap),
+--timeout-ms (deadline into the decode loop), --hedge-ms (re-dispatch
+slow requests).
 ";
 
 fn main() {
@@ -47,7 +59,8 @@ fn main() {
     let mut value_keys: Vec<&str> = ExperimentContext::VALUE_KEYS.to_vec();
     value_keys.extend([
         "bits", "ratios", "norm-ratio", "interval", "intervals", "scales", "method", "requests",
-        "workers", "artifacts", "n", "out", "heatmap", "queue",
+        "workers", "artifacts", "n", "out", "heatmap", "queue", "clients", "climit", "rate",
+        "burst", "timeout-ms", "hedge-ms",
     ]);
     let args = match Args::parse(&argv, &value_keys) {
         Ok(a) => a,
@@ -141,8 +154,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         ))
     };
 
+    let workers = args.usize("workers", normq::util::threadpool::default_threads())?;
     let cfg = ServerConfig {
-        workers: args.usize("workers", normq::util::threadpool::default_threads())?,
+        workers,
         queue_capacity: args.usize("queue", 256)?,
         decode: DecodeConfig {
             beam: ctx.decode.beam,
@@ -151,32 +165,64 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         },
         ..Default::default()
     };
-    let server = Server::start(lm, hmm, ctx.corpus.clone(), cfg);
+    let server = Arc::new(Server::start(lm, hmm, ctx.corpus.clone(), cfg));
+    let metrics = server.metrics_handle();
 
-    // Built-in load driver: submit eval items, await all.
+    // Admission-control stack, innermost (coordinator) outward; flags
+    // choose the layers, so compose dynamically via the shared handle.
+    let mut svc: SharedService<ServeRequest, CoordResponse> = Arc::new(Arc::clone(&server));
+    let mut layers = Vec::new();
+    if let Some(delay) = args.opt_duration_ms("hedge-ms")? {
+        svc = Arc::new(HedgeLayer::new(delay, Arc::clone(&metrics)).layer(svc));
+        layers.push(format!("hedge({delay:?})"));
+    }
+    if let Some(t) = args.opt_duration_ms("timeout-ms")? {
+        svc = Arc::new(TimeoutLayer::new(t, Arc::clone(&metrics)).layer(svc));
+        layers.push(format!("timeout({t:?})"));
+    }
+    if let Some(max) = args.opt_usize("climit")? {
+        svc = Arc::new(ConcurrencyLimitLayer::new(max).layer(svc));
+        layers.push(format!("concurrency_limit({max})"));
+    }
+    if let Some(rate) = args.opt_f64("rate")? {
+        if !rate.is_finite() || rate <= 0.0 {
+            return Err(format!("--rate expects a positive req/s rate, got {rate}"));
+        }
+        let burst = args.f64("burst", rate.max(1.0))?;
+        svc = Arc::new(RateLimitLayer::new(rate, burst).layer(svc));
+        layers.push(format!("rate_limit({rate}/s, burst {burst})"));
+    }
+    if args.flag("shed") {
+        svc = Arc::new(LoadShedLayer::new(Arc::clone(&metrics)).layer(svc));
+        layers.push("load_shed".into());
+    }
+    layers.reverse();
+    if layers.is_empty() {
+        log_info!("admission stack: (none — direct to coordinator)");
+    } else {
+        log_info!("admission stack: {} -> coordinator", layers.join(" -> "));
+    }
+
+    let clients = args.usize("clients", (workers * 2).max(2))?;
     let t0 = std::time::Instant::now();
-    let mut rxs = Vec::new();
-    for item in ctx.items.iter().cycle().take(n_requests) {
-        match server.submit(item.concepts.clone()) {
-            Ok(rx) => rxs.push(rx),
-            Err(e) => log_info!("rejected: {e}"),
-        }
-    }
-    let mut ok = 0usize;
-    for rx in &rxs {
-        if let Ok(resp) = rx.recv() {
-            if resp.satisfied {
-                ok += 1;
-            }
-        }
-    }
+    let results = normq::service::drive_closed_loop(&svc, clients, n_requests, |i| {
+        let item = &ctx.items[i % ctx.items.len()];
+        ServeRequest::new(item.concepts.clone())
+    });
     let wall = t0.elapsed().as_secs_f64();
+    let ok = results.iter().filter(|r| r.is_ok()).count();
+    let satisfied = results
+        .iter()
+        .filter(|r| matches!(r, Ok(resp) if resp.satisfied))
+        .count();
     println!(
-        "requests={} satisfied={} wall={:.2}s throughput={:.1} req/s",
-        rxs.len(),
+        "requests={} ok={} satisfied={} rejected={} wall={:.2}s throughput={:.1} req/s",
+        n_requests,
         ok,
+        satisfied,
+        results.len() - ok,
         wall,
-        rxs.len() as f64 / wall
+        ok as f64 / wall
     );
     println!("{}", server.metrics().summary());
     server.shutdown();

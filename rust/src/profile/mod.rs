@@ -174,7 +174,7 @@ pub fn decode_profiled(
         tokens.pop();
     }
     let satisfied = dfa.accepts(&tokens);
-    crate::generate::Generation { tokens, score, satisfied }
+    crate::generate::Generation { tokens, score, satisfied, timed_out: false }
 }
 
 /// One profiling run: decode `n_requests` items, return (phase report,

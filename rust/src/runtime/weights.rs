@@ -21,6 +21,20 @@ impl WeightTensor {
     }
 }
 
+/// Checked product of header dims: a malformed/adversarial header can
+/// encode dims whose product wraps `usize` (silently in release builds),
+/// turning the later bounds check into a pass and the data read into
+/// garbage. Overflow must be a parse error, not UB-adjacent wrapping.
+fn checked_elements(name: &str, dims: &[usize]) -> Result<usize> {
+    dims.iter().try_fold(1usize, |acc, &d| acc.checked_mul(d)).ok_or_else(|| {
+        anyhow::anyhow!("tensor {name:?}: element count overflows (dims {dims:?})")
+    })
+}
+
+/// Sanity cap on tensor rank: a huge `ndim` in a corrupt header would
+/// otherwise drive a near-endless dims-read loop.
+const MAX_RANK: usize = 16;
+
 pub fn read_weights(path: &Path) -> Result<Vec<WeightTensor>> {
     let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
     let mut pos = 0usize;
@@ -33,31 +47,36 @@ pub fn read_weights(path: &Path) -> Result<Vec<WeightTensor>> {
         Ok(v)
     };
     let count = take_u32(&mut pos)? as usize;
-    let mut out = Vec::with_capacity(count);
+    // Capacity hint only — a corrupt count must not pre-allocate GBs.
+    let mut out = Vec::with_capacity(count.min(1024));
     for _ in 0..count {
         let name_len = take_u32(&mut pos)? as usize;
-        if pos + name_len > bytes.len() {
-            bail!("truncated name");
-        }
-        let name = String::from_utf8(bytes[pos..pos + name_len].to_vec())
+        let name_end = pos
+            .checked_add(name_len)
+            .filter(|&e| e <= bytes.len())
+            .ok_or_else(|| anyhow::anyhow!("truncated name at byte {pos}"))?;
+        let name = String::from_utf8(bytes[pos..name_end].to_vec())
             .context("non-utf8 tensor name")?;
-        pos += name_len;
+        pos = name_end;
         let ndim = take_u32(&mut pos)? as usize;
+        if ndim > MAX_RANK {
+            bail!("tensor {name:?}: implausible rank {ndim} (max {MAX_RANK})");
+        }
         let mut dims = Vec::with_capacity(ndim);
         for _ in 0..ndim {
             dims.push(take_u32(&mut pos)? as usize);
         }
-        let n: usize = dims.iter().product();
-        if pos + n * 4 > bytes.len() {
-            bail!("truncated data for {name}");
-        }
+        let n = checked_elements(&name, &dims)?;
+        let data_end = n
+            .checked_mul(4)
+            .and_then(|b| pos.checked_add(b))
+            .filter(|&e| e <= bytes.len())
+            .ok_or_else(|| anyhow::anyhow!("truncated data for {name} ({n} elements)"))?;
         let mut data = Vec::with_capacity(n);
-        for i in 0..n {
-            data.push(f32::from_le_bytes(
-                bytes[pos + i * 4..pos + i * 4 + 4].try_into().unwrap(),
-            ));
+        for chunk in bytes[pos..data_end].chunks_exact(4) {
+            data.push(f32::from_le_bytes(chunk.try_into().unwrap()));
         }
-        pos += n * 4;
+        pos = data_end;
         out.push(WeightTensor { name, dims, data });
     }
     if pos != bytes.len() {
@@ -131,5 +150,59 @@ mod tests {
         let path = dir.join("bad.bin");
         std::fs::write(&path, [1u8, 0, 0]).unwrap();
         assert!(read_weights(&path).is_err());
+    }
+
+    /// A header whose dims product overflows `usize` must fail cleanly,
+    /// not wrap (release mode) into a bogus small bounds check.
+    #[test]
+    fn overflowing_dims_error_cleanly() {
+        let dir = std::env::temp_dir().join("normq_weights_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("overflow.bin");
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap(); // 1 tensor
+        f.write_all(&1u32.to_le_bytes()).unwrap(); // name_len 1
+        f.write_all(b"x").unwrap();
+        f.write_all(&3u32.to_le_bytes()).unwrap(); // ndim 3
+        for _ in 0..3 {
+            f.write_all(&u32::MAX.to_le_bytes()).unwrap(); // 2^96 elements
+        }
+        drop(f);
+        let err = read_weights(&path).unwrap_err();
+        assert!(err.to_string().contains("overflow"), "got: {err:#}");
+    }
+
+    /// A plausible-looking element count whose *byte* size still exceeds
+    /// the file must be a truncation error, not a panic.
+    #[test]
+    fn oversized_data_claim_errors_cleanly() {
+        let dir = std::env::temp_dir().join("normq_weights_test4");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("oversize.bin");
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(b"y").unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap(); // ndim 1
+        f.write_all(&1_000_000u32.to_le_bytes()).unwrap(); // 1M elements, no data
+        drop(f);
+        let err = read_weights(&path).unwrap_err();
+        assert!(err.to_string().contains("truncated data"), "got: {err:#}");
+    }
+
+    /// Absurd ranks are rejected before the dims-read loop spins.
+    #[test]
+    fn implausible_rank_errors_cleanly() {
+        let dir = std::env::temp_dir().join("normq_weights_test5");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rank.bin");
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(b"z").unwrap();
+        f.write_all(&u32::MAX.to_le_bytes()).unwrap(); // ndim = 4B
+        drop(f);
+        let err = read_weights(&path).unwrap_err();
+        assert!(err.to_string().contains("rank"), "got: {err:#}");
     }
 }

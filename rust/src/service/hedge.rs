@@ -1,0 +1,171 @@
+//! `Hedge`: re-dispatch slow requests; first response wins.
+//!
+//! The primary dispatch runs on a helper thread. If no response arrives
+//! within `delay`, the request is cloned and dispatched a second time
+//! (`Metrics::hedged`) — against the coordinator this lands on another
+//! decode worker, often via a warm constraint-table cache entry.
+//! Whichever attempt answers first is returned (`Metrics::hedge_wins`
+//! counts wins by the hedge); the loser finishes in the background and
+//! its response is dropped. Combine with an outer `Timeout` so losers
+//! are bounded by the request deadline rather than running open-ended.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, RecvTimeoutError};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::metrics::Metrics;
+
+use super::{Layer, Readiness, Service, ServiceError};
+
+pub struct Hedge<S> {
+    inner: Arc<S>,
+    delay: Duration,
+    metrics: Arc<Metrics>,
+}
+
+impl<S> Hedge<S> {
+    pub fn new(inner: S, delay: Duration, metrics: Arc<Metrics>) -> Self {
+        Hedge { inner: Arc::new(inner), delay, metrics }
+    }
+}
+
+impl<Req, S> Service<Req> for Hedge<S>
+where
+    Req: Clone + Send + 'static,
+    S: Service<Req> + 'static,
+    S::Response: Send + 'static,
+{
+    type Response = S::Response;
+
+    fn poll_ready(&self) -> Readiness {
+        self.inner.poll_ready()
+    }
+
+    fn call(&self, req: Req) -> Result<S::Response, ServiceError> {
+        let (tx, rx) = channel::<(u8, Result<S::Response, ServiceError>)>();
+
+        let primary_tx = tx.clone();
+        let primary_svc = Arc::clone(&self.inner);
+        let primary_req = req.clone();
+        std::thread::spawn(move || {
+            let _ = primary_tx.send((0, primary_svc.call(primary_req)));
+        });
+
+        match rx.recv_timeout(self.delay) {
+            Ok((_, result)) => result,
+            Err(RecvTimeoutError::Disconnected) => Err(ServiceError::Closed),
+            Err(RecvTimeoutError::Timeout) => {
+                self.metrics.hedged.fetch_add(1, Ordering::Relaxed);
+                let hedge_svc = Arc::clone(&self.inner);
+                std::thread::spawn(move || {
+                    let _ = tx.send((1, hedge_svc.call(req)));
+                });
+                // First *successful* response wins. An attempt that
+                // errors (e.g. the hedge dispatch bounces off a full
+                // queue in microseconds) must not preempt the other
+                // attempt, which may still succeed.
+                let mut last_err = ServiceError::Closed;
+                for _ in 0..2 {
+                    match rx.recv() {
+                        Ok((attempt, Ok(resp))) => {
+                            if attempt == 1 {
+                                self.metrics.hedge_wins.fetch_add(1, Ordering::Relaxed);
+                            }
+                            return Ok(resp);
+                        }
+                        Ok((_, Err(e))) => last_err = e,
+                        Err(_) => break, // both senders gone
+                    }
+                }
+                Err(last_err)
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct HedgeLayer {
+    delay: Duration,
+    metrics: Arc<Metrics>,
+}
+
+impl HedgeLayer {
+    pub fn new(delay: Duration, metrics: Arc<Metrics>) -> Self {
+        HedgeLayer { delay, metrics }
+    }
+}
+
+impl<S> Layer<S> for HedgeLayer {
+    type Service = Hedge<S>;
+    fn layer(&self, inner: S) -> Self::Service {
+        Hedge::new(inner, self.delay, Arc::clone(&self.metrics))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{MockSvc, TestReq};
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn fast_primary_needs_no_hedge() {
+        let metrics = Arc::new(Metrics::new());
+        let svc = Hedge::new(MockSvc::instant(), Duration::from_millis(50), Arc::clone(&metrics));
+        let resp = svc.call(TestReq::default()).unwrap();
+        assert_eq!(resp.served_by_call, 0);
+        assert_eq!(metrics.hedged.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.hedge_wins.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn slow_primary_is_hedged_and_first_response_wins() {
+        let metrics = Arc::new(Metrics::new());
+        // First call stalls 500ms; subsequent calls are instant. The
+        // hedge (attempt 2, call index 1) must win long before that.
+        let mut inner = MockSvc::instant();
+        inner.first_call_delay = Some(Duration::from_millis(500));
+        let svc = Hedge::new(inner, Duration::from_millis(10), Arc::clone(&metrics));
+        let t0 = Instant::now();
+        let resp = svc.call(TestReq::default()).unwrap();
+        assert_eq!(resp.served_by_call, 1, "hedge dispatch should have won");
+        assert!(
+            t0.elapsed() < Duration::from_millis(400),
+            "hedge did not cut latency: {:?}",
+            t0.elapsed()
+        );
+        assert_eq!(metrics.hedged.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.hedge_wins.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn failed_hedge_dispatch_does_not_preempt_the_primary() {
+        let metrics = Arc::new(Metrics::new());
+        // Primary (call 0) succeeds after 40ms; the hedge dispatch
+        // (call 1) bounces instantly with Overloaded. The instant error
+        // must not win over the slower success.
+        let mut inner = MockSvc::instant();
+        inner.first_call_delay = Some(Duration::from_millis(40));
+        inner.fail_call = Some(1);
+        let svc = Hedge::new(inner, Duration::from_millis(5), Arc::clone(&metrics));
+        let resp = svc.call(TestReq::default()).unwrap();
+        assert_eq!(resp.served_by_call, 0);
+        assert_eq!(metrics.hedged.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.hedge_wins.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn primary_win_after_hedge_is_not_a_hedge_win() {
+        let metrics = Arc::new(Metrics::new());
+        // Primary (call 0) takes 40ms; the hedge fires at 10ms but its
+        // own call (index 1) takes 200ms — the primary still wins.
+        let mut inner = MockSvc::with_delay(Duration::from_millis(200));
+        inner.first_call_delay = Some(Duration::from_millis(40));
+        let svc = Hedge::new(inner, Duration::from_millis(10), Arc::clone(&metrics));
+        let resp = svc.call(TestReq::default()).unwrap();
+        assert_eq!(resp.served_by_call, 0);
+        assert_eq!(metrics.hedged.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.hedge_wins.load(Ordering::Relaxed), 0);
+    }
+}

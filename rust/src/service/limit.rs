@@ -1,0 +1,143 @@
+//! `ConcurrencyLimit`: at most N calls in flight at once.
+//!
+//! A counting semaphore (mutex + condvar; the offline crate set has no
+//! `tokio::sync`). `call` blocks until a permit frees up, so this layer
+//! *queues* excess load — put [`super::shed::LoadShed`] outside it to
+//! reject instead.
+
+use std::sync::{Condvar, Mutex};
+
+use super::{Layer, Readiness, Service, ServiceError};
+
+struct Semaphore {
+    permits: Mutex<usize>,
+    freed: Condvar,
+}
+
+impl Semaphore {
+    fn new(permits: usize) -> Self {
+        Semaphore { permits: Mutex::new(permits), freed: Condvar::new() }
+    }
+
+    fn acquire(&self) {
+        let mut p = self.permits.lock().unwrap();
+        while *p == 0 {
+            p = self.freed.wait(p).unwrap();
+        }
+        *p -= 1;
+    }
+
+    fn release(&self) {
+        *self.permits.lock().unwrap() += 1;
+        self.freed.notify_one();
+    }
+
+    fn available(&self) -> usize {
+        *self.permits.lock().unwrap()
+    }
+}
+
+/// RAII permit: returned to the semaphore even if the inner call panics.
+struct Permit<'a>(&'a Semaphore);
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        self.0.release();
+    }
+}
+
+pub struct ConcurrencyLimit<S> {
+    inner: S,
+    sem: Semaphore,
+}
+
+impl<S> ConcurrencyLimit<S> {
+    pub fn new(inner: S, max: usize) -> Self {
+        ConcurrencyLimit { inner, sem: Semaphore::new(max.max(1)) }
+    }
+}
+
+impl<Req, S> Service<Req> for ConcurrencyLimit<S>
+where
+    S: Service<Req>,
+{
+    type Response = S::Response;
+
+    fn poll_ready(&self) -> Readiness {
+        if self.sem.available() == 0 {
+            Readiness::Busy
+        } else {
+            self.inner.poll_ready()
+        }
+    }
+
+    fn call(&self, req: Req) -> Result<S::Response, ServiceError> {
+        self.sem.acquire();
+        let _permit = Permit(&self.sem);
+        self.inner.call(req)
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ConcurrencyLimitLayer {
+    max: usize,
+}
+
+impl ConcurrencyLimitLayer {
+    pub fn new(max: usize) -> Self {
+        ConcurrencyLimitLayer { max }
+    }
+}
+
+impl<S> Layer<S> for ConcurrencyLimitLayer {
+    type Service = ConcurrencyLimit<S>;
+    fn layer(&self, inner: S) -> Self::Service {
+        ConcurrencyLimit::new(inner, self.max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{MockSvc, TestReq};
+    use super::*;
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn caps_in_flight_calls() {
+        let svc = Arc::new(ConcurrencyLimit::new(
+            MockSvc::with_delay(Duration::from_millis(10)),
+            2,
+        ));
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let svc = Arc::clone(&svc);
+                scope.spawn(move || svc.call(TestReq::default()).unwrap());
+            }
+        });
+        assert_eq!(svc.inner.calls.load(Ordering::SeqCst), 8);
+        assert!(
+            svc.inner.max_in_flight.load(Ordering::SeqCst) <= 2,
+            "limiter leaked concurrency: {}",
+            svc.inner.max_in_flight.load(Ordering::SeqCst)
+        );
+    }
+
+    #[test]
+    fn reports_busy_when_saturated() {
+        let svc = Arc::new(ConcurrencyLimit::new(
+            MockSvc::with_delay(Duration::from_millis(50)),
+            1,
+        ));
+        assert_eq!(svc.poll_ready(), Readiness::Ready);
+        std::thread::scope(|scope| {
+            let worker = Arc::clone(&svc);
+            scope.spawn(move || worker.call(TestReq::default()).unwrap());
+            // Let the spawned call take the only permit.
+            std::thread::sleep(Duration::from_millis(10));
+            assert_eq!(svc.poll_ready(), Readiness::Busy);
+        });
+        assert_eq!(svc.poll_ready(), Readiness::Ready);
+    }
+}

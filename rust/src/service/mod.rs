@@ -1,0 +1,285 @@
+//! Admission-control middleware stack — a synchronous-threads
+//! adaptation of the tower `Service`/`Layer` pattern, sitting between
+//! clients and the serving coordinator.
+//!
+//! The coordinator ([`crate::coordinator::Server`]) batches and decodes;
+//! this layer decides *whether and when* a request reaches it. Overload
+//! without admission control means unbounded queue waits and collapsing
+//! tail latency; with it, excess load is shed, paced, bounded, and
+//! hedged:
+//!
+//! - [`Service`] — the request/response contract: `poll_ready` is a
+//!   non-blocking admission probe, `call` executes synchronously.
+//! - [`Layer`] — wraps one service in another; composed via
+//!   [`stack::Stack`] (`Stack::new().load_shed(..).timeout(..).service(srv)`).
+//! - [`limit::ConcurrencyLimit`] — at most N in-flight calls (semaphore).
+//! - [`rate::RateLimit`] — token-bucket pacing of call admission.
+//! - [`shed::LoadShed`] — reject (`Err(Overloaded)`) instead of queueing
+//!   when the inner service reports `Busy`.
+//! - [`timeout::Timeout`] — stamps a deadline that propagates into
+//!   [`crate::generate::DecodeConfig`]; expired work is cut short inside
+//!   the decode loop rather than abandoned at the edge.
+//! - [`hedge::Hedge`] — re-dispatches slow requests to a second worker;
+//!   first response wins.
+//!
+//! Unlike tower there are no futures: `call` blocks the calling thread,
+//! which matches the coordinator's thread-per-client serving model and
+//! keeps middlewares free of executor plumbing. `poll_ready` is
+//! advisory — a `Ready` probe can still race with other clients — so
+//! only [`shed::LoadShed`] turns it into a hard rejection.
+
+pub mod hedge;
+pub mod limit;
+pub mod rate;
+pub mod shed;
+pub mod stack;
+pub mod timeout;
+
+pub use hedge::{Hedge, HedgeLayer};
+pub use limit::{ConcurrencyLimit, ConcurrencyLimitLayer};
+pub use rate::{RateLimit, RateLimitLayer};
+pub use shed::{LoadShed, LoadShedLayer};
+pub use stack::{Compose, Identity, Layer, Stack};
+pub use timeout::{Timeout, TimeoutLayer};
+
+use std::fmt;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Result of a non-blocking admission probe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Readiness {
+    /// A call issued now is likely to be admitted.
+    Ready,
+    /// The service is saturated; a call would queue or block.
+    Busy,
+    /// The service has shut down; calls will fail.
+    Closed,
+}
+
+/// Errors surfaced by the admission stack.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServiceError {
+    /// Shed or bounced: the system is saturated and refused to queue.
+    Overloaded,
+    /// The request's deadline fired before a full response was produced.
+    DeadlineExceeded,
+    /// The underlying service has shut down.
+    Closed,
+    /// Any other failure, with context.
+    Failed(String),
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServiceError::Overloaded => write!(f, "overloaded: request shed"),
+            ServiceError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            ServiceError::Closed => write!(f, "service closed"),
+            ServiceError::Failed(msg) => write!(f, "service failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// A synchronous request/response service. `Send + Sync` because a
+/// single stack instance is shared across client threads.
+pub trait Service<Req>: Send + Sync {
+    type Response;
+
+    /// Non-blocking admission probe. Advisory: `Ready` does not reserve
+    /// capacity (concurrent callers may take it first).
+    fn poll_ready(&self) -> Readiness;
+
+    /// Execute the request, blocking the calling thread until a
+    /// response or error is available.
+    fn call(&self, req: Req) -> Result<Self::Response, ServiceError>;
+}
+
+/// Services behind `Arc` are services (the stack shares middlewares and
+/// the coordinator across client threads this way).
+impl<Req, S> Service<Req> for Arc<S>
+where
+    S: Service<Req> + ?Sized,
+{
+    type Response = S::Response;
+
+    fn poll_ready(&self) -> Readiness {
+        (**self).poll_ready()
+    }
+
+    fn call(&self, req: Req) -> Result<Self::Response, ServiceError> {
+        (**self).call(req)
+    }
+}
+
+/// Type-erased shared service handle, for stacks whose shape is decided
+/// at runtime (e.g. CLI flags choosing which middlewares to enable).
+pub type SharedService<Req, Res> = Arc<dyn Service<Req, Response = Res>>;
+
+/// Requests that carry an optional deadline ([`timeout::Timeout`]
+/// stamps it; the coordinator propagates it into the decode loop).
+pub trait Deadlined {
+    fn deadline(&self) -> Option<Instant>;
+    /// Tighten the deadline: keep the earlier of the existing and new.
+    fn set_deadline(&mut self, deadline: Instant);
+}
+
+/// Responses that can report the request's deadline fired mid-flight
+/// (the coordinator returns a truncated generation rather than nothing;
+/// [`timeout::Timeout`] converts that into `Err(DeadlineExceeded)`).
+pub trait Expirable {
+    fn expired(&self) -> bool;
+}
+
+/// Closed-loop load driver shared by the CLI `serve` command and the
+/// e2e example: `clients` threads pull request indices from a shared
+/// counter and issue blocking calls until `n_requests` are consumed.
+/// Results come back in submission-index order.
+pub fn drive_closed_loop<Req, S>(
+    svc: &S,
+    clients: usize,
+    n_requests: usize,
+    make_req: impl Fn(usize) -> Req + Sync,
+) -> Vec<Result<S::Response, ServiceError>>
+where
+    S: Service<Req>,
+    S::Response: Send,
+{
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    let next = AtomicUsize::new(0);
+    let results = Mutex::new(Vec::with_capacity(n_requests));
+    let make_req = &make_req;
+    std::thread::scope(|scope| {
+        for _ in 0..clients.max(1) {
+            let (next, results) = (&next, &results);
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_requests {
+                    break;
+                }
+                let result = svc.call(make_req(i));
+                results.lock().unwrap().push((i, result));
+            });
+        }
+    });
+    let mut results = results.into_inner().unwrap();
+    results.sort_by_key(|(i, _)| *i);
+    results.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::{MockSvc, TestReq};
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn drive_closed_loop_consumes_every_request_once() {
+        let svc = MockSvc::instant();
+        let results = drive_closed_loop(&svc, 4, 25, |_| TestReq::default());
+        assert_eq!(results.len(), 25);
+        assert!(results.iter().all(|r| r.is_ok()));
+        assert_eq!(svc.calls.load(Ordering::SeqCst), 25);
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! Shared mock service for per-middleware unit tests.
+
+    use super::*;
+    use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+    use std::time::Duration;
+
+    #[derive(Clone, Debug, Default)]
+    pub struct TestReq {
+        pub deadline: Option<Instant>,
+    }
+
+    impl Deadlined for TestReq {
+        fn deadline(&self) -> Option<Instant> {
+            self.deadline
+        }
+        fn set_deadline(&mut self, deadline: Instant) {
+            self.deadline = Some(match self.deadline {
+                Some(d) if d < deadline => d,
+                _ => deadline,
+            });
+        }
+    }
+
+    #[derive(Clone, Debug, PartialEq, Eq)]
+    pub struct TestResp {
+        pub expired: bool,
+        pub served_by_call: u64,
+    }
+
+    impl Expirable for TestResp {
+        fn expired(&self) -> bool {
+            self.expired
+        }
+    }
+
+    /// Mock backend: sleeps per call (first call can be made slow to
+    /// exercise hedging), honors deadlines like the coordinator does,
+    /// and records concurrency high-water marks.
+    pub struct MockSvc {
+        pub calls: AtomicU64,
+        pub in_flight: AtomicI64,
+        pub max_in_flight: AtomicI64,
+        pub delay: Duration,
+        pub first_call_delay: Option<Duration>,
+        /// Call index that fails instantly with `Overloaded`.
+        pub fail_call: Option<u64>,
+        pub readiness: Readiness,
+    }
+
+    impl MockSvc {
+        pub fn instant() -> Self {
+            Self::with_delay(Duration::ZERO)
+        }
+
+        pub fn with_delay(delay: Duration) -> Self {
+            MockSvc {
+                calls: AtomicU64::new(0),
+                in_flight: AtomicI64::new(0),
+                max_in_flight: AtomicI64::new(0),
+                delay,
+                first_call_delay: None,
+                fail_call: None,
+                readiness: Readiness::Ready,
+            }
+        }
+    }
+
+    impl Service<TestReq> for MockSvc {
+        type Response = TestResp;
+
+        fn poll_ready(&self) -> Readiness {
+            self.readiness
+        }
+
+        fn call(&self, req: TestReq) -> Result<TestResp, ServiceError> {
+            let idx = self.calls.fetch_add(1, Ordering::SeqCst);
+            if self.fail_call == Some(idx) {
+                return Err(ServiceError::Overloaded);
+            }
+            let cur = self.in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+            self.max_in_flight.fetch_max(cur, Ordering::SeqCst);
+            let delay = match (idx, self.first_call_delay) {
+                (0, Some(d)) => d,
+                _ => self.delay,
+            };
+            if !delay.is_zero() {
+                std::thread::sleep(delay);
+            }
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            let expired = req.deadline.is_some_and(|d| Instant::now() >= d);
+            Ok(TestResp { expired, served_by_call: idx })
+        }
+    }
+}

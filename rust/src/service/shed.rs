@@ -1,0 +1,109 @@
+//! `LoadShed`: fail fast instead of queueing when saturated.
+//!
+//! Probes the inner service's `poll_ready` on every call; `Busy` becomes
+//! an immediate `Err(Overloaded)` (counted in `Metrics::shed`) so the
+//! caller can retry elsewhere / later instead of piling onto a queue
+//! whose wait grows without bound. This is the layer that keeps overload
+//! p99 bounded (see `benches/bench_service.rs`).
+
+use std::sync::Arc;
+
+use crate::coordinator::metrics::Metrics;
+
+use super::{Layer, Readiness, Service, ServiceError};
+
+pub struct LoadShed<S> {
+    inner: S,
+    metrics: Arc<Metrics>,
+}
+
+impl<S> LoadShed<S> {
+    pub fn new(inner: S, metrics: Arc<Metrics>) -> Self {
+        LoadShed { inner, metrics }
+    }
+}
+
+impl<Req, S> Service<Req> for LoadShed<S>
+where
+    S: Service<Req>,
+{
+    type Response = S::Response;
+
+    /// Always admits (shedding happens in `call`), unless closed —
+    /// like tower's `LoadShed`, this layer absorbs inner `Busy`.
+    fn poll_ready(&self) -> Readiness {
+        match self.inner.poll_ready() {
+            Readiness::Closed => Readiness::Closed,
+            _ => Readiness::Ready,
+        }
+    }
+
+    fn call(&self, req: Req) -> Result<S::Response, ServiceError> {
+        match self.inner.poll_ready() {
+            Readiness::Ready => self.inner.call(req),
+            Readiness::Busy => {
+                self.metrics.shed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                Err(ServiceError::Overloaded)
+            }
+            Readiness::Closed => Err(ServiceError::Closed),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LoadShedLayer {
+    metrics: Arc<Metrics>,
+}
+
+impl LoadShedLayer {
+    pub fn new(metrics: Arc<Metrics>) -> Self {
+        LoadShedLayer { metrics }
+    }
+}
+
+impl<S> Layer<S> for LoadShedLayer {
+    type Service = LoadShed<S>;
+    fn layer(&self, inner: S) -> Self::Service {
+        LoadShed::new(inner, Arc::clone(&self.metrics))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{MockSvc, TestReq};
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn passes_through_when_ready() {
+        let metrics = Arc::new(Metrics::new());
+        let svc = LoadShed::new(MockSvc::instant(), Arc::clone(&metrics));
+        assert!(svc.call(TestReq::default()).is_ok());
+        assert_eq!(metrics.shed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn sheds_at_capacity() {
+        let metrics = Arc::new(Metrics::new());
+        let mut inner = MockSvc::instant();
+        inner.readiness = Readiness::Busy;
+        let svc = LoadShed::new(inner, Arc::clone(&metrics));
+        // The shed layer itself still advertises Ready...
+        assert_eq!(svc.poll_ready(), Readiness::Ready);
+        // ...but the call is rejected without touching the inner service.
+        assert_eq!(svc.call(TestReq::default()), Err(ServiceError::Overloaded));
+        assert_eq!(metrics.shed.load(Ordering::Relaxed), 1);
+        assert_eq!(svc.inner.calls.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn closed_inner_propagates() {
+        let metrics = Arc::new(Metrics::new());
+        let mut inner = MockSvc::instant();
+        inner.readiness = Readiness::Closed;
+        let svc = LoadShed::new(inner, Arc::clone(&metrics));
+        assert_eq!(svc.poll_ready(), Readiness::Closed);
+        assert_eq!(svc.call(TestReq::default()), Err(ServiceError::Closed));
+        assert_eq!(metrics.shed.load(Ordering::Relaxed), 0);
+    }
+}

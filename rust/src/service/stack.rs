@@ -1,0 +1,175 @@
+//! `Layer` + `Stack`: the composer that turns individual middlewares
+//! into one admission pipeline (tower's `ServiceBuilder`, synchronous).
+//!
+//! Layers added first end up outermost, so
+//!
+//! ```ignore
+//! let svc = Stack::new()
+//!     .load_shed(metrics.clone())
+//!     .rate_limit(500.0, 64.0)
+//!     .timeout(Duration::from_millis(250), metrics.clone())
+//!     .service(server);
+//! ```
+//!
+//! builds `LoadShed<RateLimit<Timeout<Server>>>`: shed the excess first,
+//! pace what's admitted, then stamp the deadline right before dispatch.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::metrics::Metrics;
+
+use super::hedge::HedgeLayer;
+use super::limit::ConcurrencyLimitLayer;
+use super::rate::RateLimitLayer;
+use super::shed::LoadShedLayer;
+use super::timeout::TimeoutLayer;
+
+/// Wraps one service in another (decorator). `&self` so a layer can be
+/// reused to build several stacks.
+pub trait Layer<S> {
+    type Service;
+    fn layer(&self, inner: S) -> Self::Service;
+}
+
+/// The no-op layer; `Stack::new()` starts here.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Identity;
+
+impl<S> Layer<S> for Identity {
+    type Service = S;
+    fn layer(&self, inner: S) -> S {
+        inner
+    }
+}
+
+/// Two layers composed: `outer` wraps whatever `inner` builds.
+#[derive(Clone, Debug)]
+pub struct Compose<Outer, Inner> {
+    outer: Outer,
+    inner: Inner,
+}
+
+impl<S, Outer, Inner> Layer<S> for Compose<Outer, Inner>
+where
+    Inner: Layer<S>,
+    Outer: Layer<Inner::Service>,
+{
+    type Service = Outer::Service;
+    fn layer(&self, svc: S) -> Self::Service {
+        self.outer.layer(self.inner.layer(svc))
+    }
+}
+
+/// Builder for an admission-control stack. Collect layers, then call
+/// [`Stack::service`] to wrap the innermost service (the coordinator).
+#[derive(Clone, Debug)]
+pub struct Stack<L> {
+    layers: L,
+}
+
+impl Stack<Identity> {
+    pub fn new() -> Self {
+        Stack { layers: Identity }
+    }
+}
+
+impl Default for Stack<Identity> {
+    fn default() -> Self {
+        Stack::new()
+    }
+}
+
+impl<L> Stack<L> {
+    /// Add an arbitrary layer. Layers added earlier are outermost.
+    pub fn layer<T>(self, layer: T) -> Stack<Compose<L, T>> {
+        Stack { layers: Compose { outer: self.layers, inner: layer } }
+    }
+
+    /// Reject instead of queueing when the inner service is saturated.
+    pub fn load_shed(self, metrics: Arc<Metrics>) -> Stack<Compose<L, LoadShedLayer>> {
+        self.layer(LoadShedLayer::new(metrics))
+    }
+
+    /// Cap concurrent in-flight calls at `max`.
+    pub fn concurrency_limit(self, max: usize) -> Stack<Compose<L, ConcurrencyLimitLayer>> {
+        self.layer(ConcurrencyLimitLayer::new(max))
+    }
+
+    /// Token-bucket pacing: sustained `rate` calls/sec, bursts up to
+    /// `burst`.
+    pub fn rate_limit(self, rate: f64, burst: f64) -> Stack<Compose<L, RateLimitLayer>> {
+        self.layer(RateLimitLayer::new(rate, burst))
+    }
+
+    /// Stamp a deadline on every request; expired responses become
+    /// `Err(DeadlineExceeded)`.
+    pub fn timeout(
+        self,
+        timeout: Duration,
+        metrics: Arc<Metrics>,
+    ) -> Stack<Compose<L, TimeoutLayer>> {
+        self.layer(TimeoutLayer::new(timeout, metrics))
+    }
+
+    /// Re-dispatch requests still unanswered after `delay`; the first
+    /// response wins.
+    pub fn hedge(self, delay: Duration, metrics: Arc<Metrics>) -> Stack<Compose<L, HedgeLayer>> {
+        self.layer(HedgeLayer::new(delay, metrics))
+    }
+
+    /// Close the stack around the innermost service.
+    pub fn service<S>(self, svc: S) -> L::Service
+    where
+        L: Layer<S>,
+    {
+        self.layers.layer(svc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{MockSvc, TestReq};
+    use super::super::{Readiness, Service, ServiceError};
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn identity_stack_passes_through() {
+        let svc = Stack::new().service(MockSvc::instant());
+        assert_eq!(svc.poll_ready(), Readiness::Ready);
+        let resp = svc.call(TestReq::default()).unwrap();
+        assert_eq!(resp.served_by_call, 0);
+    }
+
+    #[test]
+    fn first_added_layer_is_outermost() {
+        // load_shed outside concurrency_limit: with an always-Busy inner
+        // readiness the shed layer must reject before the limiter blocks.
+        let metrics = Arc::new(Metrics::new());
+        let mut inner = MockSvc::instant();
+        inner.readiness = Readiness::Busy;
+        let svc = Stack::new()
+            .load_shed(Arc::clone(&metrics))
+            .concurrency_limit(1)
+            .service(inner);
+        assert_eq!(svc.call(TestReq::default()), Err(ServiceError::Overloaded));
+        assert_eq!(metrics.shed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn full_stack_composes_and_serves() {
+        let metrics = Arc::new(Metrics::new());
+        let svc = Stack::new()
+            .load_shed(Arc::clone(&metrics))
+            .rate_limit(10_000.0, 16.0)
+            .concurrency_limit(4)
+            .timeout(std::time::Duration::from_secs(5), Arc::clone(&metrics))
+            .service(MockSvc::instant());
+        for _ in 0..8 {
+            assert!(svc.call(TestReq::default()).is_ok());
+        }
+        assert_eq!(metrics.shed.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.timed_out.load(Ordering::Relaxed), 0);
+    }
+}

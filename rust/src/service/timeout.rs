@@ -1,0 +1,118 @@
+//! `Timeout`: stamp a deadline on each request and convert expired
+//! responses into `Err(DeadlineExceeded)`.
+//!
+//! Enforcement is cooperative, not preemptive: the deadline rides the
+//! request into the coordinator, which (a) drops queued work whose
+//! deadline already fired without decoding it and (b) threads it into
+//! [`crate::generate::DecodeConfig`] so the beam loop stops at the
+//! deadline. The truncated response comes back marked
+//! [`super::Expirable::expired`], and this layer turns that into an
+//! error plus a `Metrics::timed_out` tick. The upshot: a timed-out
+//! request costs at most its deadline of decode work — it is never
+//! abandoned to run to completion in the background.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+
+use super::{Deadlined, Expirable, Layer, Readiness, Service, ServiceError};
+
+pub struct Timeout<S> {
+    inner: S,
+    timeout: Duration,
+    metrics: Arc<Metrics>,
+}
+
+impl<S> Timeout<S> {
+    pub fn new(inner: S, timeout: Duration, metrics: Arc<Metrics>) -> Self {
+        Timeout { inner, timeout, metrics }
+    }
+}
+
+impl<Req, S> Service<Req> for Timeout<S>
+where
+    Req: Deadlined,
+    S: Service<Req>,
+    S::Response: Expirable,
+{
+    type Response = S::Response;
+
+    fn poll_ready(&self) -> Readiness {
+        self.inner.poll_ready()
+    }
+
+    fn call(&self, mut req: Req) -> Result<S::Response, ServiceError> {
+        req.set_deadline(Instant::now() + self.timeout);
+        let resp = self.inner.call(req)?;
+        if resp.expired() {
+            self.metrics.timed_out.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            Err(ServiceError::DeadlineExceeded)
+        } else {
+            Ok(resp)
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TimeoutLayer {
+    timeout: Duration,
+    metrics: Arc<Metrics>,
+}
+
+impl TimeoutLayer {
+    pub fn new(timeout: Duration, metrics: Arc<Metrics>) -> Self {
+        TimeoutLayer { timeout, metrics }
+    }
+}
+
+impl<S> Layer<S> for TimeoutLayer {
+    type Service = Timeout<S>;
+    fn layer(&self, inner: S) -> Self::Service {
+        Timeout::new(inner, self.timeout, Arc::clone(&self.metrics))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{MockSvc, TestReq};
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn fast_responses_pass() {
+        let metrics = Arc::new(Metrics::new());
+        let svc = Timeout::new(MockSvc::instant(), Duration::from_secs(5), Arc::clone(&metrics));
+        assert!(svc.call(TestReq::default()).is_ok());
+        assert_eq!(metrics.timed_out.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn slow_responses_time_out() {
+        // The mock honors the stamped deadline the way the coordinator
+        // does: it reports `expired` when it finishes past the deadline.
+        let metrics = Arc::new(Metrics::new());
+        let svc = Timeout::new(
+            MockSvc::with_delay(Duration::from_millis(30)),
+            Duration::from_millis(5),
+            Arc::clone(&metrics),
+        );
+        assert_eq!(svc.call(TestReq::default()), Err(ServiceError::DeadlineExceeded));
+        assert_eq!(metrics.timed_out.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn existing_earlier_deadline_is_kept() {
+        let metrics = Arc::new(Metrics::new());
+        // Request already expired when it enters a generous timeout: the
+        // layer must not loosen the deadline.
+        let svc = Timeout::new(
+            MockSvc::with_delay(Duration::from_millis(5)),
+            Duration::from_secs(60),
+            Arc::clone(&metrics),
+        );
+        let req = TestReq { deadline: Some(Instant::now()) };
+        assert_eq!(svc.call(req), Err(ServiceError::DeadlineExceeded));
+        assert_eq!(metrics.timed_out.load(Ordering::Relaxed), 1);
+    }
+}

@@ -70,6 +70,7 @@ impl ExperimentContext {
             max_tokens: args.usize("max-tokens", 24)?,
             lambda: args.f64("lambda", 1.0)? as f32,
             act_bits: None,
+            deadline: None,
         };
 
         log_info!("context: hidden={hidden} items={n_items} train={n_train} chunks={n_chunks} epochs={epochs} threads={threads}");

@@ -84,6 +84,45 @@ impl Args {
         }
     }
 
+    /// Optional integer: `None` when the flag is absent (used by the
+    /// serving stack, where absence means "middleware disabled").
+    pub fn opt_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{} expects an integer, got {:?}", name, v)),
+        }
+    }
+
+    /// Optional number, same convention as [`Args::opt_usize`].
+    pub fn opt_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{} expects a number, got {:?}", name, v)),
+        }
+    }
+
+    /// Optional duration given in milliseconds (e.g. `--timeout-ms 250`).
+    /// Rejects non-finite / out-of-range values with a clean error
+    /// (`Duration::from_secs_f64` would panic on them).
+    pub fn opt_duration_ms(&self, name: &str) -> Result<Option<std::time::Duration>, String> {
+        match self.opt_f64(name)? {
+            None => Ok(None),
+            Some(ms) if ms.is_finite() && (0.0..=1e15).contains(&ms) => {
+                Ok(Some(std::time::Duration::from_secs_f64(ms / 1e3)))
+            }
+            Some(ms) => Err(format!(
+                "--{} expects milliseconds in [0, 1e15], got {}",
+                name, ms
+            )),
+        }
+    }
+
     /// Comma-separated list of integers, e.g. `--bits 8,6,4,3`.
     pub fn usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
         match self.get(name) {
@@ -147,6 +186,28 @@ mod tests {
         assert_eq!(a.usize("n", 7).unwrap(), 7);
         assert_eq!(a.f64("x", 2.5).unwrap(), 2.5);
         assert_eq!(a.usize_list("bits", &[8, 4]).unwrap(), vec![8, 4]);
+    }
+
+    #[test]
+    fn optional_getters() {
+        let a = Args::parse(&argv(&["--timeout-ms=250", "--climit", "8"]), &["climit"]).unwrap();
+        assert_eq!(a.opt_usize("climit").unwrap(), Some(8));
+        assert_eq!(a.opt_usize("absent").unwrap(), None);
+        assert_eq!(
+            a.opt_duration_ms("timeout-ms").unwrap(),
+            Some(std::time::Duration::from_millis(250))
+        );
+        assert_eq!(a.opt_duration_ms("hedge-ms").unwrap(), None);
+        assert!(Args::parse(&argv(&["--climit=x"]), &[])
+            .unwrap()
+            .opt_usize("climit")
+            .is_err());
+        // Values Duration::from_secs_f64 would panic on must error.
+        for bad in ["inf", "nan", "-5", "1e30"] {
+            let arg = format!("--timeout-ms={bad}");
+            let a = Args::parse(&argv(&[arg.as_str()]), &[]).unwrap();
+            assert!(a.opt_duration_ms("timeout-ms").is_err(), "{bad} accepted");
+        }
     }
 
     #[test]

@@ -74,6 +74,7 @@ pub struct Stats {
     pub min: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
     pub max: f64,
 }
 
@@ -93,6 +94,7 @@ impl Stats {
             min: sorted[0],
             p50: q(0.5),
             p95: q(0.95),
+            p99: q(0.99),
             max: sorted[n - 1],
         }
     }
@@ -160,6 +162,15 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert_eq!(s.p50, 3.0);
+        assert_eq!(s.p99, 5.0);
+    }
+
+    #[test]
+    fn tail_quantiles_ordered() {
+        let samples: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let s = Stats::of(&samples);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        assert!((s.p99 - 989.0).abs() < 2.0, "p99={}", s.p99);
     }
 
     #[test]

@@ -1,0 +1,162 @@
+//! Integration: the full admission-control stack in front of a live
+//! coordinator, driven from many client threads at overload.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use normq::coordinator::{ServeRequest, Server, ServerConfig};
+use normq::data::Corpus;
+use normq::generate::DecodeConfig;
+use normq::hmm::Hmm;
+use normq::lm::NgramLm;
+use normq::service::{Service, ServiceError, Stack};
+use normq::util::rng::Rng;
+
+fn make_server(workers: usize, queue: usize) -> (Arc<Server>, Corpus) {
+    let corpus = Corpus::small(900);
+    let data = corpus.sample_token_corpus(300, 41);
+    let lm = NgramLm::train(&data, corpus.vocab.len());
+    let mut rng = Rng::seeded(42);
+    let mut hmm = Hmm::random(8, corpus.vocab.len(), 0.5, 0.5, &mut rng);
+    for _ in 0..4 {
+        hmm = normq::hmm::em::em_step(&hmm, &data, 4, 1e-9).0;
+    }
+    let cfg = ServerConfig {
+        workers,
+        queue_capacity: queue,
+        decode: DecodeConfig { beam: 4, max_tokens: 12, ..Default::default() },
+        ..Default::default()
+    };
+    (
+        Arc::new(Server::start(Arc::new(lm), hmm, corpus.clone(), cfg)),
+        corpus,
+    )
+}
+
+/// 16 clients hit a 4-worker pool admitting at most 4 outstanding
+/// requests, all released at once by a barrier: the shed layer must
+/// reject the excess, and every submission must be accounted for —
+/// `completed + rejected == submitted`, nothing lost, nothing hung.
+#[test]
+fn overloaded_stack_conserves_requests() {
+    const CLIENTS: usize = 16;
+    const PER_CLIENT: usize = 4;
+    let (server, corpus) = make_server(4, 4);
+    let metrics = server.metrics_handle();
+    let svc = Stack::new()
+        .load_shed(Arc::clone(&metrics))
+        .timeout(Duration::from_secs(60), Arc::clone(&metrics))
+        .service(Arc::clone(&server));
+
+    let barrier = Barrier::new(CLIENTS);
+    let completed = AtomicUsize::new(0);
+    let rejected = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let (svc, barrier, completed, rejected) = (&svc, &barrier, &completed, &rejected);
+            let concepts = vec![corpus.lexicon.nouns[c % 6].clone()];
+            scope.spawn(move || {
+                barrier.wait();
+                for _ in 0..PER_CLIENT {
+                    match svc.call(ServeRequest::new(concepts.clone())) {
+                        Ok(resp) => {
+                            assert!(!resp.text.is_empty() || !resp.satisfied);
+                            completed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(ServiceError::Overloaded) => {
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => panic!("unexpected error: {e}"),
+                    }
+                }
+            });
+        }
+    });
+
+    let completed = completed.load(Ordering::Relaxed);
+    let rejected = rejected.load(Ordering::Relaxed);
+    assert_eq!(
+        completed + rejected,
+        CLIENTS * PER_CLIENT,
+        "every submission must resolve exactly once"
+    );
+    // 16 simultaneous clients vs 4 admission slots: overload must shed.
+    assert!(rejected > 0, "expected load shedding at 4x overload");
+    assert!(completed > 0, "some requests must be served");
+    let m = server.metrics();
+    assert_eq!(m.completed.load(Ordering::Relaxed) as usize, completed);
+    // Rejections come from the shed layer or (when a call slips past
+    // the advisory poll_ready) the intake queue itself.
+    assert_eq!(
+        (m.shed.load(Ordering::Relaxed) + m.rejected.load(Ordering::Relaxed)) as usize,
+        rejected
+    );
+    assert_eq!(m.in_flight.load(Ordering::Relaxed), 0);
+    server.shutdown();
+}
+
+/// A deadline far shorter than decode time: requests come back as
+/// `DeadlineExceeded`, and the worker reports them timed out rather
+/// than decoding to completion.
+#[test]
+fn timeout_layer_cuts_slow_requests() {
+    let (server, corpus) = make_server(1, 16);
+    let metrics = server.metrics_handle();
+    let svc = Stack::new()
+        .timeout(Duration::from_nanos(1), Arc::clone(&metrics))
+        .service(Arc::clone(&server));
+    for i in 0..4 {
+        let req = ServeRequest::new(vec![corpus.lexicon.nouns[i % 3].clone()]);
+        assert!(matches!(svc.call(req), Err(ServiceError::DeadlineExceeded)));
+    }
+    assert_eq!(metrics.timed_out.load(Ordering::Relaxed), 4);
+    // Workers still answered every request (with a truncated response).
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), 4);
+    server.shutdown();
+}
+
+/// Hedging against the real pool: a zero hedge delay re-dispatches
+/// every request; both attempts decode, the first response wins.
+#[test]
+fn hedge_layer_duplicates_against_the_pool() {
+    let (server, corpus) = make_server(4, 64);
+    let metrics = server.metrics_handle();
+    let svc = Stack::new()
+        .hedge(Duration::from_micros(1), Arc::clone(&metrics))
+        .service(Arc::clone(&server));
+    for i in 0..6 {
+        let req = ServeRequest::new(vec![corpus.lexicon.nouns[i % 3].clone()]);
+        let resp = svc.call(req).expect("hedged call must succeed");
+        assert!(!resp.timed_out);
+    }
+    assert_eq!(metrics.hedged.load(Ordering::Relaxed), 6);
+    // Every request was answered; hedge duplicates add extra completions.
+    assert!(metrics.completed.load(Ordering::Relaxed) >= 6);
+    // Give detached losers a moment to finish before tearing down.
+    std::thread::sleep(Duration::from_millis(200));
+    server.shutdown();
+}
+
+/// Rate limiting paces a burst: 4 instant-decode requests at 20/s with
+/// burst 1 must take at least ~150ms end to end.
+#[test]
+fn rate_limit_paces_the_stack() {
+    let (server, corpus) = make_server(2, 16);
+    let metrics = server.metrics_handle();
+    let svc = Stack::new()
+        .rate_limit(20.0, 1.0)
+        .timeout(Duration::from_secs(30), Arc::clone(&metrics))
+        .service(Arc::clone(&server));
+    let t0 = std::time::Instant::now();
+    for _ in 0..4 {
+        svc.call(ServeRequest::new(vec![corpus.lexicon.nouns[0].clone()]))
+            .unwrap();
+    }
+    assert!(
+        t0.elapsed() >= Duration::from_millis(120),
+        "rate limit not enforced: {:?}",
+        t0.elapsed()
+    );
+    server.shutdown();
+}
