@@ -99,9 +99,11 @@ fn main() {
     let items = corpus.eval_set(n_requests, 1, 79);
     let clients = (workers * 4).max(4);
     let t0 = Instant::now();
+    // Spread the load over a few synthetic tenants so the per-client
+    // metrics rows in the report have something to attribute.
     let results = drive_closed_loop(&svc, clients, n_requests, |i| {
         let item = &items[i % items.len()];
-        ServeRequest::new(item.concepts.clone())
+        ServeRequest::from_client(item.concepts.clone(), format!("tenant-{}", i % 3))
     });
     let wall = t0.elapsed().as_secs_f64();
     for resp in results.iter().filter_map(|r| r.as_ref().ok()).take(5) {
@@ -126,5 +128,6 @@ fn main() {
     println!("wall time      : {wall:.2}s");
     println!("throughput     : {:.2} req/s", ok as f64 / wall);
     println!("metrics        : {}", server.metrics().summary());
+    println!("{}", server.metrics().client_summary());
     server.shutdown();
 }

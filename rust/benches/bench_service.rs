@@ -8,17 +8,28 @@
 //! queue, excess load is rejected at admission and the p99 of *served*
 //! requests stays flat while shed counts absorb the overload. The 2×
 //! row is the headline comparison; the 4×/8× rows show the growth trend.
+//!
+//! Two further scenarios cover PR 2's layers:
+//!
+//! - **mixed two-client overload** — a greedy client floods from many
+//!   threads while a light client issues paced requests. Under FIFO
+//!   the light client's p99 inflates with the greedy backlog; with
+//!   `Quota` + `FairQueue` the light client's p99 stays within ~2× of
+//!   its uncontended baseline and the greedy client absorbs the sheds.
+//! - **adaptive admission** — the queue capacity is left untuned
+//!   (4096) and `AdaptiveShed` alone derives its in-flight limit from
+//!   observed service time; served p99 lands near the delay budget.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use normq::coordinator::{ServeRequest, Server, ServerConfig};
 use normq::data::Corpus;
 use normq::generate::DecodeConfig;
 use normq::hmm::Hmm;
 use normq::lm::NgramLm;
-use normq::service::{Service, SharedService, Stack};
+use normq::service::{QuotaConfig, Service, SharedService, Stack};
 use normq::util::rng::Rng;
 use normq::util::timer::{fmt_secs, Stats};
 
@@ -122,6 +133,162 @@ fn run_config(corpus: &Corpus, with_shed: bool, burst: usize) -> RunReport {
     }
 }
 
+/// The mixed scenario's policy for the light/heavy client pair.
+enum MixedMode {
+    /// Light client alone: the uncontended baseline.
+    Alone,
+    /// Heavy flood through plain FIFO queueing.
+    Fifo,
+    /// Heavy flood with `Quota` + `FairQueue` isolation.
+    Fair,
+}
+
+struct MixedReport {
+    light_stats: Option<Stats>,
+    light_shed: usize,
+    heavy_ok: usize,
+    heavy_shed: usize,
+}
+
+/// Light client: paced singles, latency recorded per request. Heavy
+/// client (absent in `Alone`): `HEAVY_THREADS` back-to-back loops
+/// until the light client finishes.
+fn run_mixed(corpus: &Corpus, mode: MixedMode) -> MixedReport {
+    const HEAVY_THREADS: usize = 16;
+    const LIGHT_REQUESTS: usize = 12;
+    const LIGHT_PACE: Duration = Duration::from_millis(30);
+
+    let (lm, hmm) = build_model(corpus);
+    let cfg = ServerConfig {
+        workers: WORKERS,
+        // Deep queue: isolation must come from the fairness layers,
+        // not from a hand-tuned capacity.
+        queue_capacity: 4096,
+        decode: DecodeConfig { beam: 4, max_tokens: 12, ..Default::default() },
+        ..Default::default()
+    };
+    let server = Arc::new(Server::start(lm, hmm, corpus.clone(), cfg));
+    let metrics = server.metrics_handle();
+    let svc: SharedService<ServeRequest, normq::coordinator::Response> = match mode {
+        MixedMode::Alone | MixedMode::Fifo => Arc::new(Stack::new().service(Arc::clone(&server))),
+        MixedMode::Fair => Arc::new(
+            Stack::new()
+                // Generous enough for the light client's ~33 req/s,
+                // tight enough to deny a multi-hundred-req/s flood.
+                .quota(QuotaConfig::per_client(50.0, 8.0), Arc::clone(&metrics))
+                .fair_queue(WORKERS, 4, Arc::clone(&metrics))
+                .service(Arc::clone(&server)),
+        ),
+    };
+
+    let light_concepts = vec![corpus.lexicon.verbs[0].clone()];
+    let heavy_concepts: Vec<Vec<String>> = (0..4)
+        .map(|i| vec![corpus.lexicon.nouns[i].clone()])
+        .collect();
+    // Warm the table caches outside the measured window.
+    let _ = svc.call(ServeRequest::from_client(light_concepts.clone(), "light"));
+    for c in &heavy_concepts {
+        let _ = svc.call(ServeRequest::from_client(c.clone(), "heavy"));
+    }
+
+    let stop = AtomicBool::new(false);
+    let heavy_ok = AtomicUsize::new(0);
+    let heavy_shed = AtomicUsize::new(0);
+    let light_shed = AtomicUsize::new(0);
+    let light_lat: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        if !matches!(mode, MixedMode::Alone) {
+            for t in 0..HEAVY_THREADS {
+                let svc = &svc;
+                let (stop, heavy_ok, heavy_shed) = (&stop, &heavy_ok, &heavy_shed);
+                let concepts = &heavy_concepts[t % heavy_concepts.len()];
+                scope.spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        let req = ServeRequest::from_client(concepts.clone(), "heavy");
+                        match svc.call(req) {
+                            Ok(_) => {
+                                heavy_ok.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(_) => {
+                                heavy_shed.fetch_add(1, Ordering::Relaxed);
+                                // A denied flood retries immediately;
+                                // yield so the loop cannot livelock a
+                                // core on a zero-cost rejection path.
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                });
+            }
+        }
+        let (svc, stop, light_shed, light_lat) = (&svc, &stop, &light_shed, &light_lat);
+        let light_concepts = &light_concepts;
+        scope.spawn(move || {
+            for _ in 0..LIGHT_REQUESTS {
+                let req = ServeRequest::from_client(light_concepts.clone(), "light");
+                let t0 = Instant::now();
+                match svc.call(req) {
+                    Ok(_) => light_lat.lock().unwrap().push(t0.elapsed().as_secs_f64()),
+                    Err(_) => {
+                        light_shed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                std::thread::sleep(LIGHT_PACE);
+            }
+            stop.store(true, Ordering::Relaxed);
+        });
+    });
+    server.shutdown();
+
+    let light_lat = light_lat.into_inner().unwrap();
+    MixedReport {
+        light_stats: if light_lat.is_empty() { None } else { Some(Stats::of(&light_lat)) },
+        light_shed: light_shed.load(Ordering::Relaxed),
+        heavy_ok: heavy_ok.load(Ordering::Relaxed),
+        heavy_shed: heavy_shed.load(Ordering::Relaxed),
+    }
+}
+
+/// Untuned queue capacity + `AdaptiveShed` alone: fire an 8× burst and
+/// report served p99 against the delay budget and the converged limit.
+fn run_adaptive(corpus: &Corpus, budget: Duration, burst: usize) {
+    let (lm, hmm) = build_model(corpus);
+    let cfg = ServerConfig {
+        workers: WORKERS,
+        queue_capacity: 4096, // deliberately untuned
+        decode: DecodeConfig { beam: 4, max_tokens: 12, ..Default::default() },
+        ..Default::default()
+    };
+    let server = Arc::new(Server::start(lm, hmm, corpus.clone(), cfg));
+    let metrics = server.metrics_handle();
+    let svc: SharedService<ServeRequest, normq::coordinator::Response> = Arc::new(
+        Stack::new()
+            .adaptive_shed(budget, WORKERS, Arc::clone(&metrics))
+            .service(Arc::clone(&server)),
+    );
+
+    let concepts: Vec<Vec<String>> = (0..12)
+        .map(|i| vec![corpus.lexicon.nouns[i % corpus.lexicon.nouns.len()].clone()])
+        .collect();
+    for c in &concepts {
+        let _ = svc.call(ServeRequest::new(c.clone()));
+    }
+
+    let (served, shed, latencies) = drive_burst(&svc, &concepts, burst);
+    let limit = metrics.adaptive_limit.load(Ordering::Relaxed);
+    server.shutdown();
+    let (p50, p99) = if latencies.is_empty() {
+        ("n/a".into(), "n/a".into())
+    } else {
+        let s = Stats::of(&latencies);
+        (fmt_secs(s.p50), fmt_secs(s.p99))
+    };
+    println!(
+        "budget={:<8} served={served:<4} shed={shed:<4} p50={p50:<10} p99={p99:<10} converged limit={limit}",
+        fmt_secs(budget.as_secs_f64()),
+    );
+}
+
 fn main() {
     println!("== bench_service: overload p50/p99, load-shed on vs off ==");
     let corpus = Corpus::small(900);
@@ -178,5 +345,50 @@ fn main() {
     println!(
         "\nno-shed p99 grows with the overload factor (queue-wait makespan);\n\
          load-shed keeps served-request p99 flat and converts the excess into sheds."
+    );
+
+    println!("\n== mixed two-client overload: greedy flood vs paced light client ==");
+    println!(
+        "{:<12} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "config", "light p50", "light p99", "light max", "lt shed", "hv ok", "hv shed"
+    );
+    let mut light_alone_p99 = None;
+    let mut light_fair_p99 = None;
+    for (label, mode) in [
+        ("alone", MixedMode::Alone),
+        ("fifo", MixedMode::Fifo),
+        ("fair+quota", MixedMode::Fair),
+    ] {
+        let r = run_mixed(&corpus, mode);
+        let (p50, p99, max) = r
+            .light_stats
+            .map(|s| {
+                match label {
+                    "alone" => light_alone_p99 = Some(s.p99),
+                    "fair+quota" => light_fair_p99 = Some(s.p99),
+                    _ => {}
+                }
+                (fmt_secs(s.p50), fmt_secs(s.p99), fmt_secs(s.max))
+            })
+            .unwrap_or_else(|| ("n/a".into(), "n/a".into(), "n/a".into()));
+        println!(
+            "{label:<12} {p50:>10} {p99:>10} {max:>10} {:>10} {:>10} {:>10}",
+            r.light_shed, r.heavy_ok, r.heavy_shed
+        );
+    }
+    if let (Some(alone), Some(fair)) = (light_alone_p99, light_fair_p99) {
+        println!(
+            "\nisolation: light p99 under flood = {:.2}x uncontended (target <= 2x);\n\
+             the greedy client absorbs the sheds while the light client is never denied.",
+            fair / alone.max(1e-9)
+        );
+    }
+
+    println!("\n== adaptive admission: untuned queue, limit from Little's law ==");
+    let budget = Duration::from_secs_f64((service_time * 4.0).max(0.01));
+    run_adaptive(&corpus, budget, WORKERS * 8);
+    println!(
+        "served p99 tracks the delay budget with queue_capacity left at 4096:\n\
+         the in-flight limit is derived from observed service time, not hand-tuned."
     );
 }

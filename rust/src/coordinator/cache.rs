@@ -7,15 +7,19 @@ use std::collections::HashMap;
 use std::collections::VecDeque;
 use std::sync::Arc;
 
+/// A string-keyed LRU cache of shared values with hit/miss counters.
 pub struct LruCache<V> {
     capacity: usize,
     map: HashMap<String, Arc<V>>,
     order: VecDeque<String>,
+    /// Lookups answered from the cache.
     pub hits: u64,
+    /// Lookups that found nothing (the value had to be built).
     pub misses: u64,
 }
 
 impl<V> LruCache<V> {
+    /// An empty cache retaining at most `capacity` (min 1) entries.
     pub fn new(capacity: usize) -> Self {
         LruCache {
             capacity: capacity.max(1),
@@ -26,16 +30,20 @@ impl<V> LruCache<V> {
         }
     }
 
+    /// Entries currently cached.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// True when nothing is cached.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
 
-    /// Get or build the value for `key`.
-    pub fn get_or_insert_with(&mut self, key: &str, build: impl FnOnce() -> V) -> Arc<V> {
+    /// Look `key` up, bumping it to most-recently-used on a hit. Counts
+    /// a hit or a miss; pair with [`LruCache::insert`] when the build
+    /// can fail or be abandoned (e.g. a deadline firing mid-build).
+    pub fn get(&mut self, key: &str) -> Option<Arc<V>> {
         if let Some(v) = self.map.get(key) {
             self.hits += 1;
             let v = Arc::clone(v);
@@ -44,11 +52,25 @@ impl<V> LruCache<V> {
                 self.order.remove(pos);
             }
             self.order.push_back(key.to_string());
-            return v;
+            Some(v)
+        } else {
+            self.misses += 1;
+            None
         }
-        self.misses += 1;
-        let v = Arc::new(build());
-        if self.map.len() >= self.capacity {
+    }
+
+    /// Cache `value` under `key` (evicting the LRU entry at capacity)
+    /// and return the shared handle. Re-inserting an existing key
+    /// replaces the value and bumps it to most-recently-used. Does not
+    /// count a hit or miss — the preceding [`LruCache::get`] already
+    /// did.
+    pub fn insert(&mut self, key: &str, value: V) -> Arc<V> {
+        let v = Arc::new(value);
+        if let Some(pos) = self.order.iter().position(|k| k == key) {
+            // Replacement: drop the stale LRU position so the key never
+            // occupies two slots in the eviction order.
+            self.order.remove(pos);
+        } else if self.map.len() >= self.capacity {
             if let Some(evict) = self.order.pop_front() {
                 self.map.remove(&evict);
             }
@@ -56,6 +78,14 @@ impl<V> LruCache<V> {
         self.map.insert(key.to_string(), Arc::clone(&v));
         self.order.push_back(key.to_string());
         v
+    }
+
+    /// Get or build the value for `key`.
+    pub fn get_or_insert_with(&mut self, key: &str, build: impl FnOnce() -> V) -> Arc<V> {
+        match self.get(key) {
+            Some(v) => v,
+            None => self.insert(key, build()),
+        }
     }
 }
 
@@ -84,6 +114,35 @@ mod tests {
         assert_eq!(c.len(), 2);
         c.get_or_insert_with("b", || 22); // miss: rebuilt
         assert_eq!(c.misses, 4);
+    }
+
+    #[test]
+    fn get_insert_pair_supports_abandoned_builds() {
+        let mut c: LruCache<u32> = LruCache::new(2);
+        // Miss, but the build is abandoned (deadline fired): nothing cached.
+        assert!(c.get("a").is_none());
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.misses, 1);
+        // Second attempt misses again and completes the build.
+        assert!(c.get("a").is_none());
+        let v = c.insert("a", 7);
+        assert_eq!(*v, 7);
+        assert_eq!(*c.get("a").unwrap(), 7);
+        assert_eq!((c.hits, c.misses), (1, 2));
+    }
+
+    #[test]
+    fn reinserting_a_key_replaces_without_duplicating_lru_slots() {
+        let mut c: LruCache<u32> = LruCache::new(2);
+        c.insert("a", 1);
+        c.insert("b", 3);
+        c.insert("a", 2); // replacement: new value, bumped to MRU
+        assert_eq!(c.len(), 2);
+        c.insert("c", 4); // evicts b (the LRU), not the re-inserted a
+        assert_eq!(c.len(), 2);
+        assert_eq!(*c.get("a").unwrap(), 2);
+        assert!(c.get("b").is_none());
+        assert!(c.get("c").is_some());
     }
 
     #[test]

@@ -2,15 +2,22 @@
 //!
 //! Counters cover the whole admission path: intake (`submitted`,
 //! `rejected`), the middleware stack (`shed`, `timed_out`, `hedged`,
-//! `hedge_wins` — see [`crate::service`]), and the decode plane
-//! (`completed`, `satisfied`, table-cache hits/misses). Latency and
-//! queue-wait samples go through fixed-size reservoir sampling
-//! (Vitter's Algorithm R) so memory stays bounded under sustained
-//! traffic while quantiles remain an unbiased estimate of the full
-//! stream.
+//! `hedge_wins`, `quota_denied`, `fair_shed`, `adaptive_shed` — see
+//! [`crate::service`]), and the decode plane (`completed`,
+//! `satisfied`, table-cache hits/misses). Latency and queue-wait
+//! samples go through fixed-size reservoir sampling (Vitter's
+//! Algorithm R) so memory stays bounded under sustained traffic while
+//! quantiles remain an unbiased estimate of the full stream.
+//!
+//! Per-client attribution lives in [`ClientStats`], handed out by
+//! [`Metrics::client`]: the fairness layers charge sheds, quota
+//! denials and queue depth to the client that caused them, so a
+//! greedy client's overload shows up in *its* row of
+//! [`Metrics::client_summary`] rather than as anonymous global load.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::util::rng::Rng;
 use crate::util::timer::Stats;
@@ -32,6 +39,7 @@ pub struct Reservoir {
 }
 
 impl Reservoir {
+    /// An empty reservoir retaining at most `cap` samples (min 1).
     pub fn new(cap: usize) -> Self {
         let cap = cap.max(1);
         Reservoir {
@@ -42,6 +50,7 @@ impl Reservoir {
         }
     }
 
+    /// Observe one value; retained with probability `cap/seen`.
     pub fn push(&mut self, x: f64) {
         self.seen += 1;
         if self.samples.len() < self.cap {
@@ -59,23 +68,66 @@ impl Reservoir {
         self.seen
     }
 
+    /// The retained sample (an unbiased subset of the stream).
     pub fn samples(&self) -> &[f64] {
         &self.samples
     }
 
+    /// True before the first observation.
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
 }
 
+/// Per-client counter block, created on first touch by
+/// [`Metrics::client`]. All counters are charged by the layer that
+/// made the decision: the coordinator (submitted/completed/shed at
+/// intake), `Quota` (quota_denied), `FairQueue` (shed on overflow,
+/// queue_depth while waiting), `AdaptiveShed` and `LoadShed` (shed).
+#[derive(Debug, Default)]
+pub struct ClientStats {
+    /// Requests this client submitted to the coordinator.
+    pub submitted: AtomicU64,
+    /// Requests answered by a decode worker (including timed-out ones).
+    pub completed: AtomicU64,
+    /// Admission rejections charged to this client (fair-queue
+    /// overflow, adaptive/static shed, or a full intake queue).
+    pub shed: AtomicU64,
+    /// Rejections by the `Quota` middleware (bucket + overflow empty).
+    pub quota_denied: AtomicU64,
+    /// Calls currently waiting in this client's fair queue (gauge).
+    pub queue_depth: AtomicU64,
+}
+
+impl ClientStats {
+    /// One-line rendering used by [`Metrics::client_summary`].
+    fn summary(&self) -> String {
+        format!(
+            "submitted={} completed={} shed={} quota_denied={} queue_depth={}",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
+            self.quota_denied.load(Ordering::Relaxed),
+            self.queue_depth.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// The serving metrics registry; one instance is shared by the
+/// coordinator and every middleware layer in front of it.
 #[derive(Debug)]
 pub struct Metrics {
+    /// Requests submitted to the coordinator intake.
     pub submitted: AtomicU64,
+    /// Requests answered by a decode worker.
     pub completed: AtomicU64,
     /// Bounced at the coordinator intake (queue full).
     pub rejected: AtomicU64,
+    /// Completed requests whose generation satisfied the constraint.
     pub satisfied: AtomicU64,
+    /// Constraint-table cache hits (dispatcher, per concept group).
     pub table_cache_hits: AtomicU64,
+    /// Constraint-table cache misses (a table had to be built).
     pub table_cache_misses: AtomicU64,
     /// Rejected by the `LoadShed` middleware before reaching the queue.
     pub shed: AtomicU64,
@@ -85,6 +137,15 @@ pub struct Metrics {
     pub hedged: AtomicU64,
     /// Hedged requests where the second dispatch answered first.
     pub hedge_wins: AtomicU64,
+    /// Requests denied by the `Quota` middleware.
+    pub quota_denied: AtomicU64,
+    /// Requests shed by `FairQueue` (per-client queue overflow).
+    pub fair_shed: AtomicU64,
+    /// Requests shed by `AdaptiveShed` (derived in-flight limit hit).
+    pub adaptive_shed: AtomicU64,
+    /// Gauge: the in-flight limit `AdaptiveShed` most recently derived
+    /// from observed service time (Little's law).
+    pub adaptive_limit: AtomicU64,
     /// Approximate intake-queue depth (requests accepted but not yet
     /// picked up by the dispatcher).
     pub queue_depth: AtomicU64,
@@ -93,6 +154,13 @@ pub struct Metrics {
     /// admission signal behind `Server::poll_ready`: the intake queue
     /// alone drains into the dispatcher too fast to reflect saturation.
     pub in_flight: AtomicU64,
+    /// Per-client breakdown, keyed by `Keyed::client_id`. Entries are
+    /// created on first touch and kept for the registry's lifetime
+    /// (client cardinality is assumed bounded — ids are tenants or API
+    /// keys, not request ids). Read-mostly after warmup, so lookups
+    /// take a shared lock: rejection hot paths in the shed layers do
+    /// not serialize on each other.
+    clients: RwLock<HashMap<String, Arc<ClientStats>>>,
     /// end-to-end latencies (seconds), reservoir-sampled
     latencies: Mutex<Reservoir>,
     /// time spent queued before a worker picked the request up
@@ -106,10 +174,12 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// A fresh registry with the default reservoir capacity.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// A registry whose latency reservoirs retain at most `cap` samples.
     pub fn with_reservoir(cap: usize) -> Self {
         Metrics {
             submitted: AtomicU64::new(0),
@@ -122,18 +192,64 @@ impl Metrics {
             timed_out: AtomicU64::new(0),
             hedged: AtomicU64::new(0),
             hedge_wins: AtomicU64::new(0),
+            quota_denied: AtomicU64::new(0),
+            fair_shed: AtomicU64::new(0),
+            adaptive_shed: AtomicU64::new(0),
+            adaptive_limit: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
             in_flight: AtomicU64::new(0),
+            clients: RwLock::new(HashMap::new()),
             latencies: Mutex::new(Reservoir::new(cap)),
             queue_waits: Mutex::new(Reservoir::new(cap)),
         }
     }
 
+    /// The counter block for `client_id`, created on first touch.
+    /// Existing clients resolve through a shared read lock with no
+    /// allocation; layers additionally cache the returned handle where
+    /// they can (the lock is per-lookup, not per-increment).
+    pub fn client(&self, client_id: &str) -> Arc<ClientStats> {
+        if let Some(stats) = self.clients.read().unwrap().get(client_id) {
+            return Arc::clone(stats);
+        }
+        let mut clients = self.clients.write().unwrap();
+        Arc::clone(
+            clients
+                .entry(client_id.to_string())
+                .or_insert_with(|| Arc::new(ClientStats::default())),
+        )
+    }
+
+    /// Every client seen so far, sorted by id.
+    pub fn clients_snapshot(&self) -> Vec<(String, Arc<ClientStats>)> {
+        let clients = self.clients.read().unwrap();
+        let mut rows: Vec<_> = clients
+            .iter()
+            .map(|(k, v)| (k.clone(), Arc::clone(v)))
+            .collect();
+        rows.sort_by(|a, b| a.0.cmp(&b.0));
+        rows
+    }
+
+    /// Multi-line per-client rendering (one `id: counters…` row per
+    /// client); empty string when no client was ever attributed.
+    pub fn client_summary(&self) -> String {
+        self.clients_snapshot()
+            .iter()
+            .map(|(id, stats)| format!("client {id}: {}", stats.summary()))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// Record one completed request's end-to-end latency and the part
+    /// of it spent queued (both in seconds).
     pub fn record_latency(&self, total: f64, queued: f64) {
         self.latencies.lock().unwrap().push(total);
         self.queue_waits.lock().unwrap().push(queued);
     }
 
+    /// Quantiles over the (reservoir-sampled) end-to-end latencies;
+    /// `None` before the first completion.
     pub fn latency_stats(&self) -> Option<Stats> {
         let l = self.latencies.lock().unwrap();
         if l.is_empty() {
@@ -143,6 +259,8 @@ impl Metrics {
         }
     }
 
+    /// Quantiles over the (reservoir-sampled) queue waits; `None`
+    /// before the first completion.
     pub fn queue_stats(&self) -> Option<Stats> {
         let q = self.queue_waits.lock().unwrap();
         if q.is_empty() {
@@ -152,6 +270,8 @@ impl Metrics {
         }
     }
 
+    /// One-line global rendering of every counter plus the latency
+    /// quantiles; per-client rows live in [`Metrics::client_summary`].
     pub fn summary(&self) -> String {
         let lat = self
             .latency_stats()
@@ -166,11 +286,15 @@ impl Metrics {
             })
             .unwrap_or_else(|| "latency n/a".into());
         format!(
-            "submitted={} completed={} rejected={} shed={} timed_out={} hedged={} hedge_wins={} satisfied={} cache h/m={}/{} {}",
+            "submitted={} completed={} rejected={} shed={} quota_denied={} fair_shed={} adaptive_shed={} adaptive_limit={} timed_out={} hedged={} hedge_wins={} satisfied={} cache h/m={}/{} {}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.shed.load(Ordering::Relaxed),
+            self.quota_denied.load(Ordering::Relaxed),
+            self.fair_shed.load(Ordering::Relaxed),
+            self.adaptive_shed.load(Ordering::Relaxed),
+            self.adaptive_limit.load(Ordering::Relaxed),
             self.timed_out.load(Ordering::Relaxed),
             self.hedged.load(Ordering::Relaxed),
             self.hedge_wins.load(Ordering::Relaxed),
@@ -197,6 +321,24 @@ mod tests {
         assert_eq!(s.n, 2);
         assert!((s.mean - 0.015).abs() < 1e-9);
         assert!(m.summary().contains("submitted=3"));
+    }
+
+    #[test]
+    fn client_stats_attribute_per_client() {
+        let m = Metrics::new();
+        m.client("alice").submitted.fetch_add(2, Ordering::Relaxed);
+        m.client("alice").completed.fetch_add(2, Ordering::Relaxed);
+        m.client("bob").quota_denied.fetch_add(1, Ordering::Relaxed);
+        // Handles are shared, not copies.
+        assert_eq!(m.client("alice").submitted.load(Ordering::Relaxed), 2);
+        let rows = m.clients_snapshot();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].0, "alice");
+        assert_eq!(rows[1].0, "bob");
+        let summary = m.client_summary();
+        assert!(summary.contains("client alice: submitted=2"), "{summary}");
+        assert!(summary.contains("client bob:"), "{summary}");
+        assert!(summary.contains("quota_denied=1"), "{summary}");
     }
 
     #[test]

@@ -36,22 +36,55 @@ use crate::dfa::Dfa;
 use crate::generate::{decode_with_table, ConstraintTable, DecodeConfig, Generation};
 use crate::hmm::Hmm;
 use crate::lm::LanguageModel;
-use crate::service::{Deadlined, Expirable, Readiness, Service, ServiceError};
+use crate::service::{Deadlined, Expirable, Keyed, Readiness, Service, ServiceError};
 use cache::LruCache;
-use metrics::Metrics;
+use metrics::{ClientStats, Metrics};
+
+/// The client id stamped on requests that never declared one.
+pub const ANON_CLIENT: &str = "anon";
 
 /// What a client asks for: a concept set to plant, plus an optional
 /// deadline (stamped by the `Timeout` middleware, honored by the
-/// decode loop).
+/// decode loop) and the client principal the fairness layers and
+/// per-client metrics key on.
 #[derive(Clone, Debug)]
 pub struct ServeRequest {
+    /// Concept words the generation must contain.
     pub concepts: Vec<String>,
+    /// Cooperative deadline; see [`crate::generate::DecodeConfig::deadline`].
     pub deadline: Option<Instant>,
+    /// Client principal ([`ANON_CLIENT`] unless declared) — the key
+    /// for `Quota` buckets, `FairQueue` queues and per-client metrics.
+    pub client_id: String,
+    /// Fair-queueing weight (≥ 1); see [`Keyed::weight`].
+    pub weight: u32,
 }
 
 impl ServeRequest {
+    /// An anonymous weight-1 request.
     pub fn new(concepts: Vec<String>) -> Self {
-        ServeRequest { concepts, deadline: None }
+        ServeRequest { concepts, deadline: None, client_id: ANON_CLIENT.into(), weight: 1 }
+    }
+
+    /// A request attributed to `client_id` (weight 1).
+    pub fn from_client(concepts: Vec<String>, client_id: impl Into<String>) -> Self {
+        ServeRequest { client_id: client_id.into(), ..ServeRequest::new(concepts) }
+    }
+
+    /// Set the fair-queueing weight (values below 1 are read as 1).
+    pub fn with_weight(mut self, weight: u32) -> Self {
+        self.weight = weight;
+        self
+    }
+}
+
+impl Keyed for ServeRequest {
+    fn client_id(&self) -> &str {
+        &self.client_id
+    }
+
+    fn weight(&self) -> u32 {
+        self.weight.max(1)
     }
 }
 
@@ -71,22 +104,38 @@ impl Deadlined for ServeRequest {
 /// Internal queued request (reply channel + bookkeeping).
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Coordinator-assigned sequence number.
     pub id: u64,
+    /// Concept words the generation must contain.
     pub concepts: Vec<String>,
+    /// Where the worker sends the [`Response`].
     pub reply: Sender<Response>,
+    /// When the request entered the intake queue.
     pub submitted_at: Instant,
+    /// Cooperative deadline carried from the [`ServeRequest`].
     pub deadline: Option<Instant>,
+    /// The client's metrics block, resolved once at submit so the
+    /// dispatcher and workers attribute completions without re-taking
+    /// the registry's client-map lock per request.
+    pub client_stats: Arc<ClientStats>,
 }
 
+/// What the coordinator answers: the generated text plus timing
+/// breakdown.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// The [`Request::id`] this answers.
     pub id: u64,
+    /// The decoded generation, rendered through the vocabulary.
     pub text: String,
+    /// Whether the DFA accepted (every requested concept was planted).
     pub satisfied: bool,
     /// The request's deadline fired before decoding finished; `text`
     /// holds whatever was generated by then (possibly empty).
     pub timed_out: bool,
+    /// Submission-to-response wall time.
     pub latency: Duration,
+    /// The part of `latency` spent waiting for dispatch.
     pub queue_wait: Duration,
 }
 
@@ -96,15 +145,21 @@ impl Expirable for Response {
     }
 }
 
+/// Sizing and decode parameters for [`Server::start`].
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
+    /// Decode worker threads.
     pub workers: usize,
+    /// Unanswered-request bound: `poll_ready` reports `Busy` (and
+    /// `submit` rejects) past this many in-flight requests.
     pub queue_capacity: usize,
     /// How long the dispatcher waits to accumulate a batch.
     pub batch_window: Duration,
     /// Max requests dispatched as one batch group.
     pub max_batch: usize,
+    /// Constraint-table LRU cache capacity (entries, one per concept set).
     pub table_cache: usize,
+    /// Beam-search configuration shared by every request.
     pub decode: DecodeConfig,
 }
 
@@ -138,6 +193,8 @@ struct Batch {
     dispatched_at: Instant,
 }
 
+/// The serving coordinator: intake queue, batching dispatcher and
+/// decode worker pool. See the [module docs](self).
 pub struct Server {
     /// `None` after shutdown; closing the sender drains the pipeline.
     /// Held only long enough to clone the sender — submissions send
@@ -153,6 +210,7 @@ pub struct Server {
 }
 
 impl Server {
+    /// Spawn the dispatcher and decode workers and start serving.
     pub fn start(lm: Arc<dyn LanguageModel>, hmm: Hmm, corpus: Corpus, cfg: ServerConfig) -> Server {
         let metrics = Arc::new(Metrics::new());
         let queue_capacity = cfg.queue_capacity;
@@ -202,14 +260,17 @@ impl Server {
     pub fn submit_request(&self, req: ServeRequest) -> Result<Receiver<Response>, ServiceError> {
         let (reply, rx) = std::sync::mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let client_stats = self.metrics.client(&req.client_id);
         let queued = Request {
             id,
             concepts: req.concepts,
             reply,
             submitted_at: Instant::now(),
             deadline: req.deadline,
+            client_stats: Arc::clone(&client_stats),
         };
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        client_stats.submitted.fetch_add(1, Ordering::Relaxed);
         // Clone the sender under the lock, send outside it: the global
         // mutex never spans the (contended) channel operation.
         let tx = {
@@ -229,6 +290,7 @@ impl Server {
                 self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
                 self.metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                client_stats.shed.fetch_add(1, Ordering::Relaxed);
                 Err(ServiceError::Overloaded)
             }
             Err(TrySendError::Disconnected(_)) => {
@@ -239,6 +301,7 @@ impl Server {
         }
     }
 
+    /// The serving metrics registry.
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
@@ -325,6 +388,27 @@ fn concept_key(concepts: &[String]) -> String {
     sorted.join("\u{1f}")
 }
 
+/// Reply `timed_out` to a request whose deadline fired before any
+/// decode work could start (its group's table build expired), and
+/// release its admission slot. Mirrors the worker's bookkeeping except
+/// that no latency is recorded — a timed-out answer is not decode work.
+fn answer_timed_out(shared: &Shared, req: Request) {
+    shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
+    req.client_stats.completed.fetch_add(1, Ordering::Relaxed);
+    let waited = req.submitted_at.elapsed();
+    // Release before replying so a caller that sees the response also
+    // sees the freed admission slot.
+    shared.metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
+    let _ = req.reply.send(Response {
+        id: req.id,
+        text: String::new(),
+        satisfied: false,
+        timed_out: true,
+        latency: waited,
+        queue_wait: waited,
+    });
+}
+
 fn dispatcher_loop(intake: Receiver<Request>, work: SyncSender<Batch>, shared: Arc<Shared>) {
     let window = shared.cfg.batch_window;
     let max_batch = shared.cfg.max_batch;
@@ -371,25 +455,48 @@ fn dispatcher_loop(intake: Receiver<Request>, work: SyncSender<Batch>, shared: A
                 continue;
             }
             let concepts = requests[0].concepts.clone();
-            let state = {
-                let mut cache = shared.tables.lock().unwrap();
-                let hits0 = cache.hits;
-                let state = cache.get_or_insert_with(&key, || {
+            // A cold concept set pays the O(T·D·H²) table build before
+            // any member decodes, so the build honors the group's
+            // deadline: the *latest* deadline in the group (as long as
+            // one member is still waiting the table is worth
+            // finishing); a member with no deadline keeps it unbounded.
+            let build_deadline = if requests.iter().any(|r| r.deadline.is_none()) {
+                None
+            } else {
+                requests.iter().filter_map(|r| r.deadline).max()
+            };
+            let cached = shared.tables.lock().unwrap().get(&key);
+            let state = match cached {
+                Some(state) => {
+                    shared.metrics.table_cache_hits.fetch_add(1, Ordering::Relaxed);
+                    state
+                }
+                None => {
+                    shared.metrics.table_cache_misses.fetch_add(1, Ordering::Relaxed);
                     let keywords: Vec<Vec<usize>> = concepts
                         .iter()
                         .map(|c| vec![shared.corpus.vocab.id(c)])
                         .collect();
                     let dfa = Dfa::from_keywords(&keywords, shared.corpus.vocab.len());
-                    let table =
-                        ConstraintTable::build(&shared.hmm, &dfa, shared.cfg.decode.max_tokens);
-                    (dfa, table)
-                });
-                if cache.hits > hits0 {
-                    shared.metrics.table_cache_hits.fetch_add(1, Ordering::Relaxed);
-                } else {
-                    shared.metrics.table_cache_misses.fetch_add(1, Ordering::Relaxed);
+                    match ConstraintTable::build_deadlined(
+                        &shared.hmm,
+                        &dfa,
+                        shared.cfg.decode.max_tokens,
+                        build_deadline,
+                    ) {
+                        Some(table) => shared.tables.lock().unwrap().insert(&key, (dfa, table)),
+                        None => {
+                            // Every deadline in the group fired before
+                            // the table was complete: answer timed_out
+                            // now (a partial table is useless and is
+                            // not cached) instead of queueing dead work.
+                            for req in requests {
+                                answer_timed_out(&shared, req);
+                            }
+                            continue;
+                        }
+                    }
                 }
-                state
             };
             // Split oversized groups into max_batch chunks.
             let mut requests = requests;
@@ -457,6 +564,7 @@ fn worker_loop(work: Arc<Mutex<Receiver<Batch>>>, shared: Arc<Shared>) {
             };
             let latency = req.submitted_at.elapsed();
             shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
+            req.client_stats.completed.fetch_add(1, Ordering::Relaxed);
             if gen.satisfied {
                 shared.metrics.satisfied.fetch_add(1, Ordering::Relaxed);
             }
@@ -602,6 +710,23 @@ mod tests {
         assert!(resp.timed_out);
         assert!(!resp.satisfied);
         assert!(resp.text.is_empty());
+        server.shutdown();
+    }
+
+    #[test]
+    fn per_client_metrics_attribute_completions() {
+        let (server, corpus) = make_server(2, 32);
+        for i in 0..6 {
+            let id = if i % 3 == 0 { "light" } else { "heavy" };
+            let req = ServeRequest::from_client(vec![corpus.lexicon.nouns[i % 2].clone()], id);
+            server.call(req).unwrap();
+        }
+        let m = server.metrics();
+        assert_eq!(m.client("light").submitted.load(Ordering::Relaxed), 2);
+        assert_eq!(m.client("light").completed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.client("heavy").submitted.load(Ordering::Relaxed), 4);
+        assert_eq!(m.client("heavy").completed.load(Ordering::Relaxed), 4);
+        assert!(m.client_summary().contains("client heavy:"));
         server.shutdown();
     }
 

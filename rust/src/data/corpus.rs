@@ -14,8 +14,10 @@ use crate::util::rng::Rng;
 
 /// A template is a sequence of slots.
 #[derive(Clone, Copy, Debug, PartialEq)]
+#[allow(missing_docs)] // variants are the POS classes
 pub enum Slot {
-    Word(&'static str), // literal function word
+    /// A literal function word.
+    Word(&'static str),
     Noun,
     Verb,
     Adj,
@@ -42,17 +44,23 @@ pub const TEMPLATES: &[&[Slot]] = &[
 /// One evaluation item: concepts that must appear, plus references.
 #[derive(Clone, Debug)]
 pub struct EvalItem {
+    /// Content words the generation must contain.
     pub concepts: Vec<String>,
+    /// Reference sentences containing those concepts.
     pub references: Vec<String>,
 }
 
+/// The synthetic corpus: a lexicon plus its vocabulary.
 #[derive(Clone, Debug)]
 pub struct Corpus {
+    /// The content-word classes sentences are built from.
     pub lexicon: Lexicon,
+    /// The closed vocabulary over lexicon + function words + specials.
     pub vocab: Vocab,
 }
 
 impl Corpus {
+    /// The paper-scale corpus (≈1000-word vocabulary) for `seed`.
     pub fn new(seed: u64) -> Corpus {
         let lexicon = Lexicon::default_sizes(seed);
         let vocab = Vocab::new(lexicon.all_words());

@@ -9,10 +9,13 @@
 
 use crate::util::rng::Rng;
 
+/// Syllable onsets for generated words.
 pub const ONSETS: [&str; 14] = [
     "b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z",
 ];
+/// Syllable nuclei (vowels) for generated words.
 pub const NUCLEI: [&str; 5] = ["a", "e", "i", "o", "u"];
+/// Syllable codas for generated words ("" = open syllable).
 pub const CODAS: [&str; 6] = ["", "n", "r", "s", "l", "k"];
 
 /// Function words shared by every template (closed class).
@@ -20,7 +23,9 @@ pub const FUNCTION_WORDS: [&str; 12] = [
     "the", "a", "in", "on", "near", "with", "and", "to", "at", "by", "of", "under",
 ];
 
+/// The generated content-word classes (disjoint by suffix).
 #[derive(Clone, Debug)]
+#[allow(missing_docs)] // field names are the POS classes
 pub struct Lexicon {
     pub nouns: Vec<String>,
     pub verbs: Vec<String>,
@@ -63,6 +68,7 @@ impl Lexicon {
         Lexicon { nouns, verbs, adjectives, places }
     }
 
+    /// The paper-scale lexicon (≈1000 words total).
     pub fn default_sizes(seed: u64) -> Lexicon {
         Lexicon::generate(seed, 400, 250, 180, 120)
     }

@@ -7,9 +7,12 @@
 
 use std::collections::HashMap;
 
+/// The end-of-sequence token id (always 0).
 pub const EOS: usize = 0;
+/// The unknown-word token id (always 1).
 pub const UNK: usize = 1;
 
+/// A closed vocabulary with word↔id maps.
 #[derive(Clone, Debug)]
 pub struct Vocab {
     words: Vec<String>,
@@ -30,22 +33,27 @@ impl Vocab {
         Vocab { words: all, index }
     }
 
+    /// Vocabulary size, specials included.
     pub fn len(&self) -> usize {
         self.words.len()
     }
 
+    /// Always false in practice (specials are prepended).
     pub fn is_empty(&self) -> bool {
         self.words.is_empty()
     }
 
+    /// The id of `word`, or [`UNK`] for out-of-vocabulary words.
     pub fn id(&self, word: &str) -> usize {
         *self.index.get(word).unwrap_or(&UNK)
     }
 
+    /// The word for `id`, or `"<unk>"` for out-of-range ids.
     pub fn word(&self, id: usize) -> &str {
         self.words.get(id).map(|s| s.as_str()).unwrap_or("<unk>")
     }
 
+    /// Whether `word` is in the vocabulary.
     pub fn contains(&self, word: &str) -> bool {
         self.index.contains_key(word)
     }
@@ -74,6 +82,7 @@ impl Vocab {
         words.join(" ")
     }
 
+    /// The full word list, id-ordered.
     pub fn words(&self) -> &[String] {
         &self.words
     }

@@ -19,7 +19,9 @@ use std::collections::HashMap;
 /// A compiled keyword-constraint DFA over token ids.
 #[derive(Clone, Debug)]
 pub struct Dfa {
+    /// Vocabulary size the DFA is defined over.
     pub vocab: usize,
+    /// The keyword phrases (token-id sequences) being planted.
     pub keywords: Vec<Vec<usize>>,
     n_states: usize,
     start: u32,
@@ -174,14 +176,17 @@ impl Dfa {
         }
     }
 
+    /// Number of DFA states.
     pub fn n_states(&self) -> usize {
         self.n_states
     }
 
+    /// The start state.
     pub fn start(&self) -> u32 {
         self.start
     }
 
+    /// Whether `state` is accepting (every keyword matched).
     #[inline]
     pub fn is_accepting(&self, state: u32) -> bool {
         self.accepting[state as usize]

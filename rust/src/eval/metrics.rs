@@ -130,6 +130,7 @@ pub struct CiderScorer {
 }
 
 impl CiderScorer {
+    /// Fit document frequencies over the reference corpus.
     pub fn fit(references: &[Vec<String>]) -> CiderScorer {
         let mut df: [HashMap<Vec<String>, f64>; 4] = Default::default();
         for refs in references {

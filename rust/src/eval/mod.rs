@@ -14,6 +14,7 @@ use metrics::{bleu4, rouge_l_multi, spice_proxy, CiderScorer};
 
 /// The five numbers every table in the paper reports (x100).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[allow(missing_docs)] // field names are the metric names
 pub struct Scores {
     pub success_rate: f64,
     pub rouge: f64,
@@ -45,8 +46,11 @@ impl Scores {
 /// One generated output with its item index.
 #[derive(Clone, Debug, Default)]
 pub struct EvalOutput {
+    /// Index into the evaluation set.
     pub item: usize,
+    /// The decoded sentence.
     pub text: String,
+    /// Whether every concept was planted.
     pub satisfied: bool,
 }
 

@@ -31,7 +31,9 @@ pub use product::ConstraintTable;
 /// default here, configurable from the CLI).
 #[derive(Clone, Debug)]
 pub struct DecodeConfig {
+    /// Beam width.
     pub beam: usize,
+    /// Maximum generation length (also the table budget T).
     pub max_tokens: usize,
     /// Weight of the symbolic (HMM acceptance) term.
     pub lambda: f32,
@@ -65,7 +67,9 @@ struct Beam {
 /// Result of decoding one request.
 #[derive(Clone, Debug)]
 pub struct Generation {
+    /// The generated token ids (no trailing `<eos>`).
     pub tokens: Vec<usize>,
+    /// Combined neural+symbolic beam score.
     pub score: f64,
     /// Whether the DFA accepted (all keywords present).
     pub satisfied: bool,
@@ -80,7 +84,10 @@ fn maybe_qdq(v: &mut [f32], bits: Option<u32>) {
     }
 }
 
-/// Decode one constrained request.
+/// Decode one constrained request. The deadline (if any) covers the
+/// constraint-table build as well as the beam loop: a request whose
+/// deadline fires mid-build comes back `timed_out` without paying the
+/// remaining table-construction cost.
 pub fn decode(
     lm: &dyn LanguageModel,
     hmm: &Hmm,
@@ -89,7 +96,17 @@ pub fn decode(
 ) -> Generation {
     let vocab = hmm.vocab();
     assert_eq!(lm.vocab(), vocab, "LM/HMM vocabulary mismatch");
-    let table = ConstraintTable::build(hmm, dfa, cfg.max_tokens);
+    let table = match ConstraintTable::build_deadlined(hmm, dfa, cfg.max_tokens, cfg.deadline) {
+        Some(table) => table,
+        None => {
+            return Generation {
+                tokens: Vec::new(),
+                score: f64::NEG_INFINITY,
+                satisfied: false,
+                timed_out: true,
+            }
+        }
+    };
     decode_with_table(lm, hmm, dfa, &table, cfg)
 }
 

@@ -21,6 +21,7 @@
 use crate::dfa::Dfa;
 use crate::hmm::Hmm;
 
+/// The precomputed HMM×DFA acceptance table (see the [module docs](self)).
 #[derive(Clone, Debug)]
 pub struct ConstraintTable {
     h_n: usize,
@@ -35,6 +36,27 @@ pub struct ConstraintTable {
 impl ConstraintTable {
     /// Build the table for budgets 0..=max_budget.
     pub fn build(hmm: &Hmm, dfa: &Dfa, max_budget: usize) -> ConstraintTable {
+        Self::build_deadlined(hmm, dfa, max_budget, None)
+            .expect("unbounded build cannot expire")
+    }
+
+    /// [`ConstraintTable::build`] with a cooperative deadline: the
+    /// build is the largest fixed cost a timed-out request can still
+    /// pay (O(T·D·H²) for a cold concept set), so the serving path
+    /// passes the request deadline through and stops paying for work
+    /// nobody is waiting on. The deadline is checked once per budget
+    /// level (the outer O(T) loop); `None` is returned if it fires
+    /// before the table is complete — a partial table is useless, so
+    /// nothing is handed back or cached.
+    pub fn build_deadlined(
+        hmm: &Hmm,
+        dfa: &Dfa,
+        max_budget: usize,
+        deadline: Option<std::time::Instant>,
+    ) -> Option<ConstraintTable> {
+        if deadline.is_some_and(|d| std::time::Instant::now() >= d) {
+            return None;
+        }
         let h_n = hmm.hidden();
         let d_n = dfa.n_states();
         let plane = d_n * h_n;
@@ -57,6 +79,9 @@ impl ConstraintTable {
 
         let mut exc_sum = vec![0f32; h_n];
         for r in 1..=max_budget {
+            if deadline.is_some_and(|d| std::time::Instant::now() >= d) {
+                return None;
+            }
             let (prev_c_all, rest) = c.split_at_mut(r * plane);
             let prev_c = &prev_c_all[(r - 1) * plane..r * plane];
             let cur_c = &mut rest[..plane];
@@ -90,7 +115,7 @@ impl ConstraintTable {
                 hmm.trans.matvec(&a_r, &mut cur_c[d * h_n..(d + 1) * h_n]);
             }
         }
-        ConstraintTable { h_n, d_n, max_budget, a, c }
+        Some(ConstraintTable { h_n, d_n, max_budget, a, c })
     }
 
     /// A[r][d][·]: acceptance probability per HMM state.
@@ -107,6 +132,7 @@ impl ConstraintTable {
         &self.c[base..base + self.h_n]
     }
 
+    /// The largest remaining-token budget the table covers.
     pub fn max_budget(&self) -> usize {
         self.max_budget
     }
@@ -188,6 +214,30 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn expired_deadline_aborts_the_build() {
+        let mut rng = Rng::seeded(75);
+        let hmm = Hmm::random(4, 8, 0.5, 0.5, &mut rng);
+        let dfa = Dfa::from_keywords(&[vec![1]], 8);
+        let expired = std::time::Instant::now() - std::time::Duration::from_millis(1);
+        assert!(ConstraintTable::build_deadlined(&hmm, &dfa, 8, Some(expired)).is_none());
+    }
+
+    #[test]
+    fn generous_deadline_builds_the_full_table() {
+        let mut rng = Rng::seeded(76);
+        let hmm = Hmm::random(4, 8, 0.5, 0.5, &mut rng);
+        let dfa = Dfa::from_keywords(&[vec![1]], 8);
+        let far = std::time::Instant::now() + std::time::Duration::from_secs(600);
+        let bounded = ConstraintTable::build_deadlined(&hmm, &dfa, 8, Some(far)).unwrap();
+        let unbounded = ConstraintTable::build(&hmm, &dfa, 8);
+        for r in 0..=8usize {
+            for d in 0..dfa.n_states() as u32 {
+                assert_eq!(bounded.a(r, d), unbounded.a(r, d), "r={r} d={d}");
+            }
+        }
     }
 
     #[test]

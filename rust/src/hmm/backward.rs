@@ -12,6 +12,7 @@ use crate::hmm::model::Hmm;
 /// normalizes cleanly.
 #[derive(Clone, Debug)]
 pub struct Backward {
+    /// betas[t][h], rescaled (see the struct docs).
     pub betas: Vec<Vec<f32>>,
 }
 

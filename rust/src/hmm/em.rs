@@ -14,16 +14,24 @@ use crate::util::threadpool::parallel_fold;
 /// drift over hundreds of thousands of token events).
 #[derive(Clone, Debug)]
 pub struct EmStats {
+    /// Hidden state count H.
     pub hidden: usize,
+    /// Vocabulary size V.
     pub vocab: usize,
+    /// Expected initial-state counts, length H.
     pub init: Vec<f64>,
-    pub trans: Vec<f64>, // H*H row-major expected transition counts
-    pub emit: Vec<f64>,  // H*V row-major expected emission counts
+    /// H*H row-major expected transition counts.
+    pub trans: Vec<f64>,
+    /// H*V row-major expected emission counts.
+    pub emit: Vec<f64>,
+    /// Total data log-likelihood under the current model.
     pub log_likelihood: f64,
+    /// Sequences accumulated so far.
     pub sequences: usize,
 }
 
 impl EmStats {
+    /// Zeroed statistics for an H-state, V-token model.
     pub fn zeros(hidden: usize, vocab: usize) -> Self {
         EmStats {
             hidden,
@@ -36,6 +44,7 @@ impl EmStats {
         }
     }
 
+    /// Combine two partial accumulations (parallel E-step shards).
     pub fn merge(mut self, other: EmStats) -> EmStats {
         assert_eq!(self.hidden, other.hidden);
         assert_eq!(self.vocab, other.vocab);

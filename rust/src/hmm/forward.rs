@@ -22,6 +22,7 @@ pub struct Forward {
 }
 
 impl Forward {
+    /// Sequence log-likelihood (sum of the per-step log scales).
     pub fn log_likelihood(&self) -> f64 {
         self.log_scales.iter().sum()
     }

@@ -13,6 +13,7 @@
 use crate::util::mat::Mat;
 use crate::util::rng::Rng;
 
+/// A Hidden Markov Model (see the [module docs](self) for notation).
 #[derive(Clone, Debug)]
 pub struct Hmm {
     /// γ: initial state distribution, length H.
@@ -24,10 +25,12 @@ pub struct Hmm {
 }
 
 impl Hmm {
+    /// Hidden state count H.
     pub fn hidden(&self) -> usize {
         self.trans.rows
     }
 
+    /// Vocabulary size V.
     pub fn vocab(&self) -> usize {
         self.emit.cols
     }

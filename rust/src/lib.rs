@@ -17,19 +17,28 @@
 //! Python never runs on the request path: `make artifacts` lowers
 //! everything once; the Rust binary loads `artifacts/*.hlo.txt` via PJRT.
 //!
+//! The layer design, the request lifecycle from stack entry through
+//! fair queueing, decode and response, and the middleware-ordering
+//! rationale are documented in `ARCHITECTURE.md` at the repository
+//! root.
+//!
 //! ## Module map (request path, outside in)
 //!
 //! - [`service`] — tower-style admission control between clients and the
-//!   coordinator: `Service`/`Layer` traits, load-shed, rate-limit,
-//!   concurrency-limit, timeout (deadline propagation) and hedging
-//!   middlewares, composed with `service::Stack`.
+//!   coordinator: `Service`/`Layer` traits; quota, adaptive-shed,
+//!   load-shed, rate-limit, fair-queue, concurrency-limit, timeout
+//!   (deadline propagation) and hedging middlewares, composed with
+//!   `service::Stack`.
 //! - [`coordinator`] — bounded intake queue, concept-set batching
-//!   dispatcher, decode worker pool, table cache, serving metrics. The
-//!   `Server` implements `service::Service` and sits at the bottom of
-//!   the stack.
+//!   dispatcher, decode worker pool, table cache, serving metrics
+//!   (global and per-client). The `Server` implements
+//!   `service::Service` and sits at the bottom of the stack.
 //! - [`generate`] — the constrained beam decoder (honors per-request
-//!   deadlines via `DecodeConfig::deadline`).
+//!   deadlines via `DecodeConfig::deadline`, including during
+//!   constraint-table construction).
 //! - [`runtime`] — PJRT execution of the AOT-lowered neural artifacts.
+
+#![warn(missing_docs)]
 
 pub mod util;
 

@@ -23,6 +23,7 @@ pub use sample::{distill_corpus, sample_sequence};
 
 /// Next-token distribution provider.
 pub trait LanguageModel: Send + Sync {
+    /// Vocabulary size the model scores over.
     fn vocab(&self) -> usize;
 
     /// Write log P(x | prefix) for every token x into `out`

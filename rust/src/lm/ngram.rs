@@ -9,6 +9,7 @@ use crate::data::vocab::EOS;
 use crate::lm::LanguageModel;
 use std::collections::HashMap;
 
+/// Interpolated trigram/bigram/unigram LM with absolute discounting.
 #[derive(Clone, Debug)]
 pub struct NgramLm {
     vocab: usize,

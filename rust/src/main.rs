@@ -17,8 +17,8 @@ use normq::log_info;
 use normq::quant::packed::CompressionReport;
 use normq::quant::Method;
 use normq::service::{
-    ConcurrencyLimitLayer, HedgeLayer, Layer, LoadShedLayer, RateLimitLayer, SharedService,
-    TimeoutLayer,
+    AdaptiveShedLayer, ConcurrencyLimitLayer, FairQueueLayer, HedgeLayer, Layer, LoadShedLayer,
+    QuotaConfig, QuotaLayer, RateLimitLayer, SharedService, TimeoutLayer,
 };
 use normq::tables::{run_experiment, ExperimentContext};
 use normq::util::cli::Args;
@@ -30,7 +30,9 @@ USAGE:
   normq table <1|2|3|4|5|6|fig1..fig5> [--hidden N] [--items N] [--bits ..]
   normq quantize [--hidden N] [--bits 8] [--method normq|fixed|int|kmeans]
   normq serve [--requests N] [--workers N] [--use-hlo-lm] [--bits N]
-              [--clients N] [--shed] [--climit N] [--rate RPS] [--burst N]
+              [--clients N] [--client-ids N] [--shed] [--climit N]
+              [--rate RPS] [--burst N] [--quota RPS] [--quota-burst N]
+              [--fair SLOTS] [--fair-queue N] [--delay-budget-ms MS]
               [--timeout-ms MS] [--hedge-ms MS]
   normq smoke [--artifacts DIR]
   normq corpus [--n N] [--eval]
@@ -43,10 +45,15 @@ Common options:
   --seed N        experiment seed (default 1234)
 
 Admission control (serve): each flag enables one middleware layer in
-front of the coordinator, outermost first: --shed (reject at
-saturation), --rate/--burst (token bucket), --climit (in-flight cap),
---timeout-ms (deadline into the decode loop), --hedge-ms (re-dispatch
-slow requests).
+front of the coordinator, outermost first: --quota/--quota-burst
+(per-client token buckets; denials cost nothing shared),
+--delay-budget-ms (adaptive shed: in-flight limit from Little's law),
+--shed (reject at saturation), --rate/--burst (global token bucket),
+--fair SLOTS (weighted-fair per-client queues with SLOTS concurrent
+dispatches; --fair-queue bounds each client's queue), --climit
+(FIFO in-flight cap), --timeout-ms (deadline into the decode loop),
+--hedge-ms (re-dispatch slow requests). The load driver spreads
+requests over --client-ids distinct client ids (default 1).
 ";
 
 fn main() {
@@ -59,8 +66,9 @@ fn main() {
     let mut value_keys: Vec<&str> = ExperimentContext::VALUE_KEYS.to_vec();
     value_keys.extend([
         "bits", "ratios", "norm-ratio", "interval", "intervals", "scales", "method", "requests",
-        "workers", "artifacts", "n", "out", "heatmap", "queue", "clients", "climit", "rate",
-        "burst", "timeout-ms", "hedge-ms",
+        "workers", "artifacts", "n", "out", "heatmap", "queue", "clients", "client-ids", "climit",
+        "rate", "burst", "quota", "quota-burst", "fair", "fair-queue", "delay-budget-ms",
+        "timeout-ms", "hedge-ms",
     ]);
     let args = match Args::parse(&argv, &value_keys) {
         Ok(a) => a,
@@ -170,19 +178,34 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 
     // Admission-control stack, innermost (coordinator) outward; flags
     // choose the layers, so compose dynamically via the shared handle.
+    // Target order, outermost first: quota -> adaptive_shed ->
+    // load_shed -> rate_limit -> timeout -> fair_queue ->
+    // concurrency_limit -> hedge -> coordinator (see ARCHITECTURE.md);
+    // timeout sits outside the queueing layers so the stamped deadline
+    // covers queue wait.
+    let clients = args.usize("clients", (workers * 2).max(2))?;
     let mut svc: SharedService<ServeRequest, CoordResponse> = Arc::new(Arc::clone(&server));
     let mut layers = Vec::new();
     if let Some(delay) = args.opt_duration_ms("hedge-ms")? {
-        svc = Arc::new(HedgeLayer::new(delay, Arc::clone(&metrics)).layer(svc));
+        // Pool sized for primary + hedge per concurrent client, so the
+        // helper pool never becomes a hidden concurrency cap that
+        // queues primaries into spurious hedges.
+        let layer = HedgeLayer::new(delay, Arc::clone(&metrics)).with_pool_size((clients * 2).max(4));
+        svc = Arc::new(layer.layer(svc));
         layers.push(format!("hedge({delay:?})"));
-    }
-    if let Some(t) = args.opt_duration_ms("timeout-ms")? {
-        svc = Arc::new(TimeoutLayer::new(t, Arc::clone(&metrics)).layer(svc));
-        layers.push(format!("timeout({t:?})"));
     }
     if let Some(max) = args.opt_usize("climit")? {
         svc = Arc::new(ConcurrencyLimitLayer::new(max).layer(svc));
         layers.push(format!("concurrency_limit({max})"));
+    }
+    if let Some(slots) = args.opt_usize("fair")? {
+        let queue_cap = args.usize("fair-queue", 16)?;
+        svc = Arc::new(FairQueueLayer::new(slots, queue_cap, Arc::clone(&metrics)).layer(svc));
+        layers.push(format!("fair_queue({slots} slots, {queue_cap}/client)"));
+    }
+    if let Some(t) = args.opt_duration_ms("timeout-ms")? {
+        svc = Arc::new(TimeoutLayer::new(t, Arc::clone(&metrics)).layer(svc));
+        layers.push(format!("timeout({t:?})"));
     }
     if let Some(rate) = args.opt_f64("rate")? {
         if !rate.is_finite() || rate <= 0.0 {
@@ -196,6 +219,19 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         svc = Arc::new(LoadShedLayer::new(Arc::clone(&metrics)).layer(svc));
         layers.push("load_shed".into());
     }
+    if let Some(budget) = args.opt_duration_ms("delay-budget-ms")? {
+        svc = Arc::new(AdaptiveShedLayer::new(budget, workers, Arc::clone(&metrics)).layer(svc));
+        layers.push(format!("adaptive_shed({budget:?} budget)"));
+    }
+    if let Some(quota) = args.opt_f64("quota")? {
+        if !quota.is_finite() || quota <= 0.0 {
+            return Err(format!("--quota expects a positive req/s rate, got {quota}"));
+        }
+        let quota_burst = args.f64("quota-burst", quota.max(1.0))?;
+        let cfg = QuotaConfig::per_client(quota, quota_burst);
+        svc = Arc::new(QuotaLayer::new(cfg, Arc::clone(&metrics)).layer(svc));
+        layers.push(format!("quota({quota}/s/client, burst {quota_burst})"));
+    }
     layers.reverse();
     if layers.is_empty() {
         log_info!("admission stack: (none — direct to coordinator)");
@@ -203,11 +239,11 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         log_info!("admission stack: {} -> coordinator", layers.join(" -> "));
     }
 
-    let clients = args.usize("clients", (workers * 2).max(2))?;
+    let client_ids = args.usize("client-ids", 1)?.max(1);
     let t0 = std::time::Instant::now();
     let results = normq::service::drive_closed_loop(&svc, clients, n_requests, |i| {
         let item = &ctx.items[i % ctx.items.len()];
-        ServeRequest::new(item.concepts.clone())
+        ServeRequest::from_client(item.concepts.clone(), format!("client-{}", i % client_ids))
     });
     let wall = t0.elapsed().as_secs_f64();
     let ok = results.iter().filter(|r| r.is_ok()).count();
@@ -225,6 +261,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         ok as f64 / wall
     );
     println!("{}", server.metrics().summary());
+    if client_ids > 1 {
+        println!("{}", server.metrics().client_summary());
+    }
     server.shutdown();
     Ok(())
 }

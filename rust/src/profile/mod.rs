@@ -24,6 +24,7 @@ use crate::util::timer::PhaseTimers;
 
 /// Byte/flop accounting per phase.
 #[derive(Clone, Debug, Default)]
+#[allow(missing_docs)] // field names say it all
 pub struct OpAccounting {
     pub neural_flops: f64,
     pub symbolic_flops: f64,

@@ -53,7 +53,9 @@ impl Default for QemConfig {
 /// Outcome of a training run: final model + LLD trace.
 #[derive(Clone, Debug)]
 pub struct QemResult {
+    /// The trained (and, with a method set, cookbook-projected) model.
     pub model: Hmm,
+    /// Per-step train/test log-likelihoods.
     pub trace: TrainTrace,
 }
 

@@ -3,8 +3,10 @@
 
 use crate::util::json::Json;
 
+/// One EM step's log-likelihood record.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TracePoint {
+    /// Global EM step index.
     pub step: usize,
     /// Mean train LLD of the consumed chunk under the pre-update model.
     pub train_lld: f64,
@@ -14,8 +16,10 @@ pub struct TracePoint {
     pub quantized: bool,
 }
 
+/// The full training trace (one point per EM step).
 #[derive(Clone, Debug, Default)]
 pub struct TrainTrace {
+    /// Step records in order.
     pub points: Vec<TracePoint>,
 }
 

@@ -15,9 +15,13 @@ use crate::util::mat::Mat;
 /// Calibrated affine quantizer for one tensor ("layer").
 #[derive(Clone, Debug)]
 pub struct IntQuantizer {
+    /// Quantization bit width.
     pub bits: u32,
+    /// Levels per unit of input range.
     pub scale: f64,
+    /// Offset mapping the data minimum to level 0.
     pub zero_point: f64,
+    /// Highest level, `2^bits - 1`.
     pub qmax: f64,
 }
 
@@ -40,17 +44,20 @@ impl IntQuantizer {
         IntQuantizer { bits, scale, zero_point: -lo * scale, qmax }
     }
 
+    /// Map a value to its level.
     #[inline]
     pub fn quantize(&self, p: f32) -> u32 {
         let q = (p as f64 * self.scale + self.zero_point).round();
         q.clamp(0.0, self.qmax) as u32
     }
 
+    /// Map a level back to its representative value.
     #[inline]
     pub fn dequantize(&self, q: u32) -> f32 {
         ((q as f64 - self.zero_point) / self.scale) as f32
     }
 
+    /// Round-trip a value through the grid (fake-quant).
     #[inline]
     pub fn qdq(&self, p: f32) -> f32 {
         self.dequantize(self.quantize(p))

@@ -10,9 +10,11 @@
 use crate::hmm::Hmm;
 use crate::util::mat::Mat;
 
+/// A 1-D k-means codebook.
 #[derive(Clone, Debug)]
 pub struct KmeansCodebook {
-    pub centroids: Vec<f32>, // sorted ascending
+    /// Centroid values, sorted ascending.
+    pub centroids: Vec<f32>,
 }
 
 impl KmeansCodebook {
@@ -89,6 +91,7 @@ impl KmeansCodebook {
         }
     }
 
+    /// Snap a value to its nearest centroid.
     #[inline]
     pub fn qdq(&self, v: f32) -> f32 {
         self.centroids[self.assign(v)]

@@ -63,6 +63,7 @@ impl Method {
         }
     }
 
+    /// Short human-readable name, as used in table rows.
     pub fn label(&self) -> String {
         match *self {
             Method::Fp32 => "FP32".into(),

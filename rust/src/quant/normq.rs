@@ -18,6 +18,7 @@ use crate::hmm::Hmm;
 use crate::quant::fixed;
 use crate::util::mat::Mat;
 
+/// The ε floor used by Norm-Q's row re-normalization.
 pub const DEFAULT_EPS: f64 = 1e-12;
 
 /// Norm-Q one matrix in place: fixed-point quantize, then row-normalize

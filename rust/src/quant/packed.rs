@@ -22,8 +22,11 @@ use crate::util::mat::Mat;
 /// Dense bit-packed quantized matrix (levels in [0, 2^bits - 1]).
 #[derive(Clone, Debug)]
 pub struct PackedMat {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Bits per stored level.
     pub bits: u32,
     words: Vec<u64>,
     /// Cached 1/Σ levels per row (f32, not counted as model storage: it
@@ -157,16 +160,23 @@ impl PackedMat {
 /// CSR-style sparse quantized matrix: only non-zero levels stored.
 #[derive(Clone, Debug)]
 pub struct SparseQMat {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Bits per stored level.
     pub bits: u32,
+    /// CSR row offsets into `col_idx`/`levels`, length `rows + 1`.
     pub row_ptr: Vec<u32>,
+    /// Column index per stored non-zero.
     pub col_idx: Vec<u32>,
+    /// Quantized level per stored non-zero.
     pub levels: Vec<u16>,
     row_scale: Vec<f32>,
 }
 
 impl SparseQMat {
+    /// Quantize `m` at `bits`, storing only non-zero levels.
     pub fn from_mat(m: &Mat, bits: u32) -> SparseQMat {
         assert!(bits >= 1 && bits <= 16);
         let mut row_ptr = Vec::with_capacity(m.rows + 1);
@@ -190,6 +200,7 @@ impl SparseQMat {
         SparseQMat { rows: m.rows, cols: m.cols, bits, row_ptr, col_idx, levels, row_scale }
     }
 
+    /// Stored non-zero count.
     pub fn nnz(&self) -> usize {
         self.levels.len()
     }
@@ -222,6 +233,7 @@ impl SparseQMat {
         self.nnz() * (self.bits as usize + idx_bits) + (self.rows + 1) * 32
     }
 
+    /// Dequantize back to a dense row-stochastic matrix.
     pub fn to_mat(&self) -> Mat {
         let mut m = Mat::zeros(self.rows, self.cols);
         for r in 0..self.rows {
@@ -244,14 +256,20 @@ impl SparseQMat {
 /// Compression report for one matrix at one bit width.
 #[derive(Clone, Copy, Debug)]
 pub struct CompressionReport {
+    /// Uncompressed size (32 bits per entry).
     pub fp32_bits: usize,
+    /// Dense bit-packed size at `bits` per entry.
     pub dense_packed_bits: usize,
+    /// CSR sparse size (levels + indices + row pointers).
     pub sparse_bits: usize,
+    /// Non-zero count after quantization.
     pub nnz: usize,
+    /// Total entries.
     pub total: usize,
 }
 
 impl CompressionReport {
+    /// Measure `m` quantized at `bits` under both storage layouts.
     pub fn of(m: &Mat, bits: u32) -> CompressionReport {
         let packed = PackedMat::from_mat(m, bits);
         let sparse = SparseQMat::from_mat(m, bits);

@@ -10,6 +10,7 @@ use crate::lm::LanguageModel;
 use crate::runtime::weights::{read_weights, to_literals};
 use crate::runtime::{Engine, Manifest};
 
+/// The AOT-compiled transformer LM (see the [module docs](self)).
 pub struct HloLm {
     /// The executable with the transformer weights bound as trailing
     /// execute() arguments (flatten_params order), living inside the
@@ -33,12 +34,14 @@ impl HloLm {
         })
     }
 
+    /// Load from explicit HLO-text and weights paths (no manifest).
     pub fn from_path(path: &Path, weights_path: &Path, vocab: usize, max_len: usize) -> Result<HloLm> {
         let engine = Engine::load(path)?;
         engine.bind_trailing_args(to_literals(&read_weights(weights_path)?)?);
         Ok(HloLm { engine, vocab, max_len })
     }
 
+    /// The model's (padded) context window length.
     pub fn max_len(&self) -> usize {
         self.max_len
     }

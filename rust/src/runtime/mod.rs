@@ -30,6 +30,7 @@ use crate::util::json::Json;
 /// are justified — do not leak `xla` handles out of this module.
 pub struct Engine {
     inner: Mutex<EngineInner>,
+    /// The artifact file name, for error messages.
     pub name: String,
 }
 
@@ -100,14 +101,20 @@ impl Engine {
 /// The artifacts directory manifest written by aot.py.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// The artifacts directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// The vocabulary the artifacts were compiled against, id-ordered.
     pub vocab_words: Vec<String>,
+    /// The LM's (padded) context window length.
     pub max_len: usize,
+    /// HMM hidden size the forward artifact was lowered for.
     pub hidden: usize,
+    /// Corpus seed the artifacts were generated from.
     pub seed: u64,
 }
 
 impl Manifest {
+    /// Read and parse `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("reading {:?}/manifest.json — run `make artifacts`", dir))?;
@@ -128,6 +135,7 @@ impl Manifest {
         })
     }
 
+    /// Path of the named artifact file inside the directory.
     pub fn artifact(&self, name: &str) -> PathBuf {
         self.dir.join(name)
     }

@@ -8,14 +8,19 @@
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
+/// One named tensor from the weights file.
 #[derive(Clone, Debug)]
 pub struct WeightTensor {
+    /// Parameter name (flatten_params order key).
     pub name: String,
+    /// Shape, outermost first.
     pub dims: Vec<usize>,
+    /// Row-major (C order) values.
     pub data: Vec<f32>,
 }
 
 impl WeightTensor {
+    /// Total element count (product of dims).
     pub fn elements(&self) -> usize {
         self.dims.iter().product()
     }
@@ -35,6 +40,7 @@ fn checked_elements(name: &str, dims: &[usize]) -> Result<usize> {
 /// otherwise drive a near-endless dims-read loop.
 const MAX_RANK: usize = 16;
 
+/// Parse the weights file (see the module docs for the format).
 pub fn read_weights(path: &Path) -> Result<Vec<WeightTensor>> {
     let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
     let mut pos = 0usize;

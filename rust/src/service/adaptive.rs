@@ -1,0 +1,281 @@
+//! `AdaptiveShed`: an in-flight limit derived from observed service
+//! time (Little's law) instead of a hand-tuned `queue_capacity`.
+//!
+//! The static [`super::shed::LoadShed`] keys off the coordinator's
+//! fixed queue capacity, which goes stale whenever per-request decode
+//! cost shifts — more HMM states, a different quantization level, or a
+//! colder table cache all change how much queueing a latency budget
+//! can afford. This layer closes the loop: it tracks an EWMA of the
+//! inner service's observed call latency `S` and admits at most
+//!
+//! ```text
+//! limit = workers × budget / S        (Little's law: L = λ·W)
+//! ```
+//!
+//! in-flight calls, so the expected time-in-system of an admitted
+//! request stays within `budget`. Excess calls are rejected with
+//! `Err(Overloaded)` (counted in `Metrics::adaptive_shed`, attributed
+//! per client); the current limit is exported through the
+//! `Metrics::adaptive_limit` gauge. As the backend speeds up the limit
+//! rises and as it slows the limit tightens — no knob to re-tune.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+
+use super::{Keyed, Layer, Readiness, Service, ServiceError};
+
+/// Default cap on the derived limit, generous enough to be invisible
+/// until the first latency observations arrive.
+const DEFAULT_MAX_LIMIT: usize = 1024;
+
+/// EWMA smoothing factor: each observation moves the estimate 20% of
+/// the way toward itself — stable under decode-time noise, yet a
+/// sustained shift re-converges within a dozen requests.
+const EWMA_ALPHA: f64 = 0.2;
+
+/// Decrements the in-flight gauge even if the inner call panics.
+struct InFlightGuard<'a>(&'a AtomicU64);
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Latency-adaptive load shedding; see the [module docs](self).
+///
+/// ```
+/// use std::sync::Arc;
+/// use std::time::Duration;
+/// use normq::coordinator::metrics::Metrics;
+/// use normq::coordinator::ServeRequest;
+/// use normq::service::{Echo, Service, Stack};
+///
+/// let metrics = Arc::new(Metrics::new());
+/// // Keep time-in-system under 100ms given a 4-worker backend.
+/// let svc = Stack::new()
+///     .adaptive_shed(Duration::from_millis(100), 4, Arc::clone(&metrics))
+///     .service(Echo::instant());
+/// assert!(svc.call(ServeRequest::new(vec!["tree".into()])).is_ok());
+/// assert!(metrics.adaptive_limit.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+/// ```
+pub struct AdaptiveShed<S> {
+    inner: S,
+    /// Target time-in-system (queue wait + service) for admitted calls.
+    budget: Duration,
+    /// Parallelism hint: how many calls the backend completes
+    /// concurrently (the coordinator's decode-worker count).
+    workers: usize,
+    min_limit: usize,
+    max_limit: usize,
+    in_flight: AtomicU64,
+    /// EWMA of observed call latency in seconds; `None` until the
+    /// first completion (the limit stays at `max_limit` until then).
+    ewma: Mutex<Option<f64>>,
+    metrics: Arc<Metrics>,
+}
+
+impl<S> AdaptiveShed<S> {
+    /// Wrap `inner` with a latency-derived in-flight limit targeting
+    /// `budget` time-in-system on a `workers`-wide backend.
+    pub fn new(inner: S, budget: Duration, workers: usize, metrics: Arc<Metrics>) -> Self {
+        AdaptiveShed {
+            inner,
+            budget,
+            workers: workers.max(1),
+            min_limit: 1,
+            max_limit: DEFAULT_MAX_LIMIT,
+            in_flight: AtomicU64::new(0),
+            ewma: Mutex::new(None),
+            metrics,
+        }
+    }
+
+    /// Clamp the derived limit to `[min, max]` (e.g. to guarantee a
+    /// floor of one call per worker regardless of a latency spike).
+    pub fn with_limits(mut self, min: usize, max: usize) -> Self {
+        self.min_limit = min.max(1);
+        self.max_limit = max.max(self.min_limit);
+        self
+    }
+
+    /// The in-flight limit implied by the current latency estimate.
+    pub fn current_limit(&self) -> usize {
+        match *self.ewma.lock().unwrap() {
+            Some(s) if s > 0.0 => {
+                let l = (self.workers as f64 * self.budget.as_secs_f64() / s) as usize;
+                l.clamp(self.min_limit, self.max_limit)
+            }
+            // No (usable) observation yet: admit optimistically and let
+            // the first completions pull the limit down.
+            _ => self.max_limit,
+        }
+    }
+
+    fn observe(&self, secs: f64) {
+        let mut e = self.ewma.lock().unwrap();
+        *e = Some(match *e {
+            None => secs,
+            Some(prev) => prev + EWMA_ALPHA * (secs - prev),
+        });
+    }
+}
+
+impl<Req, S> Service<Req> for AdaptiveShed<S>
+where
+    Req: Keyed,
+    S: Service<Req>,
+{
+    type Response = S::Response;
+
+    fn poll_ready(&self) -> Readiness {
+        if self.in_flight.load(Ordering::SeqCst) >= self.current_limit() as u64 {
+            Readiness::Busy
+        } else {
+            self.inner.poll_ready()
+        }
+    }
+
+    fn call(&self, req: Req) -> Result<Self::Response, ServiceError> {
+        let limit = self.current_limit();
+        self.metrics.adaptive_limit.store(limit as u64, Ordering::Relaxed);
+        let prev = self.in_flight.fetch_add(1, Ordering::SeqCst);
+        let guard = InFlightGuard(&self.in_flight);
+        if prev >= limit as u64 {
+            drop(guard);
+            self.metrics.adaptive_shed.fetch_add(1, Ordering::Relaxed);
+            self.metrics
+                .client(req.client_id())
+                .shed
+                .fetch_add(1, Ordering::Relaxed);
+            return Err(ServiceError::Overloaded);
+        }
+        let t0 = Instant::now();
+        let out = self.inner.call(req);
+        // Feed the estimator from calls that did real work. Instant
+        // errors (an inner layer bouncing) would drag the EWMA toward
+        // zero and inflate the limit right when the system is refusing
+        // work.
+        match &out {
+            Ok(_) | Err(ServiceError::DeadlineExceeded) => {
+                self.observe(t0.elapsed().as_secs_f64());
+            }
+            Err(_) => {}
+        }
+        out
+    }
+}
+
+/// Builds [`AdaptiveShed`] middlewares; see
+/// [`super::stack::Stack::adaptive_shed`].
+#[derive(Clone, Debug)]
+pub struct AdaptiveShedLayer {
+    budget: Duration,
+    workers: usize,
+    metrics: Arc<Metrics>,
+}
+
+impl AdaptiveShedLayer {
+    /// A layer targeting `budget` time-in-system on a `workers`-wide
+    /// backend.
+    pub fn new(budget: Duration, workers: usize, metrics: Arc<Metrics>) -> Self {
+        AdaptiveShedLayer { budget, workers, metrics }
+    }
+}
+
+impl<S> Layer<S> for AdaptiveShedLayer {
+    type Service = AdaptiveShed<S>;
+    fn layer(&self, inner: S) -> Self::Service {
+        AdaptiveShed::new(inner, self.budget, self.workers, Arc::clone(&self.metrics))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{MockSvc, TestReq};
+    use super::*;
+
+    #[test]
+    fn passes_while_under_the_limit() {
+        let metrics = Arc::new(Metrics::new());
+        let svc = AdaptiveShed::new(
+            MockSvc::instant(),
+            Duration::from_millis(100),
+            4,
+            Arc::clone(&metrics),
+        );
+        for _ in 0..8 {
+            assert!(svc.call(TestReq::default()).is_ok());
+        }
+        assert_eq!(metrics.adaptive_shed.load(Ordering::Relaxed), 0);
+        assert!(metrics.adaptive_limit.load(Ordering::Relaxed) >= 1);
+        assert_eq!(svc.in_flight.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn sheds_once_the_derived_limit_is_hit() {
+        let metrics = Arc::new(Metrics::new());
+        // 50ms service time against a 10ms budget on one worker: after
+        // the first observation the limit collapses to the floor of 1.
+        let svc = Arc::new(AdaptiveShed::new(
+            MockSvc::with_delay(Duration::from_millis(50)),
+            Duration::from_millis(10),
+            1,
+            Arc::clone(&metrics),
+        ));
+        svc.call(TestReq::client("warm")).unwrap();
+        assert_eq!(svc.current_limit(), 1);
+        std::thread::scope(|scope| {
+            let occupant = Arc::clone(&svc);
+            scope.spawn(move || occupant.call(TestReq::client("heavy")).unwrap());
+            std::thread::sleep(Duration::from_millis(15));
+            assert_eq!(svc.poll_ready(), Readiness::Busy);
+            assert_eq!(
+                svc.call(TestReq::client("heavy")),
+                Err(ServiceError::Overloaded)
+            );
+        });
+        assert_eq!(metrics.adaptive_shed.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.client("heavy").shed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn limit_tracks_littles_law() {
+        let metrics = Arc::new(Metrics::new());
+        // S ≈ 20ms, workers = 4, budget = 80ms → limit ≈ 4·80/20 = 16.
+        let svc = AdaptiveShed::new(
+            MockSvc::with_delay(Duration::from_millis(20)),
+            Duration::from_millis(80),
+            4,
+            Arc::clone(&metrics),
+        );
+        for _ in 0..10 {
+            svc.call(TestReq::default()).unwrap();
+        }
+        let limit = svc.current_limit();
+        assert!(
+            (6..=24).contains(&limit),
+            "limit did not converge near 16: {limit}"
+        );
+    }
+
+    #[test]
+    fn instant_errors_do_not_inflate_the_limit() {
+        let metrics = Arc::new(Metrics::new());
+        let mut inner = MockSvc::with_delay(Duration::from_millis(20));
+        inner.fail_call = Some(1);
+        let svc = AdaptiveShed::new(
+            inner,
+            Duration::from_millis(40),
+            1,
+            Arc::clone(&metrics),
+        );
+        svc.call(TestReq::default()).unwrap(); // 20ms observation
+        let before = svc.current_limit();
+        let _ = svc.call(TestReq::default()); // instant Overloaded from inner
+        assert_eq!(svc.current_limit(), before, "error latency must not be observed");
+    }
+}

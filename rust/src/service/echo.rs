@@ -1,0 +1,103 @@
+//! `Echo`: a trivial in-process backend for examples and tests.
+//!
+//! Serves [`crate::coordinator::ServeRequest`] by sleeping a fixed
+//! delay and echoing the concepts back, honoring deadlines the way the
+//! coordinator does (it reports [`EchoResponse::expired`] instead of
+//! running past the budget silently). Doctests, integration tests and
+//! benches use it to exercise middleware composition without training
+//! an HMM or starting the decode pool.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::ServeRequest;
+
+use super::{Expirable, Readiness, Service, ServiceError};
+
+/// What [`Echo`] answers: the request's concepts joined with spaces,
+/// plus the deadline verdict the `Timeout` middleware inspects.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EchoResponse {
+    /// The client id the request carried (attribution round-trip).
+    pub client_id: String,
+    /// The echoed concepts, space-joined.
+    pub text: String,
+    /// The request's deadline fired before the reply was produced.
+    pub expired: bool,
+}
+
+impl Expirable for EchoResponse {
+    fn expired(&self) -> bool {
+        self.expired
+    }
+}
+
+/// A deadline-honoring echo service with a configurable per-call delay.
+///
+/// ```
+/// use normq::coordinator::ServeRequest;
+/// use normq::service::{Echo, Service};
+///
+/// let svc = Echo::instant();
+/// let resp = svc.call(ServeRequest::new(vec!["tree".into()])).unwrap();
+/// assert_eq!(resp.text, "tree");
+/// assert!(!resp.expired);
+/// ```
+#[derive(Debug, Default)]
+pub struct Echo {
+    delay: Duration,
+    /// Total calls served (read by tests asserting attribution).
+    pub calls: AtomicU64,
+}
+
+impl Echo {
+    /// An echo service that replies immediately.
+    pub fn instant() -> Self {
+        Echo::with_delay(Duration::ZERO)
+    }
+
+    /// An echo service that sleeps `delay` per call — a stand-in for a
+    /// backend with a known service time.
+    pub fn with_delay(delay: Duration) -> Self {
+        Echo { delay, calls: AtomicU64::new(0) }
+    }
+}
+
+impl Service<ServeRequest> for Echo {
+    type Response = EchoResponse;
+
+    fn poll_ready(&self) -> Readiness {
+        Readiness::Ready
+    }
+
+    fn call(&self, req: ServeRequest) -> Result<EchoResponse, ServiceError> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        Ok(EchoResponse {
+            client_id: req.client_id.clone(),
+            text: req.concepts.join(" "),
+            expired: req.deadline.is_some_and(|d| Instant::now() >= d),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn echoes_and_honors_deadlines() {
+        let svc = Echo::with_delay(Duration::from_millis(5));
+        let ok = svc.call(ServeRequest::new(vec!["a".into(), "b".into()])).unwrap();
+        assert_eq!(ok.text, "a b");
+        assert!(!ok.expired);
+
+        let mut req = ServeRequest::new(vec!["c".into()]);
+        req.deadline = Some(Instant::now());
+        let expired = svc.call(req).unwrap();
+        assert!(expired.expired);
+        assert_eq!(svc.calls.load(Ordering::Relaxed), 2);
+    }
+}

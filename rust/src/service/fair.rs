@@ -1,0 +1,397 @@
+//! `FairQueue`: deficit-weighted round-robin across per-client queues.
+//!
+//! FIFO admission lets one greedy client fill the queue and starve
+//! everyone behind it. This layer replaces FIFO ordering in front of
+//! the coordinator: each client gets its own bounded queue, and a
+//! fixed number of dispatch slots into the inner service are handed
+//! out by deficit round-robin (DRR) — every scheduling round gives
+//! each backlogged client `weight` credits, and dispatches cost one
+//! credit — so a client that floods only ever lengthens *its own*
+//! queue while light clients keep flowing at their fair share.
+//!
+//! Overflowing a per-client queue is a rejection (`Err(Overloaded)`,
+//! counted in `Metrics::fair_shed` and attributed to the client), not
+//! a longer wait: the greedy client absorbs the sheds, which is the
+//! isolation property `benches/bench_service.rs` measures.
+//!
+//! Like [`super::limit::ConcurrencyLimit`] this layer *queues* (the
+//! calling thread blocks until scheduled); unlike it, the unblock
+//! order is fair rather than condvar-arbitrary, and the queue bound is
+//! per client rather than global.
+
+use std::collections::{HashSet, VecDeque};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::coordinator::metrics::{ClientStats, Metrics};
+
+use super::{Keyed, Layer, Readiness, Service, ServiceError};
+
+/// One client's scheduling state: its FIFO of waiting tickets plus the
+/// DRR credit balance.
+struct ClientQueue {
+    id: String,
+    weight: u32,
+    deficit: f64,
+    waiting: VecDeque<u64>,
+    stats: Arc<ClientStats>,
+}
+
+struct FqState {
+    /// Backlogged clients in rotation order. A client leaves the
+    /// rotation when its queue empties and re-enters on next arrival.
+    clients: Vec<ClientQueue>,
+    /// Rotation position for the DRR scan.
+    cursor: usize,
+    /// Dispatch slots currently held by in-flight calls.
+    active: usize,
+    next_ticket: u64,
+    /// Tickets selected for dispatch whose owner threads have not yet
+    /// picked them up.
+    granted: HashSet<u64>,
+}
+
+/// Pick the next ticket under deficit-weighted round-robin, or `None`
+/// if every queue is empty. Scans from the cursor for a backlogged
+/// client holding credit; when no one holds credit, tops every
+/// backlogged client up by its weight (one scheduling "round").
+fn drr_pick(st: &mut FqState) -> Option<u64> {
+    if st.clients.iter().all(|c| c.waiting.is_empty()) {
+        return None;
+    }
+    loop {
+        let n = st.clients.len();
+        for k in 0..n {
+            let i = (st.cursor + k) % n;
+            let c = &mut st.clients[i];
+            if c.waiting.is_empty() || c.deficit < 1.0 {
+                continue;
+            }
+            c.deficit -= 1.0;
+            let ticket = c.waiting.pop_front().expect("queue checked non-empty");
+            c.stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            let emptied = c.waiting.is_empty();
+            let exhausted = c.deficit < 1.0;
+            if emptied {
+                // Classic DRR: an emptied queue forfeits leftover credit
+                // (idle clients must not hoard priority) and leaves the
+                // rotation until it has traffic again.
+                st.clients.remove(i);
+                if st.clients.is_empty() {
+                    st.cursor = 0;
+                } else {
+                    if i < st.cursor {
+                        st.cursor -= 1;
+                    }
+                    if st.cursor >= st.clients.len() {
+                        st.cursor = 0;
+                    }
+                }
+            } else if exhausted {
+                st.cursor = (i + 1) % n;
+            } else {
+                st.cursor = i;
+            }
+            return Some(ticket);
+        }
+        // No backlogged client holds credit: start a new round. Weights
+        // are >= 1, so the next scan is guaranteed to dispatch.
+        for c in st.clients.iter_mut() {
+            if !c.waiting.is_empty() {
+                c.deficit += c.weight.max(1) as f64;
+            }
+        }
+    }
+}
+
+/// Weighted-fair queueing in front of a service; see the
+/// [module docs](self).
+///
+/// ```
+/// use std::sync::Arc;
+/// use normq::coordinator::metrics::Metrics;
+/// use normq::coordinator::ServeRequest;
+/// use normq::service::{Echo, Service, Stack};
+///
+/// let metrics = Arc::new(Metrics::new());
+/// // 2 dispatch slots, per-client queues bounded at 64.
+/// let svc = Stack::new()
+///     .fair_queue(2, 64, Arc::clone(&metrics))
+///     .service(Echo::instant());
+/// let resp = svc
+///     .call(ServeRequest::from_client(vec!["tree".into()], "alice"))
+///     .unwrap();
+/// assert_eq!(resp.client_id, "alice");
+/// assert_eq!(metrics.client("alice").queue_depth.load(std::sync::atomic::Ordering::Relaxed), 0);
+/// ```
+pub struct FairQueue<S> {
+    inner: S,
+    /// Concurrent dispatches permitted into the inner service.
+    concurrency: usize,
+    /// Waiting-ticket bound per client; overflow is shed.
+    queue_cap: usize,
+    state: Mutex<FqState>,
+    wakeup: Condvar,
+    metrics: Arc<Metrics>,
+}
+
+impl<S> FairQueue<S> {
+    /// Wrap `inner`, dispatching at most `concurrency` calls into it at
+    /// once and holding at most `queue_cap` waiting calls per client.
+    pub fn new(inner: S, concurrency: usize, queue_cap: usize, metrics: Arc<Metrics>) -> Self {
+        FairQueue {
+            inner,
+            concurrency: concurrency.max(1),
+            queue_cap: queue_cap.max(1),
+            state: Mutex::new(FqState {
+                clients: Vec::new(),
+                cursor: 0,
+                active: 0,
+                next_ticket: 0,
+                granted: HashSet::new(),
+            }),
+            wakeup: Condvar::new(),
+            metrics,
+        }
+    }
+
+    /// Grant dispatch slots to tickets while both are available.
+    fn pump(&self, st: &mut FqState) {
+        while st.active < self.concurrency {
+            match drr_pick(st) {
+                Some(ticket) => {
+                    st.active += 1;
+                    st.granted.insert(ticket);
+                }
+                None => break,
+            }
+        }
+    }
+
+    fn release_slot(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.active -= 1;
+        self.pump(&mut st);
+        drop(st);
+        self.wakeup.notify_all();
+    }
+}
+
+/// Returns the dispatch slot (and schedules the next ticket) even if
+/// the inner call panics.
+struct SlotGuard<'a, S> {
+    fq: &'a FairQueue<S>,
+}
+
+impl<S> Drop for SlotGuard<'_, S> {
+    fn drop(&mut self) {
+        self.fq.release_slot();
+    }
+}
+
+impl<Req, S> Service<Req> for FairQueue<S>
+where
+    Req: Keyed,
+    S: Service<Req>,
+{
+    type Response = S::Response;
+
+    /// Forwards the inner service's readiness. The fair queue itself
+    /// can always queue a new call (per-client bounds are enforced in
+    /// `call`, where the client is known), but masking a saturated
+    /// backend would turn an outer `LoadShed` into a silent no-op —
+    /// propagating `Busy` keeps it usable as a global backstop while
+    /// DRR orders what is admitted below saturation.
+    fn poll_ready(&self) -> Readiness {
+        self.inner.poll_ready()
+    }
+
+    fn call(&self, req: Req) -> Result<Self::Response, ServiceError> {
+        {
+            let mut st = self.state.lock().unwrap();
+            let idx = match st.clients.iter().position(|c| c.id == req.client_id()) {
+                Some(i) => {
+                    st.clients[i].weight = req.weight().max(1);
+                    i
+                }
+                None => {
+                    st.clients.push(ClientQueue {
+                        id: req.client_id().to_string(),
+                        weight: req.weight().max(1),
+                        deficit: 0.0,
+                        waiting: VecDeque::new(),
+                        stats: self.metrics.client(req.client_id()),
+                    });
+                    st.clients.len() - 1
+                }
+            };
+            if st.clients[idx].waiting.len() >= self.queue_cap {
+                self.metrics.fair_shed.fetch_add(1, Ordering::Relaxed);
+                st.clients[idx].stats.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(ServiceError::Overloaded);
+            }
+            let ticket = st.next_ticket;
+            st.next_ticket += 1;
+            st.clients[idx].waiting.push_back(ticket);
+            st.clients[idx].stats.queue_depth.fetch_add(1, Ordering::Relaxed);
+            self.pump(&mut st);
+            // The pump may have granted other waiters' tickets too.
+            self.wakeup.notify_all();
+            while !st.granted.remove(&ticket) {
+                st = self.wakeup.wait(st).unwrap();
+            }
+        }
+        let _slot = SlotGuard { fq: self };
+        self.inner.call(req)
+    }
+}
+
+/// Builds [`FairQueue`] middlewares; see
+/// [`super::stack::Stack::fair_queue`].
+#[derive(Clone, Debug)]
+pub struct FairQueueLayer {
+    concurrency: usize,
+    queue_cap: usize,
+    metrics: Arc<Metrics>,
+}
+
+impl FairQueueLayer {
+    /// A layer granting `concurrency` dispatch slots with `queue_cap`
+    /// waiting calls per client.
+    pub fn new(concurrency: usize, queue_cap: usize, metrics: Arc<Metrics>) -> Self {
+        FairQueueLayer { concurrency, queue_cap, metrics }
+    }
+}
+
+impl<S> Layer<S> for FairQueueLayer {
+    type Service = FairQueue<S>;
+    fn layer(&self, inner: S) -> Self::Service {
+        FairQueue::new(inner, self.concurrency, self.queue_cap, Arc::clone(&self.metrics))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{MockSvc, TestReq};
+    use super::*;
+    use std::time::Duration;
+
+    fn queue(metrics: &Arc<Metrics>, id: &str, weight: u32, tickets: &[u64]) -> ClientQueue {
+        ClientQueue {
+            id: id.to_string(),
+            weight,
+            deficit: 0.0,
+            waiting: tickets.iter().copied().collect(),
+            stats: metrics.client(id),
+        }
+    }
+
+    #[test]
+    fn drr_respects_weights() {
+        let metrics = Arc::new(Metrics::new());
+        let mut st = FqState {
+            clients: vec![
+                queue(&metrics, "a", 1, &[0, 1, 2, 3, 4, 5]),
+                queue(&metrics, "b", 2, &[10, 11, 12, 13, 14, 15]),
+            ],
+            cursor: 0,
+            active: 0,
+            next_ticket: 100,
+            granted: HashSet::new(),
+        };
+        let picks: Vec<u64> = (0..9).map(|_| drr_pick(&mut st).unwrap()).collect();
+        let a_count = picks.iter().filter(|&&t| t < 10).count();
+        let b_count = picks.len() - a_count;
+        assert_eq!(a_count, 3, "weight-1 client share: {picks:?}");
+        assert_eq!(b_count, 6, "weight-2 client share: {picks:?}");
+        // Within a client, tickets dispatch FIFO.
+        let a_order: Vec<u64> = picks.iter().copied().filter(|&t| t < 10).collect();
+        assert_eq!(a_order, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn drr_drains_everything_and_empties_rotation() {
+        let metrics = Arc::new(Metrics::new());
+        let mut st = FqState {
+            clients: vec![
+                queue(&metrics, "a", 1, &[0, 1]),
+                queue(&metrics, "b", 3, &[10]),
+                queue(&metrics, "c", 1, &[20, 21, 22]),
+            ],
+            cursor: 0,
+            active: 0,
+            next_ticket: 100,
+            granted: HashSet::new(),
+        };
+        let mut seen = Vec::new();
+        while let Some(t) = drr_pick(&mut st) {
+            seen.push(t);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 10, 20, 21, 22]);
+        assert!(st.clients.is_empty(), "drained clients must leave the rotation");
+    }
+
+    #[test]
+    fn sequential_calls_pass_through() {
+        let metrics = Arc::new(Metrics::new());
+        let svc = FairQueue::new(MockSvc::instant(), 2, 8, Arc::clone(&metrics));
+        for i in 0..6 {
+            let id = if i % 2 == 0 { "a" } else { "b" };
+            assert!(svc.call(TestReq::client(id)).is_ok());
+        }
+        assert_eq!(metrics.fair_shed.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.client("a").queue_depth.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.client("b").queue_depth.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn per_client_overflow_sheds_only_the_flooder() {
+        let metrics = Arc::new(Metrics::new());
+        // One slot, one waiting ticket per client; a 60ms call holds the
+        // slot while we fill and then overflow client a's queue.
+        let svc = Arc::new(FairQueue::new(
+            MockSvc::with_delay(Duration::from_millis(60)),
+            1,
+            1,
+            Arc::clone(&metrics),
+        ));
+        std::thread::scope(|scope| {
+            let occupant = Arc::clone(&svc);
+            scope.spawn(move || occupant.call(TestReq::client("a")).unwrap());
+            std::thread::sleep(Duration::from_millis(15));
+            let waiter = Arc::clone(&svc);
+            scope.spawn(move || waiter.call(TestReq::client("a")).unwrap());
+            std::thread::sleep(Duration::from_millis(15));
+            // a's queue is full; a bounces, b still has room.
+            assert_eq!(svc.call(TestReq::client("a")), Err(ServiceError::Overloaded));
+            assert!(svc.call(TestReq::client("b")).is_ok());
+        });
+        assert_eq!(metrics.fair_shed.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.client("a").shed.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.client("b").shed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn caps_concurrency_into_the_inner_service() {
+        let metrics = Arc::new(Metrics::new());
+        let svc = Arc::new(FairQueue::new(
+            MockSvc::with_delay(Duration::from_millis(10)),
+            2,
+            16,
+            Arc::clone(&metrics),
+        ));
+        std::thread::scope(|scope| {
+            for i in 0..8 {
+                let svc = Arc::clone(&svc);
+                let id = format!("c{}", i % 4);
+                scope.spawn(move || svc.call(TestReq::client(&id)).unwrap());
+            }
+        });
+        assert_eq!(svc.inner.calls.load(std::sync::atomic::Ordering::SeqCst), 8);
+        assert!(
+            svc.inner.max_in_flight.load(std::sync::atomic::Ordering::SeqCst) <= 2,
+            "fair queue leaked concurrency"
+        );
+    }
+}

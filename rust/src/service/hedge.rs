@@ -1,32 +1,195 @@
 //! `Hedge`: re-dispatch slow requests; first response wins.
 //!
-//! The primary dispatch runs on a helper thread. If no response arrives
-//! within `delay`, the request is cloned and dispatched a second time
-//! (`Metrics::hedged`) — against the coordinator this lands on another
-//! decode worker, often via a warm constraint-table cache entry.
-//! Whichever attempt answers first is returned (`Metrics::hedge_wins`
-//! counts wins by the hedge); the loser finishes in the background and
-//! its response is dropped. Combine with an outer `Timeout` so losers
-//! are bounded by the request deadline rather than running open-ended.
+//! The primary dispatch runs on a persistent helper pool. If no
+//! response arrives within `delay`, the request is cloned and
+//! dispatched a second time (`Metrics::hedged`) — against the
+//! coordinator this lands on another decode worker, often via a warm
+//! constraint-table cache entry. Whichever attempt answers first is
+//! returned (`Metrics::hedge_wins` counts wins by the hedge); the
+//! loser finishes on its pool thread and its response is dropped.
+//! Combine with an outer `Timeout` so losers are bounded by the
+//! request deadline rather than running open-ended.
+//!
+//! Earlier versions spawned a detached OS thread per attempt, so
+//! shutdown raced stragglers that were never joined. Attempts now run
+//! on a fixed [`HedgePool`]; [`HedgePool::shutdown`] (also invoked on
+//! drop) stops intake and waits a bounded grace period for in-flight
+//! losers before joining the helper threads. Size the pool at roughly
+//! 2× the expected concurrent hedged calls — when every helper is
+//! busy, new primaries queue, and that queue wait counts against the
+//! hedge delay.
 
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{channel, RecvTimeoutError};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::Metrics;
 
 use super::{Layer, Readiness, Service, ServiceError};
 
+/// Grace period [`HedgePool`]'s drop impl waits for stragglers.
+pub const DEFAULT_SHUTDOWN_GRACE: Duration = Duration::from_secs(2);
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolShared {
+    /// Helper threads that have not yet exited.
+    alive: Mutex<usize>,
+    exited: Condvar,
+}
+
+/// Signals thread exit even if a job panics, so a bounded shutdown
+/// never waits on a thread that is already gone.
+struct ExitGuard(Arc<PoolShared>);
+
+impl Drop for ExitGuard {
+    fn drop(&mut self) {
+        *self.0.alive.lock().unwrap() -= 1;
+        self.0.exited.notify_all();
+    }
+}
+
+/// A fixed pool of helper threads that run hedge attempts.
+///
+/// Jobs queue on an unbounded channel and are picked up by the first
+/// free helper. Dropping the pool shuts it down with
+/// [`DEFAULT_SHUTDOWN_GRACE`]; call [`HedgePool::shutdown`] explicitly
+/// to choose the bound.
+pub struct HedgePool {
+    tx: Mutex<Option<Sender<Job>>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    shared: Arc<PoolShared>,
+}
+
+impl HedgePool {
+    /// Start `size` helper threads (min 1).
+    pub fn new(size: usize) -> HedgePool {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(PoolShared { alive: Mutex::new(size), exited: Condvar::new() });
+        let handles = (0..size)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || {
+                    let _exit = ExitGuard(shared);
+                    loop {
+                        // Pickup is serialized on the receiver mutex
+                        // (same pattern as the coordinator's worker
+                        // pool); execution is parallel.
+                        let job = {
+                            let rx = rx.lock().unwrap();
+                            rx.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // pool shut down and drained
+                        }
+                    }
+                })
+            })
+            .collect();
+        HedgePool { tx: Mutex::new(Some(tx)), handles: Mutex::new(handles), shared }
+    }
+
+    /// Enqueue a job; returns `false` if the pool has shut down.
+    fn submit(&self, job: Job) -> bool {
+        match self.tx.lock().unwrap().as_ref() {
+            Some(tx) => tx.send(job).is_ok(),
+            None => false,
+        }
+    }
+
+    /// Stop intake, wait up to `grace` for queued and in-flight jobs to
+    /// finish, then join the helper threads. Returns `true` when every
+    /// helper exited within the grace period; `false` leaves the
+    /// stragglers detached (a later call — including drop — retries).
+    /// Idempotent.
+    pub fn shutdown(&self, grace: Duration) -> bool {
+        drop(self.tx.lock().unwrap().take());
+        let deadline = Instant::now() + grace;
+        let mut alive = self.shared.alive.lock().unwrap();
+        while *alive > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _timed_out) = self
+                .shared
+                .exited
+                .wait_timeout(alive, deadline - now)
+                .unwrap();
+            alive = guard;
+        }
+        let drained = *alive == 0;
+        drop(alive);
+        if drained {
+            // Every thread has signalled exit: joins return immediately.
+            for h in self.handles.lock().unwrap().drain(..) {
+                let _ = h.join();
+            }
+        }
+        drained
+    }
+}
+
+impl Drop for HedgePool {
+    fn drop(&mut self) {
+        let _ = self.shutdown(DEFAULT_SHUTDOWN_GRACE);
+    }
+}
+
+/// Tail-latency hedging; see the [module docs](self).
+///
+/// ```
+/// use std::sync::Arc;
+/// use std::time::Duration;
+/// use normq::coordinator::metrics::Metrics;
+/// use normq::coordinator::ServeRequest;
+/// use normq::service::{Echo, Service, Stack};
+///
+/// let metrics = Arc::new(Metrics::new());
+/// let svc = Stack::new()
+///     .hedge(Duration::from_millis(50), Arc::clone(&metrics))
+///     .service(Echo::instant());
+/// // A fast backend answers before the hedge delay fires.
+/// assert!(svc.call(ServeRequest::new(vec!["tree".into()])).is_ok());
+/// assert_eq!(metrics.hedged.load(std::sync::atomic::Ordering::Relaxed), 0);
+/// ```
 pub struct Hedge<S> {
     inner: Arc<S>,
     delay: Duration,
+    pool: HedgePool,
     metrics: Arc<Metrics>,
 }
 
 impl<S> Hedge<S> {
+    /// Wrap `inner`, re-dispatching calls still unanswered after
+    /// `delay`. The helper pool defaults to 2× the machine's default
+    /// worker-thread count (primary + hedge per concurrent call).
     pub fn new(inner: S, delay: Duration, metrics: Arc<Metrics>) -> Self {
-        Hedge { inner: Arc::new(inner), delay, metrics }
+        let size = crate::util::threadpool::default_threads().saturating_mul(2);
+        Hedge::with_pool_size(inner, delay, metrics, size)
+    }
+
+    /// [`Hedge::new`] with an explicit helper-pool size.
+    pub fn with_pool_size(
+        inner: S,
+        delay: Duration,
+        metrics: Arc<Metrics>,
+        pool_size: usize,
+    ) -> Self {
+        Hedge { inner: Arc::new(inner), delay, pool: HedgePool::new(pool_size), metrics }
+    }
+
+    /// Shut down the helper pool, waiting up to `grace` for in-flight
+    /// attempts (see [`HedgePool::shutdown`]). Subsequent calls fail
+    /// with [`ServiceError::Closed`].
+    pub fn shutdown(&self, grace: Duration) -> bool {
+        self.pool.shutdown(grace)
     }
 }
 
@@ -48,25 +211,35 @@ where
         let primary_tx = tx.clone();
         let primary_svc = Arc::clone(&self.inner);
         let primary_req = req.clone();
-        std::thread::spawn(move || {
+        let submitted = self.pool.submit(Box::new(move || {
             let _ = primary_tx.send((0, primary_svc.call(primary_req)));
-        });
+        }));
+        if !submitted {
+            return Err(ServiceError::Closed);
+        }
 
         match rx.recv_timeout(self.delay) {
             Ok((_, result)) => result,
             Err(RecvTimeoutError::Disconnected) => Err(ServiceError::Closed),
             Err(RecvTimeoutError::Timeout) => {
-                self.metrics.hedged.fetch_add(1, Ordering::Relaxed);
                 let hedge_svc = Arc::clone(&self.inner);
-                std::thread::spawn(move || {
+                let hedged = self.pool.submit(Box::new(move || {
                     let _ = tx.send((1, hedge_svc.call(req)));
-                });
+                }));
+                let attempts = if hedged {
+                    self.metrics.hedged.fetch_add(1, Ordering::Relaxed);
+                    2
+                } else {
+                    // Pool shut down mid-flight: the primary is still
+                    // running, so wait for it alone.
+                    1
+                };
                 // First *successful* response wins. An attempt that
                 // errors (e.g. the hedge dispatch bounces off a full
                 // queue in microseconds) must not preempt the other
                 // attempt, which may still succeed.
                 let mut last_err = ServiceError::Closed;
-                for _ in 0..2 {
+                for _ in 0..attempts {
                     match rx.recv() {
                         Ok((attempt, Ok(resp))) => {
                             if attempt == 1 {
@@ -84,22 +257,41 @@ where
     }
 }
 
+/// Builds [`Hedge`] middlewares; see [`super::stack::Stack::hedge`].
 #[derive(Clone, Debug)]
 pub struct HedgeLayer {
     delay: Duration,
     metrics: Arc<Metrics>,
+    pool_size: Option<usize>,
 }
 
 impl HedgeLayer {
+    /// A layer that hedges calls still unanswered after `delay`.
     pub fn new(delay: Duration, metrics: Arc<Metrics>) -> Self {
-        HedgeLayer { delay, metrics }
+        HedgeLayer { delay, metrics, pool_size: None }
+    }
+
+    /// Override the helper-pool size. The pool bounds concurrent
+    /// attempts (primaries included): when every helper is busy, new
+    /// primaries queue and their queue wait counts against the hedge
+    /// delay, producing spurious hedges. Size it at ≥ 2× the expected
+    /// concurrent calls through this layer; the default is 2× the
+    /// machine's default worker-thread count.
+    pub fn with_pool_size(mut self, pool_size: usize) -> Self {
+        self.pool_size = Some(pool_size);
+        self
     }
 }
 
 impl<S> Layer<S> for HedgeLayer {
     type Service = Hedge<S>;
     fn layer(&self, inner: S) -> Self::Service {
-        Hedge::new(inner, self.delay, Arc::clone(&self.metrics))
+        match self.pool_size {
+            Some(size) => {
+                Hedge::with_pool_size(inner, self.delay, Arc::clone(&self.metrics), size)
+            }
+            None => Hedge::new(inner, self.delay, Arc::clone(&self.metrics)),
+        }
     }
 }
 
@@ -107,7 +299,6 @@ impl<S> Layer<S> for HedgeLayer {
 mod tests {
     use super::super::testutil::{MockSvc, TestReq};
     use super::*;
-    use std::time::Instant;
 
     #[test]
     fn fast_primary_needs_no_hedge() {
@@ -167,5 +358,41 @@ mod tests {
         assert_eq!(resp.served_by_call, 0);
         assert_eq!(metrics.hedged.load(Ordering::Relaxed), 1);
         assert_eq!(metrics.hedge_wins.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn shutdown_waits_for_the_losing_attempt() {
+        let metrics = Arc::new(Metrics::new());
+        // Primary stalls 80ms; the hedge wins at ~10ms and the loser
+        // keeps running on the pool.
+        let mut inner = MockSvc::instant();
+        inner.first_call_delay = Some(Duration::from_millis(80));
+        let svc = Hedge::new(inner, Duration::from_millis(10), Arc::clone(&metrics));
+        let resp = svc.call(TestReq::default()).unwrap();
+        assert_eq!(resp.served_by_call, 1);
+        // Bounded shutdown joins the straggler instead of racing it.
+        assert!(svc.shutdown(Duration::from_secs(5)), "straggler should drain in time");
+        assert_eq!(svc.inner.calls.load(std::sync::atomic::Ordering::SeqCst), 2);
+        assert_eq!(svc.inner.in_flight.load(std::sync::atomic::Ordering::SeqCst), 0);
+        // The pool is closed: further calls fail instead of leaking.
+        assert_eq!(svc.call(TestReq::default()), Err(ServiceError::Closed));
+    }
+
+    #[test]
+    fn shutdown_grace_bounds_the_wait_on_a_stuck_straggler() {
+        let metrics = Arc::new(Metrics::new());
+        let mut inner = MockSvc::instant();
+        inner.first_call_delay = Some(Duration::from_millis(250));
+        let svc = Hedge::new(inner, Duration::from_millis(5), Arc::clone(&metrics));
+        svc.call(TestReq::default()).unwrap();
+        let t0 = Instant::now();
+        // 20ms grace against a ~245ms straggler: report stragglers left.
+        assert!(!svc.shutdown(Duration::from_millis(20)));
+        assert!(
+            t0.elapsed() < Duration::from_millis(200),
+            "shutdown overshot its grace period: {:?}",
+            t0.elapsed()
+        );
+        // The drop impl retries with the default grace and joins cleanly.
     }
 }

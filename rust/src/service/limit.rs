@@ -46,12 +46,24 @@ impl Drop for Permit<'_> {
     }
 }
 
+/// A concurrency cap on in-flight calls; see the [module docs](self).
+///
+/// ```
+/// use normq::coordinator::ServeRequest;
+/// use normq::service::{Echo, Service, Stack};
+///
+/// let svc = Stack::new()
+///     .concurrency_limit(2)
+///     .service(Echo::instant());
+/// assert!(svc.call(ServeRequest::new(vec!["tree".into()])).is_ok());
+/// ```
 pub struct ConcurrencyLimit<S> {
     inner: S,
     sem: Semaphore,
 }
 
 impl<S> ConcurrencyLimit<S> {
+    /// Wrap `inner`, admitting at most `max` (min 1) concurrent calls.
     pub fn new(inner: S, max: usize) -> Self {
         ConcurrencyLimit { inner, sem: Semaphore::new(max.max(1)) }
     }
@@ -78,12 +90,15 @@ where
     }
 }
 
+/// Builds [`ConcurrencyLimit`] middlewares; see
+/// [`super::stack::Stack::concurrency_limit`].
 #[derive(Clone, Copy, Debug)]
 pub struct ConcurrencyLimitLayer {
     max: usize,
 }
 
 impl ConcurrencyLimitLayer {
+    /// A layer capping in-flight calls at `max`.
     pub fn new(max: usize) -> Self {
         ConcurrencyLimitLayer { max }
     }

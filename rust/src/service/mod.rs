@@ -16,27 +16,49 @@
 //! - [`rate::RateLimit`] — token-bucket pacing of call admission.
 //! - [`shed::LoadShed`] — reject (`Err(Overloaded)`) instead of queueing
 //!   when the inner service reports `Busy`.
+//! - [`quota::Quota`] — per-client token buckets with a shared overflow
+//!   pool; a client past its quota is denied without touching shared
+//!   capacity.
+//! - [`fair::FairQueue`] — deficit-weighted round-robin across
+//!   per-client queues: replaces FIFO ordering in front of the
+//!   coordinator so one greedy client cannot starve the rest.
+//! - [`adaptive::AdaptiveShed`] — derives its in-flight limit from
+//!   observed service time via Little's law instead of a hand-tuned
+//!   `queue_capacity`.
 //! - [`timeout::Timeout`] — stamps a deadline that propagates into
 //!   [`crate::generate::DecodeConfig`]; expired work is cut short inside
 //!   the decode loop rather than abandoned at the edge.
-//! - [`hedge::Hedge`] — re-dispatches slow requests to a second worker;
-//!   first response wins.
+//! - [`hedge::Hedge`] — re-dispatches slow requests through a persistent
+//!   helper pool; first response wins.
+//! - [`echo::Echo`] — a trivial deadline-honoring backend for examples,
+//!   doctests and integration tests.
 //!
 //! Unlike tower there are no futures: `call` blocks the calling thread,
 //! which matches the coordinator's thread-per-client serving model and
 //! keeps middlewares free of executor plumbing. `poll_ready` is
 //! advisory — a `Ready` probe can still race with other clients — so
 //! only [`shed::LoadShed`] turns it into a hard rejection.
+//!
+//! The full request path, middleware ordering rationale and a request
+//! lifecycle walkthrough live in `ARCHITECTURE.md` at the repo root.
 
+pub mod adaptive;
+pub mod echo;
+pub mod fair;
 pub mod hedge;
 pub mod limit;
+pub mod quota;
 pub mod rate;
 pub mod shed;
 pub mod stack;
 pub mod timeout;
 
-pub use hedge::{Hedge, HedgeLayer};
+pub use adaptive::{AdaptiveShed, AdaptiveShedLayer};
+pub use echo::{Echo, EchoResponse};
+pub use fair::{FairQueue, FairQueueLayer};
+pub use hedge::{Hedge, HedgeLayer, HedgePool};
 pub use limit::{ConcurrencyLimit, ConcurrencyLimitLayer};
+pub use quota::{Quota, QuotaConfig, QuotaLayer};
 pub use rate::{RateLimit, RateLimitLayer};
 pub use shed::{LoadShed, LoadShedLayer};
 pub use stack::{Compose, Identity, Layer, Stack};
@@ -55,6 +77,22 @@ pub enum Readiness {
     Busy,
     /// The service has shut down; calls will fail.
     Closed,
+}
+
+/// Requests attributed to a client principal, so per-client layers
+/// ([`quota::Quota`], [`fair::FairQueue`]) and per-client metrics know
+/// who is asking. [`crate::coordinator::ServeRequest`] implements this;
+/// anonymous traffic shares one id.
+pub trait Keyed {
+    /// Stable client identifier (an API key, tenant, or connection id).
+    fn client_id(&self) -> &str;
+
+    /// Relative scheduling weight (≥ 1): a weight-2 client receives
+    /// twice the dispatch share of a weight-1 client under
+    /// [`fair::FairQueue`]. Implementations must never return 0.
+    fn weight(&self) -> u32 {
+        1
+    }
 }
 
 /// Errors surfaced by the admission stack.
@@ -86,6 +124,7 @@ impl std::error::Error for ServiceError {}
 /// A synchronous request/response service. `Send + Sync` because a
 /// single stack instance is shared across client threads.
 pub trait Service<Req>: Send + Sync {
+    /// What a successful call returns.
     type Response;
 
     /// Non-blocking admission probe. Advisory: `Ready` does not reserve
@@ -121,6 +160,7 @@ pub type SharedService<Req, Res> = Arc<dyn Service<Req, Response = Res>>;
 /// Requests that carry an optional deadline ([`timeout::Timeout`]
 /// stamps it; the coordinator propagates it into the decode loop).
 pub trait Deadlined {
+    /// The current deadline, if any.
     fn deadline(&self) -> Option<Instant>;
     /// Tighten the deadline: keep the earlier of the existing and new.
     fn set_deadline(&mut self, deadline: Instant);
@@ -130,6 +170,7 @@ pub trait Deadlined {
 /// (the coordinator returns a truncated generation rather than nothing;
 /// [`timeout::Timeout`] converts that into `Err(DeadlineExceeded)`).
 pub trait Expirable {
+    /// True when the deadline fired before the response was complete.
     fn expired(&self) -> bool;
 }
 
@@ -195,9 +236,37 @@ pub(crate) mod testutil {
     use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
     use std::time::Duration;
 
-    #[derive(Clone, Debug, Default)]
+    #[derive(Clone, Debug)]
     pub struct TestReq {
         pub deadline: Option<Instant>,
+        pub client: String,
+        pub weight: u32,
+    }
+
+    impl Default for TestReq {
+        fn default() -> Self {
+            TestReq { deadline: None, client: "anon".into(), weight: 1 }
+        }
+    }
+
+    impl TestReq {
+        pub fn client(id: &str) -> Self {
+            TestReq { client: id.into(), ..Default::default() }
+        }
+
+        pub fn weighted(id: &str, weight: u32) -> Self {
+            TestReq { client: id.into(), weight, ..Default::default() }
+        }
+    }
+
+    impl Keyed for TestReq {
+        fn client_id(&self) -> &str {
+            &self.client
+        }
+
+        fn weight(&self) -> u32 {
+            self.weight.max(1)
+        }
     }
 
     impl Deadlined for TestReq {

@@ -1,0 +1,285 @@
+//! `Quota`: per-client token buckets with a shared overflow pool.
+//!
+//! Where [`super::rate::RateLimit`] paces the *aggregate* stream (and
+//! blocks), `Quota` is policy: each client owns a token bucket sized by
+//! [`QuotaConfig::rate`]/[`QuotaConfig::burst`], and a call from a
+//! client whose bucket is empty first tries the shared overflow pool —
+//! slack capacity any client may borrow while the system is idle —
+//! then is denied with `Err(Overloaded)` without touching shared
+//! resources. Denials are counted in `Metrics::quota_denied` and
+//! attributed per client, so a greedy client's overdraft is visible as
+//! *its* problem rather than as global load.
+//!
+//! Place this layer outermost: a denied request should cost one bucket
+//! probe, not a queue slot or a decode worker.
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::metrics::{ClientStats, Metrics};
+
+use super::{Keyed, Layer, Readiness, Service, ServiceError};
+
+/// Per-client and overflow bucket sizing for [`Quota`].
+#[derive(Clone, Copy, Debug)]
+pub struct QuotaConfig {
+    /// Sustained per-client admission rate (tokens/sec, > 0).
+    pub rate: f64,
+    /// Per-client bucket capacity (burst headroom, min 1 token).
+    pub burst: f64,
+    /// Shared overflow pool capacity (tokens; 0 disables borrowing).
+    pub overflow: f64,
+    /// Overflow pool refill rate (tokens/sec).
+    pub overflow_rate: f64,
+}
+
+impl QuotaConfig {
+    /// A quota of `rate` calls/sec with `burst` headroom per client and
+    /// an overflow pool of the same size refilled at the same rate.
+    pub fn per_client(rate: f64, burst: f64) -> Self {
+        QuotaConfig { rate, burst, overflow: burst, overflow_rate: rate }
+    }
+}
+
+impl Default for QuotaConfig {
+    fn default() -> Self {
+        QuotaConfig::per_client(100.0, 16.0)
+    }
+}
+
+struct Bucket {
+    tokens: f64,
+    last_refill: Instant,
+}
+
+impl Bucket {
+    fn full(cap: f64) -> Self {
+        Bucket { tokens: cap, last_refill: Instant::now() }
+    }
+
+    fn refill(&mut self, rate: f64, cap: f64) {
+        let now = Instant::now();
+        let elapsed = now.duration_since(self.last_refill).as_secs_f64();
+        self.tokens = (self.tokens + elapsed * rate).min(cap);
+        self.last_refill = now;
+    }
+
+    fn try_take(&mut self, rate: f64, cap: f64) -> bool {
+        self.refill(rate, cap);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// One client's bucket plus its metrics handle, resolved once at first
+/// sight so the denial path never re-locks the metrics registry.
+struct ClientBucket {
+    bucket: Bucket,
+    stats: Arc<ClientStats>,
+}
+
+struct QuotaState {
+    buckets: HashMap<String, ClientBucket>,
+    overflow: Bucket,
+}
+
+/// Per-client admission policy; see the [module docs](self).
+///
+/// ```
+/// use std::sync::Arc;
+/// use normq::coordinator::metrics::Metrics;
+/// use normq::coordinator::ServeRequest;
+/// use normq::service::{Echo, QuotaConfig, Service, ServiceError, Stack};
+///
+/// let metrics = Arc::new(Metrics::new());
+/// // One token of burst, no overflow pool, negligible refill.
+/// let cfg = QuotaConfig { rate: 1e-6, burst: 1.0, overflow: 0.0, overflow_rate: 0.0 };
+/// let svc = Stack::new()
+///     .quota(cfg, Arc::clone(&metrics))
+///     .service(Echo::instant());
+///
+/// let req = |id: &str| ServeRequest::from_client(vec!["tree".into()], id);
+/// assert!(svc.call(req("alice")).is_ok());
+/// assert_eq!(svc.call(req("alice")), Err(ServiceError::Overloaded));
+/// assert!(svc.call(req("bob")).is_ok(), "bob has his own bucket");
+/// assert_eq!(metrics.client("alice").quota_denied.load(std::sync::atomic::Ordering::Relaxed), 1);
+/// ```
+pub struct Quota<S> {
+    inner: S,
+    cfg: QuotaConfig,
+    state: Mutex<QuotaState>,
+    metrics: Arc<Metrics>,
+}
+
+impl<S> Quota<S> {
+    /// Wrap `inner` with the given quota policy. A non-finite or
+    /// non-positive `cfg.rate` fails *closed* (refill rate 0: each
+    /// client gets its burst and is then denied forever) — quota is an
+    /// admission policy, so a broken config must never silently admit
+    /// everything. CLI entry points reject such rates up front.
+    pub fn new(inner: S, cfg: QuotaConfig, metrics: Arc<Metrics>) -> Self {
+        let cfg = QuotaConfig {
+            rate: if cfg.rate.is_finite() && cfg.rate > 0.0 { cfg.rate } else { 0.0 },
+            burst: cfg.burst.max(1.0),
+            overflow: cfg.overflow.max(0.0),
+            overflow_rate: if cfg.overflow_rate.is_finite() && cfg.overflow_rate > 0.0 {
+                cfg.overflow_rate
+            } else {
+                0.0
+            },
+        };
+        Quota {
+            inner,
+            cfg,
+            state: Mutex::new(QuotaState {
+                buckets: HashMap::new(),
+                overflow: Bucket::full(cfg.overflow),
+            }),
+            metrics,
+        }
+    }
+
+    /// Try to admit one call from `client`: own bucket first, then the
+    /// shared overflow pool. On denial, returns the client's metrics
+    /// handle so the caller attributes it without another registry
+    /// lock — and the common existing-client path allocates nothing.
+    fn try_admit(&self, client: &str) -> Result<(), Arc<ClientStats>> {
+        let mut st = self.state.lock().unwrap();
+        if let Some(entry) = st.buckets.get_mut(client) {
+            if entry.bucket.try_take(self.cfg.rate, self.cfg.burst) {
+                return Ok(());
+            }
+        } else {
+            // First sight of this client: resolve the stats handle once
+            // and take from a fresh full bucket (burst >= 1 admits).
+            let mut bucket = Bucket::full(self.cfg.burst);
+            let took = bucket.try_take(self.cfg.rate, self.cfg.burst);
+            st.buckets.insert(
+                client.to_string(),
+                ClientBucket { bucket, stats: self.metrics.client(client) },
+            );
+            if took {
+                return Ok(());
+            }
+        }
+        if st.overflow.try_take(self.cfg.overflow_rate, self.cfg.overflow) {
+            return Ok(());
+        }
+        Err(Arc::clone(
+            &st.buckets.get(client).expect("entry ensured above").stats,
+        ))
+    }
+}
+
+impl<Req, S> Service<Req> for Quota<S>
+where
+    Req: Keyed,
+    S: Service<Req>,
+{
+    type Response = S::Response;
+
+    /// Advisory only: without a request there is no client to charge,
+    /// so the probe just forwards to the inner service.
+    fn poll_ready(&self) -> Readiness {
+        self.inner.poll_ready()
+    }
+
+    fn call(&self, req: Req) -> Result<Self::Response, ServiceError> {
+        if let Err(stats) = self.try_admit(req.client_id()) {
+            self.metrics.quota_denied.fetch_add(1, Ordering::Relaxed);
+            stats.quota_denied.fetch_add(1, Ordering::Relaxed);
+            return Err(ServiceError::Overloaded);
+        }
+        self.inner.call(req)
+    }
+}
+
+/// Builds [`Quota`] middlewares; see [`super::stack::Stack::quota`].
+#[derive(Clone, Debug)]
+pub struct QuotaLayer {
+    cfg: QuotaConfig,
+    metrics: Arc<Metrics>,
+}
+
+impl QuotaLayer {
+    /// A layer that wraps services with the given quota policy.
+    pub fn new(cfg: QuotaConfig, metrics: Arc<Metrics>) -> Self {
+        QuotaLayer { cfg, metrics }
+    }
+}
+
+impl<S> Layer<S> for QuotaLayer {
+    type Service = Quota<S>;
+    fn layer(&self, inner: S) -> Self::Service {
+        Quota::new(inner, self.cfg, Arc::clone(&self.metrics))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{MockSvc, TestReq};
+    use super::*;
+
+    fn cfg(rate: f64, burst: f64, overflow: f64) -> QuotaConfig {
+        QuotaConfig { rate, burst, overflow, overflow_rate: rate }
+    }
+
+    #[test]
+    fn denies_past_the_burst_per_client() {
+        let metrics = Arc::new(Metrics::new());
+        let svc = Quota::new(MockSvc::instant(), cfg(1e-9, 2.0, 0.0), Arc::clone(&metrics));
+        assert!(svc.call(TestReq::client("a")).is_ok());
+        assert!(svc.call(TestReq::client("a")).is_ok());
+        assert_eq!(svc.call(TestReq::client("a")), Err(ServiceError::Overloaded));
+        // An unrelated client is unaffected.
+        assert!(svc.call(TestReq::client("b")).is_ok());
+        assert_eq!(metrics.quota_denied.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.client("a").quota_denied.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.client("b").quota_denied.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn overflow_pool_lends_idle_capacity() {
+        let metrics = Arc::new(Metrics::new());
+        // 1-token bucket + 2-token overflow: three calls pass, not one.
+        let svc = Quota::new(MockSvc::instant(), cfg(1e-9, 1.0, 2.0), Arc::clone(&metrics));
+        for i in 0..3 {
+            assert!(svc.call(TestReq::client("a")).is_ok(), "call {i} denied");
+        }
+        assert_eq!(svc.call(TestReq::client("a")), Err(ServiceError::Overloaded));
+        // The overflow pool is shared: it is empty for everyone now, but
+        // b's own bucket still admits one call.
+        assert!(svc.call(TestReq::client("b")).is_ok());
+        assert_eq!(svc.call(TestReq::client("b")), Err(ServiceError::Overloaded));
+    }
+
+    #[test]
+    fn invalid_rate_fails_closed() {
+        let metrics = Arc::new(Metrics::new());
+        // Zero/NaN rates must throttle (burst only), never admit all.
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let svc = Quota::new(MockSvc::instant(), cfg(bad, 1.0, 0.0), Arc::clone(&metrics));
+            assert!(svc.call(TestReq::client("a")).is_ok());
+            assert_eq!(
+                svc.call(TestReq::client("a")),
+                Err(ServiceError::Overloaded),
+                "rate {bad} failed open"
+            );
+        }
+    }
+
+    #[test]
+    fn buckets_refill_over_time() {
+        let metrics = Arc::new(Metrics::new());
+        let svc = Quota::new(MockSvc::instant(), cfg(1000.0, 1.0, 0.0), Arc::clone(&metrics));
+        assert!(svc.call(TestReq::client("a")).is_ok());
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(svc.call(TestReq::client("a")).is_ok(), "bucket should have refilled");
+    }
+}

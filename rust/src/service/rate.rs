@@ -16,6 +16,20 @@ struct Bucket {
     last_refill: Instant,
 }
 
+/// Token-bucket pacing; see the [module docs](self).
+///
+/// ```
+/// use normq::coordinator::ServeRequest;
+/// use normq::service::{Echo, Service, Stack};
+///
+/// // 1000 calls/sec sustained, bursts of 8 pass unpaced.
+/// let svc = Stack::new()
+///     .rate_limit(1000.0, 8.0)
+///     .service(Echo::instant());
+/// for _ in 0..4 {
+///     assert!(svc.call(ServeRequest::new(vec!["tree".into()])).is_ok());
+/// }
+/// ```
 pub struct RateLimit<S> {
     inner: S,
     /// tokens per second
@@ -87,6 +101,8 @@ where
     }
 }
 
+/// Builds [`RateLimit`] middlewares; see
+/// [`super::stack::Stack::rate_limit`].
 #[derive(Clone, Copy, Debug)]
 pub struct RateLimitLayer {
     rate: f64,
@@ -94,6 +110,7 @@ pub struct RateLimitLayer {
 }
 
 impl RateLimitLayer {
+    /// A layer pacing at `rate` calls/sec with `burst` headroom.
     pub fn new(rate: f64, burst: f64) -> Self {
         RateLimitLayer { rate, burst }
     }

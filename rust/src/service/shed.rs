@@ -10,14 +10,31 @@ use std::sync::Arc;
 
 use crate::coordinator::metrics::Metrics;
 
-use super::{Layer, Readiness, Service, ServiceError};
+use super::{Keyed, Layer, Readiness, Service, ServiceError};
 
+/// Fail-fast admission control; see the [module docs](self).
+///
+/// ```
+/// use std::sync::Arc;
+/// use normq::coordinator::metrics::Metrics;
+/// use normq::coordinator::ServeRequest;
+/// use normq::service::{Echo, Service, Stack};
+///
+/// let metrics = Arc::new(Metrics::new());
+/// let svc = Stack::new()
+///     .load_shed(Arc::clone(&metrics))
+///     .service(Echo::instant());
+/// // An unsaturated backend admits everything.
+/// assert!(svc.call(ServeRequest::new(vec!["tree".into()])).is_ok());
+/// assert_eq!(metrics.shed.load(std::sync::atomic::Ordering::Relaxed), 0);
+/// ```
 pub struct LoadShed<S> {
     inner: S,
     metrics: Arc<Metrics>,
 }
 
 impl<S> LoadShed<S> {
+    /// Wrap `inner`, converting its `Busy` readiness into rejections.
     pub fn new(inner: S, metrics: Arc<Metrics>) -> Self {
         LoadShed { inner, metrics }
     }
@@ -25,6 +42,7 @@ impl<S> LoadShed<S> {
 
 impl<Req, S> Service<Req> for LoadShed<S>
 where
+    Req: Keyed,
     S: Service<Req>,
 {
     type Response = S::Response;
@@ -43,6 +61,10 @@ where
             Readiness::Ready => self.inner.call(req),
             Readiness::Busy => {
                 self.metrics.shed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                self.metrics
+                    .client(req.client_id())
+                    .shed
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 Err(ServiceError::Overloaded)
             }
             Readiness::Closed => Err(ServiceError::Closed),
@@ -50,12 +72,14 @@ where
     }
 }
 
+/// Builds [`LoadShed`] middlewares; see [`super::stack::Stack::load_shed`].
 #[derive(Clone, Debug)]
 pub struct LoadShedLayer {
     metrics: Arc<Metrics>,
 }
 
 impl LoadShedLayer {
+    /// A layer that sheds into the given metrics registry.
     pub fn new(metrics: Arc<Metrics>) -> Self {
         LoadShedLayer { metrics }
     }
@@ -91,8 +115,10 @@ mod tests {
         // The shed layer itself still advertises Ready...
         assert_eq!(svc.poll_ready(), Readiness::Ready);
         // ...but the call is rejected without touching the inner service.
-        assert_eq!(svc.call(TestReq::default()), Err(ServiceError::Overloaded));
+        assert_eq!(svc.call(TestReq::client("greedy")), Err(ServiceError::Overloaded));
         assert_eq!(metrics.shed.load(Ordering::Relaxed), 1);
+        // The rejection is attributed to the client that caused it.
+        assert_eq!(metrics.client("greedy").shed.load(Ordering::Relaxed), 1);
         assert_eq!(svc.inner.calls.load(Ordering::SeqCst), 0);
     }
 

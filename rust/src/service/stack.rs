@@ -3,24 +3,37 @@
 //!
 //! Layers added first end up outermost, so
 //!
-//! ```ignore
+//! ```
+//! use std::sync::Arc;
+//! use std::time::Duration;
+//! use normq::coordinator::metrics::Metrics;
+//! use normq::coordinator::ServeRequest;
+//! use normq::service::{Echo, Service, Stack};
+//!
+//! let metrics = Arc::new(Metrics::new());
 //! let svc = Stack::new()
-//!     .load_shed(metrics.clone())
+//!     .load_shed(Arc::clone(&metrics))
 //!     .rate_limit(500.0, 64.0)
-//!     .timeout(Duration::from_millis(250), metrics.clone())
-//!     .service(server);
+//!     .timeout(Duration::from_millis(250), Arc::clone(&metrics))
+//!     .service(Echo::instant());
+//! assert!(svc.call(ServeRequest::new(vec!["tree".into()])).is_ok());
 //! ```
 //!
-//! builds `LoadShed<RateLimit<Timeout<Server>>>`: shed the excess first,
+//! builds `LoadShed<RateLimit<Timeout<Echo>>>`: shed the excess first,
 //! pace what's admitted, then stamp the deadline right before dispatch.
+//! The middleware-ordering rationale table in `ARCHITECTURE.md` (repo
+//! root) explains which positions make sense for each layer.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use crate::coordinator::metrics::Metrics;
 
+use super::adaptive::AdaptiveShedLayer;
+use super::fair::FairQueueLayer;
 use super::hedge::HedgeLayer;
 use super::limit::ConcurrencyLimitLayer;
+use super::quota::{QuotaConfig, QuotaLayer};
 use super::rate::RateLimitLayer;
 use super::shed::LoadShedLayer;
 use super::timeout::TimeoutLayer;
@@ -28,7 +41,10 @@ use super::timeout::TimeoutLayer;
 /// Wraps one service in another (decorator). `&self` so a layer can be
 /// reused to build several stacks.
 pub trait Layer<S> {
+    /// The wrapped service type this layer produces.
     type Service;
+
+    /// Wrap `inner` with this layer's middleware.
     fn layer(&self, inner: S) -> Self::Service;
 }
 
@@ -69,6 +85,7 @@ pub struct Stack<L> {
 }
 
 impl Stack<Identity> {
+    /// An empty stack: [`Stack::service`] returns the service as-is.
     pub fn new() -> Self {
         Stack { layers: Identity }
     }
@@ -89,6 +106,39 @@ impl<L> Stack<L> {
     /// Reject instead of queueing when the inner service is saturated.
     pub fn load_shed(self, metrics: Arc<Metrics>) -> Stack<Compose<L, LoadShedLayer>> {
         self.layer(LoadShedLayer::new(metrics))
+    }
+
+    /// Deny clients past their per-client token-bucket quota (see
+    /// [`super::quota::Quota`]). Place outermost: denied requests
+    /// should cost a bucket probe, not shared capacity.
+    pub fn quota(self, cfg: QuotaConfig, metrics: Arc<Metrics>) -> Stack<Compose<L, QuotaLayer>> {
+        self.layer(QuotaLayer::new(cfg, metrics))
+    }
+
+    /// Derive the in-flight limit from observed service time via
+    /// Little's law (see [`super::adaptive::AdaptiveShed`]): admitted
+    /// requests target `budget` time-in-system on a `workers`-wide
+    /// backend.
+    pub fn adaptive_shed(
+        self,
+        budget: Duration,
+        workers: usize,
+        metrics: Arc<Metrics>,
+    ) -> Stack<Compose<L, AdaptiveShedLayer>> {
+        self.layer(AdaptiveShedLayer::new(budget, workers, metrics))
+    }
+
+    /// Replace FIFO queueing with deficit-weighted round-robin across
+    /// per-client queues (see [`super::fair::FairQueue`]):
+    /// `concurrency` dispatch slots, at most `queue_cap` waiting calls
+    /// per client.
+    pub fn fair_queue(
+        self,
+        concurrency: usize,
+        queue_cap: usize,
+        metrics: Arc<Metrics>,
+    ) -> Stack<Compose<L, FairQueueLayer>> {
+        self.layer(FairQueueLayer::new(concurrency, queue_cap, metrics))
     }
 
     /// Cap concurrent in-flight calls at `max`.
@@ -171,5 +221,24 @@ mod tests {
         }
         assert_eq!(metrics.shed.load(Ordering::Relaxed), 0);
         assert_eq!(metrics.timed_out.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn fairness_stack_composes_and_serves() {
+        let metrics = Arc::new(Metrics::new());
+        let svc = Stack::new()
+            .quota(super::QuotaConfig::per_client(10_000.0, 32.0), Arc::clone(&metrics))
+            .adaptive_shed(std::time::Duration::from_secs(5), 4, Arc::clone(&metrics))
+            .fair_queue(4, 16, Arc::clone(&metrics))
+            .timeout(std::time::Duration::from_secs(5), Arc::clone(&metrics))
+            .service(MockSvc::instant());
+        for i in 0..8 {
+            let id = if i % 2 == 0 { "a" } else { "b" };
+            assert!(svc.call(TestReq::client(id)).is_ok());
+        }
+        assert_eq!(metrics.quota_denied.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.fair_shed.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.adaptive_shed.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.client("a").queue_depth.load(Ordering::Relaxed), 0);
     }
 }

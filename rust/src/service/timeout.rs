@@ -18,6 +18,25 @@ use crate::coordinator::metrics::Metrics;
 
 use super::{Deadlined, Expirable, Layer, Readiness, Service, ServiceError};
 
+/// Deadline stamping and enforcement; see the [module docs](self).
+///
+/// ```
+/// use std::sync::Arc;
+/// use std::time::Duration;
+/// use normq::coordinator::metrics::Metrics;
+/// use normq::coordinator::ServeRequest;
+/// use normq::service::{Echo, Service, ServiceError, Stack};
+///
+/// let metrics = Arc::new(Metrics::new());
+/// // A 5ms deadline against a 50ms backend: the response comes back
+/// // expired and the layer converts it into an error.
+/// let svc = Stack::new()
+///     .timeout(Duration::from_millis(5), Arc::clone(&metrics))
+///     .service(Echo::with_delay(Duration::from_millis(50)));
+/// let out = svc.call(ServeRequest::new(vec!["tree".into()]));
+/// assert_eq!(out, Err(ServiceError::DeadlineExceeded));
+/// assert_eq!(metrics.timed_out.load(std::sync::atomic::Ordering::Relaxed), 1);
+/// ```
 pub struct Timeout<S> {
     inner: S,
     timeout: Duration,
@@ -25,6 +44,7 @@ pub struct Timeout<S> {
 }
 
 impl<S> Timeout<S> {
+    /// Wrap `inner`, stamping `timeout` from now onto every request.
     pub fn new(inner: S, timeout: Duration, metrics: Arc<Metrics>) -> Self {
         Timeout { inner, timeout, metrics }
     }
@@ -54,6 +74,7 @@ where
     }
 }
 
+/// Builds [`Timeout`] middlewares; see [`super::stack::Stack::timeout`].
 #[derive(Clone, Debug)]
 pub struct TimeoutLayer {
     timeout: Duration,
@@ -61,6 +82,7 @@ pub struct TimeoutLayer {
 }
 
 impl TimeoutLayer {
+    /// A layer stamping `timeout` onto every request.
     pub fn new(timeout: Duration, metrics: Arc<Metrics>) -> Self {
         TimeoutLayer { timeout, metrics }
     }
@@ -111,7 +133,7 @@ mod tests {
             Duration::from_secs(60),
             Arc::clone(&metrics),
         );
-        let req = TestReq { deadline: Some(Instant::now()) };
+        let req = TestReq { deadline: Some(Instant::now()), ..Default::default() };
         assert_eq!(svc.call(req), Err(ServiceError::DeadlineExceeded));
         assert_eq!(metrics.timed_out.load(Ordering::Relaxed), 1);
     }

@@ -13,6 +13,7 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::log_info;
 
+/// Run this experiment and produce its table/figure data.
 pub fn run(args: &Args) -> Result<TableResult, String> {
     let ctx = ExperimentContext::build(args)?;
     let n_requests = args.usize("requests", 16)?;

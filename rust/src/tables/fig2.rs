@@ -9,6 +9,7 @@ use crate::tables::{ExperimentContext, TableResult};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
+/// Run this experiment and produce its table/figure data.
 pub fn run(args: &Args) -> Result<TableResult, String> {
     let ctx = ExperimentContext::build(args)?;
     let heat = args.usize("heatmap", 32)?;

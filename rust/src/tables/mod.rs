@@ -35,17 +35,25 @@ use crate::log_info;
 
 /// Everything an experiment needs, built once per invocation.
 pub struct ExperimentContext {
+    /// The synthetic corpus (lexicon + vocabulary).
     pub corpus: Corpus,
+    /// The natively-trained n-gram LM experiments decode with.
     pub lm: NgramLm,
     /// FP32 base HMM, EM-trained on the corpus (the paper's distilled
     /// HMM; `--distill` samples training data from the LM instead of the
     /// grammar, which is the literal distillation setup).
     pub hmm: Hmm,
+    /// Chunked training corpus (one chunk per EM step).
     pub chunks: Vec<Vec<Vec<usize>>>,
+    /// Held-out token sequences for test log-likelihood.
     pub test_data: Vec<Vec<usize>>,
+    /// The evaluation set (concepts + references).
     pub items: Vec<EvalItem>,
+    /// Decoder configuration shared by every run.
     pub decode: DecodeConfig,
+    /// Worker threads for parallel evaluation.
     pub threads: usize,
+    /// The experiment seed.
     pub seed: u64,
 }
 
@@ -56,6 +64,8 @@ impl ExperimentContext {
         "refs", "lambda",
     ];
 
+    /// Build the corpus, train the LM and base HMM, and sample the
+    /// evaluation set from CLI arguments.
     pub fn build(args: &Args) -> Result<ExperimentContext, String> {
         let seed = args.u64("seed", 1234)?;
         let hidden = args.usize("hidden", 64)?;
@@ -120,14 +130,20 @@ impl ExperimentContext {
 
 /// A rendered experiment result: printable table + JSON payload.
 pub struct TableResult {
+    /// Table/figure id (e.g. "table1", "fig3").
     pub id: String,
+    /// Human-readable title.
     pub title: String,
+    /// Column headers.
     pub header: Vec<String>,
+    /// Row cells, aligned with `header`.
     pub rows: Vec<Vec<String>>,
+    /// Machine-readable payload saved alongside the rendering.
     pub json: Json,
 }
 
 impl TableResult {
+    /// Render as an aligned plain-text table.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -204,9 +220,11 @@ pub fn score_cells(label: &str, s: &crate::eval::Scores) -> Vec<String> {
     ]
 }
 
+/// The standard score-table header (config + the five metrics).
 pub const SCORE_HEADER: [&str; 6] =
     ["config", "Success", "Rouge", "BLEU4", "CIDEr", "SPICE*"];
 
+/// Scores as a JSON object, for result dumps.
 pub fn scores_json(s: &crate::eval::Scores) -> Json {
     Json::obj(vec![
         ("success_rate", Json::num(s.success_rate)),

@@ -10,6 +10,7 @@ use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::log_info;
 
+/// Run this experiment and produce its table/figure data.
 pub fn run(args: &Args) -> Result<TableResult, String> {
     let ctx = ExperimentContext::build(args)?;
     let ratios = args.f64_list("ratios", &[0.5, 0.8, 0.85, 0.86, 0.9])?;

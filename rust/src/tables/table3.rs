@@ -11,6 +11,7 @@ use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::log_info;
 
+/// Run this experiment and produce its table/figure data.
 pub fn run(args: &Args) -> Result<TableResult, String> {
     let ctx = ExperimentContext::build(args)?;
     let bits = args.usize("bits", 8)? as u32;

@@ -37,6 +37,7 @@ fn streamed_sparsity(rows: usize, cols: usize, alpha: f64, bits: u32, seed: u64)
     zeros as f64 / (sample_rows * cols) as f64
 }
 
+/// Run this experiment and produce its table/figure data.
 pub fn run(args: &Args) -> Result<TableResult, String> {
     let ctx = ExperimentContext::build(args)?;
     let bits = args.usize_list("bits", &[24, 16, 12, 8, 7, 6, 5, 4, 3])?;

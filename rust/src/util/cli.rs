@@ -4,10 +4,14 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command-line arguments with typed getters.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Non-flag arguments, in order (subcommand first).
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
     pub flags: Vec<String>,
     /// Option keys that expect a value (everything else parses as a flag).
     value_keys: Vec<String>,
@@ -45,18 +49,22 @@ impl Args {
         Ok(args)
     }
 
+    /// Whether the bare flag `--name` was given.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The raw value of option `--name`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// The raw value of option `--name`, or `default`.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Integer option with a default.
     pub fn usize(&self, name: &str, default: usize) -> Result<usize, String> {
         match self.get(name) {
             None => Ok(default),
@@ -66,6 +74,7 @@ impl Args {
         }
     }
 
+    /// `u64` option with a default.
     pub fn u64(&self, name: &str, default: u64) -> Result<u64, String> {
         match self.get(name) {
             None => Ok(default),
@@ -75,6 +84,7 @@ impl Args {
         }
     }
 
+    /// Float option with a default.
     pub fn f64(&self, name: &str, default: f64) -> Result<f64, String> {
         match self.get(name) {
             None => Ok(default),
@@ -138,6 +148,7 @@ impl Args {
         }
     }
 
+    /// Comma-separated list of floats, e.g. `--ratios 0.5,0.25`.
     pub fn f64_list(&self, name: &str, default: &[f64]) -> Result<Vec<f64>, String> {
         match self.get(name) {
             None => Ok(default.to_vec()),

@@ -9,33 +9,45 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// A JSON value (the usual six-variant model).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// Any JSON number (always stored as `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys, so serialization is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Build an object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build an array from any value iterator.
     pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
         Json::Arr(items.into_iter().collect())
     }
 
+    /// Build a number.
     pub fn num(v: impl Into<f64>) -> Json {
         Json::Num(v.into())
     }
 
+    /// Build a string.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// Object field lookup; `None` for non-objects or missing keys.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -43,6 +55,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -50,10 +63,12 @@ impl Json {
         }
     }
 
+    /// The numeric value truncated to `usize`, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -61,6 +76,7 @@ impl Json {
         }
     }
 
+    /// The items, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -68,6 +84,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),

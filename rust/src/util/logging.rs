@@ -6,7 +6,9 @@ use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
 
+/// Log severity, most severe first.
 #[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
+#[allow(missing_docs)]
 pub enum Level {
     Error = 0,
     Warn = 1,
@@ -18,6 +20,7 @@ pub enum Level {
 static LEVEL: AtomicU8 = AtomicU8::new(2);
 static START: OnceLock<Instant> = OnceLock::new();
 
+/// Read `NORMQ_LOG` and set the level (also anchors the log clock).
 pub fn init_from_env() {
     let lvl = match std::env::var("NORMQ_LOG").as_deref() {
         Ok("error") => Level::Error,
@@ -30,14 +33,17 @@ pub fn init_from_env() {
     let _ = START.set(Instant::now());
 }
 
+/// Set the global log level.
 pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+/// Whether messages at level `l` are currently emitted.
 pub fn enabled(l: Level) -> bool {
     (l as u8) <= LEVEL.load(Ordering::Relaxed)
 }
 
+/// Emit one message (used via the `log_*` macros).
 pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
     if !enabled(l) {
         return;
@@ -53,6 +59,7 @@ pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
     eprintln!("[{:9.3}s {}] {}", t, tag, args);
 }
 
+/// Log at `Info` level with `format!` syntax.
 #[macro_export]
 macro_rules! log_info {
     ($($arg:tt)*) => {
@@ -60,6 +67,7 @@ macro_rules! log_info {
     };
 }
 
+/// Log at `Warn` level with `format!` syntax.
 #[macro_export]
 macro_rules! log_warn {
     ($($arg:tt)*) => {
@@ -67,6 +75,7 @@ macro_rules! log_warn {
     };
 }
 
+/// Log at `Debug` level with `format!` syntax.
 #[macro_export]
 macro_rules! log_debug {
     ($($arg:tt)*) => {
@@ -74,6 +83,7 @@ macro_rules! log_debug {
     };
 }
 
+/// Log at `Error` level with `format!` syntax.
 #[macro_export]
 macro_rules! log_error {
     ($($arg:tt)*) => {

@@ -4,22 +4,29 @@
 
 use crate::util::rng::Rng;
 
+/// A row-major dense `f32` matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major storage, `rows * cols` long.
     pub data: Vec<f32>,
 }
 
 impl Mat {
+    /// An all-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Mat { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// A matrix with every entry set to `v`.
     pub fn filled(rows: usize, cols: usize, v: f32) -> Self {
         Mat { rows, cols, data: vec![v; rows * cols] }
     }
 
+    /// Wrap row-major `data` as a `rows × cols` matrix.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(rows * cols, data.len(), "shape/data mismatch");
         Mat { rows, cols, data }
@@ -35,28 +42,33 @@ impl Mat {
         m
     }
 
+    /// Element at `(r, c)`.
     #[inline]
     pub fn at(&self, r: usize, c: usize) -> f32 {
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c]
     }
 
+    /// Set element `(r, c)` to `v`.
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: f32) {
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c] = v;
     }
 
+    /// Row `r` as a slice.
     #[inline]
     pub fn row(&self, r: usize) -> &[f32] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Row `r` as a mutable slice.
     #[inline]
     pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Iterate over the rows as slices.
     pub fn rows_iter(&self) -> impl Iterator<Item = &[f32]> {
         self.data.chunks_exact(self.cols)
     }
@@ -66,6 +78,7 @@ impl Mat {
         (0..self.rows).map(|r| self.at(r, c)).collect()
     }
 
+    /// The transposed matrix (fresh allocation).
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
         for r in 0..self.rows {

@@ -7,8 +7,11 @@
 
 use crate::util::rng::Rng;
 
+/// A property-test run: how many cases and from which seed.
 pub struct Prop {
+    /// Number of random cases to run.
     pub cases: usize,
+    /// Base seed; each case derives its own generator from it.
     pub seed: u64,
 }
 
@@ -19,6 +22,7 @@ impl Default for Prop {
 }
 
 impl Prop {
+    /// A run of `cases` cases seeded from `seed`.
     pub fn new(cases: usize, seed: u64) -> Self {
         Prop { cases, seed }
     }

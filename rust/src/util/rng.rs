@@ -42,6 +42,7 @@ impl Rng {
         Rng::seeded(self.next_u64())
     }
 
+    /// The next raw 64-bit output of the generator.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]

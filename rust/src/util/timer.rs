@@ -14,6 +14,7 @@ pub struct PhaseTimers {
 }
 
 impl PhaseTimers {
+    /// An empty timer registry.
     pub fn new() -> Self {
         Self::default()
     }
@@ -26,6 +27,7 @@ impl PhaseTimers {
         out
     }
 
+    /// Add `d` to the given phase's total (one call).
     pub fn add(&self, phase: &str, d: Duration) {
         let mut m = self.inner.lock().unwrap();
         let e = m.entry(phase.to_string()).or_insert((Duration::ZERO, 0));
@@ -41,6 +43,7 @@ impl PhaseTimers {
         rows
     }
 
+    /// Total wall time across every phase.
     pub fn total(&self) -> Duration {
         self.inner.lock().unwrap().values().map(|(d, _)| *d).sum()
     }
@@ -60,6 +63,7 @@ impl PhaseTimers {
         matched / total
     }
 
+    /// Drop every accumulated phase.
     pub fn reset(&self) {
         self.inner.lock().unwrap().clear();
     }
@@ -67,6 +71,7 @@ impl PhaseTimers {
 
 /// Simple summary statistics over a sample of durations (seconds).
 #[derive(Debug, Clone, Copy, PartialEq)]
+#[allow(missing_docs)] // field names are the standard statistics
 pub struct Stats {
     pub n: usize,
     pub mean: f64,
@@ -79,6 +84,7 @@ pub struct Stats {
 }
 
 impl Stats {
+    /// Compute the summary of a non-empty sample.
     pub fn of(samples: &[f64]) -> Stats {
         assert!(!samples.is_empty());
         let n = samples.len();

@@ -1,0 +1,220 @@
+//! Integration: per-client fairness under a greedy-client flood.
+//!
+//! A heavy client hammers the stack from many threads while a light
+//! client issues paced requests. With `FairQueue` (and `Quota`) in
+//! front, the light client must keep completing — the heavy client's
+//! overload turns into *its own* sheds and quota denials, attributed
+//! to it in the per-client metrics.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use normq::coordinator::{ServeRequest, Server, ServerConfig};
+use normq::data::Corpus;
+use normq::generate::DecodeConfig;
+use normq::hmm::Hmm;
+use normq::lm::NgramLm;
+use normq::service::{Echo, QuotaConfig, Service, ServiceError, Stack};
+use normq::util::rng::Rng;
+
+/// Heavy client: 6 threads × 8 back-to-back requests against 2
+/// dispatch slots and a 3-deep per-client queue — far more concurrency
+/// than its queue can hold, so overflow sheds are guaranteed. Light
+/// client: 6 paced requests. Every light request must complete and
+/// every shed must land on the heavy client's counters.
+#[test]
+fn light_client_completes_while_heavy_client_absorbs_sheds() {
+    const HEAVY_THREADS: usize = 6;
+    const HEAVY_PER_THREAD: usize = 8;
+    const LIGHT_REQUESTS: usize = 6;
+
+    let metrics = Arc::new(normq::coordinator::metrics::Metrics::new());
+    let svc = Stack::new()
+        .fair_queue(2, 3, Arc::clone(&metrics))
+        .service(Echo::with_delay(Duration::from_millis(15)));
+
+    let heavy_ok = AtomicUsize::new(0);
+    let heavy_shed = AtomicUsize::new(0);
+    let light_ok = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..HEAVY_THREADS {
+            let (svc, heavy_ok, heavy_shed) = (&svc, &heavy_ok, &heavy_shed);
+            scope.spawn(move || {
+                for _ in 0..HEAVY_PER_THREAD {
+                    let req = ServeRequest::from_client(vec!["flood".into()], "heavy");
+                    match svc.call(req) {
+                        Ok(_) => {
+                            heavy_ok.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(ServiceError::Overloaded) => {
+                            heavy_shed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => panic!("unexpected error: {e}"),
+                    }
+                }
+            });
+        }
+        let (svc, light_ok) = (&svc, &light_ok);
+        scope.spawn(move || {
+            for _ in 0..LIGHT_REQUESTS {
+                let req = ServeRequest::from_client(vec!["ping".into()], "light");
+                match svc.call(req) {
+                    Ok(resp) => {
+                        assert_eq!(resp.client_id, "light");
+                        light_ok.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => panic!("light client must never be shed: {e}"),
+                }
+                std::thread::sleep(Duration::from_millis(40));
+            }
+        });
+    });
+
+    let heavy_ok = heavy_ok.load(Ordering::Relaxed);
+    let heavy_shed = heavy_shed.load(Ordering::Relaxed);
+    assert_eq!(
+        light_ok.load(Ordering::Relaxed),
+        LIGHT_REQUESTS,
+        "light client starved"
+    );
+    assert_eq!(
+        heavy_ok + heavy_shed,
+        HEAVY_THREADS * HEAVY_PER_THREAD,
+        "every heavy submission must resolve exactly once"
+    );
+    assert!(heavy_shed > 0, "6-thread flood over a 3-deep queue must overflow");
+    // Per-client attribution: all sheds are the heavy client's.
+    assert_eq!(
+        metrics.fair_shed.load(Ordering::Relaxed) as usize,
+        heavy_shed
+    );
+    assert_eq!(
+        metrics.client("heavy").shed.load(Ordering::Relaxed) as usize,
+        heavy_shed
+    );
+    assert_eq!(metrics.client("light").shed.load(Ordering::Relaxed), 0);
+    assert_eq!(metrics.client("light").queue_depth.load(Ordering::Relaxed), 0);
+    assert_eq!(metrics.client("heavy").queue_depth.load(Ordering::Relaxed), 0);
+}
+
+/// Quota isolation, fully deterministic: a negligible refill rate
+/// means the heavy client gets exactly its burst and the light client
+/// is untouched by the heavy client's denials.
+#[test]
+fn quota_denials_land_on_the_greedy_client_only() {
+    let metrics = Arc::new(normq::coordinator::metrics::Metrics::new());
+    let cfg = QuotaConfig { rate: 1e-9, burst: 3.0, overflow: 0.0, overflow_rate: 0.0 };
+    let svc = Stack::new()
+        .quota(cfg, Arc::clone(&metrics))
+        .service(Echo::instant());
+
+    let mut heavy_ok = 0;
+    let mut heavy_denied = 0;
+    for _ in 0..20 {
+        match svc.call(ServeRequest::from_client(vec!["flood".into()], "heavy")) {
+            Ok(_) => heavy_ok += 1,
+            Err(ServiceError::Overloaded) => heavy_denied += 1,
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert_eq!(heavy_ok, 3, "exactly the burst passes");
+    assert_eq!(heavy_denied, 17);
+    for _ in 0..2 {
+        assert!(
+            svc.call(ServeRequest::from_client(vec!["ping".into()], "light"))
+                .is_ok(),
+            "light client must keep its own bucket"
+        );
+    }
+    assert_eq!(metrics.quota_denied.load(Ordering::Relaxed), 17);
+    assert_eq!(metrics.client("heavy").quota_denied.load(Ordering::Relaxed), 17);
+    assert_eq!(metrics.client("light").quota_denied.load(Ordering::Relaxed), 0);
+}
+
+fn make_server(workers: usize, queue: usize) -> (Arc<Server>, Corpus) {
+    let corpus = Corpus::small(900);
+    let data = corpus.sample_token_corpus(300, 41);
+    let lm = NgramLm::train(&data, corpus.vocab.len());
+    let mut rng = Rng::seeded(42);
+    let mut hmm = Hmm::random(8, corpus.vocab.len(), 0.5, 0.5, &mut rng);
+    for _ in 0..4 {
+        hmm = normq::hmm::em::em_step(&hmm, &data, 4, 1e-9).0;
+    }
+    let cfg = ServerConfig {
+        workers,
+        queue_capacity: queue,
+        decode: DecodeConfig { beam: 4, max_tokens: 12, ..Default::default() },
+        ..Default::default()
+    };
+    (
+        Arc::new(Server::start(Arc::new(lm), hmm, corpus.clone(), cfg)),
+        corpus,
+    )
+}
+
+/// The fair queue in front of the live coordinator: completions are
+/// attributed per client and conserved — whatever the heavy client
+/// offered comes back as either a completion or a shed on *its*
+/// counters, never on the light client's.
+#[test]
+fn fairness_attribution_against_the_live_coordinator() {
+    const HEAVY_THREADS: usize = 4;
+    const HEAVY_PER_THREAD: usize = 4;
+    const LIGHT_REQUESTS: usize = 3;
+
+    let (server, corpus) = make_server(2, 64);
+    let metrics = server.metrics_handle();
+    // Timeout outside the fair queue: the deadline covers queue wait.
+    let svc = Stack::new()
+        .timeout(Duration::from_secs(60), Arc::clone(&metrics))
+        .fair_queue(2, 2, Arc::clone(&metrics))
+        .service(Arc::clone(&server));
+
+    let heavy_resolved = AtomicUsize::new(0);
+    let light_ok = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for t in 0..HEAVY_THREADS {
+            let (svc, heavy_resolved) = (&svc, &heavy_resolved);
+            let concepts = vec![corpus.lexicon.nouns[t % 3].clone()];
+            scope.spawn(move || {
+                for _ in 0..HEAVY_PER_THREAD {
+                    let req = ServeRequest::from_client(concepts.clone(), "heavy");
+                    match svc.call(req) {
+                        Ok(_) | Err(ServiceError::Overloaded) => {
+                            heavy_resolved.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => panic!("unexpected error: {e}"),
+                    }
+                }
+            });
+        }
+        let (svc, light_ok) = (&svc, &light_ok);
+        let concepts = vec![corpus.lexicon.verbs[0].clone()];
+        scope.spawn(move || {
+            for _ in 0..LIGHT_REQUESTS {
+                let req = ServeRequest::from_client(concepts.clone(), "light");
+                svc.call(req).expect("light client must never be shed");
+                light_ok.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        });
+    });
+
+    assert_eq!(light_ok.load(Ordering::Relaxed), LIGHT_REQUESTS);
+    assert_eq!(
+        heavy_resolved.load(Ordering::Relaxed),
+        HEAVY_THREADS * HEAVY_PER_THREAD
+    );
+    let heavy = metrics.client("heavy");
+    let light = metrics.client("light");
+    // Conservation per client: offered = completed + shed.
+    assert_eq!(
+        (heavy.completed.load(Ordering::Relaxed) + heavy.shed.load(Ordering::Relaxed)) as usize,
+        HEAVY_THREADS * HEAVY_PER_THREAD
+    );
+    assert_eq!(light.completed.load(Ordering::Relaxed) as usize, LIGHT_REQUESTS);
+    assert_eq!(light.shed.load(Ordering::Relaxed), 0);
+    assert_eq!(metrics.in_flight.load(Ordering::Relaxed), 0);
+    server.shutdown();
+}
