@@ -11,9 +11,10 @@
 //!   and throughput (recorded in EXPERIMENTS.md §End-to-end).
 //!
 //! Falls back to the native n-gram LM with a warning if artifacts are
-//! missing, so the example always runs.
+//! missing or the build has no PJRT runtime (the default CPU-only
+//! feature set), so the example always runs.
 //!
-//! Run: make artifacts && cargo run --release --example e2e_serving
+//! Run: make artifacts && cargo run --release --features pjrt --example e2e_serving
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -25,9 +26,54 @@ use normq::hmm::Hmm;
 use normq::lm::{LanguageModel, NgramLm};
 use normq::qem::{train, QemConfig};
 use normq::quant::Method;
-use normq::runtime::{HloLm, Manifest};
 use normq::service::{drive_closed_loop, Stack};
 use normq::util::rng::Rng;
+
+/// The PJRT path: load the AOT transformer artifact if present. Any
+/// failure — missing artifacts, or a PJRT runtime that cannot execute
+/// (e.g. the vendored xla *stub*) — falls back, keeping the example's
+/// "always runs" contract.
+#[cfg(feature = "pjrt")]
+fn try_load_hlo(artifacts: &std::path::Path) -> Option<(Arc<dyn LanguageModel>, Corpus)> {
+    use normq::runtime::{HloLm, Manifest};
+    let manifest = match Manifest::load(artifacts) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("WARNING: artifacts not found ({e}); falling back to n-gram LM");
+            return None;
+        }
+    };
+    let corpus = Corpus::new(manifest.seed);
+    if corpus.vocab.len() != manifest.vocab_words.len() {
+        eprintln!(
+            "WARNING: artifact vocab {} != corpus vocab {} (stale artifacts?); \
+             falling back to n-gram LM",
+            manifest.vocab_words.len(),
+            corpus.vocab.len()
+        );
+        return None;
+    }
+    match HloLm::load(&manifest) {
+        Ok(lm) => {
+            println!(
+                "neural part: AOT HLO transformer (PJRT), vocab={}",
+                manifest.vocab_words.len()
+            );
+            Some((Arc::new(lm), corpus))
+        }
+        Err(e) => {
+            eprintln!("WARNING: PJRT LM failed to load ({e:#}); falling back to n-gram LM");
+            None
+        }
+    }
+}
+
+/// CPU-only build: no PJRT runtime, always fall back to the n-gram LM.
+#[cfg(not(feature = "pjrt"))]
+fn try_load_hlo(_artifacts: &std::path::Path) -> Option<(Arc<dyn LanguageModel>, Corpus)> {
+    eprintln!("NOTE: built without the `pjrt` feature; using the n-gram LM");
+    None
+}
 
 fn main() {
     normq::util::logging::init_from_env();
@@ -39,20 +85,9 @@ fn main() {
     // --- Layer 2/1: the neural part from AOT artifacts ---
     let artifacts = std::path::Path::new("artifacts");
     let (lm, corpus, used_hlo): (Arc<dyn LanguageModel>, Corpus, bool) =
-        match Manifest::load(artifacts) {
-            Ok(manifest) => {
-                let corpus = Corpus::new(manifest.seed);
-                assert_eq!(
-                    corpus.vocab.len(),
-                    manifest.vocab_words.len(),
-                    "artifact/corpus vocabulary mismatch"
-                );
-                let lm = HloLm::load(&manifest).expect("loading lm_logits.hlo.txt");
-                println!("neural part: AOT HLO transformer (PJRT), vocab={}", manifest.vocab_words.len());
-                (Arc::new(lm), corpus, true)
-            }
-            Err(e) => {
-                eprintln!("WARNING: artifacts not found ({e}); falling back to n-gram LM");
+        match try_load_hlo(artifacts) {
+            Some((lm, corpus)) => (lm, corpus, true),
+            None => {
                 let corpus = Corpus::new(1234);
                 let data = corpus.sample_token_corpus(6000, 1235);
                 let lm = NgramLm::train(&data, corpus.vocab.len());

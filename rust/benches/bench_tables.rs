@@ -1,15 +1,165 @@
-//! Table/figure regeneration bench: runs every experiment driver at a
-//! reduced scale and prints the resulting tables with timings. This is
-//! the `cargo bench` entry point that proves all eleven paper artifacts
-//! (Tables I-VI, Figs 1-5) regenerate from this repository; full-scale
-//! runs go through `normq table <id>` / `make tables`.
+//! Table benches: the constraint-table engine trajectory plus the
+//! paper-artifact regeneration suite.
+//!
+//! Part 1 — **table engine**: times `ConstraintTable` builds over the
+//! dense FP32 backend vs the sparse quantized backend
+//! (`QuantizedHmm`), across bit widths and sparsity levels, serial and
+//! parallel. Results always go to `BENCH_tables.json` (the CI
+//! bench-smoke artifact that starts the perf trajectory).
+//!
+//! Part 2 — **artifact regeneration**: runs every experiment driver at
+//! a reduced scale and prints the resulting tables with timings,
+//! proving all eleven paper artifacts (Tables I-VI, Figs 1-5)
+//! regenerate from this repository.
+//!
+//! `NORMQ_BENCH_QUICK=1` runs part 1 only, at a smaller scale — the
+//! CI bench-smoke mode.
 
-use normq::tables::run_experiment;
-use normq::util::cli::Args;
 use std::time::Instant;
 
-fn main() {
-    normq::util::logging::init_from_env();
+use normq::dfa::Dfa;
+use normq::generate::{BuildOptions, ConstraintTable};
+use normq::hmm::Hmm;
+use normq::quant::QuantizedHmm;
+use normq::tables::run_experiment;
+use normq::util::cli::Args;
+use normq::util::json::Json;
+use normq::util::rng::Rng;
+use normq::util::timer::bench_seconds;
+
+struct TableRow {
+    hidden: usize,
+    vocab: usize,
+    n_states: usize,
+    budget: usize,
+    bits: u32,
+    alpha: f64,
+    sparsity: f64,
+    dense_ms: f64,
+    sparse_ms: f64,
+    sparse_par_ms: f64,
+    table_kb: f64,
+}
+
+impl TableRow {
+    fn speedup(&self) -> f64 {
+        self.dense_ms / self.sparse_ms.max(1e-9)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("hidden", Json::num(self.hidden as f64)),
+            ("vocab", Json::num(self.vocab as f64)),
+            ("dfa_states", Json::num(self.n_states as f64)),
+            ("budget", Json::num(self.budget as f64)),
+            ("bits", Json::num(self.bits)),
+            ("alpha", Json::num(self.alpha)),
+            ("sparsity", Json::num(self.sparsity)),
+            ("dense_ms", Json::num(self.dense_ms)),
+            ("sparse_ms", Json::num(self.sparse_ms)),
+            ("sparse_par_ms", Json::num(self.sparse_par_ms)),
+            ("speedup", Json::num(self.speedup())),
+            ("table_kb", Json::num(self.table_kb)),
+        ])
+    }
+}
+
+/// Best-of-`reps` wall time of `f`, in milliseconds (one warmup run).
+fn time_best_ms(reps: usize, f: impl FnMut()) -> f64 {
+    bench_seconds(1, reps.max(1), f)
+        .into_iter()
+        .fold(f64::INFINITY, f64::min)
+        * 1e3
+}
+
+/// Dense-vs-sparse build scenarios across bit widths and sparsity
+/// levels. Both backends dequantize the *same* levels (the dense side
+/// is `QuantizedHmm::to_hmm`), so the timing difference is purely the
+/// engine exploiting sparsity, not a different model.
+fn table_engine_rows(quick: bool) -> Vec<TableRow> {
+    let (hiddens, vocab, budget, reps): (&[usize], usize, usize, usize) =
+        if quick { (&[64], 300, 16, 2) } else { (&[64, 192], 1000, 32, 3) };
+    let threads = normq::util::threadpool::default_threads();
+    let mut rng = Rng::seeded(0x7AB1E);
+    let mut rows = Vec::new();
+    for &hidden in hiddens {
+        for &alpha in &[0.05f64, 0.3] {
+            let hmm = Hmm::random(hidden, vocab, alpha, alpha, &mut rng);
+            // 3 single-token keyword concepts → 8 DFA states.
+            let dfa = Dfa::from_keywords(&[vec![5], vec![11], vec![17]], vocab);
+            for &bits in &[3u32, 8] {
+                let q = QuantizedHmm::from_hmm(&hmm, bits);
+                let dense = q.to_hmm();
+                let dense_ms =
+                    time_best_ms(reps, || drop(ConstraintTable::build(&dense, &dfa, budget)));
+                let serial = BuildOptions::default();
+                let sparse_ms = time_best_ms(reps, || {
+                    ConstraintTable::build_with(&q, &dfa, budget, &serial).unwrap();
+                });
+                let par = BuildOptions { deadline: None, threads };
+                let sparse_par_ms = time_best_ms(reps, || {
+                    ConstraintTable::build_with(&q, &dfa, budget, &par).unwrap();
+                });
+                let table = ConstraintTable::build_with(&q, &dfa, budget, &serial).unwrap();
+                rows.push(TableRow {
+                    hidden,
+                    vocab,
+                    n_states: dfa.n_states(),
+                    budget,
+                    bits,
+                    alpha,
+                    sparsity: q.sparsity(),
+                    dense_ms,
+                    sparse_ms,
+                    sparse_par_ms,
+                    table_kb: table.bytes() as f64 / 1024.0,
+                });
+            }
+        }
+    }
+    rows
+}
+
+fn run_table_engine(quick: bool) {
+    println!(
+        "[bench_tables] table engine: dense vs sparse builds ({})",
+        if quick { "quick" } else { "full" }
+    );
+    println!(
+        "{:>6} {:>5} {:>4} {:>8} {:>9} {:>10} {:>13} {:>8} {:>9}",
+        "hidden", "alpha", "bits", "sparsity", "dense_ms", "sparse_ms", "sparse_par_ms",
+        "speedup", "table_kb"
+    );
+    let rows = table_engine_rows(quick);
+    for r in &rows {
+        println!(
+            "{:>6} {:>5} {:>4} {:>8.3} {:>9.2} {:>10.2} {:>13.2} {:>7.1}x {:>9.1}",
+            r.hidden, r.alpha, r.bits, r.sparsity, r.dense_ms, r.sparse_ms, r.sparse_par_ms,
+            r.speedup(), r.table_kb
+        );
+        if r.bits <= 8 && r.speedup() < 1.0 {
+            eprintln!(
+                "[bench_tables] WARNING: sparse build slower than dense at bits={} alpha={}",
+                r.bits, r.alpha
+            );
+        }
+    }
+    let json = Json::obj(vec![
+        ("bench", Json::str("tables")),
+        ("quick", Json::Bool(quick)),
+        ("scenarios", Json::arr(rows.iter().map(|r| r.to_json()))),
+    ])
+    .to_string();
+    match std::fs::write("BENCH_tables.json", &json) {
+        Ok(()) => println!("[bench_tables] wrote BENCH_tables.json ({} scenarios)", rows.len()),
+        Err(e) => {
+            eprintln!("[bench_tables] FAILED writing BENCH_tables.json: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run_experiment_suite() -> usize {
     // Reduced-scale arguments so the full suite finishes in minutes.
     let base = vec![
         "--items=60".to_string(),
@@ -51,6 +201,17 @@ fn main() {
             }
         }
     }
+    failures
+}
+
+fn main() {
+    normq::util::logging::init_from_env();
+    let quick = std::env::var("NORMQ_BENCH_QUICK").is_ok_and(|v| v != "0" && !v.is_empty());
+    run_table_engine(quick);
+    if quick {
+        return;
+    }
+    let failures = run_experiment_suite();
     if failures > 0 {
         std::process::exit(1);
     }

@@ -1,16 +1,35 @@
-//! LRU cache for per-concept-set decode state (DFA + constraint table).
-//! The constraint table is the expensive per-request precomputation
-//! (HMM×DFA backward, O(T·D·H²)); requests sharing a concept set share
-//! the table — the symbolic analog of a KV-cache manager.
+//! Byte-budgeted LRU cache for per-concept-set decode state (DFA +
+//! constraint table). The constraint table is the expensive per-request
+//! precomputation (the HMM×DFA backward recursion); requests sharing a
+//! concept set share the table — the symbolic analog of a KV-cache
+//! manager.
+//!
+//! Capacity is a **byte budget**, not an entry count: table size varies
+//! with `(T+1)·D·H` (a many-keyword concept set costs orders of
+//! magnitude more than a single-keyword one), and the sparse table
+//! engine made builds cheap enough that caching *more small* tables is
+//! usually better than holding few big ones. Values report their own
+//! footprint via [`ByteSized`]; insertion evicts least-recently-used
+//! entries until the new value fits. A value larger than the whole
+//! budget is still cached alone — the most recent table must stay
+//! shareable with its concept group.
 
 use std::collections::HashMap;
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-/// A string-keyed LRU cache of shared values with hit/miss counters.
+/// Values that know their resident size, for byte-budgeted caching.
+pub trait ByteSized {
+    /// Approximate resident bytes of this value.
+    fn bytes(&self) -> usize;
+}
+
+/// A string-keyed, byte-budgeted LRU cache of shared values with
+/// hit/miss counters.
 pub struct LruCache<V> {
-    capacity: usize,
-    map: HashMap<String, Arc<V>>,
+    budget: usize,
+    used: usize,
+    map: HashMap<String, (Arc<V>, usize)>,
     order: VecDeque<String>,
     /// Lookups answered from the cache.
     pub hits: u64,
@@ -18,11 +37,14 @@ pub struct LruCache<V> {
     pub misses: u64,
 }
 
-impl<V> LruCache<V> {
-    /// An empty cache retaining at most `capacity` (min 1) entries.
-    pub fn new(capacity: usize) -> Self {
+impl<V: ByteSized> LruCache<V> {
+    /// An empty cache retaining at most `budget_bytes` of values (an
+    /// oversized single value still caches alone; see the
+    /// [module docs](self)).
+    pub fn new(budget_bytes: usize) -> Self {
         LruCache {
-            capacity: capacity.max(1),
+            budget: budget_bytes,
+            used: 0,
             map: HashMap::new(),
             order: VecDeque::new(),
             hits: 0,
@@ -40,11 +62,21 @@ impl<V> LruCache<V> {
         self.map.is_empty()
     }
 
+    /// Bytes currently accounted to cached values.
+    pub fn used_bytes(&self) -> usize {
+        self.used
+    }
+
+    /// The configured byte budget.
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
     /// Look `key` up, bumping it to most-recently-used on a hit. Counts
     /// a hit or a miss; pair with [`LruCache::insert`] when the build
     /// can fail or be abandoned (e.g. a deadline firing mid-build).
     pub fn get(&mut self, key: &str) -> Option<Arc<V>> {
-        if let Some(v) = self.map.get(key) {
+        if let Some((v, _)) = self.map.get(key) {
             self.hits += 1;
             let v = Arc::clone(v);
             // Move to MRU position.
@@ -59,24 +91,36 @@ impl<V> LruCache<V> {
         }
     }
 
-    /// Cache `value` under `key` (evicting the LRU entry at capacity)
-    /// and return the shared handle. Re-inserting an existing key
-    /// replaces the value and bumps it to most-recently-used. Does not
+    /// Cache `value` under `key`, evicting least-recently-used entries
+    /// until it fits the byte budget, and return the shared handle.
+    /// Re-inserting an existing key replaces the value (releasing the
+    /// old accounting) and bumps it to most-recently-used. Does not
     /// count a hit or miss — the preceding [`LruCache::get`] already
     /// did.
     pub fn insert(&mut self, key: &str, value: V) -> Arc<V> {
-        let v = Arc::new(value);
-        if let Some(pos) = self.order.iter().position(|k| k == key) {
-            // Replacement: drop the stale LRU position so the key never
-            // occupies two slots in the eviction order.
-            self.order.remove(pos);
-        } else if self.map.len() >= self.capacity {
-            if let Some(evict) = self.order.pop_front() {
-                self.map.remove(&evict);
+        let size = value.bytes();
+        if let Some((_, old_size)) = self.map.remove(key) {
+            // Replacement: release the old accounting and drop the
+            // stale LRU position so the key never occupies two slots.
+            self.used -= old_size;
+            if let Some(pos) = self.order.iter().position(|k| k == key) {
+                self.order.remove(pos);
             }
         }
-        self.map.insert(key.to_string(), Arc::clone(&v));
+        while self.used + size > self.budget {
+            match self.order.pop_front() {
+                Some(evict) => {
+                    if let Some((_, sz)) = self.map.remove(&evict) {
+                        self.used -= sz;
+                    }
+                }
+                None => break, // oversized value: cache it alone
+            }
+        }
+        let v = Arc::new(value);
+        self.map.insert(key.to_string(), (Arc::clone(&v), size));
         self.order.push_back(key.to_string());
+        self.used += size;
         v
     }
 
@@ -93,32 +137,76 @@ impl<V> LruCache<V> {
 mod tests {
     use super::*;
 
+    /// 4-byte test value.
+    impl ByteSized for u32 {
+        fn bytes(&self) -> usize {
+            4
+        }
+    }
+
+    /// Test value with a declared size.
+    struct Blob(usize);
+
+    impl ByteSized for Blob {
+        fn bytes(&self) -> usize {
+            self.0
+        }
+    }
+
     #[test]
     fn caches_and_counts() {
-        let mut c: LruCache<u32> = LruCache::new(2);
+        let mut c: LruCache<u32> = LruCache::new(8);
         let a = c.get_or_insert_with("a", || 1);
         assert_eq!(*a, 1);
         let a2 = c.get_or_insert_with("a", || panic!("rebuilt"));
         assert_eq!(*a2, 1);
         assert_eq!(c.hits, 1);
         assert_eq!(c.misses, 1);
+        assert_eq!(c.used_bytes(), 4);
     }
 
     #[test]
-    fn evicts_lru() {
-        let mut c: LruCache<u32> = LruCache::new(2);
+    fn evicts_lru_when_the_budget_fills() {
+        let mut c: LruCache<u32> = LruCache::new(8); // fits two u32s
         c.get_or_insert_with("a", || 1);
         c.get_or_insert_with("b", || 2);
         c.get_or_insert_with("a", || panic!()); // a is now MRU
         c.get_or_insert_with("c", || 3); // evicts b
         assert_eq!(c.len(), 2);
+        assert_eq!(c.used_bytes(), 8);
         c.get_or_insert_with("b", || 22); // miss: rebuilt
         assert_eq!(c.misses, 4);
     }
 
     #[test]
+    fn big_values_evict_many_small_ones() {
+        let mut c: LruCache<Blob> = LruCache::new(100);
+        c.insert("a", Blob(40));
+        c.insert("b", Blob(40));
+        c.insert("c", Blob(90)); // needs both evicted
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.used_bytes(), 90);
+        assert!(c.get("a").is_none() && c.get("b").is_none());
+        assert!(c.get("c").is_some());
+    }
+
+    #[test]
+    fn oversized_value_still_caches_alone() {
+        let mut c: LruCache<Blob> = LruCache::new(10);
+        c.insert("small", Blob(5));
+        let big = c.insert("big", Blob(1000));
+        assert_eq!(big.0, 1000);
+        assert_eq!(c.len(), 1, "oversized insert must evict the rest");
+        assert!(c.get("big").is_some(), "the newest table must stay shareable");
+        // The next small insert evicts the oversized entry again.
+        c.insert("next", Blob(5));
+        assert!(c.get("big").is_none());
+        assert_eq!(c.used_bytes(), 5);
+    }
+
+    #[test]
     fn get_insert_pair_supports_abandoned_builds() {
-        let mut c: LruCache<u32> = LruCache::new(2);
+        let mut c: LruCache<u32> = LruCache::new(8);
         // Miss, but the build is abandoned (deadline fired): nothing cached.
         assert!(c.get("a").is_none());
         assert_eq!(c.len(), 0);
@@ -132,24 +220,27 @@ mod tests {
     }
 
     #[test]
-    fn reinserting_a_key_replaces_without_duplicating_lru_slots() {
-        let mut c: LruCache<u32> = LruCache::new(2);
-        c.insert("a", 1);
-        c.insert("b", 3);
-        c.insert("a", 2); // replacement: new value, bumped to MRU
+    fn reinserting_a_key_replaces_without_duplicating_accounting() {
+        let mut c: LruCache<Blob> = LruCache::new(100);
+        c.insert("a", Blob(30));
+        c.insert("b", Blob(30));
+        c.insert("a", Blob(50)); // replacement: new size, bumped to MRU
         assert_eq!(c.len(), 2);
-        c.insert("c", 4); // evicts b (the LRU), not the re-inserted a
+        assert_eq!(c.used_bytes(), 80);
+        c.insert("c", Blob(40)); // evicts b (the LRU), not the re-inserted a
         assert_eq!(c.len(), 2);
-        assert_eq!(*c.get("a").unwrap(), 2);
+        assert_eq!(c.used_bytes(), 90);
+        assert_eq!(c.get("a").unwrap().0, 50);
         assert!(c.get("b").is_none());
         assert!(c.get("c").is_some());
     }
 
     #[test]
-    fn capacity_one_works() {
-        let mut c: LruCache<u32> = LruCache::new(1);
+    fn zero_budget_keeps_only_the_newest() {
+        let mut c: LruCache<u32> = LruCache::new(0);
         c.get_or_insert_with("a", || 1);
         c.get_or_insert_with("b", || 2);
         assert_eq!(c.len(), 1);
+        assert_eq!(*c.get("b").unwrap(), 2);
     }
 }

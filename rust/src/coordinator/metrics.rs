@@ -129,6 +129,16 @@ pub struct Metrics {
     pub table_cache_hits: AtomicU64,
     /// Constraint-table cache misses (a table had to be built).
     pub table_cache_misses: AtomicU64,
+    /// Cumulative **microseconds** spent in completed constraint-table
+    /// builds (abandoned deadline-expired builds are not counted) —
+    /// micros so sub-millisecond sparse builds still register; the
+    /// summary renders it as `table_build_ms`. Divide by
+    /// `table_cache_misses` for the mean build cost the sparse table
+    /// engine is driving down.
+    pub table_build_us: AtomicU64,
+    /// Gauge: bytes currently resident in the constraint-table cache
+    /// (the byte-budgeted LRU's accounting, updated on every insert).
+    pub table_bytes: AtomicU64,
     /// Rejected by the `LoadShed` middleware before reaching the queue.
     pub shed: AtomicU64,
     /// Requests whose deadline fired (`Timeout` middleware).
@@ -188,6 +198,8 @@ impl Metrics {
             satisfied: AtomicU64::new(0),
             table_cache_hits: AtomicU64::new(0),
             table_cache_misses: AtomicU64::new(0),
+            table_build_us: AtomicU64::new(0),
+            table_bytes: AtomicU64::new(0),
             shed: AtomicU64::new(0),
             timed_out: AtomicU64::new(0),
             hedged: AtomicU64::new(0),
@@ -286,7 +298,7 @@ impl Metrics {
             })
             .unwrap_or_else(|| "latency n/a".into());
         format!(
-            "submitted={} completed={} rejected={} shed={} quota_denied={} fair_shed={} adaptive_shed={} adaptive_limit={} timed_out={} hedged={} hedge_wins={} satisfied={} cache h/m={}/{} {}",
+            "submitted={} completed={} rejected={} shed={} quota_denied={} fair_shed={} adaptive_shed={} adaptive_limit={} timed_out={} hedged={} hedge_wins={} satisfied={} cache h/m={}/{} table_build_ms={:.1} table_bytes={} {}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -301,6 +313,8 @@ impl Metrics {
             self.satisfied.load(Ordering::Relaxed),
             self.table_cache_hits.load(Ordering::Relaxed),
             self.table_cache_misses.load(Ordering::Relaxed),
+            self.table_build_us.load(Ordering::Relaxed) as f64 / 1e3,
+            self.table_bytes.load(Ordering::Relaxed),
             lat
         )
     }

@@ -33,12 +33,38 @@ use std::time::{Duration, Instant};
 
 use crate::data::Corpus;
 use crate::dfa::Dfa;
-use crate::generate::{decode_with_table, ConstraintTable, DecodeConfig, Generation};
-use crate::hmm::Hmm;
+use crate::generate::{decode_with_table, BuildOptions, ConstraintTable, DecodeConfig, Generation};
+use crate::hmm::{Hmm, HmmBackend};
 use crate::lm::LanguageModel;
+use crate::quant::qhmm::QuantizedHmm;
 use crate::service::{Deadlined, Expirable, Keyed, Readiness, Service, ServiceError};
-use cache::LruCache;
+use cache::{ByteSized, LruCache};
 use metrics::{ClientStats, Metrics};
+
+/// The cached per-concept-set decode state is the DFA plus its table;
+/// the table's two f32 planes dominate, the automaton rides along.
+impl ByteSized for (Dfa, ConstraintTable) {
+    fn bytes(&self) -> usize {
+        self.0.approx_bytes() + self.1.bytes()
+    }
+}
+
+/// Which model representation the dispatcher builds constraint tables
+/// from. The decode loop always scores against the dense model the
+/// server was started with; this choice only affects the table engine,
+/// where the sparse representation turns Norm-Q's zero levels into an
+/// O(nnz) build (see [`crate::generate::product`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TableBackend {
+    /// Build tables over the dense FP32 matrices (O(H²) per C-step).
+    Dense,
+    /// Re-quantize the serving model at `bits` into sparse levels
+    /// ([`QuantizedHmm`]) and build tables over those (O(nnz)).
+    Quantized {
+        /// Bits per stored level.
+        bits: u32,
+    },
+}
 
 /// The client id stamped on requests that never declared one.
 pub const ANON_CLIENT: &str = "anon";
@@ -157,8 +183,16 @@ pub struct ServerConfig {
     pub batch_window: Duration,
     /// Max requests dispatched as one batch group.
     pub max_batch: usize,
-    /// Constraint-table LRU cache capacity (entries, one per concept set).
-    pub table_cache: usize,
+    /// Constraint-table cache byte budget (tables accounted by actual
+    /// size — `2·(T+1)·D·H·4` bytes each, so capacity adapts to how
+    /// big the concept sets actually are).
+    pub table_cache_bytes: usize,
+    /// Worker threads for parallelizing a single table build across
+    /// DFA states (1 = serial; the engine stays serial anyway when the
+    /// per-level work is too small to amortize spawning).
+    pub table_threads: usize,
+    /// Model representation the table engine runs over.
+    pub table_backend: TableBackend,
     /// Beam-search configuration shared by every request.
     pub decode: DecodeConfig,
 }
@@ -170,7 +204,9 @@ impl Default for ServerConfig {
             queue_capacity: 256,
             batch_window: Duration::from_millis(2),
             max_batch: 16,
-            table_cache: 64,
+            table_cache_bytes: 64 << 20,
+            table_threads: crate::util::threadpool::default_threads(),
+            table_backend: TableBackend::Dense,
             decode: DecodeConfig::default(),
         }
     }
@@ -180,6 +216,11 @@ impl Default for ServerConfig {
 struct Shared {
     lm: Arc<dyn LanguageModel>,
     hmm: Hmm,
+    /// The model the table engine builds from ([`TableBackend`]):
+    /// `None` means the dense `hmm` itself (no second copy of the
+    /// FP32 matrices); `Some` holds the sparse quantized levels, and
+    /// no dense weights are ever touched on the build path.
+    table_model: Option<Arc<dyn HmmBackend>>,
     corpus: Corpus,
     cfg: ServerConfig,
     metrics: Arc<Metrics>,
@@ -214,13 +255,20 @@ impl Server {
     pub fn start(lm: Arc<dyn LanguageModel>, hmm: Hmm, corpus: Corpus, cfg: ServerConfig) -> Server {
         let metrics = Arc::new(Metrics::new());
         let queue_capacity = cfg.queue_capacity;
+        let table_model: Option<Arc<dyn HmmBackend>> = match cfg.table_backend {
+            TableBackend::Dense => None,
+            TableBackend::Quantized { bits } => {
+                Some(Arc::new(QuantizedHmm::from_hmm(&hmm, bits)))
+            }
+        };
         let shared = Arc::new(Shared {
             lm,
             hmm,
+            table_model,
             corpus,
             cfg: cfg.clone(),
             metrics: Arc::clone(&metrics),
-            tables: Mutex::new(LruCache::new(cfg.table_cache)),
+            tables: Mutex::new(LruCache::new(cfg.table_cache_bytes)),
         });
         let (intake, intake_rx) = sync_channel::<Request>(cfg.queue_capacity);
         let (work_tx, work_rx) = sync_channel::<Batch>(cfg.workers * 2);
@@ -455,7 +503,8 @@ fn dispatcher_loop(intake: Receiver<Request>, work: SyncSender<Batch>, shared: A
                 continue;
             }
             let concepts = requests[0].concepts.clone();
-            // A cold concept set pays the O(T·D·H²) table build before
+            // A cold concept set pays the table build (O(T·D·H²) dense,
+            // O(T·D·nnz) over the sparse quantized backend) before
             // any member decodes, so the build honors the group's
             // deadline: the *latest* deadline in the group (as long as
             // one member is still waiting the table is worth
@@ -478,13 +527,33 @@ fn dispatcher_loop(intake: Receiver<Request>, work: SyncSender<Batch>, shared: A
                         .map(|c| vec![shared.corpus.vocab.id(c)])
                         .collect();
                     let dfa = Dfa::from_keywords(&keywords, shared.corpus.vocab.len());
-                    match ConstraintTable::build_deadlined(
-                        &shared.hmm,
+                    let build_opts = BuildOptions {
+                        deadline: build_deadline,
+                        threads: shared.cfg.table_threads,
+                    };
+                    let model: &dyn HmmBackend =
+                        shared.table_model.as_deref().unwrap_or(&shared.hmm);
+                    let build_start = Instant::now();
+                    match ConstraintTable::build_with(
+                        model,
                         &dfa,
                         shared.cfg.decode.max_tokens,
-                        build_deadline,
+                        &build_opts,
                     ) {
-                        Some(table) => shared.tables.lock().unwrap().insert(&key, (dfa, table)),
+                        Some(table) => {
+                            let build_us = build_start.elapsed().as_micros() as u64;
+                            shared
+                                .metrics
+                                .table_build_us
+                                .fetch_add(build_us, Ordering::Relaxed);
+                            let mut tables = shared.tables.lock().unwrap();
+                            let state = tables.insert(&key, (dfa, table));
+                            shared
+                                .metrics
+                                .table_bytes
+                                .store(tables.used_bytes() as u64, Ordering::Relaxed);
+                            state
+                        }
                         None => {
                             // Every deadline in the group fired before
                             // the table was complete: answer timed_out
@@ -727,6 +796,68 @@ mod tests {
         assert_eq!(m.client("heavy").submitted.load(Ordering::Relaxed), 4);
         assert_eq!(m.client("heavy").completed.load(Ordering::Relaxed), 4);
         assert!(m.client_summary().contains("client heavy:"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn quantized_table_backend_serves_and_accounts_bytes() {
+        let corpus = Corpus::small(900);
+        let data = corpus.sample_token_corpus(300, 41);
+        let lm = NgramLm::train(&data, corpus.vocab.len());
+        let mut rng = Rng::seeded(42);
+        let mut hmm = Hmm::random(8, corpus.vocab.len(), 0.5, 0.5, &mut rng);
+        for _ in 0..4 {
+            hmm = em_step(&hmm, &data, 4, 1e-9).0;
+        }
+        let cfg = ServerConfig {
+            workers: 2,
+            queue_capacity: 32,
+            table_backend: TableBackend::Quantized { bits: 8 },
+            decode: DecodeConfig { beam: 4, max_tokens: 12, ..Default::default() },
+            ..Default::default()
+        };
+        let server = Server::start(Arc::new(lm), hmm, corpus.clone(), cfg);
+        for i in 0..4 {
+            let resp = server
+                .call(ServeRequest::new(vec![corpus.lexicon.nouns[i % 2].clone()]))
+                .unwrap();
+            assert!(resp.satisfied, "unsatisfied: {:?}", resp.text);
+        }
+        let m = server.metrics();
+        assert!(m.table_cache_misses.load(Ordering::Relaxed) >= 1);
+        assert!(
+            m.table_bytes.load(Ordering::Relaxed) > 0,
+            "byte-budgeted cache must account resident tables"
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn tiny_table_cache_budget_still_serves() {
+        let corpus = Corpus::small(900);
+        let cfg = ServerConfig {
+            workers: 1,
+            queue_capacity: 8,
+            // A budget smaller than one table: every group rebuilds,
+            // but requests must still be answered correctly.
+            table_cache_bytes: 1,
+            decode: DecodeConfig { beam: 4, max_tokens: 12, ..Default::default() },
+            ..Default::default()
+        };
+        let data = corpus.sample_token_corpus(300, 41);
+        let lm = NgramLm::train(&data, corpus.vocab.len());
+        let mut rng = Rng::seeded(43);
+        let mut hmm = Hmm::random(8, corpus.vocab.len(), 0.5, 0.5, &mut rng);
+        for _ in 0..4 {
+            hmm = em_step(&hmm, &data, 4, 1e-9).0;
+        }
+        let server = Server::start(Arc::new(lm), hmm, corpus.clone(), cfg);
+        for i in 0..3 {
+            let resp = server
+                .call(ServeRequest::new(vec![corpus.lexicon.nouns[i].clone()]))
+                .unwrap();
+            assert!(resp.satisfied, "unsatisfied: {:?}", resp.text);
+        }
         server.shutdown();
     }
 

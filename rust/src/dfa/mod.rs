@@ -214,6 +214,17 @@ impl Dfa {
         &self.exceptions[state as usize]
     }
 
+    /// Approximate resident bytes of the compiled automaton (tables +
+    /// exception lists + keywords) — used by the byte-budgeted decode
+    /// state cache, where the DFA rides along with its table.
+    pub fn approx_bytes(&self) -> usize {
+        let exceptions: usize = self.exceptions.iter().map(|e| e.len() * 8 + 24).sum();
+        let keywords: usize =
+            self.keywords.iter().map(|k| k.len() * std::mem::size_of::<usize>() + 24).sum();
+        self.accepting.len() + self.default_next.len() * 4 + exceptions + keywords
+            + std::mem::size_of::<Self>()
+    }
+
     /// Run the DFA over a token sequence from the start state.
     pub fn run(&self, tokens: &[usize]) -> u32 {
         let mut s = self.start;

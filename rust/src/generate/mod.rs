@@ -25,7 +25,7 @@ use crate::dfa::Dfa;
 use crate::hmm::forward::forward_step;
 use crate::hmm::Hmm;
 use crate::lm::LanguageModel;
-pub use product::ConstraintTable;
+pub use product::{BuildOptions, ConstraintTable};
 
 /// Decoder configuration (paper §IV-A: beam 128 on GPT2-large; scaled
 /// default here, configurable from the CLI).

@@ -17,9 +17,78 @@
 //! The table depends only on (HMM, DFA, max budget) — not on the prefix —
 //! so the serving layer builds it once per request (or caches it per
 //! concept set) and every beam/step reads from it.
+//!
+//! ## The table engine
+//!
+//! [`ConstraintTable::build_with`] runs the recursion over any
+//! [`HmmBackend`]: the dense FP32 [`Hmm`] pays O(H²) per C-step cell
+//! block, while a sparse quantized model
+//! ([`crate::quant::qhmm::QuantizedHmm`]) pays O(nnz) — the Norm-Q
+//! auto-pruned zero levels (the source of the paper's ≥99% compression)
+//! are never touched. The A-step correction per DFA exception token
+//! walks that token's emission-column non-zeros only. Each budget
+//! level's per-DFA-state work is independent, so levels parallelize
+//! across states on [`crate::util::threadpool`] when the estimated
+//! per-level work amortizes the spawn cost; the cooperative deadline is
+//! still checked once per level.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
 
 use crate::dfa::Dfa;
-use crate::hmm::Hmm;
+use crate::hmm::{Hmm, HmmBackend};
+use crate::util::threadpool;
+
+/// How [`ConstraintTable::build_with`] runs: the cooperative deadline
+/// (checked once per budget level) and the worker-thread budget for
+/// parallelizing each level across DFA states.
+#[derive(Clone, Copy, Debug)]
+pub struct BuildOptions {
+    /// Abandon the build (returning `None`) once this instant passes;
+    /// checked before every budget level, so the overshoot is at most
+    /// one level's work.
+    pub deadline: Option<Instant>,
+    /// Threads for the per-level parallel section (1 = serial). The
+    /// engine stays serial regardless when the estimated per-level
+    /// work would not amortize the scoped-spawn cost.
+    pub threads: usize,
+}
+
+impl Default for BuildOptions {
+    fn default() -> Self {
+        BuildOptions { deadline: None, threads: 1 }
+    }
+}
+
+/// Minimum estimated scalar work per budget level (≈ `D · nnz(trans)`,
+/// the C-step cost) before the engine parallelizes a level:
+/// [`threadpool::parallel_for`] spawns scoped threads per call, which
+/// only pays for itself on levels well above spawn cost.
+const PAR_WORK_MIN: usize = 1 << 18;
+
+/// Run `f(d, chunk_d)` for every DFA state `d`, where `chunk_d` is that
+/// state's disjoint `h_n`-wide slice of `buf` — serially, or across the
+/// pool with one uncontended mutex per chunk to hand the disjoint
+/// `&mut` slices to worker threads.
+fn for_each_state(
+    buf: &mut [f32],
+    h_n: usize,
+    threads: usize,
+    f: impl Fn(usize, &mut [f32]) + Sync,
+) {
+    if threads <= 1 {
+        for (d, chunk) in buf.chunks_exact_mut(h_n).enumerate() {
+            f(d, chunk);
+        }
+        return;
+    }
+    let slots: Vec<Mutex<&mut [f32]>> = buf.chunks_exact_mut(h_n).map(Mutex::new).collect();
+    threadpool::parallel_for(slots.len(), threads, |d| {
+        let mut guard = slots[d].lock().unwrap();
+        f(d, &mut **guard);
+    });
+}
 
 /// The precomputed HMM×DFA acceptance table (see the [module docs](self)).
 #[derive(Clone, Debug)]
@@ -34,85 +103,118 @@ pub struct ConstraintTable {
 }
 
 impl ConstraintTable {
-    /// Build the table for budgets 0..=max_budget.
+    /// Build the table for budgets 0..=max_budget over the dense model.
     pub fn build(hmm: &Hmm, dfa: &Dfa, max_budget: usize) -> ConstraintTable {
-        Self::build_deadlined(hmm, dfa, max_budget, None)
+        Self::build_with(hmm, dfa, max_budget, &BuildOptions::default())
             .expect("unbounded build cannot expire")
     }
 
     /// [`ConstraintTable::build`] with a cooperative deadline: the
     /// build is the largest fixed cost a timed-out request can still
-    /// pay (O(T·D·H²) for a cold concept set), so the serving path
-    /// passes the request deadline through and stops paying for work
-    /// nobody is waiting on. The deadline is checked once per budget
-    /// level (the outer O(T) loop); `None` is returned if it fires
-    /// before the table is complete — a partial table is useless, so
-    /// nothing is handed back or cached.
+    /// pay, so the serving path passes the request deadline through
+    /// and stops paying for work nobody is waiting on. `None` is
+    /// returned if it fires before the table is complete — a partial
+    /// table is useless, so nothing is handed back or cached.
     pub fn build_deadlined(
         hmm: &Hmm,
         dfa: &Dfa,
         max_budget: usize,
-        deadline: Option<std::time::Instant>,
+        deadline: Option<Instant>,
     ) -> Option<ConstraintTable> {
-        if deadline.is_some_and(|d| std::time::Instant::now() >= d) {
+        Self::build_with(hmm, dfa, max_budget, &BuildOptions { deadline, threads: 1 })
+    }
+
+    /// Build the table over any [`HmmBackend`] — dense FP32 or sparse
+    /// quantized levels — honoring [`BuildOptions`]; see the
+    /// [module docs](self) for the engine's cost model.
+    pub fn build_with(
+        model: &dyn HmmBackend,
+        dfa: &Dfa,
+        max_budget: usize,
+        opts: &BuildOptions,
+    ) -> Option<ConstraintTable> {
+        if opts.deadline.is_some_and(|d| Instant::now() >= d) {
             return None;
         }
-        let h_n = hmm.hidden();
+        let h_n = model.hidden();
         let d_n = dfa.n_states();
         let plane = d_n * h_n;
         let mut a = vec![0f32; (max_budget + 1) * plane];
         let mut c = vec![0f32; (max_budget + 1) * plane];
 
+        // Parallelism gate: estimated per-level scalar work is the
+        // C-step's D row-sweeps over the stored transition non-zeros.
+        let (trans_nnz, _) = model.nnz();
+        let threads = if opts.threads > 1 && d_n.saturating_mul(trans_nnz) >= PAR_WORK_MIN {
+            opts.threads
+        } else {
+            1
+        };
+
+        // One emission column per distinct exception token (the keyword
+        // alphabet — a handful of tokens), extracted once per build so
+        // the A-step touches column non-zeros only.
+        let mut exc_cols: HashMap<u32, Vec<(u32, f32)>> = HashMap::new();
+        for d in 0..d_n {
+            for &(tok, _) in dfa.exceptions(d as u32) {
+                exc_cols
+                    .entry(tok)
+                    .or_insert_with(|| model.emit_col(tok as usize));
+            }
+        }
+
         // r = 0: acceptance indicator.
         for d in 0..d_n {
             if dfa.is_accepting(d as u32) {
-                for h in 0..h_n {
-                    a[d * h_n + h] = 1.0;
+                for v in a[d * h_n..(d + 1) * h_n].iter_mut() {
+                    *v = 1.0;
                 }
             }
         }
         // C[0][d'] = trans @ A[0][d'].
-        for d in 0..d_n {
-            let (a0, c0) = (&a[d * h_n..(d + 1) * h_n].to_vec(), &mut c[d * h_n..(d + 1) * h_n]);
-            hmm.trans.matvec(a0, c0);
+        {
+            let a0 = &a[..plane];
+            for_each_state(&mut c[..plane], h_n, threads, |d, out| {
+                model.trans_matvec(&a0[d * h_n..(d + 1) * h_n], out);
+            });
         }
 
-        let mut exc_sum = vec![0f32; h_n];
         for r in 1..=max_budget {
-            if deadline.is_some_and(|d| std::time::Instant::now() >= d) {
+            if opts.deadline.is_some_and(|d| Instant::now() >= d) {
                 return None;
             }
-            let (prev_c_all, rest) = c.split_at_mut(r * plane);
-            let prev_c = &prev_c_all[(r - 1) * plane..r * plane];
-            let cur_c = &mut rest[..plane];
-            let cur_a = &mut a[r * plane..(r + 1) * plane];
-            for d in 0..d_n {
-                let d_def = dfa.default_next(d as u32) as usize;
-                let c_def = &prev_c[d_def * h_n..(d_def + 1) * h_n];
-                // Default-class contribution: (1 - Σ_exc emit[h][x]) c_def[h]
-                exc_sum.iter_mut().for_each(|v| *v = 0.0);
-                let out = &mut cur_a[d * h_n..(d + 1) * h_n];
-                for h in 0..h_n {
-                    out[h] = c_def[h];
-                }
-                for &(tok, next_d) in dfa.exceptions(d as u32) {
-                    let c_exc = &prev_c[next_d as usize * h_n..(next_d as usize + 1) * h_n];
-                    for h in 0..h_n {
-                        let e = hmm.emit.at(h, tok as usize);
-                        out[h] += e * (c_exc[h] - c_def[h]);
+            // A-step: default-class contribution plus per-exception
+            // corrections over the token's emission-column non-zeros.
+            {
+                let prev_c = &c[(r - 1) * plane..r * plane];
+                let cur_a = &mut a[r * plane..(r + 1) * plane];
+                for_each_state(cur_a, h_n, threads, |d, out| {
+                    let d_def = dfa.default_next(d as u32) as usize;
+                    let c_def = &prev_c[d_def * h_n..(d_def + 1) * h_n];
+                    out.copy_from_slice(c_def);
+                    for &(tok, next_d) in dfa.exceptions(d as u32) {
+                        let c_exc =
+                            &prev_c[next_d as usize * h_n..(next_d as usize + 1) * h_n];
+                        for &(h, e) in &exc_cols[&tok] {
+                            let h = h as usize;
+                            out[h] += e * (c_exc[h] - c_def[h]);
+                        }
                     }
-                }
-                // Clamp tiny negatives from cancellation.
-                for v in out.iter_mut() {
-                    if *v < 0.0 {
-                        *v = 0.0;
+                    // Clamp tiny negatives from cancellation.
+                    for v in out.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
                     }
-                }
+                });
             }
-            // C[r][d'] = trans @ A[r][d'] for all d'.
-            for d in 0..d_n {
-                let a_r = cur_a[d * h_n..(d + 1) * h_n].to_vec();
-                hmm.trans.matvec(&a_r, &mut cur_c[d * h_n..(d + 1) * h_n]);
+            // C-step: C[r][d'] = trans @ A[r][d'] for all d'.
+            {
+                let cur_a = &a[r * plane..(r + 1) * plane];
+                let cur_c = &mut c[r * plane..(r + 1) * plane];
+                for_each_state(cur_c, h_n, threads, |d, out| {
+                    model.trans_matvec(&cur_a[d * h_n..(d + 1) * h_n], out);
+                });
             }
         }
         Some(ConstraintTable { h_n, d_n, max_budget, a, c })
@@ -135,6 +237,13 @@ impl ConstraintTable {
     /// The largest remaining-token budget the table covers.
     pub fn max_budget(&self) -> usize {
         self.max_budget
+    }
+
+    /// Resident bytes of the table's backing storage (the A and C
+    /// planes) — what the coordinator's byte-budgeted cache accounts:
+    /// `2 · (T+1) · D · H · 4`.
+    pub fn bytes(&self) -> usize {
+        (self.a.len() + self.c.len()) * std::mem::size_of::<f32>()
     }
 
     /// Overall acceptance probability from the initial belief:
@@ -174,6 +283,7 @@ pub fn brute_force_a(hmm: &Hmm, dfa: &Dfa, r: usize, d: u32, h: usize) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::qhmm::QuantizedHmm;
     use crate::util::proptest::Prop;
     use crate::util::rng::Rng;
 
@@ -221,7 +331,7 @@ mod tests {
         let mut rng = Rng::seeded(75);
         let hmm = Hmm::random(4, 8, 0.5, 0.5, &mut rng);
         let dfa = Dfa::from_keywords(&[vec![1]], 8);
-        let expired = std::time::Instant::now() - std::time::Duration::from_millis(1);
+        let expired = Instant::now() - std::time::Duration::from_millis(1);
         assert!(ConstraintTable::build_deadlined(&hmm, &dfa, 8, Some(expired)).is_none());
     }
 
@@ -230,7 +340,7 @@ mod tests {
         let mut rng = Rng::seeded(76);
         let hmm = Hmm::random(4, 8, 0.5, 0.5, &mut rng);
         let dfa = Dfa::from_keywords(&[vec![1]], 8);
-        let far = std::time::Instant::now() + std::time::Duration::from_secs(600);
+        let far = Instant::now() + std::time::Duration::from_secs(600);
         let bounded = ConstraintTable::build_deadlined(&hmm, &dfa, 8, Some(far)).unwrap();
         let unbounded = ConstraintTable::build(&hmm, &dfa, 8);
         for r in 0..=8usize {
@@ -285,6 +395,129 @@ mod tests {
                 for &v in table.a(r, d) {
                     assert!((0.0..=1.0 + 1e-4).contains(&v), "v={v}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn table_bytes_accounts_both_planes() {
+        let mut rng = Rng::seeded(77);
+        let hmm = Hmm::random(4, 8, 0.5, 0.5, &mut rng);
+        let dfa = Dfa::from_keywords(&[vec![1]], 8);
+        let table = ConstraintTable::build(&hmm, &dfa, 5);
+        assert_eq!(table.bytes(), 2 * 6 * dfa.n_states() * 4 * 4);
+    }
+
+    /// The satellite equivalence property: the table built over the
+    /// sparse-quantized backend agrees with the table built over the
+    /// dense dequantization of the *same* levels, within float-path
+    /// tolerance (the two differ only in rounding order: dense rounds
+    /// each weight to f32 before the f64 dot, sparse scales once).
+    #[test]
+    fn sparse_backend_matches_dense_within_quant_tolerance() {
+        Prop::new(12, 0xBEEF).run("sparse-vs-dense-backend", |rng, _| {
+            let h_n = rng.range(3, 8);
+            let v = rng.range(8, 20);
+            let alpha = [0.05, 0.3, 1.0][rng.below_usize(3)];
+            let hmm = Hmm::random(h_n, v, alpha, alpha, rng);
+            let bits = [3u32, 4, 8][rng.below_usize(3)];
+            let q = QuantizedHmm::from_hmm(&hmm, bits);
+            let dense = q.to_hmm();
+            let kws = vec![vec![rng.below_usize(v)], vec![rng.below_usize(v)]];
+            let dfa = Dfa::from_keywords(&kws, v);
+            let budget = 6;
+            let t_dense = ConstraintTable::build(&dense, &dfa, budget);
+            let t_sparse =
+                ConstraintTable::build_with(&q, &dfa, budget, &BuildOptions::default())
+                    .expect("no deadline");
+            for r in 0..=budget {
+                for d in 0..dfa.n_states() as u32 {
+                    for h in 0..h_n {
+                        let a = t_dense.a(r, d)[h] as f64;
+                        let b = t_sparse.a(r, d)[h] as f64;
+                        assert!(
+                            (a - b).abs() < 5e-4,
+                            "bits={bits} r={r} d={d} h={h} dense={a} sparse={b}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn sparse_backend_honors_the_deadline() {
+        let mut rng = Rng::seeded(0xDEAD);
+        let hmm = Hmm::random(6, 16, 0.3, 0.2, &mut rng);
+        let q = QuantizedHmm::from_hmm(&hmm, 8);
+        let dfa = Dfa::from_keywords(&[vec![2]], 16);
+        let expired = Instant::now() - std::time::Duration::from_millis(1);
+        let opts = BuildOptions { deadline: Some(expired), threads: 1 };
+        assert!(ConstraintTable::build_with(&q, &dfa, 8, &opts).is_none());
+        let far = Instant::now() + std::time::Duration::from_secs(600);
+        let opts = BuildOptions { deadline: Some(far), threads: 1 };
+        assert!(ConstraintTable::build_with(&q, &dfa, 8, &opts).is_some());
+    }
+
+    /// All-zero-row edge: rows whose every level auto-prunes to zero
+    /// dequantize to uniform in both the dense materialization and the
+    /// sparse backend, so the two tables still agree and stay in [0,1].
+    #[test]
+    fn all_zero_quantized_rows_agree_between_backends() {
+        let mut rng = Rng::seeded(0xFEED);
+        let mut hmm = Hmm::random(5, 40, 0.4, 0.3, &mut rng);
+        // A uniform emission row over 40 tokens quantizes to all-zero
+        // levels at 3 bits (level(1/40 · 7) = 0).
+        for v in hmm.emit.row_mut(2) {
+            *v = 1.0 / 40.0;
+        }
+        let q = QuantizedHmm::from_hmm(&hmm, 3);
+        assert!(q.emit.nnz() < 5 * 40, "quantization left everything dense");
+        let lo = q.emit.row_ptr[2] as usize;
+        let hi = q.emit.row_ptr[3] as usize;
+        assert_eq!(lo, hi, "row 2 should have auto-pruned to empty");
+        let dense = q.to_hmm();
+        let dfa = Dfa::from_keywords(&[vec![7], vec![13]], 40);
+        let t_dense = ConstraintTable::build(&dense, &dfa, 5);
+        let t_sparse = ConstraintTable::build_with(&q, &dfa, 5, &BuildOptions::default()).unwrap();
+        for r in 0..=5 {
+            for d in 0..dfa.n_states() as u32 {
+                for h in 0..5 {
+                    let a = t_dense.a(r, d)[h];
+                    let b = t_sparse.a(r, d)[h];
+                    assert!((a - b).abs() < 5e-4, "r={r} d={d} h={h} {a} vs {b}");
+                    assert!((0.0..=1.0 + 1e-4).contains(&b));
+                }
+            }
+        }
+    }
+
+    /// The parallel path is deterministic: each DFA state's block is
+    /// computed by exactly one worker with the same serial code, so a
+    /// parallel build equals the serial build bit for bit. The model is
+    /// sized past the engine's work gate so threads actually engage.
+    #[test]
+    fn parallel_build_matches_serial_exactly() {
+        let mut rng = Rng::seeded(0x9A9A);
+        let hmm = Hmm::random(160, 24, 0.5, 0.5, &mut rng);
+        // 4 single-token keywords → 16 DFA states; 16 · 160² clears the
+        // engine's work gate with ~50% margin. Assert on the *gated*
+        // quantity (D · nnz(trans), exact zeros excluded) so the test
+        // cannot silently degrade to exercising the serial path.
+        let dfa = Dfa::from_keywords(&[vec![1], vec![2], vec![3], vec![4]], 24);
+        let gated_work = dfa.n_states() * HmmBackend::nnz(&hmm).0;
+        assert!(
+            gated_work >= PAR_WORK_MIN + PAR_WORK_MIN / 4,
+            "test model too small to engage threads: {gated_work}"
+        );
+        let serial =
+            ConstraintTable::build_with(&hmm, &dfa, 4, &BuildOptions::default()).unwrap();
+        let opts = BuildOptions { deadline: None, threads: 4 };
+        let parallel = ConstraintTable::build_with(&hmm, &dfa, 4, &opts).unwrap();
+        for r in 0..=4usize {
+            for d in 0..dfa.n_states() as u32 {
+                assert_eq!(serial.a(r, d), parallel.a(r, d), "a r={r} d={d}");
+                assert_eq!(serial.c(r, d), parallel.c(r, d), "c r={r} d={d}");
             }
         }
     }

@@ -1,0 +1,121 @@
+//! The model-backend abstraction behind the constraint-table engine.
+//!
+//! `ConstraintTable::build_with` touches the HMM through exactly four
+//! operations — the hidden-state count, a backward transition step
+//! (`out[h] = Σ_h' trans[h][h'] · v[h']`), the emission *columns* of
+//! the DFA exception tokens, and the stored non-zero counts (the
+//! engine's parallelism cost model) — so that is the whole trait.
+//! Two implementations exist:
+//!
+//! - the dense FP32 [`Hmm`] (this module's impl), paying O(H²) per
+//!   transition step; and
+//! - a quantized model stored as non-zero levels only
+//!   ([`crate::quant::qhmm::QuantizedHmm`]), paying O(nnz) — after
+//!   Norm-Q at b ≤ 8 the overwhelming majority of levels are zero
+//!   (the ≥99% compression of the paper's Table IV), so the same
+//!   recursion runs an order of magnitude less work and the serving
+//!   path never materializes dense FP32 weights.
+//!
+//! The trait deliberately exposes *column* non-zeros for `emit`: the
+//! table recursion touches emissions only at exception tokens (the
+//! keyword alphabet), one column per token, while it consumes `trans`
+//! row-by-row through the matvec.
+
+use crate::hmm::Hmm;
+
+/// Read-only model access for the HMM×DFA table recursion; see the
+/// [module docs](self).
+pub trait HmmBackend: Send + Sync {
+    /// Hidden state count H.
+    fn hidden(&self) -> usize;
+
+    /// One backward transition step: `out[h] = Σ_h' P(h'|h) · v[h']`
+    /// (`trans @ v` with f64 accumulation). Sparse backends iterate
+    /// stored non-zeros only.
+    fn trans_matvec(&self, v: &[f32], out: &mut [f32]);
+
+    /// Non-zeros of emission column `tok`, as `(h, P(tok|h))` sorted by
+    /// `h`. The table build extracts one column per distinct DFA
+    /// exception token, once per build.
+    fn emit_col(&self, tok: usize) -> Vec<(u32, f32)>;
+
+    /// Stored non-zero counts `(trans, emit)` — the sparsity the table
+    /// engine's cost model and the benches report.
+    fn nnz(&self) -> (usize, usize);
+}
+
+/// The dense FP32 model is its own backend: every entry is "stored",
+/// so `nnz` counts exact zeros and the matvec is the plain O(H²) loop.
+impl HmmBackend for Hmm {
+    fn hidden(&self) -> usize {
+        Hmm::hidden(self)
+    }
+
+    fn trans_matvec(&self, v: &[f32], out: &mut [f32]) {
+        self.trans.matvec(v, out);
+    }
+
+    fn emit_col(&self, tok: usize) -> Vec<(u32, f32)> {
+        (0..Hmm::hidden(self))
+            .filter_map(|h| {
+                let e = self.emit.at(h, tok);
+                (e != 0.0).then_some((h as u32, e))
+            })
+            .collect()
+    }
+
+    fn nnz(&self) -> (usize, usize) {
+        (
+            self.trans.data.len() - self.trans.zero_count(),
+            self.emit.data.len() - self.emit.zero_count(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dense_backend_mirrors_the_model() {
+        let mut rng = Rng::seeded(11);
+        let mut hmm = Hmm::random(6, 14, 0.3, 0.2, &mut rng);
+        assert_eq!(HmmBackend::hidden(&hmm), 6);
+        let (t0, e0) = HmmBackend::nnz(&hmm);
+        assert_eq!(t0, 6 * 6 - hmm.trans.zero_count());
+        assert_eq!(e0, 6 * 14 - hmm.emit.zero_count());
+        // Zeroing an entry must drop the transition nnz by one.
+        let before = hmm.trans.at(0, 1);
+        if before != 0.0 {
+            hmm.trans.set(0, 1, 0.0);
+            assert_eq!(HmmBackend::nnz(&hmm).0, t0 - 1);
+        }
+    }
+
+    #[test]
+    fn dense_trans_matvec_matches_mat() {
+        let mut rng = Rng::seeded(12);
+        let hmm = Hmm::random(5, 9, 0.5, 0.5, &mut rng);
+        let v = rng.dirichlet_symmetric(5, 1.0);
+        let mut want = vec![0f32; 5];
+        hmm.trans.matvec(&v, &mut want);
+        let mut got = vec![0f32; 5];
+        HmmBackend::trans_matvec(&hmm, &v, &mut got);
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn dense_emit_col_collects_the_column() {
+        let mut rng = Rng::seeded(13);
+        let mut hmm = Hmm::random(4, 6, 0.5, 0.5, &mut rng);
+        hmm.emit.set(2, 3, 0.0);
+        let col = HmmBackend::emit_col(&hmm, 3);
+        assert!(col.iter().all(|&(h, _)| h != 2), "zero entry must be dropped");
+        for &(h, e) in &col {
+            assert_eq!(e, hmm.emit.at(h as usize, 3));
+        }
+        // Sorted by h, no duplicates.
+        assert!(col.windows(2).all(|w| w[0].0 < w[1].0));
+    }
+}

@@ -2,9 +2,11 @@
 //! inference, sampling, and Baum-Welch EM training. This is the
 //! probabilistic symbolic model the paper compresses.
 
+pub mod backend;
 pub mod backward;
 pub mod em;
 pub mod forward;
 pub mod model;
 
+pub use backend::HmmBackend;
 pub use model::Hmm;

@@ -35,8 +35,13 @@
 //!   `service::Service` and sits at the bottom of the stack.
 //! - [`generate`] — the constrained beam decoder (honors per-request
 //!   deadlines via `DecodeConfig::deadline`, including during
-//!   constraint-table construction).
-//! - [`runtime`] — PJRT execution of the AOT-lowered neural artifacts.
+//!   constraint-table construction), and the sparsity-aware
+//!   constraint-table engine (`generate::product`) that builds the
+//!   HMM×DFA table over either the dense model or the sparse quantized
+//!   levels (`hmm::HmmBackend`).
+//! - `runtime` — PJRT execution of the AOT-lowered neural artifacts.
+//!   Compiled only with the off-by-default `pjrt` feature: the default
+//!   build is CPU-only and dependency-free, which is what CI gates.
 
 #![warn(missing_docs)]
 
@@ -58,5 +63,6 @@ pub mod profile;
 pub mod tables;
 
 pub mod coordinator;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod service;

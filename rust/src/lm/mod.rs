@@ -6,10 +6,10 @@
 //! - [`ngram::NgramLm`] — a natively-trained interpolated n-gram model.
 //!   Pure Rust, used by the experiment drivers so every table/figure can
 //!   regenerate without artifacts.
-//! - [`crate::runtime::HloLm`] — the AOT-compiled JAX transformer (L2),
-//!   loaded from `artifacts/lm_logits.hlo.txt` and executed via PJRT.
-//!   This is the "real" neural part exercised by `normq serve` and the
-//!   end-to-end example.
+//! - `runtime::HloLm` (behind the `pjrt` feature) — the AOT-compiled
+//!   JAX transformer (L2), loaded from `artifacts/lm_logits.hlo.txt`
+//!   and executed via PJRT. This is the "real" neural part exercised
+//!   by `normq serve --use-hlo-lm` and the end-to-end example.
 //!
 //! Norm-Q never touches the neural part (compression of the symbolic part
 //! is "orthogonal to the optimization of neural parts", §I) — which is

@@ -9,7 +9,9 @@
 
 use std::sync::Arc;
 
-use normq::coordinator::{Response as CoordResponse, ServeRequest, Server, ServerConfig};
+use normq::coordinator::{
+    Response as CoordResponse, ServeRequest, Server, ServerConfig, TableBackend,
+};
 use normq::data::Corpus;
 use normq::generate::DecodeConfig;
 use normq::lm::NgramLm;
@@ -33,7 +35,8 @@ USAGE:
               [--clients N] [--client-ids N] [--shed] [--climit N]
               [--rate RPS] [--burst N] [--quota RPS] [--quota-burst N]
               [--fair SLOTS] [--fair-queue N] [--delay-budget-ms MS]
-              [--timeout-ms MS] [--hedge-ms MS]
+              [--timeout-ms MS] [--hedge-ms MS] [--table-bits B]
+              [--table-cache-mb MB] [--table-threads N]
   normq smoke [--artifacts DIR]
   normq corpus [--n N] [--eval]
 
@@ -54,6 +57,11 @@ dispatches; --fair-queue bounds each client's queue), --climit
 (FIFO in-flight cap), --timeout-ms (deadline into the decode loop),
 --hedge-ms (re-dispatch slow requests). The load driver spreads
 requests over --client-ids distinct client ids (default 1).
+
+Table engine (serve): --table-bits B builds constraint tables over
+the sparse quantized model (O(nnz) per step) instead of dense FP32;
+--table-cache-mb bounds the byte-budgeted table cache;
+--table-threads parallelizes one build across DFA states.
 ";
 
 fn main() {
@@ -68,7 +76,7 @@ fn main() {
         "bits", "ratios", "norm-ratio", "interval", "intervals", "scales", "method", "requests",
         "workers", "artifacts", "n", "out", "heatmap", "queue", "clients", "client-ids", "climit",
         "rate", "burst", "quota", "quota-burst", "fair", "fair-queue", "delay-budget-ms",
-        "timeout-ms", "hedge-ms",
+        "timeout-ms", "hedge-ms", "table-bits", "table-cache-mb", "table-threads",
     ]);
     let args = match Args::parse(&argv, &value_keys) {
         Ok(a) => a,
@@ -144,17 +152,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     log_info!("serving with Norm-Q {}b HMM", bits);
 
     let lm: Arc<dyn normq::lm::LanguageModel> = if args.flag("use-hlo-lm") {
-        let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
-        let manifest = normq::runtime::Manifest::load(&dir).map_err(|e| format!("{e:#}"))?;
-        // The artifact vocabulary must match the corpus vocabulary.
-        if manifest.vocab_words.len() != ctx.corpus.vocab.len() {
-            return Err(format!(
-                "artifact vocab {} != corpus vocab {} (rebuild artifacts with matching seed)",
-                manifest.vocab_words.len(),
-                ctx.corpus.vocab.len()
-            ));
-        }
-        Arc::new(normq::runtime::HloLm::load(&manifest).map_err(|e| format!("{e:#}"))?)
+        load_hlo_lm(args, &ctx)?
     } else {
         Arc::new(NgramLm::train(
             &ctx.corpus.sample_token_corpus(4000, ctx.seed + 9),
@@ -163,9 +161,17 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     };
 
     let workers = args.usize("workers", normq::util::threadpool::default_threads())?;
+    let table_backend = match args.opt_usize("table-bits")? {
+        Some(bits) if (1..=16).contains(&bits) => TableBackend::Quantized { bits: bits as u32 },
+        Some(bits) => return Err(format!("--table-bits expects 1..=16, got {bits}")),
+        None => TableBackend::Dense,
+    };
     let cfg = ServerConfig {
         workers,
         queue_capacity: args.usize("queue", 256)?,
+        table_cache_bytes: args.usize("table-cache-mb", 64)? << 20,
+        table_threads: args.usize("table-threads", normq::util::threadpool::default_threads())?,
+        table_backend,
         decode: DecodeConfig {
             beam: ctx.decode.beam,
             max_tokens: ctx.decode.max_tokens,
@@ -268,6 +274,42 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Load the AOT HLO transformer LM (PJRT builds only).
+#[cfg(feature = "pjrt")]
+fn load_hlo_lm(
+    args: &Args,
+    ctx: &ExperimentContext,
+) -> Result<Arc<dyn normq::lm::LanguageModel>, String> {
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let manifest = normq::runtime::Manifest::load(&dir).map_err(|e| format!("{e:#}"))?;
+    // The artifact vocabulary must match the corpus vocabulary.
+    if manifest.vocab_words.len() != ctx.corpus.vocab.len() {
+        return Err(format!(
+            "artifact vocab {} != corpus vocab {} (rebuild artifacts with matching seed)",
+            manifest.vocab_words.len(),
+            ctx.corpus.vocab.len()
+        ));
+    }
+    Ok(Arc::new(
+        normq::runtime::HloLm::load(&manifest).map_err(|e| format!("{e:#}"))?,
+    ))
+}
+
+/// CPU-only builds have no PJRT runtime to load artifacts with.
+#[cfg(not(feature = "pjrt"))]
+fn load_hlo_lm(
+    _args: &Args,
+    _ctx: &ExperimentContext,
+) -> Result<Arc<dyn normq::lm::LanguageModel>, String> {
+    Err("--use-hlo-lm requires the `pjrt` feature (cargo build --features pjrt)".into())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_smoke(_args: &Args) -> Result<(), String> {
+    Err("smoke requires the `pjrt` feature (cargo build --features pjrt)".into())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_smoke(args: &Args) -> Result<(), String> {
     let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
     let manifest = normq::runtime::Manifest::load(&dir).map_err(|e| format!("{e:#}"))?;

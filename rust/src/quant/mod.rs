@@ -7,6 +7,8 @@
 //! - [`kmeans`] — 1-D k-means codebook baseline (§III-B, Table III)
 //! - [`prune`] — ratio-based magnitude pruning (§III-A, Table I)
 //! - [`packed`] — bit-packed / sparse storage + compression accounting
+//! - [`qhmm`] — a whole HMM stored as sparse quantized levels, serving
+//!   constraint-table builds through [`crate::hmm::HmmBackend`]
 //! - [`stats`] — weight-distribution analysis (Fig 2, Table IV)
 
 pub mod fixed;
@@ -15,7 +17,10 @@ pub mod kmeans;
 pub mod normq;
 pub mod packed;
 pub mod prune;
+pub mod qhmm;
 pub mod stats;
+
+pub use qhmm::QuantizedHmm;
 
 use crate::hmm::Hmm;
 

@@ -226,6 +226,71 @@ impl SparseQMat {
         }
     }
 
+    /// out = dequant(self) @ v (one value per row, f64 accumulators) —
+    /// the backward-transition step of the constraint-table engine,
+    /// walking stored non-zeros only: O(nnz) instead of O(rows·cols).
+    ///
+    /// Rows with no stored level dequantize to *uniform* (matching
+    /// [`SparseQMat::to_mat`]'s Norm-Q ε behaviour), so an all-zero
+    /// quantized row contributes the mean of `v` rather than silently
+    /// dropping probability mass.
+    pub fn matvec(&self, v: &[f32], out: &mut [f32]) {
+        assert_eq!(v.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        // Mean of v, computed once and only if some row needs it.
+        let mut uniform: Option<f64> = None;
+        for (r, o) in out.iter_mut().enumerate() {
+            let lo = self.row_ptr[r] as usize;
+            let hi = self.row_ptr[r + 1] as usize;
+            if lo == hi {
+                let u = *uniform.get_or_insert_with(|| {
+                    v.iter().map(|&x| x as f64).sum::<f64>() / self.cols as f64
+                });
+                *o = u as f32;
+                continue;
+            }
+            let mut acc = 0f64;
+            for i in lo..hi {
+                acc += self.levels[i] as f64 * v[self.col_idx[i] as usize] as f64;
+            }
+            *o = (acc * self.row_scale[r] as f64) as f32;
+        }
+    }
+
+    /// Stored level at `(r, c)` (0 when the entry is not stored), via
+    /// binary search inside the row's sorted column indices.
+    pub fn level_at(&self, r: usize, c: usize) -> u32 {
+        let lo = self.row_ptr[r] as usize;
+        let hi = self.row_ptr[r + 1] as usize;
+        match self.col_idx[lo..hi].binary_search(&(c as u32)) {
+            Ok(i) => self.levels[lo + i] as u32,
+            Err(_) => 0,
+        }
+    }
+
+    /// Dequantized value at `(r, c)`; all-zero rows read as uniform
+    /// (consistent with [`SparseQMat::to_mat`] and
+    /// [`SparseQMat::matvec`]).
+    pub fn value(&self, r: usize, c: usize) -> f32 {
+        let lo = self.row_ptr[r] as usize;
+        let hi = self.row_ptr[r + 1] as usize;
+        if lo == hi {
+            return 1.0 / self.cols as f32;
+        }
+        self.level_at(r, c) as f32 * self.row_scale[r]
+    }
+
+    /// Bytes the CSR arrays actually occupy in memory (levels, column
+    /// indices, row pointers, row scales) — the resident footprint a
+    /// byte-budgeted cache accounts, as opposed to the information-
+    /// theoretic [`SparseQMat::storage_bits`].
+    pub fn resident_bytes(&self) -> usize {
+        self.levels.len() * 2
+            + self.col_idx.len() * 4
+            + self.row_ptr.len() * 4
+            + self.row_scale.len() * 4
+    }
+
     /// Storage bits: levels at b bits + column indices at ceil(log2 cols)
     /// + row pointers at 32 bits.
     pub fn storage_bits(&self) -> usize {
@@ -355,6 +420,62 @@ mod tests {
                 assert!((want[c] - got_s[c]).abs() < 1e-3, "sparse c={c}");
             }
         });
+    }
+
+    #[test]
+    fn sparse_matvec_matches_dense_reference() {
+        Prop::new(16, 78).run("sparse-matvec", |rng, _| {
+            let m = gen::stochastic_mat(rng, 7, 24);
+            let bits = [3u32, 4, 8][rng.below_usize(3)];
+            let sparse = SparseQMat::from_mat(&m, bits);
+            let dense = sparse.to_mat();
+            let v = rng.dirichlet_symmetric(m.cols, 0.7);
+            let mut want = vec![0f32; m.rows];
+            dense.matvec(&v, &mut want);
+            let mut got = vec![0f32; m.rows];
+            sparse.matvec(&v, &mut got);
+            for r in 0..m.rows {
+                assert!(
+                    (want[r] - got[r]).abs() < 1e-5,
+                    "bits={bits} r={r} want={} got={}",
+                    want[r],
+                    got[r]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn sparse_matvec_all_zero_row_reads_uniform() {
+        // A uniform row over many columns quantizes to all-zero levels
+        // at 3 bits (level(1/32 · 7) = 0): matvec must fall back to the
+        // uniform dequantization, i.e. the mean of v.
+        let m = Mat::filled(2, 32, 1.0 / 32.0);
+        let sparse = SparseQMat::from_mat(&m, 3);
+        assert_eq!(sparse.nnz(), 0, "expected fully auto-pruned rows");
+        let mut rng = Rng::seeded(79);
+        let v = rng.dirichlet_symmetric(32, 0.5);
+        let mut got = vec![0f32; 2];
+        sparse.matvec(&v, &mut got);
+        let mean: f64 = v.iter().map(|&x| x as f64).sum::<f64>() / 32.0;
+        for &g in &got {
+            assert!((g as f64 - mean).abs() < 1e-6, "got={g} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn level_at_and_value_match_dense() {
+        let mut rng = Rng::seeded(80);
+        let m = Mat::random_stochastic(5, 17, 0.2, &mut rng);
+        let sparse = SparseQMat::from_mat(&m, 4);
+        let dense = sparse.to_mat();
+        for r in 0..5 {
+            for c in 0..17 {
+                assert_eq!(sparse.level_at(r, c), crate::quant::fixed::level(m.at(r, c), 4));
+                assert!((sparse.value(r, c) - dense.at(r, c)).abs() < 1e-6);
+            }
+        }
+        assert_eq!(sparse.resident_bytes(), sparse.nnz() * 6 + (5 + 1) * 4 + 5 * 4);
     }
 
     #[test]

@@ -1,0 +1,173 @@
+//! A Norm-Q-compressed HMM stored as sparse quantized levels — the
+//! serving-side model representation.
+//!
+//! [`QuantizedHmm`] keeps `trans` and `emit` as [`SparseQMat`]s (CSR
+//! over non-zero b-bit levels, per-row scale `1/Σ levels` — Norm-Q's
+//! row normalization folded into dequantization) and implements
+//! [`HmmBackend`], so the constraint-table engine in
+//! [`crate::generate::product`] runs its recursion directly over the
+//! levels: O(nnz) per transition step, no dense FP32 matrices ever
+//! materialized on the table-build path.
+//!
+//! [`QuantizedHmm::to_hmm`] exists for the decode path and for tests
+//! (the dense dequantized model is the reference the equivalence
+//! proptests compare against); the serving coordinator only calls it
+//! when configured with a dense table backend.
+
+use crate::hmm::{Hmm, HmmBackend};
+use crate::quant::normq;
+use crate::quant::packed::SparseQMat;
+
+/// A sparse quantized HMM (see the [module docs](self)).
+#[derive(Clone, Debug)]
+pub struct QuantizedHmm {
+    /// γ: initial distribution, Norm-Q'd but kept dense (length H — two
+    /// orders of magnitude smaller than either matrix).
+    pub init: Vec<f32>,
+    /// α: transition levels, H×H CSR.
+    pub trans: SparseQMat,
+    /// β: emission levels, H×V CSR.
+    pub emit: SparseQMat,
+    /// Bits per stored level.
+    pub bits: u32,
+}
+
+impl QuantizedHmm {
+    /// Quantize a dense HMM at `bits` with Norm-Q semantics: b-bit
+    /// fixed-point levels, per-row normalization by level sum (the ε
+    /// mass on all-zero rows dequantizes to uniform).
+    pub fn from_hmm(hmm: &Hmm, bits: u32) -> QuantizedHmm {
+        let mut init = hmm.init.clone();
+        normq::normq_vec(&mut init, bits, normq::DEFAULT_EPS);
+        QuantizedHmm {
+            init,
+            trans: SparseQMat::from_mat(&hmm.trans, bits),
+            emit: SparseQMat::from_mat(&hmm.emit, bits),
+            bits,
+        }
+    }
+
+    /// Materialize the dense dequantized model (decode path / tests).
+    pub fn to_hmm(&self) -> Hmm {
+        Hmm {
+            init: self.init.clone(),
+            trans: self.trans.to_mat(),
+            emit: self.emit.to_mat(),
+        }
+    }
+
+    /// Fraction of stored-out (zero-level) entries across both
+    /// matrices — the sparsity the table engine exploits.
+    pub fn sparsity(&self) -> f64 {
+        let total = self.trans.rows * self.trans.cols + self.emit.rows * self.emit.cols;
+        let nnz = self.trans.nnz() + self.emit.nnz();
+        1.0 - nnz as f64 / total.max(1) as f64
+    }
+
+    /// Resident bytes of this representation (CSR arrays + init) —
+    /// what a server holding the quantized model actually keeps in
+    /// memory, vs [`Hmm::fp32_bytes`] for the dense model.
+    pub fn model_bytes(&self) -> usize {
+        self.init.len() * 4 + self.trans.resident_bytes() + self.emit.resident_bytes()
+    }
+}
+
+impl HmmBackend for QuantizedHmm {
+    fn hidden(&self) -> usize {
+        self.trans.rows
+    }
+
+    fn trans_matvec(&self, v: &[f32], out: &mut [f32]) {
+        self.trans.matvec(v, out);
+    }
+
+    fn emit_col(&self, tok: usize) -> Vec<(u32, f32)> {
+        (0..self.emit.rows)
+            .filter_map(|h| {
+                let e = self.emit.value(h, tok);
+                (e != 0.0).then_some((h as u32, e))
+            })
+            .collect()
+    }
+
+    fn nnz(&self) -> (usize, usize) {
+        (self.trans.nnz(), self.emit.nnz())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_matches_sparse_views() {
+        let mut rng = Rng::seeded(21);
+        let hmm = Hmm::random(8, 40, 0.1, 0.05, &mut rng);
+        let q = QuantizedHmm::from_hmm(&hmm, 8);
+        let dense = q.to_hmm();
+        for h in 0..8 {
+            for t in 0..40 {
+                assert!(
+                    (q.emit.value(h, t) - dense.emit.at(h, t)).abs() < 1e-6,
+                    "h={h} t={t}"
+                );
+            }
+        }
+        let v = rng.dirichlet_symmetric(8, 1.0);
+        let mut want = vec![0f32; 8];
+        dense.trans.matvec(&v, &mut want);
+        let mut got = vec![0f32; 8];
+        q.trans_matvec(&v, &mut got);
+        for h in 0..8 {
+            assert!((want[h] - got[h]).abs() < 1e-5, "h={h}");
+        }
+    }
+
+    #[test]
+    fn emit_col_matches_dense_column() {
+        let mut rng = Rng::seeded(22);
+        let hmm = Hmm::random(6, 20, 0.2, 0.1, &mut rng);
+        let q = QuantizedHmm::from_hmm(&hmm, 4);
+        let dense = q.to_hmm();
+        for tok in 0..20 {
+            let col = q.emit_col(tok);
+            for &(h, e) in &col {
+                assert!((e - dense.emit.at(h as usize, tok)).abs() < 1e-6);
+            }
+            // Every dense non-zero in the column must be present.
+            let listed: Vec<u32> = col.iter().map(|&(h, _)| h).collect();
+            for h in 0..6 {
+                if dense.emit.at(h, tok) != 0.0 {
+                    assert!(listed.contains(&(h as u32)), "tok={tok} h={h} missing");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_model_is_far_smaller_than_fp32() {
+        let mut rng = Rng::seeded(23);
+        // Spiky rows ≈ trained HMM weights (paper Fig 2).
+        let hmm = Hmm::random(64, 500, 0.02, 0.01, &mut rng);
+        let q = QuantizedHmm::from_hmm(&hmm, 8);
+        assert!(q.sparsity() > 0.5, "sparsity={}", q.sparsity());
+        assert!(
+            q.model_bytes() < hmm.fp32_bytes() / 2,
+            "quantized {} vs fp32 {}",
+            q.model_bytes(),
+            hmm.fp32_bytes()
+        );
+    }
+
+    #[test]
+    fn validity_survives_quantization_via_uniform_fallback() {
+        // Even at 2 bits (heavy auto-pruning) the dequantized model is
+        // row-stochastic: surviving rows renormalize by level sum,
+        // dead rows dequantize to uniform.
+        let mut rng = Rng::seeded(24);
+        let hmm = Hmm::random(12, 64, 0.05, 0.02, &mut rng);
+        let q = QuantizedHmm::from_hmm(&hmm, 2);
+        assert!(q.to_hmm().is_valid(1e-3));
+    }
+}

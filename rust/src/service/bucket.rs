@@ -1,0 +1,148 @@
+//! The one token bucket behind both rate-limiting layers.
+//!
+//! [`super::rate::RateLimit`] (global pacing) and
+//! [`super::quota::Quota`] (per-client policy) share the same refill
+//! math — continuous refill at `rate` tokens/sec up to a `cap`, one
+//! token per admitted call — but differ in what a *broken* rate means:
+//! pacing fails **open** (a non-positive/non-finite rate disables
+//! pacing; "admit nothing" is a shed policy, not a rate), while quota
+//! fails **closed** (a broken admission policy must never silently
+//! admit everything). [`TokenBucket`] carries that policy as a
+//! constructor parameter so the two layers cannot drift apart again.
+
+use std::time::{Duration, Instant};
+
+/// What a bucket does when constructed with a non-finite or
+/// non-positive refill rate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum InvalidRate {
+    /// Treat the rate as infinite: the bucket is always full and never
+    /// throttles (pacing layers).
+    FailOpen,
+    /// Treat the rate as zero: the initial burst is all a caller ever
+    /// gets (admission-policy layers).
+    FailClosed,
+}
+
+/// A token bucket: `cap` capacity, continuous refill at `rate`/sec.
+#[derive(Debug)]
+pub(crate) struct TokenBucket {
+    rate: f64,
+    cap: f64,
+    tokens: f64,
+    last_refill: Instant,
+}
+
+impl TokenBucket {
+    /// A full bucket refilling at `rate` tokens/sec up to `cap`.
+    /// Invalid rates resolve per `policy`; `cap` is used as given (a
+    /// zero-capacity bucket never admits — quota overflow pools use
+    /// that to disable borrowing).
+    pub(crate) fn full(rate: f64, cap: f64, policy: InvalidRate) -> TokenBucket {
+        let rate = if rate.is_finite() && rate > 0.0 {
+            rate
+        } else {
+            match policy {
+                InvalidRate::FailOpen => f64::INFINITY,
+                InvalidRate::FailClosed => 0.0,
+            }
+        };
+        TokenBucket { rate, cap, tokens: cap, last_refill: Instant::now() }
+    }
+
+    fn refill(&mut self) {
+        let now = Instant::now();
+        let elapsed = now.duration_since(self.last_refill).as_secs_f64();
+        // elapsed * INFINITY is NaN at elapsed == 0; f64::min returns
+        // the non-NaN operand, so the fail-open bucket reads as full.
+        self.tokens = (self.tokens + elapsed * self.rate).min(self.cap);
+        self.last_refill = now;
+    }
+
+    /// Refill by elapsed time, then take one token if available.
+    pub(crate) fn try_take(&mut self) -> bool {
+        self.refill();
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Tokens currently available (after refilling by elapsed time).
+    pub(crate) fn available(&mut self) -> f64 {
+        self.refill();
+        self.tokens
+    }
+
+    /// After a failed [`TokenBucket::try_take`]: how long until one
+    /// token accrues. `None` when the bucket never refills (rate 0 —
+    /// the fail-closed resolution), so callers must not spin-wait.
+    pub(crate) fn time_to_token(&self) -> Option<Duration> {
+        if self.rate <= 0.0 {
+            None
+        } else {
+            Some(Duration::from_secs_f64((1.0 - self.tokens).max(0.0) / self.rate))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_then_throttle() {
+        let mut b = TokenBucket::full(1e-9, 2.0, InvalidRate::FailClosed);
+        assert!(b.try_take());
+        assert!(b.try_take());
+        assert!(!b.try_take(), "burst exhausted");
+    }
+
+    #[test]
+    fn refills_over_time() {
+        let mut b = TokenBucket::full(1000.0, 1.0, InvalidRate::FailClosed);
+        assert!(b.try_take());
+        assert!(!b.try_take());
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(b.try_take(), "should have refilled");
+    }
+
+    #[test]
+    fn invalid_rate_fails_open_for_pacing() {
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let mut b = TokenBucket::full(bad, 1.0, InvalidRate::FailOpen);
+            for i in 0..100 {
+                assert!(b.try_take(), "rate {bad} call {i} throttled");
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_rate_fails_closed_for_quota() {
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let mut b = TokenBucket::full(bad, 1.0, InvalidRate::FailClosed);
+            assert!(b.try_take(), "the initial burst still admits");
+            assert!(!b.try_take(), "rate {bad} failed open");
+            assert_eq!(b.time_to_token(), None, "no refill to wait for");
+        }
+    }
+
+    #[test]
+    fn time_to_token_matches_the_rate() {
+        let mut b = TokenBucket::full(100.0, 1.0, InvalidRate::FailOpen);
+        assert!(b.try_take());
+        let wait = b.time_to_token().expect("finite rate");
+        // One token at 100/s ≈ 10ms away (minus any elapsed refill).
+        assert!(wait <= Duration::from_millis(11), "wait={wait:?}");
+    }
+
+    #[test]
+    fn zero_capacity_never_admits() {
+        let mut b = TokenBucket::full(1000.0, 0.0, InvalidRate::FailClosed);
+        assert!(!b.try_take());
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(!b.try_take(), "capacity bounds the refill");
+    }
+}

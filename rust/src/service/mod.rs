@@ -43,6 +43,7 @@
 //! lifecycle walkthrough live in `ARCHITECTURE.md` at the repo root.
 
 pub mod adaptive;
+pub(crate) mod bucket;
 pub mod echo;
 pub mod fair;
 pub mod hedge;

@@ -12,14 +12,19 @@
 //!
 //! Place this layer outermost: a denied request should cost one bucket
 //! probe, not a queue slot or a decode worker.
+//!
+//! Buckets are the crate-private `super::bucket::TokenBucket`, shared
+//! with [`super::rate::RateLimit`]; this layer instantiates them
+//! fail-*closed* (an invalid rate stops refilling, so a broken config
+//! never silently admits everything).
 
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
 
 use crate::coordinator::metrics::{ClientStats, Metrics};
 
+use super::bucket::{InvalidRate, TokenBucket};
 use super::{Keyed, Layer, Readiness, Service, ServiceError};
 
 /// Per-client and overflow bucket sizing for [`Quota`].
@@ -49,44 +54,16 @@ impl Default for QuotaConfig {
     }
 }
 
-struct Bucket {
-    tokens: f64,
-    last_refill: Instant,
-}
-
-impl Bucket {
-    fn full(cap: f64) -> Self {
-        Bucket { tokens: cap, last_refill: Instant::now() }
-    }
-
-    fn refill(&mut self, rate: f64, cap: f64) {
-        let now = Instant::now();
-        let elapsed = now.duration_since(self.last_refill).as_secs_f64();
-        self.tokens = (self.tokens + elapsed * rate).min(cap);
-        self.last_refill = now;
-    }
-
-    fn try_take(&mut self, rate: f64, cap: f64) -> bool {
-        self.refill(rate, cap);
-        if self.tokens >= 1.0 {
-            self.tokens -= 1.0;
-            true
-        } else {
-            false
-        }
-    }
-}
-
 /// One client's bucket plus its metrics handle, resolved once at first
 /// sight so the denial path never re-locks the metrics registry.
 struct ClientBucket {
-    bucket: Bucket,
+    bucket: TokenBucket,
     stats: Arc<ClientStats>,
 }
 
 struct QuotaState {
     buckets: HashMap<String, ClientBucket>,
-    overflow: Bucket,
+    overflow: TokenBucket,
 }
 
 /// Per-client admission policy; see the [module docs](self).
@@ -119,27 +96,28 @@ pub struct Quota<S> {
 
 impl<S> Quota<S> {
     /// Wrap `inner` with the given quota policy. A non-finite or
-    /// non-positive `cfg.rate` fails *closed* (refill rate 0: each
-    /// client gets its burst and is then denied forever) — quota is an
-    /// admission policy, so a broken config must never silently admit
+    /// non-positive `cfg.rate` fails *closed* (the shared bucket's
+    /// `FailClosed` resolution: refill rate 0, so each client gets its
+    /// burst and is then denied forever) — quota is an admission
+    /// policy, so a broken config must never silently admit
     /// everything. CLI entry points reject such rates up front.
     pub fn new(inner: S, cfg: QuotaConfig, metrics: Arc<Metrics>) -> Self {
         let cfg = QuotaConfig {
-            rate: if cfg.rate.is_finite() && cfg.rate > 0.0 { cfg.rate } else { 0.0 },
+            rate: cfg.rate,
             burst: cfg.burst.max(1.0),
             overflow: cfg.overflow.max(0.0),
-            overflow_rate: if cfg.overflow_rate.is_finite() && cfg.overflow_rate > 0.0 {
-                cfg.overflow_rate
-            } else {
-                0.0
-            },
+            overflow_rate: cfg.overflow_rate,
         };
         Quota {
             inner,
             cfg,
             state: Mutex::new(QuotaState {
                 buckets: HashMap::new(),
-                overflow: Bucket::full(cfg.overflow),
+                overflow: TokenBucket::full(
+                    cfg.overflow_rate,
+                    cfg.overflow,
+                    InvalidRate::FailClosed,
+                ),
             }),
             metrics,
         }
@@ -152,14 +130,15 @@ impl<S> Quota<S> {
     fn try_admit(&self, client: &str) -> Result<(), Arc<ClientStats>> {
         let mut st = self.state.lock().unwrap();
         if let Some(entry) = st.buckets.get_mut(client) {
-            if entry.bucket.try_take(self.cfg.rate, self.cfg.burst) {
+            if entry.bucket.try_take() {
                 return Ok(());
             }
         } else {
             // First sight of this client: resolve the stats handle once
             // and take from a fresh full bucket (burst >= 1 admits).
-            let mut bucket = Bucket::full(self.cfg.burst);
-            let took = bucket.try_take(self.cfg.rate, self.cfg.burst);
+            let mut bucket =
+                TokenBucket::full(self.cfg.rate, self.cfg.burst, InvalidRate::FailClosed);
+            let took = bucket.try_take();
             st.buckets.insert(
                 client.to_string(),
                 ClientBucket { bucket, stats: self.metrics.client(client) },
@@ -168,7 +147,7 @@ impl<S> Quota<S> {
                 return Ok(());
             }
         }
-        if st.overflow.try_take(self.cfg.overflow_rate, self.cfg.overflow) {
+        if st.overflow.try_take() {
             return Ok(());
         }
         Err(Arc::clone(

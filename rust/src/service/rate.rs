@@ -5,16 +5,17 @@
 //! bucket refills (pacing, not shedding) — compose with
 //! [`super::shed::LoadShed`] outside this layer to bounce instead:
 //! `poll_ready` reports `Busy` while the bucket is empty.
+//!
+//! The bucket itself is the crate-private `super::bucket::TokenBucket`,
+//! shared with [`super::quota::Quota`]; this layer instantiates it
+//! fail-*open* (an invalid rate disables pacing rather than blocking
+//! forever).
 
 use std::sync::Mutex;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
+use super::bucket::{InvalidRate, TokenBucket};
 use super::{Layer, Readiness, Service, ServiceError};
-
-struct Bucket {
-    tokens: f64,
-    last_refill: Instant,
-}
 
 /// Token-bucket pacing; see the [module docs](self).
 ///
@@ -32,47 +33,32 @@ struct Bucket {
 /// ```
 pub struct RateLimit<S> {
     inner: S,
-    /// tokens per second
-    rate: f64,
-    /// bucket capacity
-    burst: f64,
-    bucket: Mutex<Bucket>,
+    bucket: Mutex<TokenBucket>,
 }
 
 impl<S> RateLimit<S> {
     /// `rate` is calls/sec; `burst` the bucket capacity (min 1). A
-    /// non-positive or non-finite `rate` disables pacing entirely —
-    /// callers wanting "admit nothing" should use `LoadShed` or a
-    /// zero-capacity queue, not a zero rate; CLI entry points are
-    /// expected to reject `rate <= 0` before building the layer.
+    /// non-positive or non-finite `rate` disables pacing entirely
+    /// (the shared bucket's fail-*open* policy) — callers wanting
+    /// "admit nothing" should use `LoadShed` or a zero-capacity queue,
+    /// not a zero rate; CLI entry points are expected to reject
+    /// `rate <= 0` before building the layer.
     pub fn new(inner: S, rate: f64, burst: f64) -> Self {
-        let rate = if rate.is_finite() && rate > 0.0 { rate } else { f64::INFINITY };
-        let burst = burst.max(1.0);
         RateLimit {
             inner,
-            rate,
-            burst,
-            bucket: Mutex::new(Bucket { tokens: burst, last_refill: Instant::now() }),
+            bucket: Mutex::new(TokenBucket::full(rate, burst.max(1.0), InvalidRate::FailOpen)),
         }
     }
 
-    fn refill(&self, b: &mut Bucket) {
-        let now = Instant::now();
-        let elapsed = now.duration_since(b.last_refill).as_secs_f64();
-        b.tokens = (b.tokens + elapsed * self.rate).min(self.burst);
-        b.last_refill = now;
-    }
-
-    /// Refill by elapsed time, then either take a token (returns `None`)
-    /// or report how long until one is available.
+    /// Take a token (returns `None`) or report how long until one is
+    /// available. A fail-open bucket always has tokens, so the wait is
+    /// only ever `Some` for a real finite rate.
     fn try_take(&self) -> Option<Duration> {
         let mut b = self.bucket.lock().unwrap();
-        self.refill(&mut b);
-        if b.tokens >= 1.0 {
-            b.tokens -= 1.0;
+        if b.try_take() {
             None
         } else {
-            Some(Duration::from_secs_f64((1.0 - b.tokens) / self.rate))
+            Some(b.time_to_token().expect("throttling bucket has a finite rate"))
         }
     }
 }
@@ -84,9 +70,7 @@ where
     type Response = S::Response;
 
     fn poll_ready(&self) -> Readiness {
-        let mut b = self.bucket.lock().unwrap();
-        self.refill(&mut b);
-        if b.tokens < 1.0 {
+        if self.bucket.lock().unwrap().available() < 1.0 {
             Readiness::Busy
         } else {
             self.inner.poll_ready()

@@ -1,6 +1,7 @@
-//! Foundation utilities owned by this repository (the offline crate set
-//! contains only `xla`/`anyhow`/`thiserror`, so JSON, CLI parsing, RNG,
-//! thread pools, timing and property testing are implemented here).
+//! Foundation utilities owned by this repository (the default build has
+//! zero external dependencies — `xla`/`anyhow` exist only behind the
+//! `pjrt` feature — so JSON, CLI parsing, RNG, thread pools, timing and
+//! property testing are implemented here).
 
 pub mod cli;
 pub mod json;

@@ -1,6 +1,9 @@
 //! Runtime integration tests against the AOT artifacts. These require
-//! `make artifacts` to have run; they skip (with a loud message) when
-//! artifacts are absent so `cargo test` works on a fresh checkout.
+//! a `pjrt`-feature build and `make artifacts` to have run; they skip
+//! (with a loud message) when artifacts are absent so `cargo test`
+//! works on a fresh checkout, and compile to nothing on the default
+//! CPU-only build.
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 

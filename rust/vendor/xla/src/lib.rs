@@ -1,0 +1,146 @@
+//! Offline **stub** of the `xla` PJRT bindings.
+//!
+//! This crate mirrors exactly the API surface `normq::runtime` uses —
+//! client/executable construction, literal conversion, execution — so
+//! the `pjrt` feature *compiles* everywhere (keeping the `#[cfg]`
+//! boundaries honest in CI), while every operation that would need a
+//! real PJRT plugin returns an [`Error`] at runtime.
+//!
+//! Deployments with the real vendored bindings replace this directory
+//! (or repoint the `xla` path dependency in `rust/Cargo.toml`).
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type standing in for the real bindings' error enum.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias matching the real crate's.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "xla stub: {what} requires the real PJRT bindings — replace rust/vendor/xla \
+         with the vendored xla crate and rebuild with --features pjrt"
+    )))
+}
+
+/// Element types a [`Literal`] can be built from / read into.
+pub trait NativeType: Copy {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+
+/// A host-side tensor value (stub: carries no data).
+#[derive(Clone, Debug, Default)]
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a slice (stub: drops the data — the
+    /// value can never reach a device anyway).
+    pub fn vec1<T: NativeType>(_v: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    /// Copy the elements out.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    /// Split a tuple literal into its components.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        unavailable("Literal::decompose_tuple")
+    }
+}
+
+impl From<i32> for Literal {
+    fn from(_: i32) -> Literal {
+        Literal
+    }
+}
+
+/// A parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse HLO text from a file.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation wrapping an HLO module (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A device buffer handle (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Materialize the buffer as a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments.
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// A PJRT client (stub).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create a CPU client — always errors in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_fails_loudly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1i32, 2, 3]);
+        assert!(lit.to_vec::<f32>().is_err());
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("stub"), "{err}");
+    }
+}
