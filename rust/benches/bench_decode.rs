@@ -1,54 +1,169 @@
-//! End-to-end decode latency/throughput: one constrained-generation
-//! request through the full neuro-symbolic stack, FP32 vs Norm-Q HMMs
-//! (per-request latency is the paper's motivating metric — Fig 1).
+//! Decode-path benches: the weight-sparse beam loop vs dense FP32.
+//!
+//! Per-request decode latency is the paper's motivating metric (Fig 1);
+//! since the beam loop is routed through `hmm::HmmBackend`, a server
+//! can score beams directly over sparse quantized levels. This bench
+//! times `decode_with_table` (table prebuilt — the cached serving
+//! path) over a scenario matrix of bit widths × sparsity levels ×
+//! hidden sizes, with both backends dequantizing the *same* levels
+//! (the dense side is `QuantizedHmm::to_hmm`), so the timing
+//! difference is purely the beam loop exploiting sparsity.
+//!
+//! Results always go to `BENCH_decode.json` — the second artifact of
+//! the CI bench-smoke trajectory, diffed against the previous run by
+//! the bench-regression gate (`bench_gate`). `NORMQ_BENCH_QUICK=1`
+//! shrinks the matrix to CI scale.
 
-use normq::data::{chunked, Corpus};
+use normq::data::Corpus;
 use normq::dfa::Dfa;
-use normq::generate::{decode, DecodeConfig};
-use normq::hmm::Hmm;
+use normq::generate::{decode_with_table, BuildOptions, ConstraintTable, DecodeConfig};
+use normq::hmm::{Hmm, HmmBackend};
 use normq::lm::NgramLm;
-use normq::qem::{train, QemConfig};
-use normq::quant::Method;
+use normq::quant::QuantizedHmm;
+use normq::util::json::Json;
 use normq::util::rng::Rng;
-use normq::util::timer::{bench_seconds, fmt_secs, Stats};
+use normq::util::timer::time_best_ms;
+
+struct DecodeRow {
+    hidden: usize,
+    vocab: usize,
+    bits: u32,
+    alpha: f64,
+    sparsity: f64,
+    beam: usize,
+    max_tokens: usize,
+    dense_ms: f64,
+    sparse_ms: f64,
+}
+
+impl DecodeRow {
+    fn speedup(&self) -> f64 {
+        self.dense_ms / self.sparse_ms.max(1e-9)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("hidden", Json::num(self.hidden as f64)),
+            ("vocab", Json::num(self.vocab as f64)),
+            ("bits", Json::num(self.bits)),
+            ("alpha", Json::num(self.alpha)),
+            ("sparsity", Json::num(self.sparsity)),
+            ("beam", Json::num(self.beam as f64)),
+            ("max_tokens", Json::num(self.max_tokens as f64)),
+            ("dense_ms", Json::num(self.dense_ms)),
+            ("sparse_ms", Json::num(self.sparse_ms)),
+            ("speedup", Json::num(self.speedup())),
+        ])
+    }
+}
 
 fn main() {
-    println!("== bench_decode ==");
+    normq::util::logging::init_from_env();
+    let quick = std::env::var("NORMQ_BENCH_QUICK").is_ok_and(|v| v != "0" && !v.is_empty());
+    println!(
+        "== bench_decode: dense vs weight-sparse beam loop ({}) ==",
+        if quick { "quick" } else { "full" }
+    );
+
     let corpus = Corpus::new(5);
-    let data = corpus.sample_token_corpus(4000, 6);
-    let lm = NgramLm::train(&data, corpus.vocab.len());
-    let mut rng = Rng::seeded(7);
-    let init = Hmm::random(64, corpus.vocab.len(), 0.3, 0.1, &mut rng);
-    let cfg = QemConfig { method: None, epochs: 2, eval_test: false, ..Default::default() };
-    let hmm = train(&init, &chunked(data, 10), &[], &cfg).model;
+    let vocab = corpus.vocab.len();
+    let lm = NgramLm::train(&corpus.sample_token_corpus(4000, 6), vocab);
+    let items = corpus.eval_set(if quick { 4 } else { 8 }, 1, 8);
+    let (hiddens, reps, dcfg): (&[usize], usize, DecodeConfig) = if quick {
+        (&[64], 4, DecodeConfig { beam: 6, max_tokens: 16, ..Default::default() })
+    } else {
+        (&[64, 192], 8, DecodeConfig { beam: 8, max_tokens: 24, ..Default::default() })
+    };
 
-    let items = corpus.eval_set(8, 1, 8);
-    let dcfg = DecodeConfig { beam: 8, max_tokens: 24, ..Default::default() };
+    println!(
+        "{:>6} {:>5} {:>4} {:>8} {:>9} {:>10} {:>8}",
+        "hidden", "alpha", "bits", "sparsity", "dense_ms", "sparse_ms", "speedup"
+    );
+    let mut rng = Rng::seeded(0xDEC0DE);
+    let mut rows = Vec::new();
+    for &hidden in hiddens {
+        for &alpha in &[0.05f64, 0.3] {
+            // Spiky Dirichlet rows ≈ trained HMM weights (paper Fig 2):
+            // this is the sparsity regime Norm-Q auto-pruning exploits.
+            let hmm = Hmm::random(hidden, vocab, alpha, alpha, &mut rng);
+            for &bits in &[3u32, 8] {
+                let q = QuantizedHmm::from_hmm(&hmm, bits);
+                let dense = q.to_hmm();
+                let time_backend = |model: &dyn HmmBackend| {
+                    // One table per distinct concept set, built outside
+                    // the timed region (the serving path caches these).
+                    let states: Vec<(Dfa, ConstraintTable)> = items
+                        .iter()
+                        .map(|item| {
+                            let kws: Vec<Vec<usize>> = item
+                                .concepts
+                                .iter()
+                                .map(|c| vec![corpus.vocab.id(c)])
+                                .collect();
+                            let dfa = Dfa::from_keywords(&kws, vocab);
+                            let table = ConstraintTable::build_with(
+                                model,
+                                &dfa,
+                                dcfg.max_tokens,
+                                &BuildOptions::default(),
+                            )
+                            .expect("no deadline");
+                            (dfa, table)
+                        })
+                        .collect();
+                    let mut idx = 0usize;
+                    time_best_ms(reps, || {
+                        let (dfa, table) = &states[idx % states.len()];
+                        idx += 1;
+                        let _ = decode_with_table(&lm, model, dfa, table, &dcfg);
+                    })
+                };
+                let dense_ms = time_backend(&dense);
+                let sparse_ms = time_backend(&q);
+                let row = DecodeRow {
+                    hidden,
+                    vocab,
+                    bits,
+                    alpha,
+                    sparsity: q.sparsity(),
+                    beam: dcfg.beam,
+                    max_tokens: dcfg.max_tokens,
+                    dense_ms,
+                    sparse_ms,
+                };
+                println!(
+                    "{:>6} {:>5} {:>4} {:>8.3} {:>9.2} {:>10.2} {:>7.1}x",
+                    row.hidden,
+                    row.alpha,
+                    row.bits,
+                    row.sparsity,
+                    row.dense_ms,
+                    row.sparse_ms,
+                    row.speedup()
+                );
+                if row.sparsity > 0.9 && row.speedup() < 1.0 {
+                    eprintln!(
+                        "[bench_decode] WARNING: sparse beam loop slower than dense at \
+                         bits={} alpha={} (sparsity {:.3})",
+                        row.bits, row.alpha, row.sparsity
+                    );
+                }
+                rows.push(row);
+            }
+        }
+    }
 
-    for (label, model) in [
-        ("FP32".to_string(), hmm.clone()),
-        ("Norm-Q 8b".to_string(), Method::NormQ { bits: 8 }.apply(&hmm)),
-        ("Norm-Q 4b".to_string(), Method::NormQ { bits: 4 }.apply(&hmm)),
-        ("Norm-Q 3b".to_string(), Method::NormQ { bits: 3 }.apply(&hmm)),
-    ] {
-        let mut idx = 0usize;
-        let samples = bench_seconds(2, 16, || {
-            let item = &items[idx % items.len()];
-            idx += 1;
-            let keywords: Vec<Vec<usize>> = item
-                .concepts
-                .iter()
-                .map(|c| vec![corpus.vocab.id(c)])
-                .collect();
-            let dfa = Dfa::from_keywords(&keywords, corpus.vocab.len());
-            let _ = decode(&lm, &model, &dfa, &dcfg);
-        });
-        let s = Stats::of(&samples);
-        println!(
-            "decode {label:<10} p50={:>9} p95={:>9} -> {:>6.1} req/s/worker",
-            fmt_secs(s.p50),
-            fmt_secs(s.p95),
-            1.0 / s.p50
-        );
+    let json = Json::obj(vec![
+        ("bench", Json::str("decode")),
+        ("quick", Json::Bool(quick)),
+        ("scenarios", Json::arr(rows.iter().map(|r| r.to_json()))),
+    ])
+    .to_string();
+    match std::fs::write("BENCH_decode.json", &json) {
+        Ok(()) => println!("[bench_decode] wrote BENCH_decode.json ({} scenarios)", rows.len()),
+        Err(e) => {
+            eprintln!("[bench_decode] FAILED writing BENCH_decode.json: {e}");
+            std::process::exit(1);
+        }
     }
 }

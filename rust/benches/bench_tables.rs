@@ -25,7 +25,7 @@ use normq::tables::run_experiment;
 use normq::util::cli::Args;
 use normq::util::json::Json;
 use normq::util::rng::Rng;
-use normq::util::timer::bench_seconds;
+use normq::util::timer::time_best_ms;
 
 struct TableRow {
     hidden: usize,
@@ -62,14 +62,6 @@ impl TableRow {
             ("table_kb", Json::num(self.table_kb)),
         ])
     }
-}
-
-/// Best-of-`reps` wall time of `f`, in milliseconds (one warmup run).
-fn time_best_ms(reps: usize, f: impl FnMut()) -> f64 {
-    bench_seconds(1, reps.max(1), f)
-        .into_iter()
-        .fold(f64::INFINITY, f64::min)
-        * 1e3
 }
 
 /// Dense-vs-sparse build scenarios across bit widths and sparsity

@@ -1,0 +1,99 @@
+//! bench_gate — the CI bench-regression gate.
+//!
+//! Usage: `bench_gate <previous.json> <current.json> [--threshold 0.25]`
+//!
+//! Diffs two bench-trajectory artifacts (`BENCH_tables.json` /
+//! `BENCH_decode.json`) with `normq::util::benchgate`: scenarios are
+//! matched by their identity fields and every `*_ms` timing field is
+//! compared; any matched field slower than `previous · (1 + threshold)`
+//! prints a regression line and exits 1 (failing the bench-smoke job).
+//! Scenario-set changes, scale (`quick`) mismatches and unreadable
+//! previous artifacts skip cleanly — only a real slowdown bites.
+
+use normq::util::benchgate::gate;
+use normq::util::json::Json;
+
+fn run() -> Result<bool, String> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut paths = Vec::new();
+    let mut threshold = 0.25f64;
+    let mut i = 0;
+    while i < argv.len() {
+        if argv[i] == "--threshold" {
+            let v = argv
+                .get(i + 1)
+                .ok_or("--threshold expects a value (e.g. 0.25)")?;
+            threshold = v
+                .parse::<f64>()
+                .map_err(|e| format!("--threshold {v:?}: {e}"))?;
+            if !threshold.is_finite() || threshold <= 0.0 {
+                return Err(format!("--threshold expects a positive ratio, got {v}"));
+            }
+            i += 2;
+        } else {
+            paths.push(argv[i].clone());
+            i += 1;
+        }
+    }
+    let [prev_path, cur_path] = paths.as_slice() else {
+        return Err("usage: bench_gate <previous.json> <current.json> [--threshold 0.25]".into());
+    };
+
+    let cur_text = std::fs::read_to_string(cur_path)
+        .map_err(|e| format!("reading current artifact {cur_path}: {e}"))?;
+    let cur = Json::parse(&cur_text).map_err(|e| format!("parsing {cur_path}: {e}"))?;
+    // A previous artifact that cannot be read or parsed is a skip, not
+    // a failure: the first run of a new bench has no history, and a
+    // corrupt upload must not wedge every future build.
+    let prev = match std::fs::read_to_string(prev_path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(v) => v,
+            Err(e) => {
+                println!("[bench_gate] previous artifact unparseable ({e}) — skipping gate");
+                return Ok(true);
+            }
+        },
+        Err(e) => {
+            println!("[bench_gate] no previous artifact ({e}) — skipping gate");
+            return Ok(true);
+        }
+    };
+
+    let report = gate(&prev, &cur, threshold)?;
+    for note in &report.notes {
+        println!("[bench_gate] {note}");
+    }
+    println!(
+        "[bench_gate] {}: compared {} scenario(s), {} unmatched, threshold {:.0}%",
+        cur_path,
+        report.compared,
+        report.unmatched,
+        threshold * 100.0
+    );
+    for r in &report.regressions {
+        eprintln!(
+            "[bench_gate] REGRESSION {} {}: {:.2}ms -> {:.2}ms ({:.2}x, limit {:.2}x)",
+            r.scenario,
+            r.field,
+            r.prev_ms,
+            r.cur_ms,
+            r.ratio(),
+            1.0 + threshold
+        );
+    }
+    Ok(report.passed())
+}
+
+fn main() {
+    match run() {
+        Ok(true) => println!("[bench_gate] OK"),
+        Ok(false) => {
+            eprintln!("[bench_gate] FAILED: bench regression(s) above threshold");
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("[bench_gate] error: {e}");
+            std::process::exit(2);
+        }
+    }
+}

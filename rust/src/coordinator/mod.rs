@@ -49,17 +49,20 @@ impl ByteSized for (Dfa, ConstraintTable) {
     }
 }
 
-/// Which model representation the dispatcher builds constraint tables
-/// from. The decode loop always scores against the dense model the
-/// server was started with; this choice only affects the table engine,
-/// where the sparse representation turns Norm-Q's zero levels into an
-/// O(nnz) build (see [`crate::generate::product`]).
+/// Which model representation the server keeps for the whole request
+/// path — constraint-table builds *and* per-step beam scoring both go
+/// through the same [`HmmBackend`]. With `Quantized`, the dense FP32
+/// matrices handed to [`Server::start`] are re-quantized into sparse
+/// levels once and then dropped: no dense weight is ever read again,
+/// on the table build (O(nnz) per C-step, see
+/// [`crate::generate::product`]) or in the beam loop (O(nnz) per
+/// acceptance product, see [`crate::generate::decode_with_table`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TableBackend {
-    /// Build tables over the dense FP32 matrices (O(H²) per C-step).
+    /// Serve over the dense FP32 matrices (O(H²)/O(H·V) per step).
     Dense,
     /// Re-quantize the serving model at `bits` into sparse levels
-    /// ([`QuantizedHmm`]) and build tables over those (O(nnz)).
+    /// ([`QuantizedHmm`]) and serve over those (O(nnz)).
     Quantized {
         /// Bits per stored level.
         bits: u32,
@@ -215,12 +218,12 @@ impl Default for ServerConfig {
 /// Shared immutable state for workers.
 struct Shared {
     lm: Arc<dyn LanguageModel>,
-    hmm: Hmm,
-    /// The model the table engine builds from ([`TableBackend`]):
-    /// `None` means the dense `hmm` itself (no second copy of the
-    /// FP32 matrices); `Some` holds the sparse quantized levels, and
-    /// no dense weights are ever touched on the build path.
-    table_model: Option<Arc<dyn HmmBackend>>,
+    /// The one model representation on the request path
+    /// ([`TableBackend`]): the dense FP32 [`Hmm`] the server was
+    /// started with, or its sparse quantized levels — table builds and
+    /// beam scoring both read through this backend, so a quantized
+    /// server holds no dense weights at all.
+    model: Arc<dyn HmmBackend>,
     corpus: Corpus,
     cfg: ServerConfig,
     metrics: Arc<Metrics>,
@@ -255,16 +258,15 @@ impl Server {
     pub fn start(lm: Arc<dyn LanguageModel>, hmm: Hmm, corpus: Corpus, cfg: ServerConfig) -> Server {
         let metrics = Arc::new(Metrics::new());
         let queue_capacity = cfg.queue_capacity;
-        let table_model: Option<Arc<dyn HmmBackend>> = match cfg.table_backend {
-            TableBackend::Dense => None,
-            TableBackend::Quantized { bits } => {
-                Some(Arc::new(QuantizedHmm::from_hmm(&hmm, bits)))
-            }
+        // With a quantized backend the dense matrices are consumed
+        // here and dropped: the request path holds levels only.
+        let model: Arc<dyn HmmBackend> = match cfg.table_backend {
+            TableBackend::Dense => Arc::new(hmm),
+            TableBackend::Quantized { bits } => Arc::new(QuantizedHmm::from_hmm(&hmm, bits)),
         };
         let shared = Arc::new(Shared {
             lm,
-            hmm,
-            table_model,
+            model,
             corpus,
             cfg: cfg.clone(),
             metrics: Arc::clone(&metrics),
@@ -531,11 +533,9 @@ fn dispatcher_loop(intake: Receiver<Request>, work: SyncSender<Batch>, shared: A
                         deadline: build_deadline,
                         threads: shared.cfg.table_threads,
                     };
-                    let model: &dyn HmmBackend =
-                        shared.table_model.as_deref().unwrap_or(&shared.hmm);
                     let build_start = Instant::now();
                     match ConstraintTable::build_with(
-                        model,
+                        &*shared.model,
                         &dfa,
                         shared.cfg.decode.max_tokens,
                         &build_opts,
@@ -629,7 +629,7 @@ fn worker_loop(work: Arc<Mutex<Receiver<Batch>>>, shared: Arc<Shared>) {
             } else {
                 let mut dcfg = shared.cfg.decode.clone();
                 dcfg.deadline = req.deadline;
-                decode_with_table(shared.lm.as_ref(), &shared.hmm, dfa, table, &dcfg)
+                decode_with_table(shared.lm.as_ref(), &*shared.model, dfa, table, &dcfg)
             };
             let latency = req.submitted_at.elapsed();
             shared.metrics.completed.fetch_add(1, Ordering::Relaxed);

@@ -17,13 +17,19 @@
 //! forward-step (1×H)·(H×H)); these are the "four main MatMul layers"
 //! that §III-B's layer-wise quantization wraps, which `act_bits`
 //! reproduces for Table II.
+//!
+//! Both decode entry points take the model as a [`HmmBackend`], the
+//! same abstraction the table engine builds through: a server holding
+//! only a sparse quantized model ([`crate::quant::qhmm::QuantizedHmm`])
+//! scores beams over the stored non-zero levels directly — O(nnz) per
+//! acceptance product instead of O(H·V) — and never touches dense FP32
+//! weights anywhere on the request path.
 
 pub mod product;
 
 use crate::data::vocab::EOS;
 use crate::dfa::Dfa;
-use crate::hmm::forward::forward_step;
-use crate::hmm::Hmm;
+use crate::hmm::HmmBackend;
 use crate::lm::LanguageModel;
 pub use product::{BuildOptions, ConstraintTable};
 
@@ -84,19 +90,21 @@ fn maybe_qdq(v: &mut [f32], bits: Option<u32>) {
     }
 }
 
-/// Decode one constrained request. The deadline (if any) covers the
+/// Decode one constrained request over any [`HmmBackend`] (dense FP32
+/// or sparse quantized levels). The deadline (if any) covers the
 /// constraint-table build as well as the beam loop: a request whose
 /// deadline fires mid-build comes back `timed_out` without paying the
 /// remaining table-construction cost.
 pub fn decode(
     lm: &dyn LanguageModel,
-    hmm: &Hmm,
+    model: &dyn HmmBackend,
     dfa: &Dfa,
     cfg: &DecodeConfig,
 ) -> Generation {
-    let vocab = hmm.vocab();
+    let vocab = model.vocab();
     assert_eq!(lm.vocab(), vocab, "LM/HMM vocabulary mismatch");
-    let table = match ConstraintTable::build_deadlined(hmm, dfa, cfg.max_tokens, cfg.deadline) {
+    let opts = BuildOptions { deadline: cfg.deadline, threads: 1 };
+    let table = match ConstraintTable::build_with(model, dfa, cfg.max_tokens, &opts) {
         Some(table) => table,
         None => {
             return Generation {
@@ -107,25 +115,28 @@ pub fn decode(
             }
         }
     };
-    decode_with_table(lm, hmm, dfa, &table, cfg)
+    decode_with_table(lm, model, dfa, &table, cfg)
 }
 
 /// Decode with a pre-built constraint table (the serving path caches
-/// tables per concept set).
+/// tables per concept set). Every per-step weight read — the
+/// `u @ emit` acceptance product, the exception/EOS corrections, and
+/// the forward step — goes through the [`HmmBackend`], so the beam
+/// loop runs weight-sparse on a quantized backend.
 pub fn decode_with_table(
     lm: &dyn LanguageModel,
-    hmm: &Hmm,
+    model: &dyn HmmBackend,
     dfa: &Dfa,
     table: &ConstraintTable,
     cfg: &DecodeConfig,
 ) -> Generation {
-    let vocab = hmm.vocab();
-    let h_n = hmm.hidden();
+    let vocab = model.vocab();
+    let h_n = model.hidden();
     let mut beams = vec![Beam {
         tokens: Vec::new(),
         score: 0.0,
         dfa_state: dfa.start(),
-        alpha: hmm.init.clone(),
+        alpha: model.init().to_vec(),
         finished: false,
     }];
     let mut done: Vec<Beam> = Vec::new();
@@ -161,7 +172,7 @@ pub fn decode_with_table(
                 u[h] = alpha_q[h] * c_def[h];
             }
             maybe_qdq(&mut u, cfg.act_bits);
-            hmm.emit.vecmat(&u, &mut w);
+            model.emit_vecmat(&u, &mut w);
             maybe_qdq(&mut w, cfg.act_bits);
 
             // Exception tokens: per-token class correction.
@@ -170,7 +181,7 @@ pub fn decode_with_table(
                 let mut acc = 0f64;
                 for h in 0..h_n {
                     acc += alpha_q[h] as f64
-                        * hmm.emit.at(h, tok as usize) as f64
+                        * model.emit_at(h, tok as usize) as f64
                         * c_exc[h] as f64;
                 }
                 w[tok as usize] = acc as f32;
@@ -181,7 +192,7 @@ pub fn decode_with_table(
             if dfa.is_accepting(eos_next) {
                 let mut acc = 0f64;
                 for h in 0..h_n {
-                    acc += alpha_q[h] as f64 * hmm.emit.at(h, EOS) as f64;
+                    acc += alpha_q[h] as f64 * model.emit_at(h, EOS) as f64;
                 }
                 w[EOS] = acc as f32;
             } else {
@@ -202,14 +213,24 @@ pub fn decode_with_table(
                 let s = beam.score
                     + lpx as f64
                     + cfg.lambda as f64 * ((wx as f64).ln() - log_z);
+                // A NaN score (low-bit act_bits qdq or a degenerate
+                // quantized model can poison w/z) carries no ranking
+                // information: drop the candidate rather than let it
+                // displace real ones.
+                if s.is_nan() {
+                    continue;
+                }
                 candidates.push((bi, x, s));
             }
         }
         if candidates.is_empty() {
             break;
         }
-        // Top-k by score.
-        candidates.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        // Top-k by score. total_cmp, not partial_cmp().unwrap(): scores
+        // are NaN-filtered above, but a panic in a decode worker takes
+        // the whole request (and its admission slot) with it, so the
+        // ordering must be total no matter what arithmetic produced.
+        candidates.sort_by(|a, b| b.2.total_cmp(&a.2));
         candidates.truncate(cfg.beam);
 
         let mut next_beams = Vec::with_capacity(cfg.beam);
@@ -229,7 +250,7 @@ pub fn decode_with_table(
                 continue;
             }
             let mut alpha_next = vec![0f32; h_n];
-            forward_step(hmm, &parent.alpha, tok, &mut alpha_next);
+            model.forward_step(&parent.alpha, tok, &mut alpha_next);
             next_beams.push(Beam { tokens, score, dfa_state, alpha: alpha_next, finished: false });
         }
         beams = next_beams;
@@ -239,21 +260,20 @@ pub fn decode_with_table(
     }
 
     // Prefer finished accepting beams, then live accepting, then anything.
+    // total_cmp for the same reason as the candidate sort: a NaN must
+    // never panic the worker mid-request.
     let pick = |pool: &[Beam]| -> Option<Beam> {
         pool.iter()
             .filter(|b| dfa.is_accepting(b.dfa_state))
-            .max_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
-            .or_else(|| {
-                pool.iter()
-                    .max_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
-            })
+            .max_by(|a, b| a.score.total_cmp(&b.score))
+            .or_else(|| pool.iter().max_by(|a, b| a.score.total_cmp(&b.score)))
             .cloned()
     };
     let best = pick(&done).or_else(|| pick(&beams)).unwrap_or(Beam {
         tokens: vec![EOS],
         score: f64::NEG_INFINITY,
         dfa_state: dfa.start(),
-        alpha: hmm.init.clone(),
+        alpha: model.init().to_vec(),
         finished: true,
     });
     // Strip the trailing EOS for the caller.
@@ -270,7 +290,9 @@ mod tests {
     use super::*;
     use crate::data::Corpus;
     use crate::hmm::em::em_step;
+    use crate::hmm::Hmm;
     use crate::lm::ngram::NgramLm;
+    use crate::quant::qhmm::QuantizedHmm;
     use crate::util::rng::Rng;
 
     /// Train a small HMM on the corpus so the decoder has real signal.
@@ -350,6 +372,58 @@ mod tests {
         };
         let gen = decode(&lm, &hmm, &dfa, &cfg);
         // Must not panic; tokens stay in-vocab.
+        assert!(gen.tokens.iter().all(|&t| t < corpus.vocab.len()));
+    }
+
+    #[test]
+    fn nan_poisoned_emissions_do_not_panic_the_decoder() {
+        // A NaN emission entry poisons the acceptance sweep: w[kw] and
+        // the normalizer z both go NaN, so every candidate score is
+        // NaN. Under the old partial_cmp(..).unwrap() beam sort this
+        // panicked the worker thread mid-request; now NaN candidates
+        // are dropped and the ordering is total either way.
+        let (corpus, lm, mut hmm) = setup();
+        let kw = corpus.vocab.id(&corpus.lexicon.nouns[1]);
+        for h in 0..hmm.hidden() {
+            hmm.emit.set(h, kw, f32::NAN);
+        }
+        let dfa = Dfa::from_keywords(&[vec![kw]], corpus.vocab.len());
+        let cfg = DecodeConfig { beam: 4, max_tokens: 12, ..Default::default() };
+        let gen = decode(&lm, &hmm, &dfa, &cfg);
+        assert!(!gen.satisfied, "a NaN-poisoned model cannot plant keywords");
+        assert!(gen.tokens.iter().all(|&t| t < corpus.vocab.len()));
+    }
+
+    #[test]
+    fn quantized_backend_decode_plants_keywords() {
+        // The full request path over sparse levels only: table build
+        // AND beam scoring through the QuantizedHmm backend.
+        let (corpus, lm, hmm) = setup();
+        let q = QuantizedHmm::from_hmm(&hmm, 8);
+        let kw = corpus.vocab.id(&corpus.lexicon.nouns[0]);
+        let dfa = Dfa::from_keywords(&[vec![kw]], corpus.vocab.len());
+        let cfg = DecodeConfig { beam: 6, max_tokens: 16, ..Default::default() };
+        let gen = decode(&lm, &q, &dfa, &cfg);
+        assert!(gen.satisfied, "keyword not planted: {:?}", corpus.vocab.decode(&gen.tokens));
+        assert!(gen.tokens.contains(&kw));
+    }
+
+    #[test]
+    fn act_bits_2_on_quantized_backend_does_not_panic() {
+        // Table II's worst case: 2-bit activation qdq around every
+        // decode MatMul, over a 3-bit weight-sparse backend. Quality
+        // may collapse; the decode must still terminate cleanly.
+        let (corpus, lm, hmm) = setup();
+        let q = QuantizedHmm::from_hmm(&hmm, 3);
+        let kw = corpus.vocab.id(&corpus.lexicon.nouns[2]);
+        let dfa = Dfa::from_keywords(&[vec![kw]], corpus.vocab.len());
+        let cfg = DecodeConfig {
+            beam: 4,
+            max_tokens: 12,
+            act_bits: Some(2),
+            ..Default::default()
+        };
+        let gen = decode(&lm, &q, &dfa, &cfg);
         assert!(gen.tokens.iter().all(|&t| t < corpus.vocab.len()));
     }
 

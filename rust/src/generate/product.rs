@@ -103,9 +103,9 @@ pub struct ConstraintTable {
 }
 
 impl ConstraintTable {
-    /// Build the table for budgets 0..=max_budget over the dense model.
-    pub fn build(hmm: &Hmm, dfa: &Dfa, max_budget: usize) -> ConstraintTable {
-        Self::build_with(hmm, dfa, max_budget, &BuildOptions::default())
+    /// Build the table for budgets 0..=max_budget over any backend.
+    pub fn build(model: &dyn HmmBackend, dfa: &Dfa, max_budget: usize) -> ConstraintTable {
+        Self::build_with(model, dfa, max_budget, &BuildOptions::default())
             .expect("unbounded build cannot expire")
     }
 
@@ -116,12 +116,12 @@ impl ConstraintTable {
     /// returned if it fires before the table is complete — a partial
     /// table is useless, so nothing is handed back or cached.
     pub fn build_deadlined(
-        hmm: &Hmm,
+        model: &dyn HmmBackend,
         dfa: &Dfa,
         max_budget: usize,
         deadline: Option<Instant>,
     ) -> Option<ConstraintTable> {
-        Self::build_with(hmm, dfa, max_budget, &BuildOptions { deadline, threads: 1 })
+        Self::build_with(model, dfa, max_budget, &BuildOptions { deadline, threads: 1 })
     }
 
     /// Build the table over any [`HmmBackend`] — dense FP32 or sparse

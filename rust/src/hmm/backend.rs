@@ -1,38 +1,78 @@
-//! The model-backend abstraction behind the constraint-table engine.
+//! The model-backend abstraction behind the constraint-table engine
+//! *and* the decode beam loop.
 //!
-//! `ConstraintTable::build_with` touches the HMM through exactly four
-//! operations — the hidden-state count, a backward transition step
-//! (`out[h] = Σ_h' trans[h][h'] · v[h']`), the emission *columns* of
-//! the DFA exception tokens, and the stored non-zero counts (the
-//! engine's parallelism cost model) — so that is the whole trait.
-//! Two implementations exist:
+//! The two hot consumers of HMM weights touch the model through a
+//! small, fixed set of operations:
+//!
+//! - `ConstraintTable::build_with` needs the hidden-state count, a
+//!   backward transition step (`out[h] = Σ_h' trans[h][h'] · v[h']`),
+//!   the emission *columns* of the DFA exception tokens, and the
+//!   stored non-zero counts (the engine's parallelism cost model);
+//! - `generate::decode_with_table` additionally needs the initial
+//!   belief, the per-step acceptance product `w = u @ emit` (the
+//!   `(1×H)·(H×V)` decode hot spot), single emission entries for the
+//!   exception/EOS corrections, and the fused forward step (emission
+//!   column gather + `v @ trans`).
+//!
+//! That union is the whole trait. Two implementations exist:
 //!
 //! - the dense FP32 [`Hmm`] (this module's impl), paying O(H²) per
-//!   transition step; and
+//!   transition step and O(H·V) per acceptance product; and
 //! - a quantized model stored as non-zero levels only
 //!   ([`crate::quant::qhmm::QuantizedHmm`]), paying O(nnz) — after
 //!   Norm-Q at b ≤ 8 the overwhelming majority of levels are zero
 //!   (the ≥99% compression of the paper's Table IV), so the same
-//!   recursion runs an order of magnitude less work and the serving
-//!   path never materializes dense FP32 weights.
+//!   recursions run an order of magnitude less work and the serving
+//!   path never materializes dense FP32 weights, on the table build
+//!   *or* in the beam loop.
 //!
 //! The trait deliberately exposes *column* non-zeros for `emit`: the
 //! table recursion touches emissions only at exception tokens (the
 //! keyword alphabet), one column per token, while it consumes `trans`
 //! row-by-row through the matvec.
+//!
+//! All-zero rows (fully auto-pruned by quantization) dequantize to
+//! *uniform* in every operation here, matching
+//! [`crate::quant::packed::SparseQMat::to_mat`] — so a sparse backend
+//! and the dense materialization of the same levels agree within
+//! float-path tolerance everywhere, which `tests/decode_equivalence.rs`
+//! property-tests end to end.
 
 use crate::hmm::Hmm;
 
-/// Read-only model access for the HMM×DFA table recursion; see the
-/// [module docs](self).
+/// Read-only model access for the HMM×DFA table recursion and the
+/// decode beam loop; see the [module docs](self).
 pub trait HmmBackend: Send + Sync {
     /// Hidden state count H.
     fn hidden(&self) -> usize;
+
+    /// Vocabulary size V.
+    fn vocab(&self) -> usize;
+
+    /// γ: the initial state distribution, length H — the belief every
+    /// beam starts from.
+    fn init(&self) -> &[f32];
 
     /// One backward transition step: `out[h] = Σ_h' P(h'|h) · v[h']`
     /// (`trans @ v` with f64 accumulation). Sparse backends iterate
     /// stored non-zeros only.
     fn trans_matvec(&self, v: &[f32], out: &mut [f32]);
+
+    /// One forward transition step: `out[h'] = Σ_h v[h] · P(h'|h)`
+    /// (`v @ trans` with f64 accumulation) — the belief-advance half of
+    /// [`HmmBackend::forward_step`].
+    fn trans_vecmat(&self, v: &[f32], out: &mut [f32]);
+
+    /// The decode hot spot: `out[x] = Σ_h u[h] · P(x|h)` (`u @ emit`
+    /// with f64 accumulation), scoring every token's acceptance weight
+    /// in one sweep. Sparse backends pay O(nnz of the rows with
+    /// `u[h] ≠ 0`) instead of O(H·V).
+    fn emit_vecmat(&self, u: &[f32], out: &mut [f32]);
+
+    /// Single emission entry `P(tok|h)` — the exception-token and EOS
+    /// corrections read a handful of these per beam step. All-zero
+    /// quantized rows read as uniform `1/V`.
+    fn emit_at(&self, h: usize, tok: usize) -> f32;
 
     /// Non-zeros of emission column `tok`, as `(h, P(tok|h))` sorted by
     /// `h`. The table build extracts one column per distinct DFA
@@ -42,17 +82,79 @@ pub trait HmmBackend: Send + Sync {
     /// Stored non-zero counts `(trans, emit)` — the sparsity the table
     /// engine's cost model and the benches report.
     fn nnz(&self) -> (usize, usize);
+
+    /// One fused forward step: observe `tok` under belief `alpha` (the
+    /// predictive P(z_t | x_{<t})) and advance:
+    ///
+    ///   weighted[h] = alpha[h] · emit[h, tok]
+    ///   scale       = Σ_h weighted[h]          (= P(x_t | x_{<t}))
+    ///   next[h']    = Σ_h (weighted[h]/scale) · trans[h, h']
+    ///
+    /// Returns the scale. Scales below ~1e-30 are "effectively
+    /// impossible": the model gives this token no real mass (the
+    /// paper's garbled-output failure mode after over-pruning or
+    /// quantization). They are also numerically toxic — `1/scale`
+    /// overflows f32 and poisons the belief with `inf·0 = NaN` (caught
+    /// by `tests/robustness.rs`) — so the belief uniform-resets and the
+    /// step reports 0.
+    fn forward_step(&self, alpha: &[f32], tok: usize, next: &mut [f32]) -> f64 {
+        let h_n = self.hidden();
+        debug_assert_eq!(alpha.len(), h_n);
+        debug_assert_eq!(next.len(), h_n);
+        debug_assert!(tok < self.vocab());
+        let mut weighted = vec![0f32; h_n];
+        let mut scale = 0f64;
+        for (h, w) in weighted.iter_mut().enumerate() {
+            let p = alpha[h] as f64 * self.emit_at(h, tok) as f64;
+            *w = p as f32;
+            scale += p;
+        }
+        if scale <= 1e-30 {
+            let u = 1.0 / h_n as f32;
+            for n in next.iter_mut() {
+                *n = u;
+            }
+            return 0.0;
+        }
+        let inv = (1.0 / scale) as f32;
+        for w in weighted.iter_mut() {
+            *w *= inv;
+        }
+        self.trans_vecmat(&weighted, next);
+        scale
+    }
 }
 
 /// The dense FP32 model is its own backend: every entry is "stored",
-/// so `nnz` counts exact zeros and the matvec is the plain O(H²) loop.
+/// so `nnz` counts exact zeros and each product is the plain dense
+/// loop.
 impl HmmBackend for Hmm {
     fn hidden(&self) -> usize {
         Hmm::hidden(self)
     }
 
+    fn vocab(&self) -> usize {
+        Hmm::vocab(self)
+    }
+
+    fn init(&self) -> &[f32] {
+        &self.init
+    }
+
     fn trans_matvec(&self, v: &[f32], out: &mut [f32]) {
         self.trans.matvec(v, out);
+    }
+
+    fn trans_vecmat(&self, v: &[f32], out: &mut [f32]) {
+        self.trans.vecmat(v, out);
+    }
+
+    fn emit_vecmat(&self, u: &[f32], out: &mut [f32]) {
+        self.emit.vecmat(u, out);
+    }
+
+    fn emit_at(&self, h: usize, tok: usize) -> f32 {
+        self.emit.at(h, tok)
     }
 
     fn emit_col(&self, tok: usize) -> Vec<(u32, f32)> {
@@ -103,6 +205,42 @@ mod tests {
         let mut got = vec![0f32; 5];
         HmmBackend::trans_matvec(&hmm, &v, &mut got);
         assert_eq!(want, got);
+    }
+
+    #[test]
+    fn dense_decode_ops_mirror_the_matrices() {
+        let mut rng = Rng::seeded(14);
+        let hmm = Hmm::random(6, 11, 0.4, 0.4, &mut rng);
+        assert_eq!(HmmBackend::vocab(&hmm), 11);
+        assert_eq!(HmmBackend::init(&hmm), &hmm.init[..]);
+        assert_eq!(HmmBackend::emit_at(&hmm, 2, 7), hmm.emit.at(2, 7));
+        let u = rng.dirichlet_symmetric(6, 1.0);
+        let mut want = vec![0f32; 11];
+        hmm.emit.vecmat(&u, &mut want);
+        let mut got = vec![0f32; 11];
+        HmmBackend::emit_vecmat(&hmm, &u, &mut got);
+        assert_eq!(want, got);
+        let mut want_t = vec![0f32; 6];
+        hmm.trans.vecmat(&u, &mut want_t);
+        let mut got_t = vec![0f32; 6];
+        HmmBackend::trans_vecmat(&hmm, &u, &mut got_t);
+        assert_eq!(want_t, got_t);
+    }
+
+    #[test]
+    fn default_forward_step_uniform_resets_on_impossible_tokens() {
+        let mut rng = Rng::seeded(15);
+        let mut hmm = Hmm::random(5, 9, 0.5, 0.5, &mut rng);
+        for h in 0..5 {
+            hmm.emit.set(h, 3, 0.0);
+        }
+        let alpha = rng.dirichlet_symmetric(5, 1.0);
+        let mut next = vec![0f32; 5];
+        let scale = HmmBackend::forward_step(&hmm, &alpha, 3, &mut next);
+        assert_eq!(scale, 0.0);
+        for &n in &next {
+            assert!((n - 0.2).abs() < 1e-6, "expected uniform reset, got {n}");
+        }
     }
 
     #[test]

@@ -9,13 +9,15 @@
 //! four "main MatMul layers" (§III-B) refer to, and the shape the Pallas
 //! kernel in `python/compile/kernels/hmm_step.py` fuses.
 
+use crate::hmm::backend::HmmBackend;
 use crate::hmm::model::Hmm;
 
 /// Result of one forward pass over a sequence.
 #[derive(Clone, Debug)]
 pub struct Forward {
-    /// alphas[t][h] = P(z_{t+1-...}) posterior-ish scaled filtering dist:
-    /// alphas[t] is proportional to P(z_t | x_{1..t}), normalized.
+    /// `alphas[t]` is the *posterior* filtering distribution after
+    /// observing token t: `alphas[t][h] = P(z_t = h | x_{1..t})`,
+    /// normalized at every step by the running scale.
     pub alphas: Vec<Vec<f32>>,
     /// Per-step log scale factors; their sum is the log-likelihood.
     pub log_scales: Vec<f64>,
@@ -38,39 +40,14 @@ impl Forward {
 ///
 /// Returns the scale. `next` must have length H. This is the L1 kernel's
 /// reference semantics (see python/compile/kernels/ref.py::forward_step).
-pub fn forward_step(hmm: &Hmm, alpha: &[f32], tok: usize, next: &mut [f32]) -> f64 {
-    let h_n = hmm.hidden();
-    debug_assert_eq!(alpha.len(), h_n);
-    debug_assert_eq!(next.len(), h_n);
-    debug_assert!(tok < hmm.vocab());
-
-    // Emission weighting + scale (one strided gather over emit column).
-    let mut weighted = vec![0f32; h_n];
-    let mut scale = 0f64;
-    for h in 0..h_n {
-        let w = alpha[h] as f64 * hmm.emit.at(h, tok) as f64;
-        weighted[h] = w as f32;
-        scale += w;
-    }
-    // Scales below ~1e-30 are "effectively impossible": the model gives
-    // this token no real mass (the paper's garbled-output failure mode
-    // after over-pruning/quantization). They are also numerically toxic:
-    // 1/scale overflows f32 and poisons the belief with inf*0 = NaN
-    // (caught by tests/robustness.rs). Uniform-reset and report 0.
-    if scale <= 1e-30 {
-        let u = 1.0 / h_n as f32;
-        for n in next.iter_mut() {
-            *n = u;
-        }
-        return 0.0;
-    }
-    let inv = (1.0 / scale) as f32;
-    for w in weighted.iter_mut() {
-        *w *= inv;
-    }
-    // next = weighted^T @ trans  (the 1xH · HxH MatMul hot spot).
-    hmm.trans.vecmat(&weighted, next);
-    scale
+///
+/// The implementation lives on [`HmmBackend`] (default method), so any
+/// model representation — dense FP32 or sparse quantized levels —
+/// advances beliefs the same way, including the uniform-reset guard for
+/// scales below ~1e-30 (a token the model gives no real mass; `1/scale`
+/// would overflow f32 and poison the belief with `inf·0 = NaN`).
+pub fn forward_step(model: &dyn HmmBackend, alpha: &[f32], tok: usize, next: &mut [f32]) -> f64 {
+    model.forward_step(alpha, tok, next)
 }
 
 /// Full scaled forward pass over `tokens`. Returns filtering

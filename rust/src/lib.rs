@@ -36,9 +36,10 @@
 //! - [`generate`] — the constrained beam decoder (honors per-request
 //!   deadlines via `DecodeConfig::deadline`, including during
 //!   constraint-table construction), and the sparsity-aware
-//!   constraint-table engine (`generate::product`) that builds the
-//!   HMM×DFA table over either the dense model or the sparse quantized
-//!   levels (`hmm::HmmBackend`).
+//!   constraint-table engine (`generate::product`). Both run over
+//!   `hmm::HmmBackend` — the dense FP32 model or the sparse quantized
+//!   levels — so a quantized server builds tables *and* scores beams
+//!   without ever reading dense weights.
 //! - `runtime` — PJRT execution of the AOT-lowered neural artifacts.
 //!   Compiled only with the off-by-default `pjrt` feature: the default
 //!   build is CPU-only and dependency-free, which is what CI gates.

@@ -58,8 +58,11 @@ dispatches; --fair-queue bounds each client's queue), --climit
 --hedge-ms (re-dispatch slow requests). The load driver spreads
 requests over --client-ids distinct client ids (default 1).
 
-Table engine (serve): --table-bits B builds constraint tables over
-the sparse quantized model (O(nnz) per step) instead of dense FP32;
+Model backend (serve): --table-bits B re-quantizes the serving model
+into sparse b-bit levels and runs the WHOLE request path over them —
+constraint-table builds and per-step beam scoring are both O(nnz)
+instead of O(H^2)/O(H*V), and no dense FP32 weight is ever read
+(the paper's >=99% weight compression, live in the server);
 --table-cache-mb bounds the byte-budgeted table cache;
 --table-threads parallelizes one build across DFA states.
 ";
@@ -166,6 +169,11 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         Some(bits) => return Err(format!("--table-bits expects 1..=16, got {bits}")),
         None => TableBackend::Dense,
     };
+    if let TableBackend::Quantized { bits } = table_backend {
+        log_info!(
+            "weight-sparse backend: table builds AND beam scoring over {bits}b sparse levels"
+        );
+    }
     let cfg = ServerConfig {
         workers,
         queue_capacity: args.usize("queue", 256)?,

@@ -16,9 +16,8 @@
 
 use crate::data::vocab::EOS;
 use crate::dfa::Dfa;
-use crate::generate::{ConstraintTable, DecodeConfig};
-use crate::hmm::forward::forward_step;
-use crate::hmm::Hmm;
+use crate::generate::{BuildOptions, ConstraintTable, DecodeConfig};
+use crate::hmm::HmmBackend;
 use crate::lm::LanguageModel;
 use crate::util::timer::PhaseTimers;
 
@@ -33,19 +32,21 @@ pub struct OpAccounting {
 }
 
 /// Instrumented variant of `generate::decode` (kept structurally in sync;
-/// the uninstrumented path stays clean for the serving hot loop).
+/// the uninstrumented path stays clean for the serving hot loop). Like
+/// the real decoder it reads weights only through the [`HmmBackend`].
 pub fn decode_profiled(
     lm: &dyn LanguageModel,
-    hmm: &Hmm,
+    model: &dyn HmmBackend,
     dfa: &Dfa,
     cfg: &DecodeConfig,
     timers: &PhaseTimers,
     acct: &mut OpAccounting,
 ) -> crate::generate::Generation {
-    let vocab = hmm.vocab();
-    let h_n = hmm.hidden();
+    let vocab = model.vocab();
+    let h_n = model.hidden();
     let table = timers.time("symbolic.table_build", || {
-        ConstraintTable::build(hmm, dfa, cfg.max_tokens)
+        ConstraintTable::build_with(model, dfa, cfg.max_tokens, &BuildOptions::default())
+            .expect("unbounded build cannot expire")
     });
     acct.symbolic_flops +=
         (cfg.max_tokens * dfa.n_states() * h_n * h_n * 2) as f64;
@@ -61,7 +62,7 @@ pub fn decode_profiled(
         tokens: Vec::new(),
         score: 0.0,
         dfa_state: dfa.start(),
-        alpha: hmm.init.clone(),
+        alpha: model.init().to_vec(),
     }];
     let mut done: Vec<(Vec<usize>, f64, u32)> = Vec::new();
     let mut lp = vec![0f32; vocab];
@@ -87,7 +88,7 @@ pub fn decode_profiled(
             });
             acct.symbolic_bytes += (h_n * 12) as f64;
             timers.time("symbolic.matmul", || {
-                hmm.emit.vecmat(&u, &mut w);
+                model.emit_vecmat(&u, &mut w);
             });
             acct.symbolic_flops += (h_n * vocab * 2) as f64;
             acct.symbolic_bytes += (h_n * vocab * 4) as f64; // streams emit once
@@ -98,7 +99,7 @@ pub fn decode_profiled(
                     let mut accum = 0f64;
                     for h in 0..h_n {
                         accum += beam.alpha[h] as f64
-                            * hmm.emit.at(h, tok as usize) as f64
+                            * model.emit_at(h, tok as usize) as f64
                             * c_exc[h] as f64;
                     }
                     w[tok as usize] = accum as f32;
@@ -108,7 +109,7 @@ pub fn decode_profiled(
             if dfa.is_accepting(eos_next) {
                 let mut accum = 0f64;
                 for h in 0..h_n {
-                    accum += beam.alpha[h] as f64 * hmm.emit.at(h, EOS) as f64;
+                    accum += beam.alpha[h] as f64 * model.emit_at(h, EOS) as f64;
                 }
                 w[EOS] = accum as f32;
             } else {
@@ -121,11 +122,12 @@ pub fn decode_profiled(
             let log_z = z.ln();
             for (x, (&lpx, &wx)) in lp.iter().zip(w.iter()).enumerate() {
                 if wx > 0.0 {
-                    candidates.push((
-                        bi,
-                        x,
-                        beam.score + lpx as f64 + cfg.lambda as f64 * ((wx as f64).ln() - log_z),
-                    ));
+                    let s =
+                        beam.score + lpx as f64 + cfg.lambda as f64 * ((wx as f64).ln() - log_z);
+                    if s.is_nan() {
+                        continue;
+                    }
+                    candidates.push((bi, x, s));
                 }
             }
         }
@@ -133,7 +135,7 @@ pub fn decode_profiled(
             break;
         }
         timers.time("coordinator.beam", || {
-            candidates.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+            candidates.sort_by(|a, b| b.2.total_cmp(&a.2));
             candidates.truncate(cfg.beam);
         });
         let mut next = Vec::with_capacity(cfg.beam);
@@ -149,7 +151,7 @@ pub fn decode_profiled(
             }
             let mut alpha_next = vec![0f32; h_n];
             timers.time("symbolic.matmul", || {
-                forward_step(hmm, &parent.alpha, tok, &mut alpha_next);
+                model.forward_step(&parent.alpha, tok, &mut alpha_next);
             });
             acct.symbolic_flops += (h_n * h_n * 2) as f64;
             acct.symbolic_bytes += (h_n * h_n * 4) as f64;
@@ -160,14 +162,12 @@ pub fn decode_profiled(
             break;
         }
     }
-    let best_done = done
-        .into_iter()
-        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let best_done = done.into_iter().max_by(|a, b| a.1.total_cmp(&b.1));
     let (mut tokens, score) = match best_done {
         Some((t, s, _)) => (t, s),
         None => beams
             .into_iter()
-            .max_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+            .max_by(|a, b| a.score.total_cmp(&b.score))
             .map(|b| (b.tokens, b.score))
             .unwrap_or((vec![EOS], f64::NEG_INFINITY)),
     };
@@ -182,7 +182,7 @@ pub fn decode_profiled(
 /// accounting).
 pub fn profile_run(
     lm: &dyn LanguageModel,
-    hmm: &Hmm,
+    model: &dyn HmmBackend,
     corpus: &crate::data::Corpus,
     items: &[crate::data::EvalItem],
     cfg: &DecodeConfig,
@@ -196,7 +196,7 @@ pub fn profile_run(
             .map(|c| vec![corpus.vocab.id(c)])
             .collect();
         let dfa = Dfa::from_keywords(&keywords, corpus.vocab.len());
-        let _ = decode_profiled(lm, hmm, &dfa, cfg, &timers, &mut acct);
+        let _ = decode_profiled(lm, model, &dfa, cfg, &timers, &mut acct);
     }
     (timers, acct)
 }

@@ -115,6 +115,10 @@ impl PackedMat {
     /// slice of the accumulator (`iter_mut`), which elides the per-element
     /// bounds check the original index-based loop paid, and zero words
     /// (the common case after Norm-Q auto-pruning) skip in one test.
+    ///
+    /// Fully-pruned rows (every level zero) dequantize to *uniform*,
+    /// matching [`PackedMat::to_mat`]: their mass folds into one rank-1
+    /// pass at the end instead of silently dropping.
     pub fn vecmat(&self, v: &[f32], out: &mut [f32]) {
         assert_eq!(v.len(), self.rows);
         assert_eq!(out.len(), self.cols);
@@ -123,12 +127,19 @@ impl PackedMat {
         let wpr = self.words_per_row();
         let mask = (1u64 << bits) - 1;
         let mut acc = vec![0f64; self.cols];
+        // Σ over dead rows of v[r]/cols (row_scale is 1/cols exactly
+        // when the row's level sum was 0).
+        let mut uniform = 0f64;
         for (r, &vr) in v.iter().enumerate() {
             if vr == 0.0 {
                 continue;
             }
             let scaled = (vr * self.row_scale[r]) as f64;
             let row_words = &self.words[r * wpr..(r + 1) * wpr];
+            if row_words.iter().all(|&w| w == 0) {
+                uniform += scaled;
+                continue;
+            }
             for (wi, &w0) in row_words.iter().enumerate() {
                 if w0 == 0 {
                     continue;
@@ -143,6 +154,11 @@ impl PackedMat {
                     *slot += scaled * (w & mask) as f64;
                     w >>= bits;
                 }
+            }
+        }
+        if uniform != 0.0 {
+            for a in acc.iter_mut() {
+                *a += uniform;
             }
         }
         for (o, a) in out.iter_mut().zip(acc.iter()) {
@@ -205,11 +221,22 @@ impl SparseQMat {
         self.levels.len()
     }
 
-    /// out = v @ dequant(self) over non-zeros only.
+    /// out = v @ dequant(self) over non-zeros only — the decode-path
+    /// acceptance product (`u @ emit`) and forward step (`v @ trans`).
+    ///
+    /// Rows with no stored level dequantize to *uniform* (matching
+    /// [`SparseQMat::to_mat`]/[`SparseQMat::matvec`]): their
+    /// contribution is the same `v[r]/cols` in every column, folded
+    /// into one rank-1 pass at the end, so the sparse backend and the
+    /// dense dequantization of the same levels agree even when
+    /// quantization auto-pruned a whole row.
     pub fn vecmat(&self, v: &[f32], out: &mut [f32]) {
         assert_eq!(v.len(), self.rows);
         assert_eq!(out.len(), self.cols);
         let mut acc = vec![0f64; self.cols];
+        // Σ over dead rows of v[r]/cols (row_scale is 1/cols exactly
+        // when the row stored nothing).
+        let mut uniform = 0f64;
         for (r, &vr) in v.iter().enumerate() {
             if vr == 0.0 {
                 continue;
@@ -217,8 +244,17 @@ impl SparseQMat {
             let scaled = (vr * self.row_scale[r]) as f64;
             let lo = self.row_ptr[r] as usize;
             let hi = self.row_ptr[r + 1] as usize;
+            if lo == hi {
+                uniform += scaled;
+                continue;
+            }
             for i in lo..hi {
                 acc[self.col_idx[i] as usize] += scaled * self.levels[i] as f64;
+            }
+        }
+        if uniform != 0.0 {
+            for a in acc.iter_mut() {
+                *a += uniform;
             }
         }
         for (o, a) in out.iter_mut().zip(acc.iter()) {
@@ -413,13 +449,54 @@ mod tests {
             let mut got_s = vec![0f32; 19];
             sparse.vecmat(&v, &mut got_s);
             for c in 0..19 {
-                // dense to_mat uses uniform for dead rows; vecmat treats
-                // dead-row levels as zero — only differs if a dead row has
-                // nonzero input AND the row is dead. Tolerate small diff.
-                assert!((want[c] - got_p[c]).abs() < 1e-3, "packed c={c}");
-                assert!((want[c] - got_s[c]).abs() < 1e-3, "sparse c={c}");
+                // Both vecmats dequantize dead rows to uniform, matching
+                // to_mat — only float rounding order differs.
+                assert!((want[c] - got_p[c]).abs() < 1e-4, "packed c={c}");
+                assert!((want[c] - got_s[c]).abs() < 1e-4, "sparse c={c}");
             }
         });
+    }
+
+    #[test]
+    fn vecmat_dead_rows_read_uniform_in_both_layouts() {
+        // Row 0 is uniform over 32 columns: at 3 bits every level
+        // quantizes to zero (level(1/32 · 7) = 0), so the row is fully
+        // auto-pruned. Row 1 keeps real mass. The dead row's input must
+        // spread uniformly, matching the dense dequantization.
+        let mut m = Mat::zeros(2, 32);
+        for c in 0..32 {
+            m.set(0, c, 1.0 / 32.0);
+        }
+        m.set(1, 3, 0.7);
+        m.set(1, 9, 0.3);
+        let v = [0.4f32, 0.6];
+        for (label, got) in [
+            ("sparse", {
+                let sparse = SparseQMat::from_mat(&m, 3);
+                assert_eq!(sparse.row_ptr[1], 0, "row 0 must auto-prune");
+                let mut out = vec![0f32; 32];
+                sparse.vecmat(&v, &mut out);
+                out
+            }),
+            ("packed", {
+                let packed = PackedMat::from_mat(&m, 3);
+                let mut out = vec![0f32; 32];
+                packed.vecmat(&v, &mut out);
+                out
+            }),
+        ] {
+            let dense = SparseQMat::from_mat(&m, 3).to_mat();
+            let mut want = vec![0f32; 32];
+            dense.vecmat(&v, &mut want);
+            for c in 0..32 {
+                assert!(
+                    (want[c] - got[c]).abs() < 1e-6,
+                    "{label} c={c} want={} got={}",
+                    want[c],
+                    got[c]
+                );
+            }
+        }
     }
 
     #[test]

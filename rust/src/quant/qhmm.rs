@@ -3,16 +3,18 @@
 //!
 //! [`QuantizedHmm`] keeps `trans` and `emit` as [`SparseQMat`]s (CSR
 //! over non-zero b-bit levels, per-row scale `1/Σ levels` — Norm-Q's
-//! row normalization folded into dequantization) and implements
-//! [`HmmBackend`], so the constraint-table engine in
-//! [`crate::generate::product`] runs its recursion directly over the
-//! levels: O(nnz) per transition step, no dense FP32 matrices ever
-//! materialized on the table-build path.
+//! row normalization folded into dequantization) and implements the
+//! full [`HmmBackend`] surface, so both hot consumers run directly
+//! over the levels: the constraint-table engine in
+//! [`crate::generate::product`] (O(nnz) per transition step) and the
+//! beam loop in [`crate::generate::decode_with_table`] (O(nnz) per
+//! acceptance product and forward step). A server configured with a
+//! quantized backend never materializes dense FP32 matrices anywhere
+//! on the request path.
 //!
-//! [`QuantizedHmm::to_hmm`] exists for the decode path and for tests
-//! (the dense dequantized model is the reference the equivalence
-//! proptests compare against); the serving coordinator only calls it
-//! when configured with a dense table backend.
+//! [`QuantizedHmm::to_hmm`] exists for tests and offline analysis:
+//! the dense dequantized model is the reference the equivalence
+//! proptests (and `tests/decode_equivalence.rs`) compare against.
 
 use crate::hmm::{Hmm, HmmBackend};
 use crate::quant::normq;
@@ -77,8 +79,28 @@ impl HmmBackend for QuantizedHmm {
         self.trans.rows
     }
 
+    fn vocab(&self) -> usize {
+        self.emit.cols
+    }
+
+    fn init(&self) -> &[f32] {
+        &self.init
+    }
+
     fn trans_matvec(&self, v: &[f32], out: &mut [f32]) {
         self.trans.matvec(v, out);
+    }
+
+    fn trans_vecmat(&self, v: &[f32], out: &mut [f32]) {
+        self.trans.vecmat(v, out);
+    }
+
+    fn emit_vecmat(&self, u: &[f32], out: &mut [f32]) {
+        self.emit.vecmat(u, out);
+    }
+
+    fn emit_at(&self, h: usize, tok: usize) -> f32 {
+        self.emit.value(h, tok)
     }
 
     fn emit_col(&self, tok: usize) -> Vec<(u32, f32)> {
@@ -141,6 +163,63 @@ mod tests {
                 if dense.emit.at(h, tok) != 0.0 {
                     assert!(listed.contains(&(h as u32)), "tok={tok} h={h} missing");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_ops_match_the_dense_dequantization() {
+        let mut rng = Rng::seeded(25);
+        let hmm = Hmm::random(7, 30, 0.2, 0.1, &mut rng);
+        let q = QuantizedHmm::from_hmm(&hmm, 8);
+        let dense = q.to_hmm();
+        assert_eq!(HmmBackend::vocab(&q), 30);
+        assert_eq!(HmmBackend::init(&q), &q.init[..]);
+        for h in 0..7 {
+            for tok in [0usize, 11, 29] {
+                assert!(
+                    (q.emit_at(h, tok) - dense.emit.at(h, tok)).abs() < 1e-6,
+                    "h={h} tok={tok}"
+                );
+            }
+        }
+        let u = rng.dirichlet_symmetric(7, 1.0);
+        let mut want = vec![0f32; 30];
+        dense.emit.vecmat(&u, &mut want);
+        let mut got = vec![0f32; 30];
+        q.emit_vecmat(&u, &mut got);
+        for c in 0..30 {
+            assert!((want[c] - got[c]).abs() < 1e-5, "c={c}");
+        }
+        let mut want_t = vec![0f32; 7];
+        dense.trans.vecmat(&u, &mut want_t);
+        let mut got_t = vec![0f32; 7];
+        q.trans_vecmat(&u, &mut got_t);
+        for h in 0..7 {
+            assert!((want_t[h] - got_t[h]).abs() < 1e-5, "h={h}");
+        }
+    }
+
+    #[test]
+    fn forward_step_matches_dense_backend() {
+        let mut rng = Rng::seeded(26);
+        let hmm = Hmm::random(6, 18, 0.3, 0.2, &mut rng);
+        let q = QuantizedHmm::from_hmm(&hmm, 8);
+        let dense = q.to_hmm();
+        let alpha = rng.dirichlet_symmetric(6, 1.0);
+        for tok in 0..18 {
+            let mut next_q = vec![0f32; 6];
+            let mut next_d = vec![0f32; 6];
+            let s_q = q.forward_step(&alpha, tok, &mut next_q);
+            let s_d = HmmBackend::forward_step(&dense, &alpha, tok, &mut next_d);
+            assert!((s_q - s_d).abs() < 1e-6, "tok={tok} scale {s_q} vs {s_d}");
+            for h in 0..6 {
+                assert!(
+                    (next_q[h] - next_d[h]).abs() < 1e-4,
+                    "tok={tok} h={h} {} vs {}",
+                    next_q[h],
+                    next_d[h]
+                );
             }
         }
     }

@@ -156,24 +156,35 @@ impl<S> FairQueue<S> {
     }
 
     /// Grant dispatch slots to tickets while both are available.
-    fn pump(&self, st: &mut FqState) {
+    /// Returns how many tickets were newly granted, so the caller can
+    /// wake exactly that many parked waiters (`notify_one` per grant)
+    /// instead of broadcasting to every parked thread — at high client
+    /// counts a `notify_all` per slot release is a thundering herd:
+    /// every waiter wakes, contends the state mutex, finds its ticket
+    /// ungranted and parks again.
+    fn pump(&self, st: &mut FqState) -> usize {
+        let mut granted = 0;
         while st.active < self.concurrency {
             match drr_pick(st) {
                 Some(ticket) => {
                     st.active += 1;
                     st.granted.insert(ticket);
+                    granted += 1;
                 }
                 None => break,
             }
         }
+        granted
     }
 
     fn release_slot(&self) {
         let mut st = self.state.lock().unwrap();
         st.active -= 1;
-        self.pump(&mut st);
+        let granted = self.pump(&mut st);
         drop(st);
-        self.wakeup.notify_all();
+        for _ in 0..granted {
+            self.wakeup.notify_one();
+        }
     }
 }
 
@@ -234,11 +245,27 @@ where
             st.next_ticket += 1;
             st.clients[idx].waiting.push_back(ticket);
             st.clients[idx].stats.queue_depth.fetch_add(1, Ordering::Relaxed);
-            self.pump(&mut st);
-            // The pump may have granted other waiters' tickets too.
-            self.wakeup.notify_all();
+            // The pump may grant several tickets (ours among them, or
+            // other waiters'): wake one parked thread per grant. A
+            // condvar cannot target a *specific* waiter, so single
+            // wakes need a baton: any thread that wakes without its
+            // own grant being ready re-notifies before parking again,
+            // and a thread that takes its grant while more grants are
+            // outstanding passes the wake along — no grant is ever
+            // left with every candidate thread asleep (asserted by
+            // the lost-wakeup stress test in tests/fairness.rs).
+            let granted = self.pump(&mut st);
+            for _ in 0..granted {
+                self.wakeup.notify_one();
+            }
             while !st.granted.remove(&ticket) {
                 st = self.wakeup.wait(st).unwrap();
+                if !st.granted.is_empty() && !st.granted.contains(&ticket) {
+                    self.wakeup.notify_one();
+                }
+            }
+            if !st.granted.is_empty() {
+                self.wakeup.notify_one();
             }
         }
         let _slot = SlotGuard { fq: self };

@@ -1,0 +1,328 @@
+//! The bench-regression gate: diff two bench-trajectory artifacts
+//! (`BENCH_tables.json` / `BENCH_decode.json`) and flag slowdowns.
+//!
+//! Each artifact is `{bench, quick, scenarios: [..]}` where every
+//! scenario object mixes *identity* fields (hidden, bits, alpha, …)
+//! with *timing* fields (`*_ms`, plus the derived `speedup`). The gate
+//! matches scenarios across runs by their identity fields — so adding,
+//! removing or re-parameterizing scenarios never fails the gate, only
+//! a matched scenario getting slower does — and reports a regression
+//! when any timing field exceeds the previous run's by more than the
+//! threshold (CI uses 25%). Runs at different scales (`quick` flag
+//! mismatch) are incomparable and skip cleanly.
+//!
+//! Used by `src/bin/bench_gate.rs` in the CI bench-smoke job, which
+//! downloads the previous run's artifact and fails the job on any
+//! regression — the trajectory bites instead of just accumulating.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Fields that carry measurements rather than scenario identity —
+/// timings, derived ratios, and *measured model properties* (sparsity,
+/// table size). Measured floats must stay out of the match key: a
+/// last-ulp shift from an unrelated change would silently unmatch
+/// every scenario and turn the gate into a no-op.
+fn is_measured_field(key: &str) -> bool {
+    key.ends_with("_ms") || key.ends_with("_kb") || key == "speedup" || key == "sparsity"
+}
+
+/// The identity of one scenario: its configured (non-measured) fields,
+/// canonically serialized (object keys are sorted, so this is
+/// deterministic).
+fn scenario_key(scenario: &Json) -> Option<String> {
+    match scenario {
+        Json::Obj(map) => {
+            let identity: BTreeMap<String, Json> = map
+                .iter()
+                .filter(|(k, _)| !is_measured_field(k))
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect();
+            Some(Json::Obj(identity).to_string())
+        }
+        _ => None,
+    }
+}
+
+/// One timing field of one matched scenario that got slower than the
+/// threshold allows.
+#[derive(Clone, Debug)]
+pub struct Regression {
+    /// Canonical identity of the scenario (its non-timing fields).
+    pub scenario: String,
+    /// The timing field that regressed (e.g. `sparse_ms`).
+    pub field: String,
+    /// Previous run's value, milliseconds.
+    pub prev_ms: f64,
+    /// Current run's value, milliseconds.
+    pub cur_ms: f64,
+}
+
+impl Regression {
+    /// Slowdown ratio (current / previous).
+    pub fn ratio(&self) -> f64 {
+        self.cur_ms / self.prev_ms.max(1e-12)
+    }
+}
+
+/// What the gate found when diffing two artifacts.
+#[derive(Clone, Debug, Default)]
+pub struct GateReport {
+    /// Matched scenarios compared field-by-field.
+    pub compared: usize,
+    /// Current scenarios with no counterpart in the previous run.
+    pub unmatched: usize,
+    /// Timing fields beyond the slowdown threshold.
+    pub regressions: Vec<Regression>,
+    /// Human-readable notes (scale mismatch, best improvement, …).
+    pub notes: Vec<String>,
+}
+
+impl GateReport {
+    /// True when no matched timing field regressed.
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+}
+
+/// Diff `cur` against `prev`, flagging any matched timing field where
+/// `cur > prev · (1 + threshold)`. Returns `Err` only for artifacts
+/// the gate cannot read (missing/NaN fields are skipped, not errors:
+/// a malformed *previous* artifact must not wedge the pipeline).
+pub fn gate(prev: &Json, cur: &Json, threshold: f64) -> Result<GateReport, String> {
+    let mut report = GateReport::default();
+    let cur_scenarios = cur
+        .get("scenarios")
+        .and_then(Json::as_arr)
+        .ok_or("current artifact has no scenarios array")?;
+    let prev_scenarios = match prev.get("scenarios").and_then(Json::as_arr) {
+        Some(s) => s,
+        None => {
+            report
+                .notes
+                .push("previous artifact has no scenarios array — nothing to compare".into());
+            report.unmatched = cur_scenarios.len();
+            return Ok(report);
+        }
+    };
+    if prev.get("bench") != cur.get("bench") {
+        return Err(format!(
+            "artifact mismatch: previous is {:?}, current is {:?}",
+            prev.get("bench"),
+            cur.get("bench")
+        ));
+    }
+    if prev.get("quick").and_then(Json::as_bool) != cur.get("quick").and_then(Json::as_bool) {
+        report
+            .notes
+            .push("quick-mode mismatch between runs — scales are incomparable, skipping".into());
+        report.unmatched = cur_scenarios.len();
+        return Ok(report);
+    }
+
+    let mut prev_by_key: BTreeMap<String, &Json> = BTreeMap::new();
+    for s in prev_scenarios {
+        if let Some(k) = scenario_key(s) {
+            prev_by_key.insert(k, s);
+        }
+    }
+
+    let mut best_improvement: Option<(String, f64)> = None;
+    for scenario in cur_scenarios {
+        let key = match scenario_key(scenario) {
+            Some(k) => k,
+            None => continue,
+        };
+        let Some(prev_scenario) = prev_by_key.get(&key) else {
+            report.unmatched += 1;
+            continue;
+        };
+        report.compared += 1;
+        let Json::Obj(fields) = scenario else { continue };
+        for (field, value) in fields.iter().filter(|(k, _)| k.ends_with("_ms")) {
+            let (Some(cur_ms), Some(prev_ms)) = (
+                value.as_f64(),
+                prev_scenario.get(field).and_then(Json::as_f64),
+            ) else {
+                continue;
+            };
+            if !cur_ms.is_finite() || !prev_ms.is_finite() || prev_ms <= 0.0 {
+                continue;
+            }
+            if cur_ms > prev_ms * (1.0 + threshold) {
+                report.regressions.push(Regression {
+                    scenario: key.clone(),
+                    field: field.clone(),
+                    prev_ms,
+                    cur_ms,
+                });
+            } else if cur_ms < prev_ms {
+                let gain = prev_ms / cur_ms.max(1e-12);
+                let better = match &best_improvement {
+                    Some((_, g)) => gain > *g,
+                    None => true,
+                };
+                if better {
+                    best_improvement = Some((format!("{key} {field}"), gain));
+                }
+            }
+        }
+    }
+    if let Some((what, gain)) = best_improvement {
+        report
+            .notes
+            .push(format!("best improvement: {what} {gain:.2}x faster"));
+    }
+    // Both runs have scenarios but none matched: the baseline is
+    // incomparable (identity fields changed wholesale). Say so loudly —
+    // a gate that silently compares nothing reads as green.
+    if report.compared == 0 && !cur_scenarios.is_empty() && !prev_scenarios.is_empty() {
+        report.notes.push(format!(
+            "WARNING: 0 of {} scenario(s) matched the baseline — identity fields changed; \
+             the gate checked nothing this run",
+            cur_scenarios.len()
+        ));
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact(quick: bool, scenarios: Vec<Json>) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str("decode")),
+            ("quick", Json::Bool(quick)),
+            ("scenarios", Json::arr(scenarios)),
+        ])
+    }
+
+    fn scenario(hidden: f64, bits: f64, dense_ms: f64, sparse_ms: f64) -> Json {
+        Json::obj(vec![
+            ("hidden", Json::num(hidden)),
+            ("bits", Json::num(bits)),
+            ("dense_ms", Json::num(dense_ms)),
+            ("sparse_ms", Json::num(sparse_ms)),
+            ("speedup", Json::num(dense_ms / sparse_ms)),
+        ])
+    }
+
+    #[test]
+    fn unchanged_runs_pass() {
+        let a = artifact(true, vec![scenario(64.0, 8.0, 10.0, 2.0)]);
+        let report = gate(&a, &a, 0.25).unwrap();
+        assert!(report.passed());
+        assert_eq!(report.compared, 1);
+        assert_eq!(report.unmatched, 0);
+    }
+
+    #[test]
+    fn slowdown_beyond_threshold_is_a_regression() {
+        let prev = artifact(true, vec![scenario(64.0, 8.0, 10.0, 2.0)]);
+        let cur = artifact(true, vec![scenario(64.0, 8.0, 10.0, 2.6)]);
+        let report = gate(&prev, &cur, 0.25).unwrap();
+        assert!(!report.passed());
+        assert_eq!(report.regressions.len(), 1);
+        let r = &report.regressions[0];
+        assert_eq!(r.field, "sparse_ms");
+        assert!((r.ratio() - 1.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slowdown_within_threshold_passes() {
+        let prev = artifact(true, vec![scenario(64.0, 8.0, 10.0, 2.0)]);
+        let cur = artifact(true, vec![scenario(64.0, 8.0, 11.0, 2.4)]);
+        assert!(gate(&prev, &cur, 0.25).unwrap().passed());
+    }
+
+    #[test]
+    fn speedup_field_is_never_gated() {
+        // speedup is derived from the ms fields; a *rising* speedup
+        // (sparse got faster) must not read as a regression.
+        let prev = artifact(true, vec![scenario(64.0, 8.0, 10.0, 4.0)]);
+        let cur = artifact(true, vec![scenario(64.0, 8.0, 10.0, 1.0)]);
+        let report = gate(&prev, &cur, 0.25).unwrap();
+        assert!(report.passed());
+    }
+
+    #[test]
+    fn measured_fields_do_not_break_scenario_matching() {
+        // sparsity/table_kb are measured, not configured: a last-ulp
+        // drift must not unmatch the scenario (which would turn the
+        // gate into a silent no-op), and the timing comparison must
+        // still fire.
+        let with_sparsity = |sparsity: f64, sparse_ms: f64| {
+            Json::obj(vec![
+                ("hidden", Json::num(64.0)),
+                ("bits", Json::num(8.0)),
+                ("sparsity", Json::num(sparsity)),
+                ("table_kb", Json::num(112.0 + sparsity)),
+                ("sparse_ms", Json::num(sparse_ms)),
+            ])
+        };
+        let prev = artifact(true, vec![with_sparsity(0.9231, 2.0)]);
+        let cur = artifact(true, vec![with_sparsity(0.9230, 2.6)]);
+        let report = gate(&prev, &cur, 0.25).unwrap();
+        assert_eq!(report.compared, 1, "sparsity drift must not unmatch");
+        assert_eq!(report.regressions.len(), 1);
+    }
+
+    #[test]
+    fn fully_unmatched_runs_warn_loudly() {
+        let prev = artifact(true, vec![scenario(64.0, 8.0, 10.0, 2.0)]);
+        let cur = artifact(true, vec![scenario(96.0, 3.0, 10.0, 2.0)]);
+        let report = gate(&prev, &cur, 0.25).unwrap();
+        assert_eq!(report.compared, 0);
+        assert!(
+            report.notes.iter().any(|n| n.contains("WARNING")),
+            "a gate that compared nothing must say so: {:?}",
+            report.notes
+        );
+    }
+
+    #[test]
+    fn reparameterized_scenarios_skip_instead_of_failing() {
+        let prev = artifact(true, vec![scenario(64.0, 8.0, 10.0, 2.0)]);
+        let cur = artifact(true, vec![scenario(96.0, 8.0, 99.0, 99.0)]);
+        let report = gate(&prev, &cur, 0.25).unwrap();
+        assert!(report.passed());
+        assert_eq!(report.compared, 0);
+        assert_eq!(report.unmatched, 1);
+    }
+
+    #[test]
+    fn quick_mode_mismatch_skips_cleanly() {
+        let prev = artifact(false, vec![scenario(64.0, 8.0, 1.0, 1.0)]);
+        let cur = artifact(true, vec![scenario(64.0, 8.0, 99.0, 99.0)]);
+        let report = gate(&prev, &cur, 0.25).unwrap();
+        assert!(report.passed());
+        assert_eq!(report.compared, 0);
+    }
+
+    #[test]
+    fn different_benches_refuse_to_compare() {
+        let mut prev = artifact(true, vec![]);
+        if let Json::Obj(m) = &mut prev {
+            m.insert("bench".into(), Json::str("tables"));
+        }
+        let cur = artifact(true, vec![]);
+        assert!(gate(&prev, &cur, 0.25).is_err());
+    }
+
+    #[test]
+    fn round_trips_through_serialization() {
+        // The gate consumes artifacts exactly as the benches write
+        // them: serialize, reparse, diff.
+        let prev =
+            artifact(true, vec![scenario(64.0, 3.0, 8.0, 1.5), scenario(64.0, 8.0, 9.0, 2.0)]);
+        let cur =
+            artifact(true, vec![scenario(64.0, 3.0, 8.1, 3.0), scenario(64.0, 8.0, 9.0, 2.0)]);
+        let prev = Json::parse(&prev.to_string()).unwrap();
+        let cur = Json::parse(&cur.to_string()).unwrap();
+        let report = gate(&prev, &cur, 0.25).unwrap();
+        assert_eq!(report.compared, 2);
+        assert_eq!(report.regressions.len(), 1, "{:?}", report.regressions);
+        assert_eq!(report.regressions[0].field, "sparse_ms");
+    }
+}

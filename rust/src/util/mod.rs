@@ -3,6 +3,7 @@
 //! `pjrt` feature — so JSON, CLI parsing, RNG, thread pools, timing and
 //! property testing are implemented here).
 
+pub mod benchgate;
 pub mod cli;
 pub mod json;
 pub mod logging;

@@ -121,6 +121,17 @@ pub fn bench_seconds(warmup: usize, iters: usize, mut f: impl FnMut()) -> Vec<f6
     out
 }
 
+/// Best-of-`reps` wall time of `f`, in milliseconds (one warmup run) —
+/// the scenario-timing policy shared by the bench-trajectory drivers
+/// (`bench_tables`, `bench_decode`), kept in one place so the two CI
+/// artifacts the regression gate diffs are measured identically.
+pub fn time_best_ms(reps: usize, f: impl FnMut()) -> f64 {
+    bench_seconds(1, reps.max(1), f)
+        .into_iter()
+        .fold(f64::INFINITY, f64::min)
+        * 1e3
+}
+
 /// Format seconds human-readably (ns/µs/ms/s).
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-6 {

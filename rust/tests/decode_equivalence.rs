@@ -1,0 +1,147 @@
+//! Integration: the weight-sparse decode path is equivalent to dense.
+//!
+//! The beam loop reads weights only through `hmm::HmmBackend`, so a
+//! [`QuantizedHmm`] (sparse non-zero levels) and the dense
+//! materialization of the *same* levels (`QuantizedHmm::to_hmm`) must
+//! produce the same generation — the two differ only in float rounding
+//! order (dense rounds each weight to f32 before the f64 dot; sparse
+//! folds the row scale once). Covered here:
+//!
+//! - property: same token sequence across random models, bit widths
+//!   and sparsity levels, scores within float-path tolerance;
+//! - the all-zero-emission-row edge (a fully auto-pruned row must
+//!   dequantize to uniform in both representations);
+//! - the timed-out-mid-build edge (both backends answer `timed_out`
+//!   without decoding);
+//! - high bit widths vs the *original* FP32 model: 12-bit Norm-Q is
+//!   quality-lossless (paper Table II), so constraint satisfaction
+//!   must match the uncompressed model.
+
+use normq::data::Corpus;
+use normq::dfa::Dfa;
+use normq::generate::{decode, DecodeConfig};
+use normq::hmm::Hmm;
+use normq::lm::NgramLm;
+use normq::quant::QuantizedHmm;
+use normq::util::proptest::Prop;
+use normq::util::rng::Rng;
+
+fn corpus_and_lm() -> (Corpus, NgramLm) {
+    let corpus = Corpus::small(500);
+    let data = corpus.sample_token_corpus(400, 17);
+    let lm = NgramLm::train(&data, corpus.vocab.len());
+    (corpus, lm)
+}
+
+/// Sparse-backend decode equals dense-dequantization decode: same
+/// token sequence, same satisfaction, score within float-path
+/// tolerance — across hidden sizes, sparsity regimes and bit widths
+/// (including 12 bits, where quantization itself is near-lossless).
+#[test]
+fn quantized_backend_decode_matches_dense_dequantization() {
+    let (corpus, lm) = corpus_and_lm();
+    Prop::new(10, 0xD0DE).run("decode-sparse-vs-dense", |rng, _| {
+        let h = rng.range(4, 12);
+        let alpha = [0.05, 0.3, 1.0][rng.below_usize(3)];
+        let hmm = Hmm::random(h, corpus.vocab.len(), alpha, alpha, rng);
+        let bits = [3u32, 8, 12][rng.below_usize(3)];
+        let q = QuantizedHmm::from_hmm(&hmm, bits);
+        let dense = q.to_hmm();
+        let kw = corpus.vocab.id(&corpus.lexicon.nouns[rng.below_usize(4)]);
+        let dfa = Dfa::from_keywords(&[vec![kw]], corpus.vocab.len());
+        let cfg = DecodeConfig { beam: 4, max_tokens: 10, ..Default::default() };
+        let gen_sparse = decode(&lm, &q, &dfa, &cfg);
+        let gen_dense = decode(&lm, &dense, &dfa, &cfg);
+        assert_eq!(
+            gen_sparse.tokens, gen_dense.tokens,
+            "bits={bits} h={h} alpha={alpha}: token sequences diverged"
+        );
+        assert_eq!(gen_sparse.satisfied, gen_dense.satisfied);
+        let d = (gen_sparse.score - gen_dense.score).abs();
+        assert!(
+            d < 1e-3 || (gen_sparse.score.is_infinite() && gen_dense.score.is_infinite()),
+            "bits={bits} h={h}: score diff {d}"
+        );
+    });
+}
+
+/// The all-zero-row edge: a uniform emission row auto-prunes to no
+/// stored levels at 3 bits; the sparse backend must spread its belief
+/// mass uniformly (matching the dense dequantization) rather than
+/// silently dropping it, and decode must stay in agreement.
+#[test]
+fn all_zero_emission_row_decodes_identically() {
+    let (corpus, lm) = corpus_and_lm();
+    let mut rng = Rng::seeded(0xA110);
+    let v = corpus.vocab.len();
+    let mut hmm = Hmm::random(6, v, 0.3, 0.2, &mut rng);
+    for c in 0..v {
+        hmm.emit.set(2, c, 1.0 / v as f32);
+    }
+    let q = QuantizedHmm::from_hmm(&hmm, 3);
+    let lo = q.emit.row_ptr[2];
+    let hi = q.emit.row_ptr[3];
+    assert_eq!(lo, hi, "uniform row must fully auto-prune at 3 bits");
+    let dense = q.to_hmm();
+    let kw = corpus.vocab.id(&corpus.lexicon.nouns[0]);
+    let dfa = Dfa::from_keywords(&[vec![kw]], v);
+    let cfg = DecodeConfig { beam: 4, max_tokens: 10, ..Default::default() };
+    let gen_sparse = decode(&lm, &q, &dfa, &cfg);
+    let gen_dense = decode(&lm, &dense, &dfa, &cfg);
+    assert_eq!(gen_sparse.tokens, gen_dense.tokens);
+    assert_eq!(gen_sparse.satisfied, gen_dense.satisfied);
+}
+
+/// The timed-out-mid-build edge: an already-expired deadline must
+/// abandon the table build and answer `timed_out` with no tokens on
+/// both backends — the sparse path takes the same early exit.
+#[test]
+fn expired_deadline_times_out_on_both_backends() {
+    let (corpus, lm) = corpus_and_lm();
+    let mut rng = Rng::seeded(0xDEAD);
+    let hmm = Hmm::random(6, corpus.vocab.len(), 0.3, 0.2, &mut rng);
+    let q = QuantizedHmm::from_hmm(&hmm, 8);
+    let dense = q.to_hmm();
+    let kw = corpus.vocab.id(&corpus.lexicon.verbs[0]);
+    let dfa = Dfa::from_keywords(&[vec![kw]], corpus.vocab.len());
+    let cfg = DecodeConfig {
+        beam: 4,
+        max_tokens: 12,
+        deadline: Some(std::time::Instant::now()),
+        ..Default::default()
+    };
+    for (label, gen) in [
+        ("sparse", decode(&lm, &q, &dfa, &cfg)),
+        ("dense", decode(&lm, &dense, &dfa, &cfg)),
+    ] {
+        assert!(gen.timed_out, "{label} backend must time out");
+        assert!(gen.tokens.is_empty(), "{label} backend decoded anyway");
+        assert!(!gen.satisfied);
+    }
+}
+
+/// High bit widths are quality-lossless (paper Table II): a 12-bit
+/// quantized backend must satisfy the constraint exactly when the
+/// original uncompressed FP32 model does.
+#[test]
+fn high_bits_preserve_constraint_satisfaction_vs_fp32() {
+    let (corpus, lm) = corpus_and_lm();
+    let data = corpus.sample_token_corpus(400, 17);
+    let mut rng = Rng::seeded(0x12B);
+    let mut hmm = Hmm::random(10, corpus.vocab.len(), 0.5, 0.5, &mut rng);
+    for _ in 0..4 {
+        hmm = normq::hmm::em::em_step(&hmm, &data, 4, 1e-9).0;
+    }
+    let q = QuantizedHmm::from_hmm(&hmm, 12);
+    let cfg = DecodeConfig { beam: 6, max_tokens: 16, ..Default::default() };
+    for i in 0..3 {
+        let kw = corpus.vocab.id(&corpus.lexicon.nouns[i]);
+        let dfa = Dfa::from_keywords(&[vec![kw]], corpus.vocab.len());
+        let gen_fp32 = decode(&lm, &hmm, &dfa, &cfg);
+        let gen_q = decode(&lm, &q, &dfa, &cfg);
+        assert_eq!(
+            gen_fp32.satisfied, gen_q.satisfied,
+            "kw {i}: 12-bit Norm-Q changed constraint satisfaction"
+        );
+    }
+}

@@ -98,6 +98,56 @@ fn light_client_completes_while_heavy_client_absorbs_sheds() {
     assert_eq!(metrics.client("heavy").queue_depth.load(Ordering::Relaxed), 0);
 }
 
+/// Lost-wakeup regression for the single-wake FairQueue: slot releases
+/// now `notify_one` per grant (plus baton passing) instead of
+/// broadcasting to every parked waiter. If any wakeup were lost, some
+/// waiter would park forever and the thread scope would never join —
+/// the harness timeout turns that into a failure. Many clients × few
+/// slots maximizes parked waiters per release, the regime where the
+/// old broadcast was a thundering herd and a buggy single-wake would
+/// strand a ticket.
+#[test]
+fn single_wake_scheduling_loses_no_waiters() {
+    const CLIENTS: usize = 12;
+    const PER_CLIENT: usize = 8;
+
+    let metrics = Arc::new(normq::coordinator::metrics::Metrics::new());
+    let svc = Stack::new()
+        .fair_queue(2, PER_CLIENT, Arc::clone(&metrics))
+        .service(Echo::with_delay(Duration::from_millis(1)));
+
+    let done = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let (svc, done) = (&svc, &done);
+            scope.spawn(move || {
+                let id = format!("lw-{c}");
+                for _ in 0..PER_CLIENT {
+                    // One thread per client with queue_cap = PER_CLIENT:
+                    // a client can never overflow its own queue, so
+                    // every call must complete (never shed, never lost).
+                    svc.call(ServeRequest::from_client(vec!["x".into()], id.as_str()))
+                        .expect("no call may be shed or stranded");
+                    done.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+
+    assert_eq!(done.load(Ordering::Relaxed), CLIENTS * PER_CLIENT);
+    assert_eq!(metrics.fair_shed.load(Ordering::Relaxed), 0);
+    for c in 0..CLIENTS {
+        assert_eq!(
+            metrics
+                .client(&format!("lw-{c}"))
+                .queue_depth
+                .load(Ordering::Relaxed),
+            0,
+            "client lw-{c} left tickets behind"
+        );
+    }
+}
+
 /// Quota isolation, fully deterministic: a negligible refill rate
 /// means the heavy client gets exactly its burst and the light client
 /// is untouched by the heavy client's denials.
