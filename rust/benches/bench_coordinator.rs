@@ -1,83 +1,194 @@
-//! Serving-coordinator throughput: scaling with worker count, and the
-//! effect of the constraint-table cache (high vs low concept-set reuse).
+//! Serving-coordinator benches, headlined by the **cold-storm**
+//! scenario: K clients arrive in one batch window with K *distinct*
+//! cold concept groups, so every group needs its own constraint-table
+//! build before anyone decodes. With `build_threads = 1` the builds
+//! serialize on a single pool worker — the old dispatcher-inline
+//! behavior — while a pooled configuration overlaps them, so the
+//! serial/pooled wall-clock ratio is exactly the head-of-line blocking
+//! the asynchronous build pipeline removes.
+//!
+//! Results always go to `BENCH_coordinator.json` — the third artifact
+//! of the CI bench-smoke trajectory, diffed against the rolling window
+//! of previous runs by the bench-regression gate (`bench_gate`).
+//! `NORMQ_BENCH_QUICK=1` shrinks the matrix to CI scale.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use normq::coordinator::{Server, ServerConfig};
-use normq::data::{chunked, Corpus};
+use normq::data::Corpus;
 use normq::generate::DecodeConfig;
 use normq::hmm::Hmm;
 use normq::lm::NgramLm;
-use normq::qem::{train, QemConfig};
-use normq::quant::Method;
+use normq::util::json::Json;
 use normq::util::rng::Rng;
 
+struct StormRow {
+    cold_groups: usize,
+    hidden: usize,
+    keywords: usize,
+    max_tokens: usize,
+    workers: usize,
+    serial_ms: f64,
+    pooled_ms: f64,
+}
+
+impl StormRow {
+    fn speedup(&self) -> f64 {
+        self.serial_ms / self.pooled_ms.max(1e-9)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cold_groups", Json::num(self.cold_groups as f64)),
+            ("hidden", Json::num(self.hidden as f64)),
+            ("keywords", Json::num(self.keywords as f64)),
+            ("max_tokens", Json::num(self.max_tokens as f64)),
+            ("workers", Json::num(self.workers as f64)),
+            ("serial_ms", Json::num(self.serial_ms)),
+            ("pooled_ms", Json::num(self.pooled_ms)),
+            ("speedup", Json::num(self.speedup())),
+        ])
+    }
+}
+
+/// One storm: a fresh server (cold cache), every group submitted at
+/// once, wall time until every response lands.
+fn run_storm(
+    lm: &Arc<NgramLm>,
+    hmm: &Hmm,
+    corpus: &Corpus,
+    groups: &[Vec<String>],
+    workers: usize,
+    build_threads: usize,
+    max_tokens: usize,
+) -> f64 {
+    let cfg = ServerConfig {
+        workers,
+        build_threads,
+        // One build at a time inside each build (the storm measures
+        // cross-group overlap, not intra-build parallelism).
+        table_threads: 1,
+        decode: DecodeConfig { beam: 4, max_tokens, ..Default::default() },
+        ..Default::default()
+    };
+    let server = Server::start(Arc::clone(lm), hmm.clone(), corpus.clone(), cfg);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = groups
+        .iter()
+        .filter_map(|concepts| server.submit(concepts.clone()).ok())
+        .collect();
+    assert_eq!(rxs.len(), groups.len(), "storm submissions must all be admitted");
+    for rx in &rxs {
+        let _ = rx.recv();
+    }
+    let wall = t0.elapsed().as_secs_f64() * 1e3;
+    server.shutdown();
+    wall
+}
+
 fn main() {
-    println!("== bench_coordinator ==");
+    normq::util::logging::init_from_env();
+    let quick = std::env::var("NORMQ_BENCH_QUICK").is_ok_and(|v| v != "0" && !v.is_empty());
+    println!(
+        "== bench_coordinator: cold-storm, serial vs pooled table builds ({}) ==",
+        if quick { "quick" } else { "full" }
+    );
+
     let corpus = Corpus::new(11);
     let data = corpus.sample_token_corpus(4000, 12);
     let lm = Arc::new(NgramLm::train(&data, corpus.vocab.len()));
     let mut rng = Rng::seeded(13);
-    let init = Hmm::random(64, corpus.vocab.len(), 0.3, 0.1, &mut rng);
-    let tcfg = QemConfig { method: None, epochs: 2, eval_test: false, ..Default::default() };
-    let hmm = Method::NormQ { bits: 8 }.apply(&train(&init, &chunked(data, 10), &[], &tcfg).model);
-
-    let n_requests = 64usize;
-    let items = corpus.eval_set(n_requests, 1, 14);
-
-    // --- worker scaling ---
-    for workers in [1usize, 2, 4, 8] {
-        let cfg = ServerConfig {
-            workers,
-            decode: DecodeConfig { beam: 6, max_tokens: 20, ..Default::default() },
-            ..Default::default()
+    // Untrained weights are fine: build/decode cost depends on shapes,
+    // not on model quality, and EM at these sizes would dominate the
+    // bench's own runtime.
+    let (hidden, storm_sizes, reps, keywords, max_tokens): (usize, &[usize], usize, usize, usize) =
+        if quick {
+            (96, &[2, 4], 2, 5, 12)
+        } else {
+            (192, &[2, 4, 8], 3, 5, 12)
         };
-        let server = Server::start(lm.clone(), hmm.clone(), corpus.clone(), cfg);
-        let t0 = Instant::now();
-        let rxs: Vec<_> = items
-            .iter()
-            .filter_map(|i| server.submit(i.concepts.clone()).ok())
-            .collect();
-        for rx in &rxs {
-            let _ = rx.recv();
+    let hmm = Hmm::random(hidden, corpus.vocab.len(), 0.3, 0.1, &mut rng);
+    let workers = 4usize;
+
+    // Distinct multi-keyword concept groups: 5 single-token keywords
+    // → 32 DFA states, so each cold build is heavy relative to its
+    // group's decode and the build path dominates the storm.
+    let max_groups = *storm_sizes.iter().max().unwrap();
+    let nouns = &corpus.lexicon.nouns;
+    let groups: Vec<Vec<String>> = (0..max_groups)
+        .map(|g| {
+            (0..keywords)
+                .map(|k| nouns[(g * keywords + k) % nouns.len()].clone())
+                .collect()
+        })
+        .collect();
+
+    println!(
+        "{:>11} {:>6} {:>8} {:>9} {:>9} {:>8}",
+        "cold_groups", "hidden", "keywords", "serial_ms", "pooled_ms", "speedup"
+    );
+    let mut rows = Vec::new();
+    for &k in storm_sizes {
+        let storm = &groups[..k];
+        let pooled_threads = k.min(normq::util::threadpool::default_threads());
+        let mut serial_ms = f64::INFINITY;
+        let mut pooled_ms = f64::INFINITY;
+        for _ in 0..reps {
+            serial_ms =
+                serial_ms.min(run_storm(&lm, &hmm, &corpus, storm, workers, 1, max_tokens));
+            pooled_ms = pooled_ms.min(run_storm(
+                &lm,
+                &hmm,
+                &corpus,
+                storm,
+                workers,
+                pooled_threads,
+                max_tokens,
+            ));
         }
-        let wall = t0.elapsed().as_secs_f64();
-        let lat = server.metrics().latency_stats().unwrap();
+        let row = StormRow {
+            cold_groups: k,
+            hidden,
+            keywords,
+            max_tokens,
+            workers,
+            serial_ms,
+            pooled_ms,
+        };
         println!(
-            "workers={workers}: {:>6.1} req/s  p50={:.1}ms p95={:.1}ms",
-            rxs.len() as f64 / wall,
-            lat.p50 * 1e3,
-            lat.p95 * 1e3
+            "{:>11} {:>6} {:>8} {:>9.1} {:>9.1} {:>7.2}x",
+            row.cold_groups,
+            row.hidden,
+            row.keywords,
+            row.serial_ms,
+            row.pooled_ms,
+            row.speedup()
         );
-        server.shutdown();
+        if k >= 2 && row.speedup() < 1.0 {
+            eprintln!(
+                "[bench_coordinator] WARNING: pooled builds slower than serial at \
+                 {k} cold groups ({:.2}x)",
+                row.speedup()
+            );
+        }
+        rows.push(row);
     }
 
-    // --- table-cache effect: all requests share one concept set ---
-    for (label, reuse) in [("unique concept sets", false), ("one shared concept set", true)] {
-        let cfg = ServerConfig {
-            workers: 4,
-            decode: DecodeConfig { beam: 6, max_tokens: 20, ..Default::default() },
-            ..Default::default()
-        };
-        let server = Server::start(lm.clone(), hmm.clone(), corpus.clone(), cfg);
-        let t0 = Instant::now();
-        let rxs: Vec<_> = items
-            .iter()
-            .filter_map(|i| {
-                let concepts = if reuse { items[0].concepts.clone() } else { i.concepts.clone() };
-                server.submit(concepts).ok()
-            })
-            .collect();
-        for rx in &rxs {
-            let _ = rx.recv();
+    let json = Json::obj(vec![
+        ("bench", Json::str("coordinator")),
+        ("quick", Json::Bool(quick)),
+        ("scenarios", Json::arr(rows.iter().map(|r| r.to_json()))),
+    ])
+    .to_string();
+    match std::fs::write("BENCH_coordinator.json", &json) {
+        Ok(()) => println!(
+            "[bench_coordinator] wrote BENCH_coordinator.json ({} scenarios)",
+            rows.len()
+        ),
+        Err(e) => {
+            eprintln!("[bench_coordinator] FAILED writing BENCH_coordinator.json: {e}");
+            std::process::exit(1);
         }
-        let wall = t0.elapsed().as_secs_f64();
-        println!(
-            "{label:<24}: {:>6.1} req/s  ({})",
-            rxs.len() as f64 / wall,
-            server.metrics().summary()
-        );
-        server.shutdown();
     }
 }

@@ -88,7 +88,7 @@ fn table_engine_rows(quick: bool) -> Vec<TableRow> {
                 let sparse_ms = time_best_ms(reps, || {
                     ConstraintTable::build_with(&q, &dfa, budget, &serial).unwrap();
                 });
-                let par = BuildOptions { deadline: None, threads };
+                let par = BuildOptions { threads, ..Default::default() };
                 let sparse_par_ms = time_best_ms(reps, || {
                     ConstraintTable::build_with(&q, &dfa, budget, &par).unwrap();
                 });

@@ -1,16 +1,22 @@
 //! bench_gate — the CI bench-regression gate.
 //!
-//! Usage: `bench_gate <previous.json> <current.json> [--threshold 0.25]`
+//! Usage: `bench_gate <previous.json>... <current.json> [--threshold 0.25]`
 //!
-//! Diffs two bench-trajectory artifacts (`BENCH_tables.json` /
-//! `BENCH_decode.json`) with `normq::util::benchgate`: scenarios are
-//! matched by their identity fields and every `*_ms` timing field is
-//! compared; any matched field slower than `previous · (1 + threshold)`
-//! prints a regression line and exits 1 (failing the bench-smoke job).
-//! Scenario-set changes, scale (`quick`) mismatches and unreadable
-//! previous artifacts skip cleanly — only a real slowdown bites.
+//! The *last* positional path is the current artifact; every earlier
+//! one is a baseline in the rolling window. Diffs the current
+//! bench-trajectory artifact (`BENCH_tables.json` / `BENCH_decode.json`
+//! / `BENCH_coordinator.json`) against the **median** of the window
+//! with `normq::util::benchgate`: scenarios are matched by their
+//! identity fields and every `*_ms` timing field is compared; any
+//! matched field slower than `median · (1 + threshold)` prints a
+//! regression line and exits 1 (failing the bench-smoke job). The
+//! median makes the gate robust to one noisy CI run — a single slow
+//! baseline cannot mask a real regression, a single fast one cannot
+//! fake one. Scenario-set changes, scale (`quick`) mismatches and
+//! unreadable previous artifacts skip cleanly — only a real slowdown
+//! bites.
 
-use normq::util::benchgate::gate;
+use normq::util::benchgate::gate_window;
 use normq::util::json::Json;
 
 fn run() -> Result<bool, String> {
@@ -35,38 +41,51 @@ fn run() -> Result<bool, String> {
             i += 1;
         }
     }
-    let [prev_path, cur_path] = paths.as_slice() else {
-        return Err("usage: bench_gate <previous.json> <current.json> [--threshold 0.25]".into());
+    let Some((cur_path, prev_paths)) = paths.split_last() else {
+        return Err(
+            "usage: bench_gate <previous.json>... <current.json> [--threshold 0.25]".into(),
+        );
     };
+    if prev_paths.is_empty() {
+        return Err(
+            "usage: bench_gate <previous.json>... <current.json> [--threshold 0.25]".into(),
+        );
+    }
 
     let cur_text = std::fs::read_to_string(cur_path)
         .map_err(|e| format!("reading current artifact {cur_path}: {e}"))?;
     let cur = Json::parse(&cur_text).map_err(|e| format!("parsing {cur_path}: {e}"))?;
-    // A previous artifact that cannot be read or parsed is a skip, not
-    // a failure: the first run of a new bench has no history, and a
-    // corrupt upload must not wedge every future build.
-    let prev = match std::fs::read_to_string(prev_path) {
-        Ok(text) => match Json::parse(&text) {
-            Ok(v) => v,
-            Err(e) => {
-                println!("[bench_gate] previous artifact unparseable ({e}) — skipping gate");
-                return Ok(true);
-            }
-        },
-        Err(e) => {
-            println!("[bench_gate] no previous artifact ({e}) — skipping gate");
-            return Ok(true);
+    // A previous artifact that cannot be read or parsed drops out of
+    // the window rather than failing: the first run of a new bench has
+    // no history, and one corrupt upload must not wedge every future
+    // build.
+    let mut prevs = Vec::new();
+    for prev_path in prev_paths {
+        match std::fs::read_to_string(prev_path) {
+            Ok(text) => match Json::parse(&text) {
+                Ok(v) => prevs.push(v),
+                Err(e) => {
+                    println!("[bench_gate] baseline {prev_path} unparseable ({e}) — dropped")
+                }
+            },
+            Err(e) => println!("[bench_gate] no baseline at {prev_path} ({e}) — dropped"),
         }
-    };
+    }
+    if prevs.is_empty() {
+        println!("[bench_gate] no readable baseline — skipping gate");
+        return Ok(true);
+    }
 
-    let report = gate(&prev, &cur, threshold)?;
+    let report = gate_window(&prevs, &cur, threshold)?;
     for note in &report.notes {
         println!("[bench_gate] {note}");
     }
     println!(
-        "[bench_gate] {}: compared {} scenario(s), {} unmatched, threshold {:.0}%",
+        "[bench_gate] {}: compared {} scenario(s) against a {}-run window, {} unmatched, \
+         threshold {:.0}%",
         cur_path,
         report.compared,
+        prevs.len(),
         report.unmatched,
         threshold * 100.0
     );

@@ -1,0 +1,280 @@
+//! The dedicated constraint-table build pool.
+//!
+//! Cold concept groups used to pay their HMM×DFA build *inside the
+//! single dispatcher thread*, so one large cold group head-of-line
+//! blocked every other client's batch window. The dispatcher now only
+//! resolves cache state ([`super::cache::LruCache`]'s singleflight
+//! state machine) and routes batches; the builds themselves run here,
+//! on a small pool of dedicated workers
+//! ([`super::ServerConfig::build_threads`]), so cold groups for
+//! different clients overlap and warm batches never queue behind a
+//! cold build.
+//!
+//! ## Panic isolation
+//!
+//! A build executes model code (`HmmBackend` implementations) against
+//! request-derived inputs, so a panicking build must poison only *its
+//! own* cache entry — never the pool. Each [`BuildJob`] therefore
+//! carries an `on_panic` cleanup alongside its body: the worker runs
+//! the body under `catch_unwind` and, if it panicked, runs the cleanup
+//! (itself unwind-guarded) so the entry's waiters get an error response
+//! and the slot is released, then the worker returns to the queue.
+//!
+//! ## Shutdown
+//!
+//! [`BuildPool::shutdown`] closes the job queue and joins the workers;
+//! already-queued jobs still run to completion (their waiters are
+//! answered, their batches dispatched), so a draining server never
+//! strands a parked request. [`BuildPool::spawn`] after shutdown
+//! returns `false` and the caller fails the group explicitly.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::generate::CancelProbe;
+
+/// The effective deadline of an in-flight build: bounded by an
+/// instant, or unbounded (at least one waiter has no deadline).
+#[derive(Clone, Copy, Debug)]
+enum BuildDeadline {
+    Unbounded,
+    At(Instant),
+}
+
+/// Shared deadline state between a pending cache entry and its running
+/// build — the singleflight pipeline's cancellation channel. The build
+/// reads it as a [`CancelProbe`] at every level boundary; the
+/// dispatcher *extends* it when a late waiter joins the in-flight
+/// build, so the effective deadline is always the latest deadline of
+/// any attached waiter (unbounded once any waiter has none). A build
+/// whose probe fires therefore knows every then-attached waiter has
+/// expired.
+#[derive(Debug)]
+pub struct BuildControl {
+    deadline: Mutex<BuildDeadline>,
+}
+
+impl BuildControl {
+    /// A control starting at a group's effective deadline (`None` =
+    /// some member is unbounded, so the build never self-cancels).
+    pub fn new(deadline: Option<Instant>) -> BuildControl {
+        BuildControl {
+            deadline: Mutex::new(match deadline {
+                Some(d) => BuildDeadline::At(d),
+                None => BuildDeadline::Unbounded,
+            }),
+        }
+    }
+
+    /// Merge a joining group's effective deadline in: `None` makes the
+    /// build unbounded, `Some(d)` can only push the deadline later.
+    pub fn extend(&self, deadline: Option<Instant>) {
+        let mut dl = self.deadline.lock().unwrap();
+        *dl = match (*dl, deadline) {
+            (BuildDeadline::Unbounded, _) | (_, None) => BuildDeadline::Unbounded,
+            (BuildDeadline::At(cur), Some(new)) => BuildDeadline::At(cur.max(new)),
+        };
+    }
+
+    /// The current effective deadline (`None` = unbounded).
+    pub fn deadline(&self) -> Option<Instant> {
+        match *self.deadline.lock().unwrap() {
+            BuildDeadline::Unbounded => None,
+            BuildDeadline::At(d) => Some(d),
+        }
+    }
+}
+
+impl CancelProbe for BuildControl {
+    fn cancelled(&self) -> bool {
+        match *self.deadline.lock().unwrap() {
+            BuildDeadline::Unbounded => false,
+            BuildDeadline::At(d) => Instant::now() >= d,
+        }
+    }
+}
+
+/// One queued build: the body plus the cleanup to run if the body
+/// panics (answer waiters, release the cache entry). Both run at most
+/// once, on a pool worker thread.
+pub struct BuildJob {
+    /// The build body: build the table, complete the cache entry,
+    /// dispatch the waiters.
+    pub run: Box<dyn FnOnce() + Send>,
+    /// Damage control if `run` panics: tear down this job's cache
+    /// entry and answer its waiters with an error response.
+    pub on_panic: Box<dyn FnOnce() + Send>,
+}
+
+impl BuildJob {
+    /// A job from its body and panic cleanup.
+    pub fn new(
+        run: impl FnOnce() + Send + 'static,
+        on_panic: impl FnOnce() + Send + 'static,
+    ) -> BuildJob {
+        BuildJob { run: Box::new(run), on_panic: Box::new(on_panic) }
+    }
+}
+
+/// A fixed pool of build workers fed by an unbounded queue (the queue
+/// must never block the dispatcher: backpressure on *requests* belongs
+/// to the admission stack, not the build path). See the
+/// [module docs](self).
+pub struct BuildPool {
+    /// `None` after shutdown; closing the sender drains the workers.
+    tx: Mutex<Option<Sender<BuildJob>>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl BuildPool {
+    /// Spawn `threads` build workers (minimum 1).
+    pub fn new(threads: usize) -> BuildPool {
+        let (tx, rx) = channel::<BuildJob>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || worker_loop(rx))
+            })
+            .collect();
+        BuildPool { tx: Mutex::new(Some(tx)), workers: Mutex::new(workers) }
+    }
+
+    /// Queue a job for the next free worker. Returns `false` when the
+    /// pool has shut down — the job is dropped with *neither* closure
+    /// run, so the caller must fail its group itself.
+    pub fn spawn(&self, job: BuildJob) -> bool {
+        let tx = self.tx.lock().unwrap();
+        match tx.as_ref() {
+            Some(tx) => tx.send(job).is_ok(),
+            None => false,
+        }
+    }
+
+    /// Close the queue and join every worker. Already-queued jobs run
+    /// to completion first; idempotent.
+    pub fn shutdown(&self) {
+        drop(self.tx.lock().unwrap().take());
+        let workers: Vec<JoinHandle<()>> = self.workers.lock().unwrap().drain(..).collect();
+        for w in workers {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for BuildPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<BuildJob>>>) {
+    loop {
+        let job = {
+            let rx = rx.lock().unwrap();
+            match rx.recv() {
+                Ok(j) => j,
+                Err(_) => break, // queue closed and drained
+            }
+        };
+        // The job body owns no pool state, so unwinding out of it
+        // cannot leave this worker inconsistent; the cleanup is also
+        // guarded so a buggy handler cannot take the worker down.
+        if catch_unwind(AssertUnwindSafe(job.run)).is_err() {
+            let _ = catch_unwind(AssertUnwindSafe(job.on_panic));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn build_control_extends_and_cancels() {
+        let far = Instant::now() + Duration::from_secs(600);
+        let past = Instant::now() - Duration::from_millis(1);
+
+        let ctl = BuildControl::new(Some(past));
+        assert!(ctl.cancelled(), "an expired deadline cancels");
+        // A later waiter pushes the deadline out: no longer cancelled.
+        ctl.extend(Some(far));
+        assert!(!ctl.cancelled());
+        assert_eq!(ctl.deadline(), Some(far));
+        // An earlier deadline never pulls it back in.
+        ctl.extend(Some(past));
+        assert_eq!(ctl.deadline(), Some(far));
+        // An unbounded waiter makes the build unbounded, permanently.
+        ctl.extend(None);
+        assert_eq!(ctl.deadline(), None);
+        ctl.extend(Some(past));
+        assert!(!ctl.cancelled(), "unbounded absorbs every later deadline");
+
+        let unbounded = BuildControl::new(None);
+        assert!(!unbounded.cancelled());
+        assert_eq!(unbounded.deadline(), None);
+    }
+
+    #[test]
+    fn runs_jobs_on_pool_threads() {
+        let pool = BuildPool::new(2);
+        let (tx, rx) = channel();
+        for i in 0..8 {
+            let tx = tx.clone();
+            assert!(pool.spawn(BuildJob::new(
+                move || tx.send(i).unwrap(),
+                || panic!("clean jobs never run the panic path"),
+            )));
+        }
+        let mut got: Vec<i32> = (0..8)
+            .map(|_| rx.recv_timeout(Duration::from_secs(10)).unwrap())
+            .collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..8).collect::<Vec<_>>());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn panicking_job_runs_cleanup_and_spares_the_worker() {
+        let pool = BuildPool::new(1);
+        let cleaned = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&cleaned);
+        assert!(pool.spawn(BuildJob::new(
+            || panic!("injected build failure"),
+            move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            },
+        )));
+        // The same (single) worker must still process later jobs.
+        let (tx, rx) = channel();
+        assert!(pool.spawn(BuildJob::new(move || tx.send(42u32).unwrap(), || {})));
+        assert_eq!(rx.recv_timeout(Duration::from_secs(10)).unwrap(), 42);
+        assert_eq!(cleaned.load(Ordering::Relaxed), 1, "cleanup ran exactly once");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_queued_jobs_then_rejects() {
+        let pool = BuildPool::new(1);
+        let ran = Arc::new(AtomicUsize::new(0));
+        for _ in 0..4 {
+            let ran = Arc::clone(&ran);
+            assert!(pool.spawn(BuildJob::new(
+                move || {
+                    std::thread::sleep(Duration::from_millis(2));
+                    ran.fetch_add(1, Ordering::Relaxed);
+                },
+                || {},
+            )));
+        }
+        pool.shutdown();
+        assert_eq!(ran.load(Ordering::Relaxed), 4, "queued jobs drain before join");
+        assert!(!pool.spawn(BuildJob::new(|| {}, || {})), "post-shutdown spawn rejects");
+        pool.shutdown(); // idempotent
+    }
+}

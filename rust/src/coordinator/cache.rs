@@ -1,18 +1,46 @@
-//! Byte-budgeted LRU cache for per-concept-set decode state (DFA +
-//! constraint table). The constraint table is the expensive per-request
-//! precomputation (the HMM×DFA backward recursion); requests sharing a
-//! concept set share the table — the symbolic analog of a KV-cache
-//! manager.
+//! Byte-budgeted singleflight cache for per-concept-set decode state
+//! (DFA + constraint table). The constraint table is the expensive
+//! per-request precomputation (the HMM×DFA backward recursion);
+//! requests sharing a concept set share the table — the symbolic
+//! analog of a KV-cache manager.
+//!
+//! ## The entry state machine
+//!
+//! With builds running asynchronously on the build pool, an entry is no
+//! longer just present-or-absent: it is **`Pending`** (a build is in
+//! flight; waiters are parked on it) or **`Ready`** (a shared value).
+//! [`LruCache::lookup`] gives singleflight semantics — N lookups for
+//! the same cold key open exactly *one* pending entry (the first caller
+//! gets [`Lookup::Started`] and must run the build; later callers get
+//! [`Lookup::Joined`] and their waiters ride the in-flight build).
+//! [`LruCache::complete`] swaps Pending → Ready and hands the parked
+//! waiters back; [`LruCache::abort`] tears a pending entry down (build
+//! cancelled or panicked) and returns the waiters so the caller can
+//! answer them.
+//!
+//! ## Byte accounting
 //!
 //! Capacity is a **byte budget**, not an entry count: table size varies
 //! with `(T+1)·D·H` (a many-keyword concept set costs orders of
-//! magnitude more than a single-keyword one), and the sparse table
-//! engine made builds cheap enough that caching *more small* tables is
-//! usually better than holding few big ones. Values report their own
-//! footprint via [`ByteSized`]; insertion evicts least-recently-used
-//! entries until the new value fits. A value larger than the whole
-//! budget is still cached alone — the most recent table must stay
-//! shareable with its concept group.
+//! magnitude more than a single-keyword one). Ready values report their
+//! own footprint via [`ByteSized`]; a pending entry **reserves** its
+//! caller-estimated bytes up front so a storm of concurrent builds
+//! cannot oversubscribe the budget unnoticed, and the reservation is
+//! replaced by the actual size at [`LruCache::complete`]. Insertion
+//! evicts least-recently-used *Ready* entries until the new value fits;
+//! pending entries are never evicted (they hold live waiters). A value
+//! larger than the whole budget is still cached alone — the most recent
+//! table must stay shareable with its concept group.
+//!
+//! Reservations *participate* in the budget deliberately: when a cold
+//! storm's estimated tables genuinely exceed the budget, resident warm
+//! entries are evicted as the storm's builds complete — the resident
+//! set must shrink anyway for those tables to fit, so the eviction is
+//! early, not spurious — and `used_bytes` transiently exceeds the
+//! budget (reservations are unevictable) so the `table_bytes` gauge
+//! shows the oversubscription instead of hiding it. Refusing or
+//! delaying builds past the byte budget is the admission-control
+//! layer's decision, not the cache's.
 
 use std::collections::HashMap;
 use std::collections::VecDeque;
@@ -24,20 +52,45 @@ pub trait ByteSized {
     fn bytes(&self) -> usize;
 }
 
+/// One cache slot: a resident value, or an in-flight build with its
+/// parked waiters and shared handle (the build-control the serving
+/// layer uses to extend deadlines / cancel).
+enum Slot<V, W, P> {
+    Ready { value: Arc<V>, bytes: usize },
+    Pending { waiters: Vec<W>, handle: P, reserved: usize },
+}
+
+/// What [`LruCache::lookup`] resolved a key to.
+pub enum Lookup<V, W, P> {
+    /// The value is resident; the waiters are handed back untouched so
+    /// the caller can dispatch them immediately.
+    Ready(Arc<V>, Vec<W>),
+    /// A build for this key is already in flight; the waiters were
+    /// parked on it. The shared pending handle is returned so the
+    /// caller can merge deadlines into the running build.
+    Joined(P),
+    /// The waiters opened a new pending entry; the caller must start
+    /// the build and eventually call [`LruCache::complete`] or
+    /// [`LruCache::abort`] for this key.
+    Started(P),
+}
+
 /// A string-keyed, byte-budgeted LRU cache of shared values with
-/// hit/miss counters.
-pub struct LruCache<V> {
+/// singleflight pending entries and hit/miss counters.
+pub struct LruCache<V, W = (), P = ()> {
     budget: usize,
+    /// Ready bytes + pending reservations.
     used: usize,
-    map: HashMap<String, (Arc<V>, usize)>,
+    map: HashMap<String, Slot<V, W, P>>,
+    /// LRU order over *Ready* keys only; pending keys are unevictable.
     order: VecDeque<String>,
-    /// Lookups answered from the cache.
+    /// Lookups answered from a resident value.
     pub hits: u64,
-    /// Lookups that found nothing (the value had to be built).
+    /// Lookups that found nothing resident (the value had to be built).
     pub misses: u64,
 }
 
-impl<V: ByteSized> LruCache<V> {
+impl<V: ByteSized, W, P: Clone> LruCache<V, W, P> {
     /// An empty cache retaining at most `budget_bytes` of values (an
     /// oversized single value still caches alone; see the
     /// [module docs](self)).
@@ -52,7 +105,7 @@ impl<V: ByteSized> LruCache<V> {
         }
     }
 
-    /// Entries currently cached.
+    /// Entries currently cached (ready and pending).
     pub fn len(&self) -> usize {
         self.map.len()
     }
@@ -62,7 +115,24 @@ impl<V: ByteSized> LruCache<V> {
         self.map.is_empty()
     }
 
-    /// Bytes currently accounted to cached values.
+    /// Whether `key` has an entry (ready *or* pending). No LRU bump,
+    /// no hit/miss counting — a cheap peek so callers can do expensive
+    /// cold-path preparation (e.g. compiling a DFA) outside the cache
+    /// lock before committing through [`LruCache::lookup`].
+    pub fn contains(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Builds currently in flight (pending entries).
+    pub fn pending(&self) -> usize {
+        self.map
+            .values()
+            .filter(|s| matches!(s, Slot::Pending { .. }))
+            .count()
+    }
+
+    /// Bytes currently accounted: resident values plus the reserved
+    /// estimates of pending builds.
     pub fn used_bytes(&self) -> usize {
         self.used
     }
@@ -72,18 +142,16 @@ impl<V: ByteSized> LruCache<V> {
         self.budget
     }
 
-    /// Look `key` up, bumping it to most-recently-used on a hit. Counts
-    /// a hit or a miss; pair with [`LruCache::insert`] when the build
-    /// can fail or be abandoned (e.g. a deadline firing mid-build).
+    /// Look `key` up, bumping it to most-recently-used on a hit. A
+    /// pending entry reads as a miss (nothing resident to share).
+    /// Counts a hit or a miss; pair with [`LruCache::insert`] when the
+    /// build can fail or be abandoned. The simple non-singleflight API
+    /// — the serving dispatcher uses [`LruCache::lookup`] instead.
     pub fn get(&mut self, key: &str) -> Option<Arc<V>> {
-        if let Some((v, _)) = self.map.get(key) {
+        if let Some(Slot::Ready { value, .. }) = self.map.get(key) {
             self.hits += 1;
-            let v = Arc::clone(v);
-            // Move to MRU position.
-            if let Some(pos) = self.order.iter().position(|k| k == key) {
-                self.order.remove(pos);
-            }
-            self.order.push_back(key.to_string());
+            let v = Arc::clone(value);
+            self.touch(key);
             Some(v)
         } else {
             self.misses += 1;
@@ -91,34 +159,112 @@ impl<V: ByteSized> LruCache<V> {
         }
     }
 
-    /// Cache `value` under `key`, evicting least-recently-used entries
-    /// until it fits the byte budget, and return the shared handle.
-    /// Re-inserting an existing key replaces the value (releasing the
-    /// old accounting) and bumps it to most-recently-used. Does not
-    /// count a hit or miss — the preceding [`LruCache::get`] already
-    /// did.
+    /// Resolve `key` with singleflight semantics; see [`Lookup`]. On a
+    /// resident value the waiters are returned for immediate dispatch
+    /// (counted as a hit). On an in-flight build they are parked on it
+    /// (neither hit nor miss — the one build already counted). On a
+    /// cold key, `pending` supplies the shared handle and the byte
+    /// reservation for the new pending entry (counted as a miss).
+    pub fn lookup(
+        &mut self,
+        key: &str,
+        waiters: Vec<W>,
+        pending: impl FnOnce() -> (P, usize),
+    ) -> Lookup<V, W, P> {
+        match self.map.get_mut(key) {
+            Some(Slot::Ready { value, .. }) => {
+                self.hits += 1;
+                let v = Arc::clone(value);
+                self.touch(key);
+                Lookup::Ready(v, waiters)
+            }
+            Some(Slot::Pending { waiters: parked, handle, .. }) => {
+                parked.extend(waiters);
+                Lookup::Joined(handle.clone())
+            }
+            None => {
+                self.misses += 1;
+                let (handle, reserved) = pending();
+                self.used += reserved;
+                self.map.insert(
+                    key.to_string(),
+                    Slot::Pending { waiters, handle: handle.clone(), reserved },
+                );
+                Lookup::Started(handle)
+            }
+        }
+    }
+
+    /// Finish the build for `key`: the pending entry's reservation is
+    /// released, the value is inserted at its actual size (evicting
+    /// LRU ready entries to fit), and the parked waiters are returned.
+    /// Tolerates a missing pending entry (the build was aborted and
+    /// the key re-resolved concurrently): the value is simply cached
+    /// with no waiters.
+    pub fn complete(&mut self, key: &str, value: V) -> (Arc<V>, Vec<W>) {
+        let waiters = self.abort(key);
+        (self.insert(key, value), waiters)
+    }
+
+    /// Tear down the pending entry for `key` (build cancelled, failed,
+    /// or panicked): the reservation is released and the parked
+    /// waiters are returned so the caller can answer them. A key with
+    /// no pending entry returns no waiters.
+    pub fn abort(&mut self, key: &str) -> Vec<W> {
+        if matches!(self.map.get(key), Some(Slot::Pending { .. })) {
+            if let Some(Slot::Pending { waiters, reserved, .. }) = self.map.remove(key) {
+                self.used -= reserved;
+                return waiters;
+            }
+        }
+        Vec::new()
+    }
+
+    /// Cache `value` under `key`, evicting least-recently-used ready
+    /// entries until it fits the byte budget, and return the shared
+    /// handle. Re-inserting an existing ready key replaces the value
+    /// (releasing the old accounting) and bumps it to
+    /// most-recently-used. Does not count a hit or miss — the
+    /// preceding [`LruCache::get`] already did.
+    ///
+    /// # Panics
+    ///
+    /// Inserting over a *pending* key would silently drop its parked
+    /// waiters, so it panics; finish an in-flight build with
+    /// [`LruCache::complete`] instead.
     pub fn insert(&mut self, key: &str, value: V) -> Arc<V> {
         let size = value.bytes();
-        if let Some((_, old_size)) = self.map.remove(key) {
-            // Replacement: release the old accounting and drop the
-            // stale LRU position so the key never occupies two slots.
-            self.used -= old_size;
-            if let Some(pos) = self.order.iter().position(|k| k == key) {
-                self.order.remove(pos);
+        match self.map.remove(key) {
+            Some(Slot::Ready { bytes, .. }) => {
+                // Replacement: release the old accounting and drop the
+                // stale LRU position so the key never occupies two slots.
+                self.used -= bytes;
+                if let Some(pos) = self.order.iter().position(|k| k == key) {
+                    self.order.remove(pos);
+                }
             }
+            Some(Slot::Pending { .. }) => {
+                panic!("insert over pending key {key:?}: use complete()/abort()")
+            }
+            None => {}
         }
         while self.used + size > self.budget {
             match self.order.pop_front() {
                 Some(evict) => {
-                    if let Some((_, sz)) = self.map.remove(&evict) {
-                        self.used -= sz;
+                    if let Some(Slot::Ready { bytes, .. }) = self.map.remove(&evict) {
+                        self.used -= bytes;
                     }
                 }
-                None => break, // oversized value: cache it alone
+                // Oversized value, or the remainder is pending
+                // reservations (unevictable): cache it anyway.
+                None => break,
             }
         }
         let v = Arc::new(value);
-        self.map.insert(key.to_string(), (Arc::clone(&v), size));
+        self.map.insert(
+            key.to_string(),
+            Slot::Ready { value: Arc::clone(&v), bytes: size },
+        );
         self.order.push_back(key.to_string());
         self.used += size;
         v
@@ -130,6 +276,14 @@ impl<V: ByteSized> LruCache<V> {
             Some(v) => v,
             None => self.insert(key, build()),
         }
+    }
+
+    /// Move a ready `key` to the most-recently-used position.
+    fn touch(&mut self, key: &str) {
+        if let Some(pos) = self.order.iter().position(|k| k == key) {
+            self.order.remove(pos);
+        }
+        self.order.push_back(key.to_string());
     }
 }
 
@@ -242,5 +396,95 @@ mod tests {
         c.get_or_insert_with("b", || 2);
         assert_eq!(c.len(), 1);
         assert_eq!(*c.get("b").unwrap(), 2);
+    }
+
+    // --- the singleflight state machine ---
+
+    type Flight = LruCache<Blob, &'static str, u8>;
+
+    #[test]
+    fn singleflight_opens_one_pending_entry() {
+        let mut c: Flight = LruCache::new(100);
+        // First resolver starts the build.
+        let first = c.lookup("k", vec!["w1"], || (7, 40));
+        assert!(matches!(first, Lookup::Started(7)));
+        assert_eq!(c.pending(), 1);
+        assert_eq!(c.misses, 1);
+        // Every later resolver joins the same build: same handle, no
+        // second factory call, no second miss.
+        for w in ["w2", "w3"] {
+            let joined = c.lookup("k", vec![w], || panic!("second build started"));
+            assert!(matches!(joined, Lookup::Joined(7)));
+        }
+        assert_eq!((c.pending(), c.misses), (1, 1));
+        // Completion returns every parked waiter exactly once.
+        let (v, waiters) = c.complete("k", Blob(50));
+        assert_eq!(v.0, 50);
+        assert_eq!(waiters, vec!["w1", "w2", "w3"]);
+        assert_eq!(c.pending(), 0);
+        // The key now resolves Ready, waiters handed straight back.
+        match c.lookup("k", vec!["w4"], || panic!("rebuilt")) {
+            Lookup::Ready(v, ws) => {
+                assert_eq!(v.0, 50);
+                assert_eq!(ws, vec!["w4"]);
+            }
+            _ => panic!("expected Ready"),
+        }
+    }
+
+    #[test]
+    fn pending_reserves_bytes_and_complete_swaps_to_actual() {
+        let mut c: Flight = LruCache::new(100);
+        let _ = c.lookup("k", vec!["w"], || (0, 64));
+        assert_eq!(c.used_bytes(), 64, "pending entries reserve their estimate");
+        let (_, waiters) = c.complete("k", Blob(40));
+        assert_eq!(waiters, vec!["w"]);
+        assert_eq!(c.used_bytes(), 40, "reservation replaced by actual size");
+    }
+
+    #[test]
+    fn abort_releases_reservation_and_returns_waiters() {
+        let mut c: Flight = LruCache::new(100);
+        let _ = c.lookup("k", vec!["w1"], || (0, 64));
+        let _ = c.lookup("k", vec!["w2"], || panic!());
+        let waiters = c.abort("k");
+        assert_eq!(waiters, vec!["w1", "w2"]);
+        assert_eq!((c.used_bytes(), c.len()), (0, 0));
+        // Aborting again (or a never-pending key) is a clean no-op.
+        assert!(c.abort("k").is_empty());
+        // The key is cold again: the next lookup restarts the build.
+        assert!(matches!(c.lookup("k", vec!["w3"], || (1, 8)), Lookup::Started(1)));
+    }
+
+    #[test]
+    fn pending_entries_are_never_evicted() {
+        let mut c: Flight = LruCache::new(100);
+        let _ = c.lookup("build", vec!["w"], || (0, 60));
+        // An insert that cannot fit: evicts ready entries only, then
+        // caches anyway (the pending reservation is untouchable).
+        c.insert("a", Blob(30));
+        c.insert("b", Blob(80));
+        assert_eq!(c.pending(), 1, "pending entry survived the pressure");
+        let (_, waiters) = c.complete("build", Blob(10));
+        assert_eq!(waiters, vec!["w"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "insert over pending key")]
+    fn insert_over_pending_is_a_bug() {
+        let mut c: Flight = LruCache::new(100);
+        let _ = c.lookup("k", vec!["w"], || (0, 8));
+        c.insert("k", Blob(4));
+    }
+
+    #[test]
+    fn complete_without_pending_still_caches() {
+        // The build's entry was aborted (e.g. by a panic handler) while
+        // the value was finishing: complete degrades to a plain insert.
+        let mut c: Flight = LruCache::new(100);
+        let (v, waiters) = c.complete("k", Blob(25));
+        assert_eq!(v.0, 25);
+        assert!(waiters.is_empty());
+        assert_eq!(c.used_bytes(), 25);
     }
 }

@@ -14,6 +14,13 @@
 //! denials and queue depth to the client that caused them, so a
 //! greedy client's overload shows up in *its* row of
 //! [`Metrics::client_summary`] rather than as anonymous global load.
+//! Each client block carries its own small latency reservoir, so tail
+//! isolation under `FairQueue` is directly observable: a flooded
+//! client's p99 lives in its row and cannot poison a polite client's.
+//! The client map itself is bounded ([`Metrics::with_client_cap`]):
+//! past the cap, the least-recently-touched *idle* entry (no queued
+//! calls) is evicted, so per-connection client ids cannot grow memory
+//! without bound.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -25,6 +32,15 @@ use crate::util::timer::Stats;
 /// Default reservoir capacity: large enough for stable p99 estimates,
 /// small enough (~32 KB per reservoir) to hold for days of traffic.
 pub const RESERVOIR_CAP: usize = 4096;
+
+/// Per-client reservoir capacity: there can be thousands of client
+/// blocks, so each keeps a much smaller sample (~2 KB) — still plenty
+/// for a stable per-client p99.
+pub const CLIENT_RESERVOIR_CAP: usize = 256;
+
+/// Default bound on distinct client entries retained in
+/// [`Metrics::client`]'s map; see [`Metrics::with_client_cap`].
+pub const DEFAULT_CLIENT_CAP: usize = 1024;
 
 /// Fixed-size uniform sample of an unbounded stream (Algorithm R).
 /// After `seen` pushes every element has probability `cap/seen` of
@@ -84,7 +100,7 @@ impl Reservoir {
 /// made the decision: the coordinator (submitted/completed/shed at
 /// intake), `Quota` (quota_denied), `FairQueue` (shed on overflow,
 /// queue_depth while waiting), `AdaptiveShed` and `LoadShed` (shed).
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ClientStats {
     /// Requests this client submitted to the coordinator.
     pub submitted: AtomicU64,
@@ -97,13 +113,56 @@ pub struct ClientStats {
     pub quota_denied: AtomicU64,
     /// Calls currently waiting in this client's fair queue (gauge).
     pub queue_depth: AtomicU64,
+    /// This client's end-to-end latencies (seconds),
+    /// reservoir-sampled at [`CLIENT_RESERVOIR_CAP`].
+    latencies: Mutex<Reservoir>,
+}
+
+impl Default for ClientStats {
+    fn default() -> Self {
+        ClientStats {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            quota_denied: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            latencies: Mutex::new(Reservoir::new(CLIENT_RESERVOIR_CAP)),
+        }
+    }
 }
 
 impl ClientStats {
+    /// Record one completed request's end-to-end latency (seconds)
+    /// into this client's reservoir.
+    pub fn record_latency(&self, secs: f64) {
+        self.latencies.lock().unwrap().push(secs);
+    }
+
+    /// Quantiles over this client's (reservoir-sampled) latencies;
+    /// `None` before the first recorded completion.
+    pub fn latency_stats(&self) -> Option<Stats> {
+        let l = self.latencies.lock().unwrap();
+        if l.is_empty() {
+            None
+        } else {
+            Some(Stats::of(l.samples()))
+        }
+    }
+
     /// One-line rendering used by [`Metrics::client_summary`].
     fn summary(&self) -> String {
+        let lat = self
+            .latency_stats()
+            .map(|s| {
+                format!(
+                    " p50={} p99={}",
+                    crate::util::timer::fmt_secs(s.p50),
+                    crate::util::timer::fmt_secs(s.p99)
+                )
+            })
+            .unwrap_or_default();
         format!(
-            "submitted={} completed={} shed={} quota_denied={} queue_depth={}",
+            "submitted={} completed={} shed={} quota_denied={} queue_depth={}{lat}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.shed.load(Ordering::Relaxed),
@@ -111,6 +170,14 @@ impl ClientStats {
             self.queue_depth.load(Ordering::Relaxed),
         )
     }
+}
+
+/// One retained client row: the shared counter block plus its
+/// last-touch stamp for LRU eviction.
+#[derive(Debug)]
+struct ClientEntry {
+    stats: Arc<ClientStats>,
+    touch: AtomicU64,
 }
 
 /// The serving metrics registry; one instance is shared by the
@@ -136,6 +203,24 @@ pub struct Metrics {
     /// `table_cache_misses` for the mean build cost the sparse table
     /// engine is driving down.
     pub table_build_us: AtomicU64,
+    /// Concept groups that joined an already in-flight build
+    /// (singleflight: they cost no build of their own).
+    pub table_joins: AtomicU64,
+    /// Gauge: builds currently queued on or running in the build pool.
+    pub builds_inflight: AtomicU64,
+    /// Gauge: requests parked as waiters on a pending table build —
+    /// admitted, but not yet decode work. `AdaptiveShed` discounts
+    /// this from its in-flight count so a cold-build storm does not
+    /// read as decode saturation and shed warm traffic.
+    pub build_waiting: AtomicU64,
+    /// Cumulative **microseconds** build jobs spent queued before a
+    /// pool worker picked them up (summary renders `build_queue_ms`) —
+    /// sustained growth means the pool is undersized for the cold-miss
+    /// rate (`--build-threads`).
+    pub build_queue_us: AtomicU64,
+    /// Builds that panicked; their waiters were answered with a failed
+    /// response and only their own cache entry was poisoned.
+    pub build_failed: AtomicU64,
     /// Gauge: bytes currently resident in the constraint-table cache
     /// (the byte-budgeted LRU's accounting, updated on every insert).
     pub table_bytes: AtomicU64,
@@ -165,12 +250,24 @@ pub struct Metrics {
     /// alone drains into the dispatcher too fast to reflect saturation.
     pub in_flight: AtomicU64,
     /// Per-client breakdown, keyed by `Keyed::client_id`. Entries are
-    /// created on first touch and kept for the registry's lifetime
-    /// (client cardinality is assumed bounded — ids are tenants or API
-    /// keys, not request ids). Read-mostly after warmup, so lookups
-    /// take a shared lock: rejection hot paths in the shed layers do
-    /// not serialize on each other.
-    clients: RwLock<HashMap<String, Arc<ClientStats>>>,
+    /// created on first touch; past `client_cap` the
+    /// least-recently-touched *idle* entry (queue_depth 0) is evicted,
+    /// so per-connection ids cannot grow the map without bound.
+    /// Read-mostly after warmup, so lookups take a shared lock:
+    /// rejection hot paths in the shed layers do not serialize on each
+    /// other.
+    clients: RwLock<HashMap<String, ClientEntry>>,
+    /// Bound on retained client entries (see [`Metrics::with_client_cap`]).
+    client_cap: usize,
+    /// Monotonic sequence stamping client touches for LRU eviction.
+    client_touch: AtomicU64,
+    /// Skip eviction sweeps until the map reaches this size again: a
+    /// sweep that found nothing evictable (every entry pinned) is not
+    /// repeated until the map has grown by another batch, so the
+    /// O(map) scan stays amortized on the new-client path (same
+    /// back-off the quota bucket map uses). Only read/written under
+    /// the `clients` write lock.
+    client_scan_floor: AtomicU64,
     /// end-to-end latencies (seconds), reservoir-sampled
     latencies: Mutex<Reservoir>,
     /// time spent queued before a worker picked the request up
@@ -199,6 +296,11 @@ impl Metrics {
             table_cache_hits: AtomicU64::new(0),
             table_cache_misses: AtomicU64::new(0),
             table_build_us: AtomicU64::new(0),
+            table_joins: AtomicU64::new(0),
+            builds_inflight: AtomicU64::new(0),
+            build_waiting: AtomicU64::new(0),
+            build_queue_us: AtomicU64::new(0),
+            build_failed: AtomicU64::new(0),
             table_bytes: AtomicU64::new(0),
             shed: AtomicU64::new(0),
             timed_out: AtomicU64::new(0),
@@ -211,33 +313,100 @@ impl Metrics {
             queue_depth: AtomicU64::new(0),
             in_flight: AtomicU64::new(0),
             clients: RwLock::new(HashMap::new()),
+            client_cap: DEFAULT_CLIENT_CAP,
+            client_touch: AtomicU64::new(0),
+            client_scan_floor: AtomicU64::new(0),
             latencies: Mutex::new(Reservoir::new(cap)),
             queue_waits: Mutex::new(Reservoir::new(cap)),
         }
     }
 
-    /// The counter block for `client_id`, created on first touch.
-    /// Existing clients resolve through a shared read lock with no
-    /// allocation; layers additionally cache the returned handle where
-    /// they can (the lock is per-lookup, not per-increment).
-    pub fn client(&self, client_id: &str) -> Arc<ClientStats> {
-        if let Some(stats) = self.clients.read().unwrap().get(client_id) {
-            return Arc::clone(stats);
-        }
-        let mut clients = self.clients.write().unwrap();
-        Arc::clone(
-            clients
-                .entry(client_id.to_string())
-                .or_insert_with(|| Arc::new(ClientStats::default())),
-        )
+    /// Bound the retained client entries to `cap` (min 1). Past the
+    /// cap, registering a new client evicts the least-recently-touched
+    /// *unreferenced* entry: one with no queued calls and no
+    /// outstanding strong [`ClientStats`] handle (in-flight requests
+    /// and fair queues pin the entry they charge, so their counters
+    /// can never land on an evicted block; quota buckets hold only a
+    /// weak handle and re-resolve after an eviction). While every
+    /// entry is pinned the map exceeds the cap; the holders are
+    /// transient, so it re-converges. An evicted client's history is
+    /// dropped — a later request from it starts a fresh block — so set
+    /// the cap well above the live-tenant count.
+    pub fn with_client_cap(mut self, cap: usize) -> Self {
+        self.client_cap = cap.max(1);
+        self
     }
 
-    /// Every client seen so far, sorted by id.
+    /// The counter block for `client_id`, created on first touch.
+    /// Existing clients resolve through a shared read lock with no
+    /// allocation (the touch stamp is an atomic store); layers
+    /// additionally cache the returned handle where they can (the lock
+    /// is per-lookup, not per-increment). Registering a client past
+    /// the cap evicts the least-recently-touched idle entry — see
+    /// [`Metrics::with_client_cap`].
+    pub fn client(&self, client_id: &str) -> Arc<ClientStats> {
+        let stamp = self.client_touch.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some(entry) = self.clients.read().unwrap().get(client_id) {
+            entry.touch.store(stamp, Ordering::Relaxed);
+            return Arc::clone(&entry.stats);
+        }
+        let mut clients = self.clients.write().unwrap();
+        if let Some(entry) = clients.get(client_id) {
+            // Raced with another registrar between the locks.
+            entry.touch.store(stamp, Ordering::Relaxed);
+            return Arc::clone(&entry.stats);
+        }
+        let batch = (self.client_cap / 16).max(1);
+        if clients.len() >= self.client_cap
+            && clients.len() as u64 >= self.client_scan_floor.load(Ordering::Relaxed)
+        {
+            // Evict the least-recently-touched entries (a batch per
+            // sweep, so a flood of one-shot ids amortizes the O(map)
+            // scan) that nobody else holds a strong handle to (map's
+            // own Arc only) and with no queued calls. The strong-count
+            // guard keeps eviction from orphaning live bookkeeping: an
+            // in-flight request or a fair queue with this client
+            // backlogged holds the Arc, and evicting under them would
+            // split the client's counters across a detached block and
+            // a fresh one. Those holders are transient, so pinned
+            // entries become evictable again; until then the map may
+            // exceed the cap. (Quota buckets deliberately hold only a
+            // Weak handle — they outlive this cap by design — so an
+            // evicted client's later quota denials restart on a fresh
+            // block, the same documented history loss as any
+            // eviction.)
+            let mut evictable: Vec<(u64, String)> = clients
+                .iter()
+                .filter(|(_, e)| {
+                    Arc::strong_count(&e.stats) == 1
+                        && e.stats.queue_depth.load(Ordering::Relaxed) == 0
+                })
+                .map(|(k, e)| (e.touch.load(Ordering::Relaxed), k.clone()))
+                .collect();
+            evictable.sort_unstable_by_key(|(touch, _)| *touch);
+            let victims = evictable.len().min(batch);
+            for (_, key) in evictable.into_iter().take(batch) {
+                clients.remove(&key);
+            }
+            // Nothing evictable: back off until the map grows by
+            // another batch before sweeping again.
+            let floor = if victims == 0 { (clients.len() + batch) as u64 } else { 0 };
+            self.client_scan_floor.store(floor, Ordering::Relaxed);
+        }
+        let stats = Arc::new(ClientStats::default());
+        clients.insert(
+            client_id.to_string(),
+            ClientEntry { stats: Arc::clone(&stats), touch: AtomicU64::new(stamp) },
+        );
+        stats
+    }
+
+    /// Every client currently retained, sorted by id.
     pub fn clients_snapshot(&self) -> Vec<(String, Arc<ClientStats>)> {
         let clients = self.clients.read().unwrap();
         let mut rows: Vec<_> = clients
             .iter()
-            .map(|(k, v)| (k.clone(), Arc::clone(v)))
+            .map(|(k, v)| (k.clone(), Arc::clone(&v.stats)))
             .collect();
         rows.sort_by(|a, b| a.0.cmp(&b.0));
         rows
@@ -298,7 +467,7 @@ impl Metrics {
             })
             .unwrap_or_else(|| "latency n/a".into());
         format!(
-            "submitted={} completed={} rejected={} shed={} quota_denied={} fair_shed={} adaptive_shed={} adaptive_limit={} timed_out={} hedged={} hedge_wins={} satisfied={} cache h/m={}/{} table_build_ms={:.1} table_bytes={} {}",
+            "submitted={} completed={} rejected={} shed={} quota_denied={} fair_shed={} adaptive_shed={} adaptive_limit={} timed_out={} hedged={} hedge_wins={} satisfied={} cache h/m={}/{} joins={} table_build_ms={:.1} build_queue_ms={:.1} builds_inflight={} build_waiting={} build_failed={} table_bytes={} {}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -313,7 +482,12 @@ impl Metrics {
             self.satisfied.load(Ordering::Relaxed),
             self.table_cache_hits.load(Ordering::Relaxed),
             self.table_cache_misses.load(Ordering::Relaxed),
+            self.table_joins.load(Ordering::Relaxed),
             self.table_build_us.load(Ordering::Relaxed) as f64 / 1e3,
+            self.build_queue_us.load(Ordering::Relaxed) as f64 / 1e3,
+            self.builds_inflight.load(Ordering::Relaxed),
+            self.build_waiting.load(Ordering::Relaxed),
+            self.build_failed.load(Ordering::Relaxed),
             self.table_bytes.load(Ordering::Relaxed),
             lat
         )
@@ -398,5 +572,60 @@ mod tests {
         }
         let s = m.latency_stats().unwrap();
         assert_eq!(s.n, 32, "reservoir must cap retained samples");
+    }
+
+    #[test]
+    fn client_latency_quantiles_are_per_client() {
+        let m = Metrics::new();
+        for _ in 0..50 {
+            m.client("slow").record_latency(2.0);
+        }
+        for _ in 0..50 {
+            m.client("fast").record_latency(0.001);
+        }
+        let slow = m.client("slow").latency_stats().unwrap();
+        let fast = m.client("fast").latency_stats().unwrap();
+        assert!(slow.p99 > 1.0, "slow p99 {}", slow.p99);
+        assert!(fast.p99 < 0.01, "fast p99 {}", fast.p99);
+        assert!(m.client("never").latency_stats().is_none());
+        let summary = m.client_summary();
+        assert!(summary.contains("p50="), "{summary}");
+        assert!(summary.contains("p99="), "{summary}");
+    }
+
+    #[test]
+    fn client_map_evicts_lru_idle_entries_past_the_cap() {
+        let m = Metrics::with_reservoir(8).with_client_cap(3);
+        for i in 0..3 {
+            m.client(&format!("c{i}"));
+        }
+        // Touch c0 so c1 becomes the LRU.
+        m.client("c0");
+        m.client("c3"); // evicts c1
+        let ids: Vec<String> = m.clients_snapshot().into_iter().map(|(id, _)| id).collect();
+        assert_eq!(ids, vec!["c0", "c2", "c3"]);
+        // A flood of one-shot ids stays bounded.
+        for i in 0..100 {
+            m.client(&format!("conn-{i}"));
+        }
+        assert_eq!(m.clients_snapshot().len(), 3);
+    }
+
+    #[test]
+    fn busy_clients_are_never_evicted() {
+        let m = Metrics::with_reservoir(8).with_client_cap(2);
+        let busy = m.client("busy");
+        busy.queue_depth.fetch_add(1, Ordering::Relaxed);
+        m.client("idle");
+        // Both new ids would evict the LRU; "busy" has queued calls, so
+        // "idle" goes instead (and then the cap is transiently exceeded
+        // when only busy entries remain).
+        m.client("next");
+        let ids: Vec<String> = m.clients_snapshot().into_iter().map(|(id, _)| id).collect();
+        assert!(ids.contains(&"busy".to_string()), "{ids:?}");
+        assert!(!ids.contains(&"idle".to_string()), "{ids:?}");
+        // The busy handle keeps working after surviving eviction.
+        busy.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        assert_eq!(m.client("busy").queue_depth.load(Ordering::Relaxed), 0);
     }
 }

@@ -3,11 +3,23 @@
 //! `Server` owns a bounded request queue (backpressure), a dispatcher
 //! that groups queued requests by concept set (dynamic batching: one
 //! DFA + HMM×DFA constraint table per group, the expensive symbolic
-//! precomputation), and a pool of decode workers that run the
-//! neuro-symbolic beam search against the shared quantized HMM and the
-//! LM (native n-gram or AOT HLO transformer — anything implementing
-//! [`LanguageModel`]). Metrics cover throughput, latency percentiles,
-//! queue waits and table-cache effectiveness.
+//! precomputation), a dedicated [`buildpool`] that runs cold table
+//! builds off the dispatcher thread, and a pool of decode workers that
+//! run the neuro-symbolic beam search against the shared quantized HMM
+//! and the LM (native n-gram or AOT HLO transformer — anything
+//! implementing [`LanguageModel`]). Metrics cover throughput, latency
+//! percentiles, queue waits, table-cache effectiveness and the build
+//! pipeline's depth.
+//!
+//! The dispatcher never builds: it resolves each concept group against
+//! the [`cache::LruCache`] singleflight state machine (resident →
+//! dispatch now; in-flight → park the group on the build; cold → open
+//! a pending entry and queue one build job) and moves on, so cold
+//! groups for different clients overlap and warm batches are never
+//! blocked behind a cold build. Builds honor their waiters' deadlines
+//! *dynamically*: late joiners extend the in-flight build's deadline
+//! through the shared [`buildpool::BuildControl`], and a build whose
+//! every waiter has expired cancels itself at the next level check.
 //!
 //! `Server` implements [`crate::service::Service`] over [`ServeRequest`]
 //! so it can sit at the bottom of an admission-control [`Stack`]
@@ -22,24 +34,33 @@
 //!
 //! [`Stack`]: crate::service::Stack
 
+pub mod buildpool;
 pub mod cache;
 pub mod metrics;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::data::Corpus;
 use crate::dfa::Dfa;
-use crate::generate::{decode_with_table, BuildOptions, ConstraintTable, DecodeConfig, Generation};
+use crate::generate::{
+    decode_with_table, BuildOptions, CancelProbe, ConstraintTable, DecodeConfig, Generation,
+};
 use crate::hmm::{Hmm, HmmBackend};
 use crate::lm::LanguageModel;
 use crate::quant::qhmm::QuantizedHmm;
 use crate::service::{Deadlined, Expirable, Keyed, Readiness, Service, ServiceError};
-use cache::{ByteSized, LruCache};
+use buildpool::{BuildControl, BuildJob, BuildPool};
+use cache::{ByteSized, Lookup, LruCache};
 use metrics::{ClientStats, Metrics};
+
+/// The decode-state cache specialized to the serving pipeline: values
+/// are DFA + table pairs, waiters are parked [`Request`]s, and the
+/// pending handle is the shared build control.
+type TableCache = LruCache<(Dfa, ConstraintTable), Request, Arc<BuildControl>>;
 
 /// The cached per-concept-set decode state is the DFA plus its table;
 /// the table's two f32 planes dominate, the automaton rides along.
@@ -162,6 +183,11 @@ pub struct Response {
     /// The request's deadline fired before decoding finished; `text`
     /// holds whatever was generated by then (possibly empty).
     pub timed_out: bool,
+    /// The request could not be served: its group's constraint-table
+    /// build failed (panicked model code, or the build pool was gone).
+    /// [`Service::call`] surfaces this as [`ServiceError::Failed`];
+    /// only the failing group is affected, the server keeps serving.
+    pub failed: bool,
     /// Submission-to-response wall time.
     pub latency: Duration,
     /// The part of `latency` spent waiting for dispatch.
@@ -171,6 +197,12 @@ pub struct Response {
 impl Expirable for Response {
     fn expired(&self) -> bool {
         self.timed_out
+    }
+}
+
+impl crate::service::Queued for Response {
+    fn queue_wait(&self) -> Duration {
+        self.queue_wait
     }
 }
 
@@ -194,6 +226,10 @@ pub struct ServerConfig {
     /// DFA states (1 = serial; the engine stays serial anyway when the
     /// per-level work is too small to amortize spawning).
     pub table_threads: usize,
+    /// Dedicated build-pool workers: how many *distinct* cold concept
+    /// groups build concurrently (CLI `--build-threads`). Each build
+    /// may additionally parallelize internally via `table_threads`.
+    pub build_threads: usize,
     /// Model representation the table engine runs over.
     pub table_backend: TableBackend,
     /// Beam-search configuration shared by every request.
@@ -209,6 +245,7 @@ impl Default for ServerConfig {
             max_batch: 16,
             table_cache_bytes: 64 << 20,
             table_threads: crate::util::threadpool::default_threads(),
+            build_threads: crate::util::threadpool::default_threads(),
             table_backend: TableBackend::Dense,
             decode: DecodeConfig::default(),
         }
@@ -227,7 +264,7 @@ struct Shared {
     corpus: Corpus,
     cfg: ServerConfig,
     metrics: Arc<Metrics>,
-    tables: Mutex<LruCache<(Dfa, ConstraintTable)>>,
+    tables: Mutex<TableCache>,
 }
 
 /// A dispatched batch: one concept group with its shared decode state.
@@ -250,6 +287,7 @@ pub struct Server {
     metrics: Arc<Metrics>,
     dispatcher: Mutex<Option<JoinHandle<()>>>,
     workers: Mutex<Vec<JoinHandle<()>>>,
+    build_pool: Arc<BuildPool>,
     next_id: AtomicU64,
 }
 
@@ -275,10 +313,12 @@ impl Server {
         let (intake, intake_rx) = sync_channel::<Request>(cfg.queue_capacity);
         let (work_tx, work_rx) = sync_channel::<Batch>(cfg.workers * 2);
         let work_rx = Arc::new(Mutex::new(work_rx));
+        let build_pool = Arc::new(BuildPool::new(cfg.build_threads));
 
         let dispatcher = {
             let shared = Arc::clone(&shared);
-            std::thread::spawn(move || dispatcher_loop(intake_rx, work_tx, shared))
+            let pool = Arc::clone(&build_pool);
+            std::thread::spawn(move || dispatcher_loop(intake_rx, work_tx, shared, pool))
         };
         let workers = (0..cfg.workers)
             .map(|_| {
@@ -294,6 +334,7 @@ impl Server {
             metrics,
             dispatcher: Mutex::new(Some(dispatcher)),
             workers: Mutex::new(workers),
+            build_pool,
             next_id: AtomicU64::new(0),
         }
     }
@@ -364,12 +405,18 @@ impl Server {
     /// Graceful shutdown: stop intake, drain, join all threads.
     /// Idempotent; takes `&self` so a server shared behind `Arc` (e.g.
     /// at the bottom of a middleware stack) can still be stopped.
+    /// Ordering matters: the dispatcher is joined first (no new build
+    /// jobs), then the build pool drains its queue (in-flight builds
+    /// finish, their waiters are dispatched or answered), and only
+    /// then do the decode workers see their channel close and exit —
+    /// no parked request is ever stranded.
     pub fn shutdown(&self) {
         self.open.store(false, Ordering::Relaxed);
         drop(self.intake.lock().unwrap().take());
         if let Some(d) = self.dispatcher.lock().unwrap().take() {
             let _ = d.join();
         }
+        self.build_pool.shutdown();
         let workers: Vec<JoinHandle<()>> = self.workers.lock().unwrap().drain(..).collect();
         for w in workers {
             let _ = w.join();
@@ -398,7 +445,11 @@ impl Service<ServeRequest> for Server {
 
     fn call(&self, req: ServeRequest) -> Result<Response, ServiceError> {
         let rx = self.submit_request(req)?;
-        rx.recv().map_err(|_| ServiceError::Closed)
+        let resp = rx.recv().map_err(|_| ServiceError::Closed)?;
+        if resp.failed {
+            return Err(ServiceError::Failed("constraint-table build failed".into()));
+        }
+        Ok(resp)
     }
 }
 
@@ -438,11 +489,41 @@ fn concept_key(concepts: &[String]) -> String {
     sorted.join("\u{1f}")
 }
 
-/// Reply `timed_out` to a request whose deadline fired before any
-/// decode work could start (its group's table build expired), and
-/// release its admission slot. Mirrors the worker's bookkeeping except
-/// that no latency is recorded — a timed-out answer is not decode work.
-fn answer_timed_out(shared: &Shared, req: Request) {
+/// The effective build deadline for a group of waiters: the *latest*
+/// member deadline (as long as one member is still waiting the table
+/// is worth finishing); a member with no deadline keeps it unbounded.
+fn group_deadline(requests: &[Request]) -> Option<Instant> {
+    if requests.iter().any(|r| r.deadline.is_none()) {
+        None
+    } else {
+        requests.iter().filter_map(|r| r.deadline).max()
+    }
+}
+
+/// Estimated resident bytes of the finished `(Dfa, ConstraintTable)`
+/// pair, reserved against the cache's byte budget while the build is
+/// in flight. The table share ([`ConstraintTable::estimate_bytes`],
+/// which mirrors the real storage layout) is exact — only the DFA's
+/// share is approximate — so a storm of concurrent builds cannot
+/// silently oversubscribe the budget.
+fn estimate_state_bytes(dfa: &Dfa, max_budget: usize, hidden: usize) -> usize {
+    dfa.approx_bytes() + ConstraintTable::estimate_bytes(max_budget, dfa.n_states(), hidden)
+}
+
+/// Why a request is being answered without any decode work: its
+/// group's build expired past every waiter's deadline, or it failed
+/// (panicked model code / build pool gone).
+#[derive(Clone, Copy)]
+enum Unserved {
+    TimedOut,
+    Failed,
+}
+
+/// Answer a request that never reached a decode worker and release its
+/// admission slot. Counted as completed — the request *was* answered —
+/// so per-client conservation (`offered = completed + shed`) holds; no
+/// latency is recorded, since an unserved answer is not decode work.
+fn answer_unserved(shared: &Shared, req: Request, why: Unserved) {
     shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
     req.client_stats.completed.fetch_add(1, Ordering::Relaxed);
     let waited = req.submitted_at.elapsed();
@@ -453,15 +534,274 @@ fn answer_timed_out(shared: &Shared, req: Request) {
         id: req.id,
         text: String::new(),
         satisfied: false,
-        timed_out: true,
+        timed_out: matches!(why, Unserved::TimedOut),
+        failed: matches!(why, Unserved::Failed),
         latency: waited,
         queue_wait: waited,
     });
 }
 
-fn dispatcher_loop(intake: Receiver<Request>, work: SyncSender<Batch>, shared: Arc<Shared>) {
+/// Send one group's requests to the decode workers in `max_batch`
+/// chunks. Returns `false` when the decode pool is gone — the slots of
+/// every undelivered request are returned so `poll_ready` stays
+/// truthful (a dead pipeline reads as `Busy` to an outer `LoadShed`).
+fn dispatch_batches(
+    shared: &Shared,
+    work: &SyncSender<Batch>,
+    state: Arc<(Dfa, ConstraintTable)>,
+    mut requests: Vec<Request>,
+) -> bool {
+    let max_batch = shared.cfg.max_batch;
+    while !requests.is_empty() {
+        let tail = requests.split_off(requests.len().min(max_batch));
+        let batch = Batch {
+            requests: std::mem::replace(&mut requests, tail),
+            state: Arc::clone(&state),
+            dispatched_at: Instant::now(),
+        };
+        if let Err(dead) = work.send(batch) {
+            let undelivered = dead.0.requests.len() + requests.len();
+            shared
+                .metrics
+                .in_flight
+                .fetch_sub(undelivered as u64, Ordering::Relaxed);
+            return false;
+        }
+    }
+    true
+}
+
+/// Tear the pending entry for `key` down — release its byte
+/// reservation, refresh the `table_bytes` gauge, un-count its waiters
+/// from `build_waiting` — and return the waiters. The one teardown
+/// path under every abandonment (cancellation, panic, pool shutdown);
+/// only what happens to the returned waiters differs per caller.
+fn take_pending(shared: &Shared, key: &str) -> Vec<Request> {
+    let waiters = {
+        let mut tables = shared.tables.lock().unwrap();
+        let w = tables.abort(key);
+        shared
+            .metrics
+            .table_bytes
+            .store(tables.used_bytes() as u64, Ordering::Relaxed);
+        w
+    };
+    shared
+        .metrics
+        .build_waiting
+        .fetch_sub(waiters.len() as u64, Ordering::Relaxed);
+    waiters
+}
+
+/// Tear down the pending entry for `key` and answer its waiters with a
+/// failed response (the build panicked, or the pool rejected the job).
+fn fail_pending(shared: &Shared, key: &str) {
+    for req in take_pending(shared, key) {
+        answer_unserved(shared, req, Unserved::Failed);
+    }
+}
+
+/// Resolve one concept group against the cache's singleflight state
+/// machine: dispatch immediately on a resident table (hit), park the
+/// group on an in-flight build and extend its deadline (join), or open
+/// a pending entry and queue exactly one build job (miss). Returns
+/// `false` when the decode pool is gone.
+fn resolve_group(
+    shared: &Arc<Shared>,
+    work: &SyncSender<Batch>,
+    pool: &Weak<BuildPool>,
+    key: &str,
+    requests: Vec<Request>,
+) -> bool {
+    let deadline = group_deadline(&requests);
+    let n = requests.len() as u64;
+    // Compile the group's DFA *outside* the cache lock when the key
+    // looks cold (a large keyword set compiles in milliseconds —
+    // holding the lock for it would stall completing builds and
+    // re-serialize the pipeline). Warm groups skip the compile; the
+    // rare peek-then-lookup race just recompiles under the lock.
+    let concepts = requests[0].concepts.clone();
+    let compile_dfa = move || {
+        let keywords: Vec<Vec<usize>> = concepts
+            .iter()
+            .map(|c| vec![shared.corpus.vocab.id(c)])
+            .collect();
+        Dfa::from_keywords(&keywords, shared.corpus.vocab.len())
+    };
+    let mut precompiled: Option<Dfa> = {
+        let cold = !shared.tables.lock().unwrap().contains(key);
+        cold.then(&compile_dfa)
+    };
+    let mut new_dfa = None;
+    let resolved = {
+        let mut tables = shared.tables.lock().unwrap();
+        let lookup = tables.lookup(key, requests, || {
+            // Cold key: take the precompiled DFA (or compile here if
+            // the entry vanished between peek and lookup) so the byte
+            // reservation is exact; the expensive table build goes to
+            // the pool.
+            let dfa = precompiled.take().unwrap_or_else(&compile_dfa);
+            let reserve =
+                estimate_state_bytes(&dfa, shared.cfg.decode.max_tokens, shared.model.hidden());
+            new_dfa = Some(dfa);
+            (Arc::new(BuildControl::new(deadline)), reserve)
+        });
+        // Counter updates for attached waiters happen under the cache
+        // lock: the build can only collect these waiters (and
+        // decrement `build_waiting`) through the same lock, so every
+        // decrement is ordered after its increment and the gauge can
+        // never transiently wrap.
+        match &lookup {
+            Lookup::Ready(..) => {
+                shared.metrics.table_cache_hits.fetch_add(1, Ordering::Relaxed);
+            }
+            Lookup::Joined(ctl) => {
+                // Extend right after attaching, still under the lock.
+                ctl.extend(deadline);
+                shared.metrics.table_joins.fetch_add(1, Ordering::Relaxed);
+                shared.metrics.build_waiting.fetch_add(n, Ordering::Relaxed);
+            }
+            Lookup::Started(_) => {
+                shared.metrics.table_cache_misses.fetch_add(1, Ordering::Relaxed);
+                shared.metrics.build_waiting.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        shared
+            .metrics
+            .table_bytes
+            .store(tables.used_bytes() as u64, Ordering::Relaxed);
+        lookup
+    };
+    match resolved {
+        Lookup::Ready(state, requests) => dispatch_batches(shared, work, state, requests),
+        Lookup::Joined(_) => true,
+        Lookup::Started(ctl) => {
+            spawn_build(shared, work, pool, key.to_string(), new_dfa.expect("factory ran"), ctl);
+            true
+        }
+    }
+}
+
+/// Queue one build job for `key` on the pool. Jobs hold only a weak
+/// pool handle (for cancellation re-resolution), so the queue never
+/// keeps its own pool alive through a reference cycle.
+fn spawn_build(
+    shared: &Arc<Shared>,
+    work: &SyncSender<Batch>,
+    pool: &Weak<BuildPool>,
+    key: String,
+    dfa: Dfa,
+    ctl: Arc<BuildControl>,
+) {
+    let Some(strong) = pool.upgrade() else {
+        fail_pending(shared, &key);
+        return;
+    };
+    shared.metrics.builds_inflight.fetch_add(1, Ordering::Relaxed);
+    let queued_at = Instant::now();
+    let run = {
+        let shared = Arc::clone(shared);
+        let work = work.clone();
+        let pool = Weak::clone(pool);
+        let key = key.clone();
+        move || run_build(shared, work, pool, key, dfa, ctl, queued_at)
+    };
+    let on_panic = {
+        let shared = Arc::clone(shared);
+        let key = key.clone();
+        move || {
+            shared.metrics.build_failed.fetch_add(1, Ordering::Relaxed);
+            shared.metrics.builds_inflight.fetch_sub(1, Ordering::Relaxed);
+            fail_pending(&shared, &key);
+        }
+    };
+    if !strong.spawn(BuildJob::new(run, on_panic)) {
+        // The pool shut down under us; the job (and its closures) was
+        // dropped unrun, so fail the group here.
+        shared.metrics.builds_inflight.fetch_sub(1, Ordering::Relaxed);
+        fail_pending(shared, &key);
+    }
+}
+
+/// One build job: run the HMM×DFA recursion under the group's dynamic
+/// deadline ([`BuildControl`] as the [`CancelProbe`]), then swap the
+/// pending entry to ready and dispatch every parked waiter. A
+/// cancelled build answers its expired waiters `timed_out`; a waiter
+/// that joined inside the cancellation window still has a live
+/// deadline and is re-resolved (fresh build or re-park) rather than
+/// being answered dead.
+fn run_build(
+    shared: Arc<Shared>,
+    work: SyncSender<Batch>,
+    pool: Weak<BuildPool>,
+    key: String,
+    dfa: Dfa,
+    ctl: Arc<BuildControl>,
+    queued_at: Instant,
+) {
+    shared
+        .metrics
+        .build_queue_us
+        .fetch_add(queued_at.elapsed().as_micros() as u64, Ordering::Relaxed);
+    let opts = BuildOptions {
+        deadline: None,
+        threads: shared.cfg.table_threads,
+        cancel: Some(Arc::clone(&ctl) as Arc<dyn CancelProbe>),
+    };
+    let build_start = Instant::now();
+    let built =
+        ConstraintTable::build_with(&*shared.model, &dfa, shared.cfg.decode.max_tokens, &opts);
+    match built {
+        Some(table) => {
+            shared
+                .metrics
+                .table_build_us
+                .fetch_add(build_start.elapsed().as_micros() as u64, Ordering::Relaxed);
+            let (state, waiters) = {
+                let mut tables = shared.tables.lock().unwrap();
+                let r = tables.complete(&key, (dfa, table));
+                shared
+                    .metrics
+                    .table_bytes
+                    .store(tables.used_bytes() as u64, Ordering::Relaxed);
+                r
+            };
+            shared
+                .metrics
+                .build_waiting
+                .fetch_sub(waiters.len() as u64, Ordering::Relaxed);
+            shared.metrics.builds_inflight.fetch_sub(1, Ordering::Relaxed);
+            dispatch_batches(&shared, &work, state, waiters);
+        }
+        None => {
+            // Cancelled: at the probe check, every then-attached
+            // waiter's deadline had passed. A partial table is useless
+            // and is not cached.
+            let waiters = take_pending(&shared, &key);
+            shared.metrics.builds_inflight.fetch_sub(1, Ordering::Relaxed);
+            let now = Instant::now();
+            let (expired, live): (Vec<Request>, Vec<Request>) = waiters
+                .into_iter()
+                .partition(|r| r.deadline.is_some_and(|d| now >= d));
+            for req in expired {
+                answer_unserved(&shared, req, Unserved::TimedOut);
+            }
+            if !live.is_empty() {
+                resolve_group(&shared, &work, &pool, &key, live);
+            }
+        }
+    }
+}
+
+fn dispatcher_loop(
+    intake: Receiver<Request>,
+    work: SyncSender<Batch>,
+    shared: Arc<Shared>,
+    pool: Arc<BuildPool>,
+) {
     let window = shared.cfg.batch_window;
     let max_batch = shared.cfg.max_batch;
+    let weak_pool = Arc::downgrade(&pool);
     let pop = |r: Request| {
         shared.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
         r
@@ -486,113 +826,32 @@ fn dispatcher_loop(intake: Receiver<Request>, work: SyncSender<Batch>, shared: A
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        // Group by concept set; one shared table per group.
+        // Group by concept set; one shared table per group. The
+        // dispatcher only *resolves* each group against the cache —
+        // builds run on the pool — so a window full of cold groups
+        // costs this thread a few cache transitions, not K builds.
         let mut groups: std::collections::HashMap<String, Vec<Request>> =
             std::collections::HashMap::new();
         for r in pending {
             groups.entry(concept_key(&r.concepts)).or_default().push(r);
         }
-        // When the worker pool is gone (work.send fails) we stop
+        // When the decode pool is gone (work.send fails) we stop
         // dispatching, but every already-popped request in this window
         // still holds an admission slot that must be returned.
-        let mut pool_dead = false;
+        let mut decode_dead = false;
         for (key, requests) in groups {
-            if pool_dead {
+            if decode_dead {
                 shared
                     .metrics
                     .in_flight
                     .fetch_sub(requests.len() as u64, Ordering::Relaxed);
                 continue;
             }
-            let concepts = requests[0].concepts.clone();
-            // A cold concept set pays the table build (O(T·D·H²) dense,
-            // O(T·D·nnz) over the sparse quantized backend) before
-            // any member decodes, so the build honors the group's
-            // deadline: the *latest* deadline in the group (as long as
-            // one member is still waiting the table is worth
-            // finishing); a member with no deadline keeps it unbounded.
-            let build_deadline = if requests.iter().any(|r| r.deadline.is_none()) {
-                None
-            } else {
-                requests.iter().filter_map(|r| r.deadline).max()
-            };
-            let cached = shared.tables.lock().unwrap().get(&key);
-            let state = match cached {
-                Some(state) => {
-                    shared.metrics.table_cache_hits.fetch_add(1, Ordering::Relaxed);
-                    state
-                }
-                None => {
-                    shared.metrics.table_cache_misses.fetch_add(1, Ordering::Relaxed);
-                    let keywords: Vec<Vec<usize>> = concepts
-                        .iter()
-                        .map(|c| vec![shared.corpus.vocab.id(c)])
-                        .collect();
-                    let dfa = Dfa::from_keywords(&keywords, shared.corpus.vocab.len());
-                    let build_opts = BuildOptions {
-                        deadline: build_deadline,
-                        threads: shared.cfg.table_threads,
-                    };
-                    let build_start = Instant::now();
-                    match ConstraintTable::build_with(
-                        &*shared.model,
-                        &dfa,
-                        shared.cfg.decode.max_tokens,
-                        &build_opts,
-                    ) {
-                        Some(table) => {
-                            let build_us = build_start.elapsed().as_micros() as u64;
-                            shared
-                                .metrics
-                                .table_build_us
-                                .fetch_add(build_us, Ordering::Relaxed);
-                            let mut tables = shared.tables.lock().unwrap();
-                            let state = tables.insert(&key, (dfa, table));
-                            shared
-                                .metrics
-                                .table_bytes
-                                .store(tables.used_bytes() as u64, Ordering::Relaxed);
-                            state
-                        }
-                        None => {
-                            // Every deadline in the group fired before
-                            // the table was complete: answer timed_out
-                            // now (a partial table is useless and is
-                            // not cached) instead of queueing dead work.
-                            for req in requests {
-                                answer_timed_out(&shared, req);
-                            }
-                            continue;
-                        }
-                    }
-                }
-            };
-            // Split oversized groups into max_batch chunks.
-            let mut requests = requests;
-            while !requests.is_empty() {
-                let tail = requests.split_off(requests.len().min(max_batch));
-                let batch = Batch {
-                    requests: std::mem::replace(&mut requests, tail),
-                    state: Arc::clone(&state),
-                    dispatched_at: Instant::now(),
-                };
-                if let Err(dead) = work.send(batch) {
-                    // Return the slots of the failed batch and this
-                    // group's tail; the groups loop returns the rest.
-                    // (Anything still in the intake keeps its slot, so a
-                    // dead pipeline reads as Busy — which is what an
-                    // outer LoadShed should see.)
-                    let undelivered = dead.0.requests.len() + requests.len();
-                    shared
-                        .metrics
-                        .in_flight
-                        .fetch_sub(undelivered as u64, Ordering::Relaxed);
-                    pool_dead = true;
-                    break;
-                }
+            if !resolve_group(&shared, &work, &weak_pool, &key, requests) {
+                decode_dead = true;
             }
         }
-        if pool_dead {
+        if decode_dead {
             return;
         }
     }
@@ -644,6 +903,7 @@ fn worker_loop(work: Arc<Mutex<Receiver<Batch>>>, shared: Arc<Shared>) {
                 shared
                     .metrics
                     .record_latency(latency.as_secs_f64(), queue_wait.as_secs_f64());
+                req.client_stats.record_latency(latency.as_secs_f64());
             }
             // Release before replying so a caller that sees the
             // response also sees the freed admission slot.
@@ -653,6 +913,7 @@ fn worker_loop(work: Arc<Mutex<Receiver<Batch>>>, shared: Arc<Shared>) {
                 text: shared.corpus.vocab.decode(&gen.tokens),
                 satisfied: gen.satisfied,
                 timed_out: gen.timed_out,
+                failed: false,
                 latency,
                 queue_wait,
             });

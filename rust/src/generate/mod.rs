@@ -31,7 +31,7 @@ use crate::data::vocab::EOS;
 use crate::dfa::Dfa;
 use crate::hmm::HmmBackend;
 use crate::lm::LanguageModel;
-pub use product::{BuildOptions, ConstraintTable};
+pub use product::{BuildOptions, CancelProbe, ConstraintTable};
 
 /// Decoder configuration (paper §IV-A: beam 128 on GPT2-large; scaled
 /// default here, configurable from the CLI).
@@ -103,7 +103,7 @@ pub fn decode(
 ) -> Generation {
     let vocab = model.vocab();
     assert_eq!(lm.vocab(), vocab, "LM/HMM vocabulary mismatch");
-    let opts = BuildOptions { deadline: cfg.deadline, threads: 1 };
+    let opts = BuildOptions { deadline: cfg.deadline, ..Default::default() };
     let table = match ConstraintTable::build_with(model, dfa, cfg.max_tokens, &opts) {
         Some(table) => table,
         None => {
@@ -122,7 +122,10 @@ pub fn decode(
 /// tables per concept set). Every per-step weight read — the
 /// `u @ emit` acceptance product, the exception/EOS corrections, and
 /// the forward step — goes through the [`HmmBackend`], so the beam
-/// loop runs weight-sparse on a quantized backend.
+/// loop runs weight-sparse on a quantized backend. The handful of
+/// exception emission columns the correction loop needs are gathered
+/// into a dense scratch once per request (not re-read entry-by-entry
+/// per step), matching what the table engine does at build time.
 pub fn decode_with_table(
     lm: &dyn LanguageModel,
     model: &dyn HmmBackend,
@@ -143,6 +146,26 @@ pub fn decode_with_table(
     let mut lp = vec![0f32; vocab];
     let mut w = vec![0f32; vocab];
     let mut u = vec![0f32; h_n];
+
+    // The exception/EOS corrections read single emission entries
+    // (`emit_at` — a per-(h, tok) binary search on a sparse backend)
+    // for the same handful of tokens at every step of every beam.
+    // Gather each distinct exception column into a dense scratch ONCE
+    // per request instead — the same trick the table engine applies at
+    // build time. Built via `emit_at` entry by entry, so the cached
+    // column is bit-identical to what the loop read before (including
+    // the uniform fallback for fully-pruned rows).
+    let gather_col = |tok: usize| -> Vec<f32> {
+        (0..h_n).map(|h| model.emit_at(h, tok)).collect()
+    };
+    let mut exc_cols: std::collections::HashMap<usize, Vec<f32>> =
+        std::collections::HashMap::new();
+    for d in 0..dfa.n_states() as u32 {
+        for &(tok, _) in dfa.exceptions(d) {
+            exc_cols.entry(tok as usize).or_insert_with(|| gather_col(tok as usize));
+        }
+    }
+    exc_cols.entry(EOS).or_insert_with(|| gather_col(EOS));
 
     let mut timed_out = false;
     for t in 0..cfg.max_tokens {
@@ -175,14 +198,14 @@ pub fn decode_with_table(
             model.emit_vecmat(&u, &mut w);
             maybe_qdq(&mut w, cfg.act_bits);
 
-            // Exception tokens: per-token class correction.
+            // Exception tokens: per-token class correction over the
+            // request-cached emission columns.
             for &(tok, next_d) in dfa.exceptions(beam.dfa_state) {
                 let c_exc = table.c(remaining - 1, next_d);
+                let col = &exc_cols[&(tok as usize)];
                 let mut acc = 0f64;
                 for h in 0..h_n {
-                    acc += alpha_q[h] as f64
-                        * model.emit_at(h, tok as usize) as f64
-                        * c_exc[h] as f64;
+                    acc += alpha_q[h] as f64 * col[h] as f64 * c_exc[h] as f64;
                 }
                 w[tok as usize] = acc as f32;
             }
@@ -190,9 +213,10 @@ pub fn decode_with_table(
             // EOS ends generation now: acceptance must hold immediately.
             let eos_next = dfa.next(beam.dfa_state, EOS);
             if dfa.is_accepting(eos_next) {
+                let col = &exc_cols[&EOS];
                 let mut acc = 0f64;
                 for h in 0..h_n {
-                    acc += alpha_q[h] as f64 * model.emit_at(h, EOS) as f64;
+                    acc += alpha_q[h] as f64 * col[h] as f64;
                 }
                 w[EOS] = acc as f32;
             } else {

@@ -33,17 +33,30 @@
 //! still checked once per level.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::dfa::Dfa;
 use crate::hmm::{Hmm, HmmBackend};
 use crate::util::threadpool;
 
+/// Dynamic cancellation probe for an in-flight table build, checked at
+/// the same per-level cadence as [`BuildOptions::deadline`]. Unlike the
+/// static deadline, the probe's answer may *change while the build
+/// runs*: the serving layer's singleflight cache shares one probe
+/// between a running build and late-arriving waiters, so a waiter that
+/// joins mid-build can extend the effective deadline, and a build whose
+/// every waiter has expired reads `cancelled() == true` at the next
+/// level boundary and is abandoned.
+pub trait CancelProbe: Send + Sync {
+    /// True when the build should be abandoned at the next level check.
+    fn cancelled(&self) -> bool;
+}
+
 /// How [`ConstraintTable::build_with`] runs: the cooperative deadline
-/// (checked once per budget level) and the worker-thread budget for
-/// parallelizing each level across DFA states.
-#[derive(Clone, Copy, Debug)]
+/// and cancellation probe (both checked once per budget level) and the
+/// worker-thread budget for parallelizing each level across DFA states.
+#[derive(Clone)]
 pub struct BuildOptions {
     /// Abandon the build (returning `None`) once this instant passes;
     /// checked before every budget level, so the overshoot is at most
@@ -53,11 +66,33 @@ pub struct BuildOptions {
     /// engine stays serial regardless when the estimated per-level
     /// work would not amortize the scoped-spawn cost.
     pub threads: usize,
+    /// Dynamic cancellation hook, checked alongside `deadline` at
+    /// every level boundary. `None` means never cancelled externally.
+    pub cancel: Option<Arc<dyn CancelProbe>>,
 }
 
 impl Default for BuildOptions {
     fn default() -> Self {
-        BuildOptions { deadline: None, threads: 1 }
+        BuildOptions { deadline: None, threads: 1, cancel: None }
+    }
+}
+
+impl std::fmt::Debug for BuildOptions {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BuildOptions")
+            .field("deadline", &self.deadline)
+            .field("threads", &self.threads)
+            .field("cancel", &self.cancel.as_ref().map(|_| "<probe>"))
+            .finish()
+    }
+}
+
+impl BuildOptions {
+    /// Whether the build should stop at this level boundary: the
+    /// static deadline has passed or the dynamic probe fired.
+    fn expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+            || self.cancel.as_ref().is_some_and(|c| c.cancelled())
     }
 }
 
@@ -121,7 +156,7 @@ impl ConstraintTable {
         max_budget: usize,
         deadline: Option<Instant>,
     ) -> Option<ConstraintTable> {
-        Self::build_with(model, dfa, max_budget, &BuildOptions { deadline, threads: 1 })
+        Self::build_with(model, dfa, max_budget, &BuildOptions { deadline, ..Default::default() })
     }
 
     /// Build the table over any [`HmmBackend`] — dense FP32 or sparse
@@ -133,7 +168,7 @@ impl ConstraintTable {
         max_budget: usize,
         opts: &BuildOptions,
     ) -> Option<ConstraintTable> {
-        if opts.deadline.is_some_and(|d| Instant::now() >= d) {
+        if opts.expired() {
             return None;
         }
         let h_n = model.hidden();
@@ -180,7 +215,7 @@ impl ConstraintTable {
         }
 
         for r in 1..=max_budget {
-            if opts.deadline.is_some_and(|d| Instant::now() >= d) {
+            if opts.expired() {
                 return None;
             }
             // A-step: default-class contribution plus per-exception
@@ -244,6 +279,16 @@ impl ConstraintTable {
     /// `2 · (T+1) · D · H · 4`.
     pub fn bytes(&self) -> usize {
         (self.a.len() + self.c.len()) * std::mem::size_of::<f32>()
+    }
+
+    /// What [`ConstraintTable::bytes`] will report for a table built
+    /// with these dimensions, computable *before* the build — the
+    /// serving layer reserves this against its cache budget while the
+    /// build is in flight. Lives here, next to the storage layout it
+    /// mirrors, so a representation change cannot silently diverge
+    /// the reservation from the real footprint.
+    pub fn estimate_bytes(max_budget: usize, dfa_states: usize, hidden: usize) -> usize {
+        2 * (max_budget + 1) * dfa_states * hidden * std::mem::size_of::<f32>()
     }
 
     /// Overall acceptance probability from the initial belief:
@@ -350,6 +395,49 @@ mod tests {
         }
     }
 
+    /// The dynamic probe cancels a build mid-way: tripping it after N
+    /// levels aborts the recursion (returns `None`), while a probe that
+    /// never fires leaves the build untouched.
+    #[test]
+    fn cancel_probe_aborts_the_build_between_levels() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        struct AfterLevels(AtomicUsize);
+        impl CancelProbe for AfterLevels {
+            fn cancelled(&self) -> bool {
+                // Fires on the third per-level check and after.
+                self.0.fetch_add(1, Ordering::Relaxed) >= 2
+            }
+        }
+
+        let mut rng = Rng::seeded(78);
+        let hmm = Hmm::random(4, 8, 0.5, 0.5, &mut rng);
+        let dfa = Dfa::from_keywords(&[vec![1]], 8);
+        let tripping = BuildOptions {
+            cancel: Some(Arc::new(AfterLevels(AtomicUsize::new(0)))),
+            ..Default::default()
+        };
+        assert!(
+            ConstraintTable::build_with(&hmm, &dfa, 8, &tripping).is_none(),
+            "a probe firing mid-build must abandon it"
+        );
+
+        struct Never;
+        impl CancelProbe for Never {
+            fn cancelled(&self) -> bool {
+                false
+            }
+        }
+        let quiet = BuildOptions { cancel: Some(Arc::new(Never)), ..Default::default() };
+        let bounded = ConstraintTable::build_with(&hmm, &dfa, 8, &quiet).unwrap();
+        let unbounded = ConstraintTable::build(&hmm, &dfa, 8);
+        for r in 0..=8usize {
+            for d in 0..dfa.n_states() as u32 {
+                assert_eq!(bounded.a(r, d), unbounded.a(r, d), "r={r} d={d}");
+            }
+        }
+    }
+
     #[test]
     fn acceptance_monotone_in_budget() {
         // More remaining tokens can only help satisfy the constraint.
@@ -406,6 +494,11 @@ mod tests {
         let dfa = Dfa::from_keywords(&[vec![1]], 8);
         let table = ConstraintTable::build(&hmm, &dfa, 5);
         assert_eq!(table.bytes(), 2 * 6 * dfa.n_states() * 4 * 4);
+        // The pre-build estimate must track the real footprint exactly.
+        assert_eq!(
+            table.bytes(),
+            ConstraintTable::estimate_bytes(5, dfa.n_states(), 4)
+        );
     }
 
     /// The satellite equivalence property: the table built over the
@@ -452,10 +545,10 @@ mod tests {
         let q = QuantizedHmm::from_hmm(&hmm, 8);
         let dfa = Dfa::from_keywords(&[vec![2]], 16);
         let expired = Instant::now() - std::time::Duration::from_millis(1);
-        let opts = BuildOptions { deadline: Some(expired), threads: 1 };
+        let opts = BuildOptions { deadline: Some(expired), ..Default::default() };
         assert!(ConstraintTable::build_with(&q, &dfa, 8, &opts).is_none());
         let far = Instant::now() + std::time::Duration::from_secs(600);
-        let opts = BuildOptions { deadline: Some(far), threads: 1 };
+        let opts = BuildOptions { deadline: Some(far), ..Default::default() };
         assert!(ConstraintTable::build_with(&q, &dfa, 8, &opts).is_some());
     }
 
@@ -512,7 +605,7 @@ mod tests {
         );
         let serial =
             ConstraintTable::build_with(&hmm, &dfa, 4, &BuildOptions::default()).unwrap();
-        let opts = BuildOptions { deadline: None, threads: 4 };
+        let opts = BuildOptions { threads: 4, ..Default::default() };
         let parallel = ConstraintTable::build_with(&hmm, &dfa, 4, &opts).unwrap();
         for r in 0..=4usize {
             for d in 0..dfa.n_states() as u32 {

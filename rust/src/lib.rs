@@ -30,8 +30,9 @@
 //!   (deadline propagation) and hedging middlewares, composed with
 //!   `service::Stack`.
 //! - [`coordinator`] — bounded intake queue, concept-set batching
-//!   dispatcher, decode worker pool, table cache, serving metrics
-//!   (global and per-client). The `Server` implements
+//!   dispatcher, the asynchronous table-build pipeline (singleflight
+//!   table cache + dedicated build pool), decode worker pool, and
+//!   serving metrics (global and per-client). The `Server` implements
 //!   `service::Service` and sits at the bottom of the stack.
 //! - [`generate`] — the constrained beam decoder (honors per-request
 //!   deadlines via `DecodeConfig::deadline`, including during

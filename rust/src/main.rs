@@ -36,7 +36,7 @@ USAGE:
               [--rate RPS] [--burst N] [--quota RPS] [--quota-burst N]
               [--fair SLOTS] [--fair-queue N] [--delay-budget-ms MS]
               [--timeout-ms MS] [--hedge-ms MS] [--table-bits B]
-              [--table-cache-mb MB] [--table-threads N]
+              [--table-cache-mb MB] [--table-threads N] [--build-threads N]
   normq smoke [--artifacts DIR]
   normq corpus [--n N] [--eval]
 
@@ -64,7 +64,10 @@ constraint-table builds and per-step beam scoring are both O(nnz)
 instead of O(H^2)/O(H*V), and no dense FP32 weight is ever read
 (the paper's >=99% weight compression, live in the server);
 --table-cache-mb bounds the byte-budgeted table cache;
---table-threads parallelizes one build across DFA states.
+--table-threads parallelizes one build across DFA states;
+--build-threads sizes the dedicated build pool (how many distinct
+cold concept groups build concurrently — the dispatcher never builds,
+so warm batches are not blocked behind cold builds).
 ";
 
 fn main() {
@@ -80,6 +83,7 @@ fn main() {
         "workers", "artifacts", "n", "out", "heatmap", "queue", "clients", "client-ids", "climit",
         "rate", "burst", "quota", "quota-burst", "fair", "fair-queue", "delay-budget-ms",
         "timeout-ms", "hedge-ms", "table-bits", "table-cache-mb", "table-threads",
+        "build-threads",
     ]);
     let args = match Args::parse(&argv, &value_keys) {
         Ok(a) => a,
@@ -179,6 +183,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         queue_capacity: args.usize("queue", 256)?,
         table_cache_bytes: args.usize("table-cache-mb", 64)? << 20,
         table_threads: args.usize("table-threads", normq::util::threadpool::default_threads())?,
+        build_threads: args
+            .usize("build-threads", normq::util::threadpool::default_threads())?
+            .max(1),
         table_backend,
         decode: DecodeConfig {
             beam: ctx.decode.beam,

@@ -6,7 +6,10 @@
 //! cost shifts — more HMM states, a different quantization level, or a
 //! colder table cache all change how much queueing a latency budget
 //! can afford. This layer closes the loop: it tracks an EWMA of the
-//! inner service's observed call latency `S` and admits at most
+//! inner service's observed **service time** `S` — call latency minus
+//! the response's self-reported queue wait ([`super::Queued`]), so
+//! time spent parked behind a queue or a cold table build is not
+//! mistaken for work — and admits at most
 //!
 //! ```text
 //! limit = workers × budget / S        (Little's law: L = λ·W)
@@ -18,6 +21,19 @@
 //! per client); the current limit is exported through the
 //! `Metrics::adaptive_limit` gauge. As the backend speeds up the limit
 //! rises and as it slows the limit tightens — no knob to re-tune.
+//!
+//! One coordinator-specific correction: requests parked as waiters on
+//! a pending constraint-table build (the coordinator's
+//! `Metrics::build_waiting` gauge) are admitted but are *not* decode
+//! work — they occupy no worker. Counting them against the
+//! Little's-law limit would read a cold-build storm as decode
+//! saturation and shed warm traffic that the workers could absorb, so
+//! the layer discounts the gauge from its in-flight count. The
+//! discount is deliberately approximate: with `Hedge` composed below
+//! this layer, a hedged call can park *two* coordinator requests on
+//! one build, over-counting the discount — the error is in the
+//! admit-more direction during a build storm, never toward shedding
+//! warm traffic.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -25,7 +41,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::Metrics;
 
-use super::{Keyed, Layer, Readiness, Service, ServiceError};
+use super::{Keyed, Layer, Queued, Readiness, Service, ServiceError};
 
 /// Default cap on the derived limit, generous enough to be invisible
 /// until the first latency observations arrive.
@@ -122,17 +138,27 @@ impl<S> AdaptiveShed<S> {
             Some(prev) => prev + EWMA_ALPHA * (secs - prev),
         });
     }
+
+    /// Admitted calls that count against the limit: everything in
+    /// flight except requests parked on a pending table build (they
+    /// hold no decode worker; see the [module docs](self)).
+    fn decode_in_flight(&self) -> u64 {
+        self.in_flight
+            .load(Ordering::SeqCst)
+            .saturating_sub(self.metrics.build_waiting.load(Ordering::Relaxed))
+    }
 }
 
 impl<Req, S> Service<Req> for AdaptiveShed<S>
 where
     Req: Keyed,
     S: Service<Req>,
+    S::Response: Queued,
 {
     type Response = S::Response;
 
     fn poll_ready(&self) -> Readiness {
-        if self.in_flight.load(Ordering::SeqCst) >= self.current_limit() as u64 {
+        if self.decode_in_flight() >= self.current_limit() as u64 {
             Readiness::Busy
         } else {
             self.inner.poll_ready()
@@ -142,9 +168,15 @@ where
     fn call(&self, req: Req) -> Result<Self::Response, ServiceError> {
         let limit = self.current_limit();
         self.metrics.adaptive_limit.store(limit as u64, Ordering::Relaxed);
+        // Admission is decided from the fetch_add's *returned* count:
+        // at the boundary, concurrent arrivals each see a distinct
+        // prior value, so exactly `limit` of them win — re-reading the
+        // shared counter here would let simultaneous arrivals shed
+        // each other below capacity.
         let prev = self.in_flight.fetch_add(1, Ordering::SeqCst);
         let guard = InFlightGuard(&self.in_flight);
-        if prev >= limit as u64 {
+        let waiting = self.metrics.build_waiting.load(Ordering::Relaxed);
+        if prev.saturating_sub(waiting) >= limit as u64 {
             drop(guard);
             self.metrics.adaptive_shed.fetch_add(1, Ordering::Relaxed);
             self.metrics
@@ -158,10 +190,26 @@ where
         // Feed the estimator from calls that did real work. Instant
         // errors (an inner layer bouncing) would drag the EWMA toward
         // zero and inflate the limit right when the system is refusing
-        // work.
+        // work. Queue wait (including time parked on a cold table
+        // build) is subtracted: Little's law wants *service* time, and
+        // a 2s cold build observed as service time would collapse the
+        // limit and shed warm traffic the workers could absorb.
         match &out {
-            Ok(_) | Err(ServiceError::DeadlineExceeded) => {
-                self.observe(t0.elapsed().as_secs_f64());
+            Ok(resp) => {
+                let service = t0.elapsed().saturating_sub(resp.queue_wait());
+                self.observe(service.as_secs_f64());
+            }
+            Err(ServiceError::DeadlineExceeded) => {
+                // A timed-out call carries no response to report its
+                // queue share. Its (deadline-bounded) latency is real
+                // overload signal when the decode plane is what's
+                // slow — but during a cold-build storm it is mostly
+                // parked wait, so skip the sample while any request
+                // sits on a pending build rather than let that wait
+                // masquerade as service time.
+                if self.metrics.build_waiting.load(Ordering::Relaxed) == 0 {
+                    self.observe(t0.elapsed().as_secs_f64());
+                }
             }
             Err(_) => {}
         }
@@ -260,6 +308,71 @@ mod tests {
             (6..=24).contains(&limit),
             "limit did not converge near 16: {limit}"
         );
+    }
+
+    #[test]
+    fn build_waiting_requests_are_not_counted_as_decode_in_flight() {
+        let metrics = Arc::new(Metrics::new());
+        // 50ms service against a 10ms budget on one worker: the limit
+        // collapses to the floor of 1 after the first observation.
+        let svc = Arc::new(AdaptiveShed::new(
+            MockSvc::with_delay(Duration::from_millis(50)),
+            Duration::from_millis(10),
+            1,
+            Arc::clone(&metrics),
+        ));
+        svc.call(TestReq::client("warm")).unwrap();
+        assert_eq!(svc.current_limit(), 1);
+        // Two of the occupants are parked on a pending table build
+        // (the coordinator's gauge): they must not consume the limit.
+        metrics.build_waiting.store(2, Ordering::Relaxed);
+        std::thread::scope(|scope| {
+            for _ in 0..2 {
+                let occupant = Arc::clone(&svc);
+                scope.spawn(move || occupant.call(TestReq::client("parked")).unwrap());
+            }
+            std::thread::sleep(Duration::from_millis(15));
+            // in_flight = 2, build_waiting = 2 → decode in-flight 0:
+            // the layer still admits (and still reports Ready).
+            assert_eq!(svc.poll_ready(), Readiness::Ready);
+            assert!(svc.call(TestReq::client("live")).is_ok());
+        });
+        metrics.build_waiting.store(0, Ordering::Relaxed);
+        assert_eq!(metrics.adaptive_shed.load(Ordering::Relaxed), 0);
+        assert_eq!(svc.in_flight.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn queue_wait_is_not_observed_as_service_time() {
+        // A response reporting that 45 of its 50ms were spent queued
+        // (e.g. parked on a cold table build): the EWMA must learn
+        // S ≈ 5ms, not 50ms — otherwise one cold build collapses the
+        // limit and sheds warm traffic.
+        struct QueuedResp;
+        impl Queued for QueuedResp {
+            fn queue_wait(&self) -> Duration {
+                Duration::from_millis(45)
+            }
+        }
+        struct QueuedSvc;
+        impl Service<TestReq> for QueuedSvc {
+            type Response = QueuedResp;
+            fn poll_ready(&self) -> Readiness {
+                Readiness::Ready
+            }
+            fn call(&self, _req: TestReq) -> Result<QueuedResp, ServiceError> {
+                std::thread::sleep(Duration::from_millis(50));
+                Ok(QueuedResp)
+            }
+        }
+        let metrics = Arc::new(Metrics::new());
+        let svc = AdaptiveShed::new(QueuedSvc, Duration::from_millis(20), 1, metrics);
+        svc.call(TestReq::default()).unwrap();
+        // Raw latency (50ms) against the 20ms budget would clamp the
+        // limit to the floor of 1; the queue-corrected S (~5ms) keeps
+        // real headroom.
+        let limit = svc.current_limit();
+        assert!(limit >= 2, "queue wait leaked into the service estimate: limit {limit}");
     }
 
     #[test]

@@ -26,6 +26,10 @@ pub struct EchoResponse {
     pub expired: bool,
 }
 
+/// `Echo` answers inline: nothing ever queues, so the default zero
+/// queue wait is exact.
+impl super::Queued for EchoResponse {}
+
 impl Expirable for EchoResponse {
     fn expired(&self) -> bool {
         self.expired

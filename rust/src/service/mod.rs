@@ -175,6 +175,21 @@ pub trait Expirable {
     fn expired(&self) -> bool;
 }
 
+/// Responses that can report how much of their latency was spent
+/// *queued* — the coordinator's intake-to-dispatch wait, which
+/// includes time parked on a cold constraint-table build. Layers that
+/// estimate downstream **service** time from observed call latency
+/// ([`adaptive::AdaptiveShed`]) subtract it, so queueing feedback (in
+/// particular a long cold build) cannot inflate the service-time
+/// estimate and collapse the admission limit. The default reports
+/// zero queueing (instant backends like [`Echo`]).
+pub trait Queued {
+    /// Time spent queued before service began.
+    fn queue_wait(&self) -> std::time::Duration {
+        std::time::Duration::ZERO
+    }
+}
+
 /// Closed-loop load driver shared by the CLI `serve` command and the
 /// e2e example: `clients` threads pull request indices from a shared
 /// counter and issue blocking calls until `n_requests` are consumed.
@@ -293,6 +308,9 @@ pub(crate) mod testutil {
             self.expired
         }
     }
+
+    /// The mock serves inline; zero queue wait is exact.
+    impl Queued for TestResp {}
 
     /// Mock backend: sleeps per call (first call can be made slow to
     /// exercise hedging), honors deadlines like the coordinator does,

@@ -20,12 +20,16 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Weak};
 
 use crate::coordinator::metrics::{ClientStats, Metrics};
 
 use super::bucket::{InvalidRate, TokenBucket};
 use super::{Keyed, Layer, Readiness, Service, ServiceError};
+
+/// Default bound on retained per-client buckets; see
+/// [`QuotaConfig::max_clients`].
+pub const DEFAULT_QUOTA_CLIENTS: usize = 4096;
 
 /// Per-client and overflow bucket sizing for [`Quota`].
 #[derive(Clone, Copy, Debug)]
@@ -38,13 +42,28 @@ pub struct QuotaConfig {
     pub overflow: f64,
     /// Overflow pool refill rate (tokens/sec).
     pub overflow_rate: f64,
+    /// Bound on retained per-client buckets (min 1), so
+    /// per-connection client ids cannot grow the map without bound.
+    /// Past the cap, registering a new client evicts the
+    /// least-recently-used bucket that has refilled to *full* — a
+    /// bucket with outstanding debt (spent burst) is never evicted,
+    /// since recreating it later would hand the client a fresh burst
+    /// and turn eviction into a quota reset. If every bucket carries
+    /// debt the map transiently exceeds the cap.
+    pub max_clients: usize,
 }
 
 impl QuotaConfig {
     /// A quota of `rate` calls/sec with `burst` headroom per client and
     /// an overflow pool of the same size refilled at the same rate.
     pub fn per_client(rate: f64, burst: f64) -> Self {
-        QuotaConfig { rate, burst, overflow: burst, overflow_rate: rate }
+        QuotaConfig {
+            rate,
+            burst,
+            overflow: burst,
+            overflow_rate: rate,
+            max_clients: DEFAULT_QUOTA_CLIENTS,
+        }
     }
 }
 
@@ -54,16 +73,29 @@ impl Default for QuotaConfig {
     }
 }
 
-/// One client's bucket plus its metrics handle, resolved once at first
-/// sight so the denial path never re-locks the metrics registry.
+/// One client's bucket plus its metrics handle. The handle is *weak*:
+/// a quota bucket outliving the metrics registry's own client cap must
+/// not pin the entry there (see `Metrics::with_client_cap` — eviction
+/// skips entries with outstanding strong handles). Denials upgrade it,
+/// re-resolving through the registry only if the entry was evicted
+/// meanwhile. The touch stamp orders LRU eviction past
+/// [`QuotaConfig::max_clients`].
 struct ClientBucket {
     bucket: TokenBucket,
-    stats: Arc<ClientStats>,
+    stats: Weak<ClientStats>,
+    touch: u64,
 }
 
 struct QuotaState {
     buckets: HashMap<String, ClientBucket>,
     overflow: TokenBucket,
+    /// Monotonic stamp for LRU ordering (all under the state lock).
+    touch_seq: u64,
+    /// Skip eviction scans until the map reaches this size again: a
+    /// scan that found nothing evictable (every bucket indebted) is
+    /// not repeated until the map has grown by another batch, so the
+    /// O(map) sweep stays amortized even when nothing can be freed.
+    next_evict_scan: usize,
 }
 
 /// Per-client admission policy; see the [module docs](self).
@@ -76,7 +108,7 @@ struct QuotaState {
 ///
 /// let metrics = Arc::new(Metrics::new());
 /// // One token of burst, no overflow pool, negligible refill.
-/// let cfg = QuotaConfig { rate: 1e-6, burst: 1.0, overflow: 0.0, overflow_rate: 0.0 };
+/// let cfg = QuotaConfig { rate: 1e-6, burst: 1.0, overflow: 0.0, overflow_rate: 0.0, ..QuotaConfig::default() };
 /// let svc = Stack::new()
 ///     .quota(cfg, Arc::clone(&metrics))
 ///     .service(Echo::instant());
@@ -107,6 +139,7 @@ impl<S> Quota<S> {
             burst: cfg.burst.max(1.0),
             overflow: cfg.overflow.max(0.0),
             overflow_rate: cfg.overflow_rate,
+            max_clients: cfg.max_clients.max(1),
         };
         Quota {
             inner,
@@ -118,6 +151,8 @@ impl<S> Quota<S> {
                     cfg.overflow,
                     InvalidRate::FailClosed,
                 ),
+                touch_seq: 0,
+                next_evict_scan: cfg.max_clients,
             }),
             metrics,
         }
@@ -126,23 +161,35 @@ impl<S> Quota<S> {
     /// Try to admit one call from `client`: own bucket first, then the
     /// shared overflow pool. On denial, returns the client's metrics
     /// handle so the caller attributes it without another registry
-    /// lock — and the common existing-client path allocates nothing.
+    /// lock in the common case.
     fn try_admit(&self, client: &str) -> Result<(), Arc<ClientStats>> {
         let mut st = self.state.lock().unwrap();
+        st.touch_seq += 1;
+        let stamp = st.touch_seq;
         if let Some(entry) = st.buckets.get_mut(client) {
+            entry.touch = stamp;
             if entry.bucket.try_take() {
                 return Ok(());
             }
         } else {
-            // First sight of this client: resolve the stats handle once
-            // and take from a fresh full bucket (burst >= 1 admits).
+            // First sight of this client: bound the map first, then
+            // take from a fresh full bucket (burst >= 1 admits).
+            if st.buckets.len() >= self.cfg.max_clients.max(st.next_evict_scan) {
+                let evicted = Self::evict_idle_buckets(&mut st, self.cfg.burst);
+                // Nothing evictable (every bucket indebted): back off
+                // so the next sweep waits for another batch of growth.
+                st.next_evict_scan = if evicted == 0 {
+                    st.buckets.len() + (self.cfg.max_clients / 16).max(1)
+                } else {
+                    0
+                };
+            }
             let mut bucket =
                 TokenBucket::full(self.cfg.rate, self.cfg.burst, InvalidRate::FailClosed);
             let took = bucket.try_take();
-            st.buckets.insert(
-                client.to_string(),
-                ClientBucket { bucket, stats: self.metrics.client(client) },
-            );
+            let stats = Arc::downgrade(&self.metrics.client(client));
+            st.buckets
+                .insert(client.to_string(), ClientBucket { bucket, stats, touch: stamp });
             if took {
                 return Ok(());
             }
@@ -150,9 +197,44 @@ impl<S> Quota<S> {
         if st.overflow.try_take() {
             return Ok(());
         }
-        Err(Arc::clone(
-            &st.buckets.get(client).expect("entry ensured above").stats,
-        ))
+        // Denied: upgrade the cached stats handle; if the metrics
+        // registry evicted the entry meanwhile, re-resolve (recreating
+        // it) and re-cache the weak handle.
+        let entry = st.buckets.get_mut(client).expect("entry ensured above");
+        Err(match entry.stats.upgrade() {
+            Some(stats) => stats,
+            None => {
+                let stats = self.metrics.client(client);
+                entry.stats = Arc::downgrade(&stats);
+                stats
+            }
+        })
+    }
+
+    /// Drop the least-recently-used buckets (up to a ~1/16-of-cap
+    /// batch per sweep) that have refilled back to `burst` — no
+    /// outstanding debt, so recreating one later grants nothing the
+    /// client did not already have. Keeps every indebted bucket, even
+    /// past the cap: eviction must never reset a quota. Returns how
+    /// many buckets were dropped.
+    fn evict_idle_buckets(st: &mut QuotaState, burst: f64) -> usize {
+        let batch = (st.buckets.len() / 16).max(1);
+        let mut evictable: Vec<(u64, String)> = st
+            .buckets
+            .iter_mut()
+            .filter_map(|(k, e)| {
+                // filter_map (not filter): `available` refills, so the
+                // predicate needs the mutable borrow by value.
+                (e.bucket.available() >= burst - 1e-9).then(|| (e.touch, k.clone()))
+            })
+            .collect();
+        evictable.sort_unstable_by_key(|(touch, _)| *touch);
+        let victims: Vec<String> =
+            evictable.into_iter().take(batch).map(|(_, k)| k).collect();
+        for key in &victims {
+            st.buckets.remove(key);
+        }
+        victims.len()
     }
 }
 
@@ -206,7 +288,7 @@ mod tests {
     use super::*;
 
     fn cfg(rate: f64, burst: f64, overflow: f64) -> QuotaConfig {
-        QuotaConfig { rate, burst, overflow, overflow_rate: rate }
+        QuotaConfig { rate, burst, overflow, overflow_rate: rate, ..QuotaConfig::default() }
     }
 
     #[test]
@@ -260,5 +342,41 @@ mod tests {
         assert!(svc.call(TestReq::client("a")).is_ok());
         std::thread::sleep(std::time::Duration::from_millis(5));
         assert!(svc.call(TestReq::client("a")).is_ok(), "bucket should have refilled");
+    }
+
+    #[test]
+    fn bucket_map_stays_bounded_for_idle_clients() {
+        let metrics = Arc::new(Metrics::new());
+        // A fast refill: every bucket is instantly full again, so the
+        // LRU idle bucket is always evictable.
+        let quota = QuotaConfig { max_clients: 4, ..QuotaConfig::per_client(1e9, 2.0) };
+        let svc = Quota::new(MockSvc::instant(), quota, Arc::clone(&metrics));
+        for i in 0..64 {
+            assert!(svc.call(TestReq::client(&format!("conn-{i}"))).is_ok());
+        }
+        assert_eq!(
+            svc.state.lock().unwrap().buckets.len(),
+            4,
+            "per-connection ids must not grow the bucket map"
+        );
+    }
+
+    #[test]
+    fn eviction_never_resets_an_indebted_bucket() {
+        let metrics = Arc::new(Metrics::new());
+        // Negligible refill, no overflow pool: a spent bucket stays in
+        // debt forever and nothing else admits the client.
+        let quota = QuotaConfig { max_clients: 1, ..cfg(1e-9, 1.0, 0.0) };
+        let svc = Quota::new(MockSvc::instant(), quota, Arc::clone(&metrics));
+        // "debtor" spends its whole burst.
+        assert!(svc.call(TestReq::client("debtor")).is_ok());
+        assert_eq!(svc.call(TestReq::client("debtor")), Err(ServiceError::Overloaded));
+        // New clients arrive past the cap: the indebted bucket must
+        // survive (the map exceeds the cap instead).
+        assert!(svc.call(TestReq::client("b")).is_ok());
+        assert!(svc.state.lock().unwrap().buckets.len() >= 2, "debtor bucket evicted");
+        // And the debtor is still denied — its quota was not reset.
+        assert_eq!(svc.call(TestReq::client("debtor")), Err(ServiceError::Overloaded));
+        assert_eq!(metrics.client("debtor").quota_denied.load(Ordering::Relaxed), 2);
     }
 }

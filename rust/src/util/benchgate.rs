@@ -1,5 +1,7 @@
-//! The bench-regression gate: diff two bench-trajectory artifacts
-//! (`BENCH_tables.json` / `BENCH_decode.json`) and flag slowdowns.
+//! The bench-regression gate: diff the current bench-trajectory
+//! artifact (`BENCH_tables.json` / `BENCH_decode.json` /
+//! `BENCH_coordinator.json`) against a rolling window of previous runs
+//! and flag slowdowns.
 //!
 //! Each artifact is `{bench, quick, scenarios: [..]}` where every
 //! scenario object mixes *identity* fields (hidden, bits, alpha, …)
@@ -7,13 +9,20 @@
 //! matches scenarios across runs by their identity fields — so adding,
 //! removing or re-parameterizing scenarios never fails the gate, only
 //! a matched scenario getting slower does — and reports a regression
-//! when any timing field exceeds the previous run's by more than the
-//! threshold (CI uses 25%). Runs at different scales (`quick` flag
-//! mismatch) are incomparable and skip cleanly.
+//! when any timing field exceeds the **median of the window's**
+//! baselines by more than the threshold (CI uses 25%). The median (of
+//! up to N previous artifacts, CI keeps 3) makes the gate robust to a
+//! single noisy CI run in either direction: one slow baseline cannot
+//! *mask* a real regression and one fast baseline cannot *fake* one.
+//! Fewer artifacts than N — including the old single-baseline mode —
+//! degrade gracefully to the median of whatever is available; runs at
+//! a different scale (`quick` flag mismatch) are dropped from the
+//! window, and a prev artifact missing a scenario simply contributes
+//! nothing to that scenario's baseline.
 //!
 //! Used by `src/bin/bench_gate.rs` in the CI bench-smoke job, which
-//! downloads the previous run's artifact and fails the job on any
-//! regression — the trajectory bites instead of just accumulating.
+//! downloads the previous successful runs' artifacts and fails the job
+//! on any regression — the trajectory bites instead of accumulating.
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -85,46 +94,88 @@ impl GateReport {
     }
 }
 
-/// Diff `cur` against `prev`, flagging any matched timing field where
-/// `cur > prev · (1 + threshold)`. Returns `Err` only for artifacts
-/// the gate cannot read (missing/NaN fields are skipped, not errors:
-/// a malformed *previous* artifact must not wedge the pipeline).
+/// The default rolling-window depth: the median of the last 3
+/// artifacts tolerates one noisy run in either direction.
+pub const DEFAULT_WINDOW: usize = 3;
+
+/// Median of a non-empty sample (mean of the middle pair when even).
+fn median(values: &mut [f64]) -> f64 {
+    values.sort_by(|a, b| a.total_cmp(b));
+    let n = values.len();
+    if n % 2 == 1 {
+        values[n / 2]
+    } else {
+        (values[n / 2 - 1] + values[n / 2]) / 2.0
+    }
+}
+
+/// Diff `cur` against the single baseline `prev` (a one-artifact
+/// window); see [`gate_window`].
 pub fn gate(prev: &Json, cur: &Json, threshold: f64) -> Result<GateReport, String> {
+    gate_window(std::slice::from_ref(prev), cur, threshold)
+}
+
+/// Diff `cur` against a rolling window of previous artifacts, flagging
+/// any matched timing field where `cur > median(window) · (1 +
+/// threshold)`. A prev artifact naming a different bench is an error
+/// (the caller mixed trajectories); one at a different scale (`quick`
+/// mismatch) or without scenarios is dropped from the window with a
+/// note. Missing/NaN fields are skipped, not errors: a malformed
+/// *previous* artifact must not wedge the pipeline. An empty (or
+/// fully-dropped) window compares nothing and passes.
+pub fn gate_window(prevs: &[Json], cur: &Json, threshold: f64) -> Result<GateReport, String> {
     let mut report = GateReport::default();
     let cur_scenarios = cur
         .get("scenarios")
         .and_then(Json::as_arr)
         .ok_or("current artifact has no scenarios array")?;
-    let prev_scenarios = match prev.get("scenarios").and_then(Json::as_arr) {
-        Some(s) => s,
-        None => {
-            report
-                .notes
-                .push("previous artifact has no scenarios array — nothing to compare".into());
-            report.unmatched = cur_scenarios.len();
-            return Ok(report);
+
+    // Index each usable window member's scenarios by identity key.
+    let mut window: Vec<BTreeMap<String, &Json>> = Vec::new();
+    for (i, prev) in prevs.iter().enumerate() {
+        if prev.get("bench") != cur.get("bench") {
+            return Err(format!(
+                "artifact mismatch: baseline {} is {:?}, current is {:?}",
+                i + 1,
+                prev.get("bench"),
+                cur.get("bench")
+            ));
         }
-    };
-    if prev.get("bench") != cur.get("bench") {
-        return Err(format!(
-            "artifact mismatch: previous is {:?}, current is {:?}",
-            prev.get("bench"),
-            cur.get("bench")
-        ));
+        if prev.get("quick").and_then(Json::as_bool) != cur.get("quick").and_then(Json::as_bool)
+        {
+            report.notes.push(format!(
+                "baseline {}: quick-mode mismatch — scales are incomparable, dropped from \
+                 the window",
+                i + 1
+            ));
+            continue;
+        }
+        let Some(scenarios) = prev.get("scenarios").and_then(Json::as_arr) else {
+            report.notes.push(format!(
+                "baseline {}: no scenarios array — dropped from the window",
+                i + 1
+            ));
+            continue;
+        };
+        let mut by_key = BTreeMap::new();
+        for s in scenarios {
+            if let Some(k) = scenario_key(s) {
+                by_key.insert(k, s);
+            }
+        }
+        window.push(by_key);
     }
-    if prev.get("quick").and_then(Json::as_bool) != cur.get("quick").and_then(Json::as_bool) {
+    if window.is_empty() {
         report
             .notes
-            .push("quick-mode mismatch between runs — scales are incomparable, skipping".into());
+            .push("no usable baseline in the window — nothing to compare".into());
         report.unmatched = cur_scenarios.len();
         return Ok(report);
     }
-
-    let mut prev_by_key: BTreeMap<String, &Json> = BTreeMap::new();
-    for s in prev_scenarios {
-        if let Some(k) = scenario_key(s) {
-            prev_by_key.insert(k, s);
-        }
+    if window.len() > 1 {
+        report
+            .notes
+            .push(format!("baseline: median of {} artifacts", window.len()));
     }
 
     let mut best_improvement: Option<(String, f64)> = None;
@@ -133,22 +184,27 @@ pub fn gate(prev: &Json, cur: &Json, threshold: f64) -> Result<GateReport, Strin
             Some(k) => k,
             None => continue,
         };
-        let Some(prev_scenario) = prev_by_key.get(&key) else {
+        let matched: Vec<&&Json> = window.iter().filter_map(|w| w.get(&key)).collect();
+        if matched.is_empty() {
             report.unmatched += 1;
             continue;
-        };
+        }
         report.compared += 1;
         let Json::Obj(fields) = scenario else { continue };
         for (field, value) in fields.iter().filter(|(k, _)| k.ends_with("_ms")) {
-            let (Some(cur_ms), Some(prev_ms)) = (
-                value.as_f64(),
-                prev_scenario.get(field).and_then(Json::as_f64),
-            ) else {
-                continue;
-            };
-            if !cur_ms.is_finite() || !prev_ms.is_finite() || prev_ms <= 0.0 {
+            let Some(cur_ms) = value.as_f64() else { continue };
+            // A scenario present in a window member but missing this
+            // field (or carrying junk) contributes nothing to the
+            // baseline for it.
+            let mut baselines: Vec<f64> = matched
+                .iter()
+                .filter_map(|p| p.get(field).and_then(Json::as_f64))
+                .filter(|v| v.is_finite() && *v > 0.0)
+                .collect();
+            if !cur_ms.is_finite() || baselines.is_empty() {
                 continue;
             }
+            let prev_ms = median(&mut baselines);
             if cur_ms > prev_ms * (1.0 + threshold) {
                 report.regressions.push(Regression {
                     scenario: key.clone(),
@@ -173,10 +229,11 @@ pub fn gate(prev: &Json, cur: &Json, threshold: f64) -> Result<GateReport, Strin
             .notes
             .push(format!("best improvement: {what} {gain:.2}x faster"));
     }
-    // Both runs have scenarios but none matched: the baseline is
+    // The window has scenarios but none matched: the baseline is
     // incomparable (identity fields changed wholesale). Say so loudly —
     // a gate that silently compares nothing reads as green.
-    if report.compared == 0 && !cur_scenarios.is_empty() && !prev_scenarios.is_empty() {
+    let window_nonempty = window.iter().any(|w| !w.is_empty());
+    if report.compared == 0 && !cur_scenarios.is_empty() && window_nonempty {
         report.notes.push(format!(
             "WARNING: 0 of {} scenario(s) matched the baseline — identity fields changed; \
              the gate checked nothing this run",
@@ -308,6 +365,101 @@ mod tests {
         }
         let cur = artifact(true, vec![]);
         assert!(gate(&prev, &cur, 0.25).is_err());
+    }
+
+    #[test]
+    fn one_noisy_slow_baseline_cannot_mask_a_regression() {
+        // Two honest baselines at 2.0ms, one noisy at 9.0ms. Against
+        // the *last run only* (the old gate), cur = 2.6 vs 9.0 would
+        // pass; against the window median (2.0) it is a >25% slowdown.
+        let prevs = vec![
+            artifact(true, vec![scenario(64.0, 8.0, 10.0, 2.0)]),
+            artifact(true, vec![scenario(64.0, 8.0, 10.0, 2.0)]),
+            artifact(true, vec![scenario(64.0, 8.0, 10.0, 9.0)]),
+        ];
+        let cur = artifact(true, vec![scenario(64.0, 8.0, 10.0, 2.6)]);
+        let report = gate_window(&prevs, &cur, 0.25).unwrap();
+        assert_eq!(report.compared, 1);
+        assert_eq!(report.regressions.len(), 1, "{:?}", report.regressions);
+        assert_eq!(report.regressions[0].field, "sparse_ms");
+        assert!((report.regressions[0].prev_ms - 2.0).abs() < 1e-9, "median baseline");
+    }
+
+    #[test]
+    fn one_noisy_fast_baseline_cannot_fake_a_regression() {
+        // One freak-fast run (0.1ms) among honest 2.0ms baselines: the
+        // median keeps cur = 2.2 within threshold.
+        let prevs = vec![
+            artifact(true, vec![scenario(64.0, 8.0, 10.0, 2.0)]),
+            artifact(true, vec![scenario(64.0, 8.0, 10.0, 0.1)]),
+            artifact(true, vec![scenario(64.0, 8.0, 10.0, 2.0)]),
+        ];
+        let cur = artifact(true, vec![scenario(64.0, 8.0, 10.0, 2.2)]);
+        assert!(gate_window(&prevs, &cur, 0.25).unwrap().passed());
+    }
+
+    #[test]
+    fn window_shorter_than_n_degrades_to_available_artifacts() {
+        // One artifact: identical to the old single-baseline gate.
+        let prev = artifact(true, vec![scenario(64.0, 8.0, 10.0, 2.0)]);
+        let cur = artifact(true, vec![scenario(64.0, 8.0, 10.0, 2.6)]);
+        let one = gate_window(std::slice::from_ref(&prev), &cur, 0.25).unwrap();
+        assert_eq!(one.regressions.len(), 1);
+        // Two artifacts: even-count median is the mean of the pair —
+        // (2.0 + 3.0)/2 = 2.5, so 2.6 passes at 25%.
+        let prevs = vec![
+            artifact(true, vec![scenario(64.0, 8.0, 10.0, 2.0)]),
+            artifact(true, vec![scenario(64.0, 8.0, 10.0, 3.0)]),
+        ];
+        let two = gate_window(&prevs, &cur, 0.25).unwrap();
+        assert!(two.passed(), "{:?}", two.regressions);
+        // Empty window: compares nothing, passes.
+        let none = gate_window(&[], &cur, 0.25).unwrap();
+        assert!(none.passed());
+        assert_eq!(none.compared, 0);
+    }
+
+    #[test]
+    fn baselines_missing_a_scenario_contribute_nothing_to_it() {
+        // The middle baseline predates the (96, 8) scenario entirely;
+        // its absence must not unmatch the scenario or dilute the
+        // median of the runs that do have it.
+        let prevs = vec![
+            artifact(
+                true,
+                vec![scenario(64.0, 8.0, 10.0, 2.0), scenario(96.0, 8.0, 20.0, 4.0)],
+            ),
+            artifact(true, vec![scenario(64.0, 8.0, 10.0, 2.0)]),
+            artifact(
+                true,
+                vec![scenario(64.0, 8.0, 10.0, 2.0), scenario(96.0, 8.0, 20.0, 4.0)],
+            ),
+        ];
+        let cur = artifact(
+            true,
+            vec![scenario(64.0, 8.0, 10.0, 2.0), scenario(96.0, 8.0, 20.0, 5.5)],
+        );
+        let report = gate_window(&prevs, &cur, 0.25).unwrap();
+        assert_eq!(report.compared, 2);
+        assert_eq!(report.regressions.len(), 1, "{:?}", report.regressions);
+        assert!((report.regressions[0].prev_ms - 4.0).abs() < 1e-9);
+        assert!((report.regressions[0].ratio() - 5.5 / 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn incomparable_baselines_are_dropped_from_the_window() {
+        // A quick-mode run in the window is dropped; the remaining
+        // full-scale baselines still gate.
+        let prevs = vec![
+            artifact(false, vec![scenario(64.0, 8.0, 10.0, 2.0)]),
+            artifact(true, vec![scenario(64.0, 8.0, 1.0, 0.2)]), // quick: dropped
+            artifact(false, vec![scenario(64.0, 8.0, 10.0, 2.0)]),
+        ];
+        let cur = artifact(false, vec![scenario(64.0, 8.0, 10.0, 2.6)]);
+        let report = gate_window(&prevs, &cur, 0.25).unwrap();
+        assert_eq!(report.regressions.len(), 1);
+        assert!((report.regressions[0].prev_ms - 2.0).abs() < 1e-9);
+        assert!(report.notes.iter().any(|n| n.contains("dropped")), "{:?}", report.notes);
     }
 
     #[test]

@@ -1,0 +1,220 @@
+//! Integration tests for the asynchronous table-build pipeline:
+//! singleflight semantics, deadline-driven build cancellation, cold
+//! storms across the build pool, warm/cold isolation, and drain-clean
+//! shutdown.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use normq::coordinator::{ServeRequest, Server, ServerConfig};
+use normq::data::Corpus;
+use normq::generate::DecodeConfig;
+use normq::hmm::Hmm;
+use normq::lm::NgramLm;
+use normq::service::Service;
+use normq::util::rng::Rng;
+
+/// A server over an *untrained* HMM of the given size — build and
+/// decode cost depend on shapes, not weights, and EM at pipeline-test
+/// sizes would dominate the suite. Output quality is not asserted
+/// here, only pipeline behavior.
+fn make_server(hidden: usize, workers: usize, build_threads: usize, max_tokens: usize) -> (Server, Corpus) {
+    let corpus = Corpus::small(900);
+    let data = corpus.sample_token_corpus(200, 41);
+    let lm = NgramLm::train(&data, corpus.vocab.len());
+    let mut rng = Rng::seeded(42);
+    let hmm = Hmm::random(hidden, corpus.vocab.len(), 0.3, 0.2, &mut rng);
+    let cfg = ServerConfig {
+        workers,
+        queue_capacity: 256,
+        build_threads,
+        table_threads: 1,
+        decode: DecodeConfig { beam: 4, max_tokens, ..Default::default() },
+        ..Default::default()
+    };
+    (Server::start(Arc::new(lm), hmm, corpus.clone(), cfg), corpus)
+}
+
+/// The singleflight property: M concurrent requests for one cold
+/// concept group trigger exactly one `ConstraintTable` build — whether
+/// they land in the same batch window (one group), join the in-flight
+/// build from a later window, or hit the completed table.
+#[test]
+fn concurrent_identical_requests_build_exactly_one_table() {
+    const M: usize = 8;
+    let (server, corpus) = make_server(128, 2, 4, 24);
+    let concepts: Vec<String> = corpus.lexicon.nouns[..3].to_vec();
+    std::thread::scope(|scope| {
+        for wave in 0..2 {
+            for _ in 0..M / 2 {
+                let (server, concepts) = (&server, concepts.clone());
+                scope.spawn(move || {
+                    let resp = server.call(ServeRequest::new(concepts)).unwrap();
+                    assert!(!resp.timed_out && !resp.failed);
+                });
+            }
+            if wave == 0 {
+                // Land the second wave while the first build is (very
+                // likely) still in flight; even when it is not, the
+                // wave hits the cached table — never a second build.
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    });
+    let m = server.metrics();
+    assert_eq!(
+        m.table_cache_misses.load(Ordering::Relaxed),
+        1,
+        "identical concurrent requests must share exactly one build"
+    );
+    assert_eq!(m.completed.load(Ordering::Relaxed), M as u64);
+    assert_eq!(m.build_waiting.load(Ordering::Relaxed), 0);
+    assert_eq!(m.builds_inflight.load(Ordering::Relaxed), 0);
+    assert_eq!(m.in_flight.load(Ordering::Relaxed), 0);
+    server.shutdown();
+}
+
+/// A group whose every waiter has expired cancels its build (the
+/// dynamic probe fires at the next level check), the waiters are
+/// answered `timed_out`, nothing is cached — and the next request for
+/// the same concepts rebuilds from scratch.
+#[test]
+fn expired_waiters_cancel_the_build_and_nothing_is_cached() {
+    let (server, corpus) = make_server(64, 1, 2, 16);
+    let concepts: Vec<String> = corpus.lexicon.nouns[..2].to_vec();
+    let mut rxs = Vec::new();
+    for _ in 0..3 {
+        let mut req = ServeRequest::new(concepts.clone());
+        req.deadline = Some(Instant::now() - Duration::from_millis(1));
+        rxs.push(server.submit_request(req).unwrap());
+    }
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(resp.timed_out, "expired waiters must be answered timed_out");
+        assert!(!resp.failed);
+        assert!(resp.text.is_empty());
+    }
+    // One cancelled build per batch window the expired wave spanned
+    // (usually one window → one miss, but never a cached table).
+    let misses_after_cancel = server.metrics().table_cache_misses.load(Ordering::Relaxed);
+    assert!(misses_after_cancel >= 1);
+    // The cancelled build must not have cached a partial table: a
+    // fresh, unbounded request pays exactly one new build and
+    // completes for real.
+    let resp = server.call(ServeRequest::new(concepts)).unwrap();
+    assert!(!resp.timed_out && !resp.failed);
+    assert_eq!(
+        server.metrics().table_cache_misses.load(Ordering::Relaxed),
+        misses_after_cancel + 1,
+        "nothing from the cancelled build may be reused"
+    );
+    assert_eq!(server.metrics().build_waiting.load(Ordering::Relaxed), 0);
+    server.shutdown();
+}
+
+/// A cold storm of K distinct groups on a K-wide build pool: every
+/// group builds (K misses), every request completes, and the pipeline
+/// gauges return to zero.
+#[test]
+fn cold_storm_completes_every_distinct_group() {
+    const K: usize = 4;
+    let (server, corpus) = make_server(64, 2, K, 16);
+    let rxs: Vec<_> = (0..K)
+        .map(|g| {
+            let concepts: Vec<String> = corpus.lexicon.nouns[g * 2..g * 2 + 2].to_vec();
+            server.submit(concepts).unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert!(!resp.timed_out && !resp.failed);
+    }
+    let m = server.metrics();
+    assert_eq!(m.table_cache_misses.load(Ordering::Relaxed), K as u64);
+    assert_eq!(m.completed.load(Ordering::Relaxed), K as u64);
+    assert_eq!(m.builds_inflight.load(Ordering::Relaxed), 0);
+    assert_eq!(m.build_waiting.load(Ordering::Relaxed), 0);
+    assert_eq!(m.in_flight.load(Ordering::Relaxed), 0);
+    server.shutdown();
+}
+
+/// Warm traffic is never blocked behind a cold build: while a huge
+/// cold group (10 keywords → 1024 DFA states) is building, a request
+/// for an already-cached group is dispatched and answered first.
+#[test]
+fn warm_requests_are_not_blocked_behind_a_cold_build() {
+    let (server, corpus) = make_server(128, 2, 2, 12);
+    let warm_concepts: Vec<String> = corpus.lexicon.nouns[..1].to_vec();
+    // Prewarm: the first request pays the (small) build.
+    let resp = server.call(ServeRequest::new(warm_concepts.clone())).unwrap();
+    assert!(!resp.failed);
+    // Cold monster group: ~1024-state DFA, a build two orders of
+    // magnitude heavier than the warm group's decode.
+    let cold_concepts: Vec<String> = corpus.lexicon.nouns[1..11].to_vec();
+    let cold_rx = server.submit(cold_concepts).unwrap();
+    let warm_rx = server.submit(warm_concepts).unwrap();
+    let warm_resp = warm_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert!(!warm_resp.timed_out && !warm_resp.failed);
+    // The cold group's build (~100x the warm decode) must still be in
+    // flight when the warm response lands — under the old serial
+    // dispatcher the warm request could not even be dispatched yet.
+    assert!(
+        cold_rx.try_recv().is_err(),
+        "the warm request waited for the cold group's build"
+    );
+    let _cold_resp = cold_rx.recv_timeout(Duration::from_secs(120)).unwrap();
+    assert_eq!(server.metrics().in_flight.load(Ordering::Relaxed), 0);
+    server.shutdown();
+}
+
+/// Shutdown drains the whole pipeline: requests parked on in-flight
+/// builds are still answered (the pool finishes queued jobs before the
+/// decode workers exit), nothing hangs, and no admission slot leaks.
+#[test]
+fn shutdown_drains_parked_builds_cleanly() {
+    const K: usize = 4;
+    let (server, corpus) = make_server(96, 2, 2, 16);
+    let rxs: Vec<_> = (0..K)
+        .map(|g| {
+            let concepts: Vec<String> = corpus.lexicon.nouns[g * 3..g * 3 + 3].to_vec();
+            server.submit(concepts).unwrap()
+        })
+        .collect();
+    // Immediate shutdown: the storm is still building.
+    server.shutdown();
+    for rx in rxs {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("a drained shutdown must answer every admitted request");
+        assert!(!resp.timed_out && !resp.failed);
+    }
+    assert_eq!(server.metrics().in_flight.load(Ordering::Relaxed), 0);
+    assert_eq!(server.metrics().builds_inflight.load(Ordering::Relaxed), 0);
+    assert_eq!(server.metrics().build_waiting.load(Ordering::Relaxed), 0);
+}
+
+/// Builds honor deadlines that arrive *while* they run: a first wave
+/// with expired deadlines starts a build, a second wave with a live
+/// deadline joins it, and the joined deadline keeps the build alive —
+/// the live waiter gets a real answer, the dead ones get timed_out.
+#[test]
+fn late_joiner_extends_the_inflight_builds_deadline() {
+    let (server, corpus) = make_server(128, 2, 2, 24);
+    let concepts: Vec<String> = corpus.lexicon.nouns[..3].to_vec();
+    // Expired wave: their build will self-cancel unless someone joins.
+    let mut dead = ServeRequest::new(concepts.clone());
+    dead.deadline = Some(Instant::now() - Duration::from_millis(1));
+    let dead_rx = server.submit_request(dead).unwrap();
+    // Live join, racing the cancellation: whichever way the race
+    // resolves (join-in-time, or re-resolve after the cancel), the
+    // live request must be answered for real.
+    let live_rx = server.submit_request(ServeRequest::new(concepts)).unwrap();
+    let dead_resp = dead_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert!(dead_resp.timed_out);
+    let live_resp = live_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert!(!live_resp.timed_out && !live_resp.failed);
+    assert_eq!(server.metrics().build_waiting.load(Ordering::Relaxed), 0);
+    assert_eq!(server.metrics().in_flight.load(Ordering::Relaxed), 0);
+    server.shutdown();
+}

@@ -154,7 +154,13 @@ fn single_wake_scheduling_loses_no_waiters() {
 #[test]
 fn quota_denials_land_on_the_greedy_client_only() {
     let metrics = Arc::new(normq::coordinator::metrics::Metrics::new());
-    let cfg = QuotaConfig { rate: 1e-9, burst: 3.0, overflow: 0.0, overflow_rate: 0.0 };
+    let cfg = QuotaConfig {
+        rate: 1e-9,
+        burst: 3.0,
+        overflow: 0.0,
+        overflow_rate: 0.0,
+        ..QuotaConfig::default()
+    };
     let svc = Stack::new()
         .quota(cfg, Arc::clone(&metrics))
         .service(Echo::instant());
@@ -265,6 +271,43 @@ fn fairness_attribution_against_the_live_coordinator() {
     );
     assert_eq!(light.completed.load(Ordering::Relaxed) as usize, LIGHT_REQUESTS);
     assert_eq!(light.shed.load(Ordering::Relaxed), 0);
+    // Per-client quantiles: each client's completions landed in its
+    // *own* reservoir, so both rows expose real latency stats and the
+    // summary renders them.
+    let light_stats = light.latency_stats().expect("light completions were recorded");
+    assert_eq!(light_stats.n, LIGHT_REQUESTS);
+    assert!(light_stats.p99 > 0.0);
+    if heavy.completed.load(Ordering::Relaxed) > 0 {
+        assert!(heavy.latency_stats().is_some());
+    }
+    assert!(metrics.client_summary().contains("p99="), "{}", metrics.client_summary());
     assert_eq!(metrics.in_flight.load(Ordering::Relaxed), 0);
     server.shutdown();
+}
+
+/// The tail-isolation property of per-client reservoirs, made
+/// deterministic: a flooded client records pathological latencies, a
+/// polite client records fast ones, and the polite client's p99 is
+/// untouched — under a single shared reservoir the flood's samples
+/// would swamp it.
+#[test]
+fn flooded_client_p99_does_not_poison_polite_client() {
+    let metrics = normq::coordinator::metrics::Metrics::new();
+    let flooded = metrics.client("flooded");
+    let polite = metrics.client("polite");
+    for _ in 0..400 {
+        flooded.record_latency(5.0); // 5s of queue-blown flood traffic
+    }
+    for _ in 0..20 {
+        polite.record_latency(0.003);
+    }
+    let flooded_stats = flooded.latency_stats().unwrap();
+    let polite_stats = polite.latency_stats().unwrap();
+    assert!(flooded_stats.p99 >= 5.0 - 1e-9, "flood p99 {}", flooded_stats.p99);
+    assert!(
+        polite_stats.p99 < 0.01,
+        "polite client's p99 poisoned by the flood: {}",
+        polite_stats.p99
+    );
+    assert!(polite_stats.max < 0.01);
 }

@@ -137,6 +137,79 @@ fn coordinator_survives_burst_load_with_mixed_concepts() {
     server.shutdown();
 }
 
+/// Build-pool failure isolation, wired the way the coordinator wires
+/// it: a panicking build runs its `on_panic` cleanup — which aborts
+/// only *its own* pending cache entry and answers that entry's waiters
+/// with an error — while the pool worker survives and keeps building
+/// other groups' tables.
+#[test]
+fn panicking_build_poisons_only_its_cache_entry_not_the_pool() {
+    use normq::coordinator::buildpool::{BuildJob, BuildPool};
+    use normq::coordinator::cache::{ByteSized, Lookup, LruCache};
+    use std::sync::mpsc::channel;
+    use std::sync::{Arc, Mutex};
+
+    struct Table(u32);
+    impl ByteSized for Table {
+        fn bytes(&self) -> usize {
+            64
+        }
+    }
+    // Waiters are reply channels, the pending handle is unit — the
+    // same state machine the coordinator instantiates with Requests
+    // and BuildControl.
+    type Cache = LruCache<Table, std::sync::mpsc::Sender<Result<u32, String>>, ()>;
+
+    let cache = Arc::new(Mutex::new(Cache::new(1 << 20)));
+    let pool = BuildPool::new(1);
+
+    // Two cold groups resolve to two pending entries, each with one
+    // waiter; "bad" panics mid-build, "good" builds normally.
+    let (bad_tx, bad_rx) = channel();
+    let (good_tx, good_rx) = channel();
+    for (key, tx) in [("bad", bad_tx), ("good", good_tx)] {
+        let started = cache.lock().unwrap().lookup(key, vec![tx], || ((), 64));
+        assert!(matches!(started, Lookup::Started(())));
+    }
+
+    let panic_cache = Arc::clone(&cache);
+    assert!(pool.spawn(BuildJob::new(
+        || panic!("injected model panic"),
+        move || {
+            // The coordinator's on_panic: abort this entry, answer its
+            // waiters with an error, release their slots.
+            let waiters = panic_cache.lock().unwrap().abort("bad");
+            for w in waiters {
+                let _ = w.send(Err("table build failed".into()));
+            }
+        },
+    )));
+    let good_cache = Arc::clone(&cache);
+    assert!(pool.spawn(BuildJob::new(
+        move || {
+            let (value, waiters) = good_cache.lock().unwrap().complete("good", Table(7));
+            for w in waiters {
+                let _ = w.send(Ok(value.0));
+            }
+        },
+        || panic!("the good build must not fail"),
+    )));
+
+    // The bad group's waiter got an error response…
+    let bad = bad_rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+    assert!(bad.is_err(), "waiters of a panicked build must see an error");
+    // …and the same (single-threaded) pool still built the good group.
+    let good = good_rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+    assert_eq!(good, Ok(7));
+
+    let mut c = cache.lock().unwrap();
+    assert_eq!(c.pending(), 0, "no pending entry may leak");
+    assert!(c.get("bad").is_none(), "the panicked entry is poisoned, not cached");
+    assert_eq!(c.get("good").unwrap().0, 7);
+    drop(c);
+    pool.shutdown();
+}
+
 #[test]
 fn decode_handles_unsatisfiable_budget_gracefully() {
     // A 4-keyword constraint with a 2-token budget is unsatisfiable; the
