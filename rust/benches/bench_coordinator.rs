@@ -7,6 +7,12 @@
 //! serial/pooled wall-clock ratio is exactly the head-of-line blocking
 //! the asynchronous build pipeline removes.
 //!
+//! The **restart** scenario measures the artifact store's warm start:
+//! the same storm is served by a cold replica (empty spill directory)
+//! and then by a restarted replica booting from the artifacts the
+//! first one persisted — which must complete with *zero* cold builds
+//! (asserted, not just measured).
+//!
 //! Results always go to `BENCH_coordinator.json` — the third artifact
 //! of the CI bench-smoke trajectory, diffed against the rolling window
 //! of previous runs by the bench-regression gate (`bench_gate`).
@@ -50,6 +56,91 @@ impl StormRow {
             ("speedup", Json::num(self.speedup())),
         ])
     }
+}
+
+struct RestartRow {
+    cold_groups: usize,
+    hidden: usize,
+    keywords: usize,
+    max_tokens: usize,
+    workers: usize,
+    cold_ms: f64,
+    warm_ms: f64,
+}
+
+impl RestartRow {
+    fn speedup(&self) -> f64 {
+        self.cold_ms / self.warm_ms.max(1e-9)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            // The identity field that keeps restart rows from ever
+            // being diffed against the storm rows by the bench gate.
+            ("scenario", Json::str("restart")),
+            ("cold_groups", Json::num(self.cold_groups as f64)),
+            ("hidden", Json::num(self.hidden as f64)),
+            ("keywords", Json::num(self.keywords as f64)),
+            ("max_tokens", Json::num(self.max_tokens as f64)),
+            ("workers", Json::num(self.workers as f64)),
+            ("cold_ms", Json::num(self.cold_ms)),
+            ("warm_ms", Json::num(self.warm_ms)),
+            ("speedup", Json::num(self.speedup())),
+        ])
+    }
+}
+
+/// One restart cycle against a spill directory: a cold replica boots
+/// over an empty directory and pays every build, then a second replica
+/// boots over the artifacts the first one persisted and must serve the
+/// same storm with **zero** cold builds (asserted via build metrics —
+/// this is the warm-start acceptance check, run on every CI bench).
+/// Both timings include `Server::start`, so the warm side also pays
+/// its artifact scan.
+fn run_restart(
+    lm: &Arc<NgramLm>,
+    hmm: &Hmm,
+    corpus: &Corpus,
+    groups: &[Vec<String>],
+    workers: usize,
+    max_tokens: usize,
+    spill_dir: &std::path::Path,
+) -> (f64, f64) {
+    let _ = std::fs::remove_dir_all(spill_dir);
+    let cfg = ServerConfig {
+        workers,
+        build_threads: groups.len().min(normq::util::threadpool::default_threads()),
+        table_threads: 1,
+        spill_dir: Some(spill_dir.to_path_buf()),
+        decode: DecodeConfig { beam: 4, max_tokens, ..Default::default() },
+        ..Default::default()
+    };
+    let mut walls = [0.0f64; 2];
+    for (boot, wall) in walls.iter_mut().enumerate() {
+        let t0 = Instant::now();
+        let server = Server::start(Arc::clone(lm), hmm.clone(), corpus.clone(), cfg.clone());
+        let rxs: Vec<_> = groups
+            .iter()
+            .filter_map(|concepts| server.submit(concepts.clone()).ok())
+            .collect();
+        assert_eq!(rxs.len(), groups.len(), "restart submissions must all be admitted");
+        for rx in &rxs {
+            let _ = rx.recv();
+        }
+        *wall = t0.elapsed().as_secs_f64() * 1e3;
+        let builds = server
+            .metrics()
+            .table_builds
+            .load(std::sync::atomic::Ordering::Relaxed);
+        if boot == 0 {
+            assert_eq!(builds, groups.len() as u64, "cold boot must build every group");
+        } else {
+            assert_eq!(builds, 0, "warm boot must serve every group without a single build");
+        }
+        server.shutdown();
+    }
+    let _ = std::fs::remove_dir_all(spill_dir);
+    (walls[0], walls[1])
 }
 
 /// One storm: a fresh server (cold cache), every group submitted at
@@ -175,16 +266,70 @@ fn main() {
         rows.push(row);
     }
 
+    // Restart scenario: the same storm served twice across a process
+    // "restart" — cold over an empty spill directory, then warm from
+    // the artifacts it left behind.
+    let restart_sizes: &[usize] = if quick { &[4] } else { &[4, 8] };
+    let spill_dir =
+        std::env::temp_dir().join(format!("normq-bench-restart-{}", std::process::id()));
+    println!(
+        "{:>11} {:>6} {:>8} {:>9} {:>9} {:>8}",
+        "restart", "hidden", "keywords", "cold_ms", "warm_ms", "speedup"
+    );
+    let mut restart_rows = Vec::new();
+    for &k in restart_sizes {
+        let storm = &groups[..k];
+        let (mut cold_ms, mut warm_ms) = (f64::INFINITY, f64::INFINITY);
+        for _ in 0..reps {
+            let (c, w) = run_restart(&lm, &hmm, &corpus, storm, workers, max_tokens, &spill_dir);
+            cold_ms = cold_ms.min(c);
+            warm_ms = warm_ms.min(w);
+        }
+        let row = RestartRow {
+            cold_groups: k,
+            hidden,
+            keywords,
+            max_tokens,
+            workers,
+            cold_ms,
+            warm_ms,
+        };
+        println!(
+            "{:>11} {:>6} {:>8} {:>9.1} {:>9.1} {:>7.2}x",
+            row.cold_groups,
+            row.hidden,
+            row.keywords,
+            row.cold_ms,
+            row.warm_ms,
+            row.speedup()
+        );
+        if row.speedup() < 1.0 {
+            eprintln!(
+                "[bench_coordinator] WARNING: warm-started boot slower than cold at \
+                 {k} groups ({:.2}x)",
+                row.speedup()
+            );
+        }
+        restart_rows.push(row);
+    }
+
     let json = Json::obj(vec![
         ("bench", Json::str("coordinator")),
         ("quick", Json::Bool(quick)),
-        ("scenarios", Json::arr(rows.iter().map(|r| r.to_json()))),
+        (
+            "scenarios",
+            Json::arr(
+                rows.iter()
+                    .map(|r| r.to_json())
+                    .chain(restart_rows.iter().map(|r| r.to_json())),
+            ),
+        ),
     ])
     .to_string();
     match std::fs::write("BENCH_coordinator.json", &json) {
         Ok(()) => println!(
             "[bench_coordinator] wrote BENCH_coordinator.json ({} scenarios)",
-            rows.len()
+            rows.len() + restart_rows.len()
         ),
         Err(e) => {
             eprintln!("[bench_coordinator] FAILED writing BENCH_coordinator.json: {e}");

@@ -8,7 +8,10 @@
 //! on a small pool of dedicated workers
 //! ([`super::ServerConfig::build_threads`]), so cold groups for
 //! different clients overlap and warm batches never queue behind a
-//! cold build.
+//! cold build. When an artifact store is configured, pool workers
+//! also run the table file I/O — the disk probe that may satisfy a
+//! miss without building, and the write-through spill of finished
+//! tables — keeping every blocking byte off the dispatcher thread.
 //!
 //! ## Panic isolation
 //!

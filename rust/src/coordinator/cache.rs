@@ -202,8 +202,21 @@ impl<V: ByteSized, W, P: Clone> LruCache<V, W, P> {
     /// the key re-resolved concurrently): the value is simply cached
     /// with no waiters.
     pub fn complete(&mut self, key: &str, value: V) -> (Arc<V>, Vec<W>) {
+        let (v, waiters, _evicted) = self.complete_evicting(key, value);
+        (v, waiters)
+    }
+
+    /// [`LruCache::complete`], additionally returning the `(key, value)`
+    /// pairs evicted to make room — the two-tier coordinator writes
+    /// them to its disk spill tier instead of losing them.
+    pub fn complete_evicting(
+        &mut self,
+        key: &str,
+        value: V,
+    ) -> (Arc<V>, Vec<W>, Vec<(String, Arc<V>)>) {
         let waiters = self.abort(key);
-        (self.insert(key, value), waiters)
+        let (v, evicted) = self.insert_evicting(key, value);
+        (v, waiters, evicted)
     }
 
     /// Tear down the pending entry for `key` (build cancelled, failed,
@@ -233,6 +246,15 @@ impl<V: ByteSized, W, P: Clone> LruCache<V, W, P> {
     /// waiters, so it panics; finish an in-flight build with
     /// [`LruCache::complete`] instead.
     pub fn insert(&mut self, key: &str, value: V) -> Arc<V> {
+        self.insert_evicting(key, value).0
+    }
+
+    /// [`LruCache::insert`], additionally returning the `(key, value)`
+    /// pairs evicted to make room (the replaced value of a re-inserted
+    /// key is *not* an eviction and is not returned). Callers with a
+    /// disk spill tier persist the evicted values; [`LruCache::insert`]
+    /// drops them.
+    pub fn insert_evicting(&mut self, key: &str, value: V) -> (Arc<V>, Vec<(String, Arc<V>)>) {
         let size = value.bytes();
         match self.map.remove(key) {
             Some(Slot::Ready { bytes, .. }) => {
@@ -248,11 +270,13 @@ impl<V: ByteSized, W, P: Clone> LruCache<V, W, P> {
             }
             None => {}
         }
+        let mut evicted = Vec::new();
         while self.used + size > self.budget {
             match self.order.pop_front() {
                 Some(evict) => {
-                    if let Some(Slot::Ready { bytes, .. }) = self.map.remove(&evict) {
+                    if let Some(Slot::Ready { bytes, value }) = self.map.remove(&evict) {
                         self.used -= bytes;
+                        evicted.push((evict, value));
                     }
                 }
                 // Oversized value, or the remainder is pending
@@ -267,7 +291,7 @@ impl<V: ByteSized, W, P: Clone> LruCache<V, W, P> {
         );
         self.order.push_back(key.to_string());
         self.used += size;
-        v
+        (v, evicted)
     }
 
     /// Get or build the value for `key`.
@@ -475,6 +499,28 @@ mod tests {
         let mut c: Flight = LruCache::new(100);
         let _ = c.lookup("k", vec!["w"], || (0, 8));
         c.insert("k", Blob(4));
+    }
+
+    #[test]
+    fn evicting_variants_hand_back_the_victims() {
+        let mut c: Flight = LruCache::new(100);
+        c.insert("a", Blob(40));
+        c.insert("b", Blob(40));
+        // Replacement is not an eviction: no victims handed back.
+        let (_, evicted) = c.insert_evicting("a", Blob(45));
+        assert!(evicted.is_empty(), "replacing a key must not report an eviction");
+        assert_eq!(c.used_bytes(), 85);
+        // Completing a pending build over a full budget evicts the LRU
+        // entries and returns them for the spill tier.
+        let _ = c.lookup("k", vec!["w"], || (0, 10));
+        let (v, waiters, evicted) = c.complete_evicting("k", Blob(60));
+        assert_eq!(v.0, 60);
+        assert_eq!(waiters, vec!["w"]);
+        let keys: Vec<&str> = evicted.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["b", "a"], "LRU-first victim order");
+        assert_eq!(evicted[0].1 .0, 40, "victim values ride along intact");
+        assert_eq!(c.used_bytes(), 60);
+        assert_eq!(c.len(), 1);
     }
 
     #[test]

@@ -224,6 +224,32 @@ pub struct Metrics {
     /// Gauge: bytes currently resident in the constraint-table cache
     /// (the byte-budgeted LRU's accounting, updated on every insert).
     pub table_bytes: AtomicU64,
+    /// Completed cold constraint-table builds. Distinct from
+    /// `table_cache_misses`: a miss served by decoding a spill artifact
+    /// counts there but not here, so `misses - builds` is the work the
+    /// artifact store saved.
+    pub table_builds: AtomicU64,
+    /// Cache misses served by decoding a persisted artifact from the
+    /// disk spill tier instead of running a cold build.
+    pub spill_hits: AtomicU64,
+    /// Artifacts written to the spill directory (write-through at build
+    /// completion, plus RAM evictions not already persisted).
+    pub spill_writes: AtomicU64,
+    /// Gauge: bytes currently resident in the spill directory (the
+    /// disk tier's own byte-budgeted accounting).
+    pub spill_bytes: AtomicU64,
+    /// Cold groups placed disk-only because their byte reservation
+    /// would have displaced the warm RAM set (they are still served —
+    /// from a detached table — and still persisted, just not promoted).
+    pub spill_rejected: AtomicU64,
+    /// Spill artifacts deleted after failing validation (truncation,
+    /// bit rot, version or digest mismatch); each one degraded to a
+    /// clean rebuild, never a crash.
+    pub spill_corrupt: AtomicU64,
+    /// Gauge: artifacts pre-registered from the spill directory at boot
+    /// — previously-built groups a restarted replica serves with zero
+    /// cold builds.
+    pub warm_started: AtomicU64,
     /// Rejected by the `LoadShed` middleware before reaching the queue.
     pub shed: AtomicU64,
     /// Requests whose deadline fired (`Timeout` middleware).
@@ -302,6 +328,13 @@ impl Metrics {
             build_queue_us: AtomicU64::new(0),
             build_failed: AtomicU64::new(0),
             table_bytes: AtomicU64::new(0),
+            table_builds: AtomicU64::new(0),
+            spill_hits: AtomicU64::new(0),
+            spill_writes: AtomicU64::new(0),
+            spill_bytes: AtomicU64::new(0),
+            spill_rejected: AtomicU64::new(0),
+            spill_corrupt: AtomicU64::new(0),
+            warm_started: AtomicU64::new(0),
             shed: AtomicU64::new(0),
             timed_out: AtomicU64::new(0),
             hedged: AtomicU64::new(0),
@@ -467,7 +500,7 @@ impl Metrics {
             })
             .unwrap_or_else(|| "latency n/a".into());
         format!(
-            "submitted={} completed={} rejected={} shed={} quota_denied={} fair_shed={} adaptive_shed={} adaptive_limit={} timed_out={} hedged={} hedge_wins={} satisfied={} cache h/m={}/{} joins={} table_build_ms={:.1} build_queue_ms={:.1} builds_inflight={} build_waiting={} build_failed={} table_bytes={} {}",
+            "submitted={} completed={} rejected={} shed={} quota_denied={} fair_shed={} adaptive_shed={} adaptive_limit={} timed_out={} hedged={} hedge_wins={} satisfied={} cache h/m={}/{} joins={} builds={} table_build_ms={:.1} build_queue_ms={:.1} builds_inflight={} build_waiting={} build_failed={} table_bytes={} spill h/w={}/{} spill_rejected={} spill_corrupt={} spill_bytes={} warm={} {}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -483,12 +516,19 @@ impl Metrics {
             self.table_cache_hits.load(Ordering::Relaxed),
             self.table_cache_misses.load(Ordering::Relaxed),
             self.table_joins.load(Ordering::Relaxed),
+            self.table_builds.load(Ordering::Relaxed),
             self.table_build_us.load(Ordering::Relaxed) as f64 / 1e3,
             self.build_queue_us.load(Ordering::Relaxed) as f64 / 1e3,
             self.builds_inflight.load(Ordering::Relaxed),
             self.build_waiting.load(Ordering::Relaxed),
             self.build_failed.load(Ordering::Relaxed),
             self.table_bytes.load(Ordering::Relaxed),
+            self.spill_hits.load(Ordering::Relaxed),
+            self.spill_writes.load(Ordering::Relaxed),
+            self.spill_rejected.load(Ordering::Relaxed),
+            self.spill_corrupt.load(Ordering::Relaxed),
+            self.spill_bytes.load(Ordering::Relaxed),
+            self.warm_started.load(Ordering::Relaxed),
             lat
         )
     }
@@ -509,6 +549,10 @@ mod tests {
         assert_eq!(s.n, 2);
         assert!((s.mean - 0.015).abs() < 1e-9);
         assert!(m.summary().contains("submitted=3"));
+        m.spill_hits.fetch_add(2, Ordering::Relaxed);
+        m.warm_started.store(5, Ordering::Relaxed);
+        assert!(m.summary().contains("spill h/w=2/0"));
+        assert!(m.summary().contains("warm=5"));
     }
 
     #[test]

@@ -21,6 +21,14 @@
 //! through the shared [`buildpool::BuildControl`], and a build whose
 //! every waiter has expired cancels itself at the next level check.
 //!
+//! With a spill directory configured (`--spill-dir`), the RAM table
+//! cache gains a persistent disk tier ([`store`]): completed builds
+//! write through to checksummed artifact files, RAM evictions spill
+//! instead of dropping, cold misses probe disk before building (the
+//! read claims the same singleflight pending entry a build would), and
+//! a restart warm-starts from the directory — every digest-matching
+//! group is pre-registered and serves with zero cold builds.
+//!
 //! `Server` implements [`crate::service::Service`] over [`ServeRequest`]
 //! so it can sit at the bottom of an admission-control [`Stack`]
 //! (`Stack::new().load_shed(..).timeout(..).service(server)`): callers
@@ -37,7 +45,9 @@
 pub mod buildpool;
 pub mod cache;
 pub mod metrics;
+pub mod store;
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, Weak};
@@ -56,6 +66,7 @@ use crate::service::{Deadlined, Expirable, Keyed, Readiness, Service, ServiceErr
 use buildpool::{BuildControl, BuildJob, BuildPool};
 use cache::{ByteSized, Lookup, LruCache};
 use metrics::{ClientStats, Metrics};
+use store::{ReadOutcome, TableStore, WriteOutcome};
 
 /// The decode-state cache specialized to the serving pipeline: values
 /// are DFA + table pairs, waiters are parked [`Request`]s, and the
@@ -232,6 +243,13 @@ pub struct ServerConfig {
     pub build_threads: usize,
     /// Model representation the table engine runs over.
     pub table_backend: TableBackend,
+    /// Spill directory for the persistent artifact store (CLI
+    /// `--spill-dir`). `None` disables the disk tier entirely: RAM
+    /// evictions drop their tables and every restart boots cold.
+    pub spill_dir: Option<PathBuf>,
+    /// Byte budget for the spill directory (CLI `--spill-budget-mb`);
+    /// least-recently-touched artifacts are deleted past it.
+    pub spill_budget_bytes: usize,
     /// Beam-search configuration shared by every request.
     pub decode: DecodeConfig,
 }
@@ -247,6 +265,8 @@ impl Default for ServerConfig {
             table_threads: crate::util::threadpool::default_threads(),
             build_threads: crate::util::threadpool::default_threads(),
             table_backend: TableBackend::Dense,
+            spill_dir: None,
+            spill_budget_bytes: 256 << 20,
             decode: DecodeConfig::default(),
         }
     }
@@ -265,6 +285,14 @@ struct Shared {
     cfg: ServerConfig,
     metrics: Arc<Metrics>,
     tables: Mutex<TableCache>,
+    /// The disk spill tier under the RAM table cache; `None` when no
+    /// spill directory is configured (or it failed to open at boot).
+    store: Option<Arc<TableStore>>,
+    /// Behavioral fingerprint of `model` ([`store::model_fingerprint`])
+    /// mixed with the decode token budget (which fixes the persisted
+    /// tables' shape), stamped into every artifact and validated
+    /// against every artifact read back.
+    model_digest: u64,
 }
 
 /// A dispatched batch: one concept group with its shared decode state.
@@ -302,13 +330,58 @@ impl Server {
             TableBackend::Dense => Arc::new(hmm),
             TableBackend::Quantized { bits } => Arc::new(QuantizedHmm::from_hmm(&hmm, bits)),
         };
+        // A persisted table's budget axis is sized by `max_tokens`, so
+        // a replica serving a different token budget must not adopt
+        // it: fold the budget into the digest next to the model.
+        let model_digest = store::model_fingerprint(&*model)
+            ^ (cfg.decode.max_tokens as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut tables = LruCache::new(cfg.table_cache_bytes);
+        let artifact_store = cfg.spill_dir.as_ref().and_then(|dir| {
+            match TableStore::open(dir, cfg.spill_budget_bytes) {
+                Ok(s) => Some(Arc::new(s)),
+                Err(e) => {
+                    crate::log_warn!("spill tier disabled: cannot open {}: {e}", dir.display());
+                    None
+                }
+            }
+        });
+        if let Some(s) = &artifact_store {
+            // Warm start: every artifact in the spill directory that
+            // decodes cleanly and digest-matches the active backend is
+            // pre-registered — promoted into RAM most-recent-first
+            // while the boot set fits the budget, left disk-resident
+            // past it (a first request promotes it via the spill-read
+            // path). Stale and corrupt files are deleted by the scan.
+            let scan = s.warm_scan(model_digest);
+            let mut warmed = 0u64;
+            for (key, state) in scan.artifacts {
+                if tables.used_bytes() + state.bytes() <= tables.budget_bytes() {
+                    tables.insert(&key, state);
+                }
+                warmed += 1;
+            }
+            if warmed > 0 || scan.corrupt > 0 || scan.stale > 0 {
+                crate::log_info!(
+                    "warm start: {warmed} artifacts ({} promoted to RAM, {} corrupt, {} stale)",
+                    tables.len(),
+                    scan.corrupt,
+                    scan.stale
+                );
+            }
+            metrics.warm_started.store(warmed, Ordering::Relaxed);
+            metrics.spill_corrupt.fetch_add(scan.corrupt, Ordering::Relaxed);
+            metrics.spill_bytes.store(s.used_bytes() as u64, Ordering::Relaxed);
+            metrics.table_bytes.store(tables.used_bytes() as u64, Ordering::Relaxed);
+        }
         let shared = Arc::new(Shared {
             lm,
             model,
             corpus,
             cfg: cfg.clone(),
             metrics: Arc::clone(&metrics),
-            tables: Mutex::new(LruCache::new(cfg.table_cache_bytes)),
+            tables: Mutex::new(tables),
+            store: artifact_store,
+            model_digest,
         });
         let (intake, intake_rx) = sync_channel::<Request>(cfg.queue_capacity);
         let (work_tx, work_rx) = sync_channel::<Batch>(cfg.workers * 2);
@@ -601,6 +674,109 @@ fn fail_pending(shared: &Shared, key: &str) {
     }
 }
 
+/// Where a cold group's finished decode state goes once built (or read
+/// back from disk).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Placement {
+    /// Into the RAM cache, evicting LRU entries to fit (evictions
+    /// spill to disk when a store is configured). The normal case.
+    Ram,
+    /// Disk-only: the waiters are served from a detached table and the
+    /// artifact persists, but the warm RAM set is never displaced.
+    /// Chosen at admission for "whale" reservations (more than half
+    /// the RAM budget) and for groups arriving while the budget is
+    /// already oversubscribed by pending reservations.
+    SpillOnly,
+}
+
+/// Everything one pool job needs to produce `key`'s decode state: the
+/// pre-compiled DFA, the group's shared build control, where the
+/// finished state is placed, and whether a disk artifact should be
+/// probed before building.
+struct BuildTask {
+    key: String,
+    dfa: Dfa,
+    ctl: Arc<BuildControl>,
+    placement: Placement,
+    try_spill: bool,
+}
+
+/// Count one spill-write outcome. `AlreadyPresent` and `TooLarge` are
+/// silent non-events; an I/O failure costs persistence only (the RAM
+/// copy still serves), so it logs rather than failing the group.
+fn record_spill_write(shared: &Shared, outcome: WriteOutcome) {
+    match outcome {
+        WriteOutcome::Written(_) => {
+            shared.metrics.spill_writes.fetch_add(1, Ordering::Relaxed);
+        }
+        WriteOutcome::Failed(e) => {
+            crate::log_warn!("spill write failed: {e}");
+        }
+        WriteOutcome::AlreadyPresent | WriteOutcome::TooLarge => {}
+    }
+}
+
+/// Refresh the `spill_bytes` gauge from the store's accounting.
+fn refresh_spill_gauge(shared: &Shared) {
+    if let Some(store) = &shared.store {
+        shared
+            .metrics
+            .spill_bytes
+            .store(store.used_bytes() as u64, Ordering::Relaxed);
+    }
+}
+
+/// Complete `key`'s pending entry with a finished decode state and
+/// dispatch its waiters. `Placement::Ram` swaps the entry to ready in
+/// the RAM cache (LRU evictions are handed back and spill-written
+/// instead of dropped); `Placement::SpillOnly` serves the waiters from
+/// a detached `Arc` without touching the resident set. With `persist`,
+/// the state is write-through persisted to the spill directory —
+/// skipped for disk-served states, whose artifact already exists. All
+/// file I/O runs on the calling pool worker, never the dispatcher.
+/// Returns `false` when the decode pool is gone.
+fn finish_state(
+    shared: &Arc<Shared>,
+    work: &SyncSender<Batch>,
+    key: &str,
+    state: (Dfa, ConstraintTable),
+    placement: Placement,
+    persist: bool,
+) -> bool {
+    let (state, waiters, evicted) = {
+        let mut tables = shared.tables.lock().unwrap();
+        let (state, waiters, evicted) = match placement {
+            Placement::Ram => tables.complete_evicting(key, state),
+            Placement::SpillOnly => (Arc::new(state), tables.abort(key), Vec::new()),
+        };
+        shared
+            .metrics
+            .table_bytes
+            .store(tables.used_bytes() as u64, Ordering::Relaxed);
+        (state, waiters, evicted)
+    };
+    shared
+        .metrics
+        .build_waiting
+        .fetch_sub(waiters.len() as u64, Ordering::Relaxed);
+    if let Some(store) = &shared.store {
+        if persist {
+            record_spill_write(
+                shared,
+                store.write_if_absent(key, shared.model_digest, &state),
+            );
+        }
+        for (evicted_key, value) in &evicted {
+            record_spill_write(
+                shared,
+                store.write_if_absent(evicted_key, shared.model_digest, value),
+            );
+        }
+        refresh_spill_gauge(shared);
+    }
+    dispatch_batches(shared, work, state, waiters)
+}
+
 /// Resolve one concept group against the cache's singleflight state
 /// machine: dispatch immediately on a resident table (hit), park the
 /// group on an in-flight build and extend its deadline (join), or open
@@ -633,16 +809,37 @@ fn resolve_group(
         cold.then(&compile_dfa)
     };
     let mut new_dfa = None;
+    let mut placement = Placement::Ram;
     let resolved = {
         let mut tables = shared.tables.lock().unwrap();
+        // Read the budget state before `lookup` borrows the cache: the
+        // lock is held across both, so the numbers cannot go stale.
+        let (used, budget) = (tables.used_bytes(), tables.budget_bytes());
         let lookup = tables.lookup(key, requests, || {
             // Cold key: take the precompiled DFA (or compile here if
             // the entry vanished between peek and lookup) so the byte
             // reservation is exact; the expensive table build goes to
             // the pool.
             let dfa = precompiled.take().unwrap_or_else(&compile_dfa);
-            let reserve =
+            let estimate =
                 estimate_state_bytes(&dfa, shared.cfg.decode.max_tokens, shared.model.hidden());
+            // Bytes-aware admission across the RAM/disk split: with a
+            // spill tier present, a reservation that would displace
+            // more than half the warm RAM set (a whale table) or that
+            // arrives while pending reservations already oversubscribe
+            // the budget is placed disk-only — reserve nothing, serve
+            // the waiters from a detached table, persist the artifact.
+            // Without a spill tier the old insert-and-evict behavior
+            // stands: dropping the table entirely would be worse than
+            // evicting for it.
+            let reserve = if shared.store.is_some()
+                && (estimate.saturating_mul(2) > budget || used > budget)
+            {
+                placement = Placement::SpillOnly;
+                0
+            } else {
+                estimate
+            };
             new_dfa = Some(dfa);
             (Arc::new(BuildControl::new(deadline)), reserve)
         });
@@ -664,6 +861,9 @@ fn resolve_group(
             Lookup::Started(_) => {
                 shared.metrics.table_cache_misses.fetch_add(1, Ordering::Relaxed);
                 shared.metrics.build_waiting.fetch_add(n, Ordering::Relaxed);
+                if placement == Placement::SpillOnly {
+                    shared.metrics.spill_rejected.fetch_add(1, Ordering::Relaxed);
+                }
             }
         }
         shared
@@ -676,7 +876,19 @@ fn resolve_group(
         Lookup::Ready(state, requests) => dispatch_batches(shared, work, state, requests),
         Lookup::Joined(_) => true,
         Lookup::Started(ctl) => {
-            spawn_build(shared, work, pool, key.to_string(), new_dfa.expect("factory ran"), ctl);
+            // Peek the spill index (no I/O) so the pool job knows to
+            // probe disk before building; the read itself runs on the
+            // pool worker under the same pending entry a build holds,
+            // so N concurrent misses still do one disk read.
+            let try_spill = shared.store.as_ref().is_some_and(|s| s.contains(key));
+            let task = BuildTask {
+                key: key.to_string(),
+                dfa: new_dfa.expect("factory ran"),
+                ctl,
+                placement,
+                try_spill,
+            };
+            spawn_build(shared, work, pool, task);
             true
         }
     }
@@ -689,10 +901,9 @@ fn spawn_build(
     shared: &Arc<Shared>,
     work: &SyncSender<Batch>,
     pool: &Weak<BuildPool>,
-    key: String,
-    dfa: Dfa,
-    ctl: Arc<BuildControl>,
+    task: BuildTask,
 ) {
+    let key = task.key.clone();
     let Some(strong) = pool.upgrade() else {
         fail_pending(shared, &key);
         return;
@@ -703,8 +914,7 @@ fn spawn_build(
         let shared = Arc::clone(shared);
         let work = work.clone();
         let pool = Weak::clone(pool);
-        let key = key.clone();
-        move || run_build(shared, work, pool, key, dfa, ctl, queued_at)
+        move || run_build(shared, work, pool, task, queued_at)
     };
     let on_panic = {
         let shared = Arc::clone(shared);
@@ -723,26 +933,46 @@ fn spawn_build(
     }
 }
 
-/// One build job: run the HMM×DFA recursion under the group's dynamic
-/// deadline ([`BuildControl`] as the [`CancelProbe`]), then swap the
-/// pending entry to ready and dispatch every parked waiter. A
-/// cancelled build answers its expired waiters `timed_out`; a waiter
-/// that joined inside the cancellation window still has a live
-/// deadline and is re-resolved (fresh build or re-park) rather than
-/// being answered dead.
+/// One build job: probe the artifact store (when the key is known to
+/// be spilled), else run the HMM×DFA recursion under the group's
+/// dynamic deadline ([`BuildControl`] as the [`CancelProbe`]), then
+/// swap the pending entry to ready and dispatch every parked waiter.
+/// A disk hit that decodes clean is promoted without touching the
+/// build path; a corrupt artifact is deleted by the store and the
+/// group falls through to a normal cold build. A cancelled build
+/// answers its expired waiters `timed_out`; a waiter that joined
+/// inside the cancellation window still has a live deadline and is
+/// re-resolved (fresh build or re-park) rather than being answered
+/// dead.
 fn run_build(
     shared: Arc<Shared>,
     work: SyncSender<Batch>,
     pool: Weak<BuildPool>,
-    key: String,
-    dfa: Dfa,
-    ctl: Arc<BuildControl>,
+    task: BuildTask,
     queued_at: Instant,
 ) {
+    let BuildTask { key, dfa, ctl, placement, try_spill } = task;
     shared
         .metrics
         .build_queue_us
         .fetch_add(queued_at.elapsed().as_micros() as u64, Ordering::Relaxed);
+    if try_spill {
+        if let Some(store) = &shared.store {
+            match store.read(&key, shared.model_digest) {
+                ReadOutcome::Hit(state) => {
+                    shared.metrics.spill_hits.fetch_add(1, Ordering::Relaxed);
+                    finish_state(&shared, &work, &key, state, placement, false);
+                    shared.metrics.builds_inflight.fetch_sub(1, Ordering::Relaxed);
+                    return;
+                }
+                ReadOutcome::Corrupt => {
+                    shared.metrics.spill_corrupt.fetch_add(1, Ordering::Relaxed);
+                    refresh_spill_gauge(&shared);
+                }
+                ReadOutcome::Miss => {}
+            }
+        }
+    }
     let opts = BuildOptions {
         deadline: None,
         threads: shared.cfg.table_threads,
@@ -753,25 +983,13 @@ fn run_build(
         ConstraintTable::build_with(&*shared.model, &dfa, shared.cfg.decode.max_tokens, &opts);
     match built {
         Some(table) => {
+            shared.metrics.table_builds.fetch_add(1, Ordering::Relaxed);
             shared
                 .metrics
                 .table_build_us
                 .fetch_add(build_start.elapsed().as_micros() as u64, Ordering::Relaxed);
-            let (state, waiters) = {
-                let mut tables = shared.tables.lock().unwrap();
-                let r = tables.complete(&key, (dfa, table));
-                shared
-                    .metrics
-                    .table_bytes
-                    .store(tables.used_bytes() as u64, Ordering::Relaxed);
-                r
-            };
-            shared
-                .metrics
-                .build_waiting
-                .fetch_sub(waiters.len() as u64, Ordering::Relaxed);
+            finish_state(&shared, &work, &key, (dfa, table), placement, true);
             shared.metrics.builds_inflight.fetch_sub(1, Ordering::Relaxed);
-            dispatch_batches(&shared, &work, state, waiters);
         }
         None => {
             // Cancelled: at the probe check, every then-attached

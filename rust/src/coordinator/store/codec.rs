@@ -1,0 +1,523 @@
+//! Versioned, checksummed binary serialization for constraint-table
+//! artifacts.
+//!
+//! One artifact file carries everything a restarted replica needs to
+//! serve a concept group without a cold build: the coordinator's cache
+//! key, a behavioral digest of the model the table was built over, the
+//! DFA's *source* (keywords + vocabulary size — the automaton itself is
+//! recompiled deterministically at decode, so the wire format never has
+//! to trust transition tables), and the raw A/C planes bit-for-bit.
+//!
+//! ## Wire layout (format v1)
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic "NQTA"
+//!      4     4  format version (u32 LE)
+//!      8     8  model digest   (u64 LE)
+//!     16     8  payload checksum (u64 LE, over the payload bytes)
+//!     24     8  payload length (u64 LE)
+//!     32     …  payload:
+//!               key length (u64) + UTF-8 key bytes
+//!               vocab size (u64)
+//!               keyword count (u64), then per keyword:
+//!                 token count (u64) + tokens (u32 LE each)
+//!               table shape: hidden, dfa_states, max_budget (u64 each)
+//!               A plane then C plane (f32 LE each; lengths derived
+//!               from the shape, so a shape/plane mismatch is
+//!               structurally impossible to encode)
+//! ```
+//!
+//! All integers are little-endian; floats round-trip through
+//! `to_le_bytes`/`from_le_bytes`, so decode(encode(t)) is bit-identical
+//! for every representable f32 (NaN payloads included).
+//!
+//! Decode is total: any input — truncated, bit-flipped, wrong version,
+//! or actively malformed — produces a [`CodecError`], never a panic and
+//! never a structurally invalid table. The checksum guards against
+//! corruption (truncation, bit rot), not adversaries; structural bounds
+//! checks run *before* any allocation or DFA recompilation so a
+//! corrupt length field cannot balloon memory.
+
+use crate::dfa::Dfa;
+use crate::generate::ConstraintTable;
+
+/// Artifact file magic: "NQTA" (Norm-Q Table Artifact).
+pub const MAGIC: [u8; 4] = *b"NQTA";
+
+/// The current artifact format version, written by [`BinaryCodecV1`].
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Fixed header size preceding the payload (magic + version + digest +
+/// checksum + payload length).
+pub const HEADER_LEN: usize = 32;
+
+/// Decode-side ceiling on the keyword count ([`Dfa::from_keywords`]
+/// asserts the same bound).
+const MAX_KEYWORDS: usize = 20;
+/// Decode-side ceiling on tokens per keyword (real keywords are 1–4
+/// tokens; this bounds DFA recompilation cost for corrupt inputs).
+const MAX_KEYWORD_LEN: usize = 8;
+/// Decode-side ceiling on the vocabulary size.
+const MAX_VOCAB: usize = 1 << 24;
+/// Decode-side ceiling on f32 cells per plane (4 GiB of floats).
+const MAX_PLANE_F32: usize = 1 << 30;
+
+/// Why an artifact failed to decode. Every variant is a clean
+/// "fall back to a cold build" signal for the store — corruption is an
+/// expected condition here, never a panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecError {
+    /// The byte stream ended before the structure did.
+    Truncated {
+        /// Bytes the next field needed.
+        need: usize,
+        /// Bytes actually remaining.
+        have: usize,
+    },
+    /// The first four bytes are not [`MAGIC`] — not an artifact file.
+    BadMagic([u8; 4]),
+    /// The format version is one this codec does not read.
+    Version {
+        /// The version stamped in the file.
+        found: u32,
+    },
+    /// The payload checksum does not match its stored value.
+    Checksum {
+        /// Checksum recorded in the header.
+        stored: u64,
+        /// Checksum recomputed over the payload.
+        computed: u64,
+    },
+    /// The bytes verified but describe an impossible structure
+    /// (out-of-range shape, bad UTF-8, trailing garbage, …).
+    Malformed(String),
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::Truncated { need, have } => {
+                write!(f, "truncated artifact: needed {need} bytes, had {have}")
+            }
+            CodecError::BadMagic(m) => write!(f, "bad magic {m:?}"),
+            CodecError::Version { found } => {
+                write!(f, "unsupported format version {found} (this codec reads {FORMAT_VERSION})")
+            }
+            CodecError::Checksum { stored, computed } => {
+                write!(f, "checksum mismatch: stored {stored:#018x}, computed {computed:#018x}")
+            }
+            CodecError::Malformed(why) => write!(f, "malformed artifact: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// One decoded artifact: the coordinator cache key, the digest of the
+/// backend the table was built over, and the decode state itself.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    /// The coordinator's concept-group cache key.
+    pub key: String,
+    /// Behavioral fingerprint of the backend (see
+    /// [`super::model_fingerprint`]); the store refuses to serve an
+    /// artifact whose digest does not match the live model.
+    pub model_digest: u64,
+    /// The cached decode state: compiled DFA plus constraint table.
+    pub state: (Dfa, ConstraintTable),
+}
+
+impl Artifact {
+    /// Borrowed view for encoding.
+    pub fn as_ref(&self) -> ArtifactRef<'_> {
+        ArtifactRef { key: &self.key, model_digest: self.model_digest, state: &self.state }
+    }
+}
+
+/// Borrowed view of an artifact handed to [`TableCodec::encode`] — the
+/// planes are megabytes, so encoding must not require cloning them
+/// into an owned [`Artifact`] first.
+#[derive(Clone, Copy)]
+pub struct ArtifactRef<'a> {
+    /// The coordinator's concept-group cache key.
+    pub key: &'a str,
+    /// Behavioral fingerprint of the backend the table was built over.
+    pub model_digest: u64,
+    /// The decode state being persisted.
+    pub state: &'a (Dfa, ConstraintTable),
+}
+
+/// A serialization format for table artifacts. The store holds a
+/// `Box<dyn TableCodec>`, so a format revision is a new implementor
+/// plus a version bump — old files fail decode with
+/// [`CodecError::Version`] and fall back to a rebuild rather than being
+/// misread.
+pub trait TableCodec: Send + Sync {
+    /// The format version this codec writes (and the only one it reads).
+    fn version(&self) -> u32;
+    /// Serialize an artifact into its on-disk byte layout.
+    fn encode(&self, artifact: ArtifactRef<'_>) -> Vec<u8>;
+    /// Parse and validate an artifact: magic, version, checksum, then
+    /// structure. Digest matching against the *live* model is the
+    /// store's job — the codec only surfaces the recorded digest.
+    fn decode(&self, bytes: &[u8]) -> Result<Artifact, CodecError>;
+}
+
+/// 64-bit payload checksum: FNV-1a over 8-byte little-endian lanes
+/// (length-seeded), finished with a SplitMix64-style avalanche so
+/// nearby payloads differ across the whole word. Per-lane xor-multiply
+/// by an odd constant is invertible mod 2⁶⁴, so any single-bit flip is
+/// guaranteed to change the digest. Not cryptographic: it guards
+/// against truncation and bit rot, not adversaries.
+pub fn checksum64(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET ^ (bytes.len() as u64).wrapping_mul(PRIME);
+    let mut lanes = bytes.chunks_exact(8);
+    for lane in &mut lanes {
+        let v = u64::from_le_bytes(lane.try_into().expect("8-byte lane"));
+        h = (h ^ v).wrapping_mul(PRIME);
+    }
+    for &b in lanes.remainder() {
+        h = (h ^ u64::from(b)).wrapping_mul(PRIME);
+    }
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94d0_49bb_1331_11eb);
+    h ^ (h >> 31)
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Narrow a wire u64 to usize, mapping overflow to [`CodecError::Malformed`].
+fn narrow(v: u64, what: &str) -> Result<usize, CodecError> {
+    usize::try_from(v).map_err(|_| CodecError::Malformed(format!("{what} {v} overflows usize")))
+}
+
+/// Cursor over the input with total, never-panicking reads.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if self.remaining() < n {
+            return Err(CodecError::Truncated { need: n, have: self.remaining() });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u32(&mut self) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64, CodecError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, CodecError> {
+        let total = n
+            .checked_mul(4)
+            .ok_or_else(|| CodecError::Malformed(format!("plane of {n} floats overflows")))?;
+        let raw = self.take(total)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().expect("4 bytes")))
+            .collect())
+    }
+}
+
+/// Format v1: the layout in the [module docs](self).
+pub struct BinaryCodecV1;
+
+impl TableCodec for BinaryCodecV1 {
+    fn version(&self) -> u32 {
+        FORMAT_VERSION
+    }
+
+    fn encode(&self, artifact: ArtifactRef<'_>) -> Vec<u8> {
+        let (dfa, table) = artifact.state;
+        let mut payload = Vec::with_capacity(table.bytes() + artifact.key.len() + 256);
+        put_u64(&mut payload, artifact.key.len() as u64);
+        payload.extend_from_slice(artifact.key.as_bytes());
+        put_u64(&mut payload, dfa.vocab as u64);
+        put_u64(&mut payload, dfa.keywords.len() as u64);
+        for kw in &dfa.keywords {
+            put_u64(&mut payload, kw.len() as u64);
+            for &tok in kw {
+                put_u32(&mut payload, tok as u32);
+            }
+        }
+        let (h_n, d_n, max_budget) = table.dims();
+        put_u64(&mut payload, h_n as u64);
+        put_u64(&mut payload, d_n as u64);
+        put_u64(&mut payload, max_budget as u64);
+        let (a, c) = table.planes();
+        put_f32s(&mut payload, a);
+        put_f32s(&mut payload, c);
+
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+        out.extend_from_slice(&MAGIC);
+        put_u32(&mut out, FORMAT_VERSION);
+        put_u64(&mut out, artifact.model_digest);
+        put_u64(&mut out, checksum64(&payload));
+        put_u64(&mut out, payload.len() as u64);
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Result<Artifact, CodecError> {
+        let mut r = Reader::new(bytes);
+        let magic = r.take(4)?;
+        if magic != MAGIC {
+            return Err(CodecError::BadMagic(magic.try_into().expect("4 bytes")));
+        }
+        let version = r.u32()?;
+        if version != FORMAT_VERSION {
+            return Err(CodecError::Version { found: version });
+        }
+        let model_digest = r.u64()?;
+        let stored = r.u64()?;
+        let payload_len = narrow(r.u64()?, "payload length")?;
+        let payload = r.take(payload_len)?;
+        if r.remaining() != 0 {
+            return Err(CodecError::Malformed(format!(
+                "{} trailing bytes after payload",
+                r.remaining()
+            )));
+        }
+        let computed = checksum64(payload);
+        if computed != stored {
+            return Err(CodecError::Checksum { stored, computed });
+        }
+
+        let mut p = Reader::new(payload);
+        let key_len = narrow(p.u64()?, "key length")?;
+        let key = std::str::from_utf8(p.take(key_len)?)
+            .map_err(|_| CodecError::Malformed("cache key is not UTF-8".into()))?
+            .to_string();
+        let vocab = narrow(p.u64()?, "vocab")?;
+        if vocab == 0 || vocab > MAX_VOCAB {
+            return Err(CodecError::Malformed(format!("vocab {vocab} out of range")));
+        }
+        let n_kw = narrow(p.u64()?, "keyword count")?;
+        if n_kw == 0 || n_kw > MAX_KEYWORDS {
+            return Err(CodecError::Malformed(format!("{n_kw} keywords out of range")));
+        }
+        let mut keywords = Vec::with_capacity(n_kw);
+        for i in 0..n_kw {
+            let len = narrow(p.u64()?, "keyword length")?;
+            if len == 0 || len > MAX_KEYWORD_LEN {
+                return Err(CodecError::Malformed(format!(
+                    "keyword {i} has {len} tokens, expected 1..={MAX_KEYWORD_LEN}"
+                )));
+            }
+            let mut kw = Vec::with_capacity(len);
+            for _ in 0..len {
+                let tok = p.u32()? as usize;
+                if tok >= vocab {
+                    return Err(CodecError::Malformed(format!(
+                        "keyword token {tok} >= vocab {vocab}"
+                    )));
+                }
+                kw.push(tok);
+            }
+            keywords.push(kw);
+        }
+        let h_n = narrow(p.u64()?, "hidden")?;
+        let d_n = narrow(p.u64()?, "dfa states")?;
+        let max_budget = narrow(p.u64()?, "max budget")?;
+        let plane = max_budget
+            .checked_add(1)
+            .and_then(|levels| levels.checked_mul(d_n))
+            .and_then(|cells| cells.checked_mul(h_n))
+            .filter(|&cells| cells <= MAX_PLANE_F32)
+            .ok_or_else(|| {
+                CodecError::Malformed(format!(
+                    "table shape h={h_n} d={d_n} budget={max_budget} out of range"
+                ))
+            })?;
+        let a = p.f32s(plane)?;
+        let c = p.f32s(plane)?;
+        if p.remaining() != 0 {
+            return Err(CodecError::Malformed(format!(
+                "{} trailing payload bytes",
+                p.remaining()
+            )));
+        }
+        // Every from_keywords precondition was checked above, so the
+        // deterministic recompile cannot assert; its state count must
+        // agree with the shape the planes were laid out for.
+        let dfa = Dfa::from_keywords(&keywords, vocab);
+        if dfa.n_states() != d_n {
+            return Err(CodecError::Malformed(format!(
+                "recompiled DFA has {} states, artifact claims {d_n}",
+                dfa.n_states()
+            )));
+        }
+        let table = ConstraintTable::from_parts(h_n, d_n, max_budget, a, c)
+            .map_err(CodecError::Malformed)?;
+        Ok(Artifact { key, model_digest, state: (dfa, table) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hmm::Hmm;
+    use crate::quant::qhmm::QuantizedHmm;
+    use crate::util::rng::Rng;
+
+    fn sample_artifact(seed: u64, quantized: bool) -> Artifact {
+        let mut rng = Rng::seeded(seed);
+        let hmm = Hmm::random(6, 24, 0.4, 0.3, &mut rng);
+        let dfa = Dfa::from_keywords(&[vec![3, 5], vec![9]], 24);
+        let table = if quantized {
+            let q = QuantizedHmm::from_hmm(&hmm, 6);
+            ConstraintTable::build(&q, &dfa, 9)
+        } else {
+            ConstraintTable::build(&hmm, &dfa, 9)
+        };
+        Artifact {
+            key: format!("concept-a\u{1f}concept-b\u{1f}{seed}"),
+            model_digest: 0x1234_5678_9abc_def0 ^ seed,
+            state: (dfa, table),
+        }
+    }
+
+    fn assert_state_identical(x: &(Dfa, ConstraintTable), y: &(Dfa, ConstraintTable)) {
+        assert_eq!(x.0.vocab, y.0.vocab);
+        assert_eq!(x.0.keywords, y.0.keywords);
+        assert_eq!(x.0.n_states(), y.0.n_states());
+        assert_eq!(x.1.dims(), y.1.dims());
+        let (xa, xc) = x.1.planes();
+        let (ya, yc) = y.1.planes();
+        // Bit-identical, not approximately equal: compare the raw bits
+        // so -0.0 vs 0.0 or a NaN payload change would be caught.
+        assert!(xa.iter().zip(ya).all(|(p, q)| p.to_bits() == q.to_bits()));
+        assert!(xc.iter().zip(yc).all(|(p, q)| p.to_bits() == q.to_bits()));
+    }
+
+    #[test]
+    fn round_trip_is_bit_identical() {
+        for quantized in [false, true] {
+            let artifact = sample_artifact(41, quantized);
+            let codec = BinaryCodecV1;
+            let bytes = codec.encode(artifact.as_ref());
+            let back = codec.decode(&bytes).expect("own encoding decodes");
+            assert_eq!(back.key, artifact.key);
+            assert_eq!(back.model_digest, artifact.model_digest);
+            assert_state_identical(&back.state, &artifact.state);
+            // Determinism: re-encoding the decoded artifact reproduces
+            // the byte stream exactly.
+            assert_eq!(codec.encode(back.as_ref()), bytes);
+        }
+    }
+
+    /// The corruption property: flipping any single bit of the file
+    /// either fails decode or (only for the 8 model-digest bytes, which
+    /// are outside the checksummed payload) surfaces a different digest
+    /// for the store's digest check to reject. No flip may yield a
+    /// "valid" artifact with the original digest.
+    #[test]
+    fn every_single_byte_flip_is_caught() {
+        let artifact = sample_artifact(42, false);
+        let codec = BinaryCodecV1;
+        let bytes = codec.encode(artifact.as_ref());
+        // Stride through the planes; every header/structure byte plus a
+        // sample of plane bytes keeps the test fast (~1k decodes).
+        let stride = (bytes.len() / 512).max(1);
+        for pos in (0..bytes.len()).step_by(stride).chain(0..HEADER_LEN.min(bytes.len())) {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x10;
+            match codec.decode(&bad) {
+                Err(_) => {}
+                Ok(decoded) => {
+                    assert!(
+                        (8..16).contains(&pos) && decoded.model_digest != artifact.model_digest,
+                        "flip at byte {pos} produced a digest-matching artifact"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_caught() {
+        let artifact = sample_artifact(43, false);
+        let codec = BinaryCodecV1;
+        let bytes = codec.encode(artifact.as_ref());
+        let stride = (bytes.len() / 256).max(1);
+        for len in (0..bytes.len()).step_by(stride) {
+            assert!(codec.decode(&bytes[..len]).is_err(), "prefix of {len} bytes decoded");
+        }
+        assert!(codec.decode(&[]).is_err());
+    }
+
+    #[test]
+    fn error_variants_are_distinguished() {
+        let artifact = sample_artifact(44, false);
+        let codec = BinaryCodecV1;
+        let bytes = codec.encode(artifact.as_ref());
+
+        let mut wrong_magic = bytes.clone();
+        wrong_magic[0] = b'X';
+        assert!(matches!(codec.decode(&wrong_magic), Err(CodecError::BadMagic(_))));
+
+        let mut future = bytes.clone();
+        future[4..8].copy_from_slice(&2u32.to_le_bytes());
+        assert!(matches!(codec.decode(&future), Err(CodecError::Version { found: 2 })));
+
+        let mut flipped = bytes.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x01;
+        assert!(matches!(codec.decode(&flipped), Err(CodecError::Checksum { .. })));
+
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(matches!(codec.decode(&trailing), Err(CodecError::Malformed(_))));
+
+        assert!(matches!(
+            codec.decode(&bytes[..HEADER_LEN - 1]),
+            Err(CodecError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn checksum_sensitivity() {
+        let base = checksum64(b"norm-q artifact payload");
+        let mut other = b"norm-q artifact payload".to_vec();
+        other[0] ^= 1;
+        assert_ne!(base, checksum64(&other));
+        // Length extension with zeros must change the digest too.
+        other[0] ^= 1;
+        other.push(0);
+        assert_ne!(base, checksum64(&other));
+        assert_ne!(checksum64(b""), checksum64(&[0]));
+    }
+}

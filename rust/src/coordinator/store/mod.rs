@@ -1,0 +1,560 @@
+//! The persistent table-artifact store: the disk tier under the
+//! coordinator's byte-budgeted RAM cache.
+//!
+//! Constraint tables are pure functions of (model, concept group,
+//! budget), yet before this module they died with the process — every
+//! restart re-paid the cold-build storm the build pipeline only
+//! amortizes within one lifetime. The store persists each finished
+//! `(Dfa, ConstraintTable)` as a checksummed artifact file (see
+//! [`codec`]) keyed by the coordinator's cache key and stamped with a
+//! behavioral [`model_fingerprint`] of the backend it was built over:
+//!
+//! - **write-through**: completed builds persist immediately (off the
+//!   dispatcher thread), so a crash never loses more than the builds in
+//!   flight; RAM evictions also spill here instead of being dropped.
+//! - **miss probe**: a cache miss whose key has a disk artifact decodes
+//!   it instead of dispatching a cold build ([`TableStore::read`]).
+//! - **warm start**: at boot, [`TableStore::warm_scan`] validates every
+//!   artifact against the active model digest, deletes stale and
+//!   corrupt files, and hands back the survivors so a restarted replica
+//!   serves previously-built groups with zero cold builds.
+//!
+//! The store is crash-safe by construction: files are written to a
+//! temp name and renamed into place, every read re-verifies the
+//! payload checksum, and any validation failure deletes the file and
+//! degrades to a normal build. The disk tier has its own byte budget
+//! with least-recently-touched eviction, independent of the RAM
+//! budget.
+
+pub mod codec;
+
+use std::collections::HashMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::SystemTime;
+
+use crate::dfa::Dfa;
+use crate::generate::ConstraintTable;
+use crate::hmm::HmmBackend;
+use codec::{checksum64, ArtifactRef, BinaryCodecV1, TableCodec};
+
+/// The decode state the store persists per concept group: the compiled
+/// DFA and its constraint table (the RAM cache's value type).
+pub type TableState = (Dfa, ConstraintTable);
+
+/// Behavioral fingerprint of a serving backend, stamped into every
+/// artifact. Hashes the model *through the [`HmmBackend`] trait*: the
+/// shape, the stored non-zero counts, the initial-belief bits, and the
+/// exact f32 results of the three products the table recursion and the
+/// beam scorer consume (`trans @ v`, `v @ trans`, `v @ emit`) on a
+/// fixed low-discrepancy probe vector. Two backends that could ever
+/// produce different tables — different weights, different quantization
+/// bits, dense vs sparse arithmetic — fingerprint differently, so a
+/// restarted replica can trust a digest-matching artifact without
+/// rebuilding it. Deterministic across processes: the probe is fixed
+/// and quantization ([`crate::quant::qhmm::QuantizedHmm::from_hmm`]) is
+/// deterministic.
+pub fn model_fingerprint(model: &dyn HmmBackend) -> u64 {
+    let h_n = model.hidden();
+    let v_n = model.vocab();
+    let (t_nnz, e_nnz) = model.nnz();
+    let mut bytes = Vec::with_capacity(32 + 4 * (4 * h_n + v_n));
+    for dim in [h_n as u64, v_n as u64, t_nnz as u64, e_nnz as u64] {
+        bytes.extend_from_slice(&dim.to_le_bytes());
+    }
+    for &x in model.init() {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    // A fixed golden-ratio (Weyl) probe belief: deterministic,
+    // strictly positive, and non-uniform, so no weight column can hide
+    // behind a zero or a symmetry in the probe.
+    let mut probe = vec![0f32; h_n];
+    let mut acc = 0.5f64;
+    for p in probe.iter_mut() {
+        acc = (acc + 0.618_033_988_749_894_9).fract();
+        *p = (0.25 + acc) as f32;
+    }
+    let norm: f32 = probe.iter().sum();
+    for p in probe.iter_mut() {
+        *p /= norm;
+    }
+    let mut out_h = vec![0f32; h_n];
+    model.trans_matvec(&probe, &mut out_h);
+    for &x in &out_h {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    model.trans_vecmat(&probe, &mut out_h);
+    for &x in &out_h {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    let mut out_v = vec![0f32; v_n];
+    model.emit_vecmat(&probe, &mut out_v);
+    for &x in &out_v {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    checksum64(&bytes)
+}
+
+/// What a disk probe for a key resolved to.
+pub enum ReadOutcome {
+    /// Artifact decoded and digest-matched; ready to serve or promote.
+    Hit(TableState),
+    /// No artifact on disk for this key.
+    Miss,
+    /// An artifact existed but failed validation — truncated, bit-rot,
+    /// wrong version, digest or key mismatch, or it vanished mid-read.
+    /// The file and its index entry are already deleted; the caller
+    /// falls back to a normal cold build.
+    Corrupt,
+}
+
+/// What a spill write resolved to.
+#[derive(Debug, PartialEq, Eq)]
+pub enum WriteOutcome {
+    /// Artifact persisted; carries the encoded size in bytes.
+    Written(usize),
+    /// The key already had a disk artifact; nothing was written.
+    AlreadyPresent,
+    /// The encoded artifact alone exceeds the whole spill budget.
+    TooLarge,
+    /// I/O failure. The store stays consistent (the reservation is
+    /// rolled back); the caller loses persistence only — the RAM copy
+    /// still serves.
+    Failed(String),
+}
+
+struct StoreEntry {
+    path: PathBuf,
+    bytes: usize,
+    touch: u64,
+}
+
+#[derive(Default)]
+struct Index {
+    entries: HashMap<String, StoreEntry>,
+    used: usize,
+    clock: u64,
+}
+
+impl Index {
+    fn touch(&mut self, key: &str) -> Option<&mut StoreEntry> {
+        self.clock += 1;
+        let clock = self.clock;
+        let entry = self.entries.get_mut(key)?;
+        entry.touch = clock;
+        Some(entry)
+    }
+
+    fn remove(&mut self, key: &str) -> Option<StoreEntry> {
+        let entry = self.entries.remove(key)?;
+        self.used -= entry.bytes;
+        Some(entry)
+    }
+
+    fn insert(&mut self, key: String, path: PathBuf, bytes: usize) -> Option<StoreEntry> {
+        self.clock += 1;
+        self.used += bytes;
+        let old = self.entries.insert(key, StoreEntry { path, bytes, touch: self.clock });
+        if let Some(old) = &old {
+            self.used -= old.bytes;
+        }
+        old
+    }
+
+    /// Key of the least-recently-touched entry, if any.
+    fn coldest(&self) -> Option<String> {
+        self.entries.iter().min_by_key(|(_, e)| e.touch).map(|(k, _)| k.clone())
+    }
+}
+
+/// The on-disk artifact store. All index bookkeeping sits behind one
+/// mutex held only for map operations; encoding, file reads and file
+/// writes run outside it, so the dispatcher-side [`TableStore::contains`]
+/// probe never waits on disk I/O.
+pub struct TableStore {
+    dir: PathBuf,
+    budget: usize,
+    codec: Box<dyn TableCodec>,
+    index: Mutex<Index>,
+}
+
+/// The result of a boot-time spill-directory scan.
+pub struct WarmScan {
+    /// Decoded digest-matching artifacts, most recently written first —
+    /// the order the coordinator promotes them into RAM until its
+    /// budget is reached.
+    pub artifacts: Vec<(String, TableState)>,
+    /// Files deleted because they failed decode (truncation, bit rot,
+    /// unreadable, wrong format version).
+    pub corrupt: u64,
+    /// Files deleted because their model digest did not match the
+    /// active backend (a retrained or re-quantized model).
+    pub stale: u64,
+}
+
+impl TableStore {
+    /// Open the spill directory (creating it if needed) with a disk
+    /// byte budget. The index starts empty; [`TableStore::warm_scan`]
+    /// populates it from the files already present.
+    pub fn open(dir: impl Into<PathBuf>, budget_bytes: usize) -> io::Result<TableStore> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)?;
+        Ok(TableStore {
+            dir,
+            budget: budget_bytes,
+            codec: Box::new(BinaryCodecV1),
+            index: Mutex::new(Index::default()),
+        })
+    }
+
+    /// The spill directory this store persists into.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Bytes currently accounted to artifacts in the index.
+    pub fn used_bytes(&self) -> usize {
+        self.index.lock().unwrap().used
+    }
+
+    /// Number of artifacts currently indexed.
+    pub fn len(&self) -> usize {
+        self.index.lock().unwrap().entries.len()
+    }
+
+    /// Whether the store holds no artifacts.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Artifact path for a cache key: two independently-seeded 64-bit
+    /// hashes as a 32-hex-digit name. A collision needs ~2¹²⁸ keys, and
+    /// the embedded key is still cross-checked at read time.
+    fn file_for(&self, key: &str) -> PathBuf {
+        fn fnv(bytes: &[u8], seed: u64) -> u64 {
+            let mut h = 0xcbf2_9ce4_8422_2325u64 ^ seed;
+            for &b in bytes {
+                h = (h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3);
+            }
+            h
+        }
+        let k = key.as_bytes();
+        self.dir.join(format!("{:016x}{:016x}.nqt", fnv(k, 0), fnv(k, 0x9e37_79b9_7f4a_7c15)))
+    }
+
+    /// Scan the spill directory at boot: decode every `*.nqt` file
+    /// (full checksum validation), delete corrupt and digest-stale
+    /// files plus any `.tmp` left by an interrupted write, rebuild the
+    /// index from the survivors, and return them decoded for RAM
+    /// promotion. Replaces the whole index — call once, at startup.
+    pub fn warm_scan(&self, model_digest: u64) -> WarmScan {
+        let mut files: Vec<(PathBuf, SystemTime)> = Vec::new();
+        if let Ok(dir) = fs::read_dir(&self.dir) {
+            for entry in dir.flatten() {
+                let path = entry.path();
+                match path.extension().and_then(|e| e.to_str()) {
+                    Some("nqt") => {
+                        let mtime = entry
+                            .metadata()
+                            .and_then(|m| m.modified())
+                            .unwrap_or(SystemTime::UNIX_EPOCH);
+                        files.push((path, mtime));
+                    }
+                    Some("tmp") => {
+                        let _ = fs::remove_file(&path);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        // Oldest first, so index touch order matches write recency and
+        // disk eviction drops the oldest artifacts first.
+        files.sort_by_key(|(_, mtime)| *mtime);
+
+        let mut scan = WarmScan { artifacts: Vec::new(), corrupt: 0, stale: 0 };
+        let mut index = Index::default();
+        for (path, _) in files {
+            let bytes = match fs::read(&path) {
+                Ok(b) => b,
+                Err(_) => {
+                    scan.corrupt += 1;
+                    let _ = fs::remove_file(&path);
+                    continue;
+                }
+            };
+            match self.codec.decode(&bytes) {
+                Ok(artifact) if artifact.model_digest == model_digest => {
+                    if let Some(old) = index.insert(artifact.key.clone(), path, bytes.len()) {
+                        // Duplicate key (shouldn't happen): newer file
+                        // wins, the shadowed one is removed everywhere.
+                        let _ = fs::remove_file(&old.path);
+                        scan.artifacts.retain(|(k, _)| *k != artifact.key);
+                    }
+                    scan.artifacts.push((artifact.key, artifact.state));
+                }
+                Ok(_) => {
+                    scan.stale += 1;
+                    let _ = fs::remove_file(&path);
+                }
+                Err(_) => {
+                    scan.corrupt += 1;
+                    let _ = fs::remove_file(&path);
+                }
+            }
+        }
+        scan.artifacts.reverse();
+        *self.index.lock().unwrap() = index;
+        scan
+    }
+
+    /// Whether a digest-validated artifact for `key` is on disk.
+    /// Index-only — no I/O — so the dispatch path may call it freely;
+    /// counts as a touch for disk-tier LRU purposes.
+    pub fn contains(&self, key: &str) -> bool {
+        self.index.lock().unwrap().touch(key).is_some()
+    }
+
+    /// Probe disk for `key`: read and decode its artifact, validating
+    /// the checksum, the model digest, and the embedded key. Any
+    /// failure deletes the file and reports [`ReadOutcome::Corrupt`] so
+    /// the caller falls back to a cold build. File I/O runs outside the
+    /// index lock.
+    pub fn read(&self, key: &str, model_digest: u64) -> ReadOutcome {
+        let path = match self.index.lock().unwrap().touch(key) {
+            Some(entry) => entry.path.clone(),
+            None => return ReadOutcome::Miss,
+        };
+        let decoded = fs::read(&path).ok().and_then(|bytes| self.codec.decode(&bytes).ok());
+        match decoded {
+            Some(artifact) if artifact.model_digest == model_digest && artifact.key == key => {
+                ReadOutcome::Hit(artifact.state)
+            }
+            _ => {
+                self.remove(key);
+                ReadOutcome::Corrupt
+            }
+        }
+    }
+
+    /// Delete `key`'s artifact (if any) and its accounting.
+    pub fn remove(&self, key: &str) {
+        let entry = self.index.lock().unwrap().remove(key);
+        if let Some(entry) = entry {
+            let _ = fs::remove_file(entry.path);
+        }
+    }
+
+    /// Persist `key`'s decode state, evicting least-recently-touched
+    /// artifacts until the encoded bytes fit the disk budget. The
+    /// reservation (and victim selection) happens under the index lock;
+    /// encoding and all file I/O happen outside it. The file lands via
+    /// temp-write + rename, so a crash mid-write leaves a `.tmp` (swept
+    /// at the next boot scan), never a half-written artifact.
+    pub fn write(&self, key: &str, model_digest: u64, state: &TableState) -> WriteOutcome {
+        let bytes = self.codec.encode(ArtifactRef { key, model_digest, state });
+        let size = bytes.len();
+        if size > self.budget {
+            return WriteOutcome::TooLarge;
+        }
+        let path = self.file_for(key);
+        let victims: Vec<PathBuf> = {
+            let mut index = self.index.lock().unwrap();
+            let mut victims: Vec<PathBuf> =
+                index.remove(key).map(|old| old.path).into_iter().collect();
+            while index.used + size > self.budget {
+                let Some(coldest) = index.coldest() else { break };
+                if let Some(entry) = index.remove(&coldest) {
+                    victims.push(entry.path);
+                }
+            }
+            index.insert(key.to_string(), path.clone(), size);
+            victims
+        };
+        for victim in victims {
+            if victim != path {
+                let _ = fs::remove_file(victim);
+            }
+        }
+        let tmp = path.with_extension("tmp");
+        match fs::write(&tmp, &bytes).and_then(|_| fs::rename(&tmp, &path)) {
+            Ok(()) => WriteOutcome::Written(size),
+            Err(e) => {
+                let _ = fs::remove_file(&tmp);
+                self.remove(key);
+                WriteOutcome::Failed(e.to_string())
+            }
+        }
+    }
+
+    /// [`TableStore::write`] unless `key` already has a disk artifact.
+    /// The write-through path calls this for completed builds *and*
+    /// RAM evictions; evicted entries normally persisted at build time
+    /// already, making the eviction-time call a cheap index lookup.
+    pub fn write_if_absent(
+        &self,
+        key: &str,
+        model_digest: u64,
+        state: &TableState,
+    ) -> WriteOutcome {
+        if self.contains(key) {
+            WriteOutcome::AlreadyPresent
+        } else {
+            self.write(key, model_digest, state)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hmm::Hmm;
+    use crate::quant::qhmm::QuantizedHmm;
+    use crate::util::rng::Rng;
+
+    struct TempDir(PathBuf);
+
+    impl TempDir {
+        fn new(tag: &str) -> TempDir {
+            let dir = std::env::temp_dir()
+                .join(format!("normq-store-{tag}-{}", std::process::id()));
+            let _ = fs::remove_dir_all(&dir);
+            TempDir(dir)
+        }
+    }
+
+    impl Drop for TempDir {
+        fn drop(&mut self) {
+            let _ = fs::remove_dir_all(&self.0);
+        }
+    }
+
+    fn sample_state(seed: u64, budget: usize) -> (Hmm, TableState) {
+        let mut rng = Rng::seeded(seed);
+        let hmm = Hmm::random(5, 16, 0.4, 0.3, &mut rng);
+        let dfa = Dfa::from_keywords(&[vec![2], vec![7, 1]], 16);
+        let table = ConstraintTable::build(&hmm, &dfa, budget);
+        (hmm, (dfa, table))
+    }
+
+    #[test]
+    fn write_read_round_trip_and_miss() {
+        let tmp = TempDir::new("rw");
+        let store = TableStore::open(&tmp.0, 64 << 20).unwrap();
+        let (_, state) = sample_state(1, 6);
+        assert!(matches!(store.read("k", 7), ReadOutcome::Miss));
+        assert!(matches!(store.write("k", 7, &state), WriteOutcome::Written(_)));
+        assert!(store.contains("k"));
+        assert_eq!(store.len(), 1);
+        match store.read("k", 7) {
+            ReadOutcome::Hit((dfa, table)) => {
+                assert_eq!(dfa.n_states(), state.0.n_states());
+                assert_eq!(table.dims(), state.1.dims());
+            }
+            _ => panic!("expected hit"),
+        }
+        assert!(matches!(store.write_if_absent("k", 7, &state), WriteOutcome::AlreadyPresent));
+    }
+
+    #[test]
+    fn digest_mismatch_reads_corrupt_and_deletes() {
+        let tmp = TempDir::new("digest");
+        let store = TableStore::open(&tmp.0, 64 << 20).unwrap();
+        let (_, state) = sample_state(2, 6);
+        store.write("k", 7, &state);
+        assert!(matches!(store.read("k", 8), ReadOutcome::Corrupt));
+        assert!(!store.contains("k"));
+        assert!(matches!(store.read("k", 7), ReadOutcome::Miss));
+        assert!(store.is_empty());
+    }
+
+    #[test]
+    fn corrupt_file_reads_corrupt_and_deletes() {
+        let tmp = TempDir::new("corrupt");
+        let store = TableStore::open(&tmp.0, 64 << 20).unwrap();
+        let (_, state) = sample_state(3, 6);
+        store.write("k", 7, &state);
+        // Flip one byte in the middle of the single artifact file.
+        let file = fs::read_dir(&tmp.0).unwrap().next().unwrap().unwrap().path();
+        let mut bytes = fs::read(&file).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        fs::write(&file, &bytes).unwrap();
+        assert!(matches!(store.read("k", 7), ReadOutcome::Corrupt));
+        assert!(!file.exists(), "corrupt artifact must be deleted");
+    }
+
+    #[test]
+    fn disk_budget_evicts_least_recently_touched() {
+        let tmp = TempDir::new("evict");
+        let (_, state) = sample_state(4, 6);
+        let codec = BinaryCodecV1;
+        let one = codec
+            .encode(ArtifactRef { key: "a", model_digest: 7, state: &state })
+            .len();
+        // Room for two artifacts but not three.
+        let store = TableStore::open(&tmp.0, one * 2 + one / 2).unwrap();
+        assert!(matches!(store.write("a", 7, &state), WriteOutcome::Written(_)));
+        assert!(matches!(store.write("b", 7, &state), WriteOutcome::Written(_)));
+        assert!(store.contains("a")); // touch "a" so "b" is coldest
+        assert!(matches!(store.write("c", 7, &state), WriteOutcome::Written(_)));
+        assert!(store.contains("a"));
+        assert!(!store.contains("b"), "coldest artifact should be evicted");
+        assert!(store.contains("c"));
+        assert_eq!(store.len(), 2);
+        assert!(store.used_bytes() <= store.budget);
+        // A single artifact above the whole budget is refused.
+        let tiny = TableStore::open(tmp.0.join("tiny"), one - 1).unwrap();
+        assert_eq!(tiny.write("a", 7, &state), WriteOutcome::TooLarge);
+    }
+
+    #[test]
+    fn warm_scan_keeps_matching_deletes_stale_and_corrupt() {
+        let tmp = TempDir::new("scan");
+        let (_, state) = sample_state(5, 6);
+        {
+            let store = TableStore::open(&tmp.0, 64 << 20).unwrap();
+            store.write("good-1", 7, &state);
+            store.write("good-2", 7, &state);
+            store.write("stale", 99, &state);
+            store.write("bad", 7, &state);
+            // Corrupt exactly the "bad" artifact's file.
+            let path = store.file_for("bad");
+            let mut bytes = fs::read(&path).unwrap();
+            let last = bytes.len() - 1;
+            bytes[last] ^= 0xff;
+            fs::write(&path, &bytes).unwrap();
+            // And leave a stray temp file from a "crashed" write.
+            fs::write(tmp.0.join("deadbeef.tmp"), b"partial").unwrap();
+        }
+        let store = TableStore::open(&tmp.0, 64 << 20).unwrap();
+        let scan = store.warm_scan(7);
+        let mut keys: Vec<&str> = scan.artifacts.iter().map(|(k, _)| k.as_str()).collect();
+        keys.sort_unstable();
+        assert_eq!(keys, ["good-1", "good-2"]);
+        assert_eq!(scan.stale, 1);
+        assert_eq!(scan.corrupt, 1);
+        assert_eq!(store.len(), 2);
+        // Only the two good artifacts remain on disk; stale, corrupt
+        // and temp files are all gone.
+        let remaining = fs::read_dir(&tmp.0).unwrap().count();
+        assert_eq!(remaining, 2);
+    }
+
+    #[test]
+    fn fingerprint_separates_backends_and_is_stable() {
+        let mut rng = Rng::seeded(6);
+        let hmm = Hmm::random(8, 32, 0.4, 0.3, &mut rng);
+        let dense = model_fingerprint(&hmm);
+        assert_eq!(dense, model_fingerprint(&hmm), "fingerprint must be deterministic");
+        let q8 = QuantizedHmm::from_hmm(&hmm, 8);
+        let q4 = QuantizedHmm::from_hmm(&hmm, 4);
+        assert_eq!(model_fingerprint(&q8), model_fingerprint(&QuantizedHmm::from_hmm(&hmm, 8)));
+        assert_ne!(dense, model_fingerprint(&q8), "dense vs quantized must differ");
+        assert_ne!(model_fingerprint(&q8), model_fingerprint(&q4), "8-bit vs 4-bit must differ");
+        let mut rng = Rng::seeded(7);
+        let other = Hmm::random(8, 32, 0.4, 0.3, &mut rng);
+        assert_ne!(dense, model_fingerprint(&other), "different weights must differ");
+    }
+}

@@ -291,6 +291,51 @@ impl ConstraintTable {
         2 * (max_budget + 1) * dfa_states * hidden * std::mem::size_of::<f32>()
     }
 
+    /// The table's shape `(hidden, dfa_states, max_budget)` — what the
+    /// artifact codec serializes alongside the planes.
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.h_n, self.d_n, self.max_budget)
+    }
+
+    /// The raw A and C planes in storage order (budget-major, then DFA
+    /// state, then HMM state). Read by the artifact codec; per-cell
+    /// access goes through [`ConstraintTable::a`] /
+    /// [`ConstraintTable::c`].
+    pub fn planes(&self) -> (&[f32], &[f32]) {
+        (&self.a, &self.c)
+    }
+
+    /// Reassemble a table from serialized parts — the inverse of
+    /// [`ConstraintTable::dims`] + [`ConstraintTable::planes`] —
+    /// validating that the plane lengths match the claimed shape. Only
+    /// the artifact codec calls this; that the planes were built over
+    /// the *same model* is the store's job (the model digest), not
+    /// checkable here.
+    pub fn from_parts(
+        h_n: usize,
+        d_n: usize,
+        max_budget: usize,
+        a: Vec<f32>,
+        c: Vec<f32>,
+    ) -> Result<ConstraintTable, String> {
+        if h_n == 0 || d_n == 0 {
+            return Err(format!("degenerate table shape h={h_n} d={d_n}"));
+        }
+        let plane = max_budget
+            .checked_add(1)
+            .and_then(|levels| levels.checked_mul(d_n))
+            .and_then(|cells| cells.checked_mul(h_n))
+            .ok_or("table shape overflows")?;
+        if a.len() != plane || c.len() != plane {
+            return Err(format!(
+                "plane length mismatch: a={} c={} expected {plane}",
+                a.len(),
+                c.len()
+            ));
+        }
+        Ok(ConstraintTable { h_n, d_n, max_budget, a, c })
+    }
+
     /// Overall acceptance probability from the initial belief:
     /// P(accept within `budget` tokens) = Σ_h init[h] A[budget][start][h].
     pub fn acceptance_from_start(&self, hmm: &Hmm, dfa: &Dfa, budget: usize) -> f64 {
@@ -499,6 +544,25 @@ mod tests {
             table.bytes(),
             ConstraintTable::estimate_bytes(5, dfa.n_states(), 4)
         );
+    }
+
+    #[test]
+    fn from_parts_round_trips_and_validates() {
+        let mut rng = Rng::seeded(79);
+        let hmm = Hmm::random(4, 8, 0.5, 0.5, &mut rng);
+        let dfa = Dfa::from_keywords(&[vec![1]], 8);
+        let table = ConstraintTable::build(&hmm, &dfa, 5);
+        let (h, d, r) = table.dims();
+        let (a, c) = table.planes();
+        let rebuilt = ConstraintTable::from_parts(h, d, r, a.to_vec(), c.to_vec()).unwrap();
+        for budget in 0..=r {
+            for s in 0..d as u32 {
+                assert_eq!(table.a(budget, s), rebuilt.a(budget, s));
+                assert_eq!(table.c(budget, s), rebuilt.c(budget, s));
+            }
+        }
+        assert!(ConstraintTable::from_parts(h, d, r, a.to_vec(), vec![0.0]).is_err());
+        assert!(ConstraintTable::from_parts(0, d, r, Vec::new(), Vec::new()).is_err());
     }
 
     /// The satellite equivalence property: the table built over the

@@ -31,7 +31,9 @@
 //!   `service::Stack`.
 //! - [`coordinator`] — bounded intake queue, concept-set batching
 //!   dispatcher, the asynchronous table-build pipeline (singleflight
-//!   table cache + dedicated build pool), decode worker pool, and
+//!   table cache + dedicated build pool), the persistent table-artifact
+//!   store (checksummed on-disk spill tier + boot warm start), decode
+//!   worker pool, and
 //!   serving metrics (global and per-client). The `Server` implements
 //!   `service::Service` and sits at the bottom of the stack.
 //! - [`generate`] — the constrained beam decoder (honors per-request

@@ -37,6 +37,7 @@ USAGE:
               [--fair SLOTS] [--fair-queue N] [--delay-budget-ms MS]
               [--timeout-ms MS] [--hedge-ms MS] [--table-bits B]
               [--table-cache-mb MB] [--table-threads N] [--build-threads N]
+              [--spill-dir DIR] [--spill-budget-mb MB]
   normq smoke [--artifacts DIR]
   normq corpus [--n N] [--eval]
 
@@ -67,7 +68,12 @@ instead of O(H^2)/O(H*V), and no dense FP32 weight is ever read
 --table-threads parallelizes one build across DFA states;
 --build-threads sizes the dedicated build pool (how many distinct
 cold concept groups build concurrently — the dispatcher never builds,
-so warm batches are not blocked behind cold builds).
+so warm batches are not blocked behind cold builds);
+--spill-dir DIR persists finished tables as checksummed artifacts and
+turns RAM-cache evictions into disk spills: misses probe the
+directory before building, and a restart warm-starts from it with
+zero cold builds for digest-matching groups; --spill-budget-mb bounds
+the directory (LRU file eviction, default 256).
 ";
 
 fn main() {
@@ -83,7 +89,7 @@ fn main() {
         "workers", "artifacts", "n", "out", "heatmap", "queue", "clients", "client-ids", "climit",
         "rate", "burst", "quota", "quota-burst", "fair", "fair-queue", "delay-budget-ms",
         "timeout-ms", "hedge-ms", "table-bits", "table-cache-mb", "table-threads",
-        "build-threads",
+        "build-threads", "spill-dir", "spill-budget-mb",
     ]);
     let args = match Args::parse(&argv, &value_keys) {
         Ok(a) => a,
@@ -187,6 +193,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             .usize("build-threads", normq::util::threadpool::default_threads())?
             .max(1),
         table_backend,
+        spill_dir: args.get("spill-dir").map(std::path::PathBuf::from),
+        spill_budget_bytes: args.usize("spill-budget-mb", 256)? << 20,
         decode: DecodeConfig {
             beam: ctx.decode.beam,
             max_tokens: ctx.decode.max_tokens,

@@ -1,0 +1,290 @@
+//! Integration tests for the persistent table-artifact store: disk
+//! hits that replace cold builds, corrupt-artifact degradation, the
+//! eviction→spill→promotion cycle, and full stop/restart warm starts
+//! (dense and quantized backends).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use normq::coordinator::{ServeRequest, Server, ServerConfig, TableBackend};
+use normq::data::Corpus;
+use normq::dfa::Dfa;
+use normq::generate::{ConstraintTable, DecodeConfig};
+use normq::hmm::Hmm;
+use normq::lm::NgramLm;
+use normq::service::Service;
+use normq::util::rng::Rng;
+
+/// A per-test spill directory under the system temp dir, removed on
+/// drop so repeated runs never see a previous run's artifacts.
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        let path = std::env::temp_dir().join(format!(
+            "normq-artifact-it-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&path);
+        std::fs::create_dir_all(&path).unwrap();
+        TempDir(path)
+    }
+
+    fn path(&self) -> &Path {
+        &self.0
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// A spill-backed server over a *deterministic* untrained HMM: the
+/// same `seed` reproduces the exact same model (and therefore the same
+/// behavioral digest) across "restarts", which is what lets a second
+/// `Server::start` against the same directory adopt the first one's
+/// artifacts.
+fn spill_server(
+    dir: &Path,
+    table_cache_bytes: usize,
+    backend: TableBackend,
+    seed: u64,
+) -> (Server, Corpus) {
+    let corpus = Corpus::small(900);
+    let data = corpus.sample_token_corpus(200, 41);
+    let lm = NgramLm::train(&data, corpus.vocab.len());
+    let mut rng = Rng::seeded(seed);
+    let hmm = Hmm::random(64, corpus.vocab.len(), 0.3, 0.2, &mut rng);
+    let cfg = ServerConfig {
+        workers: 2,
+        queue_capacity: 64,
+        build_threads: 2,
+        table_threads: 1,
+        table_cache_bytes,
+        table_backend: backend,
+        spill_dir: Some(dir.to_path_buf()),
+        spill_budget_bytes: 64 << 20,
+        decode: DecodeConfig { beam: 4, max_tokens: 16, ..Default::default() },
+        ..Default::default()
+    };
+    (Server::start(Arc::new(lm), hmm, corpus.clone(), cfg), corpus)
+}
+
+/// Flip one payload byte in one (deterministically chosen) artifact
+/// file, leaving its header intact — the checksum must catch it.
+fn corrupt_one_artifact(dir: &Path) {
+    let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|e| e == "nqt"))
+        .collect();
+    assert!(!files.is_empty(), "no artifacts to corrupt in {}", dir.display());
+    files.sort();
+    let path = &files[0];
+    let mut bytes = std::fs::read(path).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x40;
+    std::fs::write(path, bytes).unwrap();
+}
+
+/// With a RAM budget too small to hold anything (every table is a
+/// "whale" placed disk-only), repeated misses for the same group are
+/// answered from the spill tier: exactly one cold build ever runs,
+/// and concurrent misses share one disk read via the singleflight
+/// pending entry.
+#[test]
+fn disk_tier_serves_repeat_misses_without_rebuilding() {
+    let tmp = TempDir::new("diskhit");
+    let (server, corpus) = spill_server(tmp.path(), 1, TableBackend::Dense, 42);
+    let concepts: Vec<String> = corpus.lexicon.nouns[..1].to_vec();
+
+    let resp = server.call(ServeRequest::new(concepts.clone())).unwrap();
+    assert!(!resp.failed && !resp.timed_out);
+    let m = server.metrics();
+    assert_eq!(m.table_builds.load(Ordering::Relaxed), 1);
+    assert_eq!(m.spill_writes.load(Ordering::Relaxed), 1);
+    // The whale admission path must have been taken: nothing resident.
+    assert_eq!(m.spill_rejected.load(Ordering::Relaxed), 1);
+    assert_eq!(m.table_bytes.load(Ordering::Relaxed), 0);
+
+    // Sequential re-miss: served from disk, not rebuilt.
+    let resp = server.call(ServeRequest::new(concepts.clone())).unwrap();
+    assert!(!resp.failed && !resp.timed_out);
+    assert_eq!(m.table_builds.load(Ordering::Relaxed), 1);
+    assert_eq!(m.spill_hits.load(Ordering::Relaxed), 1);
+
+    // A concurrent wave of misses: however the batch windows slice it,
+    // the pending entry coalesces them — the build count never moves.
+    let rxs: Vec<_> = (0..6).map(|_| server.submit(concepts.clone()).unwrap()).collect();
+    for rx in rxs {
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        assert!(!resp.failed && !resp.timed_out);
+    }
+    assert_eq!(
+        m.table_builds.load(Ordering::Relaxed),
+        1,
+        "disk hits must keep satisfying misses without a rebuild"
+    );
+    assert!(m.spill_hits.load(Ordering::Relaxed) >= 2);
+    server.shutdown();
+}
+
+/// A spilled artifact that rots on disk *while the server runs* is
+/// detected by the payload checksum, deleted, and transparently
+/// rebuilt — the request succeeds and the store heals itself.
+#[test]
+fn corrupt_artifact_degrades_to_a_clean_rebuild() {
+    let tmp = TempDir::new("corrupt");
+    let (server, corpus) = spill_server(tmp.path(), 1, TableBackend::Dense, 42);
+    let concepts: Vec<String> = corpus.lexicon.nouns[..1].to_vec();
+
+    let resp = server.call(ServeRequest::new(concepts.clone())).unwrap();
+    assert!(!resp.failed && !resp.timed_out);
+    let m = server.metrics();
+    assert_eq!(m.table_builds.load(Ordering::Relaxed), 1);
+    corrupt_one_artifact(tmp.path());
+
+    // The next miss probes disk, rejects the artifact, rebuilds.
+    let resp = server.call(ServeRequest::new(concepts.clone())).unwrap();
+    assert!(!resp.failed && !resp.timed_out, "corruption must never surface to the client");
+    assert_eq!(m.spill_corrupt.load(Ordering::Relaxed), 1);
+    assert_eq!(m.table_builds.load(Ordering::Relaxed), 2);
+    assert_eq!(m.spill_hits.load(Ordering::Relaxed), 0);
+
+    // The rebuild re-persisted a clean artifact: the next miss is a
+    // disk hit again.
+    let resp = server.call(ServeRequest::new(concepts)).unwrap();
+    assert!(!resp.failed && !resp.timed_out);
+    assert_eq!(m.table_builds.load(Ordering::Relaxed), 2);
+    assert_eq!(m.spill_hits.load(Ordering::Relaxed), 1);
+    server.shutdown();
+}
+
+/// The full two-tier cycle: a RAM eviction spills (here: the artifact
+/// already exists via write-through, so eviction costs nothing), a
+/// later miss promotes the table back from disk, and the promoted
+/// entry is a plain RAM hit afterwards.
+#[test]
+fn evicted_table_is_promoted_back_from_disk() {
+    let tmp = TempDir::new("promote");
+    // Budget sized from the *exact* reservation formula for a
+    // single-keyword group: two tables fit, the third evicts the LRU.
+    let corpus = Corpus::small(900);
+    let kw = vec![vec![corpus.vocab.id(&corpus.lexicon.nouns[0])]];
+    let dfa = Dfa::from_keywords(&kw, corpus.vocab.len());
+    let est = dfa.approx_bytes() + ConstraintTable::estimate_bytes(16, dfa.n_states(), 64);
+    let (server, corpus) = spill_server(tmp.path(), 2 * est + est / 2, TableBackend::Dense, 42);
+    let m = server.metrics();
+
+    for g in 0..3 {
+        let concepts: Vec<String> = corpus.lexicon.nouns[g..g + 1].to_vec();
+        let resp = server.call(ServeRequest::new(concepts)).unwrap();
+        assert!(!resp.failed && !resp.timed_out);
+    }
+    assert_eq!(m.table_builds.load(Ordering::Relaxed), 3);
+    assert_eq!(m.spill_rejected.load(Ordering::Relaxed), 0, "all three fit individually");
+    // Group 0 was evicted by group 2's completion; its artifact is on
+    // disk (write-through), so re-requesting it is a promotion, not a
+    // rebuild...
+    let concepts: Vec<String> = corpus.lexicon.nouns[..1].to_vec();
+    let resp = server.call(ServeRequest::new(concepts.clone())).unwrap();
+    assert!(!resp.failed && !resp.timed_out);
+    assert_eq!(m.table_builds.load(Ordering::Relaxed), 3);
+    assert_eq!(m.spill_hits.load(Ordering::Relaxed), 1);
+    let hits_before = m.table_cache_hits.load(Ordering::Relaxed);
+    // ...and once promoted it serves from RAM without touching disk.
+    let resp = server.call(ServeRequest::new(concepts)).unwrap();
+    assert!(!resp.failed && !resp.timed_out);
+    assert_eq!(m.table_cache_hits.load(Ordering::Relaxed), hits_before + 1);
+    assert_eq!(m.spill_hits.load(Ordering::Relaxed), 1);
+    server.shutdown();
+}
+
+/// The restart story end to end: a replica that built N groups is
+/// stopped; a new replica over the same model and directory
+/// warm-starts all N (zero cold builds for any of them); a corrupted
+/// artifact is dropped at scan and only that group rebuilds; a replica
+/// over a *different* model adopts nothing.
+#[test]
+fn restart_warm_starts_every_digest_matching_group() {
+    let tmp = TempDir::new("restart");
+    const N: usize = 3;
+
+    let (server, corpus) = spill_server(tmp.path(), 64 << 20, TableBackend::Dense, 42);
+    for g in 0..N {
+        let concepts: Vec<String> = corpus.lexicon.nouns[g..g + 1].to_vec();
+        let resp = server.call(ServeRequest::new(concepts)).unwrap();
+        assert!(!resp.failed && !resp.timed_out);
+    }
+    assert_eq!(server.metrics().table_builds.load(Ordering::Relaxed), N as u64);
+    assert_eq!(server.metrics().spill_writes.load(Ordering::Relaxed), N as u64);
+    server.shutdown();
+
+    // Restart over the same model: every group is pre-registered and
+    // no request pays a build — the acceptance bar for this subsystem.
+    let (server, corpus) = spill_server(tmp.path(), 64 << 20, TableBackend::Dense, 42);
+    let m = server.metrics();
+    assert_eq!(m.warm_started.load(Ordering::Relaxed), N as u64);
+    for g in 0..N {
+        let concepts: Vec<String> = corpus.lexicon.nouns[g..g + 1].to_vec();
+        let resp = server.call(ServeRequest::new(concepts)).unwrap();
+        assert!(!resp.failed && !resp.timed_out);
+    }
+    assert_eq!(m.table_builds.load(Ordering::Relaxed), 0, "warmed groups must not rebuild");
+    assert_eq!(m.table_cache_misses.load(Ordering::Relaxed), 0);
+    assert_eq!(m.table_cache_hits.load(Ordering::Relaxed), N as u64);
+    server.shutdown();
+
+    // A bit-flipped artifact is dropped by the boot scan; exactly the
+    // damaged group pays a rebuild, the other two stay warm.
+    corrupt_one_artifact(tmp.path());
+    let (server, corpus) = spill_server(tmp.path(), 64 << 20, TableBackend::Dense, 42);
+    let m = server.metrics();
+    assert_eq!(m.warm_started.load(Ordering::Relaxed), (N - 1) as u64);
+    assert_eq!(m.spill_corrupt.load(Ordering::Relaxed), 1);
+    for g in 0..N {
+        let concepts: Vec<String> = corpus.lexicon.nouns[g..g + 1].to_vec();
+        let resp = server.call(ServeRequest::new(concepts)).unwrap();
+        assert!(!resp.failed && !resp.timed_out);
+    }
+    assert_eq!(m.table_builds.load(Ordering::Relaxed), 1);
+    server.shutdown();
+
+    // A different model (different seed → different digest) adopts
+    // nothing: serving a stale table would be worse than a cold boot.
+    let (server, _) = spill_server(tmp.path(), 64 << 20, TableBackend::Dense, 43);
+    assert_eq!(server.metrics().warm_started.load(Ordering::Relaxed), 0);
+    server.shutdown();
+}
+
+/// Quantized-backend artifacts round-trip the same way — and the
+/// digest keeps dense and quantized replicas from adopting each
+/// other's tables, which are numerically different.
+#[test]
+fn quantized_artifacts_warm_start_only_a_quantized_replica() {
+    let tmp = TempDir::new("quant");
+    let backend = TableBackend::Quantized { bits: 8 };
+
+    let (server, corpus) = spill_server(tmp.path(), 64 << 20, backend, 42);
+    let concepts: Vec<String> = corpus.lexicon.nouns[..1].to_vec();
+    let resp = server.call(ServeRequest::new(concepts.clone())).unwrap();
+    assert!(!resp.failed && !resp.timed_out);
+    assert_eq!(server.metrics().table_builds.load(Ordering::Relaxed), 1);
+    server.shutdown();
+
+    let (server, _) = spill_server(tmp.path(), 64 << 20, backend, 42);
+    let m = server.metrics();
+    assert_eq!(m.warm_started.load(Ordering::Relaxed), 1);
+    let resp = server.call(ServeRequest::new(concepts)).unwrap();
+    assert!(!resp.failed && !resp.timed_out);
+    assert_eq!(m.table_builds.load(Ordering::Relaxed), 0);
+    server.shutdown();
+
+    // Same directory, dense backend: digest mismatch, nothing adopted.
+    let (server, _) = spill_server(tmp.path(), 64 << 20, TableBackend::Dense, 42);
+    assert_eq!(server.metrics().warm_started.load(Ordering::Relaxed), 0);
+    server.shutdown();
+}

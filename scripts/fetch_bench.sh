@@ -1,0 +1,63 @@
+#!/usr/bin/env bash
+# Pull the BENCH_*.json artifacts from a CI run onto the local machine,
+# so bench trajectories can be inspected (or replayed through
+# `bench_gate`) without clicking through the Actions UI.
+#
+# Usage:
+#   scripts/fetch_bench.sh             # latest successful CI run on this branch
+#   scripts/fetch_bench.sh <run-id>    # a specific run
+#   scripts/fetch_bench.sh -o DIR ...  # output directory (default bench-artifacts/)
+#
+# Requires the GitHub CLI (`gh`), authenticated against the repo.
+# Artifacts land in DIR/<name>/<name>.json, mirroring the layout the
+# CI regression gate downloads its rolling baseline window into, e.g.:
+#
+#   cargo run --release --bin bench_gate -- \
+#     bench-artifacts/BENCH_coordinator/BENCH_coordinator.json \
+#     BENCH_coordinator.json --threshold 0.25
+
+set -euo pipefail
+
+out_dir="bench-artifacts"
+run_id=""
+while [ $# -gt 0 ]; do
+  case "$1" in
+    -o|--out) out_dir="$2"; shift 2 ;;
+    -h|--help) sed -n '2,16p' "$0" | sed 's/^# \{0,1\}//'; exit 0 ;;
+    *) run_id="$1"; shift ;;
+  esac
+done
+
+command -v gh >/dev/null 2>&1 || {
+  echo "error: fetch_bench.sh needs the GitHub CLI (gh)" >&2
+  exit 1
+}
+
+if [ -z "$run_id" ]; then
+  branch=$(git rev-parse --abbrev-ref HEAD)
+  run_id=$(gh run list --workflow ci.yml --branch "$branch" --status success \
+    --limit 1 --json databaseId --jq '.[0].databaseId // empty')
+  if [ -z "$run_id" ]; then
+    echo "error: no successful ci.yml run found on branch '$branch'" >&2
+    echo "hint: pass a run id explicitly (gh run list --workflow ci.yml)" >&2
+    exit 1
+  fi
+  echo "latest successful run on '$branch': $run_id"
+fi
+
+mkdir -p "$out_dir"
+fetched=0
+for name in BENCH_tables BENCH_decode BENCH_coordinator; do
+  if gh run download "$run_id" --name "$name" --dir "$out_dir/$name"; then
+    fetched=$((fetched + 1))
+  else
+    echo "no $name artifact in run $run_id" >&2
+  fi
+done
+
+if [ "$fetched" -eq 0 ]; then
+  echo "error: run $run_id exposed no BENCH_* artifacts" >&2
+  exit 1
+fi
+echo "fetched $fetched artifact(s) from run $run_id into $out_dir/"
+ls -l "$out_dir"/BENCH_*/ 2>/dev/null || true
