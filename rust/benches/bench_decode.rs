@@ -9,6 +9,13 @@
 //! (the dense side is `QuantizedHmm::to_hmm`), so the timing
 //! difference is purely the beam loop exploiting sparsity.
 //!
+//! A second scenario family (`scenario: "batched"`) times the fused
+//! SoA engine (`generate::engine::step_batch`) against the per-beam
+//! scalar oracle (`decode_with_table_perbeam`) with co-resident
+//! requests at serving-scale H (16k/64k) over synthetic sparse
+//! backends — the panel kernels' dequantize-once amortization across
+//! beam columns is the measured win.
+//!
 //! Results always go to `BENCH_decode.json` — the second artifact of
 //! the CI bench-smoke trajectory, diffed against the previous run by
 //! the bench-regression gate (`bench_gate`). `NORMQ_BENCH_QUICK=1`
@@ -16,7 +23,10 @@
 
 use normq::data::Corpus;
 use normq::dfa::Dfa;
-use normq::generate::{decode_with_table, BuildOptions, ConstraintTable, DecodeConfig};
+use normq::generate::engine::{step_batch, EngineItem, RequestState};
+use normq::generate::{
+    decode_with_table, decode_with_table_perbeam, BuildOptions, ConstraintTable, DecodeConfig,
+};
 use normq::hmm::{Hmm, HmmBackend};
 use normq::lm::NgramLm;
 use normq::quant::QuantizedHmm;
@@ -66,6 +76,53 @@ impl DecodeRow {
             ("speedup", Json::num(self.speedup())),
         ]);
         Json::obj(fields)
+    }
+}
+
+/// One batched-engine scenario: `requests` co-resident keyword
+/// requests over a synthetic serving-scale sparse backend
+/// (`QuantizedHmm::random_sparse` — H=16k/64k dense FP32 would need
+/// 1–17 GB, so only the CSR path can exist at this size). Measured
+/// fields: `perbeam_ms` (serial `decode_with_table_perbeam` over all
+/// requests — the scalar oracle), `batched_ms` (all requests
+/// co-resident in one `engine::step_batch` loop), and their ratio
+/// `speedup` (excluded from both gate identity and gating, like
+/// `sparsity`). Everything else is scenario identity for the bench
+/// gate; the `scenario: "batched"` marker keeps these rows from ever
+/// colliding with the dense-vs-sparse matrix above.
+struct BatchedRow {
+    hidden: usize,
+    vocab: usize,
+    bits: u32,
+    nnz_per_row: usize,
+    requests: usize,
+    beam: usize,
+    max_tokens: usize,
+    sparsity: f64,
+    perbeam_ms: f64,
+    batched_ms: f64,
+}
+
+impl BatchedRow {
+    fn speedup(&self) -> f64 {
+        self.perbeam_ms / self.batched_ms.max(1e-9)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::str("batched")),
+            ("hidden", Json::num(self.hidden as f64)),
+            ("vocab", Json::num(self.vocab as f64)),
+            ("bits", Json::num(self.bits)),
+            ("nnz_per_row", Json::num(self.nnz_per_row as f64)),
+            ("requests", Json::num(self.requests as f64)),
+            ("beam", Json::num(self.beam as f64)),
+            ("max_tokens", Json::num(self.max_tokens as f64)),
+            ("sparsity", Json::num(self.sparsity)),
+            ("perbeam_ms", Json::num(self.perbeam_ms)),
+            ("batched_ms", Json::num(self.batched_ms)),
+            ("speedup", Json::num(self.speedup())),
+        ])
     }
 }
 
@@ -244,14 +301,104 @@ fn main() {
         }
     }
 
+    // Batched SoA engine at serving-scale H: the fused panel path
+    // (`engine::step_batch` over co-resident requests) vs the per-beam
+    // scalar oracle run serially over the same requests. These sizes
+    // are the point of the SoA engine — at H=64k the per-level
+    // dequantize-once amortization across B beam columns is where the
+    // batched win comes from — so they run in quick (CI) mode too,
+    // with reps/requests/steps scaled down instead of H.
+    let mut brows = Vec::new();
+    {
+        let (breqs, bsteps, breps, nnz_per_row) =
+            if quick { (2usize, 6usize, 2usize, 8usize) } else { (4, 10, 3, 16) };
+        let bits = 8u32;
+        println!(
+            "{:>6} {:>5} {:>4} {:>8} {:>10} {:>10} {:>8}",
+            "hidden", "beam", "req", "nnz/row", "perbeam_ms", "batched_ms", "speedup"
+        );
+        for &hidden in &[16384usize, 65536] {
+            let q = QuantizedHmm::random_sparse(hidden, vocab, nnz_per_row, bits, &mut rng);
+            let reqs: Vec<(Dfa, ConstraintTable)> = (0..breqs)
+                .map(|i| {
+                    let nouns = &corpus.lexicon.nouns;
+                    let kw = corpus.vocab.id(&nouns[i % nouns.len()]);
+                    let dfa = Dfa::from_keywords(&[vec![kw]], vocab);
+                    let table =
+                        ConstraintTable::build_with(&q, &dfa, bsteps, &BuildOptions::default())
+                            .expect("no deadline");
+                    (dfa, table)
+                })
+                .collect();
+            for &beam in &[1usize, 8, 32] {
+                let bcfg = DecodeConfig { beam, max_tokens: bsteps, ..Default::default() };
+                let perbeam_ms = time_best_ms(breps, || {
+                    for (dfa, table) in &reqs {
+                        let _ = decode_with_table_perbeam(&lm, &q, dfa, table, &bcfg);
+                    }
+                });
+                let batched_ms = time_best_ms(breps, || {
+                    let mut states: Vec<RequestState> = reqs
+                        .iter()
+                        .map(|(dfa, _)| RequestState::new(&q, dfa, None))
+                        .collect();
+                    while states.iter().any(|s| !s.finished()) {
+                        let mut items: Vec<EngineItem> = states
+                            .iter_mut()
+                            .zip(reqs.iter())
+                            .map(|(state, (dfa, table))| EngineItem { dfa, table, state })
+                            .collect();
+                        step_batch(&lm, &q, &bcfg, &mut items);
+                    }
+                });
+                let row = BatchedRow {
+                    hidden,
+                    vocab,
+                    bits,
+                    nnz_per_row,
+                    requests: breqs,
+                    beam,
+                    max_tokens: bsteps,
+                    sparsity: q.sparsity(),
+                    perbeam_ms,
+                    batched_ms,
+                };
+                println!(
+                    "{:>6} {:>5} {:>4} {:>8} {:>10.2} {:>10.2} {:>7.1}x",
+                    row.hidden,
+                    row.beam,
+                    row.requests,
+                    row.nnz_per_row,
+                    row.perbeam_ms,
+                    row.batched_ms,
+                    row.speedup()
+                );
+                if beam >= 8 && row.speedup() < 1.5 {
+                    eprintln!(
+                        "[bench_decode] WARNING: batched engine under 1.5x vs per-beam at \
+                         hidden={} beam={} ({:.2}x)",
+                        row.hidden,
+                        row.beam,
+                        row.speedup()
+                    );
+                }
+                brows.push(row);
+            }
+        }
+    }
+
+    let n_scenarios = rows.len() + brows.len();
     let json = Json::obj(vec![
         ("bench", Json::str("decode")),
         ("quick", Json::Bool(quick)),
-        ("scenarios", Json::arr(rows.iter().map(|r| r.to_json()))),
+        (
+            "scenarios",
+            Json::arr(rows.iter().map(|r| r.to_json()).chain(brows.iter().map(|r| r.to_json()))),
+        ),
     ])
     .to_string();
     match std::fs::write("BENCH_decode.json", &json) {
-        Ok(()) => println!("[bench_decode] wrote BENCH_decode.json ({} scenarios)", rows.len()),
+        Ok(()) => println!("[bench_decode] wrote BENCH_decode.json ({n_scenarios} scenarios)"),
         Err(e) => {
             eprintln!("[bench_decode] FAILED writing BENCH_decode.json: {e}");
             std::process::exit(1);

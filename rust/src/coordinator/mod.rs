@@ -7,9 +7,15 @@
 //! builds off the dispatcher thread, and a pool of decode workers that
 //! run the neuro-symbolic beam search against the shared quantized HMM
 //! and the LM (native n-gram or AOT HLO transformer — anything
-//! implementing [`LanguageModel`]). Metrics cover throughput, latency
-//! percentiles, queue waits, table-cache effectiveness and the build
-//! pipeline's depth.
+//! implementing [`LanguageModel`]). Each worker steps its whole
+//! batch's requests *together* through the structure-of-arrays decode
+//! engine ([`crate::generate::engine`]): every step fuses all
+//! co-resident beams into one panel-kernel sweep over the backend,
+//! while per-request deadlines, cancellation and replies stay
+//! independent (a finished or timed-out request is answered
+//! immediately, never held for slow co-residents). Metrics cover
+//! throughput, latency percentiles, queue waits, table-cache
+//! effectiveness and the build pipeline's depth.
 //!
 //! The dispatcher never builds: it resolves each concept group against
 //! the [`cache::LruCache`] singleflight state machine (resident →
@@ -57,7 +63,7 @@ use std::time::{Duration, Instant};
 use crate::data::Corpus;
 use crate::dfa::Dfa;
 use crate::generate::{
-    decode_with_table, BuildOptions, CancelProbe, ConstraintTable, DecodeConfig, Generation,
+    engine, BuildOptions, CancelProbe, ConstraintTable, DecodeConfig, Generation,
 };
 use crate::hmm::{Hmm, HmmBackend};
 use crate::lm::LanguageModel;
@@ -1075,6 +1081,52 @@ fn dispatcher_loop(
     }
 }
 
+/// One co-batched request inside a worker's step loop: its admission
+/// slot, its SoA decode state, and the accounting it carries.
+struct DecodeLane {
+    req: Request,
+    slot: InFlightSlot,
+    state: engine::RequestState,
+    queue_wait: Duration,
+}
+
+/// Final accounting for one request: throughput/latency metrics, slot
+/// release (before replying, so a caller that sees the response also
+/// sees the freed admission slot), and the reply itself.
+fn finish_request(
+    shared: &Shared,
+    req: Request,
+    mut slot: InFlightSlot,
+    gen: Generation,
+    queue_wait: Duration,
+) {
+    let latency = req.submitted_at.elapsed();
+    shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
+    req.client_stats.completed.fetch_add(1, Ordering::Relaxed);
+    if gen.satisfied {
+        shared.metrics.satisfied.fetch_add(1, Ordering::Relaxed);
+    }
+    // Timed-out responses would pin the latency quantiles at the
+    // deadline value without representing real decode work; the
+    // Timeout middleware counts them separately.
+    if !gen.timed_out {
+        shared
+            .metrics
+            .record_latency(latency.as_secs_f64(), queue_wait.as_secs_f64());
+        req.client_stats.record_latency(latency.as_secs_f64());
+    }
+    slot.release();
+    let _ = req.reply.send(Response {
+        id: req.id,
+        text: shared.corpus.vocab.decode(&gen.tokens),
+        satisfied: gen.satisfied,
+        timed_out: gen.timed_out,
+        failed: false,
+        latency,
+        queue_wait,
+    });
+}
+
 fn worker_loop(work: Arc<Mutex<Receiver<Batch>>>, shared: Arc<Shared>) {
     loop {
         let batch = {
@@ -1092,49 +1144,51 @@ fn worker_loop(work: Arc<Mutex<Receiver<Batch>>>, shared: Arc<Shared>) {
             .iter()
             .map(|_| InFlightSlot::new(&shared.metrics))
             .collect();
-        for (req, mut slot) in batch.requests.into_iter().zip(slots) {
+        // The batch collector: one decode lane per request still worth
+        // serving, all stepped *together* so every step fuses the whole
+        // batch's beams into one panel kernel sweep over the backend.
+        let mut lanes: Vec<DecodeLane> = Vec::new();
+        for (req, slot) in batch.requests.into_iter().zip(slots) {
             let queue_wait = batch.dispatched_at.duration_since(req.submitted_at);
             // Deadline already blown while queued: answer immediately
-            // instead of burning a decode slot on abandoned work.
-            let gen = if req.deadline.is_some_and(|d| Instant::now() >= d) {
-                Generation {
+            // instead of burning a decode lane on abandoned work.
+            if req.deadline.is_some_and(|d| Instant::now() >= d) {
+                let gen = Generation {
                     tokens: Vec::new(),
                     score: f64::NEG_INFINITY,
                     satisfied: false,
                     timed_out: true,
+                };
+                finish_request(&shared, req, slot, gen, queue_wait);
+                continue;
+            }
+            let state = engine::RequestState::new(&*shared.model, dfa, req.deadline);
+            lanes.push(DecodeLane { req, slot, state, queue_wait });
+        }
+        // Per-request deadlines live in each lane's RequestState, so a
+        // co-batched request times out on its own schedule mid-batch.
+        let mut dcfg = shared.cfg.decode.clone();
+        dcfg.deadline = None;
+        while !lanes.is_empty() {
+            let mut items: Vec<engine::EngineItem> = lanes
+                .iter_mut()
+                .map(|l| engine::EngineItem { dfa, table, state: &mut l.state })
+                .collect();
+            engine::step_batch(shared.lm.as_ref(), &*shared.model, &dcfg, &mut items);
+            drop(items);
+            // Reply to lanes that finished this step right away: a fast
+            // (or timed-out, or beam-extinct) request never waits for
+            // slow co-residents to drain.
+            let mut i = 0;
+            while i < lanes.len() {
+                if lanes[i].state.finished() {
+                    let lane = lanes.remove(i);
+                    let gen = lane.state.generation(dfa);
+                    finish_request(&shared, lane.req, lane.slot, gen, lane.queue_wait);
+                } else {
+                    i += 1;
                 }
-            } else {
-                let mut dcfg = shared.cfg.decode.clone();
-                dcfg.deadline = req.deadline;
-                decode_with_table(shared.lm.as_ref(), &*shared.model, dfa, table, &dcfg)
-            };
-            let latency = req.submitted_at.elapsed();
-            shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
-            req.client_stats.completed.fetch_add(1, Ordering::Relaxed);
-            if gen.satisfied {
-                shared.metrics.satisfied.fetch_add(1, Ordering::Relaxed);
             }
-            // Timed-out responses would pin the latency quantiles at the
-            // deadline value without representing real decode work; the
-            // Timeout middleware counts them separately.
-            if !gen.timed_out {
-                shared
-                    .metrics
-                    .record_latency(latency.as_secs_f64(), queue_wait.as_secs_f64());
-                req.client_stats.record_latency(latency.as_secs_f64());
-            }
-            // Release before replying so a caller that sees the
-            // response also sees the freed admission slot.
-            slot.release();
-            let _ = req.reply.send(Response {
-                id: req.id,
-                text: shared.corpus.vocab.decode(&gen.tokens),
-                satisfied: gen.satisfied,
-                timed_out: gen.timed_out,
-                failed: false,
-                latency,
-                queue_wait,
-            });
         }
     }
 }

@@ -7,7 +7,7 @@ pub mod metrics;
 use crate::data::{Corpus, EvalItem};
 use crate::dfa::Dfa;
 use crate::generate::{decode, DecodeConfig};
-use crate::hmm::Hmm;
+use crate::hmm::HmmBackend;
 use crate::lm::LanguageModel;
 use crate::util::threadpool::parallel_map;
 use metrics::{bleu4, rouge_l_multi, spice_proxy, CiderScorer};
@@ -56,9 +56,14 @@ pub struct EvalOutput {
 
 /// Run the full evaluation: decode every item, compute all metrics.
 /// Decoding is parallel over items (each item is an independent request).
+///
+/// The model comes in as a [`HmmBackend`], so the offline sweeps
+/// (Tables II/V/VI) run the *same* sparse quantized decode path the
+/// server does — no dense materialization of a quantized model is
+/// needed to score it (a `&Hmm` still coerces here for FP32 rows).
 pub fn evaluate(
     lm: &dyn LanguageModel,
-    hmm: &Hmm,
+    hmm: &dyn HmmBackend,
     corpus: &Corpus,
     items: &[EvalItem],
     cfg: &DecodeConfig,

@@ -1,0 +1,405 @@
+//! The batched structure-of-arrays decode engine.
+//!
+//! [`super::decode_with_table`] historically advanced one request at a
+//! time, each beam scored with its own `emit_vecmat`/`trans_vecmat`
+//! call — so a backend's weight arrays (CSR levels for a quantized
+//! model, dense rows for FP32) were streamed from memory once *per
+//! beam per step*. This module restructures beam state as
+//! structure-of-arrays ([`RequestState`] holds one `B×H` alpha panel
+//! per request instead of per-beam `Vec<f32>`s) and fuses each decode
+//! step across **all beams of all co-resident requests sharing a
+//! backend**: [`step_batch`] gathers every live beam's belief product
+//! into one panel, runs a single [`HmmBackend::emit_panel`] acceptance
+//! sweep and a single [`HmmBackend::forward_step_panel`] belief
+//! advance, and scatters the results back per request.
+//!
+//! The contract that makes this safe to ship is **bit-identity**: a
+//! request decodes to exactly the same tokens and the same score bits
+//! whether it steps alone, co-batched with strangers, or joins/leaves
+//! a batch mid-generation (arrivals, cancellations, finishes). That
+//! holds because no accumulator is ever shared between beams — the
+//! panel kernels keep one f64 accumulator per (beam, output) pair and
+//! see the exact same addition sequence as the scalar ops — and all
+//! per-request control flow (candidate ordering, NaN filtering,
+//! `total_cmp` sorting, deadline checks) runs on per-request state
+//! only. `tests/decode_equivalence.rs` and `tests/batched_decode.rs`
+//! property-test both properties against the retained per-beam
+//! reference implementation
+//! [`super::decode_with_table_perbeam`].
+
+use std::collections::HashMap;
+
+use crate::data::vocab::EOS;
+use crate::dfa::Dfa;
+use crate::hmm::HmmBackend;
+use crate::lm::LanguageModel;
+
+use super::{maybe_qdq, ConstraintTable, DecodeConfig, Generation};
+
+/// A finished (EOS-terminated) beam: only what the final pick needs.
+#[derive(Clone, Debug)]
+struct DoneBeam {
+    tokens: Vec<usize>,
+    score: f64,
+    dfa_state: u32,
+}
+
+/// Per-request decode state in structure-of-arrays layout: parallel
+/// vectors indexed by beam, with all beliefs packed into one
+/// beam-major `B×H` panel so a batch step can gather them without
+/// per-beam pointer chasing.
+///
+/// A request's full lifecycle is: [`RequestState::new`] →
+/// [`step_batch`] until [`RequestState::finished`] →
+/// [`RequestState::generation`]. The coordinator's decode workers
+/// drive many `RequestState`s through shared [`step_batch`] calls;
+/// the one-request wrapper [`super::decode_with_table`] drives a
+/// batch of one.
+pub struct RequestState {
+    /// Token prefixes, one per live beam.
+    tokens: Vec<Vec<usize>>,
+    /// Combined neural+symbolic scores, parallel to `tokens`.
+    scores: Vec<f64>,
+    /// DFA states, parallel to `tokens`.
+    dfa_states: Vec<u32>,
+    /// Beam-major `B×H` panel of predictive HMM beliefs
+    /// (`alphas[bi·H .. (bi+1)·H]` is beam `bi`'s α).
+    alphas: Vec<f32>,
+    h_n: usize,
+    /// EOS-terminated beams, in discovery order (the final pick's
+    /// `max_by` keeps the *last* maximum, so order is part of the
+    /// reference semantics).
+    done: Vec<DoneBeam>,
+    /// Request-cached dense emission columns for the DFA exception
+    /// tokens and EOS, gathered once via `emit_at` exactly as the
+    /// per-beam path does — bit-identical scratch under batching.
+    exc_cols: HashMap<usize, Vec<f32>>,
+    /// Steps taken so far (the per-beam loop's `t`).
+    t: usize,
+    /// Per-request deadline; checked once per step like the per-beam
+    /// path, so co-batched requests with different deadlines each time
+    /// out on their own schedule.
+    deadline: Option<std::time::Instant>,
+    finished: bool,
+    timed_out: bool,
+}
+
+impl RequestState {
+    /// Initialize decode state for one request: a single root beam at
+    /// the DFA start state with the model's initial belief, plus the
+    /// per-request exception-column scratch (every distinct DFA
+    /// exception token and EOS, gathered entry-by-entry through
+    /// [`HmmBackend::emit_at`] so the cached column is bit-identical
+    /// to what per-entry reads would see, including the uniform
+    /// fallback for fully-pruned rows).
+    pub fn new(model: &dyn HmmBackend, dfa: &Dfa, deadline: Option<std::time::Instant>) -> Self {
+        let h_n = model.hidden();
+        let gather_col =
+            |tok: usize| -> Vec<f32> { (0..h_n).map(|h| model.emit_at(h, tok)).collect() };
+        let mut exc_cols: HashMap<usize, Vec<f32>> = HashMap::new();
+        for d in 0..dfa.n_states() as u32 {
+            for &(tok, _) in dfa.exceptions(d) {
+                exc_cols
+                    .entry(tok as usize)
+                    .or_insert_with(|| gather_col(tok as usize));
+            }
+        }
+        exc_cols.entry(EOS).or_insert_with(|| gather_col(EOS));
+        RequestState {
+            tokens: vec![Vec::new()],
+            scores: vec![0.0],
+            dfa_states: vec![dfa.start()],
+            alphas: model.init().to_vec(),
+            h_n,
+            done: Vec::new(),
+            exc_cols,
+            t: 0,
+            deadline,
+            finished: false,
+            timed_out: false,
+        }
+    }
+
+    /// Whether this request has stopped stepping (budget exhausted,
+    /// beams extinct, deadline fired, or cancelled). A finished
+    /// request is skipped by [`step_batch`] and ready for
+    /// [`RequestState::generation`].
+    pub fn finished(&self) -> bool {
+        self.finished
+    }
+
+    /// Whether the request stopped because its deadline fired (or it
+    /// was cancelled) rather than running to completion.
+    pub fn timed_out(&self) -> bool {
+        self.timed_out
+    }
+
+    /// Steps taken so far.
+    pub fn steps(&self) -> usize {
+        self.t
+    }
+
+    /// Cancel the request mid-generation: it stops stepping
+    /// immediately and reports timed-out, keeping the best prefix
+    /// found so far — the same semantics as a deadline firing between
+    /// steps. Co-batched requests are unaffected (asserted by
+    /// `tests/batched_decode.rs`).
+    pub fn cancel(&mut self) {
+        self.finished = true;
+        self.timed_out = true;
+    }
+
+    /// Extract the final [`Generation`]: prefer finished accepting
+    /// beams, then live accepting, then anything — byte-for-byte the
+    /// per-beam reference's pick, including `total_cmp` ordering and
+    /// the empty-pool fallback.
+    pub fn generation(&self, dfa: &Dfa) -> Generation {
+        let pick = |pool: &[(&Vec<usize>, f64, u32)]| -> Option<(Vec<usize>, f64)> {
+            pool.iter()
+                .filter(|&&(_, _, d)| dfa.is_accepting(d))
+                .max_by(|a, b| a.1.total_cmp(&b.1))
+                .or_else(|| pool.iter().max_by(|a, b| a.1.total_cmp(&b.1)))
+                .map(|&(t, s, _)| (t.clone(), s))
+        };
+        let done_pool: Vec<(&Vec<usize>, f64, u32)> = self
+            .done
+            .iter()
+            .map(|d| (&d.tokens, d.score, d.dfa_state))
+            .collect();
+        let live_pool: Vec<(&Vec<usize>, f64, u32)> = self
+            .tokens
+            .iter()
+            .enumerate()
+            .map(|(bi, t)| (t, self.scores[bi], self.dfa_states[bi]))
+            .collect();
+        let (mut tokens, score) = pick(&done_pool)
+            .or_else(|| pick(&live_pool))
+            .unwrap_or((vec![EOS], f64::NEG_INFINITY));
+        if tokens.last() == Some(&EOS) {
+            tokens.pop();
+        }
+        let satisfied = dfa.accepts(&tokens);
+        Generation {
+            tokens,
+            score,
+            satisfied,
+            timed_out: self.timed_out,
+        }
+    }
+}
+
+/// One request's slot in a batch step: its DFA, its (cached)
+/// constraint table, and its mutable decode state. Co-batched
+/// requests may use entirely different DFAs and tables — only the
+/// model backend is shared.
+pub struct EngineItem<'a> {
+    /// The request's keyword DFA.
+    pub dfa: &'a Dfa,
+    /// The request's constraint table (budget ≥ `cfg.max_tokens`).
+    pub table: &'a ConstraintTable,
+    /// The request's decode state.
+    pub state: &'a mut RequestState,
+}
+
+/// Advance every unfinished request in `items` by one decode step,
+/// fusing the per-beam acceptance products and forward steps across
+/// the whole batch into one [`HmmBackend::emit_panel`] and one
+/// [`HmmBackend::forward_step_panel`] call.
+///
+/// Each request's arithmetic is bit-identical to the per-beam
+/// reference ([`super::decode_with_table_perbeam`]) regardless of who
+/// else is in the batch: activation qdq (`cfg.act_bits`) is applied
+/// per beam-row, exception/EOS corrections run over per-request
+/// cached columns, candidate collection order and `total_cmp` sorting
+/// are per-request, and per-request deadlines are checked before any
+/// work is gathered for that request. Requests whose deadline has
+/// fired are marked finished+timed-out; requests out of token budget
+/// or out of live beams are marked finished.
+///
+/// Call in a loop until every item's state reports
+/// [`RequestState::finished`]; a call where all items are finished is
+/// a no-op.
+pub fn step_batch(
+    lm: &dyn LanguageModel,
+    model: &dyn HmmBackend,
+    cfg: &DecodeConfig,
+    items: &mut [EngineItem],
+) {
+    let h_n = model.hidden();
+    let vocab = model.vocab();
+
+    // --- Phase 1: lifecycle checks + gather belief products u = α_q ⊙ c_def
+    // into one beam-major panel (lanes are contiguous per request, in
+    // item order). α_q rows are kept for the correction loops.
+    let mut u_panel: Vec<f32> = Vec::new();
+    let mut alpha_q_panel: Vec<f32> = Vec::new();
+    let mut live_items: Vec<usize> = Vec::new();
+    let mut lane_counts: Vec<usize> = Vec::new();
+    for (ii, item) in items.iter_mut().enumerate() {
+        let st = &mut *item.state;
+        if st.finished {
+            continue;
+        }
+        debug_assert_eq!(st.h_n, h_n, "request state built for a different backend");
+        if st.t >= cfg.max_tokens {
+            st.finished = true;
+            continue;
+        }
+        if let Some(d) = st.deadline {
+            if std::time::Instant::now() >= d {
+                st.finished = true;
+                st.timed_out = true;
+                continue;
+            }
+        }
+        let remaining = cfg.max_tokens - st.t; // tokens left including this one
+        let b = st.tokens.len();
+        for bi in 0..b {
+            let mut alpha_q = st.alphas[bi * h_n..(bi + 1) * h_n].to_vec();
+            maybe_qdq(&mut alpha_q, cfg.act_bits);
+            let d_def = item.dfa.default_next(st.dfa_states[bi]);
+            let c_def = item.table.c(remaining - 1, d_def);
+            let base = u_panel.len();
+            u_panel.resize(base + h_n, 0.0);
+            for h in 0..h_n {
+                u_panel[base + h] = alpha_q[h] * c_def[h];
+            }
+            maybe_qdq(&mut u_panel[base..base + h_n], cfg.act_bits);
+            alpha_q_panel.extend_from_slice(&alpha_q);
+        }
+        live_items.push(ii);
+        lane_counts.push(b);
+    }
+    let b_total: usize = lane_counts.iter().sum();
+    if b_total == 0 {
+        return;
+    }
+
+    // --- Phase 2: ONE fused acceptance sweep over every live beam of
+    // every request — the decode hot spot, now streaming the weight
+    // arrays once per batch step instead of once per beam.
+    let mut w_panel = vec![0f32; b_total * vocab];
+    model.emit_panel(&u_panel, b_total, &mut w_panel);
+
+    // --- Phase 3: per request, score candidates over its lanes and
+    // select survivors. All ordering-sensitive work stays per-request.
+    let mut lp = vec![0f32; vocab];
+    let mut fwd_alphas: Vec<f32> = Vec::new();
+    let mut fwd_toks: Vec<usize> = Vec::new();
+    let mut fwd_dst: Vec<(usize, usize)> = Vec::new();
+    let mut lane = 0usize;
+    for (li, &ii) in live_items.iter().enumerate() {
+        let b = lane_counts[li];
+        let item = &mut items[ii];
+        let st = &mut *item.state;
+        let remaining = cfg.max_tokens - st.t;
+        let mut candidates: Vec<(usize, usize, f64)> = Vec::new(); // (beam, tok, score)
+        for bi in 0..b {
+            let alpha_q = &alpha_q_panel[(lane + bi) * h_n..(lane + bi + 1) * h_n];
+            let w = &mut w_panel[(lane + bi) * vocab..(lane + bi + 1) * vocab];
+            lm.next_log_probs(&st.tokens[bi], &mut lp);
+            maybe_qdq(w, cfg.act_bits);
+
+            // Exception tokens: per-token class correction over the
+            // request-cached emission columns.
+            for &(tok, next_d) in item.dfa.exceptions(st.dfa_states[bi]) {
+                let c_exc = item.table.c(remaining - 1, next_d);
+                let col = &st.exc_cols[&(tok as usize)];
+                let mut acc = 0f64;
+                for h in 0..h_n {
+                    acc += alpha_q[h] as f64 * col[h] as f64 * c_exc[h] as f64;
+                }
+                w[tok as usize] = acc as f32;
+            }
+
+            // EOS ends generation now: acceptance must hold immediately.
+            let eos_next = item.dfa.next(st.dfa_states[bi], EOS);
+            if item.dfa.is_accepting(eos_next) {
+                let col = &st.exc_cols[&EOS];
+                let mut acc = 0f64;
+                for h in 0..h_n {
+                    acc += alpha_q[h] as f64 * col[h] as f64;
+                }
+                w[EOS] = acc as f32;
+            } else {
+                w[EOS] = 0.0;
+            }
+
+            let z: f64 = w.iter().map(|&x| x as f64).sum();
+            if z <= 0.0 {
+                // Constraint unsatisfiable from this beam within budget:
+                // drop the beam (produce no candidates from it).
+                continue;
+            }
+            let log_z = z.ln();
+            for (x, (&lpx, &wx)) in lp.iter().zip(w.iter()).enumerate() {
+                if wx <= 0.0 {
+                    continue;
+                }
+                let s = st.scores[bi] + lpx as f64 + cfg.lambda as f64 * ((wx as f64).ln() - log_z);
+                // NaN scores carry no ranking information: drop the
+                // candidate rather than let it displace real ones.
+                if s.is_nan() {
+                    continue;
+                }
+                candidates.push((bi, x, s));
+            }
+        }
+        lane += b;
+        if candidates.is_empty() {
+            // No viable continuation: stop stepping but keep the
+            // current beams as the pick pool (the per-beam `break`).
+            st.finished = true;
+            continue;
+        }
+        // Top-k by score; total_cmp so a NaN can never panic a worker.
+        candidates.sort_by(|a, b| b.2.total_cmp(&a.2));
+        candidates.truncate(cfg.beam);
+
+        let mut next_tokens: Vec<Vec<usize>> = Vec::with_capacity(cfg.beam);
+        let mut next_scores: Vec<f64> = Vec::with_capacity(cfg.beam);
+        let mut next_states: Vec<u32> = Vec::with_capacity(cfg.beam);
+        for (bi, tok, score) in candidates {
+            let mut tokens = st.tokens[bi].clone();
+            tokens.push(tok);
+            let dfa_state = item.dfa.next(st.dfa_states[bi], tok);
+            if tok == EOS {
+                st.done.push(DoneBeam {
+                    tokens,
+                    score,
+                    dfa_state,
+                });
+                continue;
+            }
+            // Queue the forward step over the RAW parent belief (never
+            // the qdq'd copy), exactly like the per-beam path.
+            fwd_alphas.extend_from_slice(&st.alphas[bi * h_n..(bi + 1) * h_n]);
+            fwd_toks.push(tok);
+            fwd_dst.push((ii, next_tokens.len()));
+            next_tokens.push(tokens);
+            next_scores.push(score);
+            next_states.push(dfa_state);
+        }
+        st.tokens = next_tokens;
+        st.scores = next_scores;
+        st.dfa_states = next_states;
+        st.t += 1;
+        if st.tokens.is_empty() {
+            st.finished = true;
+        }
+        st.alphas = vec![0.0; st.tokens.len() * h_n];
+    }
+
+    // --- Phase 4: ONE fused forward step over every surviving beam of
+    // every request; scatter the advanced beliefs back to their slots.
+    if !fwd_toks.is_empty() {
+        let f = fwd_toks.len();
+        let mut next_panel = vec![0f32; f * h_n];
+        let mut scales = vec![0f64; f];
+        model.forward_step_panel(&fwd_alphas, &fwd_toks, &mut next_panel, &mut scales);
+        for (k, &(ii, nbi)) in fwd_dst.iter().enumerate() {
+            items[ii].state.alphas[nbi * h_n..(nbi + 1) * h_n]
+                .copy_from_slice(&next_panel[k * h_n..(k + 1) * h_n]);
+        }
+    }
+}

@@ -24,7 +24,15 @@
 //! scores beams over the stored non-zero levels directly — O(nnz) per
 //! acceptance product instead of O(H·V) — and never touches dense FP32
 //! weights anywhere on the request path.
+//!
+//! The step loop itself lives in [`engine`]: beam state is
+//! structure-of-arrays and each step's MatMuls are fused across all
+//! beams of all co-resident requests into panel kernels
+//! ([`HmmBackend::emit_panel`] / [`HmmBackend::forward_step_panel`]),
+//! bit-identical to the retained per-beam reference
+//! [`decode_with_table_perbeam`].
 
+pub mod engine;
 pub mod product;
 
 use crate::data::vocab::EOS;
@@ -122,11 +130,38 @@ pub fn decode(
 /// tables per concept set). Every per-step weight read — the
 /// `u @ emit` acceptance product, the exception/EOS corrections, and
 /// the forward step — goes through the [`HmmBackend`], so the beam
-/// loop runs weight-sparse on a quantized backend. The handful of
+/// loop runs weight-sparse on a quantized backend.
+///
+/// This drives the batched SoA engine ([`engine::step_batch`]) with a
+/// batch of one; the coordinator's decode workers drive the same
+/// engine with all co-resident requests fused per step. Both are
+/// bit-identical to the per-beam reference
+/// [`decode_with_table_perbeam`] (property-tested in
+/// `tests/decode_equivalence.rs`).
+pub fn decode_with_table(
+    lm: &dyn LanguageModel,
+    model: &dyn HmmBackend,
+    dfa: &Dfa,
+    table: &ConstraintTable,
+    cfg: &DecodeConfig,
+) -> Generation {
+    let mut state = engine::RequestState::new(model, dfa, cfg.deadline);
+    while !state.finished() {
+        let mut items = [engine::EngineItem { dfa, table, state: &mut state }];
+        engine::step_batch(lm, model, cfg, &mut items);
+    }
+    state.generation(dfa)
+}
+
+/// The per-beam reference decoder: one `emit_vecmat`/`forward_step`
+/// call per beam per step, no panels, no batching. Kept (and kept
+/// public) as the oracle the decode-equivalence battery compares
+/// [`decode_with_table`] and the coordinator's batched path against —
+/// the batched engine must match it to the bit. The handful of
 /// exception emission columns the correction loop needs are gathered
 /// into a dense scratch once per request (not re-read entry-by-entry
 /// per step), matching what the table engine does at build time.
-pub fn decode_with_table(
+pub fn decode_with_table_perbeam(
     lm: &dyn LanguageModel,
     model: &dyn HmmBackend,
     dfa: &Dfa,

@@ -123,6 +123,108 @@ pub trait HmmBackend: Send + Sync {
         self.trans_vecmat(&weighted, next);
         scale
     }
+
+    /// Panel form of [`HmmBackend::emit_vecmat`]: score `b` beams'
+    /// acceptance weights in one fused sweep. `u` holds `b` belief
+    /// products back to back (`u[bi·H .. (bi+1)·H]`), `out` receives
+    /// the `b` weight vectors in the same layout over V.
+    ///
+    /// The default implementation loops the per-beam op, so the trait
+    /// stays object-safe and every existing backend keeps working
+    /// unchanged; [`Hmm`] and [`crate::quant::qhmm::QuantizedHmm`]
+    /// override it with blocked panel kernels that stream the weight
+    /// arrays once per *panel* instead of once per beam. Either way
+    /// the result is bit-identical to `b` per-beam calls — the batched
+    /// decode engine relies on that.
+    fn emit_panel(&self, u: &[f32], b: usize, out: &mut [f32]) {
+        let h_n = self.hidden();
+        let v_n = self.vocab();
+        debug_assert_eq!(u.len(), b * h_n);
+        debug_assert_eq!(out.len(), b * v_n);
+        for bi in 0..b {
+            self.emit_vecmat(&u[bi * h_n..(bi + 1) * h_n], &mut out[bi * v_n..(bi + 1) * v_n]);
+        }
+    }
+
+    /// Panel form of [`HmmBackend::trans_vecmat`]: advance `b` beams'
+    /// beliefs in one fused sweep (same back-to-back layout as
+    /// [`HmmBackend::emit_panel`], H in and H out). Default loops the
+    /// per-beam op; overrides must stay bit-identical to it.
+    fn trans_panel(&self, v: &[f32], b: usize, out: &mut [f32]) {
+        let h_n = self.hidden();
+        debug_assert_eq!(v.len(), b * h_n);
+        debug_assert_eq!(out.len(), b * h_n);
+        for bi in 0..b {
+            self.trans_vecmat(&v[bi * h_n..(bi + 1) * h_n], &mut out[bi * h_n..(bi + 1) * h_n]);
+        }
+    }
+
+    /// Panel form of [`HmmBackend::forward_step`]: observe `toks[bi]`
+    /// under belief `alphas[bi·H .. (bi+1)·H]` and advance all `b`
+    /// beams at once. `next` receives the advanced beliefs in the same
+    /// layout; `scales[bi]` gets each beam's per-step scale (0.0 for
+    /// the uniform-reset case, exactly like the scalar op).
+    ///
+    /// This default is already fused: it reproduces
+    /// [`HmmBackend::forward_step`]'s emission-weighting arithmetic
+    /// per beam verbatim — including the `scale <= 1e-30`
+    /// uniform-reset guard, which never touches the transition matrix
+    /// — then compacts the surviving beams into one panel for a single
+    /// [`HmmBackend::trans_panel`] call. A backend therefore only
+    /// needs to override `trans_panel` (and `emit_panel`) to run the
+    /// whole batched forward step through its blocked kernels.
+    fn forward_step_panel(&self, alphas: &[f32], toks: &[usize], next: &mut [f32], scales: &mut [f64]) {
+        let h_n = self.hidden();
+        let b = toks.len();
+        debug_assert_eq!(alphas.len(), b * h_n);
+        debug_assert_eq!(next.len(), b * h_n);
+        debug_assert_eq!(scales.len(), b);
+        let mut weighted = vec![0f32; b * h_n];
+        let mut live: Vec<usize> = Vec::with_capacity(b);
+        for bi in 0..b {
+            debug_assert!(toks[bi] < self.vocab());
+            let alpha = &alphas[bi * h_n..(bi + 1) * h_n];
+            let wrow = &mut weighted[bi * h_n..(bi + 1) * h_n];
+            let mut scale = 0f64;
+            for (h, w) in wrow.iter_mut().enumerate() {
+                let p = alpha[h] as f64 * self.emit_at(h, toks[bi]) as f64;
+                *w = p as f32;
+                scale += p;
+            }
+            if scale <= 1e-30 {
+                let u = 1.0 / h_n as f32;
+                for n in next[bi * h_n..(bi + 1) * h_n].iter_mut() {
+                    *n = u;
+                }
+                scales[bi] = 0.0;
+                continue;
+            }
+            let inv = (1.0 / scale) as f32;
+            for w in wrow.iter_mut() {
+                *w *= inv;
+            }
+            scales[bi] = scale;
+            live.push(bi);
+        }
+        if live.is_empty() {
+            return;
+        }
+        if live.len() == b {
+            self.trans_panel(&weighted, b, next);
+            return;
+        }
+        // Compact the surviving beams so the panel kernel sees a dense
+        // panel; scatter the advanced beliefs back to their lanes.
+        let mut panel = vec![0f32; live.len() * h_n];
+        for (i, &bi) in live.iter().enumerate() {
+            panel[i * h_n..(i + 1) * h_n].copy_from_slice(&weighted[bi * h_n..(bi + 1) * h_n]);
+        }
+        let mut out = vec![0f32; live.len() * h_n];
+        self.trans_panel(&panel, live.len(), &mut out);
+        for (i, &bi) in live.iter().enumerate() {
+            next[bi * h_n..(bi + 1) * h_n].copy_from_slice(&out[i * h_n..(i + 1) * h_n]);
+        }
+    }
 }
 
 /// The dense FP32 model is its own backend: every entry is "stored",
@@ -171,6 +273,14 @@ impl HmmBackend for Hmm {
             self.trans.data.len() - self.trans.zero_count(),
             self.emit.data.len() - self.emit.zero_count(),
         )
+    }
+
+    fn emit_panel(&self, u: &[f32], b: usize, out: &mut [f32]) {
+        self.emit.vecmat_panel(u, b, out);
+    }
+
+    fn trans_panel(&self, v: &[f32], b: usize, out: &mut [f32]) {
+        self.trans.vecmat_panel(v, b, out);
     }
 }
 
@@ -240,6 +350,118 @@ mod tests {
         assert_eq!(scale, 0.0);
         for &n in &next {
             assert!((n - 0.2).abs() < 1e-6, "expected uniform reset, got {n}");
+        }
+    }
+
+    /// A wrapper that deliberately keeps every default implementation,
+    /// standing in for a third-party backend that predates the panel
+    /// methods: the defaults must reproduce the per-beam ops exactly.
+    struct DefaultsOnly(Hmm);
+
+    impl HmmBackend for DefaultsOnly {
+        fn hidden(&self) -> usize {
+            HmmBackend::hidden(&self.0)
+        }
+        fn vocab(&self) -> usize {
+            HmmBackend::vocab(&self.0)
+        }
+        fn init(&self) -> &[f32] {
+            HmmBackend::init(&self.0)
+        }
+        fn trans_matvec(&self, v: &[f32], out: &mut [f32]) {
+            self.0.trans_matvec(v, out);
+        }
+        fn trans_vecmat(&self, v: &[f32], out: &mut [f32]) {
+            self.0.trans_vecmat(v, out);
+        }
+        fn emit_vecmat(&self, u: &[f32], out: &mut [f32]) {
+            self.0.emit_vecmat(u, out);
+        }
+        fn emit_at(&self, h: usize, tok: usize) -> f32 {
+            self.0.emit_at(h, tok)
+        }
+        fn emit_col(&self, tok: usize) -> Vec<(u32, f32)> {
+            self.0.emit_col(tok)
+        }
+        fn nnz(&self) -> (usize, usize) {
+            HmmBackend::nnz(&self.0)
+        }
+    }
+
+    #[test]
+    fn panel_methods_bit_identical_to_per_beam_ops() {
+        // Both the overridden (dense Hmm → Mat::vecmat_panel) and the
+        // default (looped) panel paths against B per-beam calls, and
+        // against each other — the trait stays object-safe, so this
+        // also exercises the methods through `&dyn HmmBackend`.
+        let mut rng = Rng::seeded(16);
+        let hmm = Hmm::random(9, 21, 0.3, 0.2, &mut rng);
+        let wrapped = DefaultsOnly(hmm.clone());
+        for b in [1usize, 3, 8, 17] {
+            let u: Vec<f32> = (0..b * 9)
+                .map(|_| if rng.below(4) == 0 { 0.0 } else { rng.f32() })
+                .collect();
+            for (model, label) in [(&hmm as &dyn HmmBackend, "override"), (&wrapped, "default")] {
+                let mut fused = vec![0f32; b * 21];
+                model.emit_panel(&u, b, &mut fused);
+                let mut fused_t = vec![0f32; b * 9];
+                model.trans_panel(&u, b, &mut fused_t);
+                for bi in 0..b {
+                    let mut want = vec![0f32; 21];
+                    model.emit_vecmat(&u[bi * 9..(bi + 1) * 9], &mut want);
+                    for c in 0..21 {
+                        assert_eq!(
+                            fused[bi * 21 + c].to_bits(),
+                            want[c].to_bits(),
+                            "{label} emit b={b} bi={bi} c={c}"
+                        );
+                    }
+                    let mut want_t = vec![0f32; 9];
+                    model.trans_vecmat(&u[bi * 9..(bi + 1) * 9], &mut want_t);
+                    for h in 0..9 {
+                        assert_eq!(
+                            fused_t[bi * 9 + h].to_bits(),
+                            want_t[h].to_bits(),
+                            "{label} trans b={b} bi={bi} h={h}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_step_panel_bit_identical_including_uniform_reset() {
+        // A panel mixing live beams with one whose token has zero mass:
+        // the fused step must uniform-reset that lane (scale 0.0)
+        // without touching the others, matching B scalar forward_steps
+        // to the bit — through both the override and the default path.
+        let mut rng = Rng::seeded(17);
+        let mut hmm = Hmm::random(7, 15, 0.4, 0.3, &mut rng);
+        for h in 0..7 {
+            hmm.emit.set(h, 5, 0.0); // token 5 is impossible
+        }
+        let wrapped = DefaultsOnly(hmm.clone());
+        for (model, label) in [(&hmm as &dyn HmmBackend, "override"), (&wrapped, "default")] {
+            let b = 4usize;
+            let alphas: Vec<f32> = (0..b * 7).map(|_| rng.f32()).collect();
+            let toks = [2usize, 5, 9, 5];
+            let mut next = vec![0f32; b * 7];
+            let mut scales = vec![0f64; b];
+            model.forward_step_panel(&alphas, &toks, &mut next, &mut scales);
+            for bi in 0..b {
+                let mut want = vec![0f32; 7];
+                let s = model.forward_step(&alphas[bi * 7..(bi + 1) * 7], toks[bi], &mut want);
+                assert_eq!(scales[bi].to_bits(), s.to_bits(), "{label} bi={bi} scale");
+                for h in 0..7 {
+                    assert_eq!(
+                        next[bi * 7 + h].to_bits(),
+                        want[h].to_bits(),
+                        "{label} bi={bi} h={h}"
+                    );
+                }
+            }
+            assert_eq!(scales[1], 0.0, "{label}: impossible token must report scale 0");
         }
     }
 

@@ -9,6 +9,12 @@
 //!
 //! Generative convention used throughout the repo:
 //!   z_1 ~ init;  x_t ~ emit[z_t];  z_{t+1} ~ trans[z_t].
+//!
+//! The serving path never touches these matrices directly: everything
+//! downstream (table builds, the batched decode engine's panel
+//! kernels, profiling) reads the model through [`crate::hmm::HmmBackend`],
+//! for which `Hmm` is the dense FP32 implementation — its panel
+//! overrides route straight to [`Mat::vecmat_panel`].
 
 use crate::util::mat::Mat;
 use crate::util::rng::Rng;

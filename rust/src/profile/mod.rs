@@ -31,9 +31,16 @@ pub struct OpAccounting {
     pub neural_bytes: f64,
 }
 
-/// Instrumented variant of `generate::decode` (kept structurally in sync;
-/// the uninstrumented path stays clean for the serving hot loop). Like
-/// the real decoder it reads weights only through the [`HmmBackend`].
+/// Instrumented variant of the **per-beam** decode loop (kept
+/// structurally in sync with `generate::decode_with_table_perbeam`,
+/// the scalar oracle; the uninstrumented paths stay clean for the
+/// serving hot loop). The serving path itself now runs the batched
+/// SoA engine (`generate::engine`), which is property-tested
+/// bit-identical to this per-beam reference — so the phase split
+/// measured here (table build vs MatMul vs memcpy vs beam sort)
+/// remains representative of the fused path's work, while the
+/// per-phase timers stay simple. Like the real decoder it reads
+/// weights only through the [`HmmBackend`].
 pub fn decode_profiled(
     lm: &dyn LanguageModel,
     model: &dyn HmmBackend,

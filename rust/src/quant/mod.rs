@@ -68,6 +68,25 @@ impl Method {
         }
     }
 
+    /// The serving-shaped form of this method: the [`HmmBackend`] the
+    /// offline sweep drivers hand to [`crate::eval::evaluate`], so
+    /// Table II/V/VI rows score through the same decode path the
+    /// server runs.
+    ///
+    /// For `NormQ` this is the sparse [`QuantizedHmm`] — the stored
+    /// levels themselves, no dense materialization (note its all-zero
+    /// rows dequantize to *uniform*, the serving semantics, vs the ε
+    /// mass [`Method::apply`]'s dense `normq_hmm` leaves on them; the
+    /// regression tests pin sweep scores against the dense
+    /// dequantization of the same levels, [`QuantizedHmm::to_hmm`]).
+    /// Every other method keeps its dense [`Method::apply`] model.
+    pub fn backend(&self, hmm: &Hmm) -> Box<dyn crate::hmm::HmmBackend> {
+        match *self {
+            Method::NormQ { bits } => Box::new(QuantizedHmm::from_hmm(hmm, bits)),
+            _ => Box::new(self.apply(hmm)),
+        }
+    }
+
     /// Short human-readable name, as used in table rows.
     pub fn label(&self) -> String {
         match *self {

@@ -166,6 +166,93 @@ impl PackedMat {
         }
     }
 
+    /// Panel form of [`PackedMat::vecmat`]: `b` input vectors at once,
+    /// laid out back to back (`panel[bi·rows .. (bi+1)·rows]` is beam
+    /// `bi`'s vector; `out` uses the same layout over `cols`).
+    ///
+    /// Each non-zero word is unpacked **once** and its levels applied
+    /// to all live beams through a column-major `f64` accumulator
+    /// panel (the `b` accumulators of one output column are
+    /// contiguous), so the bit-unpacking cost and the word stream
+    /// amortize over the panel instead of being re-paid per beam.
+    ///
+    /// Bit-identical to `b` independent `vecmat` calls: per beam the
+    /// same rows are skipped (the guard is on the raw `vr == 0.0`,
+    /// before scaling), the same `scaled · level` additions land in
+    /// the same ascending (row, slot) order — including the
+    /// unconditional add of zero levels inside non-zero words — and
+    /// the dead-row uniform mass folds in through the same single
+    /// rank-1 pass per beam at the end.
+    pub fn vecmat_panel(&self, panel: &[f32], b: usize, out: &mut [f32]) {
+        assert_eq!(panel.len(), b * self.rows);
+        assert_eq!(out.len(), b * self.cols);
+        if b == 1 {
+            return self.vecmat(panel, out);
+        }
+        let bits = self.bits;
+        let per_word = self.per_word();
+        let wpr = self.words_per_row();
+        let mask = (1u64 << bits) - 1;
+        let mut acc = vec![0f64; b * self.cols];
+        let mut uniform = vec![0f64; b];
+        let mut scaled = vec![0f64; b];
+        let mut active: Vec<u32> = Vec::with_capacity(b);
+        for r in 0..self.rows {
+            active.clear();
+            for bi in 0..b {
+                let vr = panel[bi * self.rows + r];
+                if vr != 0.0 {
+                    scaled[bi] = (vr * self.row_scale[r]) as f64;
+                    active.push(bi as u32);
+                }
+            }
+            if active.is_empty() {
+                continue;
+            }
+            let row_words = &self.words[r * wpr..(r + 1) * wpr];
+            if row_words.iter().all(|&w| w == 0) {
+                for &bi in &active {
+                    uniform[bi as usize] += scaled[bi as usize];
+                }
+                continue;
+            }
+            let all_live = active.len() == b;
+            for (wi, &w0) in row_words.iter().enumerate() {
+                if w0 == 0 {
+                    continue;
+                }
+                let base = wi * per_word;
+                let n = per_word.min(self.cols - base);
+                let mut w = w0;
+                for slot in 0..n {
+                    let lvl = (w & mask) as f64;
+                    w >>= bits;
+                    let col = &mut acc[(base + slot) * b..(base + slot + 1) * b];
+                    if all_live {
+                        for (a, &s) in col.iter_mut().zip(scaled.iter()) {
+                            *a += s * lvl;
+                        }
+                    } else {
+                        for &bi in &active {
+                            col[bi as usize] += scaled[bi as usize] * lvl;
+                        }
+                    }
+                }
+            }
+        }
+        for bi in 0..b {
+            let u = uniform[bi];
+            if u != 0.0 {
+                for c in 0..self.cols {
+                    acc[c * b + bi] += u;
+                }
+            }
+            for c in 0..self.cols {
+                out[bi * self.cols + c] = acc[c * b + bi] as f32;
+            }
+        }
+    }
+
     /// Model storage in bits: the packed levels only (row scales are
     /// derived). This matches the paper's "b-bit fixed point" accounting.
     pub fn storage_bits(&self) -> usize {
@@ -216,6 +303,59 @@ impl SparseQMat {
         SparseQMat { rows: m.rows, cols: m.cols, bits, row_ptr, col_idx, levels, row_scale }
     }
 
+    /// Assemble a CSR matrix directly from its parts, computing the
+    /// Norm-Q row scales (`1/Σ levels`, `1/cols` for stored-out rows)
+    /// internally so the dequantization invariant cannot be violated.
+    ///
+    /// This is the synthesis path for serving-scale models: benches and
+    /// tests build H=16k/64k backends level-by-level, where the dense
+    /// H×H intermediate that [`SparseQMat::from_mat`] quantizes would
+    /// be tens of gigabytes (64k² FP32 ≈ 17 GB).
+    ///
+    /// Panics when the parts are inconsistent: `row_ptr` must be
+    /// monotone with `rows + 1` entries ending at `levels.len()`,
+    /// `col_idx` entries must be `< cols` and strictly ascending
+    /// within each row (the layout [`SparseQMat::level_at`]'s binary
+    /// search relies on), and every stored level must be non-zero and
+    /// fit in `bits`.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        bits: u32,
+        row_ptr: Vec<u32>,
+        col_idx: Vec<u32>,
+        levels: Vec<u16>,
+    ) -> SparseQMat {
+        assert!(bits >= 1 && bits <= 16);
+        assert_eq!(row_ptr.len(), rows + 1, "row_ptr must have rows + 1 entries");
+        assert_eq!(row_ptr[0], 0, "row_ptr must start at 0");
+        assert_eq!(
+            *row_ptr.last().unwrap() as usize,
+            levels.len(),
+            "row_ptr must end at the stored count"
+        );
+        assert_eq!(col_idx.len(), levels.len());
+        let max_level = ((1u32 << bits) - 1) as u16;
+        let mut row_scale = vec![0f32; rows];
+        for r in 0..rows {
+            let lo = row_ptr[r] as usize;
+            let hi = row_ptr[r + 1] as usize;
+            assert!(lo <= hi, "row_ptr must be monotone (row {r})");
+            let mut sum = 0u64;
+            for i in lo..hi {
+                assert!((col_idx[i] as usize) < cols, "col_idx out of range (row {r})");
+                assert!(i == lo || col_idx[i - 1] < col_idx[i], "col_idx not ascending (row {r})");
+                assert!(
+                    levels[i] != 0 && levels[i] <= max_level,
+                    "level out of range for bits={bits} (row {r})"
+                );
+                sum += levels[i] as u64;
+            }
+            row_scale[r] = if sum > 0 { 1.0 / sum as f32 } else { 1.0 / cols as f32 };
+        }
+        SparseQMat { rows, cols, bits, row_ptr, col_idx, levels, row_scale }
+    }
+
     /// Stored non-zero count.
     pub fn nnz(&self) -> usize {
         self.levels.len()
@@ -259,6 +399,95 @@ impl SparseQMat {
         }
         for (o, a) in out.iter_mut().zip(acc.iter()) {
             *o = *a as f32;
+        }
+    }
+
+    /// Panel form of [`SparseQMat::vecmat`]: `b` input vectors at
+    /// once, laid out back to back (`panel[bi·rows .. (bi+1)·rows]` is
+    /// beam `bi`'s vector; `out` uses the same layout over `cols`).
+    /// This is the batched decode engine's CSR × dense-panel kernel:
+    /// each stored level (and its column index) is read and
+    /// dequantized **once** and applied to all live beams via a
+    /// rank-1 update into a column-major `f64` accumulator panel — the
+    /// `b` accumulators of one output column are contiguous, so the
+    /// inner loop is unit-stride no matter how scattered the CSR
+    /// columns are. `b` independent `vecmat` calls instead re-stream
+    /// the CSR arrays (`u16` level + `u32` column per non-zero) from
+    /// DRAM once per beam, which is what makes the per-beam loop
+    /// memory-bound at serving-scale H.
+    ///
+    /// Bit-identical to `b` independent `vecmat` calls, by
+    /// construction: per beam, rows are visited in the same ascending
+    /// order, skipped on the same raw `vr == 0.0` guard (before
+    /// scaling — `vr · row_scale` can underflow to zero for a `vr` the
+    /// scalar path would still process), accumulate the identical
+    /// `scaled · level` f64 sequence per output column, fold dead-row
+    /// uniform mass through the same end pass, and round f64 → f32
+    /// once at the end. No accumulator is shared between beams, so
+    /// interleaving beams cannot reassociate any beam's sum.
+    /// `tests/decode_equivalence.rs` asserts the bit-level match across
+    /// the full bits × sparsity × H × B matrix.
+    pub fn vecmat_panel(&self, panel: &[f32], b: usize, out: &mut [f32]) {
+        assert_eq!(panel.len(), b * self.rows);
+        assert_eq!(out.len(), b * self.cols);
+        if b == 1 {
+            return self.vecmat(panel, out);
+        }
+        let mut acc = vec![0f64; b * self.cols];
+        let mut uniform = vec![0f64; b];
+        let mut scaled = vec![0f64; b];
+        let mut active: Vec<u32> = Vec::with_capacity(b);
+        for r in 0..self.rows {
+            active.clear();
+            for bi in 0..b {
+                let vr = panel[bi * self.rows + r];
+                if vr != 0.0 {
+                    scaled[bi] = (vr * self.row_scale[r]) as f64;
+                    active.push(bi as u32);
+                }
+            }
+            if active.is_empty() {
+                continue;
+            }
+            let lo = self.row_ptr[r] as usize;
+            let hi = self.row_ptr[r + 1] as usize;
+            if lo == hi {
+                for &bi in &active {
+                    uniform[bi as usize] += scaled[bi as usize];
+                }
+                continue;
+            }
+            if active.len() == b {
+                // Dense-panel fast path — every beam live, which is the
+                // overwhelmingly common case for decode beliefs.
+                for i in lo..hi {
+                    let lvl = self.levels[i] as f64;
+                    let c = self.col_idx[i] as usize;
+                    let col = &mut acc[c * b..(c + 1) * b];
+                    for (a, &s) in col.iter_mut().zip(scaled.iter()) {
+                        *a += s * lvl;
+                    }
+                }
+            } else {
+                for i in lo..hi {
+                    let lvl = self.levels[i] as f64;
+                    let col = self.col_idx[i] as usize * b;
+                    for &bi in &active {
+                        acc[col + bi as usize] += scaled[bi as usize] * lvl;
+                    }
+                }
+            }
+        }
+        for bi in 0..b {
+            let u = uniform[bi];
+            if u != 0.0 {
+                for c in 0..self.cols {
+                    acc[c * b + bi] += u;
+                }
+            }
+            for c in 0..self.cols {
+                out[bi * self.cols + c] = acc[c * b + bi] as f32;
+            }
         }
     }
 
@@ -497,6 +726,154 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// A beam panel with exact zeros mixed in (so the per-beam
+    /// `vr == 0.0` skip diverges across beams) over `rows` inputs.
+    fn beam_panel(rng: &mut Rng, b: usize, rows: usize) -> Vec<f32> {
+        (0..b * rows)
+            .map(|_| if rng.below(4) == 0 { 0.0 } else { rng.f32() })
+            .collect()
+    }
+
+    #[test]
+    fn vecmat_panel_bit_identical_to_independent_vecmats() {
+        // The tentpole kernel invariant, at the unit level: the fused
+        // panel is indistinguishable — to the bit — from B independent
+        // per-beam calls, across bit widths (3/8/12), panel widths
+        // (1/3/8/17), a non-multiple-of-word column count (33 at 3
+        // bits: 21 slots/word → partial last word) and rows that fully
+        // auto-prune (uniform fallback). FP32 (the "bits=32" cell of
+        // the matrix) is covered by the same test on `Mat`.
+        Prop::new(12, 0xB417).run("vecmat-panel-bits", |rng, _| {
+            let rows = rng.range(3, 19); // often not a multiple of anything
+            let m = gen::stochastic_mat(rng, rows, 33);
+            let bits = [3u32, 8, 12][rng.below_usize(3)];
+            let packed = PackedMat::from_mat(&m, bits);
+            let sparse = SparseQMat::from_mat(&m, bits);
+            for b in [1usize, 3, 8, 17] {
+                let panel = beam_panel(rng, b, rows);
+                for (label, fused, per_beam) in [
+                    ("sparse", {
+                        let mut out = vec![0f32; b * 33];
+                        sparse.vecmat_panel(&panel, b, &mut out);
+                        out
+                    }, {
+                        let mut out = vec![0f32; b * 33];
+                        for bi in 0..b {
+                            sparse.vecmat(
+                                &panel[bi * rows..(bi + 1) * rows],
+                                &mut out[bi * 33..(bi + 1) * 33],
+                            );
+                        }
+                        out
+                    }),
+                    ("packed", {
+                        let mut out = vec![0f32; b * 33];
+                        packed.vecmat_panel(&panel, b, &mut out);
+                        out
+                    }, {
+                        let mut out = vec![0f32; b * 33];
+                        for bi in 0..b {
+                            packed.vecmat(
+                                &panel[bi * rows..(bi + 1) * rows],
+                                &mut out[bi * 33..(bi + 1) * 33],
+                            );
+                        }
+                        out
+                    }),
+                ] {
+                    for (i, (f, p)) in fused.iter().zip(per_beam.iter()).enumerate() {
+                        assert_eq!(
+                            f.to_bits(),
+                            p.to_bits(),
+                            "{label} bits={bits} b={b} flat={i}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn vecmat_panel_dead_rows_bit_identical() {
+        // All-zero (fully auto-pruned) rows: the uniform fallback must
+        // fold into each beam exactly as the scalar path does — one
+        // guarded rank-1 pass per beam after the accumulation.
+        let mut m = Mat::zeros(3, 32);
+        for c in 0..32 {
+            m.set(0, c, 1.0 / 32.0); // auto-prunes at 3 bits
+        }
+        m.set(1, 3, 0.7);
+        m.set(1, 9, 0.3);
+        m.set(2, 0, 1.0);
+        let mut rng = Rng::seeded(0xDEAD5);
+        for b in [1usize, 3, 8, 17] {
+            let panel = beam_panel(&mut rng, b, 3);
+            for (label, mats) in [
+                ("sparse", {
+                    let s = SparseQMat::from_mat(&m, 3);
+                    assert_eq!(s.row_ptr[1], 0, "row 0 must auto-prune");
+                    let mut fused = vec![0f32; b * 32];
+                    s.vecmat_panel(&panel, b, &mut fused);
+                    let mut want = vec![0f32; b * 32];
+                    for bi in 0..b {
+                        s.vecmat(&panel[bi * 3..(bi + 1) * 3], &mut want[bi * 32..(bi + 1) * 32]);
+                    }
+                    (fused, want)
+                }),
+                ("packed", {
+                    let p = PackedMat::from_mat(&m, 3);
+                    let mut fused = vec![0f32; b * 32];
+                    p.vecmat_panel(&panel, b, &mut fused);
+                    let mut want = vec![0f32; b * 32];
+                    for bi in 0..b {
+                        p.vecmat(&panel[bi * 3..(bi + 1) * 3], &mut want[bi * 32..(bi + 1) * 32]);
+                    }
+                    (fused, want)
+                }),
+            ] {
+                let (fused, want) = mats;
+                for i in 0..b * 32 {
+                    assert_eq!(fused[i].to_bits(), want[i].to_bits(), "{label} b={b} flat={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn from_parts_matches_from_mat_and_checks_invariants() {
+        let mut rng = Rng::seeded(0xF00D);
+        let m = gen::stochastic_mat(&mut rng, 6, 40);
+        let a = SparseQMat::from_mat(&m, 8);
+        let b = SparseQMat::from_parts(
+            6,
+            40,
+            8,
+            a.row_ptr.clone(),
+            a.col_idx.clone(),
+            a.levels.clone(),
+        );
+        // The recomputed row scales make every dequantized value (and
+        // therefore every vecmat) identical.
+        let v = rng.dirichlet_symmetric(6, 1.0);
+        let (mut out_a, mut out_b) = (vec![0f32; 40], vec![0f32; 40]);
+        a.vecmat(&v, &mut out_a);
+        b.vecmat(&v, &mut out_b);
+        for c in 0..40 {
+            assert_eq!(out_a[c].to_bits(), out_b[c].to_bits(), "c={c}");
+        }
+        // Empty rows are allowed and read uniform.
+        let empty = SparseQMat::from_parts(2, 8, 4, vec![0, 1, 1], vec![3], vec![5]);
+        assert_eq!(empty.value(1, 0), 1.0 / 8.0);
+        assert!(std::panic::catch_unwind(|| {
+            SparseQMat::from_parts(1, 8, 4, vec![0, 1], vec![9], vec![5])
+        })
+        .is_err(), "out-of-range column must be rejected");
+        assert!(std::panic::catch_unwind(|| {
+            SparseQMat::from_parts(1, 8, 4, vec![0, 1], vec![3], vec![16])
+        })
+        .is_err(), "level too wide for bits must be rejected");
     }
 
     #[test]

@@ -72,6 +72,53 @@ impl QuantizedHmm {
     pub fn model_bytes(&self) -> usize {
         self.init.len() * 4 + self.trans.resident_bytes() + self.emit.resident_bytes()
     }
+
+    /// Synthesize a random sparse quantized model directly in CSR form
+    /// — `nnz_per_row` non-zero levels per row of both matrices — with
+    /// no dense intermediate. This is how the decode benches reach
+    /// H=16k/64k: a 64k×64k FP32 transition matrix alone is ~17 GB,
+    /// while the CSR levels for the same shape at 32 nnz/row are a few
+    /// dozen MB. Uses [`SparseQMat::from_parts`], so all structural
+    /// invariants are checked.
+    pub fn random_sparse(
+        hidden: usize,
+        vocab: usize,
+        nnz_per_row: usize,
+        bits: u32,
+        rng: &mut crate::util::rng::Rng,
+    ) -> QuantizedHmm {
+        let max_level = ((1u64 << bits) - 1) as u16;
+        let mut build = |rows: usize, cols: usize| -> SparseQMat {
+            let nnz = nnz_per_row.min(cols);
+            let mut row_ptr = Vec::with_capacity(rows + 1);
+            let mut col_idx = Vec::with_capacity(rows * nnz);
+            let mut levels = Vec::with_capacity(rows * nnz);
+            row_ptr.push(0u32);
+            let mut picked = std::collections::BTreeSet::new();
+            for _ in 0..rows {
+                picked.clear();
+                while picked.len() < nnz {
+                    picked.insert(rng.below(cols as u64) as u32);
+                }
+                for &c in picked.iter() {
+                    col_idx.push(c);
+                    levels.push(1 + rng.below(max_level as u64) as u16);
+                }
+                row_ptr.push(col_idx.len() as u32);
+            }
+            SparseQMat::from_parts(rows, cols, bits, row_ptr, col_idx, levels)
+        };
+        let trans = build(hidden, hidden);
+        let emit = build(hidden, vocab);
+        let mut init = rng.dirichlet_symmetric(hidden, 1.0);
+        normq::normq_vec(&mut init, bits, normq::DEFAULT_EPS);
+        QuantizedHmm {
+            init,
+            trans,
+            emit,
+            bits,
+        }
+    }
 }
 
 impl HmmBackend for QuantizedHmm {
@@ -114,6 +161,14 @@ impl HmmBackend for QuantizedHmm {
 
     fn nnz(&self) -> (usize, usize) {
         (self.trans.nnz(), self.emit.nnz())
+    }
+
+    fn emit_panel(&self, u: &[f32], b: usize, out: &mut [f32]) {
+        self.emit.vecmat_panel(u, b, out);
+    }
+
+    fn trans_panel(&self, v: &[f32], b: usize, out: &mut [f32]) {
+        self.trans.vecmat_panel(v, b, out);
     }
 }
 
@@ -220,6 +275,68 @@ mod tests {
                     next_q[h],
                     next_d[h]
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn panel_overrides_bit_identical_to_per_beam_ops() {
+        let mut rng = Rng::seeded(27);
+        let hmm = Hmm::random(11, 25, 0.3, 0.2, &mut rng);
+        for bits in [3u32, 8, 12] {
+            let q = QuantizedHmm::from_hmm(&hmm, bits);
+            for b in [1usize, 3, 8, 17] {
+                let u: Vec<f32> = (0..b * 11)
+                    .map(|_| if rng.below(4) == 0 { 0.0 } else { rng.f32() })
+                    .collect();
+                let mut fused_e = vec![0f32; b * 25];
+                q.emit_panel(&u, b, &mut fused_e);
+                let mut fused_t = vec![0f32; b * 11];
+                q.trans_panel(&u, b, &mut fused_t);
+                for bi in 0..b {
+                    let mut want = vec![0f32; 25];
+                    q.emit_vecmat(&u[bi * 11..(bi + 1) * 11], &mut want);
+                    for c in 0..25 {
+                        assert_eq!(
+                            fused_e[bi * 25 + c].to_bits(),
+                            want[c].to_bits(),
+                            "bits={bits} b={b} bi={bi} c={c}"
+                        );
+                    }
+                    let mut want_t = vec![0f32; 11];
+                    q.trans_vecmat(&u[bi * 11..(bi + 1) * 11], &mut want_t);
+                    for h in 0..11 {
+                        assert_eq!(
+                            fused_t[bi * 11 + h].to_bits(),
+                            want_t[h].to_bits(),
+                            "bits={bits} b={b} bi={bi} h={h}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_sparse_is_valid_and_panel_consistent() {
+        let mut rng = Rng::seeded(28);
+        let q = QuantizedHmm::random_sparse(33, 47, 5, 8, &mut rng);
+        assert_eq!(HmmBackend::hidden(&q), 33);
+        assert_eq!(HmmBackend::vocab(&q), 47);
+        assert_eq!(q.trans.nnz(), 33 * 5);
+        assert_eq!(q.emit.nnz(), 33 * 5);
+        // Dequantized rows are distributions (row scale = 1/Σ levels).
+        assert!(q.to_hmm().is_valid(1e-3));
+        // And the synthesized CSR runs the panel path bit-identically.
+        let b = 4usize;
+        let u: Vec<f32> = (0..b * 33).map(|_| rng.f32()).collect();
+        let mut fused = vec![0f32; b * 47];
+        q.emit_panel(&u, b, &mut fused);
+        for bi in 0..b {
+            let mut want = vec![0f32; 47];
+            q.emit_vecmat(&u[bi * 33..(bi + 1) * 33], &mut want);
+            for c in 0..47 {
+                assert_eq!(fused[bi * 47 + c].to_bits(), want[c].to_bits());
             }
         }
     }

@@ -31,9 +31,12 @@ pub fn run(args: &Args) -> Result<TableResult, String> {
     for &b in &bits {
         let m = Method::Integer { bits: b as u32 };
         log_info!("table2: {}", m.label());
-        let hmm = m.apply(&ctx.hmm);
+        // Score through the serving-shaped backend (same decode path
+        // the server runs); for Integer this is the dense qdq model.
+        let hmm = m.backend(&ctx.hmm);
         let cfg = DecodeConfig { act_bits: Some(b as u32), ..ctx.decode.clone() };
-        let (scores, _) = evaluate(&ctx.lm, &hmm, &ctx.corpus, &ctx.items, &cfg, ctx.threads);
+        let (scores, _) =
+            evaluate(&ctx.lm, hmm.as_ref(), &ctx.corpus, &ctx.items, &cfg, ctx.threads);
         rows.push(score_cells(&m.label(), &scores));
         json_rows.push(Json::obj(vec![
             ("method", Json::str(m.label())),

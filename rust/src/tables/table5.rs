@@ -50,8 +50,13 @@ pub fn run(args: &Args) -> Result<TableResult, String> {
     for &b in &bits {
         let m = Method::NormQ { bits: b as u32 };
         log_info!("table5 PTQ: {}", m.label());
-        let hmm = m.apply(&ctx.hmm);
-        let (scores, _) = evaluate(&ctx.lm, &hmm, &ctx.corpus, &ctx.items, &ctx.decode, ctx.threads);
+        // The sparse quantized backend itself — the sweep scores the
+        // exact representation the server decodes over, with no dense
+        // materialization (tests/decode_equivalence.rs pins that these
+        // scores match the dense dequantization of the same levels).
+        let hmm = m.backend(&ctx.hmm);
+        let (scores, _) =
+            evaluate(&ctx.lm, hmm.as_ref(), &ctx.corpus, &ctx.items, &ctx.decode, ctx.threads);
         // Compression rate over α and β (γ is negligible, as the paper).
         let rt = CompressionReport::of(&ctx.hmm.trans, b as u32);
         let re = CompressionReport::of(&ctx.hmm.emit, b as u32);

@@ -49,9 +49,11 @@ pub fn run(args: &Args) -> Result<TableResult, String> {
         for &b in &bits {
             let m = Method::NormQ { bits: b as u32 };
             log_info!("table6: H={hidden} {}", m.label());
-            let q = m.apply(&scaled);
+            // Sparse quantized backend: large-H rows decode over CSR
+            // levels, never a dense H×H dequantized copy.
+            let q = m.backend(&scaled);
             let (scores, _) =
-                evaluate(&ctx.lm, &q, &ctx.corpus, &ctx.items, &ctx.decode, ctx.threads);
+                evaluate(&ctx.lm, q.as_ref(), &ctx.corpus, &ctx.items, &ctx.decode, ctx.threads);
             rows.push(crate::tables::score_cells(&format!("H={hidden} Norm-Q {b}b"), &scores));
             json_rows.push(Json::obj(vec![
                 ("hidden", Json::num(hidden as f64)),

@@ -109,6 +109,71 @@ impl Mat {
         }
     }
 
+    /// Panel form of [`Mat::vecmat`]: `b` input vectors at once.
+    ///
+    /// `panel` holds `b` row vectors back to back (`panel[bi·rows ..
+    /// (bi+1)·rows]` is beam `bi`'s input) and `out` receives the `b`
+    /// results in the same layout. Each matrix row is streamed from
+    /// memory **once** and applied to all `b` columns of a
+    /// column-major `f64` accumulator panel (the `b` accumulators of
+    /// one output column are contiguous), instead of `b` times as `b`
+    /// independent `vecmat` calls would.
+    ///
+    /// Bit-identical to `b` independent [`Mat::vecmat`] calls: every
+    /// per-beam accumulator sees exactly the same additions in exactly
+    /// the same order (rows ascending, columns ascending, the same
+    /// `vr == 0.0` skip), only interleaved across beams — and no
+    /// accumulator is shared between beams. `tests` and
+    /// `tests/decode_equivalence.rs` assert this at the bit level.
+    pub fn vecmat_panel(&self, panel: &[f32], b: usize, out: &mut [f32]) {
+        assert_eq!(panel.len(), b * self.rows);
+        assert_eq!(out.len(), b * self.cols);
+        if b == 1 {
+            return self.vecmat(panel, out);
+        }
+        let mut acc = vec![0f64; b * self.cols];
+        let mut vr64 = vec![0f64; b];
+        let mut active: Vec<u32> = Vec::with_capacity(b);
+        for r in 0..self.rows {
+            active.clear();
+            for bi in 0..b {
+                let vr = panel[bi * self.rows + r];
+                if vr != 0.0 {
+                    vr64[bi] = vr as f64;
+                    active.push(bi as u32);
+                }
+            }
+            if active.is_empty() {
+                continue;
+            }
+            let row = self.row(r);
+            if active.len() == b {
+                // Every beam live (the common decode case): a plain
+                // rank-1 update with unit-stride inner loop.
+                for (c, &m) in row.iter().enumerate() {
+                    let mv = m as f64;
+                    let col = &mut acc[c * b..(c + 1) * b];
+                    for (a, &v) in col.iter_mut().zip(vr64.iter()) {
+                        *a += v * mv;
+                    }
+                }
+            } else {
+                for (c, &m) in row.iter().enumerate() {
+                    let mv = m as f64;
+                    let col = c * b;
+                    for &bi in &active {
+                        acc[col + bi as usize] += vr64[bi as usize] * mv;
+                    }
+                }
+            }
+        }
+        for bi in 0..b {
+            for c in 0..self.cols {
+                out[bi * self.cols + c] = acc[c * b + bi] as f32;
+            }
+        }
+    }
+
     /// out = self (rows x cols) @ v (cols). f64 accumulators.
     pub fn matvec(&self, v: &[f32], out: &mut [f32]) {
         assert_eq!(v.len(), self.cols);
@@ -206,6 +271,33 @@ mod tests {
         let mut out = vec![0.0; 2];
         m.matvec(&[1.0, 0.0, 1.0], &mut out);
         assert_eq!(out, vec![4.0, 10.0]);
+    }
+
+    #[test]
+    fn vecmat_panel_bit_identical_to_independent_vecmats() {
+        let mut rng = Rng::seeded(4);
+        // 13 rows / 29 cols: nothing lines up with any block size.
+        let m = Mat::random_stochastic(13, 29, 0.2, &mut rng);
+        for b in [1usize, 3, 8, 17] {
+            let mut panel = vec![0f32; b * m.rows];
+            for v in panel.iter_mut() {
+                // Mix in exact zeros so the vr == 0.0 skip is exercised.
+                *v = if rng.below(4) == 0 { 0.0 } else { rng.f32() };
+            }
+            let mut fused = vec![0f32; b * m.cols];
+            m.vecmat_panel(&panel, b, &mut fused);
+            for bi in 0..b {
+                let mut want = vec![0f32; m.cols];
+                m.vecmat(&panel[bi * m.rows..(bi + 1) * m.rows], &mut want);
+                for c in 0..m.cols {
+                    assert_eq!(
+                        fused[bi * m.cols + c].to_bits(),
+                        want[c].to_bits(),
+                        "b={b} bi={bi} c={c}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,245 @@
+//! Batch-composition invariance for the SoA decode engine.
+//!
+//! The batched engine's contract (see `normq::generate::engine`) is
+//! that co-residency is *invisible* to a request: its tokens and its
+//! score **bits** are identical whether its beams decode solo,
+//! co-batched with strangers, or split across steps by arrivals and
+//! cancellations mid-generation. These tests drive
+//! `engine::step_batch` through every composition the coordinator can
+//! produce and compare against the solo run (`decode_with_table`,
+//! itself proven bit-identical to the per-beam reference in
+//! `tests/decode_equivalence.rs`). Also covered: per-lane deadlines
+//! firing mid-batch, mid-generation cancellation, and the
+//! NaN-poisoned-panel regression mirroring the per-beam one from the
+//! weight-sparse-decode PR.
+
+use normq::data::Corpus;
+use normq::dfa::Dfa;
+use normq::generate::engine::{step_batch, EngineItem, RequestState};
+use normq::generate::{
+    decode_with_table, BuildOptions, ConstraintTable, DecodeConfig, Generation,
+};
+use normq::hmm::Hmm;
+use normq::lm::NgramLm;
+use normq::quant::QuantizedHmm;
+use normq::util::rng::Rng;
+
+struct Fixture {
+    corpus: Corpus,
+    lm: NgramLm,
+    q: QuantizedHmm,
+    cfg: DecodeConfig,
+}
+
+fn fixture() -> Fixture {
+    let corpus = Corpus::small(500);
+    let data = corpus.sample_token_corpus(400, 17);
+    let lm = NgramLm::train(&data, corpus.vocab.len());
+    let mut rng = Rng::seeded(0xBA7C);
+    let hmm = Hmm::random(10, corpus.vocab.len(), 0.3, 0.2, &mut rng);
+    let q = QuantizedHmm::from_hmm(&hmm, 8);
+    let cfg = DecodeConfig { beam: 4, max_tokens: 10, ..Default::default() };
+    Fixture { corpus, lm, q, cfg }
+}
+
+/// One request's constraint: keyword DFA + its table over the fixture
+/// backend.
+fn request(f: &Fixture, word: &str) -> (Dfa, ConstraintTable) {
+    let kw = f.corpus.vocab.id(word);
+    let dfa = Dfa::from_keywords(&[vec![kw]], f.corpus.vocab.len());
+    let table = ConstraintTable::build_with(&f.q, &dfa, f.cfg.max_tokens, &BuildOptions::default())
+        .expect("no deadline: build cannot be cancelled");
+    (dfa, table)
+}
+
+fn assert_same(a: &Generation, b: &Generation, ctx: &str) {
+    assert_eq!(a.tokens, b.tokens, "{ctx}: tokens diverged");
+    assert_eq!(
+        a.score.to_bits(),
+        b.score.to_bits(),
+        "{ctx}: score bits diverged ({} vs {})",
+        a.score,
+        b.score
+    );
+    assert_eq!(a.satisfied, b.satisfied, "{ctx}: satisfied diverged");
+    assert_eq!(a.timed_out, b.timed_out, "{ctx}: timed_out diverged");
+}
+
+/// Three requests with different DFAs co-batched from step 0 produce
+/// bit-identical results to each decoding alone.
+#[test]
+fn co_batched_requests_match_solo_decodes() {
+    let f = fixture();
+    let reqs: Vec<(Dfa, ConstraintTable)> = f
+        .corpus
+        .lexicon
+        .nouns
+        .iter()
+        .take(2)
+        .chain(f.corpus.lexicon.verbs.iter().take(1))
+        .map(|w| request(&f, w))
+        .collect();
+    let solo: Vec<Generation> = reqs
+        .iter()
+        .map(|(dfa, table)| decode_with_table(&f.lm, &f.q, dfa, table, &f.cfg))
+        .collect();
+
+    let mut states: Vec<RequestState> = reqs
+        .iter()
+        .map(|(dfa, _)| RequestState::new(&f.q, dfa, None))
+        .collect();
+    while states.iter().any(|s| !s.finished()) {
+        let mut items: Vec<EngineItem> = states
+            .iter_mut()
+            .zip(reqs.iter())
+            .map(|(state, (dfa, table))| EngineItem { dfa, table, state })
+            .collect();
+        step_batch(&f.lm, &f.q, &f.cfg, &mut items);
+    }
+    for (i, (state, (dfa, _))) in states.iter().zip(reqs.iter()).enumerate() {
+        assert_same(&state.generation(dfa), &solo[i], &format!("request {i}"));
+    }
+}
+
+/// A request that joins a batch mid-generation (staggered arrival) and
+/// one that drains after its co-resident finishes both match their
+/// solo runs — splitting steps across different batch compositions is
+/// invisible.
+#[test]
+fn staggered_arrivals_and_departures_match_solo() {
+    let f = fixture();
+    let (dfa_a, table_a) = request(&f, &f.corpus.lexicon.nouns[0]);
+    let (dfa_b, table_b) = request(&f, &f.corpus.lexicon.verbs[2]);
+    let solo_a = decode_with_table(&f.lm, &f.q, &dfa_a, &table_a, &f.cfg);
+    let solo_b = decode_with_table(&f.lm, &f.q, &dfa_b, &table_b, &f.cfg);
+
+    let mut a = RequestState::new(&f.q, &dfa_a, None);
+    let mut b = RequestState::new(&f.q, &dfa_b, None);
+    // A runs two steps alone before B arrives.
+    for _ in 0..2 {
+        let mut items = [EngineItem { dfa: &dfa_a, table: &table_a, state: &mut a }];
+        step_batch(&f.lm, &f.q, &f.cfg, &mut items);
+    }
+    // Then both co-decode; finished lanes may stay in the slice — the
+    // engine skips them — so B drains alone after A finishes.
+    while !a.finished() || !b.finished() {
+        let mut items = [
+            EngineItem { dfa: &dfa_a, table: &table_a, state: &mut a },
+            EngineItem { dfa: &dfa_b, table: &table_b, state: &mut b },
+        ];
+        step_batch(&f.lm, &f.q, &f.cfg, &mut items);
+    }
+    assert_same(&a.generation(&dfa_a), &solo_a, "staggered A");
+    assert_same(&b.generation(&dfa_b), &solo_b, "staggered B");
+}
+
+/// Cancelling one request mid-generation leaves its co-residents
+/// bit-identical to solo, and the cancelled lane itself matches a solo
+/// run cancelled at the same step (it keeps its best prefix and
+/// reports timed-out).
+#[test]
+fn cancellation_mid_generation_is_isolated() {
+    let f = fixture();
+    let (dfa_a, table_a) = request(&f, &f.corpus.lexicon.nouns[1]);
+    let (dfa_b, table_b) = request(&f, &f.corpus.lexicon.nouns[3]);
+    let solo_a = decode_with_table(&f.lm, &f.q, &dfa_a, &table_a, &f.cfg);
+    // The cancelled-lane oracle: a solo request stepped twice, then
+    // cancelled.
+    let mut oracle_b = RequestState::new(&f.q, &dfa_b, None);
+    for _ in 0..2 {
+        let mut items = [EngineItem { dfa: &dfa_b, table: &table_b, state: &mut oracle_b }];
+        step_batch(&f.lm, &f.q, &f.cfg, &mut items);
+    }
+    oracle_b.cancel();
+
+    let mut a = RequestState::new(&f.q, &dfa_a, None);
+    let mut b = RequestState::new(&f.q, &dfa_b, None);
+    let mut steps = 0;
+    while !a.finished() || !b.finished() {
+        let mut items = [
+            EngineItem { dfa: &dfa_a, table: &table_a, state: &mut a },
+            EngineItem { dfa: &dfa_b, table: &table_b, state: &mut b },
+        ];
+        step_batch(&f.lm, &f.q, &f.cfg, &mut items);
+        steps += 1;
+        if steps == 2 {
+            b.cancel();
+        }
+    }
+    assert_same(&a.generation(&dfa_a), &solo_a, "co-resident of a cancelled lane");
+    let gen_b = b.generation(&dfa_b);
+    assert!(gen_b.timed_out, "cancelled lane must report timed-out");
+    assert_same(&gen_b, &oracle_b.generation(&dfa_b), "cancelled lane vs solo-cancelled oracle");
+}
+
+/// A lane whose deadline has already expired times out on its first
+/// batch step without decoding, while its co-resident is unaffected —
+/// per-request deadlines are honored inside a shared batch.
+#[test]
+fn expired_lane_deadline_times_out_without_touching_co_residents() {
+    let f = fixture();
+    let (dfa_a, table_a) = request(&f, &f.corpus.lexicon.nouns[0]);
+    let (dfa_b, table_b) = request(&f, &f.corpus.lexicon.verbs[0]);
+    let solo_a = decode_with_table(&f.lm, &f.q, &dfa_a, &table_a, &f.cfg);
+
+    let mut a = RequestState::new(&f.q, &dfa_a, None);
+    let mut b = RequestState::new(&f.q, &dfa_b, Some(std::time::Instant::now()));
+    let mut first_step = true;
+    while !a.finished() || !b.finished() {
+        let mut items = [
+            EngineItem { dfa: &dfa_a, table: &table_a, state: &mut a },
+            EngineItem { dfa: &dfa_b, table: &table_b, state: &mut b },
+        ];
+        step_batch(&f.lm, &f.q, &f.cfg, &mut items);
+        if first_step {
+            assert!(b.finished(), "expired deadline must finish the lane on step one");
+            assert!(b.timed_out());
+            first_step = false;
+        }
+    }
+    assert_same(&a.generation(&dfa_a), &solo_a, "co-resident of a timed-out lane");
+    let gen_b = b.generation(&dfa_b);
+    assert!(gen_b.timed_out);
+    assert!(gen_b.tokens.is_empty(), "no step ran: {:?}", gen_b.tokens);
+    assert!(!gen_b.satisfied);
+}
+
+/// The NaN-poisoned-panel regression, mirroring the per-beam one: NaN
+/// emission entries poison every beam's acceptance weights in the
+/// fused panel sweep. The engine must drop the poisoned candidates
+/// (empty candidate set → clean finish), never panic a worker, and
+/// never emit out-of-vocab tokens — co-batched or solo.
+#[test]
+fn nan_poisoned_panel_does_not_panic_the_batched_engine() {
+    let f = fixture();
+    let mut rng = Rng::seeded(0x4A4);
+    let v = f.corpus.vocab.len();
+    let mut hmm = Hmm::random(8, v, 0.3, 0.2, &mut rng);
+    let kw = f.corpus.vocab.id(&f.corpus.lexicon.nouns[1]);
+    for h in 0..8 {
+        hmm.emit.set(h, kw, f32::NAN);
+    }
+    let dfa_a = Dfa::from_keywords(&[vec![kw]], v);
+    let kw_b = f.corpus.vocab.id(&f.corpus.lexicon.verbs[1]);
+    let dfa_b = Dfa::from_keywords(&[vec![kw_b]], v);
+    let table_a =
+        ConstraintTable::build_with(&hmm, &dfa_a, f.cfg.max_tokens, &BuildOptions::default())
+            .unwrap();
+    let table_b =
+        ConstraintTable::build_with(&hmm, &dfa_b, f.cfg.max_tokens, &BuildOptions::default())
+            .unwrap();
+    let mut a = RequestState::new(&hmm, &dfa_a, None);
+    let mut b = RequestState::new(&hmm, &dfa_b, None);
+    while !a.finished() || !b.finished() {
+        let mut items = [
+            EngineItem { dfa: &dfa_a, table: &table_a, state: &mut a },
+            EngineItem { dfa: &dfa_b, table: &table_b, state: &mut b },
+        ];
+        step_batch(&f.lm, &hmm, &f.cfg, &mut items);
+    }
+    let gen_a = a.generation(&dfa_a);
+    assert!(!gen_a.satisfied, "a NaN-poisoned model cannot plant keywords");
+    for gen in [gen_a, b.generation(&dfa_b)] {
+        assert!(gen.tokens.iter().all(|&t| t < v), "out-of-vocab token emitted");
+    }
+}

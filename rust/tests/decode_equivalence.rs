@@ -17,12 +17,24 @@
 //!   quality-lossless (paper Table II), so constraint satisfaction
 //!   must match the uncompressed model.
 
+//! PR 7 adds the **batched-engine battery**: `decode_with_table` now
+//! drives the structure-of-arrays panel engine, and must be
+//! *bit-identical* (tokens AND score bits) to the retained per-beam
+//! reference `decode_with_table_perbeam` across the full
+//! bits×sparsity×H×B matrix, plus the all-zero-row edge and the
+//! offline-sweep score pinning (Table II/V rows scored through
+//! `Method::backend` match the dense dequantization of the same
+//! levels).
+
 use normq::data::Corpus;
 use normq::dfa::Dfa;
-use normq::generate::{decode, DecodeConfig};
-use normq::hmm::Hmm;
+use normq::generate::{
+    decode, decode_with_table, decode_with_table_perbeam, BuildOptions, ConstraintTable,
+    DecodeConfig,
+};
+use normq::hmm::{Hmm, HmmBackend};
 use normq::lm::NgramLm;
-use normq::quant::QuantizedHmm;
+use normq::quant::{Method, QuantizedHmm};
 use normq::util::proptest::Prop;
 use normq::util::rng::Rng;
 
@@ -118,6 +130,129 @@ fn expired_deadline_times_out_on_both_backends() {
         assert!(gen.tokens.is_empty(), "{label} backend decoded anyway");
         assert!(!gen.satisfied);
     }
+}
+
+/// The tentpole contract: the batched SoA engine (now driving
+/// `decode_with_table`) is **bit-identical** — same tokens, same score
+/// *bits*, same satisfaction and timeout flags — to the per-beam
+/// reference `decode_with_table_perbeam`, across bit widths (3/8/12
+/// sparse quantized plus full-precision dense FP32), sparsity regimes,
+/// hidden sizes, beam widths B ∈ {1,3,8,17} (including B larger than
+/// the candidate pool), and activation-qdq on/off.
+#[test]
+fn batched_engine_bit_identical_to_perbeam_reference() {
+    let (corpus, lm) = corpus_and_lm();
+    Prop::new(12, 0xBA7C).run("decode-batched-vs-perbeam", |rng, _| {
+        let h = rng.range(4, 14);
+        let alpha = [0.05, 0.3, 1.0][rng.below_usize(3)];
+        let hmm = Hmm::random(h, corpus.vocab.len(), alpha, alpha, rng);
+        let bits = [3u32, 8, 12, 32][rng.below_usize(4)];
+        // bits == 32 means the uncompressed dense FP32 backend.
+        let model: Box<dyn HmmBackend> = if bits == 32 {
+            Box::new(hmm.clone())
+        } else {
+            Box::new(QuantizedHmm::from_hmm(&hmm, bits))
+        };
+        let act_bits = [None, Some(8)][rng.below_usize(2)];
+        let kw = corpus.vocab.id(&corpus.lexicon.nouns[rng.below_usize(4)]);
+        let dfa = Dfa::from_keywords(&[vec![kw]], corpus.vocab.len());
+        let max_tokens = 8;
+        let table = ConstraintTable::build_with(
+            model.as_ref(),
+            &dfa,
+            max_tokens,
+            &BuildOptions::default(),
+        )
+        .expect("no deadline: build cannot be cancelled");
+        for beam in [1usize, 3, 8, 17] {
+            let cfg = DecodeConfig { beam, max_tokens, act_bits, ..Default::default() };
+            let batched = decode_with_table(&lm, model.as_ref(), &dfa, &table, &cfg);
+            let perbeam = decode_with_table_perbeam(&lm, model.as_ref(), &dfa, &table, &cfg);
+            let ctx = format!("bits={bits} h={h} alpha={alpha} beam={beam} act={act_bits:?}");
+            assert_eq!(batched.tokens, perbeam.tokens, "{ctx}: tokens diverged");
+            assert_eq!(
+                batched.score.to_bits(),
+                perbeam.score.to_bits(),
+                "{ctx}: score bits diverged ({} vs {})",
+                batched.score,
+                perbeam.score
+            );
+            assert_eq!(batched.satisfied, perbeam.satisfied, "{ctx}");
+            assert_eq!(batched.timed_out, perbeam.timed_out, "{ctx}");
+        }
+    });
+}
+
+/// The all-zero-row edge through the *batched* path: a fully
+/// auto-pruned emission row must read as uniform inside the panel
+/// kernels exactly as it does in the per-beam ops, leaving the engine
+/// bit-identical to the reference.
+#[test]
+fn all_zero_emission_row_batched_matches_perbeam() {
+    let (corpus, lm) = corpus_and_lm();
+    let mut rng = Rng::seeded(0xA111);
+    let v = corpus.vocab.len();
+    let mut hmm = Hmm::random(6, v, 0.3, 0.2, &mut rng);
+    for c in 0..v {
+        hmm.emit.set(2, c, 1.0 / v as f32);
+    }
+    let q = QuantizedHmm::from_hmm(&hmm, 3);
+    assert_eq!(
+        q.emit.row_ptr[2], q.emit.row_ptr[3],
+        "uniform row must fully auto-prune at 3 bits"
+    );
+    let kw = corpus.vocab.id(&corpus.lexicon.nouns[0]);
+    let dfa = Dfa::from_keywords(&[vec![kw]], v);
+    let max_tokens = 10;
+    let table =
+        ConstraintTable::build_with(&q, &dfa, max_tokens, &BuildOptions::default()).unwrap();
+    for beam in [1usize, 4, 17] {
+        let cfg = DecodeConfig { beam, max_tokens, ..Default::default() };
+        let batched = decode_with_table(&lm, &q, &dfa, &table, &cfg);
+        let perbeam = decode_with_table_perbeam(&lm, &q, &dfa, &table, &cfg);
+        assert_eq!(batched.tokens, perbeam.tokens, "beam={beam}");
+        assert_eq!(batched.score.to_bits(), perbeam.score.to_bits(), "beam={beam}");
+    }
+}
+
+/// Offline-sweep regression pin (ROADMAP folded item): routing the
+/// table drivers through `Method::backend` must not move their scores.
+///
+/// - Table V path: the sparse `QuantizedHmm` backend scores exactly
+///   like the dense dequantization of the *same levels* (`to_hmm`) —
+///   same output text, same satisfaction, equal `Scores`.
+/// - Table II path: `Method::Integer.backend()` is the same dense qdq
+///   model `Method::apply` produces, so scores are trivially pinned.
+#[test]
+fn sweep_scores_through_backend_pin_to_dense_materialization() {
+    let (corpus, lm) = corpus_and_lm();
+    let data = corpus.sample_token_corpus(400, 17);
+    let mut rng = Rng::seeded(0x5C0E);
+    let mut hmm = Hmm::random(10, corpus.vocab.len(), 0.5, 0.5, &mut rng);
+    for _ in 0..3 {
+        hmm = normq::hmm::em::em_step(&hmm, &data, 4, 1e-9).0;
+    }
+    let items = corpus.eval_set(12, 1, 31);
+    let cfg = DecodeConfig { beam: 4, max_tokens: 12, ..Default::default() };
+
+    // Table V: sparse backend vs dense dequantization of the levels.
+    let q = QuantizedHmm::from_hmm(&hmm, 8);
+    let dense = q.to_hmm();
+    let (s_sparse, o_sparse) = normq::eval::evaluate(&lm, &q, &corpus, &items, &cfg, 4);
+    let (s_dense, o_dense) = normq::eval::evaluate(&lm, &dense, &corpus, &items, &cfg, 4);
+    for (a, b) in o_sparse.iter().zip(o_dense.iter()) {
+        assert_eq!(a.text, b.text, "item {}: sweep output moved", a.item);
+        assert_eq!(a.satisfied, b.satisfied, "item {}", a.item);
+    }
+    assert_eq!(s_sparse, s_dense, "Table V scores moved under the sparse backend");
+
+    // Table II: Integer's backend is its dense apply() model.
+    let m = Method::Integer { bits: 8 };
+    let via_backend = m.backend(&hmm);
+    let applied = m.apply(&hmm);
+    let (s_b, _) = normq::eval::evaluate(&lm, via_backend.as_ref(), &corpus, &items, &cfg, 4);
+    let (s_a, _) = normq::eval::evaluate(&lm, &applied, &corpus, &items, &cfg, 4);
+    assert_eq!(s_b, s_a, "Table II scores moved under Method::backend");
 }
 
 /// High bit widths are quality-lossless (paper Table II): a 12-bit
