@@ -19,17 +19,30 @@
 //! - **adaptive admission** — the queue capacity is left untuned
 //!   (4096) and `AdaptiveShed` alone derives its in-flight limit from
 //!   observed service time; served p99 lands near the delay budget.
+//! - **fleet_storm** — a 10× overload burst against the quality-tiered
+//!   replica fleet (8/4/3-bit ladder, degrade-don't-deny balancing)
+//!   vs a single-replica pure-shed baseline. Asserted, not just
+//!   measured: the fleet answers strictly more requests, every answer
+//!   is bit-identical to a solo server of the tier that produced it,
+//!   and the degraded-answer count exceeds the shed count.
+//!
+//! `fleet_storm` rows go to `BENCH_service.json` for the CI bench
+//! trajectory (diffed by `bench_gate`); `NORMQ_BENCH_QUICK=1` skips
+//! the print-only scenarios but always runs the gated storm.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Barrier, Mutex};
 use std::time::{Duration, Instant};
 
-use normq::coordinator::{ServeRequest, Server, ServerConfig};
+use normq::coordinator::fleet::{Fleet, FleetConfig, TierSpec};
+use normq::coordinator::{ServeRequest, Server, ServerConfig, TableBackend};
 use normq::data::Corpus;
 use normq::generate::DecodeConfig;
 use normq::hmm::Hmm;
 use normq::lm::NgramLm;
 use normq::service::{QuotaConfig, Service, SharedService, Stack};
+use normq::util::json::Json;
 use normq::util::rng::Rng;
 use normq::util::timer::{fmt_secs, Stats};
 
@@ -289,13 +302,255 @@ fn run_adaptive(corpus: &Corpus, budget: Duration, burst: usize) {
     );
 }
 
+/// The quality ladder the storm runs against, highest fidelity first.
+const STORM_TIERS: [u32; 3] = [8, 4, 3];
+
+/// Overload factor for the storm burst (10× the capacity unit).
+const STORM_OVERLOAD: usize = 10;
+
+/// One side of the storm comparison (fleet or pure-shed baseline).
+struct StormReport {
+    answered: usize,
+    shed: usize,
+    degraded: usize,
+    /// Answers whose text did not match the reference text of the tier
+    /// that claims to have produced them — must stay zero.
+    wrong: usize,
+    wall_ms: f64,
+}
+
+/// Fire `burst` clients through one shared barrier (maximum overlap:
+/// this is a storm, not a trickle) and check every answer against the
+/// per-tier reference texts. Even requests are premium (weight 2).
+fn drive_storm(
+    svc: &SharedService<ServeRequest, normq::coordinator::Response>,
+    concepts: &[Vec<String>],
+    burst: usize,
+    refs: &HashMap<(u32, usize), String>,
+) -> StormReport {
+    let answered = AtomicUsize::new(0);
+    let shed = AtomicUsize::new(0);
+    let degraded = AtomicUsize::new(0);
+    let wrong = AtomicUsize::new(0);
+    let barrier = Barrier::new(burst);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for i in 0..burst {
+            let group = i % concepts.len();
+            let group_concepts = &concepts[group];
+            let (answered, shed, degraded, wrong) = (&answered, &shed, &degraded, &wrong);
+            let barrier = &barrier;
+            scope.spawn(move || {
+                let mut req =
+                    ServeRequest::from_client(group_concepts.clone(), format!("storm-{i}"));
+                if i % 2 == 0 {
+                    req = req.with_weight(2);
+                }
+                barrier.wait();
+                match svc.call(req) {
+                    Ok(resp) => {
+                        answered.fetch_add(1, Ordering::Relaxed);
+                        if resp.degraded {
+                            degraded.fetch_add(1, Ordering::Relaxed);
+                        }
+                        match refs.get(&(resp.tier, group)) {
+                            Some(expect) if *expect == resp.text => {}
+                            _ => {
+                                wrong.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    Err(_) => {
+                        shed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    StormReport {
+        answered: answered.load(Ordering::Relaxed),
+        shed: shed.load(Ordering::Relaxed),
+        degraded: degraded.load(Ordering::Relaxed),
+        wrong: wrong.load(Ordering::Relaxed),
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    }
+}
+
+/// The gated storm scenario: tiered fleet vs pure-shed solo baseline
+/// under the same 10× burst. Returns the two `BENCH_service.json` rows
+/// (identity fields + `wall_ms` only — the answered/degraded counts
+/// vary run to run and are asserted here, not windowed by the gate).
+fn run_fleet_storm(corpus: &Corpus) -> Vec<Json> {
+    let burst = WORKERS * STORM_OVERLOAD;
+    let (lm, hmm) = build_model(corpus);
+    let decode = DecodeConfig { beam: 4, max_tokens: 12, ..Default::default() };
+    let concepts: Vec<Vec<String>> = (0..12)
+        .map(|i| vec![corpus.lexicon.nouns[i % corpus.lexicon.nouns.len()].clone()])
+        .collect();
+
+    // Reference texts: what a solo server of each tier answers for each
+    // group. Batch-composition invariance makes these the ground truth
+    // for any batching the storm produces.
+    let mut refs: HashMap<(u32, usize), String> = HashMap::new();
+    for &bits in &STORM_TIERS {
+        let cfg = ServerConfig {
+            workers: 2,
+            table_backend: TableBackend::Quantized { bits },
+            decode: decode.clone(),
+            ..Default::default()
+        };
+        let server = Server::start(Arc::clone(&lm), hmm.clone(), corpus.clone(), cfg);
+        for (group, c) in concepts.iter().enumerate() {
+            let resp = server
+                .call(ServeRequest::new(c.clone()))
+                .expect("reference decode failed");
+            refs.insert((bits, group), resp.text);
+        }
+        server.shutdown();
+    }
+
+    // Baseline: one 8-bit replica with a short queue and LoadShed —
+    // the pure deny-at-saturation policy.
+    let baseline = {
+        let cfg = ServerConfig {
+            workers: WORKERS,
+            queue_capacity: WORKERS * 2,
+            table_backend: TableBackend::Quantized { bits: 8 },
+            decode: decode.clone(),
+            ..Default::default()
+        };
+        let server = Arc::new(Server::start(Arc::clone(&lm), hmm.clone(), corpus.clone(), cfg));
+        let metrics = server.metrics_handle();
+        let svc: SharedService<ServeRequest, normq::coordinator::Response> = Arc::new(
+            Stack::new()
+                .load_shed(Arc::clone(&metrics))
+                .service(Arc::clone(&server)),
+        );
+        for c in &concepts {
+            let _ = svc.call(ServeRequest::new(c.clone()));
+        }
+        let report = drive_storm(&svc, &concepts, burst, &refs);
+        server.shutdown();
+        report
+    };
+
+    // Fleet: one replica per tier; the per-replica dispatch depth is
+    // sized so the three tiers together can hold the whole burst —
+    // overload resolves as spill-down (degraded answers), not sheds.
+    let fleet_report = {
+        let fleet_cfg = FleetConfig {
+            tiers: STORM_TIERS
+                .iter()
+                .map(|&bits| TierSpec { bits, replicas: 1 })
+                .collect(),
+            depth: 14,
+            base: ServerConfig {
+                workers: 2,
+                queue_capacity: 32,
+                decode: decode.clone(),
+                ..Default::default()
+            },
+            ..FleetConfig::default()
+        };
+        let fleet = Fleet::start(Arc::clone(&lm), &hmm, corpus, fleet_cfg);
+        // Warm every replica's table cache directly (the balancer would
+        // only warm whichever replicas it happens to pick).
+        for r in fleet.replicas() {
+            for c in &concepts {
+                let _ = r.server.call(ServeRequest::new(c.clone()));
+            }
+        }
+        let svc = fleet.service();
+        let report = drive_storm(&svc, &concepts, burst, &refs);
+        fleet.shutdown();
+        report
+    };
+
+    println!("\n== fleet_storm: {STORM_OVERLOAD}x burst, tiered fleet vs pure shed ==");
+    println!(
+        "{:<10} {:>8} {:>6} {:>9} {:>6} {:>9}",
+        "config", "answered", "shed", "degraded", "wrong", "wall"
+    );
+    for (label, r) in [("pure_shed", &baseline), ("fleet", &fleet_report)] {
+        println!(
+            "{label:<10} {:>8} {:>6} {:>9} {:>6} {:>8.0}ms",
+            r.answered, r.shed, r.degraded, r.wrong, r.wall_ms
+        );
+    }
+    assert_eq!(
+        baseline.wrong + fleet_report.wrong,
+        0,
+        "a response was not bit-identical to its tier's solo reference"
+    );
+    assert!(
+        fleet_report.answered > baseline.answered,
+        "tiered fleet must answer strictly more than pure shed: fleet={} baseline={}",
+        fleet_report.answered,
+        baseline.answered
+    );
+    assert!(
+        fleet_report.degraded > fleet_report.shed,
+        "overload must resolve by degrading, not shedding: degraded={} shed={}",
+        fleet_report.degraded,
+        fleet_report.shed
+    );
+    println!(
+        "degrade-don't-deny: every answer bit-identical to its tier; \
+         fleet {} > baseline {} answered, {} degraded vs {} shed",
+        fleet_report.answered, baseline.answered, fleet_report.degraded, fleet_report.shed
+    );
+
+    // Only stable identity fields plus the measured wall time: the
+    // bench gate treats every non-`*_ms` field as scenario identity.
+    [("pure_shed", &baseline), ("fleet", &fleet_report)]
+        .into_iter()
+        .map(|(label, r)| {
+            Json::obj(vec![
+                ("scenario", Json::str("fleet_storm")),
+                ("config", Json::str(label)),
+                ("overload", Json::num(STORM_OVERLOAD as f64)),
+                ("workers", Json::num(WORKERS as f64)),
+                ("requests", Json::num(burst as f64)),
+                ("wall_ms", Json::num(r.wall_ms)),
+            ])
+        })
+        .collect()
+}
+
 fn main() {
-    println!("== bench_service: overload p50/p99, load-shed on vs off ==");
+    normq::util::logging::init_from_env();
+    let quick = std::env::var("NORMQ_BENCH_QUICK").is_ok_and(|v| v != "0" && !v.is_empty());
     let corpus = Corpus::small(900);
+    if quick {
+        println!("== bench_service (quick): fleet_storm only ==");
+    } else {
+        print_scenarios(&corpus);
+    }
+    let rows = run_fleet_storm(&corpus);
+    let n_rows = rows.len();
+    let json = Json::obj(vec![
+        ("bench", Json::str("service")),
+        ("quick", Json::Bool(quick)),
+        ("scenarios", Json::arr(rows)),
+    ])
+    .to_string();
+    match std::fs::write("BENCH_service.json", &json) {
+        Ok(()) => println!("[bench_service] wrote BENCH_service.json ({n_rows} scenarios)"),
+        Err(e) => {
+            eprintln!("[bench_service] FAILED writing BENCH_service.json: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// The print-only scenarios (full mode): shed on/off, mixed fairness,
+/// adaptive admission.
+fn print_scenarios(corpus: &Corpus) {
+    println!("== bench_service: overload p50/p99, load-shed on vs off ==");
 
     // Measure single-request service time to express bursts as
     // multiples of pool capacity.
-    let (lm, hmm) = build_model(&corpus);
+    let (lm, hmm) = build_model(corpus);
     let cfg = ServerConfig {
         workers: WORKERS,
         decode: DecodeConfig { beam: 4, max_tokens: 12, ..Default::default() },
@@ -324,7 +579,7 @@ fn main() {
     for overload in [2usize, 4, 8] {
         let burst = WORKERS * overload;
         for with_shed in [false, true] {
-            let r = run_config(&corpus, with_shed, burst);
+            let r = run_config(corpus, with_shed, burst);
             let (p50, p99, max) = r
                 .stats
                 .map(|s| (fmt_secs(s.p50), fmt_secs(s.p99), fmt_secs(s.max)))
@@ -359,7 +614,7 @@ fn main() {
         ("fifo", MixedMode::Fifo),
         ("fair+quota", MixedMode::Fair),
     ] {
-        let r = run_mixed(&corpus, mode);
+        let r = run_mixed(corpus, mode);
         let (p50, p99, max) = r
             .light_stats
             .map(|s| {
@@ -386,7 +641,7 @@ fn main() {
 
     println!("\n== adaptive admission: untuned queue, limit from Little's law ==");
     let budget = Duration::from_secs_f64((service_time * 4.0).max(0.01));
-    run_adaptive(&corpus, budget, WORKERS * 8);
+    run_adaptive(corpus, budget, WORKERS * 8);
     println!(
         "served p99 tracks the delay budget with queue_capacity left at 4096:\n\
          the in-flight limit is derived from observed service time, not hand-tuned."

@@ -1,0 +1,246 @@
+//! The quality-tiered replica fleet: many [`Server`]s, one service.
+//!
+//! Norm-Q makes bit width a quality knob (8-bit lossless, 3-bit still
+//! acceptable — PAPER.md Tables II/V), and this module turns that knob
+//! into a serving topology. [`Fleet::start`] boots one group of
+//! [`Server`] replicas per tier of a bit-width ladder (default
+//! `8,4,3`), each replica a full coordinator — own queue, dispatcher,
+//! build pool, decode workers — pinned to
+//! [`TableBackend::for_bits`](super::TableBackend::for_bits) of its
+//! tier. In front of the replicas the fleet composes, inside-out:
+//!
+//! 1. a [`FaultPoint`] per replica — the fault-injection hook tests
+//!    use to simulate device loss;
+//! 2. a [`Breaker`] per replica — repeated failures take the replica
+//!    out of rotation with half-open probing;
+//! 3. one [`Balance`] — weight-steered entry tier, power-of-two-choices
+//!    within a tier, degrade-don't-deny spill across tiers;
+//! 4. one [`RetryBudget`] — budget-capped retries that re-run replica
+//!    selection, so a failure on one replica is retried elsewhere.
+//!
+//! Replicas of the same tier share one persistent artifact store (a
+//! per-tier subdirectory of `base.spill_dir`): their table artifacts
+//! carry the same model digest, so one replica's cold build warms its
+//! siblings, and a restart warm-starts every replica of the tier from
+//! the shared directory.
+//!
+//! All fleet-level counters (`fleet_*`, `breaker_*`, `retries`,
+//! `retry_exhausted`) land in the fleet's own [`Metrics`] registry;
+//! each replica keeps its own registry for per-replica depth
+//! ([`Fleet::tier_summary`] renders both).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::data::Corpus;
+use crate::hmm::Hmm;
+use crate::lm::LanguageModel;
+use crate::service::{
+    Balance, Breaker, FaultInjector, FaultPoint, Readiness, RetryBudget, Service, ServiceError,
+    SharedService,
+};
+
+use super::metrics::Metrics;
+use super::store::TableStore;
+use super::{Response, ServeRequest, Server, ServerConfig, TableBackend};
+
+/// One rung of the quality ladder: a bit width and how many replicas
+/// serve it.
+#[derive(Clone, Copy, Debug)]
+pub struct TierSpec {
+    /// Quantization bit width (32 = dense FP32).
+    pub bits: u32,
+    /// Replica count for this tier.
+    pub replicas: usize,
+}
+
+/// Fleet topology and middleware tuning; see [`Fleet::start`].
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// The quality ladder, highest fidelity first. Defaults to one
+    /// replica each of 8-bit (premium), 4-bit (standard) and 3-bit
+    /// (economy).
+    pub tiers: Vec<TierSpec>,
+    /// Client weight at or above which a request enters at the top
+    /// tier (CLI `--premium-weight`).
+    pub premium_weight: u32,
+    /// Per-replica concurrent-dispatch cap in the balancer; above it a
+    /// replica is ineligible and the request spills down-tier.
+    pub depth: usize,
+    /// Consecutive failures that open a replica's breaker.
+    pub breaker_threshold: u32,
+    /// How long an open breaker holds its replica out of rotation
+    /// before a half-open probe.
+    pub breaker_cooldown: Duration,
+    /// Retry-budget deposit per initial call (CLI `--retry-budget`):
+    /// the steady-state fraction of traffic that may be retried.
+    pub retry_budget: f64,
+    /// Retries per request once the budget allows any.
+    pub max_retries: u32,
+    /// Per-replica coordinator config. `table_backend` is overridden
+    /// per tier; `spill_dir` is reinterpreted as the *root* under which
+    /// each tier gets its own shared subdirectory.
+    pub base: ServerConfig,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            tiers: vec![
+                TierSpec { bits: 8, replicas: 1 },
+                TierSpec { bits: 4, replicas: 1 },
+                TierSpec { bits: 3, replicas: 1 },
+            ],
+            premium_weight: 2,
+            depth: 8,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(500),
+            retry_budget: 0.1,
+            max_retries: 1,
+            base: ServerConfig::default(),
+        }
+    }
+}
+
+/// One booted replica: its tier, the coordinator itself, and the
+/// fault-injection handle wired between the coordinator and its
+/// breaker.
+pub struct ReplicaHandle {
+    /// The tier's bit width.
+    pub tier: u32,
+    /// The replica's coordinator (kept for shutdown, per-replica
+    /// metrics, and direct warm-up calls that bypass the balancer).
+    pub server: Arc<Server>,
+    /// Arm to make this replica fail every call (simulated device
+    /// loss) until disarmed; its breaker then takes it out of rotation.
+    pub fault: FaultInjector,
+}
+
+/// The assembled fleet; see the [module docs](self).
+pub struct Fleet {
+    svc: SharedService<ServeRequest, Response>,
+    replicas: Vec<ReplicaHandle>,
+    metrics: Arc<Metrics>,
+}
+
+impl Fleet {
+    /// Boot every replica of every tier and assemble the routing stack.
+    /// Each replica re-quantizes its own copy of `hmm` at its tier's
+    /// bit width, exactly as a solo [`Server::start`] at that backend
+    /// would — which is why per-tier responses stay bit-identical to a
+    /// solo server of the tier.
+    pub fn start(
+        lm: Arc<dyn LanguageModel>,
+        hmm: &Hmm,
+        corpus: &Corpus,
+        cfg: FleetConfig,
+    ) -> Fleet {
+        let metrics = Arc::new(Metrics::new());
+        let mut balance: Balance<SharedService<ServeRequest, Response>> =
+            Balance::new(Arc::clone(&metrics))
+                .with_premium_weight(cfg.premium_weight)
+                .with_depth(cfg.depth);
+        let mut replicas = Vec::new();
+        for tier in &cfg.tiers {
+            // One shared artifact store per tier: same backend, same
+            // digest, so siblings exchange warm tables safely.
+            let store = cfg.base.spill_dir.as_ref().and_then(|root| {
+                let dir = root.join(format!("tier-{}", tier.bits));
+                match TableStore::open(&dir, cfg.base.spill_budget_bytes) {
+                    Ok(s) => Some(Arc::new(s)),
+                    Err(e) => {
+                        crate::log_warn!(
+                            "tier {} spill tier disabled: cannot open {}: {e}",
+                            tier.bits,
+                            dir.display()
+                        );
+                        None
+                    }
+                }
+            });
+            for _ in 0..tier.replicas.max(1) {
+                let mut replica_cfg = cfg.base.clone();
+                replica_cfg.table_backend = TableBackend::for_bits(tier.bits);
+                // The store (when any) is owned here; the replica must
+                // not open the root directory on its own.
+                replica_cfg.spill_dir = None;
+                let server = Arc::new(Server::start_with_store(
+                    Arc::clone(&lm),
+                    hmm.clone(),
+                    corpus.clone(),
+                    replica_cfg,
+                    store.clone(),
+                ));
+                let fault = FaultInjector::new();
+                let guarded = Breaker::new(
+                    FaultPoint::new(Arc::clone(&server), fault.clone()),
+                    Arc::clone(&metrics),
+                )
+                .with_threshold(cfg.breaker_threshold)
+                .with_cooldown(cfg.breaker_cooldown);
+                let erased: SharedService<ServeRequest, Response> = Arc::new(guarded);
+                balance.register(tier.bits, erased);
+                replicas.push(ReplicaHandle { tier: tier.bits, server, fault });
+            }
+        }
+        let routed = RetryBudget::new(balance, Arc::clone(&metrics))
+            .with_ratio(cfg.retry_budget)
+            .with_max_retries(cfg.max_retries);
+        Fleet { svc: Arc::new(routed), replicas, metrics }
+    }
+
+    /// The fleet as a type-erased service, for composing an admission
+    /// stack in front of it.
+    pub fn service(&self) -> SharedService<ServeRequest, Response> {
+        Arc::clone(&self.svc)
+    }
+
+    /// The fleet-level metrics registry (routing, breakers, retries).
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// A shareable handle to the fleet-level registry.
+    pub fn metrics_handle(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// The booted replicas, in registration order (tiers as configured,
+    /// replicas of a tier consecutive).
+    pub fn replicas(&self) -> &[ReplicaHandle] {
+        &self.replicas
+    }
+
+    /// One summary line per replica, prefixed with its tier — the
+    /// per-replica counterpart of the fleet registry's
+    /// [`Metrics::summary`].
+    pub fn tier_summary(&self) -> String {
+        self.replicas
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                format!("tier {} replica {}: {}", r.tier, i, r.server.metrics().summary())
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// Shut down every replica (idempotent; in-flight requests drain).
+    pub fn shutdown(&self) {
+        for r in &self.replicas {
+            r.server.shutdown();
+        }
+    }
+}
+
+impl Service<ServeRequest> for Fleet {
+    type Response = Response;
+
+    fn poll_ready(&self) -> Readiness {
+        self.svc.poll_ready()
+    }
+
+    fn call(&self, req: ServeRequest) -> Result<Response, ServiceError> {
+        self.svc.call(req)
+    }
+}

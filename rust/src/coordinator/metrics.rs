@@ -267,6 +267,26 @@ pub struct Metrics {
     /// Gauge: the in-flight limit `AdaptiveShed` most recently derived
     /// from observed service time (Little's law).
     pub adaptive_limit: AtomicU64,
+    /// Requests the fleet balancer dispatched to a replica (any tier).
+    pub fleet_routed: AtomicU64,
+    /// Fleet dispatches served *below* the request's entry tier
+    /// (spill-down); the degrade-don't-deny counterpart of `fleet_shed`.
+    pub fleet_degraded: AtomicU64,
+    /// Requests the fleet balancer shed because no replica in any tier
+    /// was eligible.
+    pub fleet_shed: AtomicU64,
+    /// Circuit-breaker transitions into open (threshold reached, or a
+    /// half-open probe failed).
+    pub breaker_trips: AtomicU64,
+    /// Half-open probes admitted after a breaker cooldown.
+    pub breaker_probes: AtomicU64,
+    /// Calls fast-failed by an open (or probing) breaker without
+    /// touching the replica.
+    pub breaker_rejected: AtomicU64,
+    /// Retries dispatched by the `RetryBudget` middleware.
+    pub retries: AtomicU64,
+    /// Failures returned as-is because the retry budget was empty.
+    pub retry_exhausted: AtomicU64,
     /// Approximate intake-queue depth (requests accepted but not yet
     /// picked up by the dispatcher).
     pub queue_depth: AtomicU64,
@@ -343,6 +363,14 @@ impl Metrics {
             fair_shed: AtomicU64::new(0),
             adaptive_shed: AtomicU64::new(0),
             adaptive_limit: AtomicU64::new(0),
+            fleet_routed: AtomicU64::new(0),
+            fleet_degraded: AtomicU64::new(0),
+            fleet_shed: AtomicU64::new(0),
+            breaker_trips: AtomicU64::new(0),
+            breaker_probes: AtomicU64::new(0),
+            breaker_rejected: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            retry_exhausted: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
             in_flight: AtomicU64::new(0),
             clients: RwLock::new(HashMap::new()),
@@ -500,7 +528,7 @@ impl Metrics {
             })
             .unwrap_or_else(|| "latency n/a".into());
         format!(
-            "submitted={} completed={} rejected={} shed={} quota_denied={} fair_shed={} adaptive_shed={} adaptive_limit={} timed_out={} hedged={} hedge_wins={} satisfied={} cache h/m={}/{} joins={} builds={} table_build_ms={:.1} build_queue_ms={:.1} builds_inflight={} build_waiting={} build_failed={} table_bytes={} spill h/w={}/{} spill_rejected={} spill_corrupt={} spill_bytes={} warm={} {}",
+            "submitted={} completed={} rejected={} shed={} quota_denied={} fair_shed={} adaptive_shed={} adaptive_limit={} timed_out={} hedged={} hedge_wins={} satisfied={} cache h/m={}/{} joins={} builds={} table_build_ms={:.1} build_queue_ms={:.1} builds_inflight={} build_waiting={} build_failed={} table_bytes={} spill h/w={}/{} spill_rejected={} spill_corrupt={} spill_bytes={} warm={} fleet_routed={} fleet_degraded={} fleet_shed={} breaker_trips={} breaker_probes={} breaker_rejected={} retries={} retry_exhausted={} {}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -529,6 +557,14 @@ impl Metrics {
             self.spill_corrupt.load(Ordering::Relaxed),
             self.spill_bytes.load(Ordering::Relaxed),
             self.warm_started.load(Ordering::Relaxed),
+            self.fleet_routed.load(Ordering::Relaxed),
+            self.fleet_degraded.load(Ordering::Relaxed),
+            self.fleet_shed.load(Ordering::Relaxed),
+            self.breaker_trips.load(Ordering::Relaxed),
+            self.breaker_probes.load(Ordering::Relaxed),
+            self.breaker_rejected.load(Ordering::Relaxed),
+            self.retries.load(Ordering::Relaxed),
+            self.retry_exhausted.load(Ordering::Relaxed),
             lat
         )
     }

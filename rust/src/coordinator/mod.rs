@@ -50,6 +50,7 @@
 
 pub mod buildpool;
 pub mod cache;
+pub mod fleet;
 pub mod metrics;
 pub mod store;
 
@@ -105,6 +106,30 @@ pub enum TableBackend {
         /// Bits per stored level.
         bits: u32,
     },
+}
+
+impl TableBackend {
+    /// The backend's effective bit width: the quantization level, or 32
+    /// for the dense FP32 path. This is the number the fleet's tier
+    /// ladder and every [`Response::tier`] stamp are expressed in.
+    pub fn bits(&self) -> u32 {
+        match self {
+            TableBackend::Dense => 32,
+            TableBackend::Quantized { bits } => *bits,
+        }
+    }
+
+    /// The backend serving at `bits`: `Dense` for 32 (and anything
+    /// wider), `Quantized { bits }` otherwise — the inverse of
+    /// [`TableBackend::bits`], used when a tier ladder like `8,4,3` is
+    /// turned into replica configs.
+    pub fn for_bits(bits: u32) -> TableBackend {
+        if bits >= 32 {
+            TableBackend::Dense
+        } else {
+            TableBackend::Quantized { bits }
+        }
+    }
 }
 
 /// The client id stamped on requests that never declared one.
@@ -209,6 +234,13 @@ pub struct Response {
     pub latency: Duration,
     /// The part of `latency` spent waiting for dispatch.
     pub queue_wait: Duration,
+    /// Bit width of the backend that served the request — the server's
+    /// own [`TableBackend::bits`], overwritten by the fleet balancer
+    /// with the tier that actually answered.
+    pub tier: u32,
+    /// Stamped by the fleet balancer when the request was served below
+    /// its entry tier (spill-down). A solo server never degrades.
+    pub degraded: bool,
 }
 
 impl Expirable for Response {
@@ -220,6 +252,16 @@ impl Expirable for Response {
 impl crate::service::Queued for Response {
     fn queue_wait(&self) -> Duration {
         self.queue_wait
+    }
+}
+
+impl crate::service::Tiered for Response {
+    fn tier(&self) -> u32 {
+        self.tier
+    }
+    fn set_route(&mut self, tier: u32, degraded: bool) {
+        self.tier = tier;
+        self.degraded = degraded;
     }
 }
 
@@ -328,6 +370,22 @@ pub struct Server {
 impl Server {
     /// Spawn the dispatcher and decode workers and start serving.
     pub fn start(lm: Arc<dyn LanguageModel>, hmm: Hmm, corpus: Corpus, cfg: ServerConfig) -> Server {
+        Server::start_with_store(lm, hmm, corpus, cfg, None)
+    }
+
+    /// [`Server::start`] with an externally owned artifact store. The
+    /// fleet uses this to share one spill directory between replicas of
+    /// the same tier: every same-backend replica reads and writes the
+    /// same digest-validated artifacts, so one replica's cold build
+    /// warms its siblings. When `store` is `None` the server opens
+    /// `cfg.spill_dir` itself (or runs without a disk tier).
+    pub fn start_with_store(
+        lm: Arc<dyn LanguageModel>,
+        hmm: Hmm,
+        corpus: Corpus,
+        cfg: ServerConfig,
+        store: Option<Arc<TableStore>>,
+    ) -> Server {
         let metrics = Arc::new(Metrics::new());
         let queue_capacity = cfg.queue_capacity;
         // With a quantized backend the dense matrices are consumed
@@ -342,14 +400,16 @@ impl Server {
         let model_digest = store::model_fingerprint(&*model)
             ^ (cfg.decode.max_tokens as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
         let mut tables = LruCache::new(cfg.table_cache_bytes);
-        let artifact_store = cfg.spill_dir.as_ref().and_then(|dir| {
-            match TableStore::open(dir, cfg.spill_budget_bytes) {
-                Ok(s) => Some(Arc::new(s)),
-                Err(e) => {
-                    crate::log_warn!("spill tier disabled: cannot open {}: {e}", dir.display());
-                    None
+        let artifact_store = store.or_else(|| {
+            cfg.spill_dir.as_ref().and_then(|dir| {
+                match TableStore::open(dir, cfg.spill_budget_bytes) {
+                    Ok(s) => Some(Arc::new(s)),
+                    Err(e) => {
+                        crate::log_warn!("spill tier disabled: cannot open {}: {e}", dir.display());
+                        None
+                    }
                 }
-            }
+            })
         });
         if let Some(s) = &artifact_store {
             // Warm start: every artifact in the spill directory that
@@ -617,6 +677,8 @@ fn answer_unserved(shared: &Shared, req: Request, why: Unserved) {
         failed: matches!(why, Unserved::Failed),
         latency: waited,
         queue_wait: waited,
+        tier: shared.cfg.table_backend.bits(),
+        degraded: false,
     });
 }
 
@@ -1124,6 +1186,8 @@ fn finish_request(
         failed: false,
         latency,
         queue_wait,
+        tier: shared.cfg.table_backend.bits(),
+        degraded: false,
     });
 }
 

@@ -20,7 +20,9 @@
 //! The layer design, the request lifecycle from stack entry through
 //! fair queueing, decode and response, and the middleware-ordering
 //! rationale are documented in `ARCHITECTURE.md` at the repository
-//! root.
+//! root. Operator docs live in `docs/`: `docs/OPERATIONS.md` is the
+//! serve-flag tuning runbook and `docs/METRICS.md` the glossary for
+//! every counter in the metrics summary.
 //!
 //! ## Module map (request path, outside in)
 //!
@@ -28,14 +30,18 @@
 //!   coordinator: `Service`/`Layer` traits; quota, adaptive-shed,
 //!   load-shed, rate-limit, fair-queue, concurrency-limit, timeout
 //!   (deadline propagation) and hedging middlewares, composed with
-//!   `service::Stack`.
+//!   `service::Stack`; plus the fleet's routing layers — the
+//!   quality-tiered `Balance`r, per-replica circuit `Breaker` (with
+//!   fault injection) and the budget-capped `RetryBudget`.
 //! - [`coordinator`] — bounded intake queue, concept-set batching
 //!   dispatcher, the asynchronous table-build pipeline (singleflight
 //!   table cache + dedicated build pool), the persistent table-artifact
 //!   store (checksummed on-disk spill tier + boot warm start), decode
 //!   worker pool, and
 //!   serving metrics (global and per-client). The `Server` implements
-//!   `service::Service` and sits at the bottom of the stack.
+//!   `service::Service` and sits at the bottom of the stack — solo, or
+//!   replicated across a bit-width quality ladder by
+//!   `coordinator::fleet::Fleet` (degrade-don't-deny balancing).
 //! - [`generate`] — the constrained beam decoder (honors per-request
 //!   deadlines via `DecodeConfig::deadline`, including during
 //!   constraint-table construction), and the sparsity-aware

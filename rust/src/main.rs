@@ -9,6 +9,7 @@
 
 use std::sync::Arc;
 
+use normq::coordinator::fleet::{Fleet, FleetConfig, TierSpec};
 use normq::coordinator::{
     Response as CoordResponse, ServeRequest, Server, ServerConfig, TableBackend,
 };
@@ -38,6 +39,8 @@ USAGE:
               [--timeout-ms MS] [--hedge-ms MS] [--table-bits B]
               [--table-cache-mb MB] [--table-threads N] [--build-threads N]
               [--spill-dir DIR] [--spill-budget-mb MB]
+              [--tiers 8,4,3] [--replicas N] [--retry-budget R]
+              [--premium-weight W]
   normq smoke [--artifacts DIR]
   normq corpus [--n N] [--eval]
 
@@ -74,6 +77,18 @@ turns RAM-cache evictions into disk spills: misses probe the
 directory before building, and a restart warm-starts from it with
 zero cold builds for digest-matching groups; --spill-budget-mb bounds
 the directory (LRU file eviction, default 256).
+
+Replica fleet (serve): --tiers B1,B2,.. replaces the solo coordinator
+with a quality-tiered replica fleet — one replica group per listed bit
+width (--replicas per tier, default 1), each a full coordinator pinned
+to that backend, fronted by a weight-steered power-of-two-choices
+balancer. Premium clients (weight >= --premium-weight, default 2)
+enter at the first tier; others one tier down. Saturated tiers spill
+requests DOWN the ladder (responses are marked degraded) instead of
+shedding. Each replica sits behind a circuit breaker; retries are
+budget-capped at --retry-budget (fraction of traffic, default 0.1).
+Same-tier replicas share one spill subdirectory under --spill-dir.
+See docs/OPERATIONS.md for the full tuning runbook.
 ";
 
 fn main() {
@@ -89,7 +104,8 @@ fn main() {
         "workers", "artifacts", "n", "out", "heatmap", "queue", "clients", "client-ids", "climit",
         "rate", "burst", "quota", "quota-burst", "fair", "fair-queue", "delay-budget-ms",
         "timeout-ms", "hedge-ms", "table-bits", "table-cache-mb", "table-threads",
-        "build-threads", "spill-dir", "spill-budget-mb",
+        "build-threads", "spill-dir", "spill-budget-mb", "tiers", "replicas", "retry-budget",
+        "premium-weight",
     ]);
     let args = match Args::parse(&argv, &value_keys) {
         Ok(a) => a,
@@ -202,8 +218,63 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         },
         ..Default::default()
     };
-    let server = Arc::new(Server::start(lm, hmm, ctx.corpus.clone(), cfg));
-    let metrics = server.metrics_handle();
+    // With --tiers the solo coordinator is replaced by the replica
+    // fleet: one replica group per bit width, breaker-guarded, behind
+    // the weight-steered degrade-don't-deny balancer and retry budget.
+    let premium_weight = args.usize("premium-weight", 2)? as u32;
+    let fleet_cfg = match args.get("tiers") {
+        Some(spec) => {
+            let replicas = args.usize("replicas", 1)?.max(1);
+            let mut tiers = Vec::new();
+            for part in spec.split(',') {
+                let bits: u32 = part.trim().parse().map_err(|_| {
+                    format!("--tiers expects a comma list of bit widths, got {spec:?}")
+                })?;
+                if !(1..=32).contains(&bits) {
+                    return Err(format!("--tiers expects bit widths in 1..=32, got {bits}"));
+                }
+                tiers.push(TierSpec { bits, replicas });
+            }
+            let retry_budget = args.f64("retry-budget", 0.1)?;
+            if !(0.0..=1.0).contains(&retry_budget) {
+                return Err(format!("--retry-budget expects 0..=1, got {retry_budget}"));
+            }
+            Some(FleetConfig {
+                tiers,
+                premium_weight,
+                retry_budget,
+                base: cfg.clone(),
+                ..FleetConfig::default()
+            })
+        }
+        None => None,
+    };
+    let mut fleet_handle: Option<Arc<Fleet>> = None;
+    let mut server_handle: Option<Arc<Server>> = None;
+    let metrics;
+    let mut svc: SharedService<ServeRequest, CoordResponse>;
+    if let Some(fcfg) = fleet_cfg {
+        let ladder: Vec<String> = fcfg
+            .tiers
+            .iter()
+            .map(|t| format!("{}b x{}", t.bits, t.replicas))
+            .collect();
+        log_info!(
+            "replica fleet: {} (premium weight >= {}, retry budget {})",
+            ladder.join(" -> "),
+            fcfg.premium_weight,
+            fcfg.retry_budget
+        );
+        let fleet = Arc::new(Fleet::start(lm, &hmm, &ctx.corpus, fcfg));
+        metrics = fleet.metrics_handle();
+        svc = fleet.service();
+        fleet_handle = Some(fleet);
+    } else {
+        let server = Arc::new(Server::start(lm, hmm, ctx.corpus.clone(), cfg));
+        metrics = server.metrics_handle();
+        svc = Arc::new(Arc::clone(&server));
+        server_handle = Some(server);
+    }
 
     // Admission-control stack, innermost (coordinator) outward; flags
     // choose the layers, so compose dynamically via the shared handle.
@@ -213,7 +284,6 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     // timeout sits outside the queueing layers so the stamped deadline
     // covers queue wait.
     let clients = args.usize("clients", (workers * 2).max(2))?;
-    let mut svc: SharedService<ServeRequest, CoordResponse> = Arc::new(Arc::clone(&server));
     let mut layers = Vec::new();
     if let Some(delay) = args.opt_duration_ms("hedge-ms")? {
         // Pool sized for primary + hedge per concurrent client, so the
@@ -269,10 +339,19 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     }
 
     let client_ids = args.usize("client-ids", 1)?.max(1);
+    // Under a fleet, every 4th request is a premium client so the tier
+    // steering is visible in the built-in driver.
+    let fleet_mode = fleet_handle.is_some();
     let t0 = std::time::Instant::now();
     let results = normq::service::drive_closed_loop(&svc, clients, n_requests, |i| {
         let item = &ctx.items[i % ctx.items.len()];
-        ServeRequest::from_client(item.concepts.clone(), format!("client-{}", i % client_ids))
+        let req =
+            ServeRequest::from_client(item.concepts.clone(), format!("client-{}", i % client_ids));
+        if fleet_mode && i % 4 == 0 {
+            req.with_weight(premium_weight)
+        } else {
+            req
+        }
     });
     let wall = t0.elapsed().as_secs_f64();
     let ok = results.iter().filter(|r| r.is_ok()).count();
@@ -289,11 +368,23 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         wall,
         ok as f64 / wall
     );
-    println!("{}", server.metrics().summary());
-    if client_ids > 1 {
-        println!("{}", server.metrics().client_summary());
+    if let Some(fleet) = &fleet_handle {
+        let degraded = results
+            .iter()
+            .filter(|r| matches!(r, Ok(resp) if resp.degraded))
+            .count();
+        println!("degraded={degraded} (answered below the entry tier instead of shed)");
+        println!("{}", fleet.metrics().summary());
+        println!("{}", fleet.tier_summary());
+        fleet.shutdown();
     }
-    server.shutdown();
+    if let Some(server) = &server_handle {
+        println!("{}", server.metrics().summary());
+        if client_ids > 1 {
+            println!("{}", server.metrics().client_summary());
+        }
+        server.shutdown();
+    }
     Ok(())
 }
 

@@ -1,0 +1,414 @@
+//! `Balance`: quality-tiered power-of-two-choices replica balancing.
+//!
+//! The fleet runs one replica set per quantization tier — 8-bit
+//! "premium", 4-bit "standard", 3-bit "economy" in the default ladder —
+//! because Norm-Q makes bit width a *quality* knob: 8-bit tables are
+//! bit-identical to full precision, lower widths trade fidelity for
+//! footprint and speed. `Balance` turns that ladder into a serving
+//! policy with two rules:
+//!
+//! 1. **Entry tier by client weight.** Premium clients
+//!    (`Keyed::weight` ≥ the premium threshold, default 2) enter at the
+//!    top tier; everyone else enters one rung down (or at the only
+//!    tier, if there is just one).
+//! 2. **Degrade, don't deny.** If every replica in the entry tier is
+//!    saturated (`poll_ready` not `Ready`, or at the per-replica
+//!    `depth`), the request spills *down* the ladder tier by tier, and
+//!    the response is stamped `degraded` so the caller knows the
+//!    fidelity it actually got. A standard request that finds its own
+//!    ladder full may be served by spare *premium* capacity — that is
+//!    an upgrade, not a degrade, and is stamped accordingly. Only when
+//!    no replica anywhere can take the request does the balancer shed
+//!    (`Err(Overloaded)`, `Metrics::fleet_shed`).
+//!
+//! Within a tier, replica choice is power-of-two-choices: sample two
+//! eligible replicas at random and send to the one with the lower
+//! load, where load is `(in_flight + 1) × EWMA latency`. P2C gets most
+//! of the benefit of join-shortest-queue without a global scan or a
+//! herd on the single best replica.
+//!
+//! `Balance` holds no queue of its own — queueing lives inside each
+//! replica (its coordinator queue) and in the admission stack outside.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::metrics::Metrics;
+use crate::util::rng::Rng;
+
+use super::{Keyed, Readiness, Service, ServiceError, Tiered};
+
+/// Smoothing factor for the per-replica latency EWMA.
+const EWMA_ALPHA: f64 = 0.2;
+
+/// Default client weight at or above which a request enters at the top
+/// tier.
+const DEFAULT_PREMIUM_WEIGHT: u32 = 2;
+
+/// Default per-replica concurrent-dispatch cap.
+const DEFAULT_DEPTH: usize = 8;
+
+/// One registered backend replica and its load-tracking state.
+struct Replica<S> {
+    svc: S,
+    tier: u32,
+    in_flight: AtomicU64,
+    ewma_us: AtomicU64,
+}
+
+impl<S> Replica<S> {
+    /// The p2c load estimate: queue depth × expected service time.
+    fn load(&self) -> u64 {
+        let in_flight = self.in_flight.load(Ordering::Relaxed) + 1;
+        in_flight.saturating_mul(self.ewma_us.load(Ordering::Relaxed).max(1))
+    }
+
+    /// Fold one latency sample into the EWMA.
+    fn observe(&self, sample_us: u64) {
+        let old = self.ewma_us.load(Ordering::Relaxed);
+        let new = if old == 0 {
+            sample_us
+        } else {
+            (old as f64 * (1.0 - EWMA_ALPHA) + sample_us as f64 * EWMA_ALPHA) as u64
+        };
+        self.ewma_us.store(new, Ordering::Relaxed);
+    }
+}
+
+/// Decrements a replica's in-flight gauge even if the call panics.
+struct InFlightGuard<'a>(&'a AtomicU64);
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// The tiered replica balancer; see the [module docs](self).
+///
+/// ```
+/// use std::sync::Arc;
+/// use normq::coordinator::metrics::Metrics;
+/// use normq::coordinator::ServeRequest;
+/// use normq::service::{Balance, Echo, Service};
+///
+/// let metrics = Arc::new(Metrics::new());
+/// let mut balance = Balance::new(Arc::clone(&metrics));
+/// balance.register(8, Echo::instant());
+/// balance.register(3, Echo::instant());
+///
+/// // A premium client (weight ≥ 2) enters at the 8-bit tier.
+/// let req = ServeRequest::from_client(vec!["hi".into()], "vip").with_weight(2);
+/// let resp = balance.call(req).unwrap();
+/// assert_eq!(resp.tier, 8);
+/// assert!(!resp.degraded);
+///
+/// // A standard client enters one rung down the ladder.
+/// let resp = balance.call(ServeRequest::from_client(vec!["hi".into()], "bulk")).unwrap();
+/// assert_eq!(resp.tier, 3);
+/// assert!(!resp.degraded);
+/// ```
+pub struct Balance<S> {
+    replicas: Vec<Replica<S>>,
+    /// Distinct registered bit widths, highest fidelity first.
+    tier_bits: Vec<u32>,
+    premium_weight: u32,
+    depth: usize,
+    metrics: Arc<Metrics>,
+    rng: Mutex<Rng>,
+}
+
+impl<S> Balance<S> {
+    /// An empty balancer (premium weight 2, per-replica depth 8).
+    /// Register replicas before serving; an empty fleet answers
+    /// `Err(Closed)`.
+    pub fn new(metrics: Arc<Metrics>) -> Self {
+        Balance {
+            replicas: Vec::new(),
+            tier_bits: Vec::new(),
+            premium_weight: DEFAULT_PREMIUM_WEIGHT,
+            depth: DEFAULT_DEPTH,
+            metrics,
+            rng: Mutex::new(Rng::seeded(0x9E37_79B9_7F4A_7C15)),
+        }
+    }
+
+    /// Client weight at or above which a request enters at the top
+    /// tier (min 1).
+    pub fn with_premium_weight(mut self, weight: u32) -> Self {
+        self.premium_weight = weight.max(1);
+        self
+    }
+
+    /// Per-replica concurrent-dispatch cap (min 1): above this the
+    /// replica is ineligible and requests spill to the next tier.
+    pub fn with_depth(mut self, depth: usize) -> Self {
+        self.depth = depth.max(1);
+        self
+    }
+
+    /// Add a replica serving at `tier` bits. Tiers may be registered
+    /// in any order and with any replica count each.
+    pub fn register(&mut self, tier: u32, svc: S) {
+        self.replicas.push(Replica {
+            svc,
+            tier,
+            in_flight: AtomicU64::new(0),
+            ewma_us: AtomicU64::new(0),
+        });
+        if !self.tier_bits.contains(&tier) {
+            self.tier_bits.push(tier);
+            self.tier_bits.sort_unstable_by(|a, b| b.cmp(a));
+        }
+    }
+
+    /// The registered tier ladder, highest fidelity first.
+    pub fn tiers(&self) -> &[u32] {
+        &self.tier_bits
+    }
+
+    /// Ladder index a request with `weight` enters at.
+    fn entry_index(&self, weight: u32) -> usize {
+        if weight >= self.premium_weight {
+            0
+        } else {
+            1.min(self.tier_bits.len().saturating_sub(1))
+        }
+    }
+}
+
+impl<S> Balance<S> {
+    /// Power-of-two-choices pick among this tier's eligible replicas
+    /// (advisory `Ready` and below the dispatch depth).
+    fn pick<Req>(&self, tier: u32) -> Option<&Replica<S>>
+    where
+        S: Service<Req>,
+    {
+        let eligible: Vec<&Replica<S>> = self
+            .replicas
+            .iter()
+            .filter(|r| {
+                r.tier == tier
+                    && r.in_flight.load(Ordering::Relaxed) < self.depth as u64
+                    && r.svc.poll_ready() == Readiness::Ready
+            })
+            .collect();
+        match eligible.len() {
+            0 => None,
+            1 => Some(eligible[0]),
+            n => {
+                let (i, j) = {
+                    let mut rng = self.rng.lock().unwrap();
+                    let i = rng.below_usize(n);
+                    let mut j = rng.below_usize(n - 1);
+                    if j >= i {
+                        j += 1;
+                    }
+                    (i, j)
+                };
+                if eligible[i].load() <= eligible[j].load() {
+                    Some(eligible[i])
+                } else {
+                    Some(eligible[j])
+                }
+            }
+        }
+    }
+}
+
+impl<Req, S> Service<Req> for Balance<S>
+where
+    Req: Keyed,
+    S: Service<Req>,
+    S::Response: Tiered,
+{
+    type Response = S::Response;
+
+    /// `Ready` if any replica is ready, `Closed` only when every
+    /// replica is closed (or none are registered), `Busy` otherwise.
+    fn poll_ready(&self) -> Readiness {
+        if self.replicas.is_empty() {
+            return Readiness::Closed;
+        }
+        let mut all_closed = true;
+        for r in &self.replicas {
+            match r.svc.poll_ready() {
+                Readiness::Ready => {
+                    if r.in_flight.load(Ordering::Relaxed) < self.depth as u64 {
+                        return Readiness::Ready;
+                    }
+                    all_closed = false;
+                }
+                Readiness::Busy => all_closed = false,
+                Readiness::Closed => {}
+            }
+        }
+        if all_closed {
+            Readiness::Closed
+        } else {
+            Readiness::Busy
+        }
+    }
+
+    fn call(&self, req: Req) -> Result<Self::Response, ServiceError> {
+        if self.replicas.is_empty() {
+            return Err(ServiceError::Closed);
+        }
+        let entry = self.entry_index(req.weight());
+        let entry_bits = self.tier_bits[entry];
+        // Spill order: the entry tier, then down the ladder, then any
+        // spare capacity *above* the entry tier (an upgrade, never
+        // marked degraded).
+        let ladder = (entry..self.tier_bits.len()).chain((0..entry).rev());
+        for idx in ladder {
+            let bits = self.tier_bits[idx];
+            let Some(replica) = self.pick(bits) else { continue };
+            replica.in_flight.fetch_add(1, Ordering::Relaxed);
+            let _guard = InFlightGuard(&replica.in_flight);
+            let start = Instant::now();
+            let result = replica.svc.call(req);
+            replica.observe(start.elapsed().as_micros() as u64);
+            return result.map(|mut resp| {
+                let degraded = bits < entry_bits;
+                resp.set_route(replica.tier, degraded);
+                self.metrics.fleet_routed.fetch_add(1, Ordering::Relaxed);
+                if degraded {
+                    self.metrics.fleet_degraded.fetch_add(1, Ordering::Relaxed);
+                }
+                resp
+            });
+        }
+        self.metrics.fleet_shed.fetch_add(1, Ordering::Relaxed);
+        Err(ServiceError::Overloaded)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{MockSvc, TestReq};
+    use super::*;
+    use std::time::Duration;
+
+    fn fleet(tiers: &[u32]) -> (Balance<Arc<MockSvc>>, Vec<Arc<MockSvc>>, Arc<Metrics>) {
+        let metrics = Arc::new(Metrics::new());
+        let mut balance = Balance::new(Arc::clone(&metrics));
+        let mut handles = Vec::new();
+        for &bits in tiers {
+            let svc = Arc::new(MockSvc::instant());
+            handles.push(Arc::clone(&svc));
+            balance.register(bits, svc);
+        }
+        (balance, handles, metrics)
+    }
+
+    #[test]
+    fn weight_steers_the_entry_tier() {
+        let (balance, handles, metrics) = fleet(&[8, 4, 3]);
+        let premium = balance.call(TestReq::weighted("vip", 2)).unwrap();
+        assert_eq!(premium.tier, 8);
+        assert!(!premium.degraded);
+        let standard = balance.call(TestReq::client("bulk")).unwrap();
+        assert_eq!(standard.tier, 4);
+        assert!(!standard.degraded);
+        assert_eq!(handles[0].calls.load(Ordering::Relaxed), 1);
+        assert_eq!(handles[1].calls.load(Ordering::Relaxed), 1);
+        assert_eq!(handles[2].calls.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.fleet_routed.load(Ordering::Relaxed), 2);
+        assert_eq!(metrics.fleet_degraded.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn saturated_entry_tier_spills_down_and_marks_degraded() {
+        let metrics = Arc::new(Metrics::new());
+        let mut balance = Balance::new(Arc::clone(&metrics));
+        let mut busy = MockSvc::instant();
+        busy.readiness = Readiness::Busy;
+        balance.register(8, Arc::new(busy));
+        balance.register(4, Arc::new(MockSvc::instant()));
+        let resp = balance.call(TestReq::weighted("vip", 2)).unwrap();
+        assert_eq!(resp.tier, 4);
+        assert!(resp.degraded, "spill below the entry tier must be stamped degraded");
+        assert_eq!(metrics.fleet_degraded.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn up_tier_spill_is_an_upgrade_not_a_degrade() {
+        let metrics = Arc::new(Metrics::new());
+        let mut balance = Balance::new(Arc::clone(&metrics));
+        balance.register(8, Arc::new(MockSvc::instant()));
+        let mut busy = MockSvc::instant();
+        busy.readiness = Readiness::Busy;
+        balance.register(4, Arc::new(busy));
+        // The standard ladder (4-bit) is full; spare premium capacity
+        // serves the request at higher fidelity.
+        let resp = balance.call(TestReq::client("bulk")).unwrap();
+        assert_eq!(resp.tier, 8);
+        assert!(!resp.degraded);
+        assert_eq!(metrics.fleet_degraded.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn nothing_eligible_sheds_with_overloaded() {
+        let metrics = Arc::new(Metrics::new());
+        let mut balance = Balance::new(Arc::clone(&metrics));
+        let mut busy = MockSvc::instant();
+        busy.readiness = Readiness::Busy;
+        balance.register(8, Arc::new(busy));
+        assert_eq!(balance.call(TestReq::client("a")), Err(ServiceError::Overloaded));
+        assert_eq!(metrics.fleet_shed.load(Ordering::Relaxed), 1);
+        assert_eq!(balance.poll_ready(), Readiness::Busy);
+    }
+
+    #[test]
+    fn empty_fleet_is_closed() {
+        let metrics = Arc::new(Metrics::new());
+        let balance: Balance<Arc<MockSvc>> = Balance::new(Arc::clone(&metrics));
+        assert_eq!(balance.poll_ready(), Readiness::Closed);
+        assert_eq!(balance.call(TestReq::client("a")), Err(ServiceError::Closed));
+    }
+
+    #[test]
+    fn p2c_prefers_the_faster_replica() {
+        let metrics = Arc::new(Metrics::new());
+        let mut balance = Balance::new(Arc::clone(&metrics));
+        let fast = Arc::new(MockSvc::instant());
+        let slow = Arc::new(MockSvc::with_delay(Duration::from_millis(10)));
+        balance.register(8, Arc::clone(&fast));
+        balance.register(8, Arc::clone(&slow));
+        for _ in 0..12 {
+            balance.call(TestReq::weighted("vip", 2)).unwrap();
+        }
+        // With two replicas, p2c always compares both; once the slow
+        // replica's EWMA is measured, traffic concentrates on the fast
+        // one.
+        let fast_calls = fast.calls.load(Ordering::Relaxed);
+        let slow_calls = slow.calls.load(Ordering::Relaxed);
+        assert!(
+            fast_calls > slow_calls,
+            "expected the fast replica to win p2c: fast={fast_calls} slow={slow_calls}"
+        );
+    }
+
+    #[test]
+    fn depth_caps_make_a_tier_ineligible() {
+        let metrics = Arc::new(Metrics::new());
+        let mut balance = Balance::new(Arc::clone(&metrics));
+        balance.register(8, Arc::new(MockSvc::with_delay(Duration::from_millis(30))));
+        balance.register(4, Arc::new(MockSvc::instant()));
+        let balance = Arc::new(balance.with_depth(1));
+        // Occupy the single 8-bit dispatch slot with a slow call…
+        let held = {
+            let balance = Arc::clone(&balance);
+            std::thread::spawn(move || balance.call(TestReq::weighted("vip", 2)))
+        };
+        std::thread::sleep(Duration::from_millis(10));
+        // …so a concurrent premium request must spill to the 4-bit tier.
+        let spilled = balance.call(TestReq::weighted("vip", 2)).unwrap();
+        assert_eq!(spilled.tier, 4);
+        assert!(spilled.degraded);
+        let held = held.join().unwrap().unwrap();
+        assert_eq!(held.tier, 8);
+        assert!(!held.degraded);
+    }
+}

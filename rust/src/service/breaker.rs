@@ -1,0 +1,452 @@
+//! `Breaker`: a per-replica circuit breaker with half-open probing.
+//!
+//! Replicas are the first component of the serving fleet that can fail
+//! *independently* — a panicking backend, a lost PJRT device, a
+//! poisoned build pool. Without a breaker every such failure is
+//! discovered by live traffic, over and over: the balancer keeps
+//! routing to the dead replica, each request burns its retry budget
+//! there, and a single sick backend taxes the whole fleet. The breaker
+//! turns repeated failure into *removal from rotation*:
+//!
+//! - **Closed** (healthy): calls pass through; `threshold` consecutive
+//!   failures trip the breaker (`Metrics::breaker_trips`).
+//! - **Open**: `poll_ready` reports `Busy` so [`super::balance::Balance`]
+//!   steers around the replica, and any call that still arrives
+//!   fast-fails with `Err(Overloaded)` without touching the backend
+//!   (`Metrics::breaker_rejected`). After `cooldown` the breaker
+//!   becomes eligible for a probe.
+//! - **Half-open**: exactly one call is admitted as a probe
+//!   (`Metrics::breaker_probes`); success closes the breaker, failure
+//!   re-opens it for another cooldown.
+//!
+//! What counts as a failure: `Err(Failed)`, `Err(Closed)`, and a
+//! panicking inner call (caught, counted, then resumed — the breaker
+//! never swallows a panic). `Overloaded` and `DeadlineExceeded` do
+//! *not* count: they are load signals, and tripping on them would turn
+//! every overload into an outage.
+//!
+//! This module also hosts [`FaultInjector`]/[`FaultPoint`] — the
+//! fault-injection hook tests and benches use to simulate a replica's
+//! device loss (calls fail with `Err(Failed)` while the injector is
+//! armed) without touching real backend code.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+
+use super::{Layer, Readiness, Service, ServiceError};
+
+/// Default consecutive-failure threshold before the breaker opens.
+const DEFAULT_THRESHOLD: u32 = 3;
+
+/// Default cooldown an open breaker waits before admitting a probe.
+const DEFAULT_COOLDOWN: Duration = Duration::from_secs(1);
+
+/// The breaker state machine; see the [module docs](self).
+#[derive(Clone, Copy, Debug)]
+enum State {
+    /// Healthy: passing traffic, counting consecutive failures.
+    Closed { failures: u32 },
+    /// Out of rotation until `until`; calls fast-fail.
+    Open { until: Instant },
+    /// One probe is in flight; everyone else is held off.
+    HalfOpen,
+}
+
+/// How a call was admitted (a probe's outcome drives a state change
+/// even on success).
+#[derive(Clone, Copy)]
+enum Admit {
+    Normal,
+    Probe,
+}
+
+/// A circuit breaker wrapping one backend replica; see the
+/// [module docs](self).
+///
+/// ```
+/// use std::sync::Arc;
+/// use std::time::Duration;
+/// use normq::coordinator::metrics::Metrics;
+/// use normq::coordinator::ServeRequest;
+/// use normq::service::{Breaker, Echo, FaultInjector, FaultPoint, Service, ServiceError};
+///
+/// let metrics = Arc::new(Metrics::new());
+/// let fault = FaultInjector::new();
+/// let svc = Breaker::new(FaultPoint::new(Echo::instant(), fault.clone()), Arc::clone(&metrics))
+///     .with_threshold(2)
+///     .with_cooldown(Duration::from_millis(50));
+/// assert!(svc.call(ServeRequest::new(vec!["ok".into()])).is_ok());
+///
+/// // Simulated device loss: two consecutive failures open the breaker.
+/// fault.set_failing(true);
+/// for _ in 0..2 {
+///     let _ = svc.call(ServeRequest::new(vec!["x".into()]));
+/// }
+/// assert!(svc.is_open());
+/// // While open, calls fast-fail without touching the backend.
+/// assert_eq!(
+///     svc.call(ServeRequest::new(vec!["x".into()])),
+///     Err(ServiceError::Overloaded)
+/// );
+///
+/// // After the cooldown one probe is admitted; the recovered backend
+/// // closes the breaker again.
+/// std::thread::sleep(Duration::from_millis(60));
+/// fault.set_failing(false);
+/// assert!(svc.call(ServeRequest::new(vec!["back".into()])).is_ok());
+/// assert!(!svc.is_open());
+/// ```
+pub struct Breaker<S> {
+    inner: S,
+    threshold: u32,
+    cooldown: Duration,
+    state: Mutex<State>,
+    metrics: Arc<Metrics>,
+}
+
+impl<S> Breaker<S> {
+    /// Wrap `inner` with a closed breaker (threshold 3, cooldown 1s).
+    pub fn new(inner: S, metrics: Arc<Metrics>) -> Self {
+        Breaker {
+            inner,
+            threshold: DEFAULT_THRESHOLD,
+            cooldown: DEFAULT_COOLDOWN,
+            state: Mutex::new(State::Closed { failures: 0 }),
+            metrics,
+        }
+    }
+
+    /// Consecutive failures that trip the breaker (min 1).
+    pub fn with_threshold(mut self, threshold: u32) -> Self {
+        self.threshold = threshold.max(1);
+        self
+    }
+
+    /// How long an open breaker waits before admitting a probe.
+    pub fn with_cooldown(mut self, cooldown: Duration) -> Self {
+        self.cooldown = cooldown;
+        self
+    }
+
+    /// True while the breaker is open or probing (out of rotation).
+    pub fn is_open(&self) -> bool {
+        !matches!(*self.state.lock().unwrap(), State::Closed { .. })
+    }
+
+    /// Record one call's outcome and drive the state machine.
+    fn record(&self, admit: Admit, failed: bool) {
+        let mut state = self.state.lock().unwrap();
+        if failed {
+            match (*state, admit) {
+                // A failed probe re-opens for another cooldown.
+                (State::HalfOpen, _) | (_, Admit::Probe) => {
+                    *state = State::Open { until: Instant::now() + self.cooldown };
+                    self.metrics.breaker_trips.fetch_add(1, Ordering::Relaxed);
+                }
+                (State::Closed { failures }, Admit::Normal) => {
+                    let failures = failures + 1;
+                    if failures >= self.threshold {
+                        *state = State::Open { until: Instant::now() + self.cooldown };
+                        self.metrics.breaker_trips.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        *state = State::Closed { failures };
+                    }
+                }
+                // A pre-trip call finishing late while already open:
+                // the trip has been counted, nothing to add.
+                (State::Open { .. }, Admit::Normal) => {}
+            }
+        } else {
+            match (*state, admit) {
+                // A successful probe closes the breaker; a success in
+                // Closed resets the consecutive-failure streak.
+                (State::HalfOpen, _) | (_, Admit::Probe) | (State::Closed { .. }, _) => {
+                    *state = State::Closed { failures: 0 };
+                }
+                // A straggler succeeding while open does not close the
+                // breaker — recovery is confirmed by the probe, whose
+                // admission is serialized, not by a call that was
+                // already in flight when the replica went sick.
+                (State::Open { .. }, Admit::Normal) => {}
+            }
+        }
+    }
+}
+
+impl<Req, S> Service<Req> for Breaker<S>
+where
+    S: Service<Req>,
+{
+    type Response = S::Response;
+
+    /// `Busy` while open (so the balancer steers around this replica)
+    /// and while a probe is in flight; `Ready` once the cooldown has
+    /// elapsed (a call now would be admitted as the probe).
+    fn poll_ready(&self) -> Readiness {
+        let state = *self.state.lock().unwrap();
+        match state {
+            State::Closed { .. } => self.inner.poll_ready(),
+            State::Open { until } => {
+                if Instant::now() >= until {
+                    Readiness::Ready
+                } else {
+                    Readiness::Busy
+                }
+            }
+            State::HalfOpen => Readiness::Busy,
+        }
+    }
+
+    fn call(&self, req: Req) -> Result<Self::Response, ServiceError> {
+        let admit = {
+            let mut state = self.state.lock().unwrap();
+            match *state {
+                State::Closed { .. } => Admit::Normal,
+                State::Open { until } if Instant::now() >= until => {
+                    // Cooldown over: this call becomes the single
+                    // probe. The transition happens under the lock, so
+                    // concurrent callers cannot both become probes.
+                    *state = State::HalfOpen;
+                    self.metrics.breaker_probes.fetch_add(1, Ordering::Relaxed);
+                    Admit::Probe
+                }
+                State::Open { .. } | State::HalfOpen => {
+                    self.metrics.breaker_rejected.fetch_add(1, Ordering::Relaxed);
+                    return Err(ServiceError::Overloaded);
+                }
+            }
+        };
+        // A panicking backend must count as a failure (that is the
+        // whole point of the breaker), so catch, record, and resume.
+        let out = catch_unwind(AssertUnwindSafe(|| self.inner.call(req)));
+        let failed = match &out {
+            Err(_) => true,
+            Ok(Err(ServiceError::Failed(_))) | Ok(Err(ServiceError::Closed)) => true,
+            Ok(_) => false,
+        };
+        self.record(admit, failed);
+        match out {
+            Ok(result) => result,
+            Err(panic) => resume_unwind(panic),
+        }
+    }
+}
+
+/// Builds [`Breaker`] middlewares; see [`super::stack::Stack::breaker`].
+#[derive(Clone, Debug)]
+pub struct BreakerLayer {
+    threshold: u32,
+    cooldown: Duration,
+    metrics: Arc<Metrics>,
+}
+
+impl BreakerLayer {
+    /// A layer producing breakers that trip after `threshold`
+    /// consecutive failures and probe after `cooldown`.
+    pub fn new(threshold: u32, cooldown: Duration, metrics: Arc<Metrics>) -> Self {
+        BreakerLayer { threshold, cooldown, metrics }
+    }
+}
+
+impl<S> Layer<S> for BreakerLayer {
+    type Service = Breaker<S>;
+    fn layer(&self, inner: S) -> Self::Service {
+        Breaker::new(inner, Arc::clone(&self.metrics))
+            .with_threshold(self.threshold)
+            .with_cooldown(self.cooldown)
+    }
+}
+
+/// A shared switch that makes a [`FaultPoint`]'s calls fail while
+/// armed — the fleet's simulated-device-loss hook. Clone it to keep a
+/// control handle outside the service stack:
+///
+/// ```
+/// use normq::coordinator::ServeRequest;
+/// use normq::service::{Echo, FaultInjector, FaultPoint, Service};
+///
+/// let fault = FaultInjector::new();
+/// let svc = FaultPoint::new(Echo::instant(), fault.clone());
+/// assert!(svc.call(ServeRequest::new(vec!["ok".into()])).is_ok());
+/// fault.set_failing(true);
+/// assert!(svc.call(ServeRequest::new(vec!["boom".into()])).is_err());
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct FaultInjector {
+    failing: Arc<AtomicBool>,
+}
+
+impl FaultInjector {
+    /// A disarmed injector (calls pass through).
+    pub fn new() -> Self {
+        FaultInjector::default()
+    }
+
+    /// Arm or disarm the fault: while armed, the attached
+    /// [`FaultPoint`] fails every call.
+    pub fn set_failing(&self, failing: bool) {
+        self.failing.store(failing, Ordering::Relaxed);
+    }
+
+    /// True while the fault is armed.
+    pub fn failing(&self) -> bool {
+        self.failing.load(Ordering::Relaxed)
+    }
+}
+
+/// A pass-through service that fails with `Err(Failed)` while its
+/// [`FaultInjector`] is armed — simulating a replica whose device died
+/// mid-service. `poll_ready` stays truthful to the healthy path (a
+/// dying device looks ready until a call actually fails), which is
+/// exactly the brown-out the breaker exists to catch.
+pub struct FaultPoint<S> {
+    inner: S,
+    injector: FaultInjector,
+}
+
+impl<S> FaultPoint<S> {
+    /// Wrap `inner`; calls fail while `injector` is armed.
+    pub fn new(inner: S, injector: FaultInjector) -> Self {
+        FaultPoint { inner, injector }
+    }
+}
+
+impl<Req, S> Service<Req> for FaultPoint<S>
+where
+    S: Service<Req>,
+{
+    type Response = S::Response;
+
+    fn poll_ready(&self) -> Readiness {
+        self.inner.poll_ready()
+    }
+
+    fn call(&self, req: Req) -> Result<Self::Response, ServiceError> {
+        if self.injector.failing() {
+            return Err(ServiceError::Failed("injected fault: simulated device loss".into()));
+        }
+        self.inner.call(req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{MockSvc, TestReq};
+    use super::*;
+
+    fn faulty(metrics: &Arc<Metrics>) -> (Breaker<FaultPoint<MockSvc>>, FaultInjector) {
+        let fault = FaultInjector::new();
+        let svc = Breaker::new(
+            FaultPoint::new(MockSvc::instant(), fault.clone()),
+            Arc::clone(metrics),
+        )
+        .with_threshold(2)
+        .with_cooldown(Duration::from_millis(40));
+        (svc, fault)
+    }
+
+    #[test]
+    fn consecutive_failures_trip_the_breaker() {
+        let metrics = Arc::new(Metrics::new());
+        let (svc, fault) = faulty(&metrics);
+        assert!(svc.call(TestReq::default()).is_ok());
+        fault.set_failing(true);
+        assert!(matches!(svc.call(TestReq::default()), Err(ServiceError::Failed(_))));
+        assert!(!svc.is_open(), "one failure below the threshold must not trip");
+        assert!(matches!(svc.call(TestReq::default()), Err(ServiceError::Failed(_))));
+        assert!(svc.is_open());
+        assert_eq!(metrics.breaker_trips.load(Ordering::Relaxed), 1);
+        // While open: Busy to the balancer, fast-fail to a caller.
+        assert_eq!(svc.poll_ready(), Readiness::Busy);
+        assert_eq!(svc.call(TestReq::default()), Err(ServiceError::Overloaded));
+        assert_eq!(metrics.breaker_rejected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn success_resets_the_failure_streak() {
+        let metrics = Arc::new(Metrics::new());
+        let (svc, fault) = faulty(&metrics);
+        fault.set_failing(true);
+        let _ = svc.call(TestReq::default());
+        fault.set_failing(false);
+        assert!(svc.call(TestReq::default()).is_ok());
+        fault.set_failing(true);
+        let _ = svc.call(TestReq::default());
+        // 1 failure, success, 1 failure: never two consecutive.
+        assert!(!svc.is_open());
+        assert_eq!(metrics.breaker_trips.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn half_open_probe_closes_on_success() {
+        let metrics = Arc::new(Metrics::new());
+        let (svc, fault) = faulty(&metrics);
+        fault.set_failing(true);
+        for _ in 0..2 {
+            let _ = svc.call(TestReq::default());
+        }
+        assert!(svc.is_open());
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(svc.poll_ready(), Readiness::Ready, "cooldown over: probe admitted");
+        fault.set_failing(false);
+        assert!(svc.call(TestReq::default()).is_ok());
+        assert!(!svc.is_open());
+        assert_eq!(metrics.breaker_probes.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn failed_probe_reopens_for_another_cooldown() {
+        let metrics = Arc::new(Metrics::new());
+        let (svc, fault) = faulty(&metrics);
+        fault.set_failing(true);
+        for _ in 0..2 {
+            let _ = svc.call(TestReq::default());
+        }
+        std::thread::sleep(Duration::from_millis(50));
+        // The probe itself fails: back to open, another trip counted.
+        assert!(matches!(svc.call(TestReq::default()), Err(ServiceError::Failed(_))));
+        assert!(svc.is_open());
+        assert_eq!(svc.poll_ready(), Readiness::Busy);
+        assert_eq!(metrics.breaker_trips.load(Ordering::Relaxed), 2);
+        assert_eq!(metrics.breaker_probes.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn overload_errors_do_not_trip() {
+        let metrics = Arc::new(Metrics::new());
+        let mut inner = MockSvc::instant();
+        // MockSvc fails call 0 with Overloaded.
+        inner.fail_call = Some(0);
+        let svc = Breaker::new(inner, Arc::clone(&metrics)).with_threshold(1);
+        assert_eq!(svc.call(TestReq::default()), Err(ServiceError::Overloaded));
+        assert!(!svc.is_open(), "load signals must not open the breaker");
+        assert!(svc.call(TestReq::default()).is_ok());
+    }
+
+    #[test]
+    fn panicking_backend_counts_as_failure_and_resumes() {
+        struct Panicky;
+        impl Service<TestReq> for Panicky {
+            type Response = ();
+            fn poll_ready(&self) -> Readiness {
+                Readiness::Ready
+            }
+            fn call(&self, _req: TestReq) -> Result<(), ServiceError> {
+                panic!("backend died");
+            }
+        }
+        let metrics = Arc::new(Metrics::new());
+        let svc = Arc::new(Breaker::new(Panicky, Arc::clone(&metrics)).with_threshold(1));
+        let handle = {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || svc.call(TestReq::default()))
+        };
+        assert!(handle.join().is_err(), "the panic must propagate to the caller");
+        assert!(svc.is_open(), "the panic must also count as a breaker failure");
+        assert_eq!(metrics.breaker_trips.load(Ordering::Relaxed), 1);
+    }
+}

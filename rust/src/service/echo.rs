@@ -24,6 +24,12 @@ pub struct EchoResponse {
     pub text: String,
     /// The request's deadline fired before the reply was produced.
     pub expired: bool,
+    /// Bit width of the tier that served the request (32 = full
+    /// precision until a fleet balancer stamps the real tier).
+    pub tier: u32,
+    /// The request was served below its entry tier (stamped by the
+    /// fleet balancer; `Echo` itself never degrades).
+    pub degraded: bool,
 }
 
 /// `Echo` answers inline: nothing ever queues, so the default zero
@@ -33,6 +39,16 @@ impl super::Queued for EchoResponse {}
 impl Expirable for EchoResponse {
     fn expired(&self) -> bool {
         self.expired
+    }
+}
+
+impl super::Tiered for EchoResponse {
+    fn tier(&self) -> u32 {
+        self.tier
+    }
+    fn set_route(&mut self, tier: u32, degraded: bool) {
+        self.tier = tier;
+        self.degraded = degraded;
     }
 }
 
@@ -83,6 +99,8 @@ impl Service<ServeRequest> for Echo {
             client_id: req.client_id.clone(),
             text: req.concepts.join(" "),
             expired: req.deadline.is_some_and(|d| Instant::now() >= d),
+            tier: 32,
+            degraded: false,
         })
     }
 }

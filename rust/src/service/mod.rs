@@ -30,6 +30,15 @@
 //!   the decode loop rather than abandoned at the edge.
 //! - [`hedge::Hedge`] — re-dispatches slow requests through a persistent
 //!   helper pool; first response wins.
+//! - [`balance::Balance`] — the replica-fleet front door: power-of-two-
+//!   choices over per-tier backend replicas, steering premium traffic to
+//!   the highest-fidelity tier and spilling *down-tier* under pressure
+//!   (answer degraded, not denied).
+//! - [`breaker::Breaker`] — per-replica circuit breaker: consecutive
+//!   failures open the replica out of rotation, a half-open probe
+//!   closes it once the backend recovers.
+//! - [`retry::RetryBudget`] — budget-capped retries of failed calls
+//!   (Finagle-style token budget), so a brown-out cannot amplify load.
 //! - [`echo::Echo`] — a trivial deadline-honoring backend for examples,
 //!   doctests and integration tests.
 //!
@@ -43,24 +52,30 @@
 //! lifecycle walkthrough live in `ARCHITECTURE.md` at the repo root.
 
 pub mod adaptive;
+pub mod balance;
 pub(crate) mod bucket;
+pub mod breaker;
 pub mod echo;
 pub mod fair;
 pub mod hedge;
 pub mod limit;
 pub mod quota;
 pub mod rate;
+pub mod retry;
 pub mod shed;
 pub mod stack;
 pub mod timeout;
 
 pub use adaptive::{AdaptiveShed, AdaptiveShedLayer};
+pub use balance::Balance;
+pub use breaker::{Breaker, BreakerLayer, FaultInjector, FaultPoint};
 pub use echo::{Echo, EchoResponse};
 pub use fair::{FairQueue, FairQueueLayer};
 pub use hedge::{Hedge, HedgeLayer, HedgePool};
 pub use limit::{ConcurrencyLimit, ConcurrencyLimitLayer};
 pub use quota::{Quota, QuotaConfig, QuotaLayer};
 pub use rate::{RateLimit, RateLimitLayer};
+pub use retry::{RetryBudget, RetryBudgetLayer};
 pub use shed::{LoadShed, LoadShedLayer};
 pub use stack::{Compose, Identity, Layer, Stack};
 pub use timeout::{Timeout, TimeoutLayer};
@@ -190,6 +205,23 @@ pub trait Queued {
     }
 }
 
+/// Responses that carry the *fidelity tier* they were served at — the
+/// bit width of the backend replica that decoded them (32 = dense
+/// FP32). [`balance::Balance`] stamps the route on every response so
+/// callers always know what they got: `tier` names the serving
+/// replica's bit width and `degraded` is true when pressure spilled
+/// the request below the tier its weight entitled it to (Norm-Q's
+/// 8-bit-lossless / 3-bit-acceptable result as a serving policy —
+/// degrade, don't deny).
+pub trait Tiered {
+    /// Bit width of the backend that produced this response.
+    fn tier(&self) -> u32;
+
+    /// Stamp the routing outcome: the serving tier's bit width and
+    /// whether the request was served below its entry tier.
+    fn set_route(&mut self, tier: u32, degraded: bool);
+}
+
 /// Closed-loop load driver shared by the CLI `serve` command and the
 /// e2e example: `clients` threads pull request indices from a shared
 /// counter and issue blocking calls until `n_requests` are consumed.
@@ -301,6 +333,8 @@ pub(crate) mod testutil {
     pub struct TestResp {
         pub expired: bool,
         pub served_by_call: u64,
+        pub tier: u32,
+        pub degraded: bool,
     }
 
     impl Expirable for TestResp {
@@ -311,6 +345,17 @@ pub(crate) mod testutil {
 
     /// The mock serves inline; zero queue wait is exact.
     impl Queued for TestResp {}
+
+    impl Tiered for TestResp {
+        fn tier(&self) -> u32 {
+            self.tier
+        }
+
+        fn set_route(&mut self, tier: u32, degraded: bool) {
+            self.tier = tier;
+            self.degraded = degraded;
+        }
+    }
 
     /// Mock backend: sleeps per call (first call can be made slow to
     /// exercise hedging), honors deadlines like the coordinator does,
@@ -367,7 +412,7 @@ pub(crate) mod testutil {
             }
             self.in_flight.fetch_sub(1, Ordering::SeqCst);
             let expired = req.deadline.is_some_and(|d| Instant::now() >= d);
-            Ok(TestResp { expired, served_by_call: idx })
+            Ok(TestResp { expired, served_by_call: idx, tier: 32, degraded: false })
         }
     }
 }

@@ -1,0 +1,268 @@
+//! `RetryBudget`: budget-capped retries that cannot amplify a brown-out.
+//!
+//! A naive retry policy ("every failure gets one retry") doubles the
+//! offered load exactly when the fleet is least able to take it: a
+//! replica brown-out makes every call fail, every failure retries, and
+//! the retry wave keeps the replica brown. The classic fix (Finagle's
+//! retry budget) makes retries a *fraction of successful traffic*
+//! instead of a fraction of failures:
+//!
+//! - every initial call **deposits** `ratio` tokens (default 0.1) into
+//!   a bucket capped at `cap` (default 10.0);
+//! - every retry **withdraws** 1.0 token; an empty bucket means the
+//!   failure is returned as-is (`Metrics::retry_exhausted`).
+//!
+//! In steady state at ratio 0.1 the fleet retries at most ~10% of its
+//! traffic, no matter how hard the backend fails. Only `Err(Failed)`
+//! is retried — `Overloaded` and `DeadlineExceeded` are load signals
+//! where a retry is exactly the wrong medicine, and `Closed` is
+//! permanent.
+//!
+//! In the fleet stack this layer sits *outside*
+//! [`super::balance::Balance`], so a retry re-runs replica selection
+//! and lands on a different (hopefully healthy) replica.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::metrics::Metrics;
+
+use super::{Layer, Readiness, Service, ServiceError};
+
+/// Default fraction of initial traffic that may be retried.
+const DEFAULT_RATIO: f64 = 0.1;
+
+/// Default token-bucket cap (burst of retries after a quiet period).
+const DEFAULT_CAP: f64 = 10.0;
+
+/// Default retries per request.
+const DEFAULT_MAX_RETRIES: u32 = 1;
+
+/// Budget-capped retry middleware; see the [module docs](self).
+///
+/// Requests must be `Clone` so a failed attempt can be re-sent.
+///
+/// ```
+/// use std::sync::Arc;
+/// use normq::coordinator::metrics::Metrics;
+/// use normq::coordinator::ServeRequest;
+/// use normq::service::{Echo, RetryBudget, Service};
+///
+/// let metrics = Arc::new(Metrics::new());
+/// let svc = RetryBudget::new(Echo::instant(), Arc::clone(&metrics));
+/// let resp = svc.call(ServeRequest::new(vec!["hello".into()])).unwrap();
+/// assert_eq!(resp.text, "hello");
+/// // A healthy backend never spends the budget.
+/// assert_eq!(metrics.retries.load(std::sync::atomic::Ordering::Relaxed), 0);
+/// ```
+pub struct RetryBudget<S> {
+    inner: S,
+    ratio: f64,
+    cap: f64,
+    max_retries: u32,
+    tokens: Mutex<f64>,
+    metrics: Arc<Metrics>,
+}
+
+impl<S> RetryBudget<S> {
+    /// Wrap `inner` with a full budget (ratio 0.1, cap 10, 1 retry).
+    pub fn new(inner: S, metrics: Arc<Metrics>) -> Self {
+        RetryBudget {
+            inner,
+            ratio: DEFAULT_RATIO,
+            cap: DEFAULT_CAP,
+            max_retries: DEFAULT_MAX_RETRIES,
+            tokens: Mutex::new(DEFAULT_CAP),
+            metrics,
+        }
+    }
+
+    /// Tokens deposited per initial call — the steady-state fraction
+    /// of traffic that may be retried (clamped to ≥ 0).
+    pub fn with_ratio(mut self, ratio: f64) -> Self {
+        self.ratio = ratio.max(0.0);
+        self
+    }
+
+    /// Token-bucket cap: the largest retry burst after a quiet period.
+    /// The bucket is refilled to the new cap.
+    pub fn with_cap(mut self, cap: f64) -> Self {
+        self.cap = cap.max(0.0);
+        *self.tokens.lock().unwrap() = self.cap;
+        self
+    }
+
+    /// Maximum retries per request (0 disables retrying).
+    pub fn with_max_retries(mut self, max_retries: u32) -> Self {
+        self.max_retries = max_retries;
+        self
+    }
+
+    /// Current token balance (for tests and introspection).
+    pub fn balance(&self) -> f64 {
+        *self.tokens.lock().unwrap()
+    }
+
+    /// Try to withdraw one token; false means the budget is spent.
+    fn withdraw(&self) -> bool {
+        let mut tokens = self.tokens.lock().unwrap();
+        if *tokens >= 1.0 {
+            *tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+impl<Req, S> Service<Req> for RetryBudget<S>
+where
+    Req: Clone,
+    S: Service<Req>,
+{
+    type Response = S::Response;
+
+    fn poll_ready(&self) -> Readiness {
+        self.inner.poll_ready()
+    }
+
+    fn call(&self, req: Req) -> Result<Self::Response, ServiceError> {
+        {
+            let mut tokens = self.tokens.lock().unwrap();
+            *tokens = (*tokens + self.ratio).min(self.cap);
+        }
+        let mut out = self.inner.call(req.clone());
+        let mut attempts = 0;
+        while attempts < self.max_retries {
+            match out {
+                Err(ServiceError::Failed(_)) => {
+                    if !self.withdraw() {
+                        self.metrics.retry_exhausted.fetch_add(1, Ordering::Relaxed);
+                        break;
+                    }
+                    self.metrics.retries.fetch_add(1, Ordering::Relaxed);
+                    attempts += 1;
+                    out = self.inner.call(req.clone());
+                }
+                _ => break,
+            }
+        }
+        out
+    }
+}
+
+/// Builds [`RetryBudget`] middlewares; see
+/// [`super::stack::Stack::retry_budget`].
+#[derive(Clone, Debug)]
+pub struct RetryBudgetLayer {
+    ratio: f64,
+    max_retries: u32,
+    metrics: Arc<Metrics>,
+}
+
+impl RetryBudgetLayer {
+    /// A layer producing budgets with the given deposit `ratio` and
+    /// retry cap per request.
+    pub fn new(ratio: f64, max_retries: u32, metrics: Arc<Metrics>) -> Self {
+        RetryBudgetLayer { ratio, max_retries, metrics }
+    }
+}
+
+impl<S> Layer<S> for RetryBudgetLayer {
+    type Service = RetryBudget<S>;
+    fn layer(&self, inner: S) -> Self::Service {
+        RetryBudget::new(inner, Arc::clone(&self.metrics))
+            .with_ratio(self.ratio)
+            .with_max_retries(self.max_retries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::breaker::{FaultInjector, FaultPoint};
+    use super::super::testutil::{MockSvc, TestReq};
+    use super::*;
+
+    #[test]
+    fn successful_calls_never_retry() {
+        let metrics = Arc::new(Metrics::new());
+        let svc = RetryBudget::new(MockSvc::instant(), Arc::clone(&metrics));
+        for _ in 0..5 {
+            assert!(svc.call(TestReq::default()).is_ok());
+        }
+        assert_eq!(metrics.retries.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.retry_exhausted.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn failed_calls_retry_until_the_budget_is_spent() {
+        let metrics = Arc::new(Metrics::new());
+        let fault = FaultInjector::new();
+        // ratio 0 → no deposits; cap 2 → exactly two retries ever.
+        let svc = RetryBudget::new(
+            FaultPoint::new(MockSvc::instant(), fault.clone()),
+            Arc::clone(&metrics),
+        )
+        .with_ratio(0.0)
+        .with_cap(2.0);
+        fault.set_failing(true);
+        for _ in 0..3 {
+            assert!(matches!(svc.call(TestReq::default()), Err(ServiceError::Failed(_))));
+        }
+        assert_eq!(metrics.retries.load(Ordering::Relaxed), 2);
+        assert_eq!(metrics.retry_exhausted.load(Ordering::Relaxed), 1);
+        assert_eq!(svc.balance(), 0.0);
+    }
+
+    #[test]
+    fn deposits_replenish_the_budget() {
+        let metrics = Arc::new(Metrics::new());
+        let fault = FaultInjector::new();
+        let svc = RetryBudget::new(
+            FaultPoint::new(MockSvc::instant(), fault.clone()),
+            Arc::clone(&metrics),
+        )
+        .with_ratio(0.5)
+        .with_cap(1.0);
+        // Drain the bucket with one failing call (deposit 0.5 caps at
+        // 1.0, the retry withdraws it).
+        fault.set_failing(true);
+        let _ = svc.call(TestReq::default());
+        assert_eq!(svc.balance(), 0.0);
+        // Two healthy calls deposit 1.0 back…
+        fault.set_failing(false);
+        for _ in 0..2 {
+            assert!(svc.call(TestReq::default()).is_ok());
+        }
+        // …so the next failure can afford its retry again.
+        fault.set_failing(true);
+        let _ = svc.call(TestReq::default());
+        assert_eq!(metrics.retries.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn overload_errors_are_not_retried() {
+        let metrics = Arc::new(Metrics::new());
+        let mut inner = MockSvc::instant();
+        inner.fail_call = Some(0);
+        let svc = RetryBudget::new(inner, Arc::clone(&metrics));
+        assert_eq!(svc.call(TestReq::default()), Err(ServiceError::Overloaded));
+        assert_eq!(metrics.retries.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn max_retries_bounds_attempts_even_with_budget() {
+        let metrics = Arc::new(Metrics::new());
+        let fault = FaultInjector::new();
+        let svc = RetryBudget::new(
+            FaultPoint::new(MockSvc::instant(), fault.clone()),
+            Arc::clone(&metrics),
+        )
+        .with_max_retries(3);
+        fault.set_failing(true);
+        let _ = svc.call(TestReq::default());
+        // All three permitted retries ran (budget 10 covers them).
+        assert_eq!(metrics.retries.load(Ordering::Relaxed), 3);
+        assert_eq!(metrics.retry_exhausted.load(Ordering::Relaxed), 0);
+    }
+}

@@ -30,11 +30,13 @@ use std::time::Duration;
 use crate::coordinator::metrics::Metrics;
 
 use super::adaptive::AdaptiveShedLayer;
+use super::breaker::BreakerLayer;
 use super::fair::FairQueueLayer;
 use super::hedge::HedgeLayer;
 use super::limit::ConcurrencyLimitLayer;
 use super::quota::{QuotaConfig, QuotaLayer};
 use super::rate::RateLimitLayer;
+use super::retry::RetryBudgetLayer;
 use super::shed::LoadShedLayer;
 use super::timeout::TimeoutLayer;
 
@@ -166,6 +168,32 @@ impl<L> Stack<L> {
     /// response wins.
     pub fn hedge(self, delay: Duration, metrics: Arc<Metrics>) -> Stack<Compose<L, HedgeLayer>> {
         self.layer(HedgeLayer::new(delay, metrics))
+    }
+
+    /// Trip after `threshold` consecutive failures and hold the inner
+    /// service out of rotation for `cooldown` before probing (see
+    /// [`super::breaker::Breaker`]). Place directly around one replica,
+    /// inside the balancer.
+    pub fn breaker(
+        self,
+        threshold: u32,
+        cooldown: Duration,
+        metrics: Arc<Metrics>,
+    ) -> Stack<Compose<L, BreakerLayer>> {
+        self.layer(BreakerLayer::new(threshold, cooldown, metrics))
+    }
+
+    /// Retry `Err(Failed)` calls while the deposit-`ratio` token budget
+    /// lasts, at most `max_retries` per request (see
+    /// [`super::retry::RetryBudget`]). Place outside the balancer so a
+    /// retry re-runs replica selection.
+    pub fn retry_budget(
+        self,
+        ratio: f64,
+        max_retries: u32,
+        metrics: Arc<Metrics>,
+    ) -> Stack<Compose<L, RetryBudgetLayer>> {
+        self.layer(RetryBudgetLayer::new(ratio, max_retries, metrics))
     }
 
     /// Close the stack around the innermost service.

@@ -1,0 +1,70 @@
+//! Keeps `docs/METRICS.md` honest: the glossary's table rows and the
+//! key set `Metrics::summary` actually emits must match exactly, in
+//! both directions. Adding a counter without documenting it — or
+//! documenting a counter that no longer exists — fails this test.
+
+use std::collections::BTreeSet;
+
+use normq::coordinator::metrics::Metrics;
+
+/// Parse the keys out of one `summary()` line. Tokens are
+/// whitespace-separated `key=value` pairs; a token *without* `=`
+/// (`cache`, `spill`, `latency`) is a prefix that attaches to the next
+/// key, giving the compound keys `cache h/m`, `spill h/w` and
+/// `latency p50`.
+fn summary_keys(summary: &str) -> BTreeSet<String> {
+    let mut keys = BTreeSet::new();
+    let mut prefix: Option<&str> = None;
+    for token in summary.split_whitespace() {
+        match token.split_once('=') {
+            Some((key, _)) => {
+                let full = match prefix.take() {
+                    Some(p) => format!("{p} {key}"),
+                    None => key.to_string(),
+                };
+                keys.insert(full);
+            }
+            None => prefix = Some(token),
+        }
+    }
+    keys
+}
+
+/// The backticked first column of every glossary table row in
+/// `docs/METRICS.md` (lines shaped `| \`key\` | ... |`).
+fn glossary_keys(doc: &str) -> BTreeSet<String> {
+    let mut keys = BTreeSet::new();
+    for line in doc.lines() {
+        let Some(rest) = line.strip_prefix("| `") else { continue };
+        let Some((key, _)) = rest.split_once('`') else { continue };
+        keys.insert(key.to_string());
+    }
+    keys
+}
+
+#[test]
+fn glossary_matches_the_summary_key_set() {
+    let metrics = Metrics::new();
+    // Record one latency sample so the summary renders the quantile
+    // block instead of "latency n/a".
+    metrics.record_latency(0.010, 0.001);
+    let emitted = summary_keys(&metrics.summary());
+    assert!(
+        emitted.contains("submitted") && emitted.contains("latency p50"),
+        "summary parser is broken: {emitted:?}"
+    );
+
+    let doc = include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/METRICS.md"));
+    let documented = glossary_keys(doc);
+
+    let undocumented: Vec<_> = emitted.difference(&documented).collect();
+    assert!(
+        undocumented.is_empty(),
+        "summary keys missing from docs/METRICS.md: {undocumented:?}"
+    );
+    let stale: Vec<_> = documented.difference(&emitted).collect();
+    assert!(
+        stale.is_empty(),
+        "docs/METRICS.md documents keys the summary does not emit: {stale:?}"
+    );
+}

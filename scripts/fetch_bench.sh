@@ -7,6 +7,7 @@
 #   scripts/fetch_bench.sh             # latest successful CI run on this branch
 #   scripts/fetch_bench.sh <run-id>    # a specific run
 #   scripts/fetch_bench.sh -o DIR ...  # output directory (default bench-artifacts/)
+#   scripts/fetch_bench.sh --snapshot  # also refresh docs/bench/ (committed copy)
 #
 # Requires the GitHub CLI (`gh`), authenticated against the repo.
 # Artifacts land in DIR/<name>/<name>.json, mirroring the layout the
@@ -20,10 +21,12 @@ set -euo pipefail
 
 out_dir="bench-artifacts"
 run_id=""
+snapshot=0
 while [ $# -gt 0 ]; do
   case "$1" in
     -o|--out) out_dir="$2"; shift 2 ;;
-    -h|--help) sed -n '2,16p' "$0" | sed 's/^# \{0,1\}//'; exit 0 ;;
+    --snapshot) snapshot=1; shift ;;
+    -h|--help) sed -n '2,17p' "$0" | sed 's/^# \{0,1\}//'; exit 0 ;;
     *) run_id="$1"; shift ;;
   esac
 done
@@ -47,7 +50,7 @@ fi
 
 mkdir -p "$out_dir"
 fetched=0
-for name in BENCH_tables BENCH_decode BENCH_coordinator; do
+for name in BENCH_tables BENCH_decode BENCH_coordinator BENCH_service; do
   if gh run download "$run_id" --name "$name" --dir "$out_dir/$name"; then
     fetched=$((fetched + 1))
   else
@@ -61,3 +64,20 @@ if [ "$fetched" -eq 0 ]; then
 fi
 echo "fetched $fetched artifact(s) from run $run_id into $out_dir/"
 ls -l "$out_dir"/BENCH_*/ 2>/dev/null || true
+
+# --snapshot: refresh the committed trajectory snapshot in docs/bench/
+# (see docs/bench/README.md). Each JSON is copied flat, stamped with
+# the run id it came from so the snapshot's provenance is reviewable.
+if [ "$snapshot" -eq 1 ]; then
+  repo_root=$(git rev-parse --show-toplevel)
+  snap_dir="$repo_root/docs/bench"
+  mkdir -p "$snap_dir"
+  copied=0
+  for f in "$out_dir"/BENCH_*/BENCH_*.json; do
+    [ -f "$f" ] || continue
+    cp "$f" "$snap_dir/$(basename "$f")"
+    copied=$((copied + 1))
+  done
+  echo "$run_id" > "$snap_dir/RUN_ID"
+  echo "snapshot: $copied file(s) into $snap_dir/ (run $run_id); review + commit"
+fi
