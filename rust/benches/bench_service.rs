@@ -26,9 +26,17 @@
 //!   is bit-identical to a solo server of the tier that produced it,
 //!   and the degraded-answer count exceeds the shed count.
 //!
-//! `fleet_storm` rows go to `BENCH_service.json` for the CI bench
-//! trajectory (diffed by `bench_gate`); `NORMQ_BENCH_QUICK=1` skips
-//! the print-only scenarios but always runs the gated storm.
+//! - **session_stream** — multi-turn sessions resumed from pinned
+//!   snapshots (streaming their committed tokens) vs a prefix-redecode
+//!   baseline that re-decodes turns 1..t from scratch every turn.
+//!   Asserted: the resumed sessions spend strictly less total decode
+//!   time than the baseline (turn t costs one turn of steps, not t),
+//!   and completed sessions pin zero bytes afterwards.
+//!
+//! `fleet_storm` and `session_stream` rows go to `BENCH_service.json`
+//! for the CI bench trajectory (diffed by `bench_gate`);
+//! `NORMQ_BENCH_QUICK=1` skips the print-only scenarios but always
+//! runs the gated ones.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -517,16 +525,177 @@ fn run_fleet_storm(corpus: &Corpus) -> Vec<Json> {
         .collect()
 }
 
+/// Concurrent sessions in the stream scenario (one thread each).
+const SESSION_COUNT: usize = 8;
+/// Turns per session; the last turn reaches the decode budget.
+const SESSION_TURNS: u32 = 5;
+/// Steps decoded per turn before the turn suspends.
+const SESSION_TURN_TOKENS: usize = 4;
+
+/// One side of the session_stream comparison.
+struct SessionSideReport {
+    wall_ms: f64,
+    /// Total decode time (latency minus queue wait) across every turn
+    /// of every session — the work comparison, with the batch-window
+    /// and queueing overheads (equal on both sides) subtracted out.
+    decode_ms: f64,
+    streamed: usize,
+    turns: usize,
+}
+
+/// The gated session scenario: N sessions decoding a `max_tokens`
+/// generation in `SESSION_TURN_TOKENS`-step turns. `resumed` continues
+/// each turn from the pinned snapshot; the baseline re-decodes the
+/// whole prefix (turn t = fresh single-turn session with a `t·U` step
+/// budget) the way a sessionless client would.
+fn run_session_stream(corpus: &Corpus) -> Vec<Json> {
+    let (lm, hmm) = build_model(corpus);
+    let decode = DecodeConfig {
+        beam: 8,
+        max_tokens: SESSION_TURNS as usize * SESSION_TURN_TOKENS,
+        ..Default::default()
+    };
+    let concepts: Vec<Vec<String>> = (0..SESSION_COUNT)
+        .map(|i| vec![corpus.lexicon.nouns[i % corpus.lexicon.nouns.len()].clone()])
+        .collect();
+
+    let run_side = |resumed: bool| -> SessionSideReport {
+        let cfg = ServerConfig {
+            workers: WORKERS,
+            decode: decode.clone(),
+            ..Default::default()
+        };
+        let server = Arc::new(Server::start(
+            Arc::clone(&lm),
+            hmm.clone(),
+            corpus.clone(),
+            cfg,
+        ));
+        // Warm the table cache outside the measured window.
+        for c in &concepts {
+            let _ = server.call(ServeRequest::new(c.clone()));
+        }
+        let decode_us = AtomicUsize::new(0);
+        let streamed = AtomicUsize::new(0);
+        let turns_run = AtomicUsize::new(0);
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for (i, c) in concepts.iter().enumerate() {
+                let server = &server;
+                let (decode_us, streamed, turns_run) = (&decode_us, &streamed, &turns_run);
+                scope.spawn(move || {
+                    for t in 1..=SESSION_TURNS {
+                        let resp = if resumed {
+                            let (req, rx) = ServeRequest::new(c.clone())
+                                .with_session(
+                                    format!("sess-{i}"),
+                                    format!("k{t}"),
+                                    t,
+                                    SESSION_TURN_TOKENS,
+                                )
+                                .with_stream(32);
+                            let Ok(resp) = server.call(req) else { break };
+                            while let Ok(frame) = rx.try_recv() {
+                                streamed.fetch_add(frame.tokens.len(), Ordering::Relaxed);
+                            }
+                            resp
+                        } else {
+                            // Prefix re-decode: a fresh session whose
+                            // single turn has a budget of t turns.
+                            let req = ServeRequest::new(c.clone()).with_session(
+                                format!("prefix-{i}-{t}"),
+                                "k1",
+                                1,
+                                t as usize * SESSION_TURN_TOKENS,
+                            );
+                            let Ok(resp) = server.call(req) else { break };
+                            resp
+                        };
+                        turns_run.fetch_add(1, Ordering::Relaxed);
+                        decode_us.fetch_add(
+                            resp.latency.saturating_sub(resp.queue_wait).as_micros() as usize,
+                            Ordering::Relaxed,
+                        );
+                        if resumed && resp.session_done {
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let leaked = server.metrics().session_bytes.load(Ordering::Relaxed);
+        server.shutdown();
+        if resumed {
+            assert_eq!(leaked, 0, "completed sessions left {leaked} pinned bytes");
+        }
+        SessionSideReport {
+            wall_ms,
+            decode_ms: decode_us.load(Ordering::Relaxed) as f64 / 1e3,
+            streamed: streamed.load(Ordering::Relaxed),
+            turns: turns_run.load(Ordering::Relaxed),
+        }
+    };
+
+    let resumed = run_side(true);
+    let baseline = run_side(false);
+
+    println!(
+        "\n== session_stream: {SESSION_COUNT} sessions x {SESSION_TURNS} turns of \
+         {SESSION_TURN_TOKENS} steps, resume vs prefix re-decode =="
+    );
+    println!(
+        "{:<16} {:>6} {:>10} {:>10} {:>9}",
+        "config", "turns", "decode", "wall", "streamed"
+    );
+    for (label, r) in [("resumed", &resumed), ("prefix_redecode", &baseline)] {
+        println!(
+            "{label:<16} {:>6} {:>8.1}ms {:>8.1}ms {:>9}",
+            r.turns, r.decode_ms, r.wall_ms, r.streamed
+        );
+    }
+    assert!(
+        resumed.decode_ms < baseline.decode_ms,
+        "resumed turns must be strictly cheaper than prefix re-decode: \
+         resumed={:.1}ms baseline={:.1}ms",
+        resumed.decode_ms,
+        baseline.decode_ms
+    );
+    assert!(resumed.streamed > 0, "streamed sessions delivered no frames");
+    println!(
+        "resume advantage: {:.1}ms decode vs {:.1}ms re-decoding prefixes \
+         ({} streamed tokens; zero pinned bytes after completion)",
+        resumed.decode_ms, baseline.decode_ms, resumed.streamed
+    );
+
+    [("resumed", &resumed), ("prefix_redecode", &baseline)]
+        .into_iter()
+        .map(|(label, r)| {
+            Json::obj(vec![
+                ("scenario", Json::str("session_stream")),
+                ("config", Json::str(label)),
+                ("sessions", Json::num(SESSION_COUNT as f64)),
+                ("turns", Json::num(SESSION_TURNS as f64)),
+                ("turn_tokens", Json::num(SESSION_TURN_TOKENS as f64)),
+                ("workers", Json::num(WORKERS as f64)),
+                ("wall_ms", Json::num(r.wall_ms)),
+                ("decode_ms", Json::num(r.decode_ms)),
+            ])
+        })
+        .collect()
+}
+
 fn main() {
     normq::util::logging::init_from_env();
     let quick = std::env::var("NORMQ_BENCH_QUICK").is_ok_and(|v| v != "0" && !v.is_empty());
     let corpus = Corpus::small(900);
     if quick {
-        println!("== bench_service (quick): fleet_storm only ==");
+        println!("== bench_service (quick): gated scenarios only ==");
     } else {
         print_scenarios(&corpus);
     }
-    let rows = run_fleet_storm(&corpus);
+    let mut rows = run_fleet_storm(&corpus);
+    rows.extend(run_session_stream(&corpus));
     let n_rows = rows.len();
     let json = Json::obj(vec![
         ("bench", Json::str("service")),

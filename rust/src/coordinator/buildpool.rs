@@ -13,6 +13,22 @@
 //! miss without building, and the write-through spill of finished
 //! tables — keeping every blocking byte off the dispatcher thread.
 //!
+//! ## Earliest-deadline-first scheduling
+//!
+//! The queue is a deadline priority heap, not FIFO. Every queued job
+//! may carry its group's [`BuildControl`]; when a worker frees up it
+//! picks the job whose *effective* deadline is earliest, so under a
+//! backlog the builds most likely to still matter run first and a
+//! far-deadline whale cannot starve a near-deadline group that arrived
+//! behind it. Unbounded jobs (some waiter has no deadline — they can
+//! never expire) sort after every bounded job; ties and control-less
+//! jobs fall back to FIFO order. Deadlines are *dynamic*: a late
+//! joiner extends the shared control while the job is still queued, so
+//! the heap key can go stale. Workers handle this lazily — a popped
+//! job whose control disagrees with its heap key is re-inserted under
+//! the fresh key instead of run, which keeps every pop O(log n) and
+//! never blocks the dispatcher on a re-sort.
+//!
 //! ## Panic isolation
 //!
 //! A build executes model code (`HmmBackend` implementations) against
@@ -31,9 +47,9 @@
 //! strands a parked request. [`BuildPool::spawn`] after shutdown
 //! returns `false` and the caller fails the group explicitly.
 
+use std::collections::BinaryHeap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -54,7 +70,8 @@ enum BuildDeadline {
 /// build, so the effective deadline is always the latest deadline of
 /// any attached waiter (unbounded once any waiter has none). A build
 /// whose probe fires therefore knows every then-attached waiter has
-/// expired.
+/// expired. While the job is still queued the same deadline doubles as
+/// its EDF priority key.
 #[derive(Debug)]
 pub struct BuildControl {
     deadline: Mutex<BuildDeadline>,
@@ -110,57 +127,171 @@ pub struct BuildJob {
     /// Damage control if `run` panics: tear down this job's cache
     /// entry and answer its waiters with an error response.
     pub on_panic: Box<dyn FnOnce() + Send>,
+    /// The group's shared deadline control, when the job has one: the
+    /// queue reads it for EDF ordering (and re-reads it on pop, so a
+    /// late joiner's extension re-sorts a still-queued job).
+    ctl: Option<Arc<BuildControl>>,
 }
 
 impl BuildJob {
-    /// A job from its body and panic cleanup.
+    /// A job from its body and panic cleanup (no deadline: FIFO among
+    /// unbounded jobs).
     pub fn new(
         run: impl FnOnce() + Send + 'static,
         on_panic: impl FnOnce() + Send + 'static,
     ) -> BuildJob {
-        BuildJob { run: Box::new(run), on_panic: Box::new(on_panic) }
+        BuildJob { run: Box::new(run), on_panic: Box::new(on_panic), ctl: None }
+    }
+
+    /// Attach the group's deadline control for EDF scheduling.
+    pub fn with_control(mut self, ctl: Arc<BuildControl>) -> BuildJob {
+        self.ctl = Some(ctl);
+        self
     }
 }
 
-/// A fixed pool of build workers fed by an unbounded queue (the queue
-/// must never block the dispatcher: backpressure on *requests* belongs
-/// to the admission stack, not the build path). See the
+/// One heap entry: the job plus the deadline snapshot it was ordered
+/// under (`None` = unbounded) and its FIFO sequence number.
+struct HeapEntry {
+    key: Option<Instant>,
+    seq: u64,
+    job: BuildJob,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key && self.seq == other.seq
+    }
+}
+
+impl Eq for HeapEntry {}
+
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapEntry {
+    /// `BinaryHeap` is a max-heap, so "greater" means "runs first":
+    /// earlier deadline beats later, any deadline beats unbounded, and
+    /// within a tie the smaller sequence number (earlier arrival) wins.
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        match (self.key, other.key) {
+            (None, None) => other.seq.cmp(&self.seq),
+            (None, Some(_)) => std::cmp::Ordering::Less,
+            (Some(_), None) => std::cmp::Ordering::Greater,
+            (Some(a), Some(b)) => b.cmp(&a).then(other.seq.cmp(&self.seq)),
+        }
+    }
+}
+
+/// The EDF job queue: a deadline heap under one mutex, a condvar for
+/// idle workers, and a closed flag for drain-then-exit shutdown.
+struct JobQueue {
+    state: Mutex<QueueState>,
+    ready: Condvar,
+}
+
+struct QueueState {
+    heap: BinaryHeap<HeapEntry>,
+    next_seq: u64,
+    closed: bool,
+}
+
+impl JobQueue {
+    fn new() -> JobQueue {
+        JobQueue {
+            state: Mutex::new(QueueState {
+                heap: BinaryHeap::new(),
+                next_seq: 0,
+                closed: false,
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Queue a job under its control's current deadline. `false` after
+    /// close (the job is dropped unrun, like a send on a closed
+    /// channel).
+    fn push(&self, job: BuildJob) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return false;
+        }
+        let key = job.ctl.as_ref().and_then(|c| c.deadline());
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.heap.push(HeapEntry { key, seq, job });
+        self.ready.notify_one();
+        true
+    }
+
+    /// Block for the earliest-deadline job; `None` once the queue is
+    /// closed *and* drained. A popped entry whose control has been
+    /// extended since it was queued is re-keyed and re-inserted rather
+    /// than returned — lazy reinsertion keeps stale heap keys from
+    /// ever scheduling out of (current) order.
+    fn pop(&self) -> Option<BuildJob> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(entry) = st.heap.pop() {
+                let fresh = entry.job.ctl.as_ref().and_then(|c| c.deadline());
+                if fresh != entry.key {
+                    st.heap.push(HeapEntry { key: fresh, ..entry });
+                    continue;
+                }
+                return Some(entry.job);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap();
+        }
+    }
+
+    /// Close the queue: pending jobs still pop, new pushes fail, and
+    /// every blocked worker wakes to drain or exit.
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+}
+
+/// A fixed pool of build workers fed by an unbounded EDF queue (the
+/// queue must never block the dispatcher: backpressure on *requests*
+/// belongs to the admission stack, not the build path). See the
 /// [module docs](self).
 pub struct BuildPool {
-    /// `None` after shutdown; closing the sender drains the workers.
-    tx: Mutex<Option<Sender<BuildJob>>>,
+    queue: Arc<JobQueue>,
     workers: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl BuildPool {
     /// Spawn `threads` build workers (minimum 1).
     pub fn new(threads: usize) -> BuildPool {
-        let (tx, rx) = channel::<BuildJob>();
-        let rx = Arc::new(Mutex::new(rx));
+        let queue = Arc::new(JobQueue::new());
         let workers = (0..threads.max(1))
             .map(|_| {
-                let rx = Arc::clone(&rx);
-                std::thread::spawn(move || worker_loop(rx))
+                let queue = Arc::clone(&queue);
+                std::thread::spawn(move || worker_loop(queue))
             })
             .collect();
-        BuildPool { tx: Mutex::new(Some(tx)), workers: Mutex::new(workers) }
+        BuildPool { queue, workers: Mutex::new(workers) }
     }
 
-    /// Queue a job for the next free worker. Returns `false` when the
-    /// pool has shut down — the job is dropped with *neither* closure
-    /// run, so the caller must fail its group itself.
+    /// Queue a job; the next free worker takes the earliest-deadline
+    /// job queued. Returns `false` when the pool has shut down — the
+    /// job is dropped with *neither* closure run, so the caller must
+    /// fail its group itself.
     pub fn spawn(&self, job: BuildJob) -> bool {
-        let tx = self.tx.lock().unwrap();
-        match tx.as_ref() {
-            Some(tx) => tx.send(job).is_ok(),
-            None => false,
-        }
+        self.queue.push(job)
     }
 
     /// Close the queue and join every worker. Already-queued jobs run
     /// to completion first; idempotent.
     pub fn shutdown(&self) {
-        drop(self.tx.lock().unwrap().take());
+        self.queue.close();
         let workers: Vec<JoinHandle<()>> = self.workers.lock().unwrap().drain(..).collect();
         for w in workers {
             let _ = w.join();
@@ -174,15 +305,8 @@ impl Drop for BuildPool {
     }
 }
 
-fn worker_loop(rx: Arc<Mutex<Receiver<BuildJob>>>) {
-    loop {
-        let job = {
-            let rx = rx.lock().unwrap();
-            match rx.recv() {
-                Ok(j) => j,
-                Err(_) => break, // queue closed and drained
-            }
-        };
+fn worker_loop(queue: Arc<JobQueue>) {
+    while let Some(job) = queue.pop() {
         // The job body owns no pool state, so unwinding out of it
         // cannot leave this worker inconsistent; the cleanup is also
         // guarded so a buggy handler cannot take the worker down.
@@ -196,6 +320,7 @@ fn worker_loop(rx: Arc<Mutex<Receiver<BuildJob>>>) {
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::mpsc::channel;
     use std::time::Duration;
 
     #[test]
@@ -239,6 +364,99 @@ mod tests {
             .collect();
         got.sort_unstable();
         assert_eq!(got, (0..8).collect::<Vec<_>>());
+        pool.shutdown();
+    }
+
+    /// Park a 1-worker pool's worker inside a job so later spawns
+    /// accumulate in the queue; returns the unblock sender. The gate
+    /// job reports in before blocking, so by the time this returns the
+    /// queue is empty and the worker is held.
+    fn gate(pool: &BuildPool) -> std::sync::mpsc::Sender<()> {
+        let (started_tx, started_rx) = channel();
+        let (unblock_tx, unblock_rx) = channel::<()>();
+        assert!(pool.spawn(BuildJob::new(
+            move || {
+                started_tx.send(()).unwrap();
+                let _ = unblock_rx.recv();
+            },
+            || {},
+        )));
+        started_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        unblock_tx
+    }
+
+    #[test]
+    fn queue_is_earliest_deadline_first() {
+        let pool = BuildPool::new(1);
+        let unblock = gate(&pool);
+        let now = Instant::now();
+        let (tx, rx) = channel();
+        // Queue far, near, mid (arrival order) plus one unbounded job;
+        // pop order must be near, mid, far, unbounded.
+        let deadlines = [
+            ("far", Some(now + Duration::from_secs(600))),
+            ("near", Some(now + Duration::from_secs(60))),
+            ("mid", Some(now + Duration::from_secs(300))),
+            ("unbounded", None),
+        ];
+        for (name, dl) in deadlines {
+            let tx = tx.clone();
+            let ctl = Arc::new(BuildControl::new(dl));
+            assert!(pool.spawn(
+                BuildJob::new(move || tx.send(name).unwrap(), || {}).with_control(ctl)
+            ));
+        }
+        unblock.send(()).unwrap();
+        let order: Vec<&str> = (0..4)
+            .map(|_| rx.recv_timeout(Duration::from_secs(10)).unwrap())
+            .collect();
+        assert_eq!(order, ["near", "mid", "far", "unbounded"]);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn equal_deadlines_and_controlless_jobs_run_fifo() {
+        let pool = BuildPool::new(1);
+        let unblock = gate(&pool);
+        let (tx, rx) = channel();
+        // No controls at all: pure FIFO.
+        for i in 0..4 {
+            let tx = tx.clone();
+            assert!(pool.spawn(BuildJob::new(move || tx.send(i).unwrap(), || {})));
+        }
+        unblock.send(()).unwrap();
+        let order: Vec<i32> = (0..4)
+            .map(|_| rx.recv_timeout(Duration::from_secs(10)).unwrap())
+            .collect();
+        assert_eq!(order, vec![0, 1, 2, 3], "control-less jobs keep arrival order");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn late_joiner_extension_reorders_queued_builds() {
+        let pool = BuildPool::new(1);
+        let unblock = gate(&pool);
+        let now = Instant::now();
+        let (tx, rx) = channel();
+        // "first" is queued with the earlier deadline, "second" later.
+        let first_ctl = Arc::new(BuildControl::new(Some(now + Duration::from_secs(60))));
+        let second_ctl = Arc::new(BuildControl::new(Some(now + Duration::from_secs(300))));
+        for (name, ctl) in [("first", &first_ctl), ("second", &second_ctl)] {
+            let tx = tx.clone();
+            assert!(pool.spawn(
+                BuildJob::new(move || tx.send(name).unwrap(), || {})
+                    .with_control(Arc::clone(ctl))
+            ));
+        }
+        // A late joiner with a far deadline extends "first" while it is
+        // still queued: its stale heap key is re-read on pop and the
+        // job re-sorts behind "second".
+        first_ctl.extend(Some(now + Duration::from_secs(900)));
+        unblock.send(()).unwrap();
+        let order: Vec<&str> = (0..2)
+            .map(|_| rx.recv_timeout(Duration::from_secs(10)).unwrap())
+            .collect();
+        assert_eq!(order, ["second", "first"], "extension demotes the queued job");
         pool.shutdown();
     }
 

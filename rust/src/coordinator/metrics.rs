@@ -116,6 +116,14 @@ pub struct ClientStats {
     /// This client's end-to-end latencies (seconds),
     /// reservoir-sampled at [`CLIENT_RESERVOIR_CAP`].
     latencies: Mutex<Reservoir>,
+    /// Queue-wait component of each completed request (seconds):
+    /// admission to decode-worker pickup, reservoir-sampled.
+    queue_waits: Mutex<Reservoir>,
+    /// Decode-wait component (seconds): everything after pickup —
+    /// table wait plus beam stepping — reservoir-sampled. Together
+    /// with `queue_waits` this attributes a tenant's tail: a high
+    /// `q_p99` with a flat `d_p99` is contention, not decode cost.
+    decode_waits: Mutex<Reservoir>,
 }
 
 impl Default for ClientStats {
@@ -127,6 +135,8 @@ impl Default for ClientStats {
             quota_denied: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
             latencies: Mutex::new(Reservoir::new(CLIENT_RESERVOIR_CAP)),
+            queue_waits: Mutex::new(Reservoir::new(CLIENT_RESERVOIR_CAP)),
+            decode_waits: Mutex::new(Reservoir::new(CLIENT_RESERVOIR_CAP)),
         }
     }
 }
@@ -138,6 +148,14 @@ impl ClientStats {
         self.latencies.lock().unwrap().push(secs);
     }
 
+    /// Record one completed request's latency split: time queued
+    /// before a decode worker picked it up vs time from pickup to
+    /// answer (both seconds).
+    pub fn record_waits(&self, queued: f64, decode: f64) {
+        self.queue_waits.lock().unwrap().push(queued);
+        self.decode_waits.lock().unwrap().push(decode);
+    }
+
     /// Quantiles over this client's (reservoir-sampled) latencies;
     /// `None` before the first recorded completion.
     pub fn latency_stats(&self) -> Option<Stats> {
@@ -146,6 +164,28 @@ impl ClientStats {
             None
         } else {
             Some(Stats::of(l.samples()))
+        }
+    }
+
+    /// Quantiles over this client's queue-wait component; `None`
+    /// before the first [`ClientStats::record_waits`].
+    pub fn queue_wait_stats(&self) -> Option<Stats> {
+        let q = self.queue_waits.lock().unwrap();
+        if q.is_empty() {
+            None
+        } else {
+            Some(Stats::of(q.samples()))
+        }
+    }
+
+    /// Quantiles over this client's decode-wait component; `None`
+    /// before the first [`ClientStats::record_waits`].
+    pub fn decode_wait_stats(&self) -> Option<Stats> {
+        let d = self.decode_waits.lock().unwrap();
+        if d.is_empty() {
+            None
+        } else {
+            Some(Stats::of(d.samples()))
         }
     }
 
@@ -161,8 +201,16 @@ impl ClientStats {
                 )
             })
             .unwrap_or_default();
+        let waits = match (self.queue_wait_stats(), self.decode_wait_stats()) {
+            (Some(q), Some(d)) => format!(
+                " q_p99={} d_p99={}",
+                crate::util::timer::fmt_secs(q.p99),
+                crate::util::timer::fmt_secs(d.p99)
+            ),
+            _ => String::new(),
+        };
         format!(
-            "submitted={} completed={} shed={} quota_denied={} queue_depth={}{lat}",
+            "submitted={} completed={} shed={} quota_denied={} queue_depth={}{lat}{waits}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.shed.load(Ordering::Relaxed),
@@ -250,6 +298,37 @@ pub struct Metrics {
     /// — previously-built groups a restarted replica serves with zero
     /// cold builds.
     pub warm_started: AtomicU64,
+    /// Sessions opened (turn 1 admitted into the `SessionTable`).
+    pub sessions_opened: AtomicU64,
+    /// Turns that resumed a pinned session snapshot instead of
+    /// re-decoding the prefix from scratch.
+    pub sessions_resumed: AtomicU64,
+    /// Turns answered from the session's buffered last response
+    /// (duplicate resume key — idempotent retry, no decode).
+    pub session_replays: AtomicU64,
+    /// Sessions reaped because their lease expired (silent client),
+    /// whether idle or mid-decode.
+    pub sessions_expired: AtomicU64,
+    /// Idle sessions evicted to stay under the pinned-byte budget
+    /// (`--session-budget-mb`, LRU-of-idle).
+    pub sessions_evicted: AtomicU64,
+    /// Sessions destroyed by explicit client cancellation.
+    pub sessions_cancelled: AtomicU64,
+    /// Session turns re-pinned to a different replica because the
+    /// pinned one became ineligible (breaker open / saturated). Lives
+    /// in the **fleet** registry.
+    pub session_migrations: AtomicU64,
+    /// Gauge: sessions currently pinned in the `SessionTable`.
+    pub sessions_live: AtomicU64,
+    /// Gauge: bytes of beam-state snapshots pinned by live sessions
+    /// (charged against `--session-budget-mb`; the shared constraint
+    /// tables are accounted by `table_bytes`, not here).
+    pub session_bytes: AtomicU64,
+    /// Stream frames delivered to session/streaming clients.
+    pub stream_frames: AtomicU64,
+    /// Stream tokens dropped on a full or disconnected channel (the
+    /// response still carries them; never a correctness loss).
+    pub stream_dropped: AtomicU64,
     /// Rejected by the `LoadShed` middleware before reaching the queue.
     pub shed: AtomicU64,
     /// Requests whose deadline fired (`Timeout` middleware).
@@ -355,6 +434,17 @@ impl Metrics {
             spill_rejected: AtomicU64::new(0),
             spill_corrupt: AtomicU64::new(0),
             warm_started: AtomicU64::new(0),
+            sessions_opened: AtomicU64::new(0),
+            sessions_resumed: AtomicU64::new(0),
+            session_replays: AtomicU64::new(0),
+            sessions_expired: AtomicU64::new(0),
+            sessions_evicted: AtomicU64::new(0),
+            sessions_cancelled: AtomicU64::new(0),
+            session_migrations: AtomicU64::new(0),
+            sessions_live: AtomicU64::new(0),
+            session_bytes: AtomicU64::new(0),
+            stream_frames: AtomicU64::new(0),
+            stream_dropped: AtomicU64::new(0),
             shed: AtomicU64::new(0),
             timed_out: AtomicU64::new(0),
             hedged: AtomicU64::new(0),
@@ -528,7 +618,7 @@ impl Metrics {
             })
             .unwrap_or_else(|| "latency n/a".into());
         format!(
-            "submitted={} completed={} rejected={} shed={} quota_denied={} fair_shed={} adaptive_shed={} adaptive_limit={} timed_out={} hedged={} hedge_wins={} satisfied={} cache h/m={}/{} joins={} builds={} table_build_ms={:.1} build_queue_ms={:.1} builds_inflight={} build_waiting={} build_failed={} table_bytes={} spill h/w={}/{} spill_rejected={} spill_corrupt={} spill_bytes={} warm={} fleet_routed={} fleet_degraded={} fleet_shed={} breaker_trips={} breaker_probes={} breaker_rejected={} retries={} retry_exhausted={} {}",
+            "submitted={} completed={} rejected={} shed={} quota_denied={} fair_shed={} adaptive_shed={} adaptive_limit={} timed_out={} hedged={} hedge_wins={} satisfied={} cache h/m={}/{} joins={} builds={} table_build_ms={:.1} build_queue_ms={:.1} builds_inflight={} build_waiting={} build_failed={} table_bytes={} spill h/w={}/{} spill_rejected={} spill_corrupt={} spill_bytes={} warm={} sessions_opened={} sessions_resumed={} session_replays={} sessions_expired={} sessions_evicted={} sessions_cancelled={} sessions_live={} session_bytes={} stream_frames={} stream_dropped={} session_migrations={} fleet_routed={} fleet_degraded={} fleet_shed={} breaker_trips={} breaker_probes={} breaker_rejected={} retries={} retry_exhausted={} {}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -557,6 +647,17 @@ impl Metrics {
             self.spill_corrupt.load(Ordering::Relaxed),
             self.spill_bytes.load(Ordering::Relaxed),
             self.warm_started.load(Ordering::Relaxed),
+            self.sessions_opened.load(Ordering::Relaxed),
+            self.sessions_resumed.load(Ordering::Relaxed),
+            self.session_replays.load(Ordering::Relaxed),
+            self.sessions_expired.load(Ordering::Relaxed),
+            self.sessions_evicted.load(Ordering::Relaxed),
+            self.sessions_cancelled.load(Ordering::Relaxed),
+            self.sessions_live.load(Ordering::Relaxed),
+            self.session_bytes.load(Ordering::Relaxed),
+            self.stream_frames.load(Ordering::Relaxed),
+            self.stream_dropped.load(Ordering::Relaxed),
+            self.session_migrations.load(Ordering::Relaxed),
             self.fleet_routed.load(Ordering::Relaxed),
             self.fleet_degraded.load(Ordering::Relaxed),
             self.fleet_shed.load(Ordering::Relaxed),
@@ -671,6 +772,39 @@ mod tests {
         let summary = m.client_summary();
         assert!(summary.contains("p50="), "{summary}");
         assert!(summary.contains("p99="), "{summary}");
+    }
+
+    #[test]
+    fn client_wait_split_attributes_queue_vs_decode() {
+        let m = Metrics::new();
+        // A contended client: long queue waits, short decode.
+        for _ in 0..50 {
+            m.client("contended").record_latency(1.01);
+            m.client("contended").record_waits(1.0, 0.01);
+        }
+        let q = m.client("contended").queue_wait_stats().unwrap();
+        let d = m.client("contended").decode_wait_stats().unwrap();
+        assert!(q.p99 > 0.5, "q_p99 {}", q.p99);
+        assert!(d.p99 < 0.1, "d_p99 {}", d.p99);
+        let summary = m.client_summary();
+        assert!(summary.contains("q_p99="), "{summary}");
+        assert!(summary.contains("d_p99="), "{summary}");
+        // A client with latencies but no wait split renders without it.
+        m.client("plain").record_latency(0.5);
+        assert!(m.client("plain").queue_wait_stats().is_none());
+    }
+
+    #[test]
+    fn session_counters_render_in_summary() {
+        let m = Metrics::new();
+        m.sessions_opened.fetch_add(2, Ordering::Relaxed);
+        m.sessions_resumed.fetch_add(1, Ordering::Relaxed);
+        m.session_bytes.store(1024, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("sessions_opened=2"), "{s}");
+        assert!(s.contains("sessions_resumed=1"), "{s}");
+        assert!(s.contains("session_bytes=1024"), "{s}");
+        assert!(s.contains("stream_frames=0"), "{s}");
     }
 
     #[test]

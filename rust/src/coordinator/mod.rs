@@ -52,6 +52,7 @@ pub mod buildpool;
 pub mod cache;
 pub mod fleet;
 pub mod metrics;
+pub mod session;
 pub mod store;
 
 use std::path::PathBuf;
@@ -64,7 +65,8 @@ use std::time::{Duration, Instant};
 use crate::data::Corpus;
 use crate::dfa::Dfa;
 use crate::generate::{
-    engine, BuildOptions, CancelProbe, ConstraintTable, DecodeConfig, Generation,
+    engine, BuildOptions, CancelFlag, CancelProbe, ConstraintTable, DecodeConfig, Generation,
+    SessionSnapshot, StreamFrame,
 };
 use crate::hmm::{Hmm, HmmBackend};
 use crate::lm::LanguageModel;
@@ -73,6 +75,8 @@ use crate::service::{Deadlined, Expirable, Keyed, Readiness, Service, ServiceErr
 use buildpool::{BuildControl, BuildJob, BuildPool};
 use cache::{ByteSized, Lookup, LruCache};
 use metrics::{ClientStats, Metrics};
+pub use session::SessionEnvelope;
+use session::{Lease, ResumeState, SessionTable, TurnAdmission, TurnOutcome};
 use store::{ReadOutcome, TableStore, WriteOutcome};
 
 /// The decode-state cache specialized to the serving pipeline: values
@@ -144,18 +148,40 @@ pub struct ServeRequest {
     /// Concept words the generation must contain.
     pub concepts: Vec<String>,
     /// Cooperative deadline; see [`crate::generate::DecodeConfig::deadline`].
+    /// For session turns this is the *per-turn* deadline — the session
+    /// itself lives under the [`SessionTable`]'s lease, a separate
+    /// clock.
     pub deadline: Option<Instant>,
     /// Client principal ([`ANON_CLIENT`] unless declared) — the key
     /// for `Quota` buckets, `FairQueue` queues and per-client metrics.
     pub client_id: String,
     /// Fair-queueing weight (≥ 1); see [`Keyed::weight`].
     pub weight: u32,
+    /// Session envelope: which multi-turn session this request is one
+    /// turn of. `None` for classic one-shot requests.
+    pub session: Option<SessionEnvelope>,
+    /// Streamed-token delivery: committed tokens are pushed here as
+    /// bounded [`StreamFrame`]s while the turn decodes. The response
+    /// stays authoritative; a full channel coalesces, never blocks.
+    pub stream: Option<std::sync::mpsc::SyncSender<StreamFrame>>,
+    /// Client-initiated cancellation: flipping the flag frees the
+    /// decode lane at the next step boundary and (for a session turn)
+    /// destroys the session.
+    pub cancel: Option<Arc<CancelFlag>>,
 }
 
 impl ServeRequest {
     /// An anonymous weight-1 request.
     pub fn new(concepts: Vec<String>) -> Self {
-        ServeRequest { concepts, deadline: None, client_id: ANON_CLIENT.into(), weight: 1 }
+        ServeRequest {
+            concepts,
+            deadline: None,
+            client_id: ANON_CLIENT.into(),
+            weight: 1,
+            session: None,
+            stream: None,
+            cancel: None,
+        }
     }
 
     /// A request attributed to `client_id` (weight 1).
@@ -167,6 +193,48 @@ impl ServeRequest {
     pub fn with_weight(mut self, weight: u32) -> Self {
         self.weight = weight;
         self
+    }
+
+    /// Make this request turn `turn` of session `session_id`,
+    /// emitting at most `turn_tokens` tokens before suspending.
+    /// `resume_key` is the turn's idempotency key: retrying with the
+    /// same key replays the answer instead of re-decoding.
+    pub fn with_session(
+        mut self,
+        session_id: impl Into<String>,
+        resume_key: impl Into<String>,
+        turn: u32,
+        turn_tokens: usize,
+    ) -> Self {
+        self.session = Some(SessionEnvelope {
+            session_id: session_id.into(),
+            resume_key: resume_key.into(),
+            turn,
+            turn_tokens,
+        });
+        self
+    }
+
+    /// Attach a bounded stream of `cap` frames; returns the receiver
+    /// the client drains. Committed tokens arrive incrementally; the
+    /// final frame (`last = true`) carries everything undelivered.
+    pub fn with_stream(mut self, cap: usize) -> (Self, Receiver<StreamFrame>) {
+        let (tx, rx) = sync_channel(cap.max(1));
+        self.stream = Some(tx);
+        (self, rx)
+    }
+
+    /// Attach a cancellation flag; returns the client's handle.
+    pub fn with_cancel(mut self) -> (Self, Arc<CancelFlag>) {
+        let flag = Arc::new(CancelFlag::new());
+        self.cancel = Some(Arc::clone(&flag));
+        (self, flag)
+    }
+}
+
+impl crate::service::Sessioned for ServeRequest {
+    fn session_id(&self) -> Option<&str> {
+        self.session.as_ref().map(|e| e.session_id.as_str())
     }
 }
 
@@ -210,6 +278,18 @@ pub struct Request {
     /// dispatcher and workers attribute completions without re-taking
     /// the registry's client-map lock per request.
     pub client_stats: Arc<ClientStats>,
+    /// Session envelope carried from the [`ServeRequest`].
+    pub session: Option<SessionEnvelope>,
+    /// Set by the dispatcher when the turn resumes a pinned snapshot;
+    /// consumed by the decode worker (or restored on rollback).
+    pub resume: Option<ResumeState>,
+    /// The session's lease, attached at admission; the worker registers
+    /// it as the lane's cancel probe so expiry frees the lane mid-batch.
+    pub lease: Option<Arc<Lease>>,
+    /// Streamed-token channel carried from the [`ServeRequest`].
+    pub stream: Option<std::sync::mpsc::SyncSender<StreamFrame>>,
+    /// Cancellation flag carried from the [`ServeRequest`].
+    pub cancel: Option<Arc<CancelFlag>>,
 }
 
 /// What the coordinator answers: the generated text plus timing
@@ -220,6 +300,13 @@ pub struct Response {
     pub id: u64,
     /// The decoded generation, rendered through the vocabulary.
     pub text: String,
+    /// The raw token ids behind `text` — the full concatenated
+    /// sequence so far for a session turn. This is what bit-identity
+    /// across resume is asserted on (token ids, not rendered text).
+    pub tokens: Vec<usize>,
+    /// The picked beam's combined neural+symbolic score (bit-exact
+    /// across suspend/resume).
+    pub score: f64,
     /// Whether the DFA accepted (every requested concept was planted).
     pub satisfied: bool,
     /// The request's deadline fired before decoding finished; `text`
@@ -241,6 +328,19 @@ pub struct Response {
     /// Stamped by the fleet balancer when the request was served below
     /// its entry tier (spill-down). A solo server never degrades.
     pub degraded: bool,
+    /// The session this response is a turn of (`None` for one-shots).
+    pub session_id: Option<String>,
+    /// The turn number answered (0 for one-shots).
+    pub turn: u32,
+    /// The generation ran to completion — no further turn will make
+    /// progress. `false` means the turn suspended and is resumable.
+    pub session_done: bool,
+    /// This response was replayed from the session's buffer (duplicate
+    /// resume key) rather than decoded.
+    pub replayed: bool,
+    /// Why `failed` is set, when it is — surfaced through
+    /// [`ServiceError::Failed`].
+    pub fail_reason: Option<String>,
 }
 
 impl Expirable for Response {
@@ -298,6 +398,13 @@ pub struct ServerConfig {
     /// Byte budget for the spill directory (CLI `--spill-budget-mb`);
     /// least-recently-touched artifacts are deleted past it.
     pub spill_budget_bytes: usize,
+    /// Byte budget for pinned session snapshots (CLI
+    /// `--session-budget-mb`); past it, least-recently-touched idle
+    /// sessions are evicted.
+    pub session_budget_bytes: usize,
+    /// Session lease TTL (CLI `--session-ttl-ms`): how long a silent
+    /// client keeps its session pinned before it is reaped.
+    pub session_ttl: Duration,
     /// Beam-search configuration shared by every request.
     pub decode: DecodeConfig,
 }
@@ -315,6 +422,8 @@ impl Default for ServerConfig {
             table_backend: TableBackend::Dense,
             spill_dir: None,
             spill_budget_bytes: 256 << 20,
+            session_budget_bytes: 64 << 20,
+            session_ttl: Duration::from_secs(30),
             decode: DecodeConfig::default(),
         }
     }
@@ -341,6 +450,8 @@ struct Shared {
     /// tables' shape), stamped into every artifact and validated
     /// against every artifact read back.
     model_digest: u64,
+    /// The pinned multi-turn session registry ([`session`]).
+    sessions: SessionTable,
 }
 
 /// A dispatched batch: one concept group with its shared decode state.
@@ -448,6 +559,11 @@ impl Server {
             tables: Mutex::new(tables),
             store: artifact_store,
             model_digest,
+            sessions: SessionTable::new(
+                cfg.session_budget_bytes,
+                cfg.session_ttl,
+                Arc::clone(&metrics),
+            ),
         });
         let (intake, intake_rx) = sync_channel::<Request>(cfg.queue_capacity);
         let (work_tx, work_rx) = sync_channel::<Batch>(cfg.workers * 2);
@@ -498,6 +614,11 @@ impl Server {
             submitted_at: Instant::now(),
             deadline: req.deadline,
             client_stats: Arc::clone(&client_stats),
+            session: req.session,
+            resume: None,
+            lease: None,
+            stream: req.stream,
+            cancel: req.cancel,
         };
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         client_stats.submitted.fetch_add(1, Ordering::Relaxed);
@@ -586,7 +707,11 @@ impl Service<ServeRequest> for Server {
         let rx = self.submit_request(req)?;
         let resp = rx.recv().map_err(|_| ServiceError::Closed)?;
         if resp.failed {
-            return Err(ServiceError::Failed("constraint-table build failed".into()));
+            let why = resp
+                .fail_reason
+                .clone()
+                .unwrap_or_else(|| "constraint-table build failed".into());
+            return Err(ServiceError::Failed(why));
         }
         Ok(resp)
     }
@@ -662,7 +787,15 @@ enum Unserved {
 /// admission slot. Counted as completed — the request *was* answered —
 /// so per-client conservation (`offered = completed + shed`) holds; no
 /// latency is recorded, since an unserved answer is not decode work.
-fn answer_unserved(shared: &Shared, req: Request, why: Unserved) {
+fn answer_unserved(shared: &Shared, mut req: Request, why: Unserved) {
+    // A session turn that never decoded must not advance the turn
+    // counter: roll the pinned snapshot back (if this turn borrowed
+    // it) so the client can retry the same turn number.
+    if let Some(env) = &req.session {
+        shared
+            .sessions
+            .complete_turn(env, TurnOutcome::Rollback { resume: req.resume.take() });
+    }
     shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
     req.client_stats.completed.fetch_add(1, Ordering::Relaxed);
     let waited = req.submitted_at.elapsed();
@@ -672,6 +805,8 @@ fn answer_unserved(shared: &Shared, req: Request, why: Unserved) {
     let _ = req.reply.send(Response {
         id: req.id,
         text: String::new(),
+        tokens: Vec::new(),
+        score: f64::NEG_INFINITY,
         satisfied: false,
         timed_out: matches!(why, Unserved::TimedOut),
         failed: matches!(why, Unserved::Failed),
@@ -679,6 +814,70 @@ fn answer_unserved(shared: &Shared, req: Request, why: Unserved) {
         queue_wait: waited,
         tier: shared.cfg.table_backend.bits(),
         degraded: false,
+        session_id: req.session.as_ref().map(|e| e.session_id.clone()),
+        turn: req.session.as_ref().map_or(0, |e| e.turn),
+        session_done: false,
+        replayed: false,
+        fail_reason: matches!(why, Unserved::Failed)
+            .then(|| "constraint-table build failed".to_string()),
+    });
+}
+
+/// Answer a duplicate session turn from the buffered response of the
+/// turn it repeats. No decode work happens and no latency is recorded;
+/// the replay is byte-identical to the original modulo the transport
+/// fields (`id`, `latency`) that necessarily belong to this request.
+fn answer_replay(shared: &Shared, req: Request, mut resp: Response) {
+    shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
+    req.client_stats.completed.fetch_add(1, Ordering::Relaxed);
+    shared.metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
+    resp.id = req.id;
+    resp.replayed = true;
+    resp.latency = req.submitted_at.elapsed();
+    resp.queue_wait = resp.latency;
+    // A streaming replay re-delivers the committed tokens as one final
+    // frame so the stream consumer converges with the response body.
+    if let Some(tx) = &req.stream {
+        let frame = StreamFrame { tokens: resp.tokens.clone(), last: true };
+        let n = frame.tokens.len() as u64;
+        match tx.try_send(frame) {
+            Ok(()) => {
+                shared.metrics.stream_frames.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                shared.metrics.stream_dropped.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+    }
+    let _ = req.reply.send(resp);
+}
+
+/// Answer a session turn the [`SessionTable`] refused (unknown id,
+/// turn out of order, concurrent turn in flight, session complete).
+/// The session's pinned state is untouched — a reject never advances
+/// or destroys anything — so a client bug cannot corrupt the session.
+fn answer_rejected(shared: &Shared, req: Request, reason: &'static str) {
+    shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
+    req.client_stats.completed.fetch_add(1, Ordering::Relaxed);
+    let waited = req.submitted_at.elapsed();
+    shared.metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
+    let _ = req.reply.send(Response {
+        id: req.id,
+        text: String::new(),
+        tokens: Vec::new(),
+        score: f64::NEG_INFINITY,
+        satisfied: false,
+        timed_out: false,
+        failed: true,
+        latency: waited,
+        queue_wait: waited,
+        tier: shared.cfg.table_backend.bits(),
+        degraded: false,
+        session_id: req.session.as_ref().map(|e| e.session_id.clone()),
+        turn: req.session.as_ref().map_or(0, |e| e.turn),
+        session_done: false,
+        replayed: false,
+        fail_reason: Some(reason.to_string()),
     });
 }
 
@@ -978,6 +1177,10 @@ fn spawn_build(
     };
     shared.metrics.builds_inflight.fetch_add(1, Ordering::Relaxed);
     let queued_at = Instant::now();
+    // The job carries the group's deadline control so the pool can
+    // schedule it earliest-deadline-first (and re-sort it when a late
+    // joiner extends the deadline while it queues).
+    let ctl = Arc::clone(&task.ctl);
     let run = {
         let shared = Arc::clone(shared);
         let work = work.clone();
@@ -993,7 +1196,7 @@ fn spawn_build(
             fail_pending(&shared, &key);
         }
     };
-    if !strong.spawn(BuildJob::new(run, on_panic)) {
+    if !strong.spawn(BuildJob::new(run, on_panic).with_control(ctl)) {
         // The pool shut down under us; the job (and its closures) was
         // dropped unrun, so fail the group here.
         shared.metrics.builds_inflight.fetch_sub(1, Ordering::Relaxed);
@@ -1112,14 +1315,39 @@ fn dispatcher_loop(
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
+        // Reap silent sessions once per window, on the dispatch path
+        // that would otherwise admit turns against their stale pins.
+        shared.sessions.reap();
         // Group by concept set; one shared table per group. The
         // dispatcher only *resolves* each group against the cache —
         // builds run on the pool — so a window full of cold groups
         // costs this thread a few cache transitions, not K builds.
+        // Session turns are admitted against the session table first:
+        // a fresh turn 1 joins the normal grouped build path; a
+        // resumed turn already holds its pinned table and skips the
+        // cache entirely; replays and protocol rejects are answered
+        // here without decode work.
         let mut groups: std::collections::HashMap<String, Vec<Request>> =
             std::collections::HashMap::new();
-        for r in pending {
-            groups.entry(concept_key(&r.concepts)).or_default().push(r);
+        let mut resumed: Vec<Request> = Vec::new();
+        for mut r in pending {
+            let Some(env) = r.session.clone() else {
+                groups.entry(concept_key(&r.concepts)).or_default().push(r);
+                continue;
+            };
+            match shared.sessions.begin_turn(&env) {
+                TurnAdmission::Fresh(lease) => {
+                    r.lease = Some(lease);
+                    groups.entry(concept_key(&r.concepts)).or_default().push(r);
+                }
+                TurnAdmission::Resume { resume, lease } => {
+                    r.lease = Some(lease);
+                    r.resume = Some(resume);
+                    resumed.push(r);
+                }
+                TurnAdmission::Replay(resp) => answer_replay(&shared, r, resp),
+                TurnAdmission::Reject(reason) => answer_rejected(&shared, r, reason),
+            }
         }
         // When the decode pool is gone (work.send fails) we stop
         // dispatching, but every already-popped request in this window
@@ -1137,6 +1365,16 @@ fn dispatcher_loop(
                 decode_dead = true;
             }
         }
+        for r in resumed {
+            if decode_dead {
+                shared.metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
+                continue;
+            }
+            let state = Arc::clone(&r.resume.as_ref().expect("resume set").state);
+            if !dispatch_batches(&shared, &work, state, vec![r]) {
+                decode_dead = true;
+            }
+        }
         if decode_dead {
             return;
         }
@@ -1145,22 +1383,38 @@ fn dispatcher_loop(
 
 /// One co-batched request inside a worker's step loop: its admission
 /// slot, its SoA decode state, and the accounting it carries.
-struct DecodeLane {
+struct DecodeLane<'a> {
     req: Request,
-    slot: InFlightSlot,
+    slot: InFlightSlot<'a>,
     state: engine::RequestState,
     queue_wait: Duration,
 }
 
-/// Final accounting for one request: throughput/latency metrics, slot
-/// release (before replying, so a caller that sees the response also
-/// sees the freed admission slot), and the reply itself.
+/// What happens to a request's session entry when its turn finishes.
+/// `None` for sessionless requests; the worker maps decode outcomes
+/// (suspended / done / cancelled / expired-in-queue) to the matching
+/// [`TurnOutcome`] here, and `finish_request` commits it *before*
+/// releasing the admission slot or replying — a client that sees the
+/// response also sees the session's next-turn state.
+enum SessionFate {
+    None,
+    Continue(SessionSnapshot, Arc<(Dfa, ConstraintTable)>),
+    Done,
+    Destroy,
+    Rollback(Option<ResumeState>),
+}
+
+/// Final accounting for one request: session-turn commit, throughput
+/// and latency metrics (queue-wait and decode-wait split per client),
+/// slot release (before replying, so a caller that sees the response
+/// also sees the freed admission slot), and the reply itself.
 fn finish_request(
     shared: &Shared,
     req: Request,
     mut slot: InFlightSlot,
     gen: Generation,
     queue_wait: Duration,
+    fate: SessionFate,
 ) {
     let latency = req.submitted_at.elapsed();
     shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
@@ -1176,11 +1430,17 @@ fn finish_request(
             .metrics
             .record_latency(latency.as_secs_f64(), queue_wait.as_secs_f64());
         req.client_stats.record_latency(latency.as_secs_f64());
+        req.client_stats.record_waits(
+            queue_wait.as_secs_f64(),
+            latency.saturating_sub(queue_wait).as_secs_f64(),
+        );
     }
-    slot.release();
-    let _ = req.reply.send(Response {
+    let session_done = matches!(fate, SessionFate::Done | SessionFate::Destroy);
+    let resp = Response {
         id: req.id,
         text: shared.corpus.vocab.decode(&gen.tokens),
+        tokens: gen.tokens,
+        score: gen.score,
         satisfied: gen.satisfied,
         timed_out: gen.timed_out,
         failed: false,
@@ -1188,7 +1448,28 @@ fn finish_request(
         queue_wait,
         tier: shared.cfg.table_backend.bits(),
         degraded: false,
-    });
+        session_id: req.session.as_ref().map(|e| e.session_id.clone()),
+        turn: req.session.as_ref().map_or(0, |e| e.turn),
+        session_done,
+        replayed: false,
+        fail_reason: None,
+    };
+    if let Some(env) = &req.session {
+        let outcome = match fate {
+            SessionFate::Continue(snapshot, state) => {
+                Some(TurnOutcome::Continue { snapshot, state, response: resp.clone() })
+            }
+            SessionFate::Done => Some(TurnOutcome::Done { response: resp.clone() }),
+            SessionFate::Destroy => Some(TurnOutcome::Destroy),
+            SessionFate::Rollback(resume) => Some(TurnOutcome::Rollback { resume }),
+            SessionFate::None => None,
+        };
+        if let Some(outcome) = outcome {
+            shared.sessions.complete_turn(env, outcome);
+        }
+    }
+    slot.release();
+    let _ = req.reply.send(resp);
 }
 
 fn worker_loop(work: Arc<Mutex<Receiver<Batch>>>, shared: Arc<Shared>) {
@@ -1212,10 +1493,12 @@ fn worker_loop(work: Arc<Mutex<Receiver<Batch>>>, shared: Arc<Shared>) {
         // serving, all stepped *together* so every step fuses the whole
         // batch's beams into one panel kernel sweep over the backend.
         let mut lanes: Vec<DecodeLane> = Vec::new();
-        for (req, slot) in batch.requests.into_iter().zip(slots) {
+        for (mut req, slot) in batch.requests.into_iter().zip(slots) {
             let queue_wait = batch.dispatched_at.duration_since(req.submitted_at);
             // Deadline already blown while queued: answer immediately
-            // instead of burning a decode lane on abandoned work.
+            // instead of burning a decode lane on abandoned work. A
+            // session turn rolls its borrowed snapshot back so the
+            // same turn number can be retried.
             if req.deadline.is_some_and(|d| Instant::now() >= d) {
                 let gen = Generation {
                     tokens: Vec::new(),
@@ -1223,10 +1506,38 @@ fn worker_loop(work: Arc<Mutex<Receiver<Batch>>>, shared: Arc<Shared>) {
                     satisfied: false,
                     timed_out: true,
                 };
-                finish_request(&shared, req, slot, gen, queue_wait);
+                let fate = if req.session.is_some() {
+                    SessionFate::Rollback(req.resume.take())
+                } else {
+                    SessionFate::None
+                };
+                finish_request(&shared, req, slot, gen, queue_wait, fate);
                 continue;
             }
-            let state = engine::RequestState::new(&*shared.model, dfa, req.deadline);
+            // A resumed turn rebuilds its beam state from the pinned
+            // snapshot — bit-identical to a from-scratch decode that
+            // had run this far — and keeps stepping under a fresh
+            // per-turn step limit. A first turn starts cold.
+            let mut state = match req.resume.take() {
+                Some(r) => {
+                    engine::RequestState::resume(&*shared.model, dfa, &r.snapshot, req.deadline)
+                }
+                None => engine::RequestState::new(&*shared.model, dfa, req.deadline),
+            };
+            if let Some(env) = &req.session {
+                state.set_step_limit(Some(state.steps() + env.turn_tokens.max(1)));
+            }
+            // A lease that expires mid-decode cancels the lane at the
+            // next step boundary, exactly like an explicit cancel flag.
+            if let Some(lease) = &req.lease {
+                state.add_cancel_probe(Arc::clone(lease) as Arc<dyn CancelProbe>);
+            }
+            if let Some(flag) = &req.cancel {
+                state.add_cancel_probe(Arc::clone(flag) as Arc<dyn CancelProbe>);
+            }
+            if let Some(tx) = req.stream.take() {
+                state.attach_stream(engine::StreamSink::new(tx));
+            }
             lanes.push(DecodeLane { req, slot, state, queue_wait });
         }
         // Per-request deadlines live in each lane's RequestState, so a
@@ -1246,9 +1557,40 @@ fn worker_loop(work: Arc<Mutex<Receiver<Batch>>>, shared: Arc<Shared>) {
             let mut i = 0;
             while i < lanes.len() {
                 if lanes[i].state.finished() {
-                    let lane = lanes.remove(i);
+                    let mut lane = lanes.remove(i);
                     let gen = lane.state.generation(dfa);
-                    finish_request(&shared, lane.req, lane.slot, gen, lane.queue_wait);
+                    // Flush the remaining uncommitted tokens as the
+                    // stream's final frame before replying, so the
+                    // stream converges with the response body.
+                    if let Some((frames, dropped)) = lane.state.flush_stream(&gen) {
+                        shared.metrics.stream_frames.fetch_add(frames, Ordering::Relaxed);
+                        shared.metrics.stream_dropped.fetch_add(dropped, Ordering::Relaxed);
+                    }
+                    let fate = if lane.req.session.is_some() {
+                        if lane.state.cancelled() {
+                            // Explicit cancel or lease expiry mid-turn:
+                            // the session is dead, free its pins now.
+                            SessionFate::Destroy
+                        } else if lane.state.suspended()
+                            || (lane.state.timed_out() && lane.state.has_live_beams())
+                        {
+                            // Turn budget reached (or per-turn deadline
+                            // hit with live beams): pin the snapshot
+                            // for the next turn.
+                            SessionFate::Continue(
+                                lane.state.snapshot(),
+                                Arc::clone(&batch.state),
+                            )
+                        } else {
+                            // Beams ran to EOS / token budget: the
+                            // session is complete (tombstoned for
+                            // replay until the lease expires).
+                            SessionFate::Done
+                        }
+                    } else {
+                        SessionFate::None
+                    };
+                    finish_request(&shared, lane.req, lane.slot, gen, lane.queue_wait, fate);
                 } else {
                     i += 1;
                 }

@@ -1,0 +1,592 @@
+//! Multi-turn session state: leases, pinned snapshots, idempotent
+//! resume keys.
+//!
+//! A *session* lets a client decode one long constrained generation
+//! across many requests: turn k suspends the beam search after its
+//! token budget ([`crate::generate::engine::RequestState`] snapshots
+//! into a [`SessionSnapshot`]), and turn k+1 resumes from the pinned
+//! snapshot plus an `Arc` to the group's constraint table — instead of
+//! re-decoding the whole prefix from scratch. The [`SessionTable`]
+//! here owns that pinned state and enforces the protocol discipline
+//! around it (modeled on lease/outbox dispatcher designs):
+//!
+//! - **Leases with heartbeat expiry.** Every session holds a [`Lease`]
+//!   renewed by each turn. A silent client's lease runs out and the
+//!   session is reaped — by the dispatcher's periodic
+//!   [`SessionTable::reap`] when idle, or mid-decode through the
+//!   lease's [`CancelProbe`] face, which the worker registers on the
+//!   decode lane so an expired session frees its lane at the next
+//!   step boundary. Either way the pinned bytes are released (the
+//!   `session_bytes` gauge returns to zero).
+//! - **Idempotent resume keys.** Each turn carries a client-chosen
+//!   `resume_key`. A retried turn (same turn number, same key) replays
+//!   the buffered previous [`Response`] instead of decoding twice —
+//!   the at-most-once answer for an at-least-once client.
+//! - **A pinned-byte budget.** Snapshots are charged against
+//!   `--session-budget-mb`; past it, the least-recently-touched *idle*
+//!   session is evicted (its client must start over — degraded, never
+//!   wrong). Constraint tables are shared `Arc`s accounted by the
+//!   table cache, so a session pins at most one snapshot's worth of
+//!   beam state here.
+//!
+//! The lifecycle of one entry:
+//!
+//! ```text
+//!          begin_turn(turn 1)                 begin_turn(turn k+1)
+//!   (none) ───────────────────► in-flight ◄─────────────────────── idle
+//!                                 │   ▲                              ▲
+//!             complete_turn:      │   └── Replay / Reject leave ─────┤
+//!               Continue ─────────┼──────────────────────────────────┘
+//!               Done ─────────────┼────► idle tombstone (replay only)
+//!               Rollback ─────────┼────► idle (state restored)
+//!               Destroy ──────────┴────► (none)
+//!   idle ── lease expiry / budget eviction ──► (none)
+//! ```
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::dfa::Dfa;
+use crate::generate::{CancelProbe, ConstraintTable, SessionSnapshot};
+
+use super::metrics::Metrics;
+use super::Response;
+
+/// The session fields a [`super::ServeRequest`] may carry: which
+/// session this turn belongs to, the client-chosen idempotency key for
+/// the turn, the 1-based turn number, and this turn's token budget.
+#[derive(Clone, Debug)]
+pub struct SessionEnvelope {
+    /// Client-chosen session identifier.
+    pub session_id: String,
+    /// Idempotency key for this turn: retrying a turn with the same
+    /// key replays the buffered response instead of re-decoding.
+    pub resume_key: String,
+    /// 1-based turn number; must be exactly `turns_done + 1` (or
+    /// `turns_done` with the same key, for a replay).
+    pub turn: u32,
+    /// Tokens this turn may emit before suspending (min 1).
+    pub turn_tokens: usize,
+}
+
+/// A session's heartbeat lease. Renewed on every turn touch; once
+/// `ttl` passes without one, the session is reaped. The lease doubles
+/// as a [`CancelProbe`] on the session's decode lane, so expiry fires
+/// mid-decode at the next step boundary rather than waiting for the
+/// turn to finish on a client that is already gone.
+#[derive(Debug)]
+pub struct Lease {
+    expires: Mutex<Instant>,
+}
+
+impl Lease {
+    /// A fresh lease expiring `ttl` from now.
+    pub fn new(ttl: Duration) -> Lease {
+        Lease { expires: Mutex::new(Instant::now() + ttl) }
+    }
+
+    /// Heartbeat: push expiry to `ttl` from now.
+    pub fn renew(&self, ttl: Duration) {
+        *self.expires.lock().unwrap() = Instant::now() + ttl;
+    }
+
+    /// Whether the lease has run out.
+    pub fn expired(&self) -> bool {
+        Instant::now() >= *self.expires.lock().unwrap()
+    }
+}
+
+impl CancelProbe for Lease {
+    fn cancelled(&self) -> bool {
+        self.expired()
+    }
+}
+
+/// What a resumed turn decodes from: the suspended beam state and the
+/// constraint table it was decoding against (shared with the table
+/// cache — resuming never rebuilds).
+#[derive(Clone)]
+pub struct ResumeState {
+    /// The suspended beam state (turn k's endpoint).
+    pub snapshot: SessionSnapshot,
+    /// The group's DFA + constraint table.
+    pub state: Arc<(Dfa, ConstraintTable)>,
+}
+
+impl std::fmt::Debug for ResumeState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ResumeState")
+            .field("snapshot", &self.snapshot)
+            .field("state", &"<dfa+table>")
+            .finish()
+    }
+}
+
+/// One pinned session.
+struct SessionEntry {
+    /// The suspended beam state; `None` while a turn is in flight
+    /// (the worker holds it) or after the session completed.
+    snapshot: Option<SessionSnapshot>,
+    /// The constraint table the session decodes against.
+    state: Option<Arc<(Dfa, ConstraintTable)>>,
+    lease: Arc<Lease>,
+    /// Turns completed so far (the last `Continue`/`Done`'s turn).
+    turns_done: u32,
+    /// The resume key of the last completed turn, for replay matching.
+    last_key: String,
+    /// The last completed turn's response, buffered for replay.
+    last_response: Option<Response>,
+    /// A turn is currently decoding; the entry cannot be resumed,
+    /// replayed, evicted or reaped until it completes.
+    in_flight: bool,
+    /// Bytes charged against the session budget (the snapshot's).
+    bytes: usize,
+    /// Last client touch, for LRU-of-idle eviction.
+    touched: Instant,
+    /// The generation ran to completion; only replay remains.
+    done: bool,
+}
+
+/// How [`SessionTable::begin_turn`] admits a turn.
+pub enum TurnAdmission {
+    /// Turn 1 of a new session (or a clean retry of a failed turn 1):
+    /// decode from scratch under this lease.
+    Fresh(Arc<Lease>),
+    /// Turn k+1: resume the pinned snapshot against the pinned table.
+    Resume {
+        /// The suspended state to decode from.
+        resume: ResumeState,
+        /// The session's (renewed) lease.
+        lease: Arc<Lease>,
+    },
+    /// Duplicate resume key: answer with the buffered response, no
+    /// decode.
+    Replay(Response),
+    /// Protocol violation or dead session; answer failed with the
+    /// reason.
+    Reject(&'static str),
+}
+
+/// How a turn ended; [`SessionTable::complete_turn`] folds it back
+/// into the entry.
+pub enum TurnOutcome {
+    /// The turn suspended at its token budget: re-pin the new snapshot
+    /// and buffer the response for replay.
+    Continue {
+        /// The suspended beam state after this turn.
+        snapshot: SessionSnapshot,
+        /// The table the session decodes against (re-pinned).
+        state: Arc<(Dfa, ConstraintTable)>,
+        /// The turn's response, buffered for idempotent replay.
+        response: Response,
+    },
+    /// The generation finished (EOS / budget / beams extinct): keep a
+    /// zero-byte tombstone so the final turn stays replayable until
+    /// the lease runs out.
+    Done {
+        /// The final turn's response, buffered for replay.
+        response: Response,
+    },
+    /// The turn failed before producing a new snapshot (build failure,
+    /// queue-expired deadline): restore the previous state, if any, so
+    /// the client can retry the same turn.
+    Rollback {
+        /// The pre-turn state to restore (`None` for a failed turn 1).
+        resume: Option<ResumeState>,
+    },
+    /// The session is dead (client cancelled, or its lease expired
+    /// mid-decode): drop everything.
+    Destroy,
+}
+
+/// The pinned-session registry: one entry per live session, a byte
+/// budget over their snapshots, and the lease/replay protocol around
+/// them. Shared by the dispatcher (admission, reaping) and the decode
+/// workers (completion), so every method takes `&self` under one
+/// internal lock — all operations are map-and-counter work, never
+/// decode.
+pub struct SessionTable {
+    inner: Mutex<HashMap<String, SessionEntry>>,
+    budget: usize,
+    ttl: Duration,
+    metrics: Arc<Metrics>,
+}
+
+impl SessionTable {
+    /// An empty table: `budget` bytes of pinned snapshots, `ttl` of
+    /// silence before a session is reaped.
+    pub fn new(budget: usize, ttl: Duration, metrics: Arc<Metrics>) -> SessionTable {
+        SessionTable { inner: Mutex::new(HashMap::new()), budget, ttl, metrics }
+    }
+
+    /// The lease TTL turns are renewed to.
+    pub fn ttl(&self) -> Duration {
+        self.ttl
+    }
+
+    /// Admit one turn. Renews the lease (any turn is a heartbeat),
+    /// enforces turn ordering and single-flight-per-session, and picks
+    /// the decode mode: fresh, resume, replay, or reject.
+    pub fn begin_turn(&self, env: &SessionEnvelope) -> TurnAdmission {
+        let mut map = self.inner.lock().unwrap();
+        // Reap this id first: an expired entry must never be resumed.
+        if map
+            .get(&env.session_id)
+            .is_some_and(|e| e.lease.expired() && !e.in_flight)
+        {
+            map.remove(&env.session_id);
+            self.metrics.sessions_expired.fetch_add(1, Ordering::Relaxed);
+        }
+        let admission = match map.get_mut(&env.session_id) {
+            None => {
+                if env.turn == 1 {
+                    let lease = Arc::new(Lease::new(self.ttl));
+                    map.insert(
+                        env.session_id.clone(),
+                        SessionEntry {
+                            snapshot: None,
+                            state: None,
+                            lease: Arc::clone(&lease),
+                            turns_done: 0,
+                            last_key: String::new(),
+                            last_response: None,
+                            in_flight: true,
+                            bytes: 0,
+                            touched: Instant::now(),
+                            done: false,
+                        },
+                    );
+                    self.metrics.sessions_opened.fetch_add(1, Ordering::Relaxed);
+                    TurnAdmission::Fresh(lease)
+                } else {
+                    TurnAdmission::Reject("unknown session (never opened, or lease expired)")
+                }
+            }
+            Some(entry) => {
+                entry.touched = Instant::now();
+                entry.lease.renew(self.ttl);
+                if entry.in_flight {
+                    TurnAdmission::Reject("a turn is already in flight for this session")
+                } else if env.turn == entry.turns_done && env.resume_key == entry.last_key {
+                    match entry.last_response.clone() {
+                        Some(resp) => {
+                            self.metrics.session_replays.fetch_add(1, Ordering::Relaxed);
+                            TurnAdmission::Replay(resp)
+                        }
+                        None => TurnAdmission::Reject("duplicate turn with no buffered response"),
+                    }
+                } else if env.turn != entry.turns_done + 1 {
+                    TurnAdmission::Reject("turn out of order")
+                } else if entry.done {
+                    TurnAdmission::Reject("session already complete")
+                } else if entry.turns_done == 0 {
+                    // Turn 1 rolled back; the retry decodes fresh.
+                    entry.in_flight = true;
+                    TurnAdmission::Fresh(Arc::clone(&entry.lease))
+                } else {
+                    match (entry.snapshot.take(), entry.state.clone()) {
+                        (Some(snapshot), Some(state)) => {
+                            entry.in_flight = true;
+                            entry.bytes = 0;
+                            self.metrics.sessions_resumed.fetch_add(1, Ordering::Relaxed);
+                            TurnAdmission::Resume {
+                                resume: ResumeState { snapshot, state },
+                                lease: Arc::clone(&entry.lease),
+                            }
+                        }
+                        _ => TurnAdmission::Reject("session has no resumable state"),
+                    }
+                }
+            }
+        };
+        self.publish(&map);
+        admission
+    }
+
+    /// Fold a finished turn back into its entry, then enforce the
+    /// pinned-byte budget (evicting LRU idle sessions past it). A
+    /// completion for an entry that no longer exists is dropped
+    /// silently — its session was already destroyed.
+    pub fn complete_turn(&self, env: &SessionEnvelope, outcome: TurnOutcome) {
+        let mut map = self.inner.lock().unwrap();
+        enum After {
+            Keep,
+            Expired,
+            Cancelled,
+        }
+        let after = match map.get_mut(&env.session_id) {
+            None => After::Keep,
+            Some(entry) => {
+                entry.in_flight = false;
+                entry.touched = Instant::now();
+                match outcome {
+                    TurnOutcome::Continue { snapshot, state, response } => {
+                        if entry.lease.expired() {
+                            // The client went silent while we decoded;
+                            // do not re-pin bytes nobody will claim.
+                            After::Expired
+                        } else {
+                            entry.bytes = snapshot.bytes();
+                            entry.snapshot = Some(snapshot);
+                            entry.state = Some(state);
+                            entry.turns_done = env.turn;
+                            entry.last_key = env.resume_key.clone();
+                            entry.last_response = Some(response);
+                            entry.lease.renew(self.ttl);
+                            After::Keep
+                        }
+                    }
+                    TurnOutcome::Done { response } => {
+                        entry.snapshot = None;
+                        entry.state = None;
+                        entry.bytes = 0;
+                        entry.turns_done = env.turn;
+                        entry.last_key = env.resume_key.clone();
+                        entry.last_response = Some(response);
+                        entry.done = true;
+                        entry.lease.renew(self.ttl);
+                        After::Keep
+                    }
+                    TurnOutcome::Rollback { resume } => {
+                        if let Some(r) = resume {
+                            entry.bytes = r.snapshot.bytes();
+                            entry.snapshot = Some(r.snapshot);
+                            entry.state = Some(r.state);
+                        }
+                        if entry.lease.expired() {
+                            After::Expired
+                        } else {
+                            After::Keep
+                        }
+                    }
+                    TurnOutcome::Destroy => {
+                        if entry.lease.expired() {
+                            After::Expired
+                        } else {
+                            After::Cancelled
+                        }
+                    }
+                }
+            }
+        };
+        match after {
+            After::Keep => {}
+            After::Expired => {
+                map.remove(&env.session_id);
+                self.metrics.sessions_expired.fetch_add(1, Ordering::Relaxed);
+            }
+            After::Cancelled => {
+                map.remove(&env.session_id);
+                self.metrics.sessions_cancelled.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.evict_over_budget(&mut map);
+        self.publish(&map);
+    }
+
+    /// Reap every idle session whose lease has expired. Called by the
+    /// dispatcher once per batch window; in-flight turns are skipped —
+    /// their lease doubles as the lane's cancel probe, so they destroy
+    /// themselves through [`SessionTable::complete_turn`].
+    pub fn reap(&self) {
+        let mut map = self.inner.lock().unwrap();
+        let dead: Vec<String> = map
+            .iter()
+            .filter(|(_, e)| e.lease.expired() && !e.in_flight)
+            .map(|(k, _)| k.clone())
+            .collect();
+        if dead.is_empty() {
+            return;
+        }
+        for k in &dead {
+            map.remove(k);
+        }
+        self.metrics
+            .sessions_expired
+            .fetch_add(dead.len() as u64, Ordering::Relaxed);
+        self.publish(&map);
+    }
+
+    /// Evict least-recently-touched idle sessions until pinned bytes
+    /// fit the budget. In-flight entries are skipped (their bytes are
+    /// zero anyway — the worker holds the snapshot); so are zero-byte
+    /// tombstones, which cost nothing.
+    fn evict_over_budget(&self, map: &mut HashMap<String, SessionEntry>) {
+        loop {
+            let total: usize = map.values().map(|e| e.bytes).sum();
+            if total <= self.budget {
+                return;
+            }
+            let victim = map
+                .iter()
+                .filter(|(_, e)| !e.in_flight && e.bytes > 0)
+                .min_by_key(|(_, e)| e.touched)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    map.remove(&k);
+                    self.metrics.sessions_evicted.fetch_add(1, Ordering::Relaxed);
+                }
+                None => return,
+            }
+        }
+    }
+
+    /// Refresh the `sessions_live` / `session_bytes` gauges.
+    fn publish(&self, map: &HashMap<String, SessionEntry>) {
+        let bytes: usize = map.values().map(|e| e.bytes).sum();
+        self.metrics
+            .session_bytes
+            .store(bytes as u64, Ordering::Relaxed);
+        self.metrics
+            .sessions_live
+            .store(map.len() as u64, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn envelope(sid: &str, key: &str, turn: u32) -> SessionEnvelope {
+        SessionEnvelope {
+            session_id: sid.into(),
+            resume_key: key.into(),
+            turn,
+            turn_tokens: 4,
+        }
+    }
+
+    fn response(id: u64) -> Response {
+        Response {
+            id,
+            text: format!("turn-{id}"),
+            tokens: Vec::new(),
+            score: 0.0,
+            satisfied: false,
+            timed_out: false,
+            failed: false,
+            latency: Duration::ZERO,
+            queue_wait: Duration::ZERO,
+            tier: 32,
+            degraded: false,
+            session_id: None,
+            turn: 0,
+            session_done: false,
+            replayed: false,
+            fail_reason: None,
+        }
+    }
+
+    fn table(budget: usize, ttl_ms: u64) -> (SessionTable, Arc<Metrics>) {
+        let metrics = Arc::new(Metrics::new());
+        (
+            SessionTable::new(budget, Duration::from_millis(ttl_ms), Arc::clone(&metrics)),
+            metrics,
+        )
+    }
+
+    #[test]
+    fn lease_expires_and_renews() {
+        let lease = Lease::new(Duration::from_millis(20));
+        assert!(!lease.expired());
+        assert!(!lease.cancelled());
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(lease.expired());
+        assert!(lease.cancelled());
+        lease.renew(Duration::from_secs(5));
+        assert!(!lease.expired());
+    }
+
+    #[test]
+    fn turn_protocol_rejects_out_of_order_and_unknown() {
+        let (table, _m) = table(1 << 20, 5_000);
+        // Turn 2 of a session nobody opened.
+        assert!(matches!(
+            table.begin_turn(&envelope("s1", "k2", 2)),
+            TurnAdmission::Reject(_)
+        ));
+        // Turn 1 opens it.
+        assert!(matches!(
+            table.begin_turn(&envelope("s1", "k1", 1)),
+            TurnAdmission::Fresh(_)
+        ));
+        // A second turn while the first is in flight is rejected.
+        assert!(matches!(
+            table.begin_turn(&envelope("s1", "k1b", 2)),
+            TurnAdmission::Reject(_)
+        ));
+    }
+
+    #[test]
+    fn done_turn_replays_and_then_completes() {
+        let (table, m) = table(1 << 20, 5_000);
+        let env = envelope("s1", "k1", 1);
+        assert!(matches!(table.begin_turn(&env), TurnAdmission::Fresh(_)));
+        table.complete_turn(&env, TurnOutcome::Done { response: response(7) });
+        // Same key replays the buffered response.
+        match table.begin_turn(&env) {
+            TurnAdmission::Replay(resp) => assert_eq!(resp.id, 7),
+            _ => panic!("expected replay"),
+        }
+        assert_eq!(m.session_replays.load(Ordering::Relaxed), 1);
+        // The next turn of a done session is rejected.
+        assert!(matches!(
+            table.begin_turn(&envelope("s1", "k2", 2)),
+            TurnAdmission::Reject(_)
+        ));
+        // A done tombstone pins no bytes.
+        assert_eq!(m.session_bytes.load(Ordering::Relaxed), 0);
+        assert_eq!(m.sessions_live.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn failed_turn_one_retries_fresh() {
+        let (table, m) = table(1 << 20, 5_000);
+        let env = envelope("s1", "k1", 1);
+        assert!(matches!(table.begin_turn(&env), TurnAdmission::Fresh(_)));
+        table.complete_turn(&env, TurnOutcome::Rollback { resume: None });
+        // The retry is admitted fresh, not rejected or resumed.
+        assert!(matches!(table.begin_turn(&env), TurnAdmission::Fresh(_)));
+        table.complete_turn(&env, TurnOutcome::Destroy);
+        assert_eq!(m.sessions_cancelled.load(Ordering::Relaxed), 1);
+        assert_eq!(m.sessions_live.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn reap_frees_expired_idle_sessions() {
+        let (table, m) = table(1 << 20, 10);
+        let env = envelope("s1", "k1", 1);
+        assert!(matches!(table.begin_turn(&env), TurnAdmission::Fresh(_)));
+        table.complete_turn(&env, TurnOutcome::Done { response: response(1) });
+        std::thread::sleep(Duration::from_millis(25));
+        table.reap();
+        assert_eq!(m.sessions_expired.load(Ordering::Relaxed), 1);
+        assert_eq!(m.sessions_live.load(Ordering::Relaxed), 0);
+        assert_eq!(m.session_bytes.load(Ordering::Relaxed), 0);
+        // And the session is gone for the client too.
+        assert!(matches!(
+            table.begin_turn(&envelope("s1", "k2", 2)),
+            TurnAdmission::Reject(_)
+        ));
+    }
+
+    #[test]
+    fn destroy_mid_flight_with_expired_lease_counts_expired() {
+        let (table, m) = table(1 << 20, 10);
+        let env = envelope("s1", "k1", 1);
+        assert!(matches!(table.begin_turn(&env), TurnAdmission::Fresh(_)));
+        // Lease runs out while the turn decodes; reap skips in-flight.
+        std::thread::sleep(Duration::from_millis(25));
+        table.reap();
+        assert_eq!(m.sessions_expired.load(Ordering::Relaxed), 0);
+        // The worker notices (the lease is its cancel probe) and
+        // destroys the session.
+        table.complete_turn(&env, TurnOutcome::Destroy);
+        assert_eq!(m.sessions_expired.load(Ordering::Relaxed), 1);
+        assert_eq!(m.sessions_cancelled.load(Ordering::Relaxed), 0);
+        assert_eq!(m.sessions_live.load(Ordering::Relaxed), 0);
+    }
+}

@@ -26,15 +26,47 @@
 //! property-test both properties against the retained per-beam
 //! reference implementation
 //! [`super::decode_with_table_perbeam`].
+//!
+//! ## Streaming, suspension and cancellation
+//!
+//! Three session-protocol hooks ride on the same between-steps
+//! boundaries the deadline check already uses, so none of them can
+//! perturb the arithmetic:
+//!
+//! - **Incremental commitment.** After every step a request advances
+//!   its *committed prefix* — the longest common prefix over all live
+//!   and finished beams. Children extend parents and done beams are
+//!   EOS-children of a prior live set, so the commit watermark is
+//!   provably monotone: a committed token can never be retracted by a
+//!   later step, which is what makes it safe to push to a client
+//!   mid-decode. An attached [`StreamSink`] receives the freshly
+//!   committed tokens as bounded, non-blocking [`StreamFrame`]s; a
+//!   slow consumer's backlog coalesces into the next frame instead of
+//!   stalling co-batched lanes.
+//! - **Suspension.** [`RequestState::set_step_limit`] caps a *turn* at
+//!   an absolute step count. A request that reaches the cap is marked
+//!   suspended — reported via [`RequestState::finished`] so drivers
+//!   need no new loop shape — and [`RequestState::snapshot`] captures
+//!   its full beam state into a [`SessionSnapshot`] that
+//!   [`RequestState::resume`] later restores bit-identically, as if
+//!   the concatenated sequence had been decoded in one shot
+//!   (property-tested in `tests/sessions.rs`).
+//! - **Cancellation.** [`RequestState::add_cancel_probe`] registers
+//!   [`CancelProbe`]s (a client's `CancelFlag`, a session lease)
+//!   checked once per step, exactly where the deadline is; a fired
+//!   probe — or a disconnected stream receiver — frees the lane at
+//!   the next step boundary, mid-batch.
 
 use std::collections::HashMap;
+use std::sync::mpsc::{SyncSender, TrySendError};
+use std::sync::Arc;
 
 use crate::data::vocab::EOS;
 use crate::dfa::Dfa;
 use crate::hmm::HmmBackend;
 use crate::lm::LanguageModel;
 
-use super::{maybe_qdq, ConstraintTable, DecodeConfig, Generation};
+use super::{maybe_qdq, CancelProbe, ConstraintTable, DecodeConfig, Generation};
 
 /// A finished (EOS-terminated) beam: only what the final pick needs.
 #[derive(Clone, Debug)]
@@ -42,6 +74,137 @@ struct DoneBeam {
     tokens: Vec<usize>,
     score: f64,
     dfa_state: u32,
+}
+
+/// One increment of committed output pushed to a streaming client.
+///
+/// `tokens` is the freshly committed slice (possibly coalescing
+/// earlier frames a slow consumer missed); `last` marks the final
+/// frame of the turn, carrying everything not yet delivered. The
+/// `Response` stays authoritative — frames are a latency optimization,
+/// never the only copy of the output.
+#[derive(Clone, Debug)]
+pub struct StreamFrame {
+    /// Newly committed token ids, in generation order.
+    pub tokens: Vec<usize>,
+    /// True on the turn's final frame (sent when the lane finishes).
+    pub last: bool,
+}
+
+/// Bounded, non-blocking sender of [`StreamFrame`]s for one request.
+///
+/// Backpressure policy: a full channel never blocks the decode step —
+/// the undelivered tokens are kept and *coalesced* into the next
+/// frame, so a slow consumer sees fewer, larger frames rather than
+/// stalling every co-batched lane. A disconnected receiver marks the
+/// sink dead; the engine treats that as client abandonment and
+/// cancels the lane at the next step boundary.
+pub struct StreamSink {
+    tx: SyncSender<StreamFrame>,
+    /// Tokens that hit a full channel, awaiting coalescing.
+    pending: Vec<usize>,
+    disconnected: bool,
+    frames_sent: u64,
+    tokens_dropped: u64,
+}
+
+impl StreamSink {
+    /// Wrap the sending half of a bounded channel.
+    pub fn new(tx: SyncSender<StreamFrame>) -> StreamSink {
+        StreamSink {
+            tx,
+            pending: Vec::new(),
+            disconnected: false,
+            frames_sent: 0,
+            tokens_dropped: 0,
+        }
+    }
+
+    /// Try to deliver `fresh` (plus any coalesced backlog) without
+    /// blocking. On a full channel the tokens are retained for the
+    /// next push — except on the final frame, which is best-effort
+    /// (the `Response` carries the authoritative output).
+    pub fn push(&mut self, fresh: Vec<usize>, last: bool) {
+        if self.disconnected {
+            self.tokens_dropped += fresh.len() as u64;
+            return;
+        }
+        let mut tokens = std::mem::take(&mut self.pending);
+        tokens.extend(fresh);
+        if tokens.is_empty() && !last {
+            return;
+        }
+        match self.tx.try_send(StreamFrame { tokens, last }) {
+            Ok(()) => self.frames_sent += 1,
+            Err(TrySendError::Full(frame)) => {
+                if last {
+                    self.tokens_dropped += frame.tokens.len() as u64;
+                } else {
+                    self.pending = frame.tokens;
+                }
+            }
+            Err(TrySendError::Disconnected(frame)) => {
+                self.disconnected = true;
+                self.tokens_dropped += frame.tokens.len() as u64;
+            }
+        }
+    }
+
+    /// Whether the receiving half has been dropped (client abandoned).
+    pub fn disconnected(&self) -> bool {
+        self.disconnected
+    }
+
+    /// Frames successfully handed to the channel.
+    pub fn frames_sent(&self) -> u64 {
+        self.frames_sent
+    }
+
+    /// Tokens that could not be delivered (final-frame overflow or
+    /// post-disconnect pushes). Always recoverable from the response.
+    pub fn tokens_dropped(&self) -> u64 {
+        self.tokens_dropped
+    }
+}
+
+/// A suspended request's full beam state, captured between steps.
+///
+/// Everything [`step_batch`] reads lives here — token prefixes,
+/// scores, DFA states, the raw (never qdq'd) alpha panel, finished
+/// beams and the step/commit counters — so
+/// [`RequestState::resume`] restores a state whose every subsequent
+/// step is bit-identical to never having suspended. The exception
+/// columns are *not* stored: they are a pure function of (model, DFA)
+/// and are regathered deterministically on resume.
+#[derive(Clone, Debug)]
+pub struct SessionSnapshot {
+    tokens: Vec<Vec<usize>>,
+    scores: Vec<f64>,
+    dfa_states: Vec<u32>,
+    alphas: Vec<f32>,
+    done: Vec<(Vec<usize>, f64, u32)>,
+    t: usize,
+    committed: usize,
+}
+
+impl SessionSnapshot {
+    /// Steps the captured request had taken (the resume point's `t`).
+    pub fn steps(&self) -> usize {
+        self.t
+    }
+
+    /// Estimated heap footprint, for charging a pinned-session byte
+    /// budget. Counts the payload vectors, not allocator slack.
+    pub fn bytes(&self) -> usize {
+        let toks: usize = self.tokens.iter().map(|t| t.len()).sum::<usize>()
+            + self.done.iter().map(|(t, _, _)| t.len()).sum::<usize>();
+        toks * std::mem::size_of::<usize>()
+            + (self.scores.len() + self.done.len()) * std::mem::size_of::<f64>()
+            + (self.dfa_states.len() + self.done.len()) * std::mem::size_of::<u32>()
+            + self.alphas.len() * std::mem::size_of::<f32>()
+            + (self.tokens.len() + self.done.len()) * 3 * std::mem::size_of::<usize>()
+            + std::mem::size_of::<SessionSnapshot>()
+    }
 }
 
 /// Per-request decode state in structure-of-arrays layout: parallel
@@ -54,7 +217,10 @@ struct DoneBeam {
 /// [`RequestState::generation`]. The coordinator's decode workers
 /// drive many `RequestState`s through shared [`step_batch`] calls;
 /// the one-request wrapper [`super::decode_with_table`] drives a
-/// batch of one.
+/// batch of one. Session turns add an optional epilogue: a state that
+/// stopped because it hit [`RequestState::set_step_limit`] reports
+/// [`RequestState::suspended`], and [`RequestState::snapshot`] /
+/// [`RequestState::resume`] carry it across turns.
 pub struct RequestState {
     /// Token prefixes, one per live beam.
     tokens: Vec<Vec<usize>>,
@@ -80,8 +246,23 @@ pub struct RequestState {
     /// path, so co-batched requests with different deadlines each time
     /// out on their own schedule.
     deadline: Option<std::time::Instant>,
+    /// Absolute step count at which this turn suspends (session
+    /// `turn_tokens` budget). `None` = run to the table budget.
+    step_limit: Option<usize>,
+    /// Dynamic cancellation probes (client flag, session lease),
+    /// checked once per step at the deadline boundary.
+    cancel_probes: Vec<Arc<dyn CancelProbe>>,
+    /// Incremental token delivery, if the client streams.
+    sink: Option<StreamSink>,
+    /// Length of the committed prefix: the longest common prefix over
+    /// all live and done beams, monotone across steps.
+    committed: usize,
     finished: bool,
+    /// Stopped at `step_limit` with live beams — resumable.
+    suspended: bool,
     timed_out: bool,
+    /// Stopped by a cancel probe or stream disconnect, not a deadline.
+    cancelled: bool,
 }
 
 impl RequestState {
@@ -115,17 +296,79 @@ impl RequestState {
             exc_cols,
             t: 0,
             deadline,
+            step_limit: None,
+            cancel_probes: Vec::new(),
+            sink: None,
+            committed: 0,
             finished: false,
+            suspended: false,
             timed_out: false,
+            cancelled: false,
+        }
+    }
+
+    /// Restore a suspended request from its [`SessionSnapshot`]. The
+    /// exception-column scratch is regathered through the same
+    /// deterministic [`RequestState::new`] path, then the captured
+    /// beam state replaces the fresh root — so the very next
+    /// [`step_batch`] sees exactly the state the suspended turn left
+    /// behind, and the remaining decode is bit-identical to one that
+    /// never suspended.
+    pub fn resume(
+        model: &dyn HmmBackend,
+        dfa: &Dfa,
+        snap: &SessionSnapshot,
+        deadline: Option<std::time::Instant>,
+    ) -> Self {
+        let mut st = RequestState::new(model, dfa, deadline);
+        st.tokens = snap.tokens.clone();
+        st.scores = snap.scores.clone();
+        st.dfa_states = snap.dfa_states.clone();
+        st.alphas = snap.alphas.clone();
+        st.done = snap
+            .done
+            .iter()
+            .map(|(tokens, score, dfa_state)| DoneBeam {
+                tokens: tokens.clone(),
+                score: *score,
+                dfa_state: *dfa_state,
+            })
+            .collect();
+        st.t = snap.t;
+        st.committed = snap.committed;
+        if st.tokens.is_empty() {
+            // Every beam already terminated: nothing left to step.
+            st.finished = true;
+        }
+        st
+    }
+
+    /// Capture the full between-steps beam state for a later
+    /// [`RequestState::resume`]. Valid whenever the request is not
+    /// mid-[`step_batch`]; the serving layer calls it on suspended
+    /// turns.
+    pub fn snapshot(&self) -> SessionSnapshot {
+        SessionSnapshot {
+            tokens: self.tokens.clone(),
+            scores: self.scores.clone(),
+            dfa_states: self.dfa_states.clone(),
+            alphas: self.alphas.clone(),
+            done: self
+                .done
+                .iter()
+                .map(|d| (d.tokens.clone(), d.score, d.dfa_state))
+                .collect(),
+            t: self.t,
+            committed: self.committed,
         }
     }
 
     /// Whether this request has stopped stepping (budget exhausted,
-    /// beams extinct, deadline fired, or cancelled). A finished
-    /// request is skipped by [`step_batch`] and ready for
-    /// [`RequestState::generation`].
+    /// beams extinct, deadline fired, suspended at its turn limit, or
+    /// cancelled). A finished request is skipped by [`step_batch`] and
+    /// ready for [`RequestState::generation`].
     pub fn finished(&self) -> bool {
-        self.finished
+        self.finished || self.suspended
     }
 
     /// Whether the request stopped because its deadline fired (or it
@@ -134,9 +377,64 @@ impl RequestState {
         self.timed_out
     }
 
+    /// Whether the request stopped at its turn step limit with live
+    /// beams — i.e. it can be snapshotted and resumed.
+    pub fn suspended(&self) -> bool {
+        self.suspended
+    }
+
+    /// Whether the request was stopped by a cancel probe or a
+    /// disconnected stream, as opposed to a deadline or completion.
+    pub fn cancelled(&self) -> bool {
+        self.cancelled
+    }
+
+    /// Whether any live (non-EOS-terminated) beams remain.
+    pub fn has_live_beams(&self) -> bool {
+        !self.tokens.is_empty()
+    }
+
     /// Steps taken so far.
     pub fn steps(&self) -> usize {
         self.t
+    }
+
+    /// Length of the committed prefix (tokens that can no longer
+    /// change, already pushed to an attached stream).
+    pub fn committed(&self) -> usize {
+        self.committed
+    }
+
+    /// Cap this turn at an absolute step count: once `t` reaches the
+    /// limit the request suspends instead of finishing, preserving
+    /// resumable beam state. `None` removes the cap.
+    pub fn set_step_limit(&mut self, limit: Option<usize>) {
+        self.step_limit = limit;
+    }
+
+    /// Register a cancellation probe, checked once per step alongside
+    /// the deadline. Any firing probe stops the request at the next
+    /// step boundary with `timed_out` and `cancelled` set.
+    pub fn add_cancel_probe(&mut self, probe: Arc<dyn CancelProbe>) {
+        self.cancel_probes.push(probe);
+    }
+
+    /// Attach a streaming sink; freshly committed tokens are pushed
+    /// after every step, and [`RequestState::flush_stream`] sends the
+    /// final frame.
+    pub fn attach_stream(&mut self, sink: StreamSink) {
+        self.sink = Some(sink);
+    }
+
+    /// Send the turn's final frame — everything in `gen` past the
+    /// committed watermark, `last = true` — and detach the sink.
+    /// Returns `(frames_sent, tokens_dropped)` for metrics, or `None`
+    /// if no sink was attached.
+    pub fn flush_stream(&mut self, gen: &Generation) -> Option<(u64, u64)> {
+        let mut sink = self.sink.take()?;
+        let start = self.committed.min(gen.tokens.len());
+        sink.push(gen.tokens[start..].to_vec(), true);
+        Some((sink.frames_sent, sink.tokens_dropped))
     }
 
     /// Cancel the request mid-generation: it stops stepping
@@ -147,6 +445,45 @@ impl RequestState {
     pub fn cancel(&mut self) {
         self.finished = true;
         self.timed_out = true;
+        self.cancelled = true;
+    }
+
+    /// Advance the committed watermark to the longest common prefix
+    /// over all live and (EOS-stripped) done beams, returning the
+    /// freshly committed tokens. Monotone across steps: every member
+    /// of the current pool extends a member of the previous pool, so
+    /// the scan can start at the previous watermark.
+    fn advance_commit(&mut self) -> Vec<usize> {
+        let stripped = |d: &DoneBeam| -> &[usize] {
+            let mut s = d.tokens.as_slice();
+            if s.last() == Some(&EOS) {
+                s = &s[..s.len() - 1];
+            }
+            s
+        };
+        let reference: Vec<usize> = match (self.tokens.first(), self.done.first()) {
+            (Some(t), _) => t.clone(),
+            (None, Some(d)) => stripped(d).to_vec(),
+            (None, None) => return Vec::new(),
+        };
+        let agree = |other: &[usize], cap: usize| -> usize {
+            let max = cap.min(other.len()).min(reference.len());
+            let mut i = self.committed.min(max);
+            while i < max && reference[i] == other[i] {
+                i += 1;
+            }
+            i
+        };
+        let mut lcp = reference.len();
+        for t in &self.tokens {
+            lcp = agree(t, lcp);
+        }
+        for d in &self.done {
+            lcp = agree(stripped(d), lcp);
+        }
+        let fresh = reference[self.committed.min(lcp)..lcp].to_vec();
+        self.committed = lcp;
+        fresh
     }
 
     /// Extract the final [`Generation`]: prefer finished accepting
@@ -213,8 +550,11 @@ pub struct EngineItem<'a> {
 /// cached columns, candidate collection order and `total_cmp` sorting
 /// are per-request, and per-request deadlines are checked before any
 /// work is gathered for that request. Requests whose deadline has
-/// fired are marked finished+timed-out; requests out of token budget
-/// or out of live beams are marked finished.
+/// fired (or whose cancel probe / stream disconnect fired) are marked
+/// finished+timed-out; requests out of token budget or out of live
+/// beams are marked finished; requests at their turn step limit are
+/// marked suspended. All lifecycle checks run between steps, so they
+/// cannot perturb any surviving request's arithmetic.
 ///
 /// Call in a loop until every item's state reports
 /// [`RequestState::finished`]; a call where all items are finished is
@@ -237,10 +577,18 @@ pub fn step_batch(
     let mut lane_counts: Vec<usize> = Vec::new();
     for (ii, item) in items.iter_mut().enumerate() {
         let st = &mut *item.state;
-        if st.finished {
+        if st.finished || st.suspended {
             continue;
         }
         debug_assert_eq!(st.h_n, h_n, "request state built for a different backend");
+        if st.cancel_probes.iter().any(|p| p.cancelled())
+            || st.sink.as_ref().is_some_and(|s| s.disconnected())
+        {
+            st.finished = true;
+            st.timed_out = true;
+            st.cancelled = true;
+            continue;
+        }
         if st.t >= cfg.max_tokens {
             st.finished = true;
             continue;
@@ -251,6 +599,10 @@ pub fn step_batch(
                 st.timed_out = true;
                 continue;
             }
+        }
+        if st.step_limit.is_some_and(|l| st.t >= l) {
+            st.suspended = true;
+            continue;
         }
         let remaining = cfg.max_tokens - st.t; // tokens left including this one
         let b = st.tokens.len();
@@ -388,6 +740,14 @@ pub fn step_batch(
             st.finished = true;
         }
         st.alphas = vec![0.0; st.tokens.len() * h_n];
+
+        // Commit + stream: pure integer comparisons over the updated
+        // pool, so the watermark advance can never perturb arithmetic.
+        let fresh = st.advance_commit();
+        if let Some(sink) = st.sink.as_mut() {
+            // An empty fresh slice still retries a coalesced backlog.
+            sink.push(fresh, false);
+        }
     }
 
     // --- Phase 4: ONE fused forward step over every surviving beam of

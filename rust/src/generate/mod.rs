@@ -39,7 +39,8 @@ use crate::data::vocab::EOS;
 use crate::dfa::Dfa;
 use crate::hmm::HmmBackend;
 use crate::lm::LanguageModel;
-pub use product::{BuildOptions, CancelProbe, ConstraintTable};
+pub use engine::{SessionSnapshot, StreamFrame, StreamSink};
+pub use product::{BuildOptions, CancelFlag, CancelProbe, ConstraintTable};
 
 /// Decoder configuration (paper §IV-A: beam 128 on GPT2-large; scaled
 /// default here, configurable from the CLI).

@@ -53,6 +53,38 @@ pub trait CancelProbe: Send + Sync {
     fn cancelled(&self) -> bool;
 }
 
+/// The simplest [`CancelProbe`]: a shared atomic flag a client flips to
+/// abandon work it no longer wants. The serving layer hands one end to
+/// the caller (`ServeRequest::with_cancel`) and threads the other into
+/// the decode engine's per-step probe list, so a cancelled stream frees
+/// its decode lane at the next step boundary — mid-batch, not at turn
+/// end.
+#[derive(Debug, Default)]
+pub struct CancelFlag(std::sync::atomic::AtomicBool);
+
+impl CancelFlag {
+    /// A fresh, un-cancelled flag.
+    pub fn new() -> CancelFlag {
+        CancelFlag::default()
+    }
+
+    /// Request cancellation; observed at the next probe check.
+    pub fn cancel(&self) {
+        self.0.store(true, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Whether `cancel` has been called.
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+impl CancelProbe for CancelFlag {
+    fn cancelled(&self) -> bool {
+        self.is_cancelled()
+    }
+}
+
 /// How [`ConstraintTable::build_with`] runs: the cooperative deadline
 /// and cancellation probe (both checked once per budget level) and the
 /// worker-thread budget for parallelizing each level across DFA states.

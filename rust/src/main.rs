@@ -40,7 +40,8 @@ USAGE:
               [--table-cache-mb MB] [--table-threads N] [--build-threads N]
               [--spill-dir DIR] [--spill-budget-mb MB]
               [--tiers 8,4,3] [--replicas N] [--retry-budget R]
-              [--premium-weight W]
+              [--premium-weight W] [--session-turns K] [--session-tokens U]
+              [--session-budget-mb MB] [--session-ttl-ms MS] [--stream CAP]
   normq smoke [--artifacts DIR]
   normq corpus [--n N] [--eval]
 
@@ -89,6 +90,21 @@ shedding. Each replica sits behind a circuit breaker; retries are
 budget-capped at --retry-budget (fraction of traffic, default 0.1).
 Same-tier replicas share one spill subdirectory under --spill-dir.
 See docs/OPERATIONS.md for the full tuning runbook.
+
+Sessions (serve): --session-turns K drives every request as one K-turn
+streaming session instead of a one-shot call: turn 1 opens the session
+and decodes --session-tokens tokens (default 4), each later turn
+RESUMES the pinned beam snapshot and decodes the next chunk — the
+concatenated result is bit-identical to a single full decode, without
+re-decoding the prefix. --stream CAP attaches a bounded CAP-frame token
+channel per turn: committed tokens arrive incrementally, and a slow
+consumer's full channel coalesces frames rather than stalling the
+decode batch. --session-budget-mb bounds the bytes pinned by suspended
+snapshots (least-recently-touched idle sessions are evicted past it);
+--session-ttl-ms sets the heartbeat lease (default 30000) — a silent
+client's session is reaped, mid-decode if need be, and its bytes are
+freed. Retrying a turn with the same resume key replays the buffered
+answer instead of decoding twice.
 ";
 
 fn main() {
@@ -105,7 +121,8 @@ fn main() {
         "rate", "burst", "quota", "quota-burst", "fair", "fair-queue", "delay-budget-ms",
         "timeout-ms", "hedge-ms", "table-bits", "table-cache-mb", "table-threads",
         "build-threads", "spill-dir", "spill-budget-mb", "tiers", "replicas", "retry-budget",
-        "premium-weight",
+        "premium-weight", "session-turns", "session-tokens", "session-budget-mb",
+        "session-ttl-ms", "stream",
     ]);
     let args = match Args::parse(&argv, &value_keys) {
         Ok(a) => a,
@@ -211,6 +228,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         table_backend,
         spill_dir: args.get("spill-dir").map(std::path::PathBuf::from),
         spill_budget_bytes: args.usize("spill-budget-mb", 256)? << 20,
+        session_budget_bytes: args.usize("session-budget-mb", 64)? << 20,
+        session_ttl: std::time::Duration::from_millis(args.u64("session-ttl-ms", 30_000)?),
         decode: DecodeConfig {
             beam: ctx.decode.beam,
             max_tokens: ctx.decode.max_tokens,
@@ -339,11 +358,13 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     }
 
     let client_ids = args.usize("client-ids", 1)?.max(1);
+    let session_turns = args.usize("session-turns", 1)?;
+    let session_tokens = args.usize("session-tokens", 4)?.max(1);
+    let stream_cap = args.opt_usize("stream")?;
     // Under a fleet, every 4th request is a premium client so the tier
     // steering is visible in the built-in driver.
     let fleet_mode = fleet_handle.is_some();
-    let t0 = std::time::Instant::now();
-    let results = normq::service::drive_closed_loop(&svc, clients, n_requests, |i| {
+    let make_req = |i: usize| {
         let item = &ctx.items[i % ctx.items.len()];
         let req =
             ServeRequest::from_client(item.concepts.clone(), format!("client-{}", i % client_ids));
@@ -352,7 +373,24 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         } else {
             req
         }
-    });
+    };
+    let t0 = std::time::Instant::now();
+    let (results, streamed) = if session_turns > 1 {
+        drive_sessions(
+            &svc,
+            clients,
+            n_requests,
+            session_turns,
+            session_tokens,
+            stream_cap,
+            make_req,
+        )
+    } else {
+        (
+            normq::service::drive_closed_loop(&svc, clients, n_requests, make_req),
+            0,
+        )
+    };
     let wall = t0.elapsed().as_secs_f64();
     let ok = results.iter().filter(|r| r.is_ok()).count();
     let satisfied = results
@@ -368,6 +406,12 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         wall,
         ok as f64 / wall
     );
+    if session_turns > 1 {
+        println!(
+            "sessions={} turns/session<={} tokens/turn={} streamed_tokens={}",
+            n_requests, session_turns, session_tokens, streamed
+        );
+    }
     if let Some(fleet) = &fleet_handle {
         let degraded = results
             .iter()
@@ -386,6 +430,81 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         server.shutdown();
     }
     Ok(())
+}
+
+/// Session-mode load driver: each "request" is one multi-turn session
+/// driven to completion — turn 1 opens it, later turns resume the
+/// pinned snapshot, and a `session_done` answer (or any error) ends it
+/// early. With `stream_cap` each turn attaches a bounded token stream,
+/// drained after the call. Returns each session's final-turn result in
+/// session-index order plus the total streamed-token count.
+fn drive_sessions(
+    svc: &SharedService<ServeRequest, CoordResponse>,
+    clients: usize,
+    n_sessions: usize,
+    turns: usize,
+    turn_tokens: usize,
+    stream_cap: Option<usize>,
+    make_req: impl Fn(usize) -> ServeRequest + Sync,
+) -> (
+    Vec<Result<CoordResponse, normq::service::ServiceError>>,
+    usize,
+) {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    let next = AtomicUsize::new(0);
+    let streamed = AtomicUsize::new(0);
+    let results = Mutex::new(Vec::with_capacity(n_sessions));
+    let make_req = &make_req;
+    std::thread::scope(|scope| {
+        for _ in 0..clients.max(1) {
+            let (next, results, streamed) = (&next, &results, &streamed);
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_sessions {
+                    break;
+                }
+                let mut last = None;
+                for t in 1..=turns {
+                    let req = make_req(i).with_session(
+                        format!("cli-{i}"),
+                        format!("k{t}"),
+                        t as u32,
+                        turn_tokens,
+                    );
+                    let (req, rx) = match stream_cap {
+                        Some(cap) => {
+                            let (req, rx) = req.with_stream(cap);
+                            (req, Some(rx))
+                        }
+                        None => (req, None),
+                    };
+                    let result = svc.call(req);
+                    if let Some(rx) = rx {
+                        while let Ok(frame) = rx.try_recv() {
+                            streamed.fetch_add(frame.tokens.len(), Ordering::Relaxed);
+                        }
+                    }
+                    let done = matches!(&result, Ok(r) if r.session_done) || result.is_err();
+                    last = Some(result);
+                    if done {
+                        break;
+                    }
+                }
+                results
+                    .lock()
+                    .unwrap()
+                    .push((i, last.expect("at least one turn ran")));
+            });
+        }
+    });
+    let mut results = results.into_inner().unwrap();
+    results.sort_by_key(|(i, _)| *i);
+    (
+        results.into_iter().map(|(_, r)| r).collect(),
+        streamed.load(Ordering::Relaxed),
+    )
 }
 
 /// Load the AOT HLO transformer LM (PJRT builds only).

@@ -27,9 +27,23 @@
 //! of the benefit of join-shortest-queue without a global scan or a
 //! herd on the single best replica.
 //!
+//! **Session affinity.** Multi-turn sessions ([`Sessioned`]) pin to
+//! the replica that served their first turn: the suspended beam
+//! snapshot lives in *that* replica's session table, so a later turn
+//! routed anywhere else finds no session and fails. A pinned turn
+//! bypasses p2c and goes straight back — unless the pinned replica is
+//! ineligible (saturated, at depth, or closed), in which case the pin
+//! is dropped and the turn *migrates* down the normal ladder
+//! (`Metrics::session_migrations`): the new replica rejects the
+//! unknown session and the client restarts it — degraded service, not
+//! a hang behind a dead replica. Pins die with the session's lease on
+//! the replica side; the balancer's pin map is bounded and sheds
+//! oldest entries past its cap.
+//!
 //! `Balance` holds no queue of its own — queueing lives inside each
 //! replica (its coordinator queue) and in the admission stack outside.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -37,7 +51,7 @@ use std::time::Instant;
 use crate::coordinator::metrics::Metrics;
 use crate::util::rng::Rng;
 
-use super::{Keyed, Readiness, Service, ServiceError, Tiered};
+use super::{Keyed, Readiness, Service, ServiceError, Sessioned, Tiered};
 
 /// Smoothing factor for the per-replica latency EWMA.
 const EWMA_ALPHA: f64 = 0.2;
@@ -48,6 +62,11 @@ const DEFAULT_PREMIUM_WEIGHT: u32 = 2;
 
 /// Default per-replica concurrent-dispatch cap.
 const DEFAULT_DEPTH: usize = 8;
+
+/// Bound on the session-pin map: past this many live pins, new
+/// sessions serve unpinned (their turns route freely and likely fail
+/// on replicas without the state) rather than growing without bound.
+const PIN_CAP: usize = 8192;
 
 /// One registered backend replica and its load-tracking state.
 struct Replica<S> {
@@ -117,6 +136,9 @@ pub struct Balance<S> {
     depth: usize,
     metrics: Arc<Metrics>,
     rng: Mutex<Rng>,
+    /// Session id → index into `replicas`: where each live session's
+    /// suspended state is pinned.
+    pins: Mutex<HashMap<String, usize>>,
 }
 
 impl<S> Balance<S> {
@@ -131,6 +153,7 @@ impl<S> Balance<S> {
             depth: DEFAULT_DEPTH,
             metrics,
             rng: Mutex::new(Rng::seeded(0x9E37_79B9_7F4A_7C15)),
+            pins: Mutex::new(HashMap::new()),
         }
     }
 
@@ -179,20 +202,28 @@ impl<S> Balance<S> {
 }
 
 impl<S> Balance<S> {
-    /// Power-of-two-choices pick among this tier's eligible replicas
+    /// Whether a replica can take one more dispatch right now
     /// (advisory `Ready` and below the dispatch depth).
-    fn pick<Req>(&self, tier: u32) -> Option<&Replica<S>>
+    fn replica_eligible<Req>(&self, r: &Replica<S>) -> bool
     where
         S: Service<Req>,
     {
-        let eligible: Vec<&Replica<S>> = self
+        r.in_flight.load(Ordering::Relaxed) < self.depth as u64
+            && r.svc.poll_ready() == Readiness::Ready
+    }
+
+    /// Power-of-two-choices pick among this tier's eligible replicas;
+    /// returns the index into `replicas` so the choice can be pinned.
+    fn pick<Req>(&self, tier: u32) -> Option<usize>
+    where
+        S: Service<Req>,
+    {
+        let eligible: Vec<usize> = self
             .replicas
             .iter()
-            .filter(|r| {
-                r.tier == tier
-                    && r.in_flight.load(Ordering::Relaxed) < self.depth as u64
-                    && r.svc.poll_ready() == Readiness::Ready
-            })
+            .enumerate()
+            .filter(|(_, r)| r.tier == tier && self.replica_eligible::<Req>(r))
+            .map(|(i, _)| i)
             .collect();
         match eligible.len() {
             0 => None,
@@ -207,7 +238,7 @@ impl<S> Balance<S> {
                     }
                     (i, j)
                 };
-                if eligible[i].load() <= eligible[j].load() {
+                if self.replicas[eligible[i]].load() <= self.replicas[eligible[j]].load() {
                     Some(eligible[i])
                 } else {
                     Some(eligible[j])
@@ -215,11 +246,41 @@ impl<S> Balance<S> {
             }
         }
     }
+
+    /// Dispatch to `replicas[idx]` under its in-flight guard, fold the
+    /// latency sample, and stamp the route (degraded when served below
+    /// the request's entry tier).
+    fn dispatch<Req>(
+        &self,
+        idx: usize,
+        req: Req,
+        entry_bits: u32,
+    ) -> Result<S::Response, ServiceError>
+    where
+        S: Service<Req>,
+        S::Response: Tiered,
+    {
+        let replica = &self.replicas[idx];
+        replica.in_flight.fetch_add(1, Ordering::Relaxed);
+        let _guard = InFlightGuard(&replica.in_flight);
+        let start = Instant::now();
+        let result = replica.svc.call(req);
+        replica.observe(start.elapsed().as_micros() as u64);
+        result.map(|mut resp| {
+            let degraded = replica.tier < entry_bits;
+            resp.set_route(replica.tier, degraded);
+            self.metrics.fleet_routed.fetch_add(1, Ordering::Relaxed);
+            if degraded {
+                self.metrics.fleet_degraded.fetch_add(1, Ordering::Relaxed);
+            }
+            resp
+        })
+    }
 }
 
 impl<Req, S> Service<Req> for Balance<S>
 where
-    Req: Keyed,
+    Req: Keyed + Sessioned,
     S: Service<Req>,
     S::Response: Tiered,
 {
@@ -257,27 +318,39 @@ where
         }
         let entry = self.entry_index(req.weight());
         let entry_bits = self.tier_bits[entry];
+        let session = req.session_id().map(str::to_owned);
+        // Session affinity: a pinned session routes back to the replica
+        // holding its suspended state while that replica can take the
+        // turn; an ineligible pin is dropped (the session migrates and
+        // restarts elsewhere) rather than queueing behind a saturated
+        // or dead replica.
+        if let Some(sid) = &session {
+            let pinned = self.pins.lock().unwrap().get(sid).copied();
+            if let Some(idx) = pinned {
+                if self.replica_eligible::<Req>(&self.replicas[idx]) {
+                    return self.dispatch(idx, req, entry_bits);
+                }
+                self.pins.lock().unwrap().remove(sid);
+                self.metrics.session_migrations.fetch_add(1, Ordering::Relaxed);
+            }
+        }
         // Spill order: the entry tier, then down the ladder, then any
         // spare capacity *above* the entry tier (an upgrade, never
         // marked degraded).
         let ladder = (entry..self.tier_bits.len()).chain((0..entry).rev());
         for idx in ladder {
             let bits = self.tier_bits[idx];
-            let Some(replica) = self.pick(bits) else { continue };
-            replica.in_flight.fetch_add(1, Ordering::Relaxed);
-            let _guard = InFlightGuard(&replica.in_flight);
-            let start = Instant::now();
-            let result = replica.svc.call(req);
-            replica.observe(start.elapsed().as_micros() as u64);
-            return result.map(|mut resp| {
-                let degraded = bits < entry_bits;
-                resp.set_route(replica.tier, degraded);
-                self.metrics.fleet_routed.fetch_add(1, Ordering::Relaxed);
-                if degraded {
-                    self.metrics.fleet_degraded.fetch_add(1, Ordering::Relaxed);
+            let Some(ri) = self.pick::<Req>(bits) else { continue };
+            let result = self.dispatch(ri, req, entry_bits);
+            if result.is_ok() {
+                if let Some(sid) = session {
+                    let mut pins = self.pins.lock().unwrap();
+                    if pins.len() < PIN_CAP || pins.contains_key(&sid) {
+                        pins.insert(sid, ri);
+                    }
                 }
-                resp
-            });
+            }
+            return result;
         }
         self.metrics.fleet_shed.fetch_add(1, Ordering::Relaxed);
         Err(ServiceError::Overloaded)
@@ -388,6 +461,51 @@ mod tests {
             fast_calls > slow_calls,
             "expected the fast replica to win p2c: fast={fast_calls} slow={slow_calls}"
         );
+    }
+
+    #[test]
+    fn session_turns_pin_to_one_replica() {
+        // Two same-tier replicas: without affinity p2c may spread the
+        // session's turns; with it every turn lands where turn 1 did.
+        let (balance, handles, metrics) = fleet(&[8, 8]);
+        for _ in 0..6 {
+            balance.call(TestReq::in_session("s1")).unwrap();
+        }
+        let calls: Vec<u64> = handles
+            .iter()
+            .map(|h| h.calls.load(Ordering::Relaxed))
+            .collect();
+        assert!(
+            calls.contains(&6),
+            "all six turns must hit the pinned replica: {calls:?}"
+        );
+        assert_eq!(metrics.session_migrations.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn ineligible_pin_migrates_the_session_down_tier() {
+        let metrics = Arc::new(Metrics::new());
+        let mut balance = Balance::new(Arc::clone(&metrics));
+        balance.register(8, Arc::new(MockSvc::with_delay(Duration::from_millis(30))));
+        balance.register(4, Arc::new(MockSvc::instant()));
+        let balance = Arc::new(balance.with_depth(1));
+        let sess = || TestReq { weight: 2, session: Some("s".into()), ..Default::default() };
+        // Turn 1 pins the session to the premium 8-bit replica.
+        let first = balance.call(sess()).unwrap();
+        assert_eq!(first.tier, 8);
+        // Occupy the pinned replica's single dispatch slot…
+        let held = {
+            let balance = Arc::clone(&balance);
+            std::thread::spawn(move || balance.call(TestReq::weighted("vip", 2)))
+        };
+        std::thread::sleep(Duration::from_millis(10));
+        // …so the next turn finds its pin ineligible, drops it, and
+        // migrates down the ladder — served degraded, not queued.
+        let migrated = balance.call(sess()).unwrap();
+        assert_eq!(migrated.tier, 4);
+        assert!(migrated.degraded);
+        assert_eq!(metrics.session_migrations.load(Ordering::Relaxed), 1);
+        held.join().unwrap().unwrap();
     }
 
     #[test]

@@ -18,6 +18,13 @@
 //! calling thread blocks until scheduled); unlike it, the unblock
 //! order is fair rather than condvar-arbitrary, and the queue bound is
 //! per client rather than global.
+//!
+//! **Sessions are charged per turn.** A multi-turn session request is
+//! scheduled like any other call from its client: each turn costs one
+//! DRR credit when it dispatches, so a client running a long session
+//! pays for it turn by turn at its fair share — holding a pinned
+//! session confers no scheduling priority, and a session client that
+//! floods turns backlogs only its own queue like any other flood.
 
 use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::Ordering;

@@ -205,6 +205,20 @@ pub trait Queued {
     }
 }
 
+/// Requests that may belong to a multi-turn session
+/// ([`crate::coordinator::SessionEnvelope`]). [`balance::Balance`]
+/// uses this to *pin* a session to the replica that holds its resumed
+/// state: every turn of a session must land on the replica whose
+/// [`crate::coordinator::session::SessionTable`] pinned the snapshot,
+/// or the resume key is unknown there and the turn fails. The default
+/// (`None`) means the request is a one-shot and routes freely.
+pub trait Sessioned {
+    /// The session this request is a turn of, if any.
+    fn session_id(&self) -> Option<&str> {
+        None
+    }
+}
+
 /// Responses that carry the *fidelity tier* they were served at — the
 /// bit width of the backend replica that decoded them (32 = dense
 /// FP32). [`balance::Balance`] stamps the route on every response so
@@ -289,11 +303,12 @@ pub(crate) mod testutil {
         pub deadline: Option<Instant>,
         pub client: String,
         pub weight: u32,
+        pub session: Option<String>,
     }
 
     impl Default for TestReq {
         fn default() -> Self {
-            TestReq { deadline: None, client: "anon".into(), weight: 1 }
+            TestReq { deadline: None, client: "anon".into(), weight: 1, session: None }
         }
     }
 
@@ -304,6 +319,16 @@ pub(crate) mod testutil {
 
         pub fn weighted(id: &str, weight: u32) -> Self {
             TestReq { client: id.into(), weight, ..Default::default() }
+        }
+
+        pub fn in_session(id: &str) -> Self {
+            TestReq { session: Some(id.into()), ..Default::default() }
+        }
+    }
+
+    impl Sessioned for TestReq {
+        fn session_id(&self) -> Option<&str> {
+            self.session.as_deref()
         }
     }
 

@@ -13,6 +13,14 @@
 //! Place this layer outermost: a denied request should cost one bucket
 //! probe, not a queue slot or a decode worker.
 //!
+//! **Sessions are charged per turn.** Every turn of a multi-turn
+//! session spends one token from its client's bucket at admission,
+//! exactly like a one-shot request — an open session is pinned state
+//! in the coordinator, not prepaid capacity here. A client whose
+//! bucket empties mid-session has its next turn denied; the session
+//! itself stays pinned (its lease keeps ticking) and the turn can be
+//! retried with the same resume key once the bucket refills.
+//!
 //! Buckets are the crate-private `super::bucket::TokenBucket`, shared
 //! with [`super::rate::RateLimit`]; this layer instantiates them
 //! fail-*closed* (an invalid rate stops refilling, so a broken config

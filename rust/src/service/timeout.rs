@@ -10,6 +10,15 @@
 //! error plus a `Metrics::timed_out` tick. The upshot: a timed-out
 //! request costs at most its deadline of decode work — it is never
 //! abandoned to run to completion in the background.
+//!
+//! **Sessions: per-turn deadline vs. lease.** For a multi-turn session
+//! request the deadline stamped here bounds *one turn's* decode work
+//! only; the session itself — the pinned snapshot between turns —
+//! lives under the [`crate::coordinator::session::SessionTable`]
+//! lease, a separate, longer clock renewed by every turn. A turn that
+//! times out mid-decode with live beams suspends (resumable) rather
+//! than destroying the session; a client that stops calling altogether
+//! is reaped by the lease, not by this layer.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};

@@ -1,0 +1,477 @@
+//! Integration tests for the streaming session protocol: suspend /
+//! resume bit-identity against the per-beam oracle, idempotent
+//! resume-key replay, lease expiry and cancellation freeing pinned
+//! bytes, slow streaming consumers not stalling co-batched lanes, and
+//! budget-driven eviction of idle sessions.
+//!
+//! The load-bearing contract is the first test: a decode chopped into
+//! arbitrary turn-sized chunks through `snapshot()`/`resume()` must
+//! produce the same tokens and the same score **bits** as the per-beam
+//! reference decoder that never suspended. Everything else — leases,
+//! replay buffers, stream sinks — is bookkeeping around that
+//! invariant, and the remaining tests pin the bookkeeping: whatever
+//! path a session leaves by (expiry, cancel, eviction, completion),
+//! `sessions_live` and `session_bytes` must both return to zero.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use normq::coordinator::session::Lease;
+use normq::coordinator::{Response, ServeRequest, Server, ServerConfig};
+use normq::data::Corpus;
+use normq::dfa::Dfa;
+use normq::generate::engine::{step_batch, EngineItem, RequestState};
+use normq::generate::{
+    decode_with_table_perbeam, BuildOptions, ConstraintTable, DecodeConfig,
+};
+use normq::hmm::Hmm;
+use normq::lm::NgramLm;
+use normq::quant::QuantizedHmm;
+use normq::service::Service;
+use normq::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Engine level: chunked suspend/resume vs. the per-beam oracle.
+// ---------------------------------------------------------------------------
+
+struct Fixture {
+    corpus: Corpus,
+    lm: NgramLm,
+    q: QuantizedHmm,
+    cfg: DecodeConfig,
+}
+
+fn fixture() -> Fixture {
+    let corpus = Corpus::small(500);
+    let data = corpus.sample_token_corpus(400, 17);
+    let lm = NgramLm::train(&data, corpus.vocab.len());
+    let mut rng = Rng::seeded(0x5E55);
+    let hmm = Hmm::random(10, corpus.vocab.len(), 0.3, 0.2, &mut rng);
+    let q = QuantizedHmm::from_hmm(&hmm, 8);
+    let cfg = DecodeConfig { beam: 4, max_tokens: 10, ..Default::default() };
+    Fixture { corpus, lm, q, cfg }
+}
+
+fn request(f: &Fixture, word: &str) -> (Dfa, ConstraintTable) {
+    let kw = f.corpus.vocab.id(word);
+    let dfa = Dfa::from_keywords(&[vec![kw]], f.corpus.vocab.len());
+    let table = ConstraintTable::build_with(&f.q, &dfa, f.cfg.max_tokens, &BuildOptions::default())
+        .expect("no deadline: build cannot be cancelled");
+    (dfa, table)
+}
+
+/// Drive `state` until it finishes or suspends at the given absolute
+/// step limit.
+fn run_to_limit(f: &Fixture, dfa: &Dfa, table: &ConstraintTable, state: &mut RequestState) {
+    while !state.finished() {
+        let mut items = [EngineItem { dfa, table, state: &mut *state }];
+        step_batch(&f.lm, &f.q, &f.cfg, &mut items);
+    }
+}
+
+/// A decode split across suspend/resume boundaries at every possible
+/// first-chunk size is bit-identical to the per-beam reference decoder
+/// that never suspended: same tokens, same score bits, same
+/// satisfied/timed_out flags. This is the property the whole session
+/// protocol rests on — a resumed turn picks up exactly where the
+/// suspended one left off.
+#[test]
+fn chunked_suspend_resume_is_bit_identical_to_perbeam_oracle() {
+    let f = fixture();
+    for (i, word) in f
+        .corpus
+        .lexicon
+        .nouns
+        .iter()
+        .take(2)
+        .chain(f.corpus.lexicon.verbs.iter().take(1))
+        .enumerate()
+    {
+        let (dfa, table) = request(&f, word);
+        let oracle = decode_with_table_perbeam(&f.lm, &f.q, &dfa, &table, &f.cfg);
+
+        for first_chunk in 1..f.cfg.max_tokens {
+            // Chunk 1: decode `first_chunk` steps, then suspend.
+            let mut state = RequestState::new(&f.q, &dfa, None);
+            state.set_step_limit(Some(first_chunk));
+            run_to_limit(&f, &dfa, &table, &mut state);
+            if !state.suspended() {
+                // Finished naturally inside the first chunk; the
+                // oracle comparison below still applies.
+                let gen = state.generation(&dfa);
+                assert_eq!(gen.tokens, oracle.tokens, "{word} chunk={first_chunk}: early finish");
+                assert_eq!(gen.score.to_bits(), oracle.score.to_bits());
+                continue;
+            }
+
+            // Chunk 2: resume from the snapshot, advance a few more
+            // steps, suspend again.
+            let snap = state.snapshot();
+            let mut resumed = RequestState::resume(&f.q, &dfa, &snap, None);
+            assert_eq!(resumed.steps(), first_chunk, "resume must restore the step counter");
+            resumed.set_step_limit(Some(first_chunk + 2));
+            run_to_limit(&f, &dfa, &table, &mut resumed);
+
+            // Chunk 3: resume once more and run to completion.
+            let mut final_state = if resumed.suspended() {
+                RequestState::resume(&f.q, &dfa, &resumed.snapshot(), None)
+            } else {
+                resumed
+            };
+            final_state.set_step_limit(None);
+            run_to_limit(&f, &dfa, &table, &mut final_state);
+
+            let gen = final_state.generation(&dfa);
+            assert_eq!(
+                gen.tokens, oracle.tokens,
+                "request {i} ({word}) chunk={first_chunk}: tokens diverged after resume"
+            );
+            assert_eq!(
+                gen.score.to_bits(),
+                oracle.score.to_bits(),
+                "request {i} ({word}) chunk={first_chunk}: score bits diverged ({} vs {})",
+                gen.score,
+                oracle.score
+            );
+            assert_eq!(gen.satisfied, oracle.satisfied);
+            assert_eq!(gen.timed_out, oracle.timed_out);
+        }
+    }
+}
+
+/// A suspended request resumed alongside a *stranger* lane still
+/// matches the oracle — resumption composes with co-batching.
+#[test]
+fn resumed_lane_co_batched_with_stranger_matches_oracle() {
+    let f = fixture();
+    let (dfa_a, table_a) = request(&f, &f.corpus.lexicon.nouns[0]);
+    let (dfa_b, table_b) = request(&f, &f.corpus.lexicon.verbs[2]);
+    let oracle_a = decode_with_table_perbeam(&f.lm, &f.q, &dfa_a, &table_a, &f.cfg);
+    let oracle_b = decode_with_table_perbeam(&f.lm, &f.q, &dfa_b, &table_b, &f.cfg);
+
+    // A decodes three steps solo, suspends, and is resumed co-batched
+    // with fresh request B.
+    let mut a = RequestState::new(&f.q, &dfa_a, None);
+    a.set_step_limit(Some(3));
+    run_to_limit(&f, &dfa_a, &table_a, &mut a);
+    let mut a = if a.suspended() {
+        RequestState::resume(&f.q, &dfa_a, &a.snapshot(), None)
+    } else {
+        a
+    };
+    let mut b = RequestState::new(&f.q, &dfa_b, None);
+    while !a.finished() || !b.finished() {
+        let mut items = [
+            EngineItem { dfa: &dfa_a, table: &table_a, state: &mut a },
+            EngineItem { dfa: &dfa_b, table: &table_b, state: &mut b },
+        ];
+        step_batch(&f.lm, &f.q, &f.cfg, &mut items);
+    }
+    let gen_a = a.generation(&dfa_a);
+    let gen_b = b.generation(&dfa_b);
+    assert_eq!(gen_a.tokens, oracle_a.tokens, "resumed lane diverged");
+    assert_eq!(gen_a.score.to_bits(), oracle_a.score.to_bits());
+    assert_eq!(gen_b.tokens, oracle_b.tokens, "stranger lane perturbed by a resumed co-resident");
+    assert_eq!(gen_b.score.to_bits(), oracle_b.score.to_bits());
+}
+
+/// An expired lease wired in as a cancel probe fires at the next step
+/// boundary: the lane cancels mid-decode without perturbing its
+/// co-resident — this is how a silent client's lease frees a decode
+/// lane while a batch is in flight.
+#[test]
+fn expired_lease_probe_cancels_a_lane_mid_decode() {
+    let f = fixture();
+    let (dfa_a, table_a) = request(&f, &f.corpus.lexicon.nouns[0]);
+    let (dfa_b, table_b) = request(&f, &f.corpus.lexicon.verbs[0]);
+    let oracle_b = decode_with_table_perbeam(&f.lm, &f.q, &dfa_b, &table_b, &f.cfg);
+
+    let mut a = RequestState::new(&f.q, &dfa_a, None);
+    a.add_cancel_probe(Arc::new(Lease::new(Duration::ZERO)));
+    let mut b = RequestState::new(&f.q, &dfa_b, None);
+    let mut first_step = true;
+    while !a.finished() || !b.finished() {
+        let mut items = [
+            EngineItem { dfa: &dfa_a, table: &table_a, state: &mut a },
+            EngineItem { dfa: &dfa_b, table: &table_b, state: &mut b },
+        ];
+        step_batch(&f.lm, &f.q, &f.cfg, &mut items);
+        if first_step {
+            assert!(a.finished(), "an expired lease must cancel the lane at the first boundary");
+            assert!(a.cancelled());
+            first_step = false;
+        }
+    }
+    let gen_b = b.generation(&dfa_b);
+    assert_eq!(gen_b.tokens, oracle_b.tokens, "co-resident perturbed by a lease-cancelled lane");
+    assert_eq!(gen_b.score.to_bits(), oracle_b.score.to_bits());
+}
+
+// ---------------------------------------------------------------------------
+// Server level: the full session protocol over a live coordinator.
+// ---------------------------------------------------------------------------
+
+/// A small untrained-HMM server (weights don't matter for protocol
+/// tests) with session knobs exposed.
+fn make_server(session_ttl: Duration, session_budget_bytes: usize) -> (Server, Corpus) {
+    let corpus = Corpus::small(900);
+    let data = corpus.sample_token_corpus(200, 41);
+    let lm = NgramLm::train(&data, corpus.vocab.len());
+    let mut rng = Rng::seeded(42);
+    let hmm = Hmm::random(16, corpus.vocab.len(), 0.3, 0.2, &mut rng);
+    let cfg = ServerConfig {
+        workers: 2,
+        queue_capacity: 64,
+        build_threads: 2,
+        table_threads: 1,
+        session_ttl,
+        session_budget_bytes,
+        decode: DecodeConfig { beam: 4, max_tokens: 12, ..Default::default() },
+        ..Default::default()
+    };
+    (Server::start(Arc::new(lm), hmm, corpus.clone(), cfg), corpus)
+}
+
+/// Drive one session to completion in `turn_tokens`-sized turns and
+/// return the final turn's response plus the number of turns taken.
+fn drive_session(
+    server: &Server,
+    concepts: &[String],
+    session_id: &str,
+    turn_tokens: usize,
+) -> (Response, u32) {
+    let mut turn = 1u32;
+    loop {
+        let req = ServeRequest::new(concepts.to_vec()).with_session(
+            session_id,
+            format!("k{turn}"),
+            turn,
+            turn_tokens,
+        );
+        let resp = server.call(req).expect("session turn failed");
+        assert_eq!(resp.session_id.as_deref(), Some(session_id));
+        assert_eq!(resp.turn, turn);
+        if resp.session_done {
+            return (resp, turn);
+        }
+        assert!(turn < 32, "session never completed");
+        turn += 1;
+    }
+}
+
+/// A session decoded in 3-token turns ends with exactly the tokens and
+/// score bits of a one-shot request for the same concepts on the same
+/// server — resumption is invisible to the output. The session
+/// consumes at least one resume, and when the last turn completes,
+/// no pinned bytes remain.
+#[test]
+fn multi_turn_session_matches_one_shot_decode() {
+    let (server, corpus) = make_server(Duration::from_secs(30), 64 << 20);
+    let concepts: Vec<String> = corpus.lexicon.nouns[..2].to_vec();
+
+    let one_shot = server.call(ServeRequest::new(concepts.clone())).unwrap();
+    assert!(!one_shot.failed && !one_shot.timed_out);
+
+    let (last, turns) = drive_session(&server, &concepts, "sess-oracle", 3);
+    assert!(turns > 1, "12 max_tokens in 3-token turns must take several turns");
+    assert_eq!(
+        last.tokens, one_shot.tokens,
+        "resumed session tokens diverged from the one-shot decode"
+    );
+    assert_eq!(
+        last.score.to_bits(),
+        one_shot.score.to_bits(),
+        "resumed session score bits diverged ({} vs {})",
+        last.score,
+        one_shot.score
+    );
+    assert_eq!(last.satisfied, one_shot.satisfied);
+
+    let m = server.metrics();
+    assert!(m.sessions_resumed.load(Ordering::Relaxed) >= 1);
+    assert_eq!(m.session_bytes.load(Ordering::Relaxed), 0, "completed session left pinned bytes");
+    server.shutdown();
+}
+
+/// Retrying a turn with the same resume key replays the buffered
+/// response byte-identically instead of re-decoding; the session then
+/// continues normally from the next turn.
+#[test]
+fn duplicate_resume_key_replays_byte_identical_response() {
+    let (server, corpus) = make_server(Duration::from_secs(30), 64 << 20);
+    let concepts: Vec<String> = corpus.lexicon.verbs[..2].to_vec();
+
+    let turn1 = server
+        .call(ServeRequest::new(concepts.clone()).with_session("sess-replay", "k1", 1, 3))
+        .unwrap();
+    assert!(!turn1.session_done, "3-token first turn must suspend");
+
+    // The retry: same session, same key, same turn number.
+    let replay = server
+        .call(ServeRequest::new(concepts.clone()).with_session("sess-replay", "k1", 1, 3))
+        .unwrap();
+    assert!(replay.replayed, "duplicate resume key must be served from the buffer");
+    assert_eq!(replay.tokens, turn1.tokens, "replayed tokens diverged");
+    assert_eq!(replay.score.to_bits(), turn1.score.to_bits(), "replayed score bits diverged");
+    assert_eq!(replay.text, turn1.text);
+    assert_eq!(replay.turn, 1);
+    assert_eq!(server.metrics().session_replays.load(Ordering::Relaxed), 1);
+
+    // The real turn 2 still resumes from the pinned snapshot — the
+    // replay consumed nothing.
+    let turn2 = server
+        .call(ServeRequest::new(concepts).with_session("sess-replay", "k2", 2, 3))
+        .unwrap();
+    assert_eq!(turn2.turn, 2);
+    assert!(!turn2.replayed, "turn 2 must decode, not replay");
+    assert_eq!(server.metrics().sessions_resumed.load(Ordering::Relaxed), 1);
+    server.shutdown();
+}
+
+/// A client that goes silent past the lease TTL is reaped: the next
+/// turn is rejected, and both `sessions_live` and `session_bytes`
+/// return to zero — expiry never leaks pinned snapshot bytes.
+#[test]
+fn lease_expiry_rejects_resume_and_frees_pinned_bytes() {
+    let (server, corpus) = make_server(Duration::from_millis(200), 64 << 20);
+    let concepts: Vec<String> = corpus.lexicon.nouns[..1].to_vec();
+
+    let turn1 = server
+        .call(ServeRequest::new(concepts.clone()).with_session("sess-silent", "k1", 1, 2))
+        .unwrap();
+    assert!(!turn1.session_done, "2-token first turn must suspend");
+    assert!(server.metrics().session_bytes.load(Ordering::Relaxed) > 0);
+
+    std::thread::sleep(Duration::from_millis(600));
+
+    // Turn 2 arrives after the lease expired: the entry is reaped on
+    // admission and the turn is rejected.
+    let err = server
+        .call(ServeRequest::new(concepts).with_session("sess-silent", "k2", 2, 2))
+        .expect_err("resume past the lease TTL must be rejected");
+    let msg = format!("{err:?}");
+    assert!(msg.contains("unknown session"), "unexpected rejection: {msg}");
+
+    let m = server.metrics();
+    assert_eq!(m.sessions_expired.load(Ordering::Relaxed), 1);
+    assert_eq!(m.sessions_live.load(Ordering::Relaxed), 0, "expired session still counted live");
+    assert_eq!(m.session_bytes.load(Ordering::Relaxed), 0, "expired session leaked pinned bytes");
+    server.shutdown();
+}
+
+/// A turn whose cancel flag is already set is cancelled at the first
+/// step boundary; the session is destroyed and its lane and bytes are
+/// freed — a later turn finds no session.
+#[test]
+fn cancelled_turn_destroys_the_session_and_frees_its_lane() {
+    let (server, corpus) = make_server(Duration::from_secs(30), 64 << 20);
+    let concepts: Vec<String> = corpus.lexicon.verbs[..1].to_vec();
+
+    let (req, flag) = ServeRequest::new(concepts.clone())
+        .with_session("sess-cancel", "k1", 1, 4)
+        .with_cancel();
+    flag.cancel();
+    let resp = server.call(req).unwrap();
+    assert!(resp.timed_out, "a cancelled turn reports timed-out");
+
+    let err = server
+        .call(ServeRequest::new(concepts).with_session("sess-cancel", "k2", 2, 4))
+        .expect_err("a destroyed session must not accept more turns");
+    assert!(format!("{err:?}").contains("unknown session"));
+
+    let m = server.metrics();
+    assert_eq!(m.sessions_cancelled.load(Ordering::Relaxed), 1);
+    assert_eq!(m.sessions_live.load(Ordering::Relaxed), 0);
+    assert_eq!(m.session_bytes.load(Ordering::Relaxed), 0, "cancel leaked pinned bytes");
+    server.shutdown();
+}
+
+/// A streaming client that never drains its capacity-1 channel must
+/// not stall the decode: both its own request and a co-batched
+/// stranger complete, with the undelivered tokens counted as dropped
+/// (the `Response` stays authoritative).
+#[test]
+fn slow_stream_consumer_does_not_stall_co_batched_lanes() {
+    let (server, corpus) = make_server(Duration::from_secs(30), 64 << 20);
+    let concepts: Vec<String> = corpus.lexicon.nouns[..2].to_vec();
+
+    let (slow_req, slow_rx) =
+        ServeRequest::new(concepts.clone()).with_stream(1);
+    std::thread::scope(|scope| {
+        let slow = scope.spawn({
+            let server = &server;
+            move || {
+                let resp = server.call(slow_req).unwrap();
+                // Hold the receiver open (but unread) for the whole
+                // decode — dropping it would signal abandonment.
+                drop(slow_rx);
+                resp
+            }
+        });
+        let fast = scope.spawn({
+            let (server, concepts) = (&server, concepts.clone());
+            move || server.call(ServeRequest::new(concepts)).unwrap()
+        });
+        let slow_resp = slow.join().unwrap();
+        let fast_resp = fast.join().unwrap();
+        assert!(!slow_resp.failed && !slow_resp.timed_out, "slow consumer's own decode broke");
+        assert!(!fast_resp.failed && !fast_resp.timed_out, "co-batched lane stalled");
+        assert_eq!(
+            slow_resp.tokens, fast_resp.tokens,
+            "same concepts must decode identically regardless of streaming"
+        );
+    });
+    server.shutdown();
+}
+
+/// With ample channel capacity, the concatenation of all streamed
+/// frames equals the response's token sequence exactly — streaming is
+/// a latency optimization, not a different answer.
+#[test]
+fn drained_stream_frames_concatenate_to_the_response_tokens() {
+    let (server, corpus) = make_server(Duration::from_secs(30), 64 << 20);
+    let concepts: Vec<String> = corpus.lexicon.verbs[..2].to_vec();
+
+    let (req, rx) = ServeRequest::new(concepts).with_stream(64);
+    let resp = server.call(req).unwrap();
+    assert!(!resp.failed);
+
+    let mut streamed: Vec<usize> = Vec::new();
+    let mut saw_last = false;
+    while let Ok(frame) = rx.try_recv() {
+        streamed.extend(frame.tokens);
+        if frame.last {
+            saw_last = true;
+        }
+    }
+    assert!(saw_last, "the final frame must be marked last");
+    assert_eq!(streamed, resp.tokens, "streamed frames diverged from the authoritative response");
+    assert!(server.metrics().stream_frames.load(Ordering::Relaxed) >= 1);
+    server.shutdown();
+}
+
+/// With a zero session-byte budget, an idle suspended session is
+/// evicted the moment its turn completes: the next turn finds nothing,
+/// and the gauge stays at zero.
+#[test]
+fn zero_budget_evicts_idle_sessions_immediately() {
+    let (server, corpus) = make_server(Duration::from_secs(30), 0);
+    let concepts: Vec<String> = corpus.lexicon.nouns[..1].to_vec();
+
+    let turn1 = server
+        .call(ServeRequest::new(concepts.clone()).with_session("sess-evict", "k1", 1, 2))
+        .unwrap();
+    assert!(!turn1.session_done, "first turn must suspend so there is something to evict");
+
+    let err = server
+        .call(ServeRequest::new(concepts).with_session("sess-evict", "k2", 2, 2))
+        .expect_err("the evicted session must not resume");
+    assert!(format!("{err:?}").contains("unknown session"));
+
+    let m = server.metrics();
+    assert_eq!(m.sessions_evicted.load(Ordering::Relaxed), 1);
+    assert_eq!(m.sessions_live.load(Ordering::Relaxed), 0);
+    assert_eq!(m.session_bytes.load(Ordering::Relaxed), 0);
+    server.shutdown();
+}
