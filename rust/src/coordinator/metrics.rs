@@ -116,13 +116,20 @@ pub struct ClientStats {
     /// This client's end-to-end latencies (seconds),
     /// reservoir-sampled at [`CLIENT_RESERVOIR_CAP`].
     latencies: Mutex<Reservoir>,
-    /// Queue-wait component of each completed request (seconds):
-    /// admission to decode-worker pickup, reservoir-sampled.
+    /// Pure queue-wait component of each completed request (seconds):
+    /// admission to decode-worker pickup, minus any time parked on a
+    /// pending constraint-table build, reservoir-sampled.
     queue_waits: Mutex<Reservoir>,
+    /// Build-wait component (seconds): time parked on a pending
+    /// constraint-table build before dispatch (zero for warm-table
+    /// traffic), reservoir-sampled.
+    build_waits: Mutex<Reservoir>,
     /// Decode-wait component (seconds): everything after pickup —
-    /// table wait plus beam stepping — reservoir-sampled. Together
-    /// with `queue_waits` this attributes a tenant's tail: a high
-    /// `q_p99` with a flat `d_p99` is contention, not decode cost.
+    /// beam stepping — reservoir-sampled. Together with `queue_waits`
+    /// and `build_waits` this attributes a tenant's tail: a high
+    /// `q_p99` with flat `b_p99`/`d_p99` is dispatch contention, a
+    /// high `b_p99` is cold-table build cost, a high `d_p99` is
+    /// decode cost.
     decode_waits: Mutex<Reservoir>,
 }
 
@@ -136,6 +143,7 @@ impl Default for ClientStats {
             queue_depth: AtomicU64::new(0),
             latencies: Mutex::new(Reservoir::new(CLIENT_RESERVOIR_CAP)),
             queue_waits: Mutex::new(Reservoir::new(CLIENT_RESERVOIR_CAP)),
+            build_waits: Mutex::new(Reservoir::new(CLIENT_RESERVOIR_CAP)),
             decode_waits: Mutex::new(Reservoir::new(CLIENT_RESERVOIR_CAP)),
         }
     }
@@ -148,11 +156,14 @@ impl ClientStats {
         self.latencies.lock().unwrap().push(secs);
     }
 
-    /// Record one completed request's latency split: time queued
-    /// before a decode worker picked it up vs time from pickup to
-    /// answer (both seconds).
-    pub fn record_waits(&self, queued: f64, decode: f64) {
+    /// Record one completed request's latency split (all seconds):
+    /// time queued before a decode worker picked it up (net of build
+    /// wait), time parked on a pending constraint-table build, and
+    /// time from pickup to answer. The three buckets partition the
+    /// pre-reply latency.
+    pub fn record_waits(&self, queued: f64, build: f64, decode: f64) {
         self.queue_waits.lock().unwrap().push(queued);
+        self.build_waits.lock().unwrap().push(build);
         self.decode_waits.lock().unwrap().push(decode);
     }
 
@@ -175,6 +186,17 @@ impl ClientStats {
             None
         } else {
             Some(Stats::of(q.samples()))
+        }
+    }
+
+    /// Quantiles over this client's build-wait component; `None`
+    /// before the first [`ClientStats::record_waits`].
+    pub fn build_wait_stats(&self) -> Option<Stats> {
+        let b = self.build_waits.lock().unwrap();
+        if b.is_empty() {
+            None
+        } else {
+            Some(Stats::of(b.samples()))
         }
     }
 
@@ -201,10 +223,15 @@ impl ClientStats {
                 )
             })
             .unwrap_or_default();
-        let waits = match (self.queue_wait_stats(), self.decode_wait_stats()) {
-            (Some(q), Some(d)) => format!(
-                " q_p99={} d_p99={}",
+        let waits = match (
+            self.queue_wait_stats(),
+            self.build_wait_stats(),
+            self.decode_wait_stats(),
+        ) {
+            (Some(q), Some(bw), Some(d)) => format!(
+                " q_p99={} b_p99={} d_p99={}",
                 crate::util::timer::fmt_secs(q.p99),
+                crate::util::timer::fmt_secs(bw.p99),
                 crate::util::timer::fmt_secs(d.p99)
             ),
             _ => String::new(),
@@ -780,7 +807,7 @@ mod tests {
         // A contended client: long queue waits, short decode.
         for _ in 0..50 {
             m.client("contended").record_latency(1.01);
-            m.client("contended").record_waits(1.0, 0.01);
+            m.client("contended").record_waits(1.0, 0.0, 0.01);
         }
         let q = m.client("contended").queue_wait_stats().unwrap();
         let d = m.client("contended").decode_wait_stats().unwrap();
@@ -792,6 +819,32 @@ mod tests {
         // A client with latencies but no wait split renders without it.
         m.client("plain").record_latency(0.5);
         assert!(m.client("plain").queue_wait_stats().is_none());
+    }
+
+    #[test]
+    fn client_wait_split_attributes_build_wait_separately() {
+        let m = Metrics::new();
+        // A cold-table client: most of its pre-pickup wait is parked
+        // on a pending build, not dispatcher contention.
+        for _ in 0..50 {
+            m.client("cold").record_latency(1.21);
+            m.client("cold").record_waits(0.01, 1.0, 0.2);
+        }
+        let q = m.client("cold").queue_wait_stats().unwrap();
+        let b = m.client("cold").build_wait_stats().unwrap();
+        let d = m.client("cold").decode_wait_stats().unwrap();
+        assert!(q.p99 < 0.1, "q_p99 {}", q.p99);
+        assert!(b.p99 > 0.5, "b_p99 {}", b.p99);
+        assert!(d.p99 < 0.5, "d_p99 {}", d.p99);
+        let summary = m.client_summary();
+        assert!(summary.contains("b_p99="), "{summary}");
+        // Warm traffic records a zero build bucket, so b_p99 renders
+        // (near) zero rather than vanishing from the line.
+        for _ in 0..20 {
+            m.client("warm").record_waits(0.5, 0.0, 0.01);
+        }
+        let warm_b = m.client("warm").build_wait_stats().unwrap();
+        assert!(warm_b.p99 < 1e-9, "warm b_p99 {}", warm_b.p99);
     }
 
     #[test]

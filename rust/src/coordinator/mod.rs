@@ -290,6 +290,14 @@ pub struct Request {
     pub stream: Option<std::sync::mpsc::SyncSender<StreamFrame>>,
     /// Cancellation flag carried from the [`ServeRequest`].
     pub cancel: Option<Arc<CancelFlag>>,
+    /// When the request was first parked on a pending constraint-table
+    /// build (join or miss in [`resolve_group`]); `None` until then.
+    /// The decode worker charges `dispatched_at - build_parked_at` to
+    /// the per-client build-wait bucket (`b_p99`) and only the rest of
+    /// the queue time to pure queueing (`q_p99`). Stamped only when
+    /// still `None`, so a request re-resolved after a cancelled build
+    /// keeps its original park time.
+    pub build_parked_at: Option<Instant>,
 }
 
 /// What the coordinator answers: the generated text plus timing
@@ -407,6 +415,29 @@ pub struct ServerConfig {
     pub session_ttl: Duration,
     /// Beam-search configuration shared by every request.
     pub decode: DecodeConfig,
+    /// Intra-step threads for the panel kernels inside each decode
+    /// worker (CLI `--kernel-threads`): the blocked matrix kernels fan
+    /// output-column blocks across up to this many scoped threads per
+    /// call, behind a work-size gate. `0` = auto: divide the machine's
+    /// thread budget evenly across the decode workers
+    /// ([`ServerConfig::kernel_threads_effective`]). Column
+    /// partitioning never splits one accumulator, so any setting is
+    /// bit-identical to serial.
+    pub kernel_threads: usize,
+}
+
+impl ServerConfig {
+    /// The per-worker kernel thread budget actually used: the
+    /// configured `kernel_threads`, or (when 0/auto) the machine
+    /// thread budget divided across the decode workers, floor 1 — so
+    /// `workers × kernel_threads_effective()` never oversubscribes the
+    /// default thread budget.
+    pub fn kernel_threads_effective(&self) -> usize {
+        match self.kernel_threads {
+            0 => (crate::util::threadpool::default_threads() / self.workers.max(1)).max(1),
+            n => n,
+        }
+    }
 }
 
 impl Default for ServerConfig {
@@ -425,6 +456,7 @@ impl Default for ServerConfig {
             session_budget_bytes: 64 << 20,
             session_ttl: Duration::from_secs(30),
             decode: DecodeConfig::default(),
+            kernel_threads: 0,
         }
     }
 }
@@ -619,6 +651,7 @@ impl Server {
             lease: None,
             stream: req.stream,
             cancel: req.cancel,
+            build_parked_at: None,
         };
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         client_stats.submitted.fetch_add(1, Ordering::Relaxed);
@@ -1054,10 +1087,20 @@ fn resolve_group(
     work: &SyncSender<Batch>,
     pool: &Weak<BuildPool>,
     key: &str,
-    requests: Vec<Request>,
+    mut requests: Vec<Request>,
 ) -> bool {
     let deadline = group_deadline(&requests);
     let n = requests.len() as u64;
+    // Build-wait attribution: if this lookup parks the group on a
+    // pending entry (join or miss), everything from here to dispatch
+    // is build wait, not pure queueing. The requests are moved into
+    // the cache by `lookup`, so stamp before; a warm hit dispatches
+    // immediately and charges ~0 to the build bucket. Only-if-None
+    // keeps the original park time across build-cancel re-resolution.
+    let parked_at = Instant::now();
+    for req in &mut requests {
+        req.build_parked_at.get_or_insert(parked_at);
+    }
     // Compile the group's DFA *outside* the cache lock when the key
     // looks cold (a large keyword set compiles in milliseconds —
     // holding the lock for it would stall completing builds and
@@ -1388,6 +1431,7 @@ struct DecodeLane<'a> {
     slot: InFlightSlot<'a>,
     state: engine::RequestState,
     queue_wait: Duration,
+    build_wait: Duration,
 }
 
 /// What happens to a request's session entry when its turn finishes.
@@ -1414,6 +1458,7 @@ fn finish_request(
     mut slot: InFlightSlot,
     gen: Generation,
     queue_wait: Duration,
+    build_wait: Duration,
     fate: SessionFate,
 ) {
     let latency = req.submitted_at.elapsed();
@@ -1430,8 +1475,13 @@ fn finish_request(
             .metrics
             .record_latency(latency.as_secs_f64(), queue_wait.as_secs_f64());
         req.client_stats.record_latency(latency.as_secs_f64());
+        // The queue bucket charges only the time NOT parked on a
+        // pending table build; the build bucket gets the rest, so
+        // `q_p99`/`b_p99`/`d_p99` partition the latency. The global
+        // split (and `Response::queue_wait`) keeps the full wait.
         req.client_stats.record_waits(
-            queue_wait.as_secs_f64(),
+            queue_wait.saturating_sub(build_wait).as_secs_f64(),
+            build_wait.min(queue_wait).as_secs_f64(),
             latency.saturating_sub(queue_wait).as_secs_f64(),
         );
     }
@@ -1473,6 +1523,13 @@ fn finish_request(
 }
 
 fn worker_loop(work: Arc<Mutex<Receiver<Batch>>>, shared: Arc<Shared>) {
+    // One engine scratch for the worker's lifetime: panel buffers and
+    // kernel accumulators are reused across every batch and step, so
+    // the steady-state decode loop performs no per-step heap
+    // allocation. The scratch also carries this worker's intra-step
+    // kernel thread budget (`--kernel-threads`, auto-divided across
+    // workers when 0).
+    let mut scratch = engine::EngineScratch::with_threads(shared.cfg.kernel_threads_effective());
     loop {
         let batch = {
             let rx = work.lock().unwrap();
@@ -1495,6 +1552,13 @@ fn worker_loop(work: Arc<Mutex<Receiver<Batch>>>, shared: Arc<Shared>) {
         let mut lanes: Vec<DecodeLane> = Vec::new();
         for (mut req, slot) in batch.requests.into_iter().zip(slots) {
             let queue_wait = batch.dispatched_at.duration_since(req.submitted_at);
+            // Time parked on the pending table entry (zero for a warm
+            // hit): the slice of `queue_wait` owed to the build, not
+            // the dispatcher.
+            let build_wait = req
+                .build_parked_at
+                .map(|t| batch.dispatched_at.saturating_duration_since(t))
+                .unwrap_or_default();
             // Deadline already blown while queued: answer immediately
             // instead of burning a decode lane on abandoned work. A
             // session turn rolls its borrowed snapshot back so the
@@ -1511,7 +1575,7 @@ fn worker_loop(work: Arc<Mutex<Receiver<Batch>>>, shared: Arc<Shared>) {
                 } else {
                     SessionFate::None
                 };
-                finish_request(&shared, req, slot, gen, queue_wait, fate);
+                finish_request(&shared, req, slot, gen, queue_wait, build_wait, fate);
                 continue;
             }
             // A resumed turn rebuilds its beam state from the pinned
@@ -1538,7 +1602,7 @@ fn worker_loop(work: Arc<Mutex<Receiver<Batch>>>, shared: Arc<Shared>) {
             if let Some(tx) = req.stream.take() {
                 state.attach_stream(engine::StreamSink::new(tx));
             }
-            lanes.push(DecodeLane { req, slot, state, queue_wait });
+            lanes.push(DecodeLane { req, slot, state, queue_wait, build_wait });
         }
         // Per-request deadlines live in each lane's RequestState, so a
         // co-batched request times out on its own schedule mid-batch.
@@ -1549,7 +1613,8 @@ fn worker_loop(work: Arc<Mutex<Receiver<Batch>>>, shared: Arc<Shared>) {
                 .iter_mut()
                 .map(|l| engine::EngineItem { dfa, table, state: &mut l.state })
                 .collect();
-            engine::step_batch(shared.lm.as_ref(), &*shared.model, &dcfg, &mut items);
+            let lm = shared.lm.as_ref();
+            engine::step_batch_with(lm, &*shared.model, &dcfg, &mut items, &mut scratch);
             drop(items);
             // Reply to lanes that finished this step right away: a fast
             // (or timed-out, or beam-extinct) request never waits for
@@ -1590,7 +1655,15 @@ fn worker_loop(work: Arc<Mutex<Receiver<Batch>>>, shared: Arc<Shared>) {
                     } else {
                         SessionFate::None
                     };
-                    finish_request(&shared, lane.req, lane.slot, gen, lane.queue_wait, fate);
+                    finish_request(
+                        &shared,
+                        lane.req,
+                        lane.slot,
+                        gen,
+                        lane.queue_wait,
+                        lane.build_wait,
+                        fate,
+                    );
                 } else {
                     i += 1;
                 }

@@ -65,6 +65,7 @@ use crate::data::vocab::EOS;
 use crate::dfa::Dfa;
 use crate::hmm::HmmBackend;
 use crate::lm::LanguageModel;
+use crate::util::kernel::KernelScratch;
 
 use super::{maybe_qdq, CancelProbe, ConstraintTable, DecodeConfig, Generation};
 
@@ -454,21 +455,22 @@ impl RequestState {
     /// of the current pool extends a member of the previous pool, so
     /// the scan can start at the previous watermark.
     fn advance_commit(&mut self) -> Vec<usize> {
-        let stripped = |d: &DoneBeam| -> &[usize] {
+        fn stripped(d: &DoneBeam) -> &[usize] {
             let mut s = d.tokens.as_slice();
             if s.last() == Some(&EOS) {
                 s = &s[..s.len() - 1];
             }
             s
-        };
-        let reference: Vec<usize> = match (self.tokens.first(), self.done.first()) {
-            (Some(t), _) => t.clone(),
-            (None, Some(d)) => stripped(d).to_vec(),
+        }
+        let committed = self.committed;
+        let reference: &[usize] = match (self.tokens.first(), self.done.first()) {
+            (Some(t), _) => t.as_slice(),
+            (None, Some(d)) => stripped(d),
             (None, None) => return Vec::new(),
         };
         let agree = |other: &[usize], cap: usize| -> usize {
             let max = cap.min(other.len()).min(reference.len());
-            let mut i = self.committed.min(max);
+            let mut i = committed.min(max);
             while i < max && reference[i] == other[i] {
                 i += 1;
             }
@@ -481,7 +483,7 @@ impl RequestState {
         for d in &self.done {
             lcp = agree(stripped(d), lcp);
         }
-        let fresh = reference[self.committed.min(lcp)..lcp].to_vec();
+        let fresh = reference[committed.min(lcp)..lcp].to_vec();
         self.committed = lcp;
         fresh
     }
@@ -538,6 +540,89 @@ pub struct EngineItem<'a> {
     pub state: &'a mut RequestState,
 }
 
+/// Reusable per-worker scratch for [`step_batch_with`]: every
+/// panel-sized buffer a batch step needs (gather panels, the fused
+/// acceptance sweep's weight panel, candidate/survivor staging, the
+/// forward-step panels) plus the [`KernelScratch`] the blocked matrix
+/// kernels accumulate in. A decode worker owns one for its whole
+/// lifetime, so the steady-state decode loop's per-step heap traffic
+/// drops to the genuinely growing state: surviving token prefixes and
+/// freshly committed stream slices. Buffers are `clear()`+`resize()`d
+/// in place and retain capacity across steps.
+///
+/// The embedded kernel scratch also carries the intra-step thread
+/// budget: [`EngineScratch::with_threads`] lets the panel kernels fan
+/// output-column blocks across that many threads (work-size gate
+/// permitting) — `--kernel-threads` on the serving CLI.
+pub struct EngineScratch {
+    kernel: KernelScratch,
+    u_panel: Vec<f32>,
+    alpha_q_panel: Vec<f32>,
+    live_items: Vec<usize>,
+    lane_counts: Vec<usize>,
+    w_panel: Vec<f32>,
+    lp: Vec<f32>,
+    fwd_alphas: Vec<f32>,
+    fwd_toks: Vec<usize>,
+    fwd_dst: Vec<(usize, usize)>,
+    next_panel: Vec<f32>,
+    scales: Vec<f64>,
+    candidates: Vec<(usize, usize, f64)>,
+    next_tokens: Vec<Vec<usize>>,
+    next_scores: Vec<f64>,
+    next_states: Vec<u32>,
+}
+
+impl EngineScratch {
+    /// A scratch whose kernels run serial (no intra-step threading).
+    pub fn new() -> EngineScratch {
+        EngineScratch::with_threads(1)
+    }
+
+    /// A scratch whose panel kernels may fan out across up to
+    /// `threads` scoped threads per call, behind the kernel layer's
+    /// work-size gate. Column-partitioned threading never splits one
+    /// accumulator across threads, so results stay bit-identical to
+    /// the serial path at any thread count.
+    pub fn with_threads(threads: usize) -> EngineScratch {
+        EngineScratch {
+            kernel: KernelScratch::with_threads(threads),
+            u_panel: Vec::new(),
+            alpha_q_panel: Vec::new(),
+            live_items: Vec::new(),
+            lane_counts: Vec::new(),
+            w_panel: Vec::new(),
+            lp: Vec::new(),
+            fwd_alphas: Vec::new(),
+            fwd_toks: Vec::new(),
+            fwd_dst: Vec::new(),
+            next_panel: Vec::new(),
+            scales: Vec::new(),
+            candidates: Vec::new(),
+            next_tokens: Vec::new(),
+            next_scores: Vec::new(),
+            next_states: Vec::new(),
+        }
+    }
+
+    /// The intra-step thread budget the embedded kernel scratch holds.
+    pub fn kernel_threads(&self) -> usize {
+        self.kernel.threads()
+    }
+
+    /// Direct access to the embedded [`KernelScratch`] (tests force
+    /// degenerate tiling geometries through it).
+    pub fn kernel_mut(&mut self) -> &mut KernelScratch {
+        &mut self.kernel
+    }
+}
+
+impl Default for EngineScratch {
+    fn default() -> Self {
+        EngineScratch::new()
+    }
+}
+
 /// Advance every unfinished request in `items` by one decode step,
 /// fusing the per-beam acceptance products and forward steps across
 /// the whole batch into one [`HmmBackend::emit_panel`] and one
@@ -565,16 +650,51 @@ pub fn step_batch(
     cfg: &DecodeConfig,
     items: &mut [EngineItem],
 ) {
+    step_batch_with(lm, model, cfg, items, &mut EngineScratch::new());
+}
+
+/// [`step_batch`] with a caller-owned [`EngineScratch`]: identical
+/// semantics and bit-identical results, but every panel-sized buffer
+/// is reused from the scratch and the matrix kernels run through the
+/// scratch's [`KernelScratch`] (tiled accumulators, fixed-width
+/// micro-kernels, optional intra-step threading). This is the
+/// steady-state entry point — the coordinator's decode workers and
+/// [`super::decode_with_table`] hold one scratch across all steps.
+pub fn step_batch_with(
+    lm: &dyn LanguageModel,
+    model: &dyn HmmBackend,
+    cfg: &DecodeConfig,
+    items: &mut [EngineItem],
+    scratch: &mut EngineScratch,
+) {
     let h_n = model.hidden();
     let vocab = model.vocab();
+    let EngineScratch {
+        kernel,
+        u_panel,
+        alpha_q_panel,
+        live_items,
+        lane_counts,
+        w_panel,
+        lp,
+        fwd_alphas,
+        fwd_toks,
+        fwd_dst,
+        next_panel,
+        scales,
+        candidates,
+        next_tokens,
+        next_scores,
+        next_states,
+    } = scratch;
 
     // --- Phase 1: lifecycle checks + gather belief products u = α_q ⊙ c_def
     // into one beam-major panel (lanes are contiguous per request, in
     // item order). α_q rows are kept for the correction loops.
-    let mut u_panel: Vec<f32> = Vec::new();
-    let mut alpha_q_panel: Vec<f32> = Vec::new();
-    let mut live_items: Vec<usize> = Vec::new();
-    let mut lane_counts: Vec<usize> = Vec::new();
+    u_panel.clear();
+    alpha_q_panel.clear();
+    live_items.clear();
+    lane_counts.clear();
     for (ii, item) in items.iter_mut().enumerate() {
         let st = &mut *item.state;
         if st.finished || st.suspended {
@@ -607,8 +727,13 @@ pub fn step_batch(
         let remaining = cfg.max_tokens - st.t; // tokens left including this one
         let b = st.tokens.len();
         for bi in 0..b {
-            let mut alpha_q = st.alphas[bi * h_n..(bi + 1) * h_n].to_vec();
-            maybe_qdq(&mut alpha_q, cfg.act_bits);
+            // α_q is staged directly in its panel slot (no per-beam
+            // temporary): copy the raw row in, qdq the tail in place,
+            // then build u from it.
+            let abase = alpha_q_panel.len();
+            alpha_q_panel.extend_from_slice(&st.alphas[bi * h_n..(bi + 1) * h_n]);
+            let alpha_q = &mut alpha_q_panel[abase..abase + h_n];
+            maybe_qdq(alpha_q, cfg.act_bits);
             let d_def = item.dfa.default_next(st.dfa_states[bi]);
             let c_def = item.table.c(remaining - 1, d_def);
             let base = u_panel.len();
@@ -617,7 +742,6 @@ pub fn step_batch(
                 u_panel[base + h] = alpha_q[h] * c_def[h];
             }
             maybe_qdq(&mut u_panel[base..base + h_n], cfg.act_bits);
-            alpha_q_panel.extend_from_slice(&alpha_q);
         }
         live_items.push(ii);
         lane_counts.push(b);
@@ -630,26 +754,28 @@ pub fn step_batch(
     // --- Phase 2: ONE fused acceptance sweep over every live beam of
     // every request — the decode hot spot, now streaming the weight
     // arrays once per batch step instead of once per beam.
-    let mut w_panel = vec![0f32; b_total * vocab];
-    model.emit_panel(&u_panel, b_total, &mut w_panel);
+    w_panel.clear();
+    w_panel.resize(b_total * vocab, 0.0);
+    model.emit_panel_with(&u_panel[..], b_total, &mut w_panel[..], kernel);
 
     // --- Phase 3: per request, score candidates over its lanes and
     // select survivors. All ordering-sensitive work stays per-request.
-    let mut lp = vec![0f32; vocab];
-    let mut fwd_alphas: Vec<f32> = Vec::new();
-    let mut fwd_toks: Vec<usize> = Vec::new();
-    let mut fwd_dst: Vec<(usize, usize)> = Vec::new();
+    lp.clear();
+    lp.resize(vocab, 0.0);
+    fwd_alphas.clear();
+    fwd_toks.clear();
+    fwd_dst.clear();
     let mut lane = 0usize;
     for (li, &ii) in live_items.iter().enumerate() {
         let b = lane_counts[li];
         let item = &mut items[ii];
         let st = &mut *item.state;
         let remaining = cfg.max_tokens - st.t;
-        let mut candidates: Vec<(usize, usize, f64)> = Vec::new(); // (beam, tok, score)
+        candidates.clear(); // (beam, tok, score)
         for bi in 0..b {
             let alpha_q = &alpha_q_panel[(lane + bi) * h_n..(lane + bi + 1) * h_n];
             let w = &mut w_panel[(lane + bi) * vocab..(lane + bi + 1) * vocab];
-            lm.next_log_probs(&st.tokens[bi], &mut lp);
+            lm.next_log_probs(&st.tokens[bi], &mut lp[..]);
             maybe_qdq(w, cfg.act_bits);
 
             // Exception tokens: per-token class correction over the
@@ -705,13 +831,23 @@ pub fn step_batch(
             continue;
         }
         // Top-k by score; total_cmp so a NaN can never panic a worker.
-        candidates.sort_by(|a, b| b.2.total_cmp(&a.2));
+        // `sort_unstable_by` avoids the stable sort's merge-buffer
+        // allocation. Unstable sorting is safe here only because the
+        // comparator is a TOTAL order: candidates are generated in
+        // (beam asc, tok asc) order with distinct (beam, tok) pairs, so
+        // the (beam, tok) tiebreaker reproduces the stable sort's
+        // score-tie ordering exactly — selection stays bit-identical.
+        candidates.sort_unstable_by(|a, b| {
+            b.2.total_cmp(&a.2)
+                .then_with(|| a.0.cmp(&b.0))
+                .then_with(|| a.1.cmp(&b.1))
+        });
         candidates.truncate(cfg.beam);
 
-        let mut next_tokens: Vec<Vec<usize>> = Vec::with_capacity(cfg.beam);
-        let mut next_scores: Vec<f64> = Vec::with_capacity(cfg.beam);
-        let mut next_states: Vec<u32> = Vec::with_capacity(cfg.beam);
-        for (bi, tok, score) in candidates {
+        next_tokens.clear();
+        next_scores.clear();
+        next_states.clear();
+        for &(bi, tok, score) in candidates.iter() {
             let mut tokens = st.tokens[bi].clone();
             tokens.push(tok);
             let dfa_state = item.dfa.next(st.dfa_states[bi], tok);
@@ -732,14 +868,15 @@ pub fn step_batch(
             next_scores.push(score);
             next_states.push(dfa_state);
         }
-        st.tokens = next_tokens;
-        st.scores = next_scores;
-        st.dfa_states = next_states;
+        std::mem::swap(&mut st.tokens, next_tokens);
+        std::mem::swap(&mut st.scores, next_scores);
+        std::mem::swap(&mut st.dfa_states, next_states);
         st.t += 1;
         if st.tokens.is_empty() {
             st.finished = true;
         }
-        st.alphas = vec![0.0; st.tokens.len() * h_n];
+        st.alphas.clear();
+        st.alphas.resize(st.tokens.len() * h_n, 0.0);
 
         // Commit + stream: pure integer comparisons over the updated
         // pool, so the watermark advance can never perturb arithmetic.
@@ -754,9 +891,17 @@ pub fn step_batch(
     // every request; scatter the advanced beliefs back to their slots.
     if !fwd_toks.is_empty() {
         let f = fwd_toks.len();
-        let mut next_panel = vec![0f32; f * h_n];
-        let mut scales = vec![0f64; f];
-        model.forward_step_panel(&fwd_alphas, &fwd_toks, &mut next_panel, &mut scales);
+        next_panel.clear();
+        next_panel.resize(f * h_n, 0.0);
+        scales.clear();
+        scales.resize(f, 0.0);
+        model.forward_step_panel_with(
+            &fwd_alphas[..],
+            &fwd_toks[..],
+            &mut next_panel[..],
+            &mut scales[..],
+            kernel,
+        );
         for (k, &(ii, nbi)) in fwd_dst.iter().enumerate() {
             items[ii].state.alphas[nbi * h_n..(nbi + 1) * h_n]
                 .copy_from_slice(&next_panel[k * h_n..(k + 1) * h_n]);

@@ -147,9 +147,13 @@ pub fn decode_with_table(
     cfg: &DecodeConfig,
 ) -> Generation {
     let mut state = engine::RequestState::new(model, dfa, cfg.deadline);
+    // One scratch for the whole decode: panel buffers and kernel
+    // accumulators are allocated on the first step and reused on every
+    // step after, so the steady-state loop stays off the heap.
+    let mut scratch = engine::EngineScratch::new();
     while !state.finished() {
         let mut items = [engine::EngineItem { dfa, table, state: &mut state }];
-        engine::step_batch(lm, model, cfg, &mut items);
+        engine::step_batch_with(lm, model, cfg, &mut items, &mut scratch);
     }
     state.generation(dfa)
 }

@@ -39,6 +39,7 @@
 //! property-tests end to end.
 
 use crate::hmm::Hmm;
+use crate::util::kernel::KernelScratch;
 
 /// Read-only model access for the HMM×DFA table recursion and the
 /// decode beam loop; see the [module docs](self).
@@ -146,6 +147,17 @@ pub trait HmmBackend: Send + Sync {
         }
     }
 
+    /// [`HmmBackend::emit_panel`] with caller-owned [`KernelScratch`]:
+    /// the scratch carries the accumulator panel and lane tables (so
+    /// the steady-state decode loop allocates nothing) plus the
+    /// intra-step thread budget the blocked kernels may fan out over.
+    /// The default ignores the scratch and loops the per-beam op —
+    /// results are bit-identical either way.
+    fn emit_panel_with(&self, u: &[f32], b: usize, out: &mut [f32], scratch: &mut KernelScratch) {
+        let _ = scratch;
+        self.emit_panel(u, b, out);
+    }
+
     /// Panel form of [`HmmBackend::trans_vecmat`]: advance `b` beams'
     /// beliefs in one fused sweep (same back-to-back layout as
     /// [`HmmBackend::emit_panel`], H in and H out). Default loops the
@@ -157,6 +169,14 @@ pub trait HmmBackend: Send + Sync {
         for bi in 0..b {
             self.trans_vecmat(&v[bi * h_n..(bi + 1) * h_n], &mut out[bi * h_n..(bi + 1) * h_n]);
         }
+    }
+
+    /// [`HmmBackend::trans_panel`] with caller-owned [`KernelScratch`]
+    /// (see [`HmmBackend::emit_panel_with`]). The default ignores the
+    /// scratch and loops the per-beam op.
+    fn trans_panel_with(&self, v: &[f32], b: usize, out: &mut [f32], scratch: &mut KernelScratch) {
+        let _ = scratch;
+        self.trans_panel(v, b, out);
     }
 
     /// Panel form of [`HmmBackend::forward_step`]: observe `toks[bi]`
@@ -173,14 +193,45 @@ pub trait HmmBackend: Send + Sync {
     /// [`HmmBackend::trans_panel`] call. A backend therefore only
     /// needs to override `trans_panel` (and `emit_panel`) to run the
     /// whole batched forward step through its blocked kernels.
-    fn forward_step_panel(&self, alphas: &[f32], toks: &[usize], next: &mut [f32], scales: &mut [f64]) {
+    fn forward_step_panel(
+        &self,
+        alphas: &[f32],
+        toks: &[usize],
+        next: &mut [f32],
+        scales: &mut [f64],
+    ) {
+        self.forward_step_panel_with(alphas, toks, next, scales, &mut KernelScratch::new());
+    }
+
+    /// [`HmmBackend::forward_step_panel`] with caller-owned
+    /// [`KernelScratch`]: the emission-weighting staging buffers
+    /// (weighted panel, live-lane list, compaction panels) live in the
+    /// scratch and the transition advance runs through
+    /// [`HmmBackend::trans_panel_with`], so a decode worker holding one
+    /// scratch performs the whole fused forward step without
+    /// allocating. Arithmetic, guard and ordering are exactly the
+    /// scalar [`HmmBackend::forward_step`]'s, per beam.
+    fn forward_step_panel_with(
+        &self,
+        alphas: &[f32],
+        toks: &[usize],
+        next: &mut [f32],
+        scales: &mut [f64],
+        scratch: &mut KernelScratch,
+    ) {
         let h_n = self.hidden();
         let b = toks.len();
         debug_assert_eq!(alphas.len(), b * h_n);
         debug_assert_eq!(next.len(), b * h_n);
         debug_assert_eq!(scales.len(), b);
-        let mut weighted = vec![0f32; b * h_n];
-        let mut live: Vec<usize> = Vec::with_capacity(b);
+        // The staging buffers move out of the scratch for the duration
+        // of the call (the scratch itself is re-borrowed by the nested
+        // trans_panel_with) and back in before returning.
+        let mut weighted = std::mem::take(&mut scratch.weighted);
+        let mut live = std::mem::take(&mut scratch.live);
+        weighted.clear();
+        weighted.resize(b * h_n, 0.0);
+        live.clear();
         for bi in 0..b {
             debug_assert!(toks[bi] < self.vocab());
             let alpha = &alphas[bi * h_n..(bi + 1) * h_n];
@@ -207,23 +258,34 @@ pub trait HmmBackend: Send + Sync {
             live.push(bi);
         }
         if live.is_empty() {
+            scratch.weighted = weighted;
+            scratch.live = live;
             return;
         }
         if live.len() == b {
-            self.trans_panel(&weighted, b, next);
+            self.trans_panel_with(&weighted, b, next, scratch);
+            scratch.weighted = weighted;
+            scratch.live = live;
             return;
         }
         // Compact the surviving beams so the panel kernel sees a dense
         // panel; scatter the advanced beliefs back to their lanes.
-        let mut panel = vec![0f32; live.len() * h_n];
-        for (i, &bi) in live.iter().enumerate() {
-            panel[i * h_n..(i + 1) * h_n].copy_from_slice(&weighted[bi * h_n..(bi + 1) * h_n]);
+        let mut panel = std::mem::take(&mut scratch.compact_in);
+        panel.clear();
+        for &bi in live.iter() {
+            panel.extend_from_slice(&weighted[bi * h_n..(bi + 1) * h_n]);
         }
-        let mut out = vec![0f32; live.len() * h_n];
-        self.trans_panel(&panel, live.len(), &mut out);
+        let mut out = std::mem::take(&mut scratch.compact_out);
+        out.clear();
+        out.resize(live.len() * h_n, 0.0);
+        self.trans_panel_with(&panel, live.len(), &mut out, scratch);
         for (i, &bi) in live.iter().enumerate() {
             next[bi * h_n..(bi + 1) * h_n].copy_from_slice(&out[i * h_n..(i + 1) * h_n]);
         }
+        scratch.weighted = weighted;
+        scratch.live = live;
+        scratch.compact_in = panel;
+        scratch.compact_out = out;
     }
 }
 
@@ -281,6 +343,14 @@ impl HmmBackend for Hmm {
 
     fn trans_panel(&self, v: &[f32], b: usize, out: &mut [f32]) {
         self.trans.vecmat_panel(v, b, out);
+    }
+
+    fn emit_panel_with(&self, u: &[f32], b: usize, out: &mut [f32], scratch: &mut KernelScratch) {
+        self.emit.vecmat_panel_with(u, b, out, scratch);
+    }
+
+    fn trans_panel_with(&self, v: &[f32], b: usize, out: &mut [f32], scratch: &mut KernelScratch) {
+        self.trans.vecmat_panel_with(v, b, out, scratch);
     }
 }
 

@@ -38,6 +38,7 @@ USAGE:
               [--fair SLOTS] [--fair-queue N] [--delay-budget-ms MS]
               [--timeout-ms MS] [--hedge-ms MS] [--table-bits B]
               [--table-cache-mb MB] [--table-threads N] [--build-threads N]
+              [--kernel-threads N]
               [--spill-dir DIR] [--spill-budget-mb MB]
               [--tiers 8,4,3] [--replicas N] [--retry-budget R]
               [--premium-weight W] [--session-turns K] [--session-tokens U]
@@ -73,6 +74,9 @@ instead of O(H^2)/O(H*V), and no dense FP32 weight is ever read
 --build-threads sizes the dedicated build pool (how many distinct
 cold concept groups build concurrently — the dispatcher never builds,
 so warm batches are not blocked behind cold builds);
+--kernel-threads N fans each decode worker's panel kernels across N
+threads per step (0 = auto: cores / workers; results are
+bit-identical at any setting);
 --spill-dir DIR persists finished tables as checksummed artifacts and
 turns RAM-cache evictions into disk spills: misses probe the
 directory before building, and a restart warm-starts from it with
@@ -120,7 +124,8 @@ fn main() {
         "workers", "artifacts", "n", "out", "heatmap", "queue", "clients", "client-ids", "climit",
         "rate", "burst", "quota", "quota-burst", "fair", "fair-queue", "delay-budget-ms",
         "timeout-ms", "hedge-ms", "table-bits", "table-cache-mb", "table-threads",
-        "build-threads", "spill-dir", "spill-budget-mb", "tiers", "replicas", "retry-budget",
+        "build-threads", "kernel-threads", "spill-dir", "spill-budget-mb", "tiers",
+        "replicas", "retry-budget",
         "premium-weight", "session-turns", "session-tokens", "session-budget-mb",
         "session-ttl-ms", "stream",
     ]);
@@ -222,6 +227,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         queue_capacity: args.usize("queue", 256)?,
         table_cache_bytes: args.usize("table-cache-mb", 64)? << 20,
         table_threads: args.usize("table-threads", normq::util::threadpool::default_threads())?,
+        kernel_threads: args.usize("kernel-threads", 0)?,
         build_threads: args
             .usize("build-threads", normq::util::threadpool::default_threads())?
             .max(1),

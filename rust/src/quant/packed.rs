@@ -17,6 +17,7 @@
 //! on-the-fly dequantization) so the serving layer never materializes
 //! dense FP32 weights.
 
+use crate::util::kernel::{self, KernelScratch};
 use crate::util::mat::Mat;
 
 /// Dense bit-packed quantized matrix (levels in [0, 2^bits - 1]).
@@ -183,7 +184,32 @@ impl PackedMat {
     /// unconditional add of zero levels inside non-zero words — and
     /// the dead-row uniform mass folds in through the same single
     /// rank-1 pass per beam at the end.
+    ///
+    /// Allocates a fresh serial [`KernelScratch`] per call; hot paths
+    /// should hold one and use [`PackedMat::vecmat_panel_with`].
     pub fn vecmat_panel(&self, panel: &[f32], b: usize, out: &mut [f32]) {
+        self.vecmat_panel_with(panel, b, out, &mut KernelScratch::new());
+    }
+
+    /// [`PackedMat::vecmat_panel`] through the cache-blocked
+    /// micro-kernel layer (`util::kernel`), with caller-owned scratch:
+    /// output columns are tiled into word-aligned L2-sized blocks
+    /// (block boundaries land on packed-word boundaries, so a word's
+    /// slots never straddle two blocks), each non-zero word is
+    /// unpacked once per pass and its levels applied to all live beams
+    /// through the fixed-width rank-1 micro-kernels, and column blocks
+    /// fan out across the scratch's thread budget behind a work-size
+    /// gate. Every (beam, column) accumulator is owned by exactly one
+    /// block and one thread, so the per-accumulator addition order —
+    /// and therefore the bit-identity to the scalar path — is
+    /// untouched.
+    pub fn vecmat_panel_with(
+        &self,
+        panel: &[f32],
+        b: usize,
+        out: &mut [f32],
+        scratch: &mut KernelScratch,
+    ) {
         assert_eq!(panel.len(), b * self.rows);
         assert_eq!(out.len(), b * self.cols);
         if b == 1 {
@@ -192,65 +218,50 @@ impl PackedMat {
         let bits = self.bits;
         let per_word = self.per_word();
         let wpr = self.words_per_row();
-        let mask = (1u64 << bits) - 1;
-        let mut acc = vec![0f64; b * self.cols];
-        let mut uniform = vec![0f64; b];
-        let mut scaled = vec![0f64; b];
-        let mut active: Vec<u32> = Vec::with_capacity(b);
-        for r in 0..self.rows {
-            active.clear();
-            for bi in 0..b {
-                let vr = panel[bi * self.rows + r];
-                if vr != 0.0 {
-                    scaled[bi] = (vr * self.row_scale[r]) as f64;
-                    active.push(bi as u32);
-                }
-            }
-            if active.is_empty() {
-                continue;
-            }
-            let row_words = &self.words[r * wpr..(r + 1) * wpr];
-            if row_words.iter().all(|&w| w == 0) {
-                for &bi in &active {
-                    uniform[bi as usize] += scaled[bi as usize];
-                }
-                continue;
-            }
-            let all_live = active.len() == b;
-            for (wi, &w0) in row_words.iter().enumerate() {
-                if w0 == 0 {
+        let lvl_mask = (1u64 << bits) - 1;
+        scratch.prepare(self.rows, self.cols, b);
+        let plan = scratch.plan(self.cols, b, per_word, self.rows * self.cols * b);
+        let KernelScratch { acc, scale, mask, kind, uniform, .. } = &mut *scratch;
+        let rs = Some(&self.row_scale[..]);
+        kernel::plan_rows(scale, mask, kind, uniform, panel, b, self.rows, rs, |r| {
+            self.words[r * wpr..(r + 1) * wpr].iter().all(|&w| w == 0)
+        });
+        let (scale, mask, kind) = (&scale[..], &mask[..], &kind[..]);
+        kernel::par_blocks(acc, b, self.cols, plan, |c0, c1, accb| {
+            // c0 is word-aligned (plan align = per_word); the last
+            // block's final word may be a partial tail, bounded by n.
+            let w0i = c0 / per_word;
+            let w1i = (c1 + per_word - 1) / per_word;
+            for r in 0..self.rows {
+                let k = kind[r];
+                if k == kernel::ROW_SKIP || k == kernel::ROW_DEAD {
                     continue;
                 }
-                let base = wi * per_word;
-                let n = per_word.min(self.cols - base);
-                let mut w = w0;
-                for slot in 0..n {
-                    let lvl = (w & mask) as f64;
-                    w >>= bits;
-                    let col = &mut acc[(base + slot) * b..(base + slot + 1) * b];
-                    if all_live {
-                        for (a, &s) in col.iter_mut().zip(scaled.iter()) {
-                            *a += s * lvl;
-                        }
-                    } else {
-                        for &bi in &active {
-                            col[bi as usize] += scaled[bi as usize] * lvl;
+                let srow = &scale[r * b..(r + 1) * b];
+                let mrow = &mask[r * b..(r + 1) * b];
+                let row_words = &self.words[r * wpr + w0i..r * wpr + w1i];
+                for (wj, &w0) in row_words.iter().enumerate() {
+                    if w0 == 0 {
+                        continue;
+                    }
+                    let base = (w0i + wj) * per_word;
+                    let n = per_word.min(self.cols - base);
+                    let mut w = w0;
+                    for slot in 0..n {
+                        let lvl = (w & lvl_mask) as f64;
+                        w >>= bits;
+                        let j = base + slot - c0;
+                        let col = &mut accb[j * b..(j + 1) * b];
+                        if k == kernel::ROW_ALL {
+                            kernel::rank1_all(col, srow, lvl);
+                        } else {
+                            kernel::rank1_masked(col, srow, mrow, lvl);
                         }
                     }
                 }
             }
-        }
-        for bi in 0..b {
-            let u = uniform[bi];
-            if u != 0.0 {
-                for c in 0..self.cols {
-                    acc[c * b + bi] += u;
-                }
-            }
-            for c in 0..self.cols {
-                out[bi * self.cols + c] = acc[c * b + bi] as f32;
-            }
-        }
+        });
+        kernel::par_writeback(out, acc, uniform, b, self.cols, plan.threads);
     }
 
     /// Model storage in bits: the packed levels only (row scales are
@@ -427,68 +438,93 @@ impl SparseQMat {
     /// interleaving beams cannot reassociate any beam's sum.
     /// `tests/decode_equivalence.rs` asserts the bit-level match across
     /// the full bits × sparsity × H × B matrix.
+    ///
+    /// Allocates a fresh serial [`KernelScratch`] per call; hot paths
+    /// should hold one and use [`SparseQMat::vecmat_panel_with`].
     pub fn vecmat_panel(&self, panel: &[f32], b: usize, out: &mut [f32]) {
+        self.vecmat_panel_with(panel, b, out, &mut KernelScratch::new());
+    }
+
+    /// [`SparseQMat::vecmat_panel`] through the cache-blocked
+    /// micro-kernel layer (`util::kernel`), with caller-owned scratch:
+    /// output columns are tiled into L2-sized blocks so the rank-1
+    /// scatter of a CSR row's levels stays inside a cache-resident
+    /// accumulator tile (at serving scale the full `b × cols` f64
+    /// panel is tens of megabytes — the per-entry scatter was a DRAM
+    /// round-trip per level). Each pass binary-searches the row's
+    /// sorted column indices for the block's start
+    /// (`partition_point`), walks entries until the block's end, and
+    /// applies the fixed-width rank-1 micro-kernels. Column blocks fan
+    /// out across the scratch's thread budget behind a work-size gate;
+    /// every (beam, column) accumulator is owned by exactly one block
+    /// and one thread, so the per-accumulator addition order — and the
+    /// bit-identity to the scalar path — is untouched.
+    pub fn vecmat_panel_with(
+        &self,
+        panel: &[f32],
+        b: usize,
+        out: &mut [f32],
+        scratch: &mut KernelScratch,
+    ) {
         assert_eq!(panel.len(), b * self.rows);
         assert_eq!(out.len(), b * self.cols);
         if b == 1 {
             return self.vecmat(panel, out);
         }
-        let mut acc = vec![0f64; b * self.cols];
-        let mut uniform = vec![0f64; b];
-        let mut scaled = vec![0f64; b];
-        let mut active: Vec<u32> = Vec::with_capacity(b);
-        for r in 0..self.rows {
-            active.clear();
-            for bi in 0..b {
-                let vr = panel[bi * self.rows + r];
-                if vr != 0.0 {
-                    scaled[bi] = (vr * self.row_scale[r]) as f64;
-                    active.push(bi as u32);
+        scratch.prepare(self.rows, self.cols, b);
+        let plan = scratch.plan(self.cols, b, 1, self.nnz() * b);
+        let KernelScratch { acc, scale, mask, kind, uniform, .. } = &mut *scratch;
+        let rs = Some(&self.row_scale[..]);
+        kernel::plan_rows(scale, mask, kind, uniform, panel, b, self.rows, rs, |r| {
+            self.row_ptr[r] == self.row_ptr[r + 1]
+        });
+        let (scale, mask, kind) = (&scale[..], &mask[..], &kind[..]);
+        kernel::par_blocks(acc, b, self.cols, plan, |c0, c1, accb| {
+            for r in 0..self.rows {
+                let k = kind[r];
+                if k == kernel::ROW_SKIP || k == kernel::ROW_DEAD {
+                    continue;
                 }
-            }
-            if active.is_empty() {
-                continue;
-            }
-            let lo = self.row_ptr[r] as usize;
-            let hi = self.row_ptr[r + 1] as usize;
-            if lo == hi {
-                for &bi in &active {
-                    uniform[bi as usize] += scaled[bi as usize];
-                }
-                continue;
-            }
-            if active.len() == b {
-                // Dense-panel fast path — every beam live, which is the
-                // overwhelmingly common case for decode beliefs.
-                for i in lo..hi {
-                    let lvl = self.levels[i] as f64;
-                    let c = self.col_idx[i] as usize;
-                    let col = &mut acc[c * b..(c + 1) * b];
-                    for (a, &s) in col.iter_mut().zip(scaled.iter()) {
-                        *a += s * lvl;
+                let lo = self.row_ptr[r] as usize;
+                let hi = self.row_ptr[r + 1] as usize;
+                let start = if c0 == 0 {
+                    lo
+                } else {
+                    lo + self.col_idx[lo..hi].partition_point(|&c| (c as usize) < c0)
+                };
+                let srow = &scale[r * b..(r + 1) * b];
+                if k == kernel::ROW_ALL {
+                    for i in start..hi {
+                        let c = self.col_idx[i] as usize;
+                        if c >= c1 {
+                            break;
+                        }
+                        let j = c - c0;
+                        kernel::rank1_all(
+                            &mut accb[j * b..(j + 1) * b],
+                            srow,
+                            self.levels[i] as f64,
+                        );
+                    }
+                } else {
+                    let mrow = &mask[r * b..(r + 1) * b];
+                    for i in start..hi {
+                        let c = self.col_idx[i] as usize;
+                        if c >= c1 {
+                            break;
+                        }
+                        let j = c - c0;
+                        kernel::rank1_masked(
+                            &mut accb[j * b..(j + 1) * b],
+                            srow,
+                            mrow,
+                            self.levels[i] as f64,
+                        );
                     }
                 }
-            } else {
-                for i in lo..hi {
-                    let lvl = self.levels[i] as f64;
-                    let col = self.col_idx[i] as usize * b;
-                    for &bi in &active {
-                        acc[col + bi as usize] += scaled[bi as usize] * lvl;
-                    }
-                }
             }
-        }
-        for bi in 0..b {
-            let u = uniform[bi];
-            if u != 0.0 {
-                for c in 0..self.cols {
-                    acc[c * b + bi] += u;
-                }
-            }
-            for c in 0..self.cols {
-                out[bi * self.cols + c] = acc[c * b + bi] as f32;
-            }
-        }
+        });
+        kernel::par_writeback(out, acc, uniform, b, self.cols, plan.threads);
     }
 
     /// out = dequant(self) @ v (one value per row, f64 accumulators) —

@@ -170,6 +170,26 @@ impl HmmBackend for QuantizedHmm {
     fn trans_panel(&self, v: &[f32], b: usize, out: &mut [f32]) {
         self.trans.vecmat_panel(v, b, out);
     }
+
+    fn emit_panel_with(
+        &self,
+        u: &[f32],
+        b: usize,
+        out: &mut [f32],
+        scratch: &mut crate::util::kernel::KernelScratch,
+    ) {
+        self.emit.vecmat_panel_with(u, b, out, scratch);
+    }
+
+    fn trans_panel_with(
+        &self,
+        v: &[f32],
+        b: usize,
+        out: &mut [f32],
+        scratch: &mut crate::util::kernel::KernelScratch,
+    ) {
+        self.trans.vecmat_panel_with(v, b, out, scratch);
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,552 @@
+//! The shared cache-blocked panel micro-kernel layer behind
+//! [`crate::util::mat::Mat::vecmat_panel`],
+//! [`crate::quant::packed::PackedMat::vecmat_panel`] and
+//! [`crate::quant::packed::SparseQMat::vecmat_panel`].
+//!
+//! All three panel kernels compute the same shape of product — `b`
+//! input vectors against one `rows × cols` weight matrix, with one
+//! `f64` accumulator per (beam, output-column) pair — and they share
+//! three structural problems this module factors out:
+//!
+//! - **Accumulator blow-up.** The accumulator panel is `b × cols` f64:
+//!   at serving scale (H = 64k, 32 beams) that is 16 MB, so every
+//!   scattered CSR/packed update misses cache. The kernels here tile
+//!   the *output-column* dimension into L2-sized blocks
+//!   ([`ACC_TILE_BYTES`]) and make one pass over each block: a weight
+//!   entry's `b` accumulators stay cache-resident while the entry
+//!   stream (CSR levels, packed words, dense rows) is still read
+//!   exactly once per call.
+//! - **Beam-lane inner loop.** The per-entry rank-1 update
+//!   (`acc[c][bi] += scale[bi] · level`) is unrolled into fixed-width
+//!   micro-kernels — 8/4/2/1 `f64` lanes held in fixed-size arrays the
+//!   compiler auto-vectorizes on stable Rust ([`rank1_all`]) — with a
+//!   masked remainder path for rows where only some lanes are live
+//!   ([`rank1_masked`]).
+//! - **Intra-step parallelism.** Output-column blocks are partitioned
+//!   across scoped threads ([`par_blocks`]) behind a work-size gate:
+//!   every (beam, column) accumulator is owned by exactly one block,
+//!   and one block is owned by exactly one thread, so no accumulator's
+//!   addition order changes — the same disjoint-accumulator trick the
+//!   table engine uses for DFA-state parallelism. Small panels stay
+//!   serial.
+//!
+//! **Bit-identity contract.** A tiled/unrolled/threaded kernel built
+//! from these pieces produces `.to_bits()`-identical f32 output to `b`
+//! independent scalar `vecmat` calls, because per (beam, column)
+//! accumulator the f64 additions are the same values in the same
+//! order: rows ascending, entries within a row ascending, dead-row
+//! uniform mass folded once at the end — tiling only restricts *which
+//! columns* a pass touches (never reorders one column's additions),
+//! lane unrolling only groups *independent* accumulators, and
+//! column-partitioned threading never splits one accumulator across
+//! threads. `tests/decode_equivalence.rs`, `tests/batched_decode.rs`
+//! and `tests/kernel_tiling.rs` pin this at the bit level.
+//!
+//! The **unified zero-skip guard** also lives here ([`plan_rows`]): a
+//! panel row is skipped only when **all** `b` lanes are zero, and a
+//! lane is live iff its *raw* `vr != 0.0` — tested before any
+//! row-scale multiply, which can underflow to zero for a `vr` the
+//! scalar path still processes. Skipping a row because one lane is
+//! zero would starve the other lanes; processing a zero lane would
+//! poison it through `0.0 · NaN` on NaN-poisoned weights. The guard
+//! is pinned by `zero_lane_live_lane_guard` below for all three
+//! kernels.
+
+use std::thread;
+
+/// Per-row classification produced by [`plan_rows`]: every lane zero —
+/// the whole row is skipped, exactly like the scalar `vr == 0.0` skip.
+pub(crate) const ROW_SKIP: u8 = 0;
+/// Live lanes but a fully-pruned (dead) weight row: its mass is
+/// uniform, accumulated per beam in [`plan_rows`] and folded once per
+/// accumulator at writeback.
+pub(crate) const ROW_DEAD: u8 = 1;
+/// Every lane live — the common decode case; takes the unmasked
+/// fixed-width micro-kernels.
+pub(crate) const ROW_ALL: u8 = 2;
+/// Some lanes live: the masked remainder path.
+pub(crate) const ROW_PART: u8 = 3;
+
+/// Target size of one accumulator tile (`block_cols × b` f64), sized
+/// to sit comfortably in a per-core L2 slice.
+const ACC_TILE_BYTES: usize = 512 * 1024;
+
+/// Work-size gate for intra-step threading: estimated lane-MACs below
+/// this run serial — a scoped-thread fan-out costs tens of
+/// microseconds, which only amortizes on serving-scale panels.
+const PAR_MIN_WORK: usize = 1 << 20;
+
+/// Column-block geometry plus the gated thread count for one panel
+/// call.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Plan {
+    /// Columns per accumulator tile (aligned to the kernel's column
+    /// alignment, e.g. a packed word's slot count).
+    pub block: usize,
+    /// Threads to partition the blocks across (1 = serial).
+    pub threads: usize,
+}
+
+/// Reusable per-worker scratch for the panel kernels and the batched
+/// decode engine's fused forward step: the accumulator panel, the
+/// [`plan_rows`] lane-scale/mask/kind tables, per-beam uniform mass,
+/// and the forward-step staging buffers. Owning one per decode worker
+/// (or per bench loop) makes the steady-state hot path allocation-free
+/// — every buffer is `clear()`+`resize()`d in place, so capacity is
+/// reused from the second call on.
+///
+/// `threads` is the intra-step parallelism budget: the plain
+/// `vecmat_panel` entry points construct a serial scratch internally,
+/// so only callers that explicitly thread a scratch through (the
+/// coordinator's decode workers via `--kernel-threads`, the kernel
+/// bench) ever fan out.
+pub struct KernelScratch {
+    threads: usize,
+    block_cols: Option<usize>,
+    /// Column-major `b × cols` f64 accumulator panel (`acc[c*b + bi]`).
+    pub(crate) acc: Vec<f64>,
+    /// Row-major `rows × b` lane scales (`scale[r*b + bi]`), 0.0 for
+    /// inactive lanes.
+    pub(crate) scale: Vec<f64>,
+    /// Row-major `rows × b` lane-liveness mask (1 = raw `vr != 0.0`).
+    pub(crate) mask: Vec<u8>,
+    /// Per-row [`ROW_SKIP`]/[`ROW_DEAD`]/[`ROW_ALL`]/[`ROW_PART`].
+    pub(crate) kind: Vec<u8>,
+    /// Per-beam dead-row uniform mass, accumulated in row order.
+    pub(crate) uniform: Vec<f64>,
+    /// Forward-step staging: the emission-weighted beliefs.
+    pub(crate) weighted: Vec<f32>,
+    /// Forward-step staging: indices of beams that survived the
+    /// `scale <= 1e-30` uniform-reset guard.
+    pub(crate) live: Vec<usize>,
+    /// Forward-step staging: compacted live-beam input panel.
+    pub(crate) compact_in: Vec<f32>,
+    /// Forward-step staging: compacted live-beam output panel.
+    pub(crate) compact_out: Vec<f32>,
+}
+
+impl KernelScratch {
+    /// A serial scratch (no intra-step threading) with empty buffers.
+    pub fn new() -> KernelScratch {
+        KernelScratch::with_threads(1)
+    }
+
+    /// A scratch whose panel calls may fan out across up to `threads`
+    /// scoped threads (work-size gate permitting).
+    pub fn with_threads(threads: usize) -> KernelScratch {
+        KernelScratch {
+            threads: threads.max(1),
+            block_cols: None,
+            acc: Vec::new(),
+            scale: Vec::new(),
+            mask: Vec::new(),
+            kind: Vec::new(),
+            uniform: Vec::new(),
+            weighted: Vec::new(),
+            live: Vec::new(),
+            compact_in: Vec::new(),
+            compact_out: Vec::new(),
+        }
+    }
+
+    /// Change the intra-step thread budget (1 = serial).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    /// The configured intra-step thread budget.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Override the automatic column-block size (`None` restores the
+    /// [`ACC_TILE_BYTES`]-derived default). A tuning/test hook: the
+    /// tiling property tests force degenerate geometries (block 1,
+    /// block > cols) through this, and an explicit override also
+    /// bypasses the [`PAR_MIN_WORK`] gate so those tests can drive the
+    /// threaded paths on matrices far too small to thread in
+    /// production.
+    pub fn set_block_cols(&mut self, cols: Option<usize>) {
+        self.block_cols = match cols {
+            Some(c) => Some(c.max(1)),
+            None => None,
+        };
+    }
+
+    /// Size the kernel tables for a `rows × cols` panel call with `b`
+    /// lanes: zero the accumulator and uniform mass, reserve the
+    /// lane-scale/mask/kind tables (fully overwritten by
+    /// [`plan_rows`]). In-place `clear`+`resize`, so steady-state calls
+    /// reuse capacity without allocating.
+    pub(crate) fn prepare(&mut self, rows: usize, cols: usize, b: usize) {
+        self.acc.clear();
+        self.acc.resize(b * cols, 0.0);
+        self.scale.resize(rows * b, 0.0);
+        self.mask.resize(rows * b, 0);
+        self.kind.resize(rows, 0);
+        self.uniform.clear();
+        self.uniform.resize(b, 0.0);
+    }
+
+    /// Pick the column-block size and the gated thread count for one
+    /// call. `align` keeps block boundaries on the kernel's natural
+    /// column grain (a packed word's slots; 1 otherwise); `work` is the
+    /// estimated lane-MAC count the gate compares against
+    /// [`PAR_MIN_WORK`].
+    pub(crate) fn plan(&self, cols: usize, b: usize, align: usize, work: usize) -> Plan {
+        // An explicit block override (a test/tuning hook) also bypasses
+        // the work gate: the tiling tests must be able to exercise the
+        // threaded paths on tiny matrices the gate would keep serial.
+        let threads = if work >= PAR_MIN_WORK || self.block_cols.is_some() {
+            self.threads
+        } else {
+            1
+        };
+        let mut block = self
+            .block_cols
+            .unwrap_or_else(|| (ACC_TILE_BYTES / (8 * b.max(1))).max(1));
+        if threads > 1 {
+            // Enough blocks that every thread owns at least one.
+            let per_thread = (cols + threads - 1) / threads;
+            block = block.min(per_thread.max(1));
+        }
+        let align = align.max(1);
+        block = ((block + align - 1) / align) * align;
+        Plan { block, threads }
+    }
+}
+
+impl Default for KernelScratch {
+    fn default() -> Self {
+        KernelScratch::new()
+    }
+}
+
+/// The unified zero-skip guard and lane-scale pre-pass, shared by all
+/// three panel kernels. For every row (ascending — the accumulation
+/// order the bit-identity contract fixes):
+///
+/// - a lane is **live** iff its raw panel value `vr != 0.0`, tested
+///   *before* the row-scale multiply (`vr · row_scale` can underflow
+///   to 0.0 for a `vr` the scalar path still processes);
+/// - a row is **skipped** ([`ROW_SKIP`]) only when *all* `b` lanes are
+///   zero — never because one lane is;
+/// - a live row that `is_dead` reports fully pruned folds each live
+///   lane's scale into `uniform` ([`ROW_DEAD`]), in ascending lane
+///   order, exactly like the scalar kernels' dead-row pass;
+/// - otherwise the row is [`ROW_ALL`] (every lane live — unmasked
+///   micro-kernels) or [`ROW_PART`] (masked remainder path).
+///
+/// `row_scale` is the per-row dequantization scale (`None` for the
+/// dense FP32 kernel, whose lane scale is just `vr as f64`).
+pub(crate) fn plan_rows(
+    scale: &mut [f64],
+    mask: &mut [u8],
+    kind: &mut [u8],
+    uniform: &mut [f64],
+    panel: &[f32],
+    b: usize,
+    rows: usize,
+    row_scale: Option<&[f32]>,
+    mut is_dead: impl FnMut(usize) -> bool,
+) {
+    for r in 0..rows {
+        let srow = &mut scale[r * b..(r + 1) * b];
+        let mrow = &mut mask[r * b..(r + 1) * b];
+        let mut n_active = 0usize;
+        for bi in 0..b {
+            let vr = panel[bi * rows + r];
+            if vr != 0.0 {
+                srow[bi] = match row_scale {
+                    Some(rs) => (vr * rs[r]) as f64,
+                    None => vr as f64,
+                };
+                mrow[bi] = 1;
+                n_active += 1;
+            } else {
+                srow[bi] = 0.0;
+                mrow[bi] = 0;
+            }
+        }
+        if n_active == 0 {
+            kind[r] = ROW_SKIP;
+            continue;
+        }
+        if is_dead(r) {
+            kind[r] = ROW_DEAD;
+            for bi in 0..b {
+                if mrow[bi] != 0 {
+                    uniform[bi] += srow[bi];
+                }
+            }
+            continue;
+        }
+        kind[r] = if n_active == b { ROW_ALL } else { ROW_PART };
+    }
+}
+
+/// Rank-1 micro-kernel, all lanes live: `col[bi] += scale[bi] · x` for
+/// every lane, unrolled into fixed-width 8/4/2/1-lane blocks of `f64`
+/// accumulators held in fixed-size arrays (which the compiler
+/// auto-vectorizes on stable Rust), plus a scalar remainder. Each lane
+/// is an independent accumulator, so the unroll grouping cannot change
+/// any single accumulator's addition order.
+#[inline(always)]
+pub(crate) fn rank1_all(col: &mut [f64], scale: &[f64], x: f64) {
+    debug_assert_eq!(col.len(), scale.len());
+    let b = col.len();
+    let mut i = 0;
+    while i + 8 <= b {
+        let c: &mut [f64; 8] = (&mut col[i..i + 8]).try_into().unwrap();
+        let s: &[f64; 8] = (&scale[i..i + 8]).try_into().unwrap();
+        for k in 0..8 {
+            c[k] += s[k] * x;
+        }
+        i += 8;
+    }
+    if i + 4 <= b {
+        let c: &mut [f64; 4] = (&mut col[i..i + 4]).try_into().unwrap();
+        let s: &[f64; 4] = (&scale[i..i + 4]).try_into().unwrap();
+        for k in 0..4 {
+            c[k] += s[k] * x;
+        }
+        i += 4;
+    }
+    if i + 2 <= b {
+        let c: &mut [f64; 2] = (&mut col[i..i + 2]).try_into().unwrap();
+        let s: &[f64; 2] = (&scale[i..i + 2]).try_into().unwrap();
+        for k in 0..2 {
+            c[k] += s[k] * x;
+        }
+        i += 2;
+    }
+    if i < b {
+        col[i] += scale[i] * x;
+    }
+}
+
+/// Rank-1 micro-kernel, masked remainder path: update live lanes only,
+/// in ascending lane order — the same additions the scalar kernels'
+/// indexed `active` loop performs. Dead lanes are *not* touched, so a
+/// zero lane can never be poisoned through `0.0 · NaN` on NaN-poisoned
+/// weights.
+#[inline(always)]
+pub(crate) fn rank1_masked(col: &mut [f64], scale: &[f64], mask: &[u8], x: f64) {
+    debug_assert_eq!(col.len(), scale.len());
+    debug_assert_eq!(col.len(), mask.len());
+    for bi in 0..col.len() {
+        if mask[bi] != 0 {
+            col[bi] += scale[bi] * x;
+        }
+    }
+}
+
+/// Run `body(c0, c1, acc_block)` over every column block of the
+/// accumulator panel, partitioning blocks across `plan.threads` scoped
+/// threads. `acc` is column-major (`acc[c*b + bi]`), so a column range
+/// is one contiguous slice: blocks are peeled off with `split_at_mut`
+/// — each thread exclusively owns its blocks' accumulators, no locks,
+/// no allocation. Threads own *contiguous runs* of blocks and iterate
+/// them in column order, so each tile stays cache-resident for its
+/// whole pass.
+pub(crate) fn par_blocks<F>(acc: &mut [f64], b: usize, cols: usize, plan: Plan, body: F)
+where
+    F: Fn(usize, usize, &mut [f64]) + Sync,
+{
+    debug_assert_eq!(acc.len(), b * cols);
+    if cols == 0 {
+        return;
+    }
+    let n_blocks = (cols + plan.block - 1) / plan.block;
+    let threads = plan.threads.max(1).min(n_blocks);
+    if threads <= 1 {
+        let mut c0 = 0;
+        while c0 < cols {
+            let c1 = (c0 + plan.block).min(cols);
+            body(c0, c1, &mut acc[c0 * b..c1 * b]);
+            c0 = c1;
+        }
+        return;
+    }
+    let per = (n_blocks + threads - 1) / threads;
+    thread::scope(|scope| {
+        let body = &body;
+        let mut rest = acc;
+        let mut c0 = 0usize;
+        while c0 < cols {
+            let c1 = (c0 + per * plan.block).min(cols);
+            let (head, tail) = rest.split_at_mut((c1 - c0) * b);
+            rest = tail;
+            scope.spawn(move || {
+                let mut lo = c0;
+                while lo < c1 {
+                    let hi = (lo + plan.block).min(c1);
+                    body(lo, hi, &mut head[(lo - c0) * b..(hi - c0) * b]);
+                    lo = hi;
+                }
+            });
+            c0 = c1;
+        }
+    });
+}
+
+/// Fold the per-beam dead-row uniform mass and transpose the f64
+/// accumulator panel into the f32 output layout (`out[bi*cols + c]`),
+/// partitioning *beams* across threads (each beam's output row is one
+/// contiguous slice — disjoint by construction). Per accumulator this
+/// performs exactly the scalar kernels' epilogue: one `+ uniform[bi]`
+/// add when that beam saw dead rows, then a single f64 → f32 round.
+pub(crate) fn par_writeback(
+    out: &mut [f32],
+    acc: &[f64],
+    uniform: &[f64],
+    b: usize,
+    cols: usize,
+    threads: usize,
+) {
+    debug_assert_eq!(out.len(), b * cols);
+    debug_assert_eq!(acc.len(), b * cols);
+    let write_beam = |bi: usize, dst: &mut [f32]| {
+        let u = if uniform.is_empty() { 0.0 } else { uniform[bi] };
+        if u != 0.0 {
+            for (c, o) in dst.iter_mut().enumerate() {
+                *o = (acc[c * b + bi] + u) as f32;
+            }
+        } else {
+            for (c, o) in dst.iter_mut().enumerate() {
+                *o = acc[c * b + bi] as f32;
+            }
+        }
+    };
+    let threads = threads.max(1).min(b.max(1));
+    if threads <= 1 || cols == 0 {
+        for (bi, dst) in out.chunks_mut(cols.max(1)).enumerate() {
+            write_beam(bi, dst);
+        }
+        return;
+    }
+    let per = (b + threads - 1) / threads;
+    thread::scope(|scope| {
+        let write_beam = &write_beam;
+        let mut rest = out;
+        let mut bi0 = 0usize;
+        while bi0 < b {
+            let bi1 = (bi0 + per).min(b);
+            let (head, tail) = rest.split_at_mut((bi1 - bi0) * cols);
+            rest = tail;
+            scope.spawn(move || {
+                for (k, dst) in head.chunks_mut(cols).enumerate() {
+                    write_beam(bi0 + k, dst);
+                }
+            });
+            bi0 = bi1;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::packed::{PackedMat, SparseQMat};
+    use crate::util::mat::Mat;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rank1_all_covers_every_width_and_remainder() {
+        for b in 1..=19usize {
+            let mut col = vec![1.0f64; b];
+            let scale: Vec<f64> = (0..b).map(|i| (i + 1) as f64).collect();
+            rank1_all(&mut col, &scale, 2.0);
+            for (i, &c) in col.iter().enumerate() {
+                assert_eq!(c.to_bits(), (1.0 + (i + 1) as f64 * 2.0).to_bits(), "b={b} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn rank1_masked_never_touches_dead_lanes() {
+        let mut col = vec![f64::NAN, 1.0, f64::NAN, 2.0];
+        let scale = vec![9.0, 3.0, 9.0, 4.0];
+        let mask = vec![0u8, 1, 0, 1];
+        rank1_masked(&mut col, &scale, &mask, 2.0);
+        assert!(col[0].is_nan() && col[2].is_nan());
+        assert_eq!(col[1].to_bits(), 7.0f64.to_bits());
+        assert_eq!(col[3].to_bits(), 10.0f64.to_bits());
+    }
+
+    #[test]
+    fn plan_aligns_blocks_and_gates_small_work() {
+        let s = KernelScratch::with_threads(8);
+        // Tiny work: gate forces serial.
+        let p = s.plan(64, 4, 1, 100);
+        assert_eq!(p.threads, 1);
+        // Big work: threads on, block aligned to the packed word grain.
+        let p = s.plan(65536, 32, 21, usize::MAX);
+        assert_eq!(p.threads, 8);
+        assert_eq!(p.block % 21, 0);
+        assert!(p.block >= 21);
+    }
+
+    /// The unified zero-skip guard, pinned across all three kernels: a
+    /// panel with one all-zero lane and one live lane must (a) leave
+    /// the zero lane's output bit-identical to a scalar `vecmat` of
+    /// zeros (all zeros — the row is *processed* for the live lane but
+    /// the dead lane is never touched) and (b) produce the live lane's
+    /// exact scalar result (the row is *not* skipped just because a
+    /// sibling lane is zero).
+    #[test]
+    fn zero_lane_live_lane_guard() {
+        let mut rng = Rng::seeded(0xA11);
+        let dense = Mat::random_stochastic(9, 23, 0.3, &mut rng);
+        let packed = PackedMat::from_mat(&dense, 5);
+        let sparse = SparseQMat::from_mat(&dense, 5);
+        let b = 2usize;
+        let rows = 9usize;
+        let mut panel = vec![0f32; b * rows];
+        for v in panel[rows..].iter_mut() {
+            *v = rng.f32() + 0.01; // lane 1 fully live, lane 0 all zero
+        }
+        let check = |fused: &[f32], per_beam: &dyn Fn(&[f32], &mut [f32]), cols: usize, tag: &str| {
+            for bi in 0..b {
+                let mut want = vec![0f32; cols];
+                per_beam(&panel[bi * rows..(bi + 1) * rows], &mut want);
+                for c in 0..cols {
+                    assert_eq!(
+                        fused[bi * cols + c].to_bits(),
+                        want[c].to_bits(),
+                        "{tag} bi={bi} c={c}"
+                    );
+                }
+            }
+            assert!(fused[..cols].iter().all(|&x| x == 0.0), "{tag}: zero lane must stay zero");
+            assert!(fused[cols..].iter().any(|&x| x != 0.0), "{tag}: live lane must be served");
+        };
+        let mut out = vec![0f32; b * dense.cols];
+        dense.vecmat_panel(&panel, b, &mut out);
+        check(&out, &|v, o| dense.vecmat(v, o), dense.cols, "dense");
+        packed.vecmat_panel(&panel, b, &mut out);
+        check(&out, &|v, o| packed.vecmat(v, o), packed.cols, "packed");
+        sparse.vecmat_panel(&panel, b, &mut out);
+        check(&out, &|v, o| sparse.vecmat(v, o), sparse.cols, "sparse");
+    }
+
+    #[test]
+    fn threaded_blocks_match_serial_bitwise() {
+        let mut rng = Rng::seeded(0xB10C);
+        let m = Mat::random_stochastic(37, 211, 0.2, &mut rng);
+        let b = 11usize;
+        let panel: Vec<f32> = (0..b * m.rows)
+            .map(|_| if rng.below(4) == 0 { 0.0 } else { rng.f32() })
+            .collect();
+        let mut serial = vec![0f32; b * m.cols];
+        m.vecmat_panel(&panel, b, &mut serial);
+        // Force threading through the gate with a tiny block size.
+        let mut scratch = KernelScratch::with_threads(4);
+        scratch.set_block_cols(Some(7));
+        let mut threaded = vec![0f32; b * m.cols];
+        m.vecmat_panel_with(&panel, b, &mut threaded, &mut scratch);
+        for (i, (a, bb)) in serial.iter().zip(threaded.iter()).enumerate() {
+            assert_eq!(a.to_bits(), bb.to_bits(), "i={i}");
+        }
+    }
+}

@@ -2,6 +2,7 @@
 //! HMM/quantization stack needs. Accumulations are done in `f64` where
 //! numerical drift would otherwise show up in EM statistics.
 
+use crate::util::kernel::{self, KernelScratch};
 use crate::util::rng::Rng;
 
 /// A row-major dense `f32` matrix.
@@ -113,65 +114,67 @@ impl Mat {
     ///
     /// `panel` holds `b` row vectors back to back (`panel[bi·rows ..
     /// (bi+1)·rows]` is beam `bi`'s input) and `out` receives the `b`
-    /// results in the same layout. Each matrix row is streamed from
-    /// memory **once** and applied to all `b` columns of a
-    /// column-major `f64` accumulator panel (the `b` accumulators of
-    /// one output column are contiguous), instead of `b` times as `b`
-    /// independent `vecmat` calls would.
+    /// results in the same layout. Allocates a fresh serial
+    /// [`KernelScratch`] per call; hot paths should hold one and use
+    /// [`Mat::vecmat_panel_with`].
+    pub fn vecmat_panel(&self, panel: &[f32], b: usize, out: &mut [f32]) {
+        self.vecmat_panel_with(panel, b, out, &mut KernelScratch::new());
+    }
+
+    /// [`Mat::vecmat_panel`] through the cache-blocked micro-kernel
+    /// layer (`util::kernel`), with caller-owned scratch: output
+    /// columns are tiled into L2-sized blocks, each matrix row is
+    /// streamed from memory **once per block** and applied to all `b`
+    /// lanes of a column-major `f64` accumulator panel through the
+    /// fixed-width rank-1 micro-kernels, and column blocks fan out
+    /// across the scratch's thread budget behind a work-size gate.
     ///
     /// Bit-identical to `b` independent [`Mat::vecmat`] calls: every
     /// per-beam accumulator sees exactly the same additions in exactly
-    /// the same order (rows ascending, columns ascending, the same
-    /// `vr == 0.0` skip), only interleaved across beams — and no
-    /// accumulator is shared between beams. `tests` and
-    /// `tests/decode_equivalence.rs` assert this at the bit level.
-    pub fn vecmat_panel(&self, panel: &[f32], b: usize, out: &mut [f32]) {
+    /// the same order (rows ascending, columns ascending, a row
+    /// skipped only when **all** lanes are zero and a zero lane never
+    /// touched), only regrouped across beams and column blocks — and
+    /// no accumulator is shared between beams, blocks or threads.
+    /// `tests`, `tests/decode_equivalence.rs` and
+    /// `tests/kernel_tiling.rs` assert this at the bit level.
+    pub fn vecmat_panel_with(
+        &self,
+        panel: &[f32],
+        b: usize,
+        out: &mut [f32],
+        scratch: &mut KernelScratch,
+    ) {
         assert_eq!(panel.len(), b * self.rows);
         assert_eq!(out.len(), b * self.cols);
         if b == 1 {
             return self.vecmat(panel, out);
         }
-        let mut acc = vec![0f64; b * self.cols];
-        let mut vr64 = vec![0f64; b];
-        let mut active: Vec<u32> = Vec::with_capacity(b);
-        for r in 0..self.rows {
-            active.clear();
-            for bi in 0..b {
-                let vr = panel[bi * self.rows + r];
-                if vr != 0.0 {
-                    vr64[bi] = vr as f64;
-                    active.push(bi as u32);
+        scratch.prepare(self.rows, self.cols, b);
+        let plan = scratch.plan(self.cols, b, 1, self.rows * self.cols * b);
+        let KernelScratch { acc, scale, mask, kind, uniform, .. } = &mut *scratch;
+        kernel::plan_rows(scale, mask, kind, uniform, panel, b, self.rows, None, |_| false);
+        let (scale, mask, kind) = (&scale[..], &mask[..], &kind[..]);
+        kernel::par_blocks(acc, b, self.cols, plan, |c0, c1, accb| {
+            for r in 0..self.rows {
+                let k = kind[r];
+                if k == kernel::ROW_SKIP {
+                    continue;
                 }
-            }
-            if active.is_empty() {
-                continue;
-            }
-            let row = self.row(r);
-            if active.len() == b {
-                // Every beam live (the common decode case): a plain
-                // rank-1 update with unit-stride inner loop.
-                for (c, &m) in row.iter().enumerate() {
-                    let mv = m as f64;
-                    let col = &mut acc[c * b..(c + 1) * b];
-                    for (a, &v) in col.iter_mut().zip(vr64.iter()) {
-                        *a += v * mv;
+                let srow = &scale[r * b..(r + 1) * b];
+                let row = &self.data[r * self.cols + c0..r * self.cols + c1];
+                if k == kernel::ROW_ALL {
+                    for (j, &m) in row.iter().enumerate() {
+                        kernel::rank1_all(&mut accb[j * b..(j + 1) * b], srow, m as f64);
                     }
-                }
-            } else {
-                for (c, &m) in row.iter().enumerate() {
-                    let mv = m as f64;
-                    let col = c * b;
-                    for &bi in &active {
-                        acc[col + bi as usize] += vr64[bi as usize] * mv;
+                } else {
+                    let mrow = &mask[r * b..(r + 1) * b];
+                    for (j, &m) in row.iter().enumerate() {
+                        kernel::rank1_masked(&mut accb[j * b..(j + 1) * b], srow, mrow, m as f64);
                     }
                 }
             }
-        }
-        for bi in 0..b {
-            for c in 0..self.cols {
-                out[bi * self.cols + c] = acc[c * b + bi] as f32;
-            }
-        }
+        });
+        kernel::par_writeback(out, acc, &[], b, self.cols, plan.threads);
     }
 
     /// out = self (rows x cols) @ v (cols). f64 accumulators.

@@ -6,6 +6,7 @@
 pub mod benchgate;
 pub mod cli;
 pub mod json;
+pub mod kernel;
 pub mod logging;
 pub mod mat;
 pub mod proptest;

@@ -1,0 +1,204 @@
+//! Integration: tiling edge cases of the cache-blocked panel kernels.
+//!
+//! The kernel layer (`util::kernel`) tiles the output-column dimension
+//! into cache-sized blocks, unrolls the beam dimension into fixed-width
+//! micro-kernels (8/4/2/1 lanes), and optionally partitions column
+//! blocks across threads. All of it must be **bit-identical** to the
+//! pre-tiling scalar path — b independent `vecmat` calls — because
+//! none of those transformations may change any single (beam, column)
+//! accumulator's addition order. This battery drives the geometry's
+//! edges across all three kernels (dense `Mat`, bit-packed
+//! `PackedMat`, CSR `SparseQMat`):
+//!
+//! - cols not a multiple of the block size, block size 1, and blocks
+//!   larger than cols (forced through `KernelScratch::set_block_cols`);
+//! - beam widths equal to and one past each micro-kernel width
+//!   (b ∈ {1, 2, 3, 4, 5, 8, 9});
+//! - fully-pruned (dead) rows under the threaded path, where the
+//!   uniform fold-back must stay serial;
+//! - the whole decode loop through `step_batch_with` with a threaded,
+//!   degenerately-blocked scratch vs the per-beam scalar oracle
+//!   `decode_with_table_perbeam`.
+
+use normq::data::Corpus;
+use normq::dfa::Dfa;
+use normq::generate::engine::{step_batch_with, EngineItem, EngineScratch, RequestState};
+use normq::generate::{decode_with_table_perbeam, BuildOptions, ConstraintTable, DecodeConfig};
+use normq::hmm::Hmm;
+use normq::lm::NgramLm;
+use normq::quant::packed::{PackedMat, SparseQMat};
+use normq::quant::QuantizedHmm;
+use normq::util::kernel::KernelScratch;
+use normq::util::mat::Mat;
+use normq::util::proptest::Prop;
+use normq::util::rng::Rng;
+
+/// Assert a fused panel result is bit-identical to b independent
+/// scalar `vecmat` calls over the same lanes.
+fn assert_matches_scalar(
+    fused: &[f32],
+    panel: &[f32],
+    rows: usize,
+    cols: usize,
+    b: usize,
+    scalar: &dyn Fn(&[f32], &mut [f32]),
+    tag: &str,
+) {
+    for bi in 0..b {
+        let mut want = vec![0f32; cols];
+        scalar(&panel[bi * rows..(bi + 1) * rows], &mut want);
+        for c in 0..cols {
+            assert_eq!(
+                fused[bi * cols + c].to_bits(),
+                want[c].to_bits(),
+                "{tag} b={b} bi={bi} c={c}"
+            );
+        }
+    }
+}
+
+/// A lane panel with a realistic zero mix: some all-zero lanes, some
+/// zero entries inside live lanes.
+fn random_panel(rows: usize, b: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut panel = vec![0f32; b * rows];
+    for (bi, lane) in panel.chunks_mut(rows).enumerate() {
+        if bi % 5 == 3 {
+            continue; // whole lane zero
+        }
+        for v in lane.iter_mut() {
+            if rng.below(4) != 0 {
+                *v = rng.f32() + 1e-4;
+            }
+        }
+    }
+    panel
+}
+
+/// Every block geometry × micro-kernel width edge, all three kernels:
+/// forced block sizes {1, 3 (non-divisor), cols+7 (block > cols)} and
+/// the auto plan, threaded and serial, at beam widths straddling every
+/// unroll width.
+#[test]
+fn tiling_geometry_edges_are_bit_identical_across_kernels() {
+    Prop::new(6, 0x7111).run("kernel-tiling-edges", |rng, _| {
+        let rows = rng.range(3, 40);
+        let cols = rng.range(2, 70); // rarely a multiple of anything
+        let dense = Mat::random_stochastic(rows, cols, 0.3, rng);
+        let bits = [3u32, 5, 8][rng.below_usize(3)];
+        let packed = PackedMat::from_mat(&dense, bits);
+        let sparse = SparseQMat::from_mat(&dense, bits);
+        for &b in &[1usize, 2, 3, 4, 5, 8, 9] {
+            let panel = random_panel(rows, b, rng);
+            let mut out = vec![0f32; b * cols];
+            for &block in &[Some(1usize), Some(3), Some(cols + 7), None] {
+                for &threads in &[1usize, 4] {
+                    let mut scratch = KernelScratch::with_threads(threads);
+                    scratch.set_block_cols(block);
+                    let tag = |k: &str| format!("{k} block={block:?} threads={threads}");
+
+                    dense.vecmat_panel_with(&panel, b, &mut out, &mut scratch);
+                    let scalar = |v: &[f32], o: &mut [f32]| dense.vecmat(v, o);
+                    assert_matches_scalar(&out, &panel, rows, cols, b, &scalar, &tag("dense"));
+                    packed.vecmat_panel_with(&panel, b, &mut out, &mut scratch);
+                    let scalar = |v: &[f32], o: &mut [f32]| packed.vecmat(v, o);
+                    assert_matches_scalar(&out, &panel, rows, cols, b, &scalar, &tag("packed"));
+                    sparse.vecmat_panel_with(&panel, b, &mut out, &mut scratch);
+                    let scalar = |v: &[f32], o: &mut [f32]| sparse.vecmat(v, o);
+                    assert_matches_scalar(&out, &panel, rows, cols, b, &scalar, &tag("sparse"));
+                }
+            }
+        }
+    });
+}
+
+/// Fully-pruned rows under the threaded path: dead rows dequantize to
+/// a uniform rank-1 contribution folded in at writeback, which must
+/// stay serial (per-lane, ascending row order) no matter how columns
+/// are partitioned across threads. A matrix where *most* rows are dead
+/// makes any reassociation visible.
+#[test]
+fn dead_rows_fold_identically_under_threading() {
+    let mut rng = Rng::seeded(0xDEAD);
+    let rows = 17usize;
+    let cols = 29usize;
+    // Near-uniform rows auto-prune to zero levels at low bit width.
+    let mut m = Mat::random_stochastic(rows, cols, 0.3, &mut rng);
+    for r in 0..rows {
+        if r % 3 != 0 {
+            for c in 0..cols {
+                m.data[r * cols + c] = 1.0 / cols as f32;
+            }
+        }
+    }
+    let bits = 3u32;
+    let packed = PackedMat::from_mat(&m, bits);
+    let sparse = SparseQMat::from_mat(&m, bits);
+    assert!(
+        (0..rows).any(|r| sparse.row_ptr[r] == sparse.row_ptr[r + 1]),
+        "test premise: some rows must fully prune"
+    );
+    for &b in &[1usize, 5, 9] {
+        let panel = random_panel(rows, b, &mut rng);
+        let mut serial_out = vec![0f32; b * cols];
+        let mut threaded_out = vec![0f32; b * cols];
+        let mut serial = KernelScratch::new();
+        let mut threaded = KernelScratch::with_threads(4);
+        threaded.set_block_cols(Some(2));
+        packed.vecmat_panel_with(&panel, b, &mut serial_out, &mut serial);
+        packed.vecmat_panel_with(&panel, b, &mut threaded_out, &mut threaded);
+        assert_eq!(
+            serial_out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            threaded_out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "packed dead rows b={b}"
+        );
+        let scalar = |v: &[f32], o: &mut [f32]| packed.vecmat(v, o);
+        assert_matches_scalar(&threaded_out, &panel, rows, cols, b, &scalar, "packed-dead");
+        sparse.vecmat_panel_with(&panel, b, &mut serial_out, &mut serial);
+        sparse.vecmat_panel_with(&panel, b, &mut threaded_out, &mut threaded);
+        assert_eq!(
+            serial_out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            threaded_out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "sparse dead rows b={b}"
+        );
+        let scalar = |v: &[f32], o: &mut [f32]| sparse.vecmat(v, o);
+        assert_matches_scalar(&threaded_out, &panel, rows, cols, b, &scalar, "sparse-dead");
+    }
+}
+
+/// End-to-end: the batched engine driven through `step_batch_with`
+/// with a threaded, degenerately-blocked scratch must produce the
+/// same tokens and score **bits** as the per-beam scalar oracle.
+#[test]
+fn threaded_engine_decode_is_bit_identical_to_perbeam_oracle() {
+    let corpus = Corpus::small(500);
+    let data = corpus.sample_token_corpus(400, 23);
+    let lm = NgramLm::train(&data, corpus.vocab.len());
+    Prop::new(6, 0x7E57).run("kernel-threaded-decode", |rng, _| {
+        let h = rng.range(4, 14);
+        let hmm = Hmm::random(h, corpus.vocab.len(), 0.2, 0.2, rng);
+        let bits = [3u32, 8][rng.below_usize(2)];
+        let q = QuantizedHmm::from_hmm(&hmm, bits);
+        let kw = corpus.vocab.id(&corpus.lexicon.nouns[rng.below_usize(4)]);
+        let dfa = Dfa::from_keywords(&[vec![kw]], corpus.vocab.len());
+        let cfg = DecodeConfig { beam: 5, max_tokens: 9, ..Default::default() };
+        let table = ConstraintTable::build_with(&q, &dfa, cfg.max_tokens, &BuildOptions::default())
+            .expect("no deadline");
+        let oracle = decode_with_table_perbeam(&lm, &q, &dfa, &table, &cfg);
+
+        let mut scratch = EngineScratch::with_threads(4);
+        scratch.kernel_mut().set_block_cols(Some(3));
+        let mut state = RequestState::new(&q, &dfa, None);
+        while !state.finished() {
+            let mut items = [EngineItem { dfa: &dfa, table: &table, state: &mut state }];
+            step_batch_with(&lm, &q, &cfg, &mut items, &mut scratch);
+        }
+        let gen = state.generation(&dfa);
+        assert_eq!(gen.tokens, oracle.tokens, "bits={bits} h={h}: tokens diverged");
+        assert_eq!(
+            gen.score.to_bits(),
+            oracle.score.to_bits(),
+            "bits={bits} h={h}: score bits diverged"
+        );
+        assert_eq!(gen.satisfied, oracle.satisfied);
+    });
+}

@@ -68,3 +68,22 @@ fn glossary_matches_the_summary_key_set() {
         "docs/METRICS.md documents keys the summary does not emit: {stale:?}"
     );
 }
+
+/// The per-client wait split lives in `Metrics::client_summary()`
+/// (not the global summary line), so its keys are documented in the
+/// glossary's prose rather than the table. Keep that prose honest the
+/// same way: every wait key the client line emits must be named in
+/// `docs/METRICS.md`, and the doc must not name a wait bucket the
+/// line no longer renders.
+#[test]
+fn client_wait_split_keys_are_documented_in_prose() {
+    let metrics = Metrics::new();
+    metrics.client("tenant").record_latency(0.012);
+    metrics.client("tenant").record_waits(0.001, 0.008, 0.003);
+    let line = metrics.client_summary();
+    let doc = include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/METRICS.md"));
+    for key in ["q_p99", "b_p99", "d_p99"] {
+        assert!(line.contains(&format!("{key}=")), "client summary lost {key}: {line}");
+        assert!(doc.contains(&format!("`{key}`")), "docs/METRICS.md prose must name {key}");
+    }
+}

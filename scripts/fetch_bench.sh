@@ -50,7 +50,7 @@ fi
 
 mkdir -p "$out_dir"
 fetched=0
-for name in BENCH_tables BENCH_decode BENCH_coordinator BENCH_service; do
+for name in BENCH_tables BENCH_decode BENCH_coordinator BENCH_service BENCH_kernels; do
   if gh run download "$run_id" --name "$name" --dir "$out_dir/$name"; then
     fetched=$((fetched + 1))
   else
